@@ -1,0 +1,37 @@
+//! Multi-kernel DSE campaign across the coordinator's thread pool,
+//! emitting the Table-5-style comparison and a JSON dump.
+//!
+//! ```bash
+//! cargo run --release --example dse_campaign -- [quick|paper|harp]
+//! ```
+
+use nlp_dse::cli::campaign_json;
+use nlp_dse::coordinator::{run_campaign, CampaignConfig};
+use nlp_dse::report;
+
+fn main() {
+    let scope = std::env::args().nth(1).unwrap_or_else(|| "quick".into());
+    let cfg = match scope.as_str() {
+        "paper" => CampaignConfig::paper_autodse(),
+        "harp" => CampaignConfig::paper_harp(),
+        _ => CampaignConfig::quick(),
+    };
+    eprintln!(
+        "[campaign] {} kernel instances on {} threads",
+        cfg.kernels.len(),
+        cfg.threads
+    );
+    let t0 = std::time::Instant::now();
+    let result = run_campaign(&cfg);
+    eprintln!("[campaign] finished in {:.1}s", t0.elapsed().as_secs_f64());
+
+    println!("{}", report::table5(&result).render());
+    if scope == "harp" {
+        println!("{}", report::table9(&result).render());
+    }
+
+    let json = campaign_json(&result);
+    let path = format!("campaign_{scope}.json");
+    std::fs::write(&path, json.to_string_pretty()).expect("write json");
+    eprintln!("[campaign] wrote {path}");
+}

@@ -1,0 +1,81 @@
+//! Bring-your-own-kernel: define a custom affine kernel with the builder
+//! API and let NLP-DSE insert pragmas for it.
+//!
+//! ```bash
+//! cargo run --release --example pragma_insertion
+//! ```
+//!
+//! The kernel is a blocked dot-product chain (`y[i] = Σ_j A[i][j]·x[j]`,
+//! then `z = Σ y[i]`) — not part of the PolyBench suite, demonstrating
+//! that the whole pipeline (analysis → NLP → Merlin/HLS verification)
+//! works on user programs.
+
+use nlp_dse::dse::{run_nlp_dse, DseConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{ArrayDir, DType, KernelBuilder, OpKind};
+use nlp_dse::nlp::RustFeatureEvaluator;
+use nlp_dse::poly::Analysis;
+
+fn main() {
+    // --- define the kernel ---------------------------------------------------
+    let n: i64 = 1024;
+    let mut kb = KernelBuilder::new("dotchain", DType::F32);
+    let a = kb.array("A", &[n as u64, n as u64], ArrayDir::In);
+    let x = kb.array("x", &[n as u64], ArrayDir::In);
+    let y = kb.array("y", &[n as u64], ArrayDir::Temp);
+    let z = kb.array("z", &[1], ArrayDir::Out);
+
+    kb.for_const("i", 0, n, |kb, i| {
+        kb.stmt("S0", vec![kb.at(y, &[kb.v(i)])], vec![], &[]);
+        kb.for_const("j", 0, n, |kb, j| {
+            // y[i] += A[i][j] * x[j]
+            kb.stmt(
+                "S1",
+                vec![kb.at(y, &[kb.v(i)])],
+                vec![
+                    kb.at(y, &[kb.v(i)]),
+                    kb.at(a, &[kb.v(i), kb.v(j)]),
+                    kb.at(x, &[kb.v(j)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.for_const("i2", 0, n, |kb, i2| {
+        // z += y[i]
+        kb.stmt(
+            "S2",
+            vec![kb.at(z, &[kb.c(0)])],
+            vec![kb.at(z, &[kb.c(0)]), kb.at(y, &[kb.v(i2)])],
+            &[(OpKind::Add, 1)],
+        );
+    });
+    let kernel = kb.finish();
+    let analysis = Analysis::new(&kernel);
+    println!(
+        "kernel {}: {} loops, {} deps; reduction loops: {:?}",
+        kernel.name,
+        kernel.n_loops(),
+        analysis.deps.nd(),
+        (0..kernel.n_loops())
+            .filter(|&i| analysis.deps.per_loop[i].reduction)
+            .collect::<Vec<_>>()
+    );
+
+    // --- run the full DSE (Algorithm 1) -------------------------------------
+    let device = Device::u200();
+    let out = run_nlp_dse(
+        &kernel,
+        &analysis,
+        &device,
+        &DseConfig::default(),
+        &RustFeatureEvaluator,
+    );
+    println!(
+        "\nNLP-DSE: best {:.2} GF/s (first synthesizable {:.2}), {:.0} simulated minutes, \
+         {} designs explored",
+        out.best_gflops, out.first_synth_gflops, out.dse_minutes, out.designs_explored
+    );
+    let (best, cycles) = out.best.expect("found a design");
+    println!("best design ({cycles:.0} cycles):\n{}", best.render(&kernel));
+}

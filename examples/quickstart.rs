@@ -1,0 +1,64 @@
+//! Quickstart: automatically insert Merlin pragmas into a PolyBench kernel.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds `gemm` (medium size), formulates the NLP, solves it, prints the
+//! chosen pragma configuration with its latency lower bound, and verifies
+//! the design against the simulated Merlin+Vitis toolchain.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::{Device, HlsOracle};
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator};
+use nlp_dse::poly::Analysis;
+
+fn main() {
+    // 1. the input program: a regular loop-based affine kernel
+    let kernel = benchmarks::build("gemm", Size::Medium, DType::F32).unwrap();
+    println!("kernel: {}  (summary AST: {})\n", kernel.name, kernel.summary_ast());
+
+    // 2. exact static analysis: trip counts, dependences, footprints
+    let analysis = Analysis::new(&kernel);
+    println!(
+        "{} loops, {} dependences, {:.0} kB footprint, {:.2e} flops\n",
+        kernel.n_loops(),
+        analysis.deps.nd(),
+        analysis.total_footprint as f64 / 1024.0,
+        analysis.total_flops
+    );
+
+    // 3. formulate + solve the NLP (pragmas are the unknowns)
+    let device = Device::u200();
+    let problem = NlpProblem::new(&kernel, &analysis, &device, 512, false);
+    let solution = nlp::solve(&problem, 30.0, 1, &RustFeatureEvaluator);
+    let (design, bound) = solution.best().expect("feasible design").clone();
+    println!(
+        "NLP optimum (lower bound {:.0} cycles = {:.2} GF/s bound), solved in {:.0} ms:\n{}",
+        bound,
+        analysis.gflops(bound, device.freq_hz),
+        solution.solve_time_s * 1e3,
+        design.render(&kernel)
+    );
+
+    // 4. verify with the (simulated) Merlin + Vitis toolchain
+    let oracle = HlsOracle::new(device.clone());
+    let report = oracle.synth(&kernel, &analysis, &design);
+    println!(
+        "HLS report: {:.0} cycles ({:.2} GF/s), DSP {}, BRAM {}, II {:.0}, synth {:.0} min, \
+         pragmas applied: {}",
+        report.cycles,
+        report.gflops(&analysis, &device),
+        report.dsp,
+        report.bram18k,
+        report.achieved_ii,
+        report.synth_minutes,
+        report.pragmas_applied
+    );
+    assert!(
+        report.flattened || report.cycles >= bound * 0.999,
+        "lower-bound property violated"
+    );
+    println!("\nlower-bound property holds: measured >= predicted bound");
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: jit → StableHLO → XLA computation → **HLO text**.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``artifacts`` target). Also writes ``abi.json`` describing the tensor
+shapes so the Rust runtime can sanity-check at load time.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=model.BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    specs = model.example_args(args.batch)
+
+    targets = {
+        "lat_bound": model.eval_batch,
+        "lat_argmin": model.eval_argmin,
+    }
+    from .kernels import lat_bound as lb
+
+    for name, fn in targets.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text)} chars to {path}")
+
+    abi = {
+        "batch": args.batch,
+        "units": lb.UNITS,
+        "loops": lb.LOOPS,
+        "f": lb.F,
+        "g": lb.G,
+        "dtype": "f64",
+        "outputs": {"lat_bound": "[B,2]", "lat_argmin": "[B,2], idx, lat"},
+    }
+    with open(os.path.join(args.out_dir, "abi.json"), "w") as f:
+        json.dump(abi, f, indent=2)
+    print("wrote abi.json")
+
+
+if __name__ == "__main__":
+    main()

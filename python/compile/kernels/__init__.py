@@ -1,0 +1,4 @@
+"""L1 Pallas kernels for the NLP-DSE compute hot-spot (bulk lower-bound
+evaluation) plus their pure-jnp oracles."""
+
+from . import lat_bound, ref  # noqa: F401

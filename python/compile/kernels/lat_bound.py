@@ -1,0 +1,117 @@
+"""L1 — Pallas kernel: batched latency/resource lower-bound evaluation.
+
+Evaluates the paper's Section-5.4 objective for a batch of encoded designs.
+The ABI matches ``rust/src/model/features.rs`` exactly:
+
+  loops[B, U, L, F]  per-loop rows: tc, uf, above_par, above_seq,
+                     under_red, valid
+  units[B, U, G]     per-unit scalars: il_base, il_red, ii, pipe_tc,
+                     pipe_uf, dsp_base, w_sum, valid
+  out[B, 2]          latency lower bound (cycles), optimistic DSP
+
+Per unit u:
+
+  above = prod_l [above_par: tc/uf] * prod_l [above_seq: tc]
+  tree  = prod_l [under_red: (tc/uf) * max(1, ceil(log2 uf))]
+  lat_u = above * (il_base + il_red*tree + ii*max(pipe_tc/pipe_uf - 1, 0))
+  mcu   = prod_l uf
+  dsp_u = dsp_base * mcu / max(ii, 1)
+
+  latency = sum_{w_sum} lat_u + max_{!w_sum} lat_u
+  dsp     = max_u dsp_u
+
+TPU-shaping notes (DESIGN.md §3): the computation is a masked reduction
+over a fixed [U, L, F] stencil per design — we tile over the batch axis
+only (``BLOCK_B`` designs per grid step), keeping each block's operand
+slice (BLOCK_B*U*L*F*8B ≈ 400 kB at BLOCK_B=64) comfortably inside VMEM.
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ABI constants — keep in sync with rust/src/model/features.rs (Abi).
+UNITS = 16
+LOOPS = 8
+F = 6
+G = 8
+BATCH = 512
+BLOCK_B = 64
+
+
+def _unit_math(loops_blk, units_blk):
+    """Shared formula over one block: loops[b,U,L,F], units[b,U,G] ->
+    (lat[b], dsp[b])."""
+    tc = loops_blk[..., 0]
+    uf = jnp.maximum(loops_blk[..., 1], 1.0)
+    above_par = loops_blk[..., 2]
+    above_seq = loops_blk[..., 3]
+    under_red = loops_blk[..., 4]
+    valid_row = loops_blk[..., 5]
+
+    # masked per-row factors (invalid rows contribute 1)
+    f_par = jnp.where((above_par > 0) & (valid_row > 0), tc / uf, 1.0)
+    f_seq = jnp.where((above_seq > 0) & (valid_row > 0), tc, 1.0)
+    levels = jnp.maximum(jnp.ceil(jnp.log2(uf)), 1.0)
+    f_red = jnp.where((under_red > 0) & (valid_row > 0), tc / uf * levels, 1.0)
+    f_mcu = jnp.where(valid_row > 0, uf, 1.0)
+
+    above = jnp.prod(f_par, axis=-1) * jnp.prod(f_seq, axis=-1)  # [b, U]
+    tree = jnp.prod(f_red, axis=-1)
+    mcu = jnp.prod(f_mcu, axis=-1)
+
+    il_base = units_blk[..., 0]
+    il_red = units_blk[..., 1]
+    ii = units_blk[..., 2]
+    pipe_tc = jnp.maximum(units_blk[..., 3], 1.0)
+    pipe_uf = jnp.maximum(units_blk[..., 4], 1.0)
+    dsp_base = units_blk[..., 5]
+    w_sum = units_blk[..., 6]
+    valid = units_blk[..., 7]
+
+    il = il_base + il_red * tree
+    ramp = ii * jnp.maximum(pipe_tc / pipe_uf - 1.0, 0.0)
+    lat_u = above * (il + ramp)
+
+    lat_sum = jnp.sum(jnp.where((valid > 0) & (w_sum > 0), lat_u, 0.0), axis=-1)
+    lat_max = jnp.max(
+        jnp.where((valid > 0) & (w_sum == 0), lat_u, 0.0), axis=-1
+    )
+    dsp = jnp.max(
+        jnp.where(valid > 0, dsp_base * mcu / jnp.maximum(ii, 1.0), 0.0),
+        axis=-1,
+    )
+    return lat_sum + lat_max, dsp
+
+
+def _kernel(loops_ref, units_ref, out_ref):
+    loops_blk = loops_ref[...]  # [BLOCK_B, U, L, F]
+    units_blk = units_ref[...]  # [BLOCK_B, U, G]
+    lat, dsp = _unit_math(loops_blk, units_blk)
+    out_ref[...] = jnp.stack([lat, dsp], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def lat_bound(loops, units, batch=BATCH):
+    """Batched lower-bound evaluation via the Pallas kernel.
+
+    loops: f64[batch, UNITS, LOOPS, F]; units: f64[batch, UNITS, G]
+    returns f64[batch, 2] — (latency cycles, DSP).
+    """
+    assert batch % BLOCK_B == 0, "batch must be a multiple of BLOCK_B"
+    grid = (batch // BLOCK_B,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, UNITS, LOOPS, F), lambda b: (b, 0, 0, 0)),
+            pl.BlockSpec((BLOCK_B, UNITS, G), lambda b: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B, UNITS // UNITS * 2), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, 2), loops.dtype),
+        interpret=True,
+    )(loops, units)

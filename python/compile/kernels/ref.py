@@ -1,0 +1,83 @@
+"""Pure-jnp correctness oracle for the Pallas kernel.
+
+Implements the identical unit formula with plain vectorized jnp — no
+pallas, no grid. ``lat_bound_ref(loops, units)`` must match
+``lat_bound.lat_bound`` bit-for-bit on f64 inputs (same op order), and both
+must match the Rust reference ``model::features::eval_features`` to 1e-6
+relative (checked from the Rust side in integration_runtime.rs).
+"""
+
+import jax.numpy as jnp
+
+
+def lat_bound_ref(loops, units):
+    """loops: f64[B, U, L, F]; units: f64[B, U, G] -> f64[B, 2]."""
+    tc = loops[..., 0]
+    uf = jnp.maximum(loops[..., 1], 1.0)
+    above_par = loops[..., 2]
+    above_seq = loops[..., 3]
+    under_red = loops[..., 4]
+    valid_row = loops[..., 5]
+
+    f_par = jnp.where((above_par > 0) & (valid_row > 0), tc / uf, 1.0)
+    f_seq = jnp.where((above_seq > 0) & (valid_row > 0), tc, 1.0)
+    levels = jnp.maximum(jnp.ceil(jnp.log2(uf)), 1.0)
+    f_red = jnp.where((under_red > 0) & (valid_row > 0), tc / uf * levels, 1.0)
+    f_mcu = jnp.where(valid_row > 0, uf, 1.0)
+
+    above = jnp.prod(f_par, axis=-1) * jnp.prod(f_seq, axis=-1)
+    tree = jnp.prod(f_red, axis=-1)
+    mcu = jnp.prod(f_mcu, axis=-1)
+
+    il_base = units[..., 0]
+    il_red = units[..., 1]
+    ii = units[..., 2]
+    pipe_tc = jnp.maximum(units[..., 3], 1.0)
+    pipe_uf = jnp.maximum(units[..., 4], 1.0)
+    dsp_base = units[..., 5]
+    w_sum = units[..., 6]
+    valid = units[..., 7]
+
+    il = il_base + il_red * tree
+    ramp = ii * jnp.maximum(pipe_tc / pipe_uf - 1.0, 0.0)
+    lat_u = above * (il + ramp)
+
+    lat_sum = jnp.sum(jnp.where((valid > 0) & (w_sum > 0), lat_u, 0.0), axis=-1)
+    lat_max = jnp.max(jnp.where((valid > 0) & (w_sum == 0), lat_u, 0.0), axis=-1)
+    dsp = jnp.max(
+        jnp.where(valid > 0, dsp_base * mcu / jnp.maximum(ii, 1.0), 0.0), axis=-1
+    )
+    return jnp.stack([lat_sum + lat_max, dsp], axis=-1)
+
+
+def numpy_ref(loops, units):
+    """NumPy twin used by hypothesis tests without tracing overhead."""
+    import numpy as np
+
+    loops = np.asarray(loops, dtype=np.float64)
+    units = np.asarray(units, dtype=np.float64)
+    tc = loops[..., 0]
+    uf = np.maximum(loops[..., 1], 1.0)
+    f_par = np.where((loops[..., 2] > 0) & (loops[..., 5] > 0), tc / uf, 1.0)
+    f_seq = np.where((loops[..., 3] > 0) & (loops[..., 5] > 0), tc, 1.0)
+    levels = np.maximum(np.ceil(np.log2(uf)), 1.0)
+    f_red = np.where(
+        (loops[..., 4] > 0) & (loops[..., 5] > 0), tc / uf * levels, 1.0
+    )
+    f_mcu = np.where(loops[..., 5] > 0, uf, 1.0)
+    above = f_par.prod(-1) * f_seq.prod(-1)
+    tree = f_red.prod(-1)
+    mcu = f_mcu.prod(-1)
+    il = units[..., 0] + units[..., 1] * tree
+    ramp = units[..., 2] * np.maximum(
+        np.maximum(units[..., 3], 1.0) / np.maximum(units[..., 4], 1.0) - 1.0, 0.0
+    )
+    lat_u = above * (il + ramp)
+    valid = units[..., 7] > 0
+    w_sum = units[..., 6] > 0
+    lat_sum = np.where(valid & w_sum, lat_u, 0.0).sum(-1)
+    lat_max = np.where(valid & ~w_sum, lat_u, 0.0).max(-1)
+    dsp = np.where(
+        valid, units[..., 5] * mcu / np.maximum(units[..., 2], 1.0), 0.0
+    ).max(-1)
+    return np.stack([lat_sum + lat_max, dsp], axis=-1)

@@ -1,0 +1,44 @@
+"""L2 — the jitted compute graph the Rust runtime executes.
+
+Two entry points, both lowered AOT by ``aot.py``:
+
+* ``eval_batch(loops, units)`` — the Pallas lower-bound kernel over a
+  fixed batch (the DSE's bulk pruning primitive);
+* ``eval_argmin(loops, units)`` — the same plus an argmin head, returning
+  ``(out[B,2], best_idx[1], best_lat[1])`` so the coordinator can pick a
+  wave's most promising candidate without shipping the whole batch back.
+
+Python here runs only at build time (``make artifacts``); the request path
+executes the lowered HLO through PJRT from Rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lat_bound as lb
+
+jax.config.update("jax_enable_x64", True)
+
+BATCH = lb.BATCH
+
+
+def eval_batch(loops, units):
+    """(loops[B,U,L,F], units[B,U,G]) -> out[B,2]; returned as a 1-tuple
+    for the HLO-text interchange convention (return_tuple=True)."""
+    return (lb.lat_bound(loops, units, batch=BATCH),)
+
+
+def eval_argmin(loops, units):
+    """Batch evaluation + argmin head: (out[B,2], idx[], lat[])."""
+    out = lb.lat_bound(loops, units, batch=BATCH)
+    lat = out[:, 0]
+    idx = jnp.argmin(lat)
+    return (out, idx.astype(jnp.int64), lat[idx])
+
+
+def example_args(batch=BATCH):
+    spec = jax.ShapeDtypeStruct(
+        (batch, lb.UNITS, lb.LOOPS, lb.F), jnp.float64
+    )
+    spec_u = jax.ShapeDtypeStruct((batch, lb.UNITS, lb.G), jnp.float64)
+    return spec, spec_u

@@ -1,0 +1,134 @@
+"""Pallas kernel vs pure-jnp/numpy oracle — the core L1 correctness signal.
+
+hypothesis sweeps feature-tensor contents (and, indirectly, the masked
+formula's edge cases: invalid rows, uf=1 log2 terms, empty max-sets).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lat_bound as lb
+from compile.kernels import ref
+
+
+def random_features(rng: np.random.Generator, batch: int):
+    loops = np.zeros((batch, lb.UNITS, lb.LOOPS, lb.F))
+    units = np.zeros((batch, lb.UNITS, lb.G))
+    shape = loops.shape[:-1]
+    loops[..., 0] = rng.integers(1, 2101, shape)  # tc
+    loops[..., 1] = 2 ** rng.integers(0, 8, shape)  # uf
+    role = rng.integers(0, 4, shape)  # exclusive role flags
+    loops[..., 2] = role == 1
+    loops[..., 3] = role == 2
+    loops[..., 4] = role == 3
+    loops[..., 5] = rng.integers(0, 2, shape)  # valid
+    ushape = units.shape[:-1]
+    units[..., 0] = rng.uniform(0.0, 40.0, ushape)  # il_base
+    units[..., 1] = rng.choice([0.0, 3.0, 4.0, 12.0], ushape)  # il_red
+    units[..., 2] = rng.choice([0.0, 1.0, 4.0, 12.0], ushape)  # ii
+    units[..., 3] = rng.integers(1, 2101, ushape)  # pipe_tc
+    units[..., 4] = 2 ** rng.integers(0, 6, ushape)  # pipe_uf
+    units[..., 5] = rng.uniform(0.0, 16.0, ushape)  # dsp_base
+    units[..., 6] = rng.integers(0, 2, ushape)  # w_sum
+    units[..., 7] = rng.integers(0, 2, ushape)  # valid
+    return loops, units
+
+
+@pytest.fixture(scope="module")
+def batch_io():
+    rng = np.random.default_rng(1234)
+    return random_features(rng, lb.BATCH)
+
+
+def test_kernel_matches_jnp_ref(batch_io):
+    loops, units = batch_io
+    out_k = np.asarray(lb.lat_bound(loops, units))
+    out_r = np.asarray(ref.lat_bound_ref(loops, units))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-12, atol=0)
+
+
+def test_kernel_matches_numpy_ref(batch_io):
+    loops, units = batch_io
+    out_k = np.asarray(lb.lat_bound(loops, units))
+    out_n = ref.numpy_ref(loops, units)
+    np.testing.assert_allclose(out_k, out_n, rtol=1e-12, atol=1e-9)
+
+
+def test_outputs_finite_nonnegative(batch_io):
+    loops, units = batch_io
+    out = np.asarray(lb.lat_bound(loops, units))
+    assert np.all(np.isfinite(out))
+    assert np.all(out >= 0.0)
+
+
+def test_zero_features_zero_latency():
+    loops = np.zeros((lb.BATCH, lb.UNITS, lb.LOOPS, lb.F))
+    units = np.zeros((lb.BATCH, lb.UNITS, lb.G))
+    out = np.asarray(lb.lat_bound(loops, units))
+    np.testing.assert_array_equal(out, 0.0)
+
+
+def test_single_sum_unit_formula():
+    """Hand-checkable case: one unit, above=tc/uf, il=5, ii=1 ramp."""
+    loops = np.zeros((lb.BATCH, lb.UNITS, lb.LOOPS, lb.F))
+    units = np.zeros((lb.BATCH, lb.UNITS, lb.G))
+    # unit 0: one above_par row tc=100 uf=4, il_base=5, ii=1,
+    # pipe_tc=50, pipe_uf=2
+    loops[0, 0, 0] = [100, 4, 1, 0, 0, 1]
+    units[0, 0] = [5, 0, 1, 50, 2, 2, 1, 1]
+    out = np.asarray(lb.lat_bound(loops, units))
+    above = 100 / 4
+    expect_lat = above * (5 + 1 * (50 / 2 - 1))
+    expect_dsp = 2 * 4 / 1
+    assert out[0, 0] == pytest.approx(expect_lat)
+    assert out[0, 1] == pytest.approx(expect_dsp)
+
+
+def test_tree_reduction_term():
+    """under_red row: (tc/uf) * ceil(log2 uf)."""
+    loops = np.zeros((lb.BATCH, lb.UNITS, lb.LOOPS, lb.F))
+    units = np.zeros((lb.BATCH, lb.UNITS, lb.G))
+    loops[0, 0, 0] = [2100, 700, 0, 0, 1, 1]
+    units[0, 0] = [6, 4, 0, 1, 1, 0, 1, 1]
+    out = np.asarray(lb.lat_bound(loops, units))
+    tree = (2100 / 700) * np.ceil(np.log2(700))
+    assert out[0, 0] == pytest.approx(6 + 4 * tree)
+
+
+def test_max_set_takes_max_not_sum():
+    loops = np.zeros((lb.BATCH, lb.UNITS, lb.LOOPS, lb.F))
+    units = np.zeros((lb.BATCH, lb.UNITS, lb.G))
+    units[0, 0] = [100, 0, 0, 1, 1, 0, 0, 1]  # max-set
+    units[0, 1] = [70, 0, 0, 1, 1, 0, 0, 1]  # max-set
+    units[0, 2] = [5, 0, 0, 1, 1, 0, 1, 1]  # sum
+    out = np.asarray(lb.lat_bound(loops, units))
+    assert out[0, 0] == pytest.approx(105.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_kernel_vs_numpy(seed):
+    rng = np.random.default_rng(seed)
+    loops, units = random_features(rng, lb.BATCH)
+    out_k = np.asarray(lb.lat_bound(loops, units))
+    out_n = ref.numpy_ref(loops, units)
+    np.testing.assert_allclose(out_k, out_n, rtol=1e-11, atol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_dtype_f32_close(seed):
+    """f32 inputs run too (upcast behaviour) and stay close to the f64
+    oracle — guards against dtype-dependent surprises in the kernel."""
+    rng = np.random.default_rng(seed)
+    loops, units = random_features(rng, lb.BATCH)
+    out32 = np.asarray(
+        lb.lat_bound(loops.astype(np.float32), units.astype(np.float32))
+    )
+    out64 = ref.numpy_ref(loops, units)
+    np.testing.assert_allclose(out32, out64, rtol=2e-4, atol=1.0)

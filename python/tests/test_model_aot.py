@@ -1,0 +1,70 @@
+"""L2 model + AOT lowering tests: shapes, argmin head, HLO text emission."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import lat_bound as lb
+
+
+@pytest.fixture(scope="module")
+def io():
+    rng = np.random.default_rng(7)
+    loops = rng.uniform(0, 4, (model.BATCH, lb.UNITS, lb.LOOPS, lb.F))
+    loops[..., 0] = rng.integers(1, 500, loops.shape[:-1])
+    loops[..., 1] = 1
+    loops[..., 5] = 1
+    units = rng.uniform(0, 10, (model.BATCH, lb.UNITS, lb.G))
+    units[..., 6] = 1
+    units[..., 7] = 1
+    return loops, units
+
+
+def test_eval_batch_shape(io):
+    loops, units = io
+    (out,) = model.eval_batch(loops, units)
+    assert out.shape == (model.BATCH, 2)
+    assert out.dtype == np.float64
+
+
+def test_argmin_head_consistent(io):
+    loops, units = io
+    out, idx, lat = model.eval_argmin(loops, units)
+    out = np.asarray(out)
+    assert int(idx) == int(np.argmin(out[:, 0]))
+    assert float(lat) == pytest.approx(float(out[:, 0].min()))
+
+
+def test_hlo_text_lowering(io, tmp_path):
+    lowered = jax.jit(model.eval_batch).lower(*model.example_args())
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    # HLO text (not serialized proto) is the contract with the Rust side
+    assert "f64[512,16,8,6]" in text.replace(" ", "")
+
+
+def test_aot_main_writes_artifacts(tmp_path, monkeypatch):
+    import sys
+
+    monkeypatch.setattr(
+        sys, "argv", ["aot", "--out-dir", str(tmp_path), "--batch", "128"]
+    )
+    aot.main()
+    assert (tmp_path / "lat_bound.hlo.txt").exists()
+    assert (tmp_path / "lat_argmin.hlo.txt").exists()
+    assert (tmp_path / "abi.json").exists()
+    text = (tmp_path / "lat_bound.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+
+
+def test_block_divisibility_guard():
+    with pytest.raises(AssertionError):
+        lb.lat_bound(
+            np.zeros((100, lb.UNITS, lb.LOOPS, lb.F)),
+            np.zeros((100, lb.UNITS, lb.G)),
+            batch=100,
+        )

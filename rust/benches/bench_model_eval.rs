@@ -1,0 +1,35 @@
+//! Model-evaluation hot path: precise recursive model vs feature encoding
+//! vs encoded-formula evaluation, per kernel. These are the L3 costs the
+//! NLP solver pays per candidate — the target of the §Perf pass.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::model;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("model_eval");
+    let dev = Device::u200();
+    for name in ["gemm", "2mm", "gemver", "heat-3d", "cnn"] {
+        let k = benchmarks::build(name, Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let d = Design::empty(&k);
+        b.bench(&format!("analysis/{name}"), || {
+            black_box(Analysis::new(&k));
+        });
+        b.bench(&format!("evaluate/{name}"), || {
+            black_box(model::evaluate(&k, &a, &dev, &d));
+        });
+        b.bench(&format!("encode/{name}"), || {
+            black_box(model::encode_design(&k, &a, &dev, &d));
+        });
+        let f = model::encode_design(&k, &a, &dev, &d).unwrap();
+        b.bench(&format!("eval_features/{name}"), || {
+            black_box(model::eval_features(&f));
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,38 @@
+//! NLP solver end-to-end benchmark: one solve per kernel × partitioning
+//! rung. These times stand in for the paper's BARON columns (Table 7) and
+//! dominate the serial phase of Algorithm 1.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("nlp_solver");
+    let dev = Device::u200();
+    for (name, size) in [
+        ("gemm", Size::Medium),
+        ("2mm", Size::Medium),
+        ("2mm", Size::Large),
+        ("3mm", Size::Medium),
+        ("gemver", Size::Medium),
+        ("atax", Size::Large),
+    ] {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        for cap in [u64::MAX, 512, 64] {
+            let p = NlpProblem::new(&k, &a, &dev, cap, false);
+            let tag = if cap == u64::MAX {
+                "inf".to_string()
+            } else {
+                cap.to_string()
+            };
+            b.bench(&format!("solve/{name}-{}/cap={tag}", size.tag()), || {
+                black_box(nlp::solve(&p, 30.0, 1, &RustFeatureEvaluator));
+            });
+        }
+    }
+    b.finish();
+}

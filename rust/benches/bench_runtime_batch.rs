@@ -1,0 +1,42 @@
+//! Runtime batch evaluation: the XLA artifact vs the in-process Rust
+//! evaluator at increasing batch sizes. This quantifies the L1/L2 hot path
+//! and the PJRT invocation overhead (§Perf).
+//!
+//! Skipped (with a note) when `make artifacts` has not run.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::model;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use nlp_dse::runtime::{default_artifact_dir, XlaEvaluator};
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn main() {
+    let eval = match XlaEvaluator::load(&default_artifact_dir()) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[skip] bench_runtime_batch: {e:#}");
+            return;
+        }
+    };
+    let mut b = Bench::new("runtime_batch");
+    let k = benchmarks::build("2mm", Size::Medium, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let f = model::encode_design(&k, &a, &dev, &Design::empty(&k)).unwrap();
+
+    for n in [1usize, 64, 512, 2048] {
+        let batch: Vec<_> = (0..n).map(|_| f.clone()).collect();
+        b.bench_with_items(&format!("xla/eval_features/n={n}"), n as f64, || {
+            black_box(eval.eval_features(&batch).unwrap());
+        });
+        b.bench_with_items(&format!("rust/eval_features/n={n}"), n as f64, || {
+            for x in &batch {
+                black_box(model::eval_features(x));
+            }
+        });
+    }
+    b.finish();
+}

@@ -1,0 +1,37 @@
+//! Design-space machinery: space construction, size counting, pipeline
+//! config enumeration, divisor menus — the L3 enumeration costs inside
+//! `nest_candidates`.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::ir::DType;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Space;
+use nlp_dse::util::bench::{black_box, Bench};
+use nlp_dse::util::divisors;
+
+fn main() {
+    let mut b = Bench::new("space_enum");
+    for (name, size) in [
+        ("2mm", Size::Medium),
+        ("3mm", Size::Large),
+        ("gemver", Size::Large),
+        ("cnn", Size::Medium),
+    ] {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        b.bench(&format!("space_new/{name}-{}", size.tag()), || {
+            black_box(Space::new(&k, &a));
+        });
+        let s = Space::new(&k, &a);
+        b.bench(&format!("space_size/{name}-{}", size.tag()), || {
+            black_box(s.size());
+        });
+    }
+    b.bench("divisors/2100", || {
+        black_box(divisors(2100));
+    });
+    b.bench("divisors/2800", || {
+        black_box(divisors(2800));
+    });
+    b.finish();
+}

@@ -1,0 +1,98 @@
+//! One benchmark per paper table/figure: times the full regeneration of
+//! each experiment on the quick scope (the paper scope is exercised by the
+//! `dse_campaign` example / `table --scope paper` CLI).
+//!
+//! Covers: Tables 1, 2, 3, 5, 6, 7, 8, 9 and Figures 2–6.
+
+use nlp_dse::baselines::HarpConfig;
+use nlp_dse::benchmarks::Size;
+use nlp_dse::coordinator::{run_campaign, CampaignConfig, Engines};
+use nlp_dse::report;
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("tables_and_figures");
+
+    // shared quick campaigns (the expensive part, measured once each)
+    let mut cfg = CampaignConfig::quick();
+    cfg.kernels = vec![
+        ("2mm".into(), Size::Medium),
+        ("gemm".into(), Size::Medium),
+        ("gramschmidt".into(), Size::Large),
+        ("bicg".into(), Size::Medium),
+    ];
+    cfg.engines = Engines {
+        nlpdse: true,
+        autodse: true,
+        harp: false,
+    };
+    let mut auto_result = None;
+    b.bench("campaign/quick-autodse(4 kernels)", || {
+        auto_result = Some(black_box(run_campaign(&cfg)));
+    });
+    let auto_result = auto_result.unwrap();
+
+    let mut hcfg = CampaignConfig::quick();
+    hcfg.kernels = vec![
+        ("gemm".into(), Size::Small),
+        ("bicg".into(), Size::Small),
+        ("mvt".into(), Size::Small),
+    ];
+    hcfg.dtype = nlp_dse::ir::DType::F64;
+    hcfg.engines = Engines {
+        nlpdse: true,
+        autodse: false,
+        harp: true,
+    };
+    hcfg.harp = HarpConfig {
+        sweep_configs: 5_000,
+        ..HarpConfig::default()
+    };
+    let mut harp_result = None;
+    b.bench("campaign/quick-harp(3 kernels)", || {
+        harp_result = Some(black_box(run_campaign(&hcfg)));
+    });
+    let harp_result = harp_result.unwrap();
+
+    // table renderers over the campaign rows
+    b.bench("table1/original-vs-autodse", || {
+        black_box(report::table1(&auto_result).render());
+    });
+    b.bench("table2/space-extent", || {
+        black_box(report::table2(&auto_result).render());
+    });
+    b.bench("table3/nlpdse-vs-autodse", || {
+        black_box(report::table3(&auto_result).render());
+    });
+    b.bench("table5/full-comparison", || {
+        black_box(report::table5(&auto_result).render());
+    });
+    b.bench("table6/dse-steps", || {
+        black_box(report::table6(&auto_result).render());
+    });
+    b.bench("table7/solver-scalability", || {
+        black_box(report::table7(&auto_result).render());
+    });
+    b.bench("table8/problem-sizes", || {
+        black_box(report::table8().render());
+    });
+    b.bench("table9/nlpdse-vs-harp", || {
+        black_box(report::table9(&harp_result).render());
+    });
+    b.bench("figure2/large-series", || {
+        black_box(report::figure2_3(&auto_result, Size::Large));
+    });
+    b.bench("figure3/medium-series", || {
+        black_box(report::figure2_3(&auto_result, Size::Medium));
+    });
+    b.bench("figure4/harp-series", || {
+        black_box(report::figure4(&harp_result));
+    });
+    b.bench("figure5/lb-accuracy-scatter", || {
+        black_box(report::figure5(&auto_result));
+    });
+    b.bench("figure6/2mm-steps", || {
+        black_box(report::figure6(&auto_result, "2mm", Size::Medium));
+    });
+    b.finish();
+}

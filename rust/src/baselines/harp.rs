@@ -1,0 +1,210 @@
+//! HARP (ICCAD'23) reimplementation — the learned-surrogate baseline of
+//! Table 9 / Fig 4.
+//!
+//! HARP trains a GNN on (pragma configuration → HLS report) pairs and
+//! sweeps the space with millisecond-class predictions, then synthesizes
+//! the top-10 candidates. What the comparison in Section 7.4 exercises is
+//! the *shape* of that pipeline:
+//!
+//! * near-exhaustive bottom-up traversal (~75k configurations/hour);
+//! * a fast surrogate with realistic error (HARP is "trained with precise
+//!   knowledge of the kernel and problem size", so its error is modest but
+//!   not zero — we model a deterministic ±35% multiplicative field over
+//!   the design space, seeded per kernel);
+//! * top-10 synthesis with the usual 3-hour timeout; best valid wins.
+
+use crate::dse::SimClock;
+use crate::hls::{Device, HlsOracle, HlsReport, SynthOptions};
+use crate::ir::{Kernel, LoopId};
+use crate::model;
+use crate::poly::Analysis;
+use crate::pragma::{space, Design, Space};
+use crate::util::rng::{hash64, Rng};
+use std::collections::BTreeSet;
+
+#[derive(Clone, Debug)]
+pub struct HarpConfig {
+    /// Surrogate sweep budget (Section 7.2.2: one hour).
+    pub sweep_minutes: f64,
+    /// Configurations the surrogate can score in the budget.
+    pub sweep_configs: u64,
+    pub top_k: usize,
+    pub workers: usize,
+    pub hls_timeout_min: f64,
+}
+
+impl Default for HarpConfig {
+    fn default() -> Self {
+        HarpConfig {
+            sweep_minutes: 60.0,
+            sweep_configs: 75_000,
+            top_k: 10,
+            workers: 8,
+            hls_timeout_min: 180.0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct HarpOutcome {
+    pub kernel: String,
+    pub best: Option<(Design, f64)>,
+    pub best_gflops: f64,
+    pub dse_minutes: f64,
+    pub configs_scored: u64,
+    pub designs_synthesized: u32,
+    pub designs_timeout: u32,
+}
+
+/// The surrogate: model latency modulated by a deterministic per-design
+/// error field (mimicking a well-fine-tuned GNN's residuals).
+fn surrogate(k: &Kernel, a: &Analysis, dev: &Device, d: &Design) -> f64 {
+    let base = model::evaluate(k, a, dev, d).total_cycles;
+    let h = hash64(&format!("harp-err/{}/{}", k.name, d.fingerprint()));
+    let err = 0.75 + (h % 10_000) as f64 / 10_000.0 * 0.7; // 0.75 .. 1.45
+    base * err
+}
+
+/// Run HARP on one kernel.
+pub fn run_harp(k: &Kernel, a: &Analysis, dev: &Device, cfg: &HarpConfig) -> HarpOutcome {
+    let oracle = HlsOracle {
+        device: dev.clone(),
+        options: SynthOptions {
+            hls_timeout_min: cfg.hls_timeout_min,
+        },
+    };
+    let mut rng = Rng::new(hash64(&format!("harp/{}/{}", k.name, k.dtype.name())));
+    let space = Space::new(k, a);
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+
+    // ---- surrogate sweep ---------------------------------------------------
+    // bottom-up traversal: sample pipeline configs × UF assignments with a
+    // bias toward growing factors (HARP walks the space incrementally)
+    let mut scored: Vec<(Design, f64)> = Vec::new();
+    let mut configs_scored = 0u64;
+    let budget = cfg.sweep_configs;
+    while configs_scored < budget {
+        let cfg_idx = rng.range(0, space.pipeline_configs.len() as u64) as usize;
+        let pcfg = &space.pipeline_configs[cfg_idx];
+        // random UF assignment, pow2-biased, growing magnitudes over time
+        let progress = configs_scored as f64 / budget as f64;
+        let drawn: Vec<u64> = (0..k.n_loops())
+            .map(|i| {
+                let menu = space.ufs(LoopId(i as u32), a, dev.max_array_partition);
+                if menu.len() <= 1 {
+                    return 1;
+                }
+                // early sweep: small factors; late sweep: large
+                let hi = (((menu.len() as f64) * (0.3 + 0.7 * progress)).ceil() as u64)
+                    .clamp(1, menu.len() as u64);
+                menu[rng.range(0, hi) as usize]
+            })
+            .collect();
+        let d = space::materialize(k, a, pcfg, &|l: LoopId| drawn[l.0 as usize], &|_| 1);
+        configs_scored += 1;
+        if !seen.insert(d.fingerprint()) {
+            continue;
+        }
+        // HARP's classifier drops clearly-invalid points (it is trained on
+        // this very kernel, so it has learned which pragmas Merlin refuses
+        // — Section 7.4); screen with the same legality predicate
+        let part = d.max_partitioning(k);
+        if part > dev.max_array_partition {
+            continue;
+        }
+        if crate::merlin::apply(k, a, dev, &d).early_reject {
+            continue;
+        }
+        let s = surrogate(k, a, dev, &d);
+        scored.push((d, s));
+        // keep the candidate list bounded
+        if scored.len() > 4 * cfg.top_k {
+            scored.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+            scored.truncate(2 * cfg.top_k);
+        }
+    }
+    scored.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+    scored.truncate(cfg.top_k);
+
+    // ---- synthesize the top-k ----------------------------------------------
+    let mut clock = SimClock::new(cfg.workers);
+    clock.serial(cfg.sweep_minutes);
+    let mut best: Option<(Design, f64)> = None;
+    let mut best_rep: Option<HlsReport> = None;
+    let mut synthd = 0;
+    let mut dt = 0;
+    for (d, _) in &scored {
+        let rep = oracle.synth(k, a, d);
+        clock.submit(rep.synth_minutes);
+        synthd += 1;
+        if rep.timeout {
+            dt += 1;
+            continue;
+        }
+        if rep.valid && best.as_ref().map(|b| rep.cycles < b.1).unwrap_or(true) {
+            best = Some((d.clone(), rep.cycles));
+            best_rep = Some(rep);
+        }
+    }
+    let _ = best_rep;
+
+    let best_gflops = best
+        .as_ref()
+        .map(|(_, c)| a.gflops(*c, dev.freq_hz))
+        .unwrap_or(0.0);
+    HarpOutcome {
+        kernel: k.name.clone(),
+        best,
+        best_gflops,
+        dse_minutes: clock.makespan(),
+        configs_scored,
+        designs_synthesized: synthd,
+        designs_timeout: dt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::DType;
+
+    fn run(name: &str, size: Size, dtype: DType) -> HarpOutcome {
+        let k = benchmarks::build(name, size, dtype).unwrap();
+        let a = Analysis::new(&k);
+        let cfg = HarpConfig {
+            sweep_configs: 5_000, // keep unit tests fast
+            ..HarpConfig::default()
+        };
+        run_harp(&k, &a, &Device::u200(), &cfg)
+    }
+
+    #[test]
+    fn finds_valid_design() {
+        let out = run("gemm", Size::Small, DType::F64);
+        assert!(out.best.is_some());
+        assert!(out.best_gflops > 0.0);
+        assert!(out.designs_synthesized <= 10);
+        assert!(out.dse_minutes >= 60.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let o1 = run("bicg", Size::Small, DType::F64);
+        let o2 = run("bicg", Size::Small, DType::F64);
+        assert_eq!(o1.best_gflops, o2.best_gflops);
+        assert_eq!(o1.configs_scored, o2.configs_scored);
+    }
+
+    #[test]
+    fn improves_over_original() {
+        let k = benchmarks::build("mvt", Size::Small, DType::F64).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let orig = HlsOracle::new(dev.clone())
+            .synth(&k, &a, &Design::empty(&k))
+            .gflops(&a, &dev);
+        let out = run("mvt", Size::Small, DType::F64);
+        assert!(out.best_gflops > orig, "{} !> {orig}", out.best_gflops);
+    }
+}

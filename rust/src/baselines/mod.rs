@@ -1,0 +1,14 @@
+//! Comparison baselines re-implemented from their publications:
+//!
+//! * [`autodse`] — AutoDSE (Sohrabizadeh et al., FPGA'21): model-free,
+//!   bottleneck-driven incremental exploration treating the compiler as a
+//!   black box (Sections 2.2–2.3 describe the behaviours reproduced here).
+//! * [`harp`] — HARP (Sohrabizadeh et al., ICCAD'23): surrogate-guided
+//!   near-exhaustive search (~75k configs/hour) with top-10 synthesis
+//!   (Section 7.2.2 / 7.4).
+
+pub mod autodse;
+pub mod harp;
+
+pub use autodse::{run_autodse, AutoDseConfig, AutoDseOutcome};
+pub use harp::{run_harp, HarpConfig, HarpOutcome};

@@ -1,0 +1,45 @@
+//! Convolutional layer kernel (Section 7.1: J,I = 256, P,Q = 5,
+//! H,W = 224) — the one non-PolyBench benchmark of Table 5.
+
+use crate::ir::{ArrayDir, DType, Kernel, KernelBuilder, OpKind};
+
+/// Direct convolution: `out[j][h][w] += in[i][h+p][w+q] * W[j][i][p][q]`.
+pub fn kernel_cnn(j_out: u64, i_in: u64, p: u64, q: u64, h: u64, w: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("cnn", dtype);
+    let input = kb.array("in", &[i_in, h + p - 1, w + q - 1], ArrayDir::In);
+    let weight = kb.array("weight", &[j_out, i_in, p, q], ArrayDir::In);
+    let out = kb.array("out", &[j_out, h, w], ArrayDir::Out);
+
+    kb.for_const("j", 0, j_out as i64, |kb, j| {
+        kb.for_const("h", 0, h as i64, |kb, hh| {
+            kb.for_const("w", 0, w as i64, |kb, ww| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(out, &[kb.v(j), kb.v(hh), kb.v(ww)])],
+                    vec![],
+                    &[],
+                );
+                kb.for_const("i", 0, i_in as i64, |kb, i| {
+                    kb.for_const("p", 0, p as i64, |kb, pp| {
+                        kb.for_const("q", 0, q as i64, |kb, qq| {
+                            kb.stmt(
+                                "S1",
+                                vec![kb.at(out, &[kb.v(j), kb.v(hh), kb.v(ww)])],
+                                vec![
+                                    kb.at(out, &[kb.v(j), kb.v(hh), kb.v(ww)]),
+                                    kb.at(
+                                        input,
+                                        &[kb.v(i), kb.sum(&kb.v(hh), &kb.v(pp)), kb.sum(&kb.v(ww), &kb.v(qq))],
+                                    ),
+                                    kb.at(weight, &[kb.v(j), kb.v(i), kb.v(pp), kb.v(qq)]),
+                                ],
+                                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                            );
+                        });
+                    });
+                });
+            });
+        });
+    });
+    kb.finish()
+}

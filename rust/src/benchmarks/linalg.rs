@@ -1,0 +1,421 @@
+//! Rectangular linear-algebra kernels: 2mm, 3mm, gemm, atax, bicg, mvt,
+//! gemver, gesummv, doitgen.
+//!
+//! Each follows the PolyBench/C 4.2.1 reference source, with scalar
+//! constants (`alpha`, `beta`) folded into the op multisets (they live in
+//! registers, not arrays, and do not create dependences).
+
+use crate::ir::{ArrayDir, DType, Kernel, KernelBuilder, OpKind};
+
+/// `D = alpha*A*B*C + beta*D` (Listing 1).
+pub fn kernel_2mm(ni: u64, nj: u64, nk: u64, nl: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("2mm", dtype);
+    let tmp = kb.array("tmp", &[ni, nj], ArrayDir::Temp);
+    let a = kb.array("A", &[ni, nk], ArrayDir::In);
+    let b = kb.array("B", &[nk, nj], ArrayDir::In);
+    let c = kb.array("C", &[nj, nl], ArrayDir::In);
+    let d = kb.array("D", &[ni, nl], ArrayDir::InOut);
+
+    kb.for_const("i1", 0, ni as i64, |kb, i1| {
+        kb.for_const("j1", 0, nj as i64, |kb, j1| {
+            kb.stmt("S0", vec![kb.at(tmp, &[kb.v(i1), kb.v(j1)])], vec![], &[]);
+            kb.for_const("k1", 0, nk as i64, |kb, k1| {
+                // tmp[i1][j1] += alpha * A[i1][k1] * B[k1][j1]
+                kb.stmt(
+                    "S1",
+                    vec![kb.at(tmp, &[kb.v(i1), kb.v(j1)])],
+                    vec![
+                        kb.at(tmp, &[kb.v(i1), kb.v(j1)]),
+                        kb.at(a, &[kb.v(i1), kb.v(k1)]),
+                        kb.at(b, &[kb.v(k1), kb.v(j1)]),
+                    ],
+                    &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+                );
+            });
+        });
+    });
+    kb.for_const("i2", 0, ni as i64, |kb, i2| {
+        kb.for_const("j2", 0, nl as i64, |kb, j2| {
+            // D[i2][j2] *= beta
+            kb.stmt(
+                "S2",
+                vec![kb.at(d, &[kb.v(i2), kb.v(j2)])],
+                vec![kb.at(d, &[kb.v(i2), kb.v(j2)])],
+                &[(OpKind::Mul, 1)],
+            );
+            kb.for_const("k2", 0, nj as i64, |kb, k2| {
+                // D[i2][j2] += tmp[i2][k2] * C[k2][j2]
+                kb.stmt(
+                    "S3",
+                    vec![kb.at(d, &[kb.v(i2), kb.v(j2)])],
+                    vec![
+                        kb.at(d, &[kb.v(i2), kb.v(j2)]),
+                        kb.at(tmp, &[kb.v(i2), kb.v(k2)]),
+                        kb.at(c, &[kb.v(k2), kb.v(j2)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// `G = (A*B) * (C*D)`.
+pub fn kernel_3mm(ni: u64, nj: u64, nk: u64, nl: u64, nm: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("3mm", dtype);
+    let e = kb.array("E", &[ni, nj], ArrayDir::Temp);
+    let a = kb.array("A", &[ni, nk], ArrayDir::In);
+    let b = kb.array("B", &[nk, nj], ArrayDir::In);
+    let f = kb.array("F", &[nj, nl], ArrayDir::Temp);
+    let c = kb.array("C", &[nj, nm], ArrayDir::In);
+    let d = kb.array("D", &[nm, nl], ArrayDir::In);
+    let g = kb.array("G", &[ni, nl], ArrayDir::Out);
+
+    let mm = |kb: &mut KernelBuilder,
+              tag: u32,
+              out: crate::ir::ArrayId,
+              x: crate::ir::ArrayId,
+              y: crate::ir::ArrayId,
+              n0: u64,
+              n1: u64,
+              n2: u64| {
+        kb.for_const(&format!("i{tag}"), 0, n0 as i64, |kb, i| {
+            kb.for_const(&format!("j{tag}"), 0, n1 as i64, |kb, j| {
+                kb.stmt(
+                    &format!("S{}", tag * 2),
+                    vec![kb.at(out, &[kb.v(i), kb.v(j)])],
+                    vec![],
+                    &[],
+                );
+                kb.for_const(&format!("k{tag}"), 0, n2 as i64, |kb, k| {
+                    kb.stmt(
+                        &format!("S{}", tag * 2 + 1),
+                        vec![kb.at(out, &[kb.v(i), kb.v(j)])],
+                        vec![
+                            kb.at(out, &[kb.v(i), kb.v(j)]),
+                            kb.at(x, &[kb.v(i), kb.v(k)]),
+                            kb.at(y, &[kb.v(k), kb.v(j)]),
+                        ],
+                        &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                    );
+                });
+            });
+        });
+    };
+    mm(&mut kb, 0, e, a, b, ni, nj, nk);
+    mm(&mut kb, 1, f, c, d, nj, nl, nm);
+    mm(&mut kb, 2, g, e, f, ni, nl, nj);
+    kb.finish()
+}
+
+/// `C = alpha*A*B + beta*C`.
+pub fn kernel_gemm(ni: u64, nj: u64, nk: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("gemm", dtype);
+    let c = kb.array("C", &[ni, nj], ArrayDir::InOut);
+    let a = kb.array("A", &[ni, nk], ArrayDir::In);
+    let b = kb.array("B", &[nk, nj], ArrayDir::In);
+    // PolyBench 4.2.1 structure: the beta-scaling j-loop is a sibling of
+    // the k(j) accumulation nest → 4 loops (NL=4 in Table 5).
+    kb.for_const("i", 0, ni as i64, |kb, i| {
+        kb.for_const("j0", 0, nj as i64, |kb, j0| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        kb.for_const("k", 0, nk as i64, |kb, k| {
+            kb.for_const("j1", 0, nj as i64, |kb, j1| {
+                kb.stmt(
+                    "S1",
+                    vec![kb.at(c, &[kb.v(i), kb.v(j1)])],
+                    vec![
+                        kb.at(c, &[kb.v(i), kb.v(j1)]),
+                        kb.at(a, &[kb.v(i), kb.v(k)]),
+                        kb.at(b, &[kb.v(k), kb.v(j1)]),
+                    ],
+                    &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// `y = A^T (A x)` (Listing 10).
+pub fn kernel_atax(m: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("atax", dtype);
+    let a = kb.array("A", &[m, n], ArrayDir::In);
+    let x = kb.array("x", &[n], ArrayDir::In);
+    let y = kb.array("y", &[n], ArrayDir::Out);
+    let tmp = kb.array("tmp", &[m], ArrayDir::Temp);
+
+    kb.for_const("i0", 0, n as i64, |kb, i0| {
+        kb.stmt("S0", vec![kb.at(y, &[kb.v(i0)])], vec![], &[]);
+    });
+    kb.for_const("i1", 0, m as i64, |kb, i1| {
+        kb.stmt("S1", vec![kb.at(tmp, &[kb.v(i1)])], vec![], &[]);
+        kb.for_const("j1", 0, n as i64, |kb, j1| {
+            kb.stmt(
+                "S2",
+                vec![kb.at(tmp, &[kb.v(i1)])],
+                vec![
+                    kb.at(tmp, &[kb.v(i1)]),
+                    kb.at(a, &[kb.v(i1), kb.v(j1)]),
+                    kb.at(x, &[kb.v(j1)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+        kb.for_const("j2", 0, n as i64, |kb, j2| {
+            kb.stmt(
+                "S3",
+                vec![kb.at(y, &[kb.v(j2)])],
+                vec![
+                    kb.at(y, &[kb.v(j2)]),
+                    kb.at(a, &[kb.v(i1), kb.v(j2)]),
+                    kb.at(tmp, &[kb.v(i1)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// `s = r^T A ; q = A p` (Listing 5).
+pub fn kernel_bicg(n: u64, m: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("bicg", dtype);
+    let a = kb.array("A", &[n, m], ArrayDir::In);
+    let s = kb.array("s", &[m], ArrayDir::Out);
+    let q = kb.array("q", &[n], ArrayDir::Out);
+    let p = kb.array("p", &[m], ArrayDir::In);
+    let r = kb.array("r", &[n], ArrayDir::In);
+
+    kb.for_const("i0", 0, m as i64, |kb, i0| {
+        kb.stmt("S0", vec![kb.at(s, &[kb.v(i0)])], vec![], &[]);
+    });
+    kb.for_const("i1", 0, n as i64, |kb, i1| {
+        kb.stmt("S1", vec![kb.at(q, &[kb.v(i1)])], vec![], &[]);
+        kb.for_const("j1", 0, m as i64, |kb, j1| {
+            kb.stmt(
+                "S2",
+                vec![kb.at(s, &[kb.v(j1)])],
+                vec![
+                    kb.at(s, &[kb.v(j1)]),
+                    kb.at(r, &[kb.v(i1)]),
+                    kb.at(a, &[kb.v(i1), kb.v(j1)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+            kb.stmt(
+                "S3",
+                vec![kb.at(q, &[kb.v(i1)])],
+                vec![
+                    kb.at(q, &[kb.v(i1)]),
+                    kb.at(a, &[kb.v(i1), kb.v(j1)]),
+                    kb.at(p, &[kb.v(j1)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// `x1 = x1 + A y1 ; x2 = x2 + A^T y2`.
+pub fn kernel_mvt(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("mvt", dtype);
+    let x1 = kb.array("x1", &[n], ArrayDir::InOut);
+    let x2 = kb.array("x2", &[n], ArrayDir::InOut);
+    let y1 = kb.array("y1", &[n], ArrayDir::In);
+    let y2 = kb.array("y2", &[n], ArrayDir::In);
+    let a = kb.array("A", &[n, n], ArrayDir::In);
+
+    kb.for_const("i1", 0, n as i64, |kb, i1| {
+        kb.for_const("j1", 0, n as i64, |kb, j1| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(x1, &[kb.v(i1)])],
+                vec![
+                    kb.at(x1, &[kb.v(i1)]),
+                    kb.at(a, &[kb.v(i1), kb.v(j1)]),
+                    kb.at(y1, &[kb.v(j1)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.for_const("i2", 0, n as i64, |kb, i2| {
+        kb.for_const("j2", 0, n as i64, |kb, j2| {
+            kb.stmt(
+                "S1",
+                vec![kb.at(x2, &[kb.v(i2)])],
+                vec![
+                    kb.at(x2, &[kb.v(i2)]),
+                    kb.at(a, &[kb.v(j2), kb.v(i2)]),
+                    kb.at(y2, &[kb.v(j2)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// BLAS gemver: rank-2 update + two matrix-vector products.
+pub fn kernel_gemver(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("gemver", dtype);
+    let a = kb.array("A", &[n, n], ArrayDir::InOut);
+    let u1 = kb.array("u1", &[n], ArrayDir::In);
+    let v1 = kb.array("v1", &[n], ArrayDir::In);
+    let u2 = kb.array("u2", &[n], ArrayDir::In);
+    let v2 = kb.array("v2", &[n], ArrayDir::In);
+    let x = kb.array("x", &[n], ArrayDir::Temp);
+    let y = kb.array("y", &[n], ArrayDir::In);
+    let z = kb.array("z", &[n], ArrayDir::In);
+    let w = kb.array("w", &[n], ArrayDir::Out);
+
+    kb.for_const("i1", 0, n as i64, |kb, i1| {
+        kb.for_const("j1", 0, n as i64, |kb, j1| {
+            // A[i][j] += u1[i]*v1[j] + u2[i]*v2[j]
+            kb.stmt_with_chain(
+                "S0",
+                vec![kb.at(a, &[kb.v(i1), kb.v(j1)])],
+                vec![
+                    kb.at(a, &[kb.v(i1), kb.v(j1)]),
+                    kb.at(u1, &[kb.v(i1)]),
+                    kb.at(v1, &[kb.v(j1)]),
+                    kb.at(u2, &[kb.v(i1)]),
+                    kb.at(v2, &[kb.v(j1)]),
+                ],
+                &[(OpKind::Mul, 2), (OpKind::Add, 2)],
+                vec![OpKind::Mul, OpKind::Add, OpKind::Add],
+            );
+        });
+    });
+    kb.for_const("i2", 0, n as i64, |kb, i2| {
+        kb.for_const("j2", 0, n as i64, |kb, j2| {
+            // x[i] += beta * A[j][i] * y[j]
+            kb.stmt(
+                "S1",
+                vec![kb.at(x, &[kb.v(i2)])],
+                vec![
+                    kb.at(x, &[kb.v(i2)]),
+                    kb.at(a, &[kb.v(j2), kb.v(i2)]),
+                    kb.at(y, &[kb.v(j2)]),
+                ],
+                &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.for_const("i3", 0, n as i64, |kb, i3| {
+        kb.stmt(
+            "S2",
+            vec![kb.at(x, &[kb.v(i3)])],
+            vec![kb.at(x, &[kb.v(i3)]), kb.at(z, &[kb.v(i3)])],
+            &[(OpKind::Add, 1)],
+        );
+    });
+    kb.for_const("i4", 0, n as i64, |kb, i4| {
+        kb.for_const("j4", 0, n as i64, |kb, j4| {
+            // w[i] += alpha * A[i][j] * x[j]
+            kb.stmt(
+                "S3",
+                vec![kb.at(w, &[kb.v(i4)])],
+                vec![
+                    kb.at(w, &[kb.v(i4)]),
+                    kb.at(a, &[kb.v(i4), kb.v(j4)]),
+                    kb.at(x, &[kb.v(j4)]),
+                ],
+                &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// `y = alpha*A*x + beta*B*x`.
+pub fn kernel_gesummv(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("gesummv", dtype);
+    let a = kb.array("A", &[n, n], ArrayDir::In);
+    let b = kb.array("B", &[n, n], ArrayDir::In);
+    let x = kb.array("x", &[n], ArrayDir::In);
+    let y = kb.array("y", &[n], ArrayDir::Out);
+    let tmp = kb.array("tmp", &[n], ArrayDir::Temp);
+
+    kb.for_const("i", 0, n as i64, |kb, i| {
+        kb.stmt("S0", vec![kb.at(tmp, &[kb.v(i)])], vec![], &[]);
+        kb.stmt("S1", vec![kb.at(y, &[kb.v(i)])], vec![], &[]);
+        kb.for_const("j", 0, n as i64, |kb, j| {
+            kb.stmt(
+                "S2",
+                vec![kb.at(tmp, &[kb.v(i)])],
+                vec![
+                    kb.at(tmp, &[kb.v(i)]),
+                    kb.at(a, &[kb.v(i), kb.v(j)]),
+                    kb.at(x, &[kb.v(j)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+            kb.stmt(
+                "S3",
+                vec![kb.at(y, &[kb.v(i)])],
+                vec![
+                    kb.at(y, &[kb.v(i)]),
+                    kb.at(b, &[kb.v(i), kb.v(j)]),
+                    kb.at(x, &[kb.v(j)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+        // y[i] = alpha*tmp[i] + beta*y[i]
+        kb.stmt_with_chain(
+            "S4",
+            vec![kb.at(y, &[kb.v(i)])],
+            vec![kb.at(tmp, &[kb.v(i)]), kb.at(y, &[kb.v(i)])],
+            &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+            vec![OpKind::Mul, OpKind::Add],
+        );
+    });
+    kb.finish()
+}
+
+/// `A[r][q][p] = Σ_s A[r][q][s] * C4[s][p]` (multi-resolution analysis).
+pub fn kernel_doitgen(nr: u64, nq: u64, np: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("doitgen", dtype);
+    let a = kb.array("A", &[nr, nq, np], ArrayDir::InOut);
+    let c4 = kb.array("C4", &[np, np], ArrayDir::In);
+    let sum = kb.array("sum", &[np], ArrayDir::Temp);
+
+    kb.for_const("r", 0, nr as i64, |kb, r| {
+        kb.for_const("q", 0, nq as i64, |kb, q| {
+            kb.for_const("p", 0, np as i64, |kb, p| {
+                kb.stmt("S0", vec![kb.at(sum, &[kb.v(p)])], vec![], &[]);
+                kb.for_const("s", 0, np as i64, |kb, s| {
+                    kb.stmt(
+                        "S1",
+                        vec![kb.at(sum, &[kb.v(p)])],
+                        vec![
+                            kb.at(sum, &[kb.v(p)]),
+                            kb.at(a, &[kb.v(r), kb.v(q), kb.v(s)]),
+                            kb.at(c4, &[kb.v(s), kb.v(p)]),
+                        ],
+                        &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                    );
+                });
+            });
+            kb.for_const("p2", 0, np as i64, |kb, p2| {
+                kb.stmt(
+                    "S2",
+                    vec![kb.at(a, &[kb.v(r), kb.v(q), kb.v(p2)])],
+                    vec![kb.at(sum, &[kb.v(p2)])],
+                    &[],
+                );
+            });
+        });
+    });
+    kb.finish()
+}

@@ -1,0 +1,466 @@
+//! Triangular / recurrence-heavy linear-algebra kernels: covariance,
+//! durbin, gramschmidt, lu, symm, syr2k, syrk, trisolv, trmm.
+//!
+//! These exercise non-constant trip counts (triangular loops), serializing
+//! outer loops, and scalar recurrences — the cases where the paper's
+//! `TC_min/TC_max/TC_avg` machinery and Eq 8 dependence caps matter.
+//!
+//! Scalars involved in recurrences (`nrm`, `sum`, `alpha`, `beta`, `temp2`)
+//! are modeled as 1-element `Temp` arrays so the dependence analysis sees
+//! them; square roots (gramschmidt's `R[k][k] = sqrt(nrm)`) are modeled as a
+//! division (same latency class on Vitis).
+
+use crate::ir::{ArrayDir, DType, Kernel, KernelBuilder, OpKind};
+
+/// Covariance matrix of `data` (N samples × M variables).
+pub fn kernel_covariance(m: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("covariance", dtype);
+    let data = kb.array("data", &[n, m], ArrayDir::InOut);
+    let mean = kb.array("mean", &[m], ArrayDir::Temp);
+    let cov = kb.array("cov", &[m, m], ArrayDir::Out);
+
+    kb.for_const("j0", 0, m as i64, |kb, j0| {
+        kb.stmt("S0", vec![kb.at(mean, &[kb.v(j0)])], vec![], &[]);
+        kb.for_const("i0", 0, n as i64, |kb, i0| {
+            kb.stmt(
+                "S1",
+                vec![kb.at(mean, &[kb.v(j0)])],
+                vec![kb.at(mean, &[kb.v(j0)]), kb.at(data, &[kb.v(i0), kb.v(j0)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        kb.stmt(
+            "S2",
+            vec![kb.at(mean, &[kb.v(j0)])],
+            vec![kb.at(mean, &[kb.v(j0)])],
+            &[(OpKind::Div, 1)],
+        );
+    });
+    kb.for_const("i1", 0, n as i64, |kb, i1| {
+        kb.for_const("j1", 0, m as i64, |kb, j1| {
+            kb.stmt(
+                "S3",
+                vec![kb.at(data, &[kb.v(i1), kb.v(j1)])],
+                vec![kb.at(data, &[kb.v(i1), kb.v(j1)]), kb.at(mean, &[kb.v(j1)])],
+                &[(OpKind::Sub, 1)],
+            );
+        });
+    });
+    kb.for_const("i2", 0, m as i64, |kb, i2| {
+        // for j2 in [i2, M)
+        kb.for_expr("j2", kb.v(i2), kb.c(m as i64), |kb, j2| {
+            kb.stmt("S4", vec![kb.at(cov, &[kb.v(i2), kb.v(j2)])], vec![], &[]);
+            kb.for_const("k2", 0, n as i64, |kb, k2| {
+                kb.stmt(
+                    "S5",
+                    vec![kb.at(cov, &[kb.v(i2), kb.v(j2)])],
+                    vec![
+                        kb.at(cov, &[kb.v(i2), kb.v(j2)]),
+                        kb.at(data, &[kb.v(k2), kb.v(i2)]),
+                        kb.at(data, &[kb.v(k2), kb.v(j2)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                );
+            });
+            kb.stmt(
+                "S6",
+                vec![kb.at(cov, &[kb.v(i2), kb.v(j2)])],
+                vec![kb.at(cov, &[kb.v(i2), kb.v(j2)])],
+                &[(OpKind::Div, 1)],
+            );
+            kb.stmt(
+                "S7",
+                vec![kb.at(cov, &[kb.v(j2), kb.v(i2)])],
+                vec![kb.at(cov, &[kb.v(i2), kb.v(j2)])],
+                &[],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// Durbin's algorithm for Toeplitz systems (fully serial outer loop).
+pub fn kernel_durbin(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("durbin", dtype);
+    let r = kb.array("r", &[n], ArrayDir::In);
+    let y = kb.array("y", &[n], ArrayDir::Out);
+    let z = kb.array("z", &[n], ArrayDir::Temp);
+    let alpha = kb.array("alpha", &[1], ArrayDir::Temp);
+    let beta = kb.array("beta", &[1], ArrayDir::Temp);
+    let sum = kb.array("sum", &[1], ArrayDir::Temp);
+
+    kb.for_const("k", 1, n as i64, |kb, k| {
+        // beta = (1 - alpha*alpha) * beta
+        kb.stmt(
+            "S0",
+            vec![kb.at(beta, &[kb.c(0)])],
+            vec![kb.at(alpha, &[kb.c(0)]), kb.at(beta, &[kb.c(0)])],
+            &[(OpKind::Mul, 2), (OpKind::Sub, 1)],
+        );
+        kb.stmt("S1", vec![kb.at(sum, &[kb.c(0)])], vec![], &[]);
+        kb.for_expr("i0", kb.c(0), kb.v(k), |kb, i0| {
+            // sum += r[k-i-1] * y[i]
+            let idx = kb.v(k).sub(&kb.v(i0)).plus_const(-1);
+            kb.stmt(
+                "S2",
+                vec![kb.at(sum, &[kb.c(0)])],
+                vec![
+                    kb.at(sum, &[kb.c(0)]),
+                    kb.at(r, &[idx]),
+                    kb.at(y, &[kb.v(i0)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+        // alpha = -(r[k] + sum) / beta
+        kb.stmt(
+            "S3",
+            vec![kb.at(alpha, &[kb.c(0)])],
+            vec![
+                kb.at(r, &[kb.v(k)]),
+                kb.at(sum, &[kb.c(0)]),
+                kb.at(beta, &[kb.c(0)]),
+            ],
+            &[(OpKind::Add, 1), (OpKind::Div, 1)],
+        );
+        kb.for_expr("i1", kb.c(0), kb.v(k), |kb, i1| {
+            // z[i] = y[i] + alpha * y[k-i-1]
+            let idx = kb.v(k).sub(&kb.v(i1)).plus_const(-1);
+            kb.stmt(
+                "S4",
+                vec![kb.at(z, &[kb.v(i1)])],
+                vec![
+                    kb.at(y, &[kb.v(i1)]),
+                    kb.at(alpha, &[kb.c(0)]),
+                    kb.at(y, &[idx]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+        kb.for_expr("i2", kb.c(0), kb.v(k), |kb, i2| {
+            kb.stmt(
+                "S5",
+                vec![kb.at(y, &[kb.v(i2)])],
+                vec![kb.at(z, &[kb.v(i2)])],
+                &[],
+            );
+        });
+        kb.stmt(
+            "S6",
+            vec![kb.at(y, &[kb.v(k)])],
+            vec![kb.at(alpha, &[kb.c(0)])],
+            &[],
+        );
+    });
+    kb.finish()
+}
+
+/// Modified Gram-Schmidt QR decomposition.
+pub fn kernel_gramschmidt(m: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("gramschmidt", dtype);
+    let a = kb.array("A", &[m, n], ArrayDir::InOut);
+    let r = kb.array("R", &[n, n], ArrayDir::Out);
+    let q = kb.array("Q", &[m, n], ArrayDir::Out);
+    let nrm = kb.array("nrm", &[1], ArrayDir::Temp);
+
+    kb.for_const("k", 0, n as i64, |kb, k| {
+        kb.stmt("S0", vec![kb.at(nrm, &[kb.c(0)])], vec![], &[]);
+        kb.for_const("i0", 0, m as i64, |kb, i0| {
+            // nrm += A[i][k] * A[i][k]
+            kb.stmt(
+                "S1",
+                vec![kb.at(nrm, &[kb.c(0)])],
+                vec![kb.at(nrm, &[kb.c(0)]), kb.at(a, &[kb.v(i0), kb.v(k)])],
+                &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+            );
+        });
+        // R[k][k] = sqrt(nrm) — modeled as a Div-class op
+        kb.stmt(
+            "S2",
+            vec![kb.at(r, &[kb.v(k), kb.v(k)])],
+            vec![kb.at(nrm, &[kb.c(0)])],
+            &[(OpKind::Div, 1)],
+        );
+        kb.for_const("i1", 0, m as i64, |kb, i1| {
+            // Q[i][k] = A[i][k] / R[k][k]
+            kb.stmt(
+                "S3",
+                vec![kb.at(q, &[kb.v(i1), kb.v(k)])],
+                vec![kb.at(a, &[kb.v(i1), kb.v(k)]), kb.at(r, &[kb.v(k), kb.v(k)])],
+                &[(OpKind::Div, 1)],
+            );
+        });
+        kb.for_expr("j", kb.vp(k, 1), kb.c(n as i64), |kb, j| {
+            kb.stmt("S4", vec![kb.at(r, &[kb.v(k), kb.v(j)])], vec![], &[]);
+            kb.for_const("i2", 0, m as i64, |kb, i2| {
+                // R[k][j] += Q[i][k] * A[i][j]
+                kb.stmt(
+                    "S5",
+                    vec![kb.at(r, &[kb.v(k), kb.v(j)])],
+                    vec![
+                        kb.at(r, &[kb.v(k), kb.v(j)]),
+                        kb.at(q, &[kb.v(i2), kb.v(k)]),
+                        kb.at(a, &[kb.v(i2), kb.v(j)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                );
+            });
+            kb.for_const("i3", 0, m as i64, |kb, i3| {
+                // A[i][j] -= Q[i][k] * R[k][j]
+                kb.stmt(
+                    "S6",
+                    vec![kb.at(a, &[kb.v(i3), kb.v(j)])],
+                    vec![
+                        kb.at(a, &[kb.v(i3), kb.v(j)]),
+                        kb.at(q, &[kb.v(i3), kb.v(k)]),
+                        kb.at(r, &[kb.v(k), kb.v(j)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Sub, 1)],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// LU decomposition (in-place, no pivoting).
+pub fn kernel_lu(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("lu", dtype);
+    let a = kb.array("A", &[n, n], ArrayDir::InOut);
+
+    kb.for_const("i", 0, n as i64, |kb, i| {
+        kb.for_expr("j0", kb.c(0), kb.v(i), |kb, j0| {
+            kb.for_expr("k0", kb.c(0), kb.v(j0), |kb, k0| {
+                // A[i][j] -= A[i][k] * A[k][j]
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j0)])],
+                    vec![
+                        kb.at(a, &[kb.v(i), kb.v(j0)]),
+                        kb.at(a, &[kb.v(i), kb.v(k0)]),
+                        kb.at(a, &[kb.v(k0), kb.v(j0)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Sub, 1)],
+                );
+            });
+            // A[i][j] /= A[j][j]
+            kb.stmt(
+                "S1",
+                vec![kb.at(a, &[kb.v(i), kb.v(j0)])],
+                vec![kb.at(a, &[kb.v(i), kb.v(j0)]), kb.at(a, &[kb.v(j0), kb.v(j0)])],
+                &[(OpKind::Div, 1)],
+            );
+        });
+        kb.for_expr("j1", kb.v(i), kb.c(n as i64), |kb, j1| {
+            kb.for_expr("k1", kb.c(0), kb.v(i), |kb, k1| {
+                kb.stmt(
+                    "S2",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j1)])],
+                    vec![
+                        kb.at(a, &[kb.v(i), kb.v(j1)]),
+                        kb.at(a, &[kb.v(i), kb.v(k1)]),
+                        kb.at(a, &[kb.v(k1), kb.v(j1)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Sub, 1)],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// Symmetric matrix-matrix multiply `C = alpha*A*B + beta*C`, A symmetric.
+pub fn kernel_symm(m: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("symm", dtype);
+    let c = kb.array("C", &[m, n], ArrayDir::InOut);
+    let a = kb.array("A", &[m, m], ArrayDir::In);
+    let b = kb.array("B", &[m, n], ArrayDir::In);
+    let temp2 = kb.array("temp2", &[1], ArrayDir::Temp);
+
+    kb.for_const("i", 0, m as i64, |kb, i| {
+        kb.for_const("j", 0, n as i64, |kb, j| {
+            kb.stmt("S0", vec![kb.at(temp2, &[kb.c(0)])], vec![], &[]);
+            kb.for_expr("k", kb.c(0), kb.v(i), |kb, k| {
+                // C[k][j] += alpha * B[i][j] * A[i][k]
+                kb.stmt(
+                    "S1",
+                    vec![kb.at(c, &[kb.v(k), kb.v(j)])],
+                    vec![
+                        kb.at(c, &[kb.v(k), kb.v(j)]),
+                        kb.at(b, &[kb.v(i), kb.v(j)]),
+                        kb.at(a, &[kb.v(i), kb.v(k)]),
+                    ],
+                    &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+                );
+                // temp2 += B[k][j] * A[i][k]
+                kb.stmt(
+                    "S2",
+                    vec![kb.at(temp2, &[kb.c(0)])],
+                    vec![
+                        kb.at(temp2, &[kb.c(0)]),
+                        kb.at(b, &[kb.v(k), kb.v(j)]),
+                        kb.at(a, &[kb.v(i), kb.v(k)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                );
+            });
+            // C[i][j] = beta*C[i][j] + alpha*B[i][j]*A[i][i] + alpha*temp2
+            kb.stmt_with_chain(
+                "S3",
+                vec![kb.at(c, &[kb.v(i), kb.v(j)])],
+                vec![
+                    kb.at(c, &[kb.v(i), kb.v(j)]),
+                    kb.at(b, &[kb.v(i), kb.v(j)]),
+                    kb.at(a, &[kb.v(i), kb.v(i)]),
+                    kb.at(temp2, &[kb.c(0)]),
+                ],
+                &[(OpKind::Mul, 4), (OpKind::Add, 2)],
+                vec![OpKind::Mul, OpKind::Mul, OpKind::Add, OpKind::Add],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// Symmetric rank-2k update (triangular output).
+pub fn kernel_syr2k(n: u64, m: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("syr2k", dtype);
+    let c = kb.array("C", &[n, n], ArrayDir::InOut);
+    let a = kb.array("A", &[n, m], ArrayDir::In);
+    let b = kb.array("B", &[n, m], ArrayDir::In);
+
+    kb.for_const("i", 0, n as i64, |kb, i| {
+        kb.for_expr("j0", kb.c(0), kb.vp(i, 1), |kb, j0| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        kb.for_const("k", 0, m as i64, |kb, k| {
+            kb.for_expr("j1", kb.c(0), kb.vp(i, 1), |kb, j1| {
+                // C[i][j] += A[j][k]*alpha*B[i][k] + B[j][k]*alpha*A[i][k]
+                kb.stmt_with_chain(
+                    "S1",
+                    vec![kb.at(c, &[kb.v(i), kb.v(j1)])],
+                    vec![
+                        kb.at(c, &[kb.v(i), kb.v(j1)]),
+                        kb.at(a, &[kb.v(j1), kb.v(k)]),
+                        kb.at(b, &[kb.v(i), kb.v(k)]),
+                        kb.at(b, &[kb.v(j1), kb.v(k)]),
+                        kb.at(a, &[kb.v(i), kb.v(k)]),
+                    ],
+                    &[(OpKind::Mul, 4), (OpKind::Add, 2)],
+                    vec![OpKind::Mul, OpKind::Mul, OpKind::Add, OpKind::Add],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// Symmetric rank-k update.
+pub fn kernel_syrk(n: u64, m: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("syrk", dtype);
+    let c = kb.array("C", &[n, n], ArrayDir::InOut);
+    let a = kb.array("A", &[n, m], ArrayDir::In);
+
+    kb.for_const("i", 0, n as i64, |kb, i| {
+        kb.for_expr("j0", kb.c(0), kb.vp(i, 1), |kb, j0| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                vec![kb.at(c, &[kb.v(i), kb.v(j0)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        kb.for_const("k", 0, m as i64, |kb, k| {
+            kb.for_expr("j1", kb.c(0), kb.vp(i, 1), |kb, j1| {
+                // C[i][j] += alpha * A[i][k] * A[j][k]
+                kb.stmt(
+                    "S1",
+                    vec![kb.at(c, &[kb.v(i), kb.v(j1)])],
+                    vec![
+                        kb.at(c, &[kb.v(i), kb.v(j1)]),
+                        kb.at(a, &[kb.v(i), kb.v(k)]),
+                        kb.at(a, &[kb.v(j1), kb.v(k)]),
+                    ],
+                    &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// Forward substitution for a lower-triangular system.
+pub fn kernel_trisolv(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("trisolv", dtype);
+    let l = kb.array("L", &[n, n], ArrayDir::In);
+    let x = kb.array("x", &[n], ArrayDir::Out);
+    let b = kb.array("b", &[n], ArrayDir::In);
+
+    kb.for_const("i", 0, n as i64, |kb, i| {
+        kb.stmt(
+            "S0",
+            vec![kb.at(x, &[kb.v(i)])],
+            vec![kb.at(b, &[kb.v(i)])],
+            &[],
+        );
+        kb.for_expr("j", kb.c(0), kb.v(i), |kb, j| {
+            // x[i] -= L[i][j] * x[j]
+            kb.stmt(
+                "S1",
+                vec![kb.at(x, &[kb.v(i)])],
+                vec![
+                    kb.at(x, &[kb.v(i)]),
+                    kb.at(l, &[kb.v(i), kb.v(j)]),
+                    kb.at(x, &[kb.v(j)]),
+                ],
+                &[(OpKind::Mul, 1), (OpKind::Sub, 1)],
+            );
+        });
+        // x[i] /= L[i][i]
+        kb.stmt(
+            "S2",
+            vec![kb.at(x, &[kb.v(i)])],
+            vec![kb.at(x, &[kb.v(i)]), kb.at(l, &[kb.v(i), kb.v(i)])],
+            &[(OpKind::Div, 1)],
+        );
+    });
+    kb.finish()
+}
+
+/// Triangular matrix multiply `B = alpha * A^T * B`, A unit lower.
+pub fn kernel_trmm(m: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("trmm", dtype);
+    let a = kb.array("A", &[m, m], ArrayDir::In);
+    let b = kb.array("B", &[m, n], ArrayDir::InOut);
+
+    kb.for_const("i", 0, m as i64, |kb, i| {
+        kb.for_const("j", 0, n as i64, |kb, j| {
+            kb.for_expr("k", kb.vp(i, 1), kb.c(m as i64), |kb, k| {
+                // B[i][j] += A[k][i] * B[k][j]
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(b, &[kb.v(i), kb.v(j)])],
+                    vec![
+                        kb.at(b, &[kb.v(i), kb.v(j)]),
+                        kb.at(a, &[kb.v(k), kb.v(i)]),
+                        kb.at(b, &[kb.v(k), kb.v(j)]),
+                    ],
+                    &[(OpKind::Mul, 1), (OpKind::Add, 1)],
+                );
+            });
+            // B[i][j] = alpha * B[i][j]
+            kb.stmt(
+                "S1",
+                vec![kb.at(b, &[kb.v(i), kb.v(j)])],
+                vec![kb.at(b, &[kb.v(i), kb.v(j)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+    });
+    kb.finish()
+}

@@ -1,0 +1,115 @@
+//! The evaluated benchmark suite: the 24 PolyBench/C 4.2.1 kernels of
+//! Table 5 plus the CNN kernel, expressed in the affine IR at the paper's
+//! Small / Medium / Large problem sizes (Table 8).
+//!
+//! `ludcmp`, `deriche`, `nussinov` are excluded (negative strides),
+//! `cholesky`/`correlation` (sqrt) and `fdtd-2d` (Merlin bug) likewise —
+//! matching Section 7.1's exclusions.
+
+mod cnn;
+mod linalg;
+mod linalg_tri;
+pub mod sizes;
+mod stencil;
+
+pub use cnn::kernel_cnn;
+pub use linalg::{
+    kernel_2mm, kernel_3mm, kernel_atax, kernel_bicg, kernel_doitgen, kernel_gemm,
+    kernel_gemver, kernel_gesummv, kernel_mvt,
+};
+pub use linalg_tri::{
+    kernel_covariance, kernel_durbin, kernel_gramschmidt, kernel_lu, kernel_symm,
+    kernel_syr2k, kernel_syrk, kernel_trisolv, kernel_trmm,
+};
+pub use sizes::{build, Size};
+pub use stencil::{
+    kernel_floyd_warshall, kernel_heat_3d, kernel_jacobi_1d, kernel_jacobi_2d,
+    kernel_seidel_2d,
+};
+
+/// All benchmark names, in Table 5 order.
+pub const ALL: [&str; 24] = [
+    "covariance",
+    "2mm",
+    "3mm",
+    "atax",
+    "bicg",
+    "cnn",
+    "doitgen",
+    "durbin",
+    "gemm",
+    "gemver",
+    "gesummv",
+    "gramschmidt",
+    "lu",
+    "mvt",
+    "symm",
+    "syr2k",
+    "syrk",
+    "trisolv",
+    "trmm",
+    "floyd-warshall",
+    "heat-3d",
+    "jacobi-1d",
+    "jacobi-2d",
+    "seidel-2d",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    #[test]
+    fn all_kernels_build_at_all_sizes() {
+        for name in ALL {
+            for size in [Size::Small, Size::Medium, Size::Large] {
+                if name == "cnn" && size != Size::Medium {
+                    continue; // cnn has a single problem size (Sec 7.1)
+                }
+                let k = build(name, size, DType::F32)
+                    .unwrap_or_else(|| panic!("{name} missing at {size:?}"));
+                assert!(k.n_loops() > 0, "{name}");
+                assert!(k.n_stmts() > 0, "{name}");
+                // analyses must not panic
+                let a = crate::poly::Analysis::new(&k);
+                assert!(a.total_flops > 0.0, "{name} has no flops");
+            }
+        }
+    }
+
+    #[test]
+    fn loop_counts_match_table5() {
+        use crate::ir::DType::F32;
+        // NL column of Table 5
+        let cases: &[(&str, usize)] = &[
+            ("covariance", 7),
+            ("2mm", 6),
+            ("3mm", 9),
+            ("atax", 4),
+            ("bicg", 3),
+            ("cnn", 6),
+            ("doitgen", 5),
+            ("durbin", 4),
+            ("gemm", 4),
+            ("gemver", 7),
+            ("gesummv", 2),
+            ("lu", 5),
+            ("mvt", 4),
+            ("symm", 3),
+            ("syr2k", 4),
+            ("syrk", 4),
+            ("trisolv", 2),
+            ("trmm", 3),
+            ("floyd-warshall", 3),
+            ("heat-3d", 7),
+            ("jacobi-1d", 3),
+            ("jacobi-2d", 5),
+            ("seidel-2d", 3),
+        ];
+        for &(name, nl) in cases {
+            let k = build(name, Size::Medium, F32).unwrap();
+            assert_eq!(k.n_loops(), nl, "{name} loop count");
+        }
+    }
+}

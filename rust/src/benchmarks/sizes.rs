@@ -1,0 +1,154 @@
+//! Problem sizes (Table 8) and the kernel registry.
+
+use super::*;
+use crate::ir::{DType, Kernel};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Size {
+    Small,
+    Medium,
+    Large,
+}
+
+impl Size {
+    pub fn tag(self) -> &'static str {
+        match self {
+            Size::Small => "S",
+            Size::Medium => "M",
+            Size::Large => "L",
+        }
+    }
+    pub fn parse(s: &str) -> Option<Size> {
+        match s.to_ascii_lowercase().as_str() {
+            "s" | "small" => Some(Size::Small),
+            "m" | "medium" => Some(Size::Medium),
+            "l" | "large" => Some(Size::Large),
+            _ => None,
+        }
+    }
+}
+
+/// Build a benchmark kernel by name + size (Table 8 values).
+pub fn build(name: &str, size: Size, dtype: DType) -> Option<Kernel> {
+    use Size::*;
+    let k = match name {
+        "2mm" => match size {
+            Large => kernel_2mm(800, 900, 1100, 1200, dtype),
+            Medium => kernel_2mm(180, 190, 210, 220, dtype),
+            Small => kernel_2mm(40, 50, 70, 80, dtype),
+        },
+        "3mm" => match size {
+            Large => kernel_3mm(800, 900, 1000, 1100, 1200, dtype),
+            Medium => kernel_3mm(180, 190, 200, 210, 220, dtype),
+            Small => kernel_3mm(40, 50, 60, 70, 80, dtype),
+        },
+        "atax" => match size {
+            Large => kernel_atax(1900, 2100, dtype),
+            Medium => kernel_atax(390, 410, dtype),
+            Small => kernel_atax(116, 124, dtype),
+        },
+        "bicg" => match size {
+            Large => kernel_bicg(2100, 1900, dtype),
+            Medium => kernel_bicg(410, 390, dtype),
+            Small => kernel_bicg(124, 116, dtype),
+        },
+        "covariance" => match size {
+            Large => kernel_covariance(1200, 1400, dtype),
+            Medium => kernel_covariance(240, 260, dtype),
+            Small => kernel_covariance(80, 100, dtype),
+        },
+        "cnn" => kernel_cnn(256, 256, 5, 5, 224, 224, dtype),
+        "doitgen" => match size {
+            Large => kernel_doitgen(150, 140, 160, dtype),
+            Medium => kernel_doitgen(50, 40, 60, dtype),
+            Small => kernel_doitgen(25, 20, 30, dtype),
+        },
+        "durbin" => match size {
+            Large => kernel_durbin(2000, dtype),
+            Medium => kernel_durbin(400, dtype),
+            Small => kernel_durbin(120, dtype),
+        },
+        "floyd-warshall" => match size {
+            Large => kernel_floyd_warshall(2800, dtype),
+            Medium => kernel_floyd_warshall(500, dtype),
+            Small => kernel_floyd_warshall(180, dtype),
+        },
+        "gemm" => match size {
+            Large => kernel_gemm(1000, 1100, 1200, dtype),
+            Medium => kernel_gemm(200, 220, 240, dtype),
+            Small => kernel_gemm(60, 70, 80, dtype),
+        },
+        "gemver" => match size {
+            Large => kernel_gemver(2000, dtype),
+            Medium => kernel_gemver(400, dtype),
+            Small => kernel_gemver(120, dtype),
+        },
+        "gesummv" => match size {
+            Large => kernel_gesummv(1300, dtype),
+            Medium => kernel_gesummv(250, dtype),
+            Small => kernel_gesummv(90, dtype),
+        },
+        "gramschmidt" => match size {
+            Large => kernel_gramschmidt(1000, 1200, dtype),
+            Medium => kernel_gramschmidt(200, 240, dtype),
+            Small => kernel_gramschmidt(60, 80, dtype),
+        },
+        "heat-3d" => match size {
+            Large => kernel_heat_3d(500, 120, dtype),
+            Medium => kernel_heat_3d(100, 40, dtype),
+            Small => kernel_heat_3d(40, 20, dtype),
+        },
+        "jacobi-1d" => match size {
+            Large => kernel_jacobi_1d(500, 2000, dtype),
+            Medium => kernel_jacobi_1d(100, 400, dtype),
+            Small => kernel_jacobi_1d(40, 120, dtype),
+        },
+        "jacobi-2d" => match size {
+            Large => kernel_jacobi_2d(500, 1300, dtype),
+            Medium => kernel_jacobi_2d(100, 250, dtype),
+            Small => kernel_jacobi_2d(40, 90, dtype),
+        },
+        "lu" => match size {
+            Large => kernel_lu(2000, dtype),
+            Medium => kernel_lu(400, dtype),
+            Small => kernel_lu(120, dtype),
+        },
+        "mvt" => match size {
+            Large => kernel_mvt(2000, dtype),
+            Medium => kernel_mvt(400, dtype),
+            Small => kernel_mvt(120, dtype),
+        },
+        "seidel-2d" => match size {
+            Large => kernel_seidel_2d(500, 2000, dtype),
+            Medium => kernel_seidel_2d(100, 400, dtype),
+            Small => kernel_seidel_2d(40, 120, dtype),
+        },
+        "symm" => match size {
+            Large => kernel_symm(1000, 1200, dtype),
+            Medium => kernel_symm(200, 240, dtype),
+            Small => kernel_symm(60, 80, dtype),
+        },
+        "syr2k" => match size {
+            Large => kernel_syr2k(1200, 1000, dtype),
+            Medium => kernel_syr2k(240, 200, dtype),
+            Small => kernel_syr2k(80, 60, dtype),
+        },
+        "syrk" => match size {
+            Large => kernel_syrk(1200, 1000, dtype),
+            Medium => kernel_syrk(240, 200, dtype),
+            Small => kernel_syrk(80, 60, dtype),
+        },
+        "trisolv" => match size {
+            Large => kernel_trisolv(2000, dtype),
+            Medium => kernel_trisolv(400, dtype),
+            Small => kernel_trisolv(120, dtype),
+        },
+        "trmm" => match size {
+            Large => kernel_trmm(1000, 1200, dtype),
+            Medium => kernel_trmm(200, 240, dtype),
+            Small => kernel_trmm(60, 80, dtype),
+        },
+        _ => return None,
+    };
+    Some(k)
+}

@@ -1,0 +1,202 @@
+//! Stencil and graph kernels: jacobi-1d, jacobi-2d, heat-3d, seidel-2d,
+//! floyd-warshall.
+//!
+//! These exercise the dependence machinery hardest: time loops carrying
+//! cross-statement dependences (jacobi/heat), fully-serial Gauss-Seidel
+//! sweeps, and floyd-warshall's `k`-propagation pattern.
+
+use crate::ir::{ArrayDir, DType, Kernel, KernelBuilder, OpKind};
+
+/// 1-D 3-point Jacobi, two arrays ping-ponged per time step.
+pub fn kernel_jacobi_1d(tsteps: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("jacobi-1d", dtype);
+    let a = kb.array("A", &[n], ArrayDir::InOut);
+    let b = kb.array("B", &[n], ArrayDir::InOut);
+
+    kb.for_const("t", 0, tsteps as i64, |kb, _t| {
+        kb.for_const("i0", 1, n as i64 - 1, |kb, i0| {
+            // B[i] = 0.33333 * (A[i-1] + A[i] + A[i+1])
+            kb.stmt_with_chain(
+                "S0",
+                vec![kb.at(b, &[kb.v(i0)])],
+                vec![
+                    kb.at(a, &[kb.vp(i0, -1)]),
+                    kb.at(a, &[kb.v(i0)]),
+                    kb.at(a, &[kb.vp(i0, 1)]),
+                ],
+                &[(OpKind::Add, 2), (OpKind::Mul, 1)],
+                vec![OpKind::Add, OpKind::Add, OpKind::Mul],
+            );
+        });
+        kb.for_const("i1", 1, n as i64 - 1, |kb, i1| {
+            kb.stmt_with_chain(
+                "S1",
+                vec![kb.at(a, &[kb.v(i1)])],
+                vec![
+                    kb.at(b, &[kb.vp(i1, -1)]),
+                    kb.at(b, &[kb.v(i1)]),
+                    kb.at(b, &[kb.vp(i1, 1)]),
+                ],
+                &[(OpKind::Add, 2), (OpKind::Mul, 1)],
+                vec![OpKind::Add, OpKind::Add, OpKind::Mul],
+            );
+        });
+    });
+    kb.finish()
+}
+
+/// 2-D 5-point Jacobi.
+pub fn kernel_jacobi_2d(tsteps: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("jacobi-2d", dtype);
+    let a = kb.array("A", &[n, n], ArrayDir::InOut);
+    let b = kb.array("B", &[n, n], ArrayDir::InOut);
+
+    let five_point = |kb: &mut KernelBuilder,
+                      name: &str,
+                      dst: crate::ir::ArrayId,
+                      src: crate::ir::ArrayId,
+                      i: crate::ir::LoopId,
+                      j: crate::ir::LoopId| {
+        kb.stmt_with_chain(
+            name,
+            vec![kb.at(dst, &[kb.v(i), kb.v(j)])],
+            vec![
+                kb.at(src, &[kb.v(i), kb.v(j)]),
+                kb.at(src, &[kb.v(i), kb.vp(j, -1)]),
+                kb.at(src, &[kb.v(i), kb.vp(j, 1)]),
+                kb.at(src, &[kb.vp(i, 1), kb.v(j)]),
+                kb.at(src, &[kb.vp(i, -1), kb.v(j)]),
+            ],
+            &[(OpKind::Add, 4), (OpKind::Mul, 1)],
+            vec![OpKind::Add, OpKind::Add, OpKind::Mul],
+        );
+    };
+
+    kb.for_const("t", 0, tsteps as i64, |kb, _t| {
+        kb.for_const("i0", 1, n as i64 - 1, |kb, i0| {
+            kb.for_const("j0", 1, n as i64 - 1, |kb, j0| {
+                five_point(kb, "S0", b, a, i0, j0);
+            });
+        });
+        kb.for_const("i1", 1, n as i64 - 1, |kb, i1| {
+            kb.for_const("j1", 1, n as i64 - 1, |kb, j1| {
+                five_point(kb, "S1", a, b, i1, j1);
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// 3-D 7-point heat equation.
+pub fn kernel_heat_3d(tsteps: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("heat-3d", dtype);
+    let a = kb.array("A", &[n, n, n], ArrayDir::InOut);
+    let b = kb.array("B", &[n, n, n], ArrayDir::InOut);
+
+    let seven_point = |kb: &mut KernelBuilder,
+                       name: &str,
+                       dst: crate::ir::ArrayId,
+                       src: crate::ir::ArrayId,
+                       i: crate::ir::LoopId,
+                       j: crate::ir::LoopId,
+                       l: crate::ir::LoopId| {
+        // dst = 0.125*(src[i+1]-2src+src[i-1]) + ... (3 axes) + src
+        kb.stmt_with_chain(
+            name,
+            vec![kb.at(dst, &[kb.v(i), kb.v(j), kb.v(l)])],
+            vec![
+                kb.at(src, &[kb.vp(i, 1), kb.v(j), kb.v(l)]),
+                kb.at(src, &[kb.v(i), kb.v(j), kb.v(l)]),
+                kb.at(src, &[kb.vp(i, -1), kb.v(j), kb.v(l)]),
+                kb.at(src, &[kb.v(i), kb.vp(j, 1), kb.v(l)]),
+                kb.at(src, &[kb.v(i), kb.vp(j, -1), kb.v(l)]),
+                kb.at(src, &[kb.v(i), kb.v(j), kb.vp(l, 1)]),
+                kb.at(src, &[kb.v(i), kb.v(j), kb.vp(l, -1)]),
+            ],
+            &[(OpKind::Mul, 6), (OpKind::Add, 6), (OpKind::Sub, 3)],
+            vec![OpKind::Mul, OpKind::Sub, OpKind::Mul, OpKind::Add, OpKind::Add],
+        );
+    };
+
+    kb.for_const("t", 0, tsteps as i64, |kb, _t| {
+        kb.for_const("i0", 1, n as i64 - 1, |kb, i0| {
+            kb.for_const("j0", 1, n as i64 - 1, |kb, j0| {
+                kb.for_const("k0", 1, n as i64 - 1, |kb, k0| {
+                    seven_point(kb, "S0", b, a, i0, j0, k0);
+                });
+            });
+        });
+        kb.for_const("i1", 1, n as i64 - 1, |kb, i1| {
+            kb.for_const("j1", 1, n as i64 - 1, |kb, j1| {
+                kb.for_const("k1", 1, n as i64 - 1, |kb, k1| {
+                    seven_point(kb, "S1", a, b, i1, j1, k1);
+                });
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// Gauss-Seidel 9-point sweep (fully order-dependent).
+pub fn kernel_seidel_2d(tsteps: u64, n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("seidel-2d", dtype);
+    let a = kb.array("A", &[n, n], ArrayDir::InOut);
+
+    kb.for_const("t", 0, tsteps as i64, |kb, _t| {
+        kb.for_const("i", 1, n as i64 - 1, |kb, i| {
+            kb.for_const("j", 1, n as i64 - 1, |kb, j| {
+                kb.stmt_with_chain(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![
+                        kb.at(a, &[kb.vp(i, -1), kb.vp(j, -1)]),
+                        kb.at(a, &[kb.vp(i, -1), kb.v(j)]),
+                        kb.at(a, &[kb.vp(i, -1), kb.vp(j, 1)]),
+                        kb.at(a, &[kb.v(i), kb.vp(j, -1)]),
+                        kb.at(a, &[kb.v(i), kb.v(j)]),
+                        kb.at(a, &[kb.v(i), kb.vp(j, 1)]),
+                        kb.at(a, &[kb.vp(i, 1), kb.vp(j, -1)]),
+                        kb.at(a, &[kb.vp(i, 1), kb.v(j)]),
+                        kb.at(a, &[kb.vp(i, 1), kb.vp(j, 1)]),
+                    ],
+                    &[(OpKind::Add, 8), (OpKind::Div, 1)],
+                    vec![
+                        OpKind::Add,
+                        OpKind::Add,
+                        OpKind::Add,
+                        OpKind::Add,
+                        OpKind::Div,
+                    ],
+                );
+            });
+        });
+    });
+    kb.finish()
+}
+
+/// All-pairs shortest paths; `min` modeled as an add-compare (1 flop + the
+/// comparator folds into the select, not a DSP op).
+pub fn kernel_floyd_warshall(n: u64, dtype: DType) -> Kernel {
+    let mut kb = KernelBuilder::new("floyd-warshall", dtype);
+    let path = kb.array("path", &[n, n], ArrayDir::InOut);
+
+    kb.for_const("k", 0, n as i64, |kb, k| {
+        kb.for_const("i", 0, n as i64, |kb, i| {
+            kb.for_const("j", 0, n as i64, |kb, j| {
+                // path[i][j] = min(path[i][j], path[i][k] + path[k][j])
+                kb.stmt_with_chain(
+                    "S0",
+                    vec![kb.at(path, &[kb.v(i), kb.v(j)])],
+                    vec![
+                        kb.at(path, &[kb.v(i), kb.v(j)]),
+                        kb.at(path, &[kb.v(i), kb.v(k)]),
+                        kb.at(path, &[kb.v(k), kb.v(j)]),
+                    ],
+                    &[(OpKind::Add, 2)],
+                    vec![OpKind::Add, OpKind::Add],
+                );
+            });
+        });
+    });
+    kb.finish()
+}

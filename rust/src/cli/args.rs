@@ -1,0 +1,96 @@
+//! Tiny argv parser: `command --key value --flag` forms.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+pub struct Args {
+    command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: Vec<(String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[&str]) -> Result<Args> {
+        let mut command = String::new();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), argv[i + 1].to_string());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else if command.is_empty() {
+                command = tok.to_string();
+                i += 1;
+            } else {
+                bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        Ok(Args {
+            command,
+            opts,
+            flags,
+            consumed: Vec::new(),
+        })
+    }
+
+    pub fn command(&self) -> &str {
+        &self.command
+    }
+
+    /// Take an option value (consumed once; `put_back` restores it).
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        if let Some(v) = self.opts.remove(key) {
+            self.consumed.push((key.to_string(), v.clone()));
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    pub fn put_back(&mut self, key: &str) {
+        if let Some(pos) = self.consumed.iter().position(|(k, _)| k == key) {
+            let (k, v) = self.consumed.remove(pos);
+            self.opts.insert(k, v);
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_mixed() {
+        let mut a = Args::parse(&["table", "--id", "5", "--tsv", "--scope", "quick"]).unwrap();
+        assert_eq!(a.command(), "table");
+        assert_eq!(a.opt("id").as_deref(), Some("5"));
+        assert!(a.flag("tsv"));
+        assert_eq!(a.opt("scope").as_deref(), Some("quick"));
+        assert_eq!(a.opt("id"), None, "consumed");
+    }
+
+    #[test]
+    fn put_back_restores() {
+        let mut a = Args::parse(&["space", "--kernel", "2mm"]).unwrap();
+        assert_eq!(a.opt("kernel").as_deref(), Some("2mm"));
+        a.put_back("kernel");
+        assert_eq!(a.opt("kernel").as_deref(), Some("2mm"));
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(&["dse", "oops"]).is_err());
+    }
+}

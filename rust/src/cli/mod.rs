@@ -1,0 +1,449 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! nlp-dse table --id 5 [--scope quick|paper] [--xla] [--tsv] [--out FILE]
+//! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
+//! nlp-dse dse --kernel 2mm --size M [--engine nlpdse|autodse|harp] [--xla]
+//! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla]
+//! nlp-dse space --kernel 2mm --size M
+//! nlp-dse campaign [--scope quick|paper|harp] [--json FILE] [--xla]
+//! ```
+
+pub mod args;
+
+use crate::benchmarks::{self, Size};
+use crate::coordinator::{self, CampaignConfig, CampaignResult, Engines};
+use crate::dse::DseConfig;
+use crate::hls::Device;
+use crate::ir::DType;
+use crate::nlp::{self, BatchEvaluator, NlpProblem, RustFeatureEvaluator};
+use crate::poly::Analysis;
+use crate::pragma::Space;
+use crate::report;
+use crate::runtime::{default_artifact_dir, XlaEvaluator};
+use anyhow::{anyhow, bail, Result};
+use args::Args;
+
+pub fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    run(&argv.iter().map(|s| s.as_str()).collect::<Vec<_>>())
+}
+
+pub fn run(argv: &[&str]) -> Result<()> {
+    let mut args = Args::parse(argv)?;
+    let out = match args.command() {
+        "table" => cmd_table(&mut args)?,
+        "figure" => cmd_figure(&mut args)?,
+        "dse" => cmd_dse(&mut args)?,
+        "solve" => cmd_solve(&mut args)?,
+        "space" => cmd_space(&mut args)?,
+        "campaign" => cmd_campaign(&mut args)?,
+        "help" | "" => help(),
+        other => bail!("unknown command `{other}` (try `help`)"),
+    };
+    match args.opt("out") {
+        Some(path) => {
+            std::fs::write(&path, &out)?;
+            println!("wrote {path}");
+        }
+        None => println!("{out}"),
+    }
+    Ok(())
+}
+
+fn help() -> String {
+    "NLP-DSE — automatic HLS pragma insertion via non-linear programming\n\
+     \n\
+     commands:\n\
+       table    --id 1|2|3|5|6|7|8|9 [--scope quick|paper] [--xla] [--tsv]\n\
+       figure   --id 2|3|4|5|6 [--scope quick|paper] [--kernel K --size S]\n\
+       dse      --kernel K --size S|M|L [--engine nlpdse|autodse|harp] [--xla]\n\
+       solve    --kernel K --size S [--cap N] [--fine] [--xla]\n\
+       space    --kernel K --size S\n\
+       campaign [--scope quick|paper|harp] [--json FILE] [--xla]\n\
+     \n\
+     common flags: --out FILE  --threads N  --dtype f32|f64\n"
+        .to_string()
+}
+
+fn scope_campaign(args: &mut Args, engines: Engines) -> Result<CampaignResult> {
+    let scope = args.opt("scope").unwrap_or_else(|| "quick".into());
+    let mut cfg = match scope.as_str() {
+        "paper" => CampaignConfig::paper_autodse(),
+        "harp" => CampaignConfig::paper_harp(),
+        "quick" => {
+            let mut c = CampaignConfig::quick();
+            // quick scope still exercises the motivation trio for tables 1-3
+            c.kernels = vec![
+                ("2mm".into(), Size::Medium),
+                ("gemm".into(), Size::Medium),
+                ("gramschmidt".into(), Size::Large),
+                ("bicg".into(), Size::Medium),
+                ("atax".into(), Size::Medium),
+            ];
+            c
+        }
+        other => bail!("unknown scope `{other}`"),
+    };
+    cfg.engines = engines;
+    if let Some(t) = args.opt("threads") {
+        cfg.threads = t.parse()?;
+    }
+    cfg.use_xla = args.flag("xla");
+    eprintln!(
+        "[campaign] scope={scope} kernels={} threads={} xla={}",
+        cfg.kernels.len(),
+        cfg.threads,
+        cfg.use_xla
+    );
+    Ok(coordinator::run_campaign(&cfg))
+}
+
+fn cmd_table(args: &mut Args) -> Result<String> {
+    let id: u32 = args
+        .opt("id")
+        .ok_or_else(|| anyhow!("--id required"))?
+        .parse()?;
+    let tsv = args.flag("tsv");
+    let table = match id {
+        8 => report::table8(),
+        9 => {
+            let r = scope_campaign(
+                args,
+                Engines {
+                    nlpdse: true,
+                    autodse: false,
+                    harp: true,
+                },
+            )?;
+            report::table9(&r)
+        }
+        7 | 6 => {
+            let r = scope_campaign(args, Engines::nlp_only())?;
+            if id == 7 {
+                report::table7(&r)
+            } else {
+                report::table6(&r)
+            }
+        }
+        1 | 2 | 3 | 5 => {
+            let r = scope_campaign(
+                args,
+                Engines {
+                    nlpdse: true,
+                    autodse: true,
+                    harp: false,
+                },
+            )?;
+            match id {
+                1 => report::table1(&r),
+                2 => report::table2(&r),
+                3 => report::table3(&r),
+                _ => report::table5(&r),
+            }
+        }
+        other => bail!("no table {other} in the paper's evaluation"),
+    };
+    Ok(if tsv { table.to_tsv() } else { table.render() })
+}
+
+fn cmd_figure(args: &mut Args) -> Result<String> {
+    let id: u32 = args
+        .opt("id")
+        .ok_or_else(|| anyhow!("--id required"))?
+        .parse()?;
+    Ok(match id {
+        2 | 3 => {
+            let r = scope_campaign(
+                args,
+                Engines {
+                    nlpdse: true,
+                    autodse: true,
+                    harp: false,
+                },
+            )?;
+            let size = if id == 2 { Size::Large } else { Size::Medium };
+            report::figure2_3(&r, size)
+        }
+        4 => {
+            let r = scope_campaign(
+                args,
+                Engines {
+                    nlpdse: true,
+                    autodse: false,
+                    harp: true,
+                },
+            )?;
+            report::figure4(&r)
+        }
+        5 => {
+            let r = scope_campaign(args, Engines::nlp_only())?;
+            report::figure5(&r)
+        }
+        6 => {
+            let kernel = args.opt("kernel").unwrap_or_else(|| "2mm".into());
+            let size = parse_size(args)?.unwrap_or(Size::Medium);
+            let mut cfg = CampaignConfig::quick();
+            cfg.kernels = vec![(kernel.clone(), size)];
+            cfg.engines = Engines::nlp_only();
+            cfg.use_xla = args.flag("xla");
+            let r = coordinator::run_campaign(&cfg);
+            report::figure6(&r, &kernel, size)
+        }
+        other => bail!("no figure {other}"),
+    })
+}
+
+fn parse_size(args: &mut Args) -> Result<Option<Size>> {
+    match args.opt("size") {
+        None => Ok(None),
+        Some(s) => Size::parse(&s)
+            .map(Some)
+            .ok_or_else(|| anyhow!("bad --size {s} (S|M|L)")),
+    }
+}
+
+fn parse_dtype(args: &mut Args) -> DType {
+    match args.opt("dtype").as_deref() {
+        Some("f64") => DType::F64,
+        _ => DType::F32,
+    }
+}
+
+fn build_kernel(args: &mut Args) -> Result<(crate::ir::Kernel, Analysis, Device)> {
+    let name = args
+        .opt("kernel")
+        .ok_or_else(|| anyhow!("--kernel required"))?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args);
+    let k = benchmarks::build(&name, size, dtype)
+        .ok_or_else(|| anyhow!("unknown kernel `{name}` (see `space` for the list)"))?;
+    let a = Analysis::new(&k);
+    Ok((k, a, Device::u200()))
+}
+
+fn make_evaluator(args: &mut Args) -> Box<dyn BatchEvaluator> {
+    if args.flag("xla") {
+        match XlaEvaluator::load(&default_artifact_dir()) {
+            Ok(e) => {
+                eprintln!("[xla] artifact loaded (batch={})", e.batch);
+                return Box::new(e);
+            }
+            Err(e) => eprintln!("[xla] unavailable ({e:#}); using rust evaluator"),
+        }
+    }
+    Box::new(RustFeatureEvaluator)
+}
+
+fn cmd_dse(args: &mut Args) -> Result<String> {
+    let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
+    let (k, a, dev) = build_kernel(args)?;
+    let mut out = String::new();
+    match engine.as_str() {
+        "nlpdse" => {
+            let eval = make_evaluator(args);
+            let o = crate::dse::run_nlp_dse(&k, &a, &dev, &DseConfig::default(), eval.as_ref());
+            out.push_str(&format!(
+                "NLP-DSE on {} ({:?}):\n  best GF/s: {:.2}   first-synth GF/s: {:.2}\n  \
+                 DSE time: {:.0} min   explored: {}   timeouts: {}\n  \
+                 steps to best: {}   steps to terminate: {}\n\ntrace:\n",
+                k.name,
+                k.dtype,
+                o.best_gflops,
+                o.first_synth_gflops,
+                o.dse_minutes,
+                o.designs_explored,
+                o.designs_timeout,
+                o.steps_to_best,
+                o.steps_to_terminate
+            ));
+            for s in &o.trace {
+                out.push_str(&format!(
+                    "  step {:>2} cap={:<8} fine={:<5} lb={:>14.0} gfs={:>8.2} {}\n",
+                    s.step,
+                    if s.cap == u64::MAX {
+                        "inf".into()
+                    } else {
+                        s.cap.to_string()
+                    },
+                    s.fine_only,
+                    s.lower_bound,
+                    s.gflops,
+                    if s.dedup {
+                        "dedup"
+                    } else if s.pruned {
+                        "pruned"
+                    } else if s.timeout {
+                        "timeout"
+                    } else if s.valid {
+                        "ok"
+                    } else {
+                        "invalid"
+                    }
+                ));
+            }
+            if let Some((d, _)) = &o.best {
+                out.push_str("\nbest pragma configuration:\n");
+                out.push_str(&d.render(&k));
+            }
+        }
+        "autodse" => {
+            let o = crate::baselines::run_autodse(&k, &a, &dev, &Default::default());
+            out.push_str(&format!(
+                "AutoDSE on {}:\n  best GF/s: {:.2}\n  DSE time: {:.0} min\n  \
+                 explored: {} (synth {} / timeout {} / early-reject {})\n",
+                k.name,
+                o.best_gflops,
+                o.dse_minutes,
+                o.designs_explored,
+                o.designs_synthesized,
+                o.designs_timeout,
+                o.early_rejected
+            ));
+        }
+        "harp" => {
+            let o = crate::baselines::run_harp(&k, &a, &dev, &Default::default());
+            out.push_str(&format!(
+                "HARP on {}:\n  best GF/s: {:.2}\n  DSE time: {:.0} min\n  \
+                 surrogate configs: {}   synthesized: {}\n",
+                k.name, o.best_gflops, o.dse_minutes, o.configs_scored, o.designs_synthesized
+            ));
+        }
+        other => bail!("unknown engine `{other}`"),
+    }
+    Ok(out)
+}
+
+fn cmd_solve(args: &mut Args) -> Result<String> {
+    let cap = args
+        .opt("cap")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(u64::MAX);
+    let fine = args.flag("fine");
+    let (k, a, dev) = build_kernel(args)?;
+    let eval = make_evaluator(args);
+    let p = NlpProblem::new(&k, &a, &dev, cap, fine);
+    let r = nlp::solve(&p, 30.0, 3, eval.as_ref());
+    let mut out = format!(
+        "NLP solve on {} (cap={}, fine={fine}):\n  proven lower bound: {:.0} cycles\n  \
+         optimal: {}   solve time: {:.3}s   nodes: {}   scored: {}\n",
+        k.name,
+        if cap == u64::MAX {
+            "inf".into()
+        } else {
+            cap.to_string()
+        },
+        r.lower_bound,
+        r.optimal,
+        r.solve_time_s,
+        r.stats.nodes,
+        r.stats.candidates_scored
+    );
+    for (i, (d, obj)) in r.designs.iter().enumerate() {
+        out.push_str(&format!(
+            "\n#{} objective {:.0} cycles ({:.2} GF/s bound):\n{}",
+            i + 1,
+            obj,
+            a.gflops(*obj, dev.freq_hz),
+            d.render(&k)
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_space(args: &mut Args) -> Result<String> {
+    if args.opt("kernel").is_none() {
+        let mut out = String::from("available kernels:\n");
+        for n in benchmarks::ALL {
+            out.push_str(&format!("  {n}\n"));
+        }
+        return Ok(out);
+    }
+    args.put_back("kernel");
+    let (k, a, _dev) = build_kernel(args)?;
+    let s = Space::new(&k, &a);
+    let mut out = format!(
+        "{} — {} loops, {} statements, {} dependences\n\
+         space size (valid designs): {}\n\
+         pipeline configurations: {}\n\
+         summary AST: {}\n",
+        k.name,
+        k.n_loops(),
+        k.n_stmts(),
+        a.deps.nd(),
+        crate::util::sci(s.size()),
+        s.pipeline_configs.len(),
+        k.summary_ast()
+    );
+    for (i, tc) in a.tcs.iter().enumerate() {
+        let info = &a.deps.per_loop[i];
+        out.push_str(&format!(
+            "  L{i} {:<6} TC {}..{} (avg {:.1})  {}{}{}  UF options: {}\n",
+            k.loop_name(crate::ir::LoopId(i as u32)),
+            tc.min,
+            tc.max,
+            tc.avg,
+            if info.reduction { "reduction " } else { "" },
+            if info.serializing { "serializing " } else { "" },
+            if info.parallel() { "parallel" } else { "" },
+            s.uf_candidates[i].len()
+        ));
+    }
+    Ok(out)
+}
+
+fn cmd_campaign(args: &mut Args) -> Result<String> {
+    let r = scope_campaign(args, Engines::all())?;
+    let json = campaign_json(&r);
+    if let Some(path) = args.opt("json") {
+        std::fs::write(&path, json.to_string_pretty())?;
+        return Ok(format!("campaign complete: {} rows -> {path}", r.rows.len()));
+    }
+    Ok(json.to_string_pretty())
+}
+
+/// JSON dump of a campaign (for plotting / external analysis).
+pub fn campaign_json(r: &CampaignResult) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut arr = Json::Arr(vec![]);
+    for row in &r.rows {
+        let mut o = Json::obj();
+        o.set("kernel", row.name.as_str())
+            .set("size", row.size.tag())
+            .set("nl", row.nl)
+            .set("nd", row.nd)
+            .set("space", row.space_size)
+            .set("footprint_bytes", row.footprint_bytes)
+            .set("original_gflops", row.original_gflops);
+        if let Some(n) = &row.nlpdse {
+            let mut j = Json::obj();
+            j.set("gflops", n.best_gflops)
+                .set("first_synth_gflops", n.first_synth_gflops)
+                .set("minutes", n.dse_minutes)
+                .set("explored", n.designs_explored)
+                .set("timeouts", n.designs_timeout)
+                .set("steps_to_best", n.steps_to_best)
+                .set("steps_to_terminate", n.steps_to_terminate);
+            o.set("nlpdse", j);
+        }
+        if let Some(a) = &row.autodse {
+            let mut j = Json::obj();
+            j.set("gflops", a.best_gflops)
+                .set("minutes", a.dse_minutes)
+                .set("explored", a.designs_explored)
+                .set("timeouts", a.designs_timeout)
+                .set("early_rejected", a.early_rejected);
+            o.set("autodse", j);
+        }
+        if let Some(h) = &row.harp {
+            let mut j = Json::obj();
+            j.set("gflops", h.best_gflops)
+                .set("minutes", h.dse_minutes)
+                .set("configs_scored", h.configs_scored);
+            o.set("harp", j);
+        }
+        arr.push(o);
+    }
+    arr
+}

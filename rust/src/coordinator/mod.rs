@@ -1,0 +1,270 @@
+//! Campaign coordinator: runs the evaluation matrix (kernels × sizes ×
+//! engines) across a thread pool and aggregates per-kernel rows for the
+//! report generators.
+//!
+//! Threading model: PJRT handles are thread-affine, so when the XLA path
+//! is enabled each worker thread loads its *own* copy of the artifact
+//! (compile-once-per-worker, ~100 ms) and keeps it for all its jobs —
+//! python never runs, and the artifact never crosses threads.
+
+pub mod pool;
+
+use crate::baselines::{self, AutoDseConfig, AutoDseOutcome, HarpConfig, HarpOutcome};
+use crate::benchmarks::{self, Size};
+use crate::dse::{self, DseConfig, DseOutcome};
+use crate::hls::{Device, HlsOracle};
+use crate::ir::DType;
+use crate::nlp::{BatchEvaluator, RustFeatureEvaluator};
+use crate::poly::Analysis;
+use crate::pragma::{Design, Space};
+use crate::runtime::{default_artifact_dir, XlaEvaluator};
+use pool::ThreadPool;
+
+/// Which engines to run per kernel instance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Engines {
+    pub nlpdse: bool,
+    pub autodse: bool,
+    pub harp: bool,
+}
+
+impl Engines {
+    pub fn all() -> Engines {
+        Engines {
+            nlpdse: true,
+            autodse: true,
+            harp: true,
+        }
+    }
+    pub fn nlp_only() -> Engines {
+        Engines {
+            nlpdse: true,
+            autodse: false,
+            harp: false,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CampaignConfig {
+    pub kernels: Vec<(String, Size)>,
+    pub dtype: DType,
+    pub engines: Engines,
+    pub threads: usize,
+    /// Evaluate NLP candidates through the AOT XLA artifact.
+    pub use_xla: bool,
+    pub dse: DseConfig,
+    pub autodse: AutoDseConfig,
+    pub harp: HarpConfig,
+}
+
+impl CampaignConfig {
+    /// The paper's main comparison matrix: all kernels × {M, L}, f32.
+    pub fn paper_autodse() -> CampaignConfig {
+        let mut kernels = Vec::new();
+        for name in benchmarks::ALL {
+            if name == "cnn" {
+                kernels.push((name.to_string(), Size::Medium));
+                continue;
+            }
+            kernels.push((name.to_string(), Size::Medium));
+            kernels.push((name.to_string(), Size::Large));
+        }
+        CampaignConfig {
+            kernels,
+            dtype: DType::F32,
+            engines: Engines {
+                nlpdse: true,
+                autodse: true,
+                harp: false,
+            },
+            threads: num_threads(),
+            use_xla: false,
+            dse: DseConfig::default(),
+            autodse: AutoDseConfig::default(),
+            harp: HarpConfig::default(),
+        }
+    }
+
+    /// The HARP comparison: S+M, f64, HARP ladder (Section 7.4).
+    pub fn paper_harp() -> CampaignConfig {
+        let mut kernels = Vec::new();
+        for name in benchmarks::ALL {
+            if name == "cnn" {
+                continue;
+            }
+            kernels.push((name.to_string(), Size::Small));
+            kernels.push((name.to_string(), Size::Medium));
+        }
+        CampaignConfig {
+            kernels,
+            dtype: DType::F64,
+            engines: Engines {
+                nlpdse: true,
+                autodse: false,
+                harp: true,
+            },
+            threads: num_threads(),
+            use_xla: false,
+            dse: DseConfig {
+                ladder: DseConfig::harp_ladder(),
+                ..DseConfig::default()
+            },
+            autodse: AutoDseConfig::default(),
+            harp: HarpConfig::default(),
+        }
+    }
+
+    /// A fast sanity scope (small sizes, a handful of kernels).
+    pub fn quick() -> CampaignConfig {
+        let kernels = ["gemm", "2mm", "bicg", "atax", "mvt"]
+            .iter()
+            .map(|n| (n.to_string(), Size::Small))
+            .collect();
+        CampaignConfig {
+            kernels,
+            dtype: DType::F32,
+            engines: Engines::all(),
+            threads: num_threads(),
+            use_xla: false,
+            dse: DseConfig::default(),
+            autodse: AutoDseConfig::default(),
+            harp: HarpConfig {
+                sweep_configs: 5_000,
+                ..HarpConfig::default()
+            },
+        }
+    }
+}
+
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// One kernel-instance row: everything the tables need.
+#[derive(Clone, Debug)]
+pub struct KernelRow {
+    pub name: String,
+    pub size: Size,
+    pub nl: usize,
+    pub nd: usize,
+    pub space_size: f64,
+    pub footprint_bytes: u64,
+    pub original_gflops: f64,
+    pub nlpdse: Option<DseOutcome>,
+    pub autodse: Option<AutoDseOutcome>,
+    pub harp: Option<HarpOutcome>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CampaignResult {
+    pub rows: Vec<KernelRow>,
+}
+
+/// Run the campaign across the thread pool.
+pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
+    let pool = ThreadPool::new(cfg.threads);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, KernelRow)>();
+    let n_jobs = cfg.kernels.len();
+
+    for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
+        let tx = tx.clone();
+        let cfg = cfg.clone();
+        pool.execute(move || {
+            let row = run_one(&cfg, &name, size);
+            let _ = tx.send((idx, row));
+        });
+    }
+    drop(tx);
+
+    let mut rows: Vec<Option<KernelRow>> = vec![None; n_jobs];
+    for (idx, row) in rx {
+        rows[idx] = Some(row);
+    }
+    pool.join();
+    CampaignResult {
+        rows: rows.into_iter().flatten().collect(),
+    }
+}
+
+/// Process one kernel instance (runs inside a worker thread).
+pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
+    let k = benchmarks::build(name, size, cfg.dtype)
+        .unwrap_or_else(|| panic!("unknown kernel {name}"));
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+
+    // each worker gets its own evaluator (PJRT is thread-affine)
+    let xla_eval = if cfg.use_xla {
+        XlaEvaluator::load(&default_artifact_dir()).ok()
+    } else {
+        None
+    };
+    let evaluator: &dyn BatchEvaluator = match &xla_eval {
+        Some(e) => e,
+        None => &RustFeatureEvaluator,
+    };
+
+    let space = Space::new(&k, &a);
+    let oracle = HlsOracle::new(dev.clone());
+    let original = oracle.synth(&k, &a, &Design::empty(&k));
+
+    let nlpdse = cfg
+        .engines
+        .nlpdse
+        .then(|| dse::run_nlp_dse(&k, &a, &dev, &cfg.dse, evaluator));
+    let autodse = cfg
+        .engines
+        .autodse
+        .then(|| baselines::run_autodse(&k, &a, &dev, &cfg.autodse));
+    let harp = cfg
+        .engines
+        .harp
+        .then(|| baselines::run_harp(&k, &a, &dev, &cfg.harp));
+
+    KernelRow {
+        name: name.to_string(),
+        size,
+        nl: k.n_loops(),
+        nd: a.deps.nd(),
+        space_size: space.size(),
+        footprint_bytes: a.total_footprint,
+        original_gflops: original.gflops(&a, &dev),
+        nlpdse,
+        autodse,
+        harp,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_campaign_completes() {
+        let mut cfg = CampaignConfig::quick();
+        cfg.kernels.truncate(3);
+        cfg.harp.sweep_configs = 1_000;
+        let r = run_campaign(&cfg);
+        assert_eq!(r.rows.len(), 3);
+        for row in &r.rows {
+            assert!(row.nlpdse.is_some());
+            assert!(row.autodse.is_some());
+            assert!(row.harp.is_some());
+            let n = row.nlpdse.as_ref().unwrap();
+            assert!(n.best_gflops > 0.0, "{}", row.name);
+        }
+    }
+
+    #[test]
+    fn rows_preserve_order() {
+        let mut cfg = CampaignConfig::quick();
+        cfg.engines = Engines::nlp_only();
+        let r = run_campaign(&cfg);
+        let names: Vec<&str> = r.rows.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["gemm", "2mm", "bicg", "atax", "mvt"]);
+    }
+}

@@ -1,0 +1,87 @@
+//! Simulated wall-clock for DSE campaigns.
+//!
+//! Synthesis jobs (minutes each, from the HLS oracle's synthesis-time
+//! model) are scheduled greedily onto `n` workers; solver invocations are
+//! serial phases that advance the frontier. The campaign's `T` is the
+//! makespan.
+
+#[derive(Clone, Debug)]
+pub struct SimClock {
+    /// Per-worker next-free time, minutes.
+    free: Vec<f64>,
+    /// Time already consumed by serial phases.
+    serial_base: f64,
+}
+
+impl SimClock {
+    pub fn new(workers: usize) -> SimClock {
+        assert!(workers > 0);
+        SimClock {
+            free: vec![0.0; workers],
+            serial_base: 0.0,
+        }
+    }
+
+    /// Schedule a parallel job of `minutes`; returns its completion time.
+    pub fn submit(&mut self, minutes: f64) -> f64 {
+        let (idx, _) = self
+            .free
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let start = self.free[idx].max(self.serial_base);
+        let done = start + minutes.max(0.0);
+        self.free[idx] = done;
+        done
+    }
+
+    /// A serial phase (e.g. an NLP solve): all workers wait for the current
+    /// makespan, then the phase runs alone.
+    pub fn serial(&mut self, minutes: f64) {
+        let m = self.makespan();
+        self.serial_base = m + minutes.max(0.0);
+    }
+
+    /// Current makespan in minutes.
+    pub fn makespan(&self) -> f64 {
+        self.free
+            .iter()
+            .cloned()
+            .fold(self.serial_base, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_jobs_overlap() {
+        let mut c = SimClock::new(4);
+        for _ in 0..4 {
+            c.submit(10.0);
+        }
+        assert_eq!(c.makespan(), 10.0);
+        c.submit(5.0);
+        assert_eq!(c.makespan(), 15.0);
+    }
+
+    #[test]
+    fn serial_phases_block() {
+        let mut c = SimClock::new(2);
+        c.submit(10.0);
+        c.serial(3.0);
+        assert_eq!(c.makespan(), 13.0);
+        let done = c.submit(1.0);
+        assert_eq!(done, 14.0);
+    }
+
+    #[test]
+    fn single_worker_serializes() {
+        let mut c = SimClock::new(1);
+        c.submit(5.0);
+        c.submit(5.0);
+        assert_eq!(c.makespan(), 10.0);
+    }
+}

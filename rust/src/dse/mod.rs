@@ -1,0 +1,16 @@
+//! NLP-DSE — the paper's design-space exploration (Algorithm 1).
+//!
+//! * [`clock`] — simulated wall-clock: synthesis jobs scheduled on N
+//!   parallel workers (8 for NLP-DSE, 4×2 for AutoDSE), serial phases for
+//!   solver invocations. All `T (min)` columns in the tables are makespans
+//!   of this clock.
+//! * [`nlpdse`] — Algorithm 1: sweep the max-array-partitioning ladder ×
+//!   {coarse+fine, fine} parallelism, solve the NLP per sub-space, prune by
+//!   lower bound, synthesize unseen candidates, terminate when the proven
+//!   lower bound exceeds the best measured latency.
+
+pub mod clock;
+pub mod nlpdse;
+
+pub use clock::SimClock;
+pub use nlpdse::{run_nlp_dse, DseConfig, DseOutcome, StepRecord};

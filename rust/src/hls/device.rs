@@ -1,0 +1,134 @@
+//! Target device model: AMD/Xilinx Alveo U200 at 250 MHz (Section 7.1),
+//! with Vitis 2021.1-style floating-point operator costs.
+//!
+//! The paper models **DSP and BRAM only** (Section 4.2 restrictions); LUT/FF
+//! are deliberately ignored, as in the paper.
+
+use crate::ir::{DType, OpKind};
+
+/// Per-operation implementation cost.
+#[derive(Clone, Copy, Debug)]
+pub struct OpCosts {
+    /// Iteration latency in cycles (`LO(op) >= 1`, Theorem 4.4).
+    pub latency: u64,
+    /// DSP slices per instantiated unit.
+    pub dsp: u64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub freq_hz: f64,
+    pub dsp_total: u64,
+    /// On-chip memory (BRAM + URAM) in bytes usable for data caching.
+    pub onchip_bytes: u64,
+    /// BRAM18K blocks (partitioning granularity accounting).
+    pub bram18k: u64,
+    /// Max off-chip burst width in bits (Merlin packing, Theorem 4.13).
+    pub max_burst_bits: u64,
+    /// Vitis per-array partition limit (Section 6).
+    pub max_array_partition: u64,
+}
+
+impl Device {
+    /// The evaluation target (Section 7.1).
+    pub fn u200() -> Device {
+        Device {
+            name: "xilinx-u200",
+            freq_hz: 250e6,
+            dsp_total: 6840,
+            onchip_bytes: 35 * 1024 * 1024,
+            bram18k: 4320,
+            max_burst_bits: 512,
+            max_array_partition: 1024,
+        }
+    }
+
+    /// Operator cost table per dtype (typical Vitis 2021.x fp operators at
+    /// 250 MHz; `fdiv`/`fsqrt` are LUT-based, hence 0 DSP — consistent with
+    /// the paper's DSP-only resource model).
+    pub fn op_costs(&self, dtype: DType, op: OpKind) -> OpCosts {
+        match (dtype, op) {
+            (DType::F32, OpKind::Add) | (DType::F32, OpKind::Sub) => OpCosts {
+                latency: 4,
+                dsp: 2,
+            },
+            (DType::F32, OpKind::Mul) => OpCosts {
+                latency: 3,
+                dsp: 3,
+            },
+            (DType::F32, OpKind::Div) => OpCosts {
+                latency: 12,
+                dsp: 0,
+            },
+            (DType::F64, OpKind::Add) | (DType::F64, OpKind::Sub) => OpCosts {
+                latency: 5,
+                dsp: 3,
+            },
+            (DType::F64, OpKind::Mul) => OpCosts {
+                latency: 6,
+                dsp: 11,
+            },
+            (DType::F64, OpKind::Div) => OpCosts {
+                latency: 30,
+                dsp: 0,
+            },
+        }
+    }
+
+    /// Off-chip transfer throughput: elements per cycle at full burst.
+    pub fn elems_per_cycle(&self, dtype: DType) -> f64 {
+        self.max_burst_bits as f64 / dtype.bits() as f64
+    }
+
+    /// Cycles to transfer `bytes` at the max burst width (lower bound,
+    /// Theorem 4.13: `footprint / max_burst_size`).
+    pub fn transfer_cycles(&self, bytes: u64) -> f64 {
+        bytes as f64 / (self.max_burst_bits as f64 / 8.0)
+    }
+
+    /// Merlin's default per-array on-chip working tile: arrays larger than
+    /// this are strip-mined/streamed rather than cached whole (the `tile`
+    /// pragma controls the granularity). Bounds both the Eq 12 usage model
+    /// and the oracle's BRAM accounting.
+    pub fn working_tile_bytes(&self) -> u64 {
+        2 * 1024 * 1024
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u200_constants() {
+        let d = Device::u200();
+        assert_eq!(d.dsp_total, 6840);
+        assert_eq!(d.max_burst_bits, 512);
+        assert_eq!(d.max_array_partition, 1024);
+        assert!(d.freq_hz == 250e6);
+    }
+
+    #[test]
+    fn op_costs_positive_latency() {
+        let d = Device::u200();
+        for dt in [DType::F32, DType::F64] {
+            for op in OpKind::ALL {
+                let c = d.op_costs(dt, op);
+                assert!(c.latency >= 1, "LO(op) >= 1 required by Theorem 4.4");
+            }
+        }
+    }
+
+    #[test]
+    fn transfer_is_512bit_packed() {
+        let d = Device::u200();
+        // paper §4.2.8: N×M f32 matrix costs N*M/16 cycles
+        let n = 1900u64;
+        let m = 2100u64;
+        let bytes = n * m * 4;
+        assert!((d.transfer_cycles(bytes) - (n * m) as f64 / 16.0).abs() < 1e-6);
+        assert_eq!(d.elems_per_cycle(DType::F32), 16.0);
+        assert_eq!(d.elems_per_cycle(DType::F64), 8.0);
+    }
+}

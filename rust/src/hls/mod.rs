@@ -1,0 +1,14 @@
+//! Simulated Vitis HLS toolchain + target device.
+//!
+//! * [`device`] — the Alveo U200 @ 250 MHz resource/latency tables.
+//! * [`oracle`] — the measurement oracle: given a Merlin-realized design,
+//!   produce the post-synthesis latency, DSP/BRAM usage, achieved II, and
+//!   the synthesis wall-time (which drives the DSE time budget and the
+//!   180-minute HLS timeouts the paper's Tables count).
+
+pub mod device;
+pub mod oracle;
+
+pub use device::{Device, OpCosts};
+pub use oracle::{HlsOracle, HlsReport, SynthOptions};
+

@@ -1,0 +1,311 @@
+//! The HLS measurement oracle: simulated Vitis 2021.1 synthesis.
+//!
+//! Given a Merlin-realized design it produces the quantities every DSE in
+//! the paper consumes: post-synthesis latency (the "HLS report" number),
+//! DSP/BRAM usage, achieved II, and the **synthesis wall-time** — the
+//! resource the paper's Tables actually budget (20 h DSE timeouts, 3 h
+//! per-synthesis timeouts, `DT` columns).
+//!
+//! Construction guarantees (tested in `property_invariants.rs`):
+//!
+//! * **Lower-bound invariant** (Theorem B.21): measured latency ≥ the
+//!   model's lower bound for the *requested* design — except when Vitis
+//!   auto-applies `loop_flatten` (the paper's one documented violation,
+//!   Fig 5's red point). Pessimism enters through realized (not optimal)
+//!   transfers, achieved II, scheduling overhead ≥ 1, and refused pragmas.
+//! * **Determinism**: identical (kernel, design) → identical report.
+//! * **Synthesis-time growth**: wall time grows with replication and
+//!   partitioning — reproducing why over-parallelized probes burn the DSE
+//!   budget (Section 2.3 "Over Parallelization").
+
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::merlin::{self, MerlinOutcome};
+use crate::model;
+use crate::poly::Analysis;
+use crate::pragma::Design;
+use crate::util::rng::hash64;
+
+/// Synthesis options (the paper's evaluation setup).
+#[derive(Clone, Debug)]
+pub struct SynthOptions {
+    /// Per-synthesis timeout in minutes (180 in Section 7.2).
+    pub hls_timeout_min: f64,
+}
+
+impl Default for SynthOptions {
+    fn default() -> Self {
+        SynthOptions {
+            hls_timeout_min: 180.0,
+        }
+    }
+}
+
+/// One synthesis report.
+#[derive(Clone, Debug)]
+pub struct HlsReport {
+    /// Measured kernel latency in cycles (valid only when `valid`).
+    pub cycles: f64,
+    pub dsp: u64,
+    pub bram18k: u64,
+    pub achieved_ii: f64,
+    /// Simulated synthesis wall-clock minutes (capped at the timeout).
+    pub synth_minutes: f64,
+    /// Synthesis hit the per-design timeout → no usable result.
+    pub timeout: bool,
+    /// Resources fit on the device and Merlin accepted the design.
+    pub valid: bool,
+    /// Merlin refused the design outright (AutoDSE "early reject" — cheap).
+    pub early_reject: bool,
+    /// All requested pragmas were applied as given.
+    pub pragmas_applied: bool,
+    /// Vitis auto-applied loop_flatten (lower-bound exception).
+    pub flattened: bool,
+    pub merlin: MerlinOutcome,
+}
+
+impl HlsReport {
+    pub fn gflops(&self, analysis: &Analysis, device: &Device) -> f64 {
+        if !self.valid || self.timeout {
+            return 0.0;
+        }
+        analysis.gflops(self.cycles, device.freq_hz)
+    }
+}
+
+/// The oracle. Stateless; all variation is hash-derived from
+/// (kernel, dtype, design fingerprint).
+pub struct HlsOracle {
+    pub device: Device,
+    pub options: SynthOptions,
+}
+
+impl HlsOracle {
+    pub fn new(device: Device) -> HlsOracle {
+        HlsOracle {
+            device,
+            options: SynthOptions::default(),
+        }
+    }
+
+    fn jitter(&self, k: &Kernel, d: &Design, key: &str, lo: f64, hi: f64) -> f64 {
+        let h = hash64(&format!(
+            "{}/{}/{}/{}",
+            k.name,
+            k.dtype.name(),
+            d.fingerprint(),
+            key
+        ));
+        lo + (h % 10_000) as f64 / 10_000.0 * (hi - lo)
+    }
+
+    /// Synthesize one design.
+    pub fn synth(&self, k: &Kernel, a: &Analysis, d: &Design) -> HlsReport {
+        let dev = &self.device;
+        let m = merlin::apply(k, a, dev, d);
+
+        if m.early_reject {
+            // Merlin refuses before HLS: costs a few Merlin-compile minutes
+            let minutes = self.jitter(k, d, "merlin", 2.0, 8.0);
+            return HlsReport {
+                cycles: f64::INFINITY,
+                dsp: 0,
+                bram18k: 0,
+                achieved_ii: 0.0,
+                synth_minutes: minutes,
+                timeout: false,
+                valid: false,
+                early_reject: true,
+                pragmas_applied: false,
+                flattened: false,
+                merlin: m,
+            };
+        }
+
+        // ---- measured latency ------------------------------------------------
+        // the realized design's model latency, with realized transfers,
+        // achieved II, and scheduling overhead ≥ 1
+        let realized_model = model::evaluate(k, a, dev, &m.realized);
+        let sched_overhead = self.jitter(k, d, "sched", 1.05, 1.35);
+        let mut comp = realized_model.comp_cycles * sched_overhead * m.ii_penalty;
+        let mut comm = m.comm_cycles;
+        let mut flattened = m.flattened;
+        if flattened {
+            // loop_flatten merges the pipeline with the loop above it:
+            // fewer pipeline drains → slightly *below* the model bound
+            // (Fig 5's documented exception)
+            comp = realized_model.comp_cycles * 0.88;
+            comm = realized_model.comm_cycles;
+        }
+        // flatten only manifests as a bound violation when it actually
+        // undercuts the pessimistic path
+        if flattened && comp + comm >= realized_model.total_cycles {
+            flattened = false;
+        }
+        let cycles = comp + comm;
+
+        // ---- resources --------------------------------------------------------
+        let dsp_over = self.jitter(k, d, "dsp", 1.0, 1.3);
+        let dsp = (realized_model.dsp * dsp_over).round() as u64;
+        let bram = self.bram_usage(k, a, &m.realized);
+        let fits = dsp <= dev.dsp_total && bram <= dev.bram18k * 2; // URAM headroom
+
+        // ---- synthesis wall time ----------------------------------------------
+        // wall time follows the *requested* design: Vitis grinds through
+        // scheduling/partitioning the huge netlist before Merlin's fallback
+        // materializes — this is exactly how over-parallelized AutoDSE
+        // probes burn the budget (Section 2.3)
+        let par_product: f64 = d.pragmas.iter().map(|p| p.uf.max(1) as f64).product();
+        let partition = d.max_partitioning(k) as f64;
+        let fp_mb = a.total_footprint as f64 / (1024.0 * 1024.0);
+        let base = 4.0
+            + 0.9 * k.n_loops() as f64
+            + 3.0 * (1.0 + par_product).log2()
+            + 0.075 * partition
+            + 0.35 * fp_mb.min(60.0);
+        let synth_minutes_raw = base * self.jitter(k, d, "synth", 0.85, 1.35);
+        let timeout = synth_minutes_raw > self.options.hls_timeout_min;
+        let synth_minutes = synth_minutes_raw.min(self.options.hls_timeout_min);
+
+        HlsReport {
+            cycles,
+            dsp,
+            bram18k: bram,
+            achieved_ii: realized_model.worst_ii * m.ii_penalty,
+            synth_minutes,
+            timeout,
+            valid: fits && !timeout,
+            early_reject: false,
+            pragmas_applied: m.pragmas_applied(d) && m.ii_penalty == 1.0,
+            flattened,
+            merlin: m,
+        }
+    }
+
+    /// BRAM18K accounting: each partition of a cached array occupies at
+    /// least one block; big arrays need `footprint / 2 KB` blocks. This is
+    /// what makes high partitioning factors blow the memory budget for
+    /// large problem sizes (Section 7.3's 2mm/3mm discussion).
+    fn bram_usage(&self, k: &Kernel, a: &Analysis, d: &Design) -> u64 {
+        let mut total = 0u64;
+        for arr in &k.arrays {
+            let fp = arr.footprint_bytes(k.dtype) as f64;
+            // Merlin caches a bounded working tile per array (tiling to
+            // fit), so the caching contribution is capped; partitioning
+            // multiplies the block count (each partition needs ≥ 1 block)
+            let cached = fp.min(self.device.working_tile_bytes() as f64);
+            let part = d.partitioning(k, arr.id);
+            let blocks = (cached / 2048.0).ceil() as u64;
+            total += blocks.max(part);
+        }
+        let _ = a;
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::{DType, LoopId};
+
+    fn setup(name: &str, size: Size) -> (Kernel, Analysis, HlsOracle) {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        (k, a, HlsOracle::new(Device::u200()))
+    }
+
+    #[test]
+    fn report_deterministic() {
+        let (k, a, o) = setup("gemm", Size::Medium);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(3)).pipeline = true;
+        d.get_mut(LoopId(3)).uf = 20;
+        let r1 = o.synth(&k, &a, &d);
+        let r2 = o.synth(&k, &a, &d);
+        assert_eq!(r1.cycles, r2.cycles);
+        assert_eq!(r1.synth_minutes, r2.synth_minutes);
+    }
+
+    #[test]
+    fn lower_bound_invariant_holds() {
+        let (k, a, o) = setup("gemm", Size::Medium);
+        let dev = Device::u200();
+        for uf in [1u64, 2, 4, 10, 20] {
+            let mut d = Design::empty(&k);
+            d.get_mut(LoopId(3)).pipeline = true;
+            d.get_mut(LoopId(3)).uf = uf;
+            let rep = o.synth(&k, &a, &d);
+            if !rep.valid || rep.flattened {
+                continue;
+            }
+            let lb = crate::model::evaluate(&k, &a, &dev, &d);
+            assert!(
+                rep.cycles >= lb.total_cycles * 0.999,
+                "uf={uf}: measured {} < bound {}",
+                rep.cycles,
+                lb.total_cycles
+            );
+        }
+    }
+
+    #[test]
+    fn synthesis_time_grows_with_parallelism() {
+        let (k, a, o) = setup("gemm", Size::Medium);
+        let d_small = {
+            let mut d = Design::empty(&k);
+            d.get_mut(LoopId(3)).pipeline = true;
+            d.get_mut(LoopId(3)).uf = 2;
+            d
+        };
+        let d_big = {
+            let mut d = Design::empty(&k);
+            d.get_mut(LoopId(3)).pipeline = true;
+            d.get_mut(LoopId(3)).uf = 220;
+            d.get_mut(LoopId(1)).uf = 220; // j0 innermost: fine-grained
+            d
+        };
+        let r_small = o.synth(&k, &a, &d_small);
+        let r_big = o.synth(&k, &a, &d_big);
+        assert!(
+            r_big.synth_minutes > r_small.synth_minutes * 1.5,
+            "{} vs {}",
+            r_big.synth_minutes,
+            r_small.synth_minutes
+        );
+    }
+
+    #[test]
+    fn early_reject_is_cheap() {
+        let (k, a, o) = setup("seidel-2d", Size::Medium);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(1)).uf = 2;
+        let r = o.synth(&k, &a, &d);
+        assert!(r.early_reject);
+        assert!(!r.valid);
+        assert!(r.synth_minutes < 10.0);
+    }
+
+    #[test]
+    fn original_designs_are_slow() {
+        // "Original" rows of Table 1: ~0.1 GF/s territory
+        let (k, a, o) = setup("2mm", Size::Medium);
+        let d = Design::empty(&k);
+        let r = o.synth(&k, &a, &d);
+        assert!(r.valid);
+        let gfs = r.gflops(&a, &Device::u200());
+        assert!(
+            (0.005..2.0).contains(&gfs),
+            "original 2mm-M should be well under 2 GF/s, got {gfs}"
+        );
+    }
+
+    #[test]
+    fn gflops_zero_for_invalid() {
+        let (k, a, o) = setup("seidel-2d", Size::Medium);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(1)).uf = 2;
+        let r = o.synth(&k, &a, &d);
+        assert_eq!(r.gflops(&a, &Device::u200()), 0.0);
+    }
+}

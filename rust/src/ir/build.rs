@@ -1,0 +1,241 @@
+//! Ergonomic builder for defining kernels in Rust (the PolyBench suite in
+//! `benchmarks/` is written against this API).
+//!
+//! ```ignore
+//! let mut kb = KernelBuilder::new("gemm", DType::F32);
+//! let c = kb.array("C", &[ni, nj], ArrayDir::InOut);
+//! let a = kb.array("A", &[ni, nk], ArrayDir::In);
+//! let b = kb.array("B", &[nk, nj], ArrayDir::In);
+//! kb.for_const("i", 0, ni, |kb, i| {
+//!     kb.for_const("j", 0, nj, |kb, j| {
+//!         kb.stmt("S0", vec![kb.at(c, &[kb.v(i), kb.v(j)])],
+//!                 vec![kb.at(c, &[kb.v(i), kb.v(j)])], &[(OpKind::Mul, 1)]);
+//!         kb.for_const("k", 0, nk, |kb, k| {
+//!             kb.stmt("S1", /* C[i][j] += A[i][k]*B[k][j] */ ...);
+//!         });
+//!     });
+//! });
+//! let kernel = kb.finish();
+//! ```
+
+use super::expr::AffineExpr;
+use super::kernel::{Access, Array, ArrayDir, DType, Kernel, Loop, Node, OpKind, Stmt};
+use super::{ArrayId, LoopId, StmtId};
+
+pub struct KernelBuilder {
+    name: String,
+    dtype: DType,
+    arrays: Vec<Array>,
+    next_loop: u32,
+    next_stmt: u32,
+    /// Stack of open loops; `frames[0]` collects top-level nodes.
+    frames: Vec<Vec<Node>>,
+    open: Vec<(LoopId, String, AffineExpr, AffineExpr)>,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str, dtype: DType) -> KernelBuilder {
+        KernelBuilder {
+            name: name.to_string(),
+            dtype,
+            arrays: Vec::new(),
+            next_loop: 0,
+            next_stmt: 0,
+            frames: vec![Vec::new()],
+            open: Vec::new(),
+        }
+    }
+
+    /// Declare an array.
+    pub fn array(&mut self, name: &str, dims: &[u64], dir: ArrayDir) -> ArrayId {
+        let id = ArrayId(self.arrays.len() as u32);
+        self.arrays.push(Array {
+            id,
+            name: name.to_string(),
+            dims: dims.to_vec(),
+            dir,
+        });
+        id
+    }
+
+    /// Open a constant-bound loop `for name in [lb, ub)` and build its body
+    /// inside `f` (which receives the fresh [`LoopId`]).
+    pub fn for_const(
+        &mut self,
+        name: &str,
+        lb: i64,
+        ub: i64,
+        f: impl FnOnce(&mut KernelBuilder, LoopId),
+    ) -> LoopId {
+        self.for_expr(name, AffineExpr::constant(lb), AffineExpr::constant(ub), f)
+    }
+
+    /// Open a loop with affine bounds (may reference enclosing loop ids).
+    pub fn for_expr(
+        &mut self,
+        name: &str,
+        lb: AffineExpr,
+        ub: AffineExpr,
+        f: impl FnOnce(&mut KernelBuilder, LoopId),
+    ) -> LoopId {
+        let id = LoopId(self.next_loop);
+        self.next_loop += 1;
+        // Bounds may only reference loops that are currently open.
+        for dep in lb.loops().chain(ub.loops()) {
+            assert!(
+                self.open.iter().any(|(l, ..)| *l == dep),
+                "loop bound references non-enclosing loop {dep}"
+            );
+        }
+        self.open.push((id, name.to_string(), lb, ub));
+        self.frames.push(Vec::new());
+        f(self, id);
+        let body = self.frames.pop().unwrap();
+        let (id2, name2, lb2, ub2) = self.open.pop().unwrap();
+        debug_assert_eq!(id, id2);
+        self.frames.last_mut().unwrap().push(Node::Loop(Loop {
+            id,
+            name: name2,
+            lb: lb2,
+            ub: ub2,
+            body,
+        }));
+        id
+    }
+
+    /// Add a statement to the current loop body. `ops` is the per-iteration
+    /// op multiset; the internal dependency chain defaults to all ops in
+    /// sequence (`chain = expanded ops`), which is the conservative critical
+    /// path for `a ⊕ b ⊕ c` expressions.
+    pub fn stmt(
+        &mut self,
+        name: &str,
+        writes: Vec<Access>,
+        reads: Vec<Access>,
+        ops: &[(OpKind, u32)],
+    ) -> StmtId {
+        let chain: Vec<OpKind> = ops
+            .iter()
+            .flat_map(|&(o, c)| std::iter::repeat(o).take(c as usize))
+            .collect();
+        self.stmt_with_chain(name, writes, reads, ops, chain)
+    }
+
+    /// Like [`Self::stmt`] but with an explicit internal op chain (for
+    /// statements whose expression tree is wider than a pure chain, e.g.
+    /// `(a*b) + (c*d)` has chain Mul→Add, not Mul→Mul→Add).
+    pub fn stmt_with_chain(
+        &mut self,
+        name: &str,
+        writes: Vec<Access>,
+        reads: Vec<Access>,
+        ops: &[(OpKind, u32)],
+        chain: Vec<OpKind>,
+    ) -> StmtId {
+        assert!(!self.open.is_empty(), "statement outside any loop");
+        let id = StmtId(self.next_stmt);
+        self.next_stmt += 1;
+        self.frames.last_mut().unwrap().push(Node::Stmt(Stmt {
+            id,
+            name: name.to_string(),
+            writes,
+            reads,
+            ops: ops.to_vec(),
+            chain,
+        }));
+        id
+    }
+
+    /// Access helper: `array[exprs...]`.
+    pub fn at(&self, array: ArrayId, indices: &[AffineExpr]) -> Access {
+        assert_eq!(
+            indices.len(),
+            self.arrays[array.0 as usize].dims.len(),
+            "access arity mismatch for {}",
+            self.arrays[array.0 as usize].name
+        );
+        Access::new(array, indices.to_vec())
+    }
+
+    /// Expression helpers.
+    pub fn v(&self, l: LoopId) -> AffineExpr {
+        AffineExpr::var(l)
+    }
+    pub fn c(&self, x: i64) -> AffineExpr {
+        AffineExpr::constant(x)
+    }
+    /// `l + c`
+    pub fn vp(&self, l: LoopId, c: i64) -> AffineExpr {
+        AffineExpr::var(l).plus_const(c)
+    }
+    /// `a + b` over iterators
+    pub fn sum(&self, a: &AffineExpr, b: &AffineExpr) -> AffineExpr {
+        a.add(b)
+    }
+
+    pub fn finish(self) -> Kernel {
+        assert!(self.open.is_empty(), "unclosed loops at finish()");
+        let mut frames = self.frames;
+        let roots = frames.pop().unwrap();
+        assert!(frames.is_empty());
+        Kernel::finalize(&self.name, self.dtype, self.arrays, roots)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangular_bounds_allowed() {
+        let mut kb = KernelBuilder::new("tri", DType::F32);
+        let a = kb.array("a", &[10, 10], ArrayDir::InOut);
+        kb.for_const("i", 0, 10, |kb, i| {
+            // for j in [0, i)
+            kb.for_expr("j", kb.c(0), kb.v(i), |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![kb.at(a, &[kb.v(j), kb.v(i)])],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let k = kb.finish();
+        assert_eq!(k.n_loops(), 2);
+        let (lb, ub) = k.loop_bounds(LoopId(1));
+        assert!(lb.is_constant());
+        assert!(!ub.is_constant());
+    }
+
+    #[test]
+    #[should_panic(expected = "references non-enclosing loop")]
+    fn rejects_escaping_bound() {
+        let mut kb = KernelBuilder::new("bad", DType::F32);
+        let a = kb.array("a", &[4], ArrayDir::Out);
+        let mut leaked = None;
+        kb.for_const("i", 0, 4, |kb, i| {
+            leaked = Some(i);
+            kb.stmt("S0", vec![kb.at(a, &[kb.v(i)])], vec![], &[(OpKind::Add, 1)]);
+        });
+        // sibling loop referencing i's iterator is invalid
+        kb.for_expr("j", AffineExpr::constant(0), AffineExpr::var(leaked.unwrap()), |_, _| {});
+    }
+
+    #[test]
+    #[should_panic(expected = "statement outside any loop")]
+    fn rejects_toplevel_stmt() {
+        let mut kb = KernelBuilder::new("bad", DType::F32);
+        let a = kb.array("a", &[4], ArrayDir::Out);
+        let acc = kb.at(a, &[kb.c(0)]);
+        kb.stmt("S0", vec![acc], vec![], &[(OpKind::Add, 1)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "access arity mismatch")]
+    fn rejects_bad_arity() {
+        let mut kb = KernelBuilder::new("bad", DType::F32);
+        let a = kb.array("a", &[4, 4], ArrayDir::Out);
+        let _ = kb.at(a, &[kb.c(0)]);
+    }
+}

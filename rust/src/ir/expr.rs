@@ -1,0 +1,206 @@
+//! Affine expressions over loop iterators: `Σ coeff_i · iter_i + const`.
+//!
+//! Used for loop bounds (triangular loops in `lu`, `trisolv`,
+//! `gramschmidt`, `symm`, …) and for array index functions. Exactness of
+//! everything downstream (trip counts, dependence distances, footprints)
+//! rests on this closed form.
+
+use super::LoopId;
+
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct AffineExpr {
+    /// `(loop, coefficient)` terms; kept sorted by loop id, no zero coeffs.
+    pub terms: Vec<(LoopId, i64)>,
+    pub constant: i64,
+}
+
+impl AffineExpr {
+    pub fn constant(c: i64) -> AffineExpr {
+        AffineExpr {
+            terms: vec![],
+            constant: c,
+        }
+    }
+
+    /// The iterator of `loop_id` itself (coefficient 1).
+    pub fn var(loop_id: LoopId) -> AffineExpr {
+        AffineExpr {
+            terms: vec![(loop_id, 1)],
+            constant: 0,
+        }
+    }
+
+    pub fn var_scaled(loop_id: LoopId, coeff: i64) -> AffineExpr {
+        let mut e = AffineExpr {
+            terms: vec![(loop_id, coeff)],
+            constant: 0,
+        };
+        e.normalize();
+        e
+    }
+
+    pub fn plus_const(mut self, c: i64) -> AffineExpr {
+        self.constant += c;
+        self
+    }
+
+    pub fn add(&self, other: &AffineExpr) -> AffineExpr {
+        let mut out = self.clone();
+        for &(l, c) in &other.terms {
+            out.add_term(l, c);
+        }
+        out.constant += other.constant;
+        out.normalize();
+        out
+    }
+
+    pub fn add_term(&mut self, l: LoopId, c: i64) {
+        if let Some(t) = self.terms.iter_mut().find(|t| t.0 == l) {
+            t.1 += c;
+        } else {
+            self.terms.push((l, c));
+        }
+        self.normalize();
+    }
+
+    fn normalize(&mut self) {
+        self.terms.retain(|t| t.1 != 0);
+        self.terms.sort_by_key(|t| t.0);
+    }
+
+    pub fn is_constant(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    /// Coefficient of `l` (0 if absent).
+    pub fn coeff(&self, l: LoopId) -> i64 {
+        self.terms
+            .iter()
+            .find(|t| t.0 == l)
+            .map(|t| t.1)
+            .unwrap_or(0)
+    }
+
+    /// Evaluate with a concrete iterator assignment; unassigned iterators
+    /// panic (callers must pass complete environments).
+    pub fn eval(&self, env: &dyn Fn(LoopId) -> i64) -> i64 {
+        self.constant
+            + self
+                .terms
+                .iter()
+                .map(|&(l, c)| c * env(l))
+                .sum::<i64>()
+    }
+
+    /// Interval of values over iterator boxes `ranges(l) = [lo, hi]`
+    /// (inclusive). Exact for affine forms: extremes occur at box corners,
+    /// and for affine functions each term's extreme is independent.
+    pub fn bounds(&self, ranges: &dyn Fn(LoopId) -> (i64, i64)) -> (i64, i64) {
+        let mut lo = self.constant;
+        let mut hi = self.constant;
+        for &(l, c) in &self.terms {
+            let (rlo, rhi) = ranges(l);
+            if c >= 0 {
+                lo += c * rlo;
+                hi += c * rhi;
+            } else {
+                lo += c * rhi;
+                hi += c * rlo;
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Loops referenced by this expression.
+    pub fn loops(&self) -> impl Iterator<Item = LoopId> + '_ {
+        self.terms.iter().map(|t| t.0)
+    }
+
+    /// Difference `self - other`.
+    pub fn sub(&self, other: &AffineExpr) -> AffineExpr {
+        let mut neg = other.clone();
+        for t in &mut neg.terms {
+            t.1 = -t.1;
+        }
+        neg.constant = -neg.constant;
+        self.add(&neg)
+    }
+}
+
+impl std::fmt::Display for AffineExpr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut first = true;
+        for &(l, c) in &self.terms {
+            if first {
+                if c == 1 {
+                    write!(f, "{l}")?;
+                } else if c == -1 {
+                    write!(f, "-{l}")?;
+                } else {
+                    write!(f, "{c}*{l}")?;
+                }
+                first = false;
+            } else if c >= 0 {
+                if c == 1 {
+                    write!(f, " + {l}")?;
+                } else {
+                    write!(f, " + {c}*{l}")?;
+                }
+            } else if c == -1 {
+                write!(f, " - {l}")?;
+            } else {
+                write!(f, " - {}*{l}", -c)?;
+            }
+        }
+        if first {
+            write!(f, "{}", self.constant)?;
+        } else if self.constant > 0 {
+            write!(f, " + {}", self.constant)?;
+        } else if self.constant < 0 {
+            write!(f, " - {}", -self.constant)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const L0: LoopId = LoopId(0);
+    const L1: LoopId = LoopId(1);
+
+    #[test]
+    fn construction_and_eval() {
+        // 2*i - j + 3
+        let e = AffineExpr::var_scaled(L0, 2)
+            .add(&AffineExpr::var_scaled(L1, -1))
+            .plus_const(3);
+        let v = e.eval(&|l| if l == L0 { 5 } else { 2 });
+        assert_eq!(v, 2 * 5 - 2 + 3);
+    }
+
+    #[test]
+    fn normalization_removes_zeros() {
+        let e = AffineExpr::var(L0).add(&AffineExpr::var_scaled(L0, -1));
+        assert!(e.is_constant());
+        assert_eq!(e.constant, 0);
+    }
+
+    #[test]
+    fn interval_bounds_exact() {
+        // i - j over i in [0,9], j in [0,4] -> [-4, 9]
+        let e = AffineExpr::var(L0).sub(&AffineExpr::var(L1));
+        let (lo, hi) = e.bounds(&|l| if l == L0 { (0, 9) } else { (0, 4) });
+        assert_eq!((lo, hi), (-4, 9));
+    }
+
+    #[test]
+    fn display_readable() {
+        let e = AffineExpr::var(L0)
+            .add(&AffineExpr::var_scaled(L1, -2))
+            .plus_const(1);
+        assert_eq!(format!("{e}"), "L0 - 2*L1 + 1");
+        assert_eq!(format!("{}", AffineExpr::constant(7)), "7");
+    }
+}

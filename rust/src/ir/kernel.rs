@@ -1,0 +1,469 @@
+//! Kernel IR: loops, statements, arrays, and the finalized metadata the
+//! analyses consume.
+
+use super::expr::AffineExpr;
+use super::{ArrayId, LoopId, StmtId};
+use std::collections::BTreeMap;
+
+/// Scalar element type of a kernel's arrays. The paper evaluates f32
+/// against AutoDSE (Section 7.1) and f64 against HARP (Section 7.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    F64,
+}
+
+impl DType {
+    pub fn bits(self) -> u64 {
+        match self {
+            DType::F32 => 32,
+            DType::F64 => 64,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+        }
+    }
+}
+
+/// Transfer direction of an array w.r.t. off-chip DRAM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrayDir {
+    /// Read-only input (live-in).
+    In,
+    /// Write-only output (live-out).
+    Out,
+    /// Read and written (live-in + live-out).
+    InOut,
+    /// Intermediate produced and consumed inside the kernel; Merlin still
+    /// allocates it in DRAM unless it is fully cached on-chip.
+    Temp,
+}
+
+impl ArrayDir {
+    pub fn is_live_in(self) -> bool {
+        matches!(self, ArrayDir::In | ArrayDir::InOut)
+    }
+    pub fn is_live_out(self) -> bool {
+        matches!(self, ArrayDir::Out | ArrayDir::InOut)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Array {
+    pub id: ArrayId,
+    pub name: String,
+    pub dims: Vec<u64>,
+    pub dir: ArrayDir,
+}
+
+impl Array {
+    /// Number of elements.
+    pub fn elements(&self) -> u64 {
+        self.dims.iter().product()
+    }
+    /// Footprint in bytes for the kernel dtype.
+    pub fn footprint_bytes(&self, dtype: DType) -> u64 {
+        self.elements() * dtype.bits() / 8
+    }
+}
+
+/// Scalar n-ary operation kinds (Definition B.1 normalizes bodies to one
+/// operation per statement; we keep the per-iteration op multiset instead,
+/// which is equivalent for latency/resource purposes and far terser).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OpKind {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 4] = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Div];
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Add => "+",
+            OpKind::Sub => "-",
+            OpKind::Mul => "*",
+            OpKind::Div => "/",
+        }
+    }
+}
+
+/// An affine array access `array[indices...]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Access {
+    pub array: ArrayId,
+    pub indices: Vec<AffineExpr>,
+}
+
+impl Access {
+    pub fn new(array: ArrayId, indices: Vec<AffineExpr>) -> Access {
+        Access { array, indices }
+    }
+}
+
+/// A statement: one loop-body assignment with its access summary and the
+/// multiset of scalar ops one iteration performs.
+#[derive(Clone, Debug)]
+pub struct Stmt {
+    pub id: StmtId,
+    pub name: String,
+    pub writes: Vec<Access>,
+    pub reads: Vec<Access>,
+    /// `(op, count)` per iteration; e.g. `tmp += alpha*A*B` is
+    /// `[(Mul, 2), (Add, 1)]`.
+    pub ops: Vec<(OpKind, u32)>,
+    /// Length (in op latencies) of the statement's internal critical path as
+    /// a chain of ops, e.g. `alpha*A*B + tmp`: Mul→Mul→Add. Defaults to the
+    /// full op chain (all ops sequential); kernels with known internal
+    /// parallelism may override via the builder.
+    pub chain: Vec<OpKind>,
+}
+
+impl Stmt {
+    pub fn op_count(&self, op: OpKind) -> u32 {
+        self.ops
+            .iter()
+            .filter(|(o, _)| *o == op)
+            .map(|(_, c)| *c)
+            .sum()
+    }
+    /// Total flop count of one iteration (all four kinds count as 1 flop,
+    /// matching PolyBench's GF/s accounting).
+    pub fn flops(&self) -> u64 {
+        self.ops.iter().map(|(_, c)| *c as u64).sum()
+    }
+}
+
+/// One node of the summary AST.
+#[derive(Clone, Debug)]
+pub enum Node {
+    Loop(Loop),
+    Stmt(Stmt),
+}
+
+/// A `for` loop with half-open affine bounds `[lb, ub)` and unit stride
+/// (PolyOpt-HLS restriction; negative strides are excluded — the paper drops
+/// `ludcmp`/`deriche`/`nussinov` for the same reason).
+#[derive(Clone, Debug)]
+pub struct Loop {
+    pub id: LoopId,
+    pub name: String,
+    pub lb: AffineExpr,
+    pub ub: AffineExpr,
+    pub body: Vec<Node>,
+}
+
+/// Finalized per-loop metadata.
+#[derive(Clone, Debug)]
+pub struct LoopMeta {
+    pub id: LoopId,
+    pub name: String,
+    pub parent: Option<LoopId>,
+    /// 0 for top-level (nest root) loops.
+    pub depth: u32,
+    /// The top-level loop this one lives under (itself if top-level).
+    pub nest_root: LoopId,
+    /// Statements iterated by this loop (transitively).
+    pub stmts: Vec<StmtId>,
+    /// Direct child loops.
+    pub children: Vec<LoopId>,
+    /// True when the loop body is straight-line (no loops inside).
+    pub innermost: bool,
+}
+
+/// Finalized per-statement metadata.
+#[derive(Clone, Debug)]
+pub struct StmtMeta {
+    pub id: StmtId,
+    /// Enclosing loops, outermost first.
+    pub nest: Vec<LoopId>,
+}
+
+/// A finalized kernel.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    pub dtype: DType,
+    pub arrays: Vec<Array>,
+    pub roots: Vec<Node>,
+    pub loops: Vec<LoopMeta>,
+    pub stmts_meta: Vec<StmtMeta>,
+    stmt_table: Vec<Stmt>,
+    loop_table: Vec<Loop>, // bounds + names snapshot (bodies not duplicated)
+}
+
+impl Kernel {
+    /// Build metadata from a raw tree. Called by [`super::KernelBuilder`].
+    pub fn finalize(name: &str, dtype: DType, arrays: Vec<Array>, roots: Vec<Node>) -> Kernel {
+        let mut loops: BTreeMap<u32, LoopMeta> = BTreeMap::new();
+        let mut stmts_meta: Vec<StmtMeta> = Vec::new();
+        let mut stmt_table: Vec<Stmt> = Vec::new();
+        let mut loop_table: BTreeMap<u32, Loop> = BTreeMap::new();
+
+        fn walk(
+            node: &Node,
+            path: &mut Vec<LoopId>,
+            loops: &mut BTreeMap<u32, LoopMeta>,
+            stmts_meta: &mut Vec<StmtMeta>,
+            stmt_table: &mut Vec<Stmt>,
+            loop_table: &mut BTreeMap<u32, Loop>,
+        ) {
+            match node {
+                Node::Loop(l) => {
+                    let parent = path.last().copied();
+                    let nest_root = path.first().copied().unwrap_or(l.id);
+                    let innermost = l.body.iter().all(|n| matches!(n, Node::Stmt(_)));
+                    loops.insert(
+                        l.id.0,
+                        LoopMeta {
+                            id: l.id,
+                            name: l.name.clone(),
+                            parent,
+                            depth: path.len() as u32,
+                            nest_root,
+                            stmts: vec![],
+                            children: vec![],
+                            innermost,
+                        },
+                    );
+                    if let Some(p) = parent {
+                        loops.get_mut(&p.0).unwrap().children.push(l.id);
+                    }
+                    loop_table.insert(
+                        l.id.0,
+                        Loop {
+                            id: l.id,
+                            name: l.name.clone(),
+                            lb: l.lb.clone(),
+                            ub: l.ub.clone(),
+                            body: vec![],
+                        },
+                    );
+                    path.push(l.id);
+                    for child in &l.body {
+                        walk(child, path, loops, stmts_meta, stmt_table, loop_table);
+                    }
+                    path.pop();
+                }
+                Node::Stmt(s) => {
+                    stmts_meta.push(StmtMeta {
+                        id: s.id,
+                        nest: path.clone(),
+                    });
+                    for l in path.iter() {
+                        loops.get_mut(&l.0).unwrap().stmts.push(s.id);
+                    }
+                    stmt_table.push(s.clone());
+                }
+            }
+        }
+
+        let mut path = Vec::new();
+        for root in &roots {
+            walk(
+                root,
+                &mut path,
+                &mut loops,
+                &mut stmts_meta,
+                &mut stmt_table,
+                &mut loop_table,
+            );
+        }
+        stmts_meta.sort_by_key(|s| s.id);
+        stmt_table.sort_by_key(|s| s.id);
+
+        let n_loops = loops.len() as u32;
+        // Ids must be dense (builder assigns them in creation order).
+        for i in 0..n_loops {
+            assert!(loops.contains_key(&i), "non-dense loop ids");
+        }
+
+        Kernel {
+            name: name.to_string(),
+            dtype,
+            arrays,
+            roots,
+            loops: (0..n_loops).map(|i| loops.remove(&i).unwrap()).collect(),
+            stmts_meta,
+            stmt_table,
+            loop_table: (0..n_loops).map(|i| loop_table.remove(&i).unwrap()).collect(),
+        }
+    }
+
+    pub fn n_loops(&self) -> usize {
+        self.loops.len()
+    }
+    pub fn n_stmts(&self) -> usize {
+        self.stmt_table.len()
+    }
+
+    pub fn loop_meta(&self, l: LoopId) -> &LoopMeta {
+        &self.loops[l.0 as usize]
+    }
+    pub fn loop_bounds(&self, l: LoopId) -> (&AffineExpr, &AffineExpr) {
+        let lp = &self.loop_table[l.0 as usize];
+        (&lp.lb, &lp.ub)
+    }
+    pub fn loop_name(&self, l: LoopId) -> &str {
+        &self.loop_table[l.0 as usize].name
+    }
+    pub fn stmt(&self, s: StmtId) -> &Stmt {
+        &self.stmt_table[s.0 as usize]
+    }
+    pub fn stmt_meta(&self, s: StmtId) -> &StmtMeta {
+        &self.stmts_meta[s.0 as usize]
+    }
+    pub fn array(&self, a: ArrayId) -> &Array {
+        &self.arrays[a.0 as usize]
+    }
+    pub fn array_by_name(&self, name: &str) -> Option<&Array> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+
+    /// Top-level loops (the kernel's loop nests), in syntactic order.
+    pub fn nest_roots(&self) -> Vec<LoopId> {
+        self.loops
+            .iter()
+            .filter(|m| m.parent.is_none())
+            .map(|m| m.id)
+            .collect()
+    }
+
+    /// All loops in the nest rooted at `root`, pre-order.
+    pub fn nest_loops(&self, root: LoopId) -> Vec<LoopId> {
+        let mut out = vec![root];
+        let mut i = 0;
+        while i < out.len() {
+            let cur = out[i];
+            for &c in &self.loop_meta(cur).children {
+                out.push(c);
+            }
+            i += 1;
+        }
+        out.sort();
+        out
+    }
+
+    /// The chain of loops from the nest root down to and including `l`.
+    pub fn loop_path(&self, l: LoopId) -> Vec<LoopId> {
+        let mut path = vec![l];
+        let mut cur = l;
+        while let Some(p) = self.loop_meta(cur).parent {
+            path.push(p);
+            cur = p;
+        }
+        path.reverse();
+        path
+    }
+
+    /// Iterator over all statements.
+    pub fn stmts(&self) -> impl Iterator<Item = &Stmt> {
+        self.stmt_table.iter()
+    }
+
+    /// All accesses (reads + writes) of a statement.
+    pub fn stmt_accesses(&self, s: StmtId) -> impl Iterator<Item = (&Access, bool)> {
+        let st = self.stmt(s);
+        st.writes
+            .iter()
+            .map(|a| (a, true))
+            .chain(st.reads.iter().map(|a| (a, false)))
+    }
+
+    /// Whether loop `inner` is (transitively) inside loop `outer`.
+    pub fn is_under(&self, inner: LoopId, outer: LoopId) -> bool {
+        let mut cur = inner;
+        while let Some(p) = self.loop_meta(cur).parent {
+            if p == outer {
+                return true;
+            }
+            cur = p;
+        }
+        false
+    }
+
+    /// Render the summary AST in constructor notation, e.g.
+    /// `Loop_i(Loop_j1(S1), Loop_j2(S2, S3))` (Section 3.1).
+    pub fn summary_ast(&self) -> String {
+        fn walk(k: &Kernel, n: &Node, out: &mut String) {
+            match n {
+                Node::Loop(l) => {
+                    out.push_str(&format!("Loop_{}(", k.loop_name(l.id)));
+                    for (i, c) in l.body.iter().enumerate() {
+                        if i > 0 {
+                            out.push_str(", ");
+                        }
+                        walk(k, c, out);
+                    }
+                    out.push(')');
+                }
+                Node::Stmt(s) => out.push_str(&s.name),
+            }
+        }
+        let mut out = String::new();
+        for (i, r) in self.roots.iter().enumerate() {
+            if i > 0 {
+                out.push_str("; ");
+            }
+            walk(self, r, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::KernelBuilder;
+
+    #[test]
+    fn finalize_metadata_2mm_shape() {
+        let k = crate::benchmarks::kernel_2mm(180, 190, 210, 220, super::DType::F32);
+        assert_eq!(k.n_loops(), 6);
+        assert_eq!(k.n_stmts(), 4);
+        assert_eq!(k.nest_roots().len(), 2);
+        // Loop2 (k1) is innermost of nest 0
+        let nest0 = k.nest_loops(k.nest_roots()[0]);
+        assert_eq!(nest0.len(), 3);
+        let ast = k.summary_ast();
+        assert!(ast.starts_with("Loop_i1(Loop_j1(S0, Loop_k1(S1)))"), "{ast}");
+    }
+
+    #[test]
+    fn loop_path_and_is_under() {
+        let k = crate::benchmarks::kernel_2mm(18, 19, 21, 22, super::DType::F32);
+        let roots = k.nest_roots();
+        let nest0 = k.nest_loops(roots[0]);
+        let innermost = *nest0.last().unwrap();
+        assert!(k.is_under(innermost, roots[0]));
+        assert!(!k.is_under(roots[0], innermost));
+        let path = k.loop_path(innermost);
+        assert_eq!(path.len(), 3);
+        assert_eq!(path[0], roots[0]);
+    }
+
+    #[test]
+    fn builder_smoke_minimal() {
+        use super::*;
+        let mut kb = KernelBuilder::new("mini", DType::F32);
+        let a = kb.array("a", &[8], ArrayDir::Out);
+        let b = kb.array("b", &[8], ArrayDir::In);
+        kb.for_const("i", 0, 8, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(a, &[kb.v(i)])],
+                vec![kb.at(b, &[kb.v(i)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        let k = kb.finish();
+        assert_eq!(k.n_loops(), 1);
+        assert_eq!(k.n_stmts(), 1);
+        assert_eq!(k.stmt(StmtId(0)).flops(), 1);
+        assert_eq!(k.summary_ast(), "Loop_i(S0)");
+    }
+}

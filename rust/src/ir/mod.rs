@@ -1,0 +1,53 @@
+//! Affine loop-nest intermediate representation.
+//!
+//! The paper restricts its input class to *polyhedral programs*: static
+//! control flow, affine loop bounds, affine array accesses, straight-line
+//! loop bodies with one n-ary operation per statement (Section 4.2 /
+//! Definition B.1). This IR captures exactly that class:
+//!
+//! * a [`Kernel`] is a forest of [`Node`]s (loops and statements),
+//! * every [`Loop`] has bounds that are either constants or affine
+//!   expressions of *outer* loop iterators ([`AffineExpr`]),
+//! * every [`Stmt`] carries its reads/writes as affine [`Access`]es and the
+//!   multiset of scalar operations one iteration performs.
+//!
+//! The summary-AST of Section 3.1 is this tree; `poly` derives the PV-vector
+//! ingredients (trip counts, dependences) from it, and `model` instantiates
+//! the latency formula template over it.
+
+pub mod build;
+pub mod expr;
+pub mod kernel;
+
+pub use build::KernelBuilder;
+pub use expr::AffineExpr;
+pub use kernel::{Access, Array, ArrayDir, DType, Kernel, Loop, Node, OpKind, Stmt};
+
+/// Identifies a loop within one kernel (dense, assigned in pre-order by
+/// [`Kernel::finalize`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LoopId(pub u32);
+
+/// Identifies a statement within one kernel (dense, pre-order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StmtId(pub u32);
+
+/// Identifies an array within one kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ArrayId(pub u32);
+
+impl std::fmt::Display for LoopId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}", self.0)
+    }
+}
+impl std::fmt::Display for StmtId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "S{}", self.0)
+    }
+}
+impl std::fmt::Display for ArrayId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "A{}", self.0)
+    }
+}

@@ -1,0 +1,13 @@
+//! `nlp-dse` — leader entry point.
+//!
+//! The binary is self-contained after `make artifacts`: it loads the AOT
+//! XLA artifacts directly (python never runs at DSE time) and drives the
+//! campaign coordinator, the NLP solver, the simulated Merlin/Vitis
+//! toolchain, and the report generators. Run `nlp-dse help` for usage.
+
+fn main() {
+    if let Err(e) = nlp_dse::cli::main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,630 @@
+//! Dense batched encoding of the lower-bound model — the ABI shared by the
+//! Rust reference evaluator, the pure-jnp oracle (`kernels/ref.py`), the
+//! Pallas kernel (`kernels/lat_bound.py`), and the AOT artifact executed by
+//! `runtime`.
+//!
+//! A design is flattened into up to [`Abi::UNITS`] *units*. Each unit is
+//! either a statement's contribution, a pipeline's `II×(TC/UF−1)` ramp, or
+//! a memory-transfer term; every unit carries up to [`Abi::LOOPS`] loop rows
+//! describing the factors that scale it:
+//!
+//! ```text
+//! above   = Π rows [above_par: tc/uf] × Π rows [above_seq: tc]
+//! tree    = Π rows [under_red: (tc/uf) × max(1, ceil(log2 uf))]
+//! lat_u   = above × (il_base + il_red × tree + ii × (pipe_tc/pipe_uf − 1))
+//! mcu     = Π rows uf
+//! dsp_u   = dsp_base × mcu / max(ii_share, 1)
+//!
+//! latency = Σ_{w_sum=1} lat_u  +  max_{w_sum=0} lat_u
+//! dsp     = max_u dsp_u
+//! ```
+//!
+//! The encoding **under-approximates** the precise recursive model in two
+//! documented places (independent-component maxing, DSP maxing across
+//! units) — both keep the result a valid *lower bound*, which is the only
+//! property bulk pruning needs. `eval_features` must agree with the XLA
+//! artifact to 1e-6 relative (tested in `integration_runtime.rs`), and stay
+//! ≤ the precise `eval::evaluate` (property-tested).
+
+use crate::hls::Device;
+use crate::ir::{Kernel, Node, StmtId};
+use crate::poly::Analysis;
+use crate::pragma::Design;
+
+/// ABI constants — must match `python/compile/kernels/lat_bound.py`.
+pub struct Abi;
+
+impl Abi {
+    pub const UNITS: usize = 16;
+    pub const LOOPS: usize = 8;
+    /// per-loop features: tc, uf, above_par, above_seq, under_red, valid
+    pub const F: usize = 6;
+    /// per-unit scalars: il_base, il_red, ii, pipe_tc, pipe_uf, dsp_base,
+    /// w_sum, valid
+    pub const G: usize = 8;
+    /// Flattened lengths per design.
+    pub const LOOPS_LEN: usize = Self::UNITS * Self::LOOPS * Self::F;
+    pub const UNITS_LEN: usize = Self::UNITS * Self::G;
+}
+
+/// One encoded design (flattened row-major: `[UNITS][LOOPS][F]` and
+/// `[UNITS][G]`).
+#[derive(Clone, Debug)]
+pub struct DesignFeatures {
+    pub loops: Vec<f64>,
+    pub units: Vec<f64>,
+}
+
+impl DesignFeatures {
+    pub fn zeros() -> DesignFeatures {
+        DesignFeatures {
+            loops: vec![0.0; Abi::LOOPS_LEN],
+            units: vec![0.0; Abi::UNITS_LEN],
+        }
+    }
+
+    #[inline]
+    fn loop_row(&mut self, u: usize, l: usize) -> &mut [f64] {
+        let base = (u * Abi::LOOPS + l) * Abi::F;
+        &mut self.loops[base..base + Abi::F]
+    }
+    #[inline]
+    fn unit_row(&mut self, u: usize) -> &mut [f64] {
+        let base = u * Abi::G;
+        &mut self.units[base..base + Abi::G]
+    }
+}
+
+struct Encoder<'a> {
+    k: &'a Kernel,
+    a: &'a Analysis,
+    dev: &'a Device,
+    d: &'a Design,
+    out: DesignFeatures,
+    next_unit: usize,
+    overflow: bool,
+}
+
+/// Loop-row description accumulated while walking down the tree.
+#[derive(Clone, Copy)]
+struct RowDesc {
+    tc: f64,
+    uf: f64,
+    above_par: bool,
+    above_seq: bool,
+    under_red: bool,
+}
+
+impl<'a> Encoder<'a> {
+    fn emit_unit(
+        &mut self,
+        rows: &[RowDesc],
+        il_base: f64,
+        il_red: f64,
+        ii: f64,
+        pipe_tc: f64,
+        pipe_uf: f64,
+        dsp_base: f64,
+        w_sum: bool,
+    ) {
+        if self.next_unit >= Abi::UNITS {
+            self.overflow = true;
+            return;
+        }
+        let u = self.next_unit;
+        self.next_unit += 1;
+        for (li, r) in rows.iter().take(Abi::LOOPS).enumerate() {
+            let row = self.out.loop_row(u, li);
+            row[0] = r.tc;
+            row[1] = r.uf.max(1.0);
+            row[2] = r.above_par as u8 as f64;
+            row[3] = r.above_seq as u8 as f64;
+            row[4] = r.under_red as u8 as f64;
+            row[5] = 1.0;
+        }
+        if rows.len() > Abi::LOOPS {
+            self.overflow = true;
+        }
+        let unit = self.out.unit_row(u);
+        unit[0] = il_base;
+        unit[1] = il_red;
+        unit[2] = ii;
+        unit[3] = pipe_tc.max(1.0);
+        unit[4] = pipe_uf.max(1.0);
+        unit[5] = dsp_base;
+        unit[6] = w_sum as u8 as f64;
+        unit[7] = 1.0;
+    }
+}
+
+/// Encode one design. Returns `None` on overflow (more units/loops than the
+/// ABI can carry — callers fall back to the precise Rust evaluator).
+pub fn encode_design(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    d: &Design,
+) -> Option<DesignFeatures> {
+    let mut enc = Encoder {
+        k,
+        a,
+        dev,
+        d,
+        out: DesignFeatures::zeros(),
+        next_unit: 0,
+        overflow: false,
+    };
+
+    // memory-transfer unit (Theorem 4.14 lower bound: max over parallel
+    // input transfers + max over output transfers)
+    let mut in_max = 0f64;
+    let mut out_max = 0f64;
+    for arr in &k.arrays {
+        let cyc = dev.transfer_cycles(arr.footprint_bytes(k.dtype));
+        if arr.dir.is_live_in() {
+            in_max = in_max.max(cyc);
+        }
+        if arr.dir.is_live_out() {
+            out_max = out_max.max(cyc);
+        }
+    }
+    enc.emit_unit(&[], in_max + out_max, 0.0, 0.0, 1.0, 1.0, 0.0, true);
+
+    // walk the tree
+    let roots: Vec<&Node> = k.roots.iter().collect();
+    walk_scope(&mut enc, &roots, &mut Vec::new(), true);
+
+    if enc.overflow {
+        None
+    } else {
+        Some(enc.out)
+    }
+}
+
+/// Walk a sibling scope above any pipeline. `above` is the stack of loop
+/// rows accumulated so far. Once a scope splits into > 1 independent
+/// component, everything underneath is routed to the max set (`w_sum = 0`):
+/// `max` over individual units under-approximates `max` over component
+/// sums, which keeps the result a valid lower bound.
+fn walk_scope(enc: &mut Encoder, nodes: &[&Node], above: &mut Vec<RowDesc>, parent_sum: bool) {
+    // component analysis over siblings
+    let stmt_sets: Vec<Vec<StmtId>> = nodes.iter().map(|n| collect_stmts(n)).collect();
+    let n = nodes.len();
+    let mut comp: Vec<usize> = (0..n).collect();
+    fn find(c: &mut Vec<usize>, i: usize) -> usize {
+        if c[i] != i {
+            let r = find(c, c[i]);
+            c[i] = r;
+        }
+        c[i]
+    }
+    for i in 0..n {
+        for j in i + 1..n {
+            let dep = stmt_sets[i].iter().any(|&s1| {
+                stmt_sets[j]
+                    .iter()
+                    .any(|&s2| enc.a.deps.stmts_dependent(s1, s2))
+            });
+            if dep {
+                let (ri, rj) = (find(&mut comp, i), find(&mut comp, j));
+                if ri != rj {
+                    comp[ri] = rj;
+                }
+            }
+        }
+    }
+    let n_comps = {
+        let mut roots: Vec<usize> = (0..n).map(|i| find(&mut comp, i)).collect();
+        roots.sort_unstable();
+        roots.dedup();
+        roots.len()
+    };
+    let w_sum = parent_sum && n_comps <= 1;
+
+    for node in nodes {
+        match node {
+            Node::Stmt(s) => {
+                // statement directly in an above-pipe scope: its own chain,
+                // replicated over the above iteration factors
+                let il = stmt_chain(enc, s.id);
+                let dsp = stmt_dsp(enc, s.id);
+                enc.emit_unit(above, il, 0.0, 0.0, 1.0, 1.0, dsp, w_sum);
+            }
+            Node::Loop(l) => {
+                let p = enc.d.get(l.id);
+                let info = enc.a.deps.loop_info(l.id).clone();
+                let tc = enc.a.tc(l.id).avg.max(1.0);
+                let innermost = enc.k.loop_meta(l.id).innermost;
+                if p.pipeline || innermost {
+                    emit_pipeline(enc, l.id, &l.body, above, w_sum);
+                } else {
+                    let row = if info.reduction || info.serializing {
+                        RowDesc {
+                            tc,
+                            uf: 1.0,
+                            above_par: false,
+                            above_seq: true,
+                            under_red: false,
+                        }
+                    } else {
+                        RowDesc {
+                            tc,
+                            uf: (p.uf.max(1) as f64).min(tc),
+                            above_par: true,
+                            above_seq: false,
+                            under_red: false,
+                        }
+                    };
+                    above.push(row);
+                    let body: Vec<&Node> = l.body.iter().collect();
+                    walk_scope(enc, &body, above, w_sum);
+                    above.pop();
+                }
+            }
+        }
+    }
+}
+
+/// Emit the units of one pipelined region: one unit per statement (IL
+/// contributions with tree factors) plus one ramp unit for `II×(TC/UF−1)`.
+fn emit_pipeline(
+    enc: &mut Encoder,
+    lp: crate::ir::LoopId,
+    body: &[Node],
+    above: &[RowDesc],
+    w_sum: bool,
+) {
+    let p = enc.d.get(lp);
+    let tc = enc.a.tc(lp).avg.max(1.0);
+    let uf = (p.uf.max(1) as f64).min(tc);
+    let ii = pipeline_ii(enc, lp);
+
+    // collect stmts under lp with their under-pipe reduction/serial rows
+    struct Item {
+        sid: StmtId,
+        rows: Vec<RowDesc>,
+    }
+    let mut items: Vec<Item> = Vec::new();
+    fn walk(enc: &Encoder, n: &Node, rows: Vec<RowDesc>, items: &mut Vec<Item>) {
+        match n {
+            Node::Stmt(s) => items.push(Item { sid: s.id, rows }),
+            Node::Loop(l) => {
+                let info = enc.a.deps.loop_info(l.id);
+                let tc = enc.a.tc(l.id).avg.max(1.0);
+                let uf = (enc.d.get(l.id).uf.max(1) as f64).min(tc);
+                let mut rows = rows.clone();
+                if info.reduction {
+                    rows.push(RowDesc {
+                        tc,
+                        uf,
+                        above_par: false,
+                        above_seq: false,
+                        under_red: true,
+                    });
+                } else if info.serializing {
+                    rows.push(RowDesc {
+                        tc,
+                        uf: 1.0,
+                        above_par: false,
+                        above_seq: true, // serial factor inside IL
+                        under_red: false,
+                    });
+                } else {
+                    // parallel under-pipe loop: the unrolled part is pure
+                    // replication (mcu), the remainder `tc/uf` iterates
+                    // serially inside the body — an above_par row captures
+                    // both (factor tc/uf, mcu uf); fully unrolled ⇒ 1
+                    rows.push(RowDesc {
+                        tc,
+                        uf,
+                        above_par: true,
+                        above_seq: false,
+                        under_red: false,
+                    });
+                }
+                for c in &l.body {
+                    walk(enc, c, rows.clone(), items);
+                }
+            }
+        }
+    }
+    for n in body {
+        walk(enc, n, Vec::new(), &mut items);
+    }
+
+    // independence among the collected statements: when the pipeline body
+    // splits into > 1 dependence component the per-statement IL terms
+    // overlap (max), so route them to the max set — the safe-under
+    // approximation again
+    let mut stmt_w_sum = w_sum;
+    {
+        let n = items.len();
+        let mut comp: Vec<usize> = (0..n).collect();
+        fn find(c: &mut Vec<usize>, i: usize) -> usize {
+            if c[i] != i {
+                let r = find(c, c[i]);
+                c[i] = r;
+            }
+            c[i]
+        }
+        for i in 0..n {
+            for j in i + 1..n {
+                if enc.a.deps.stmts_dependent(items[i].sid, items[j].sid) {
+                    let (ri, rj) = (find(&mut comp, i), find(&mut comp, j));
+                    if ri != rj {
+                        comp[ri] = rj;
+                    }
+                }
+            }
+        }
+        let mut roots: Vec<usize> = (0..n).map(|i| find(&mut comp, i)).collect();
+        roots.sort_unstable();
+        roots.dedup();
+        if roots.len() > 1 {
+            stmt_w_sum = false;
+        }
+    }
+
+    // per-stmt units
+    for it in &items {
+        let s = enc.k.stmt(it.sid);
+        let red_op = enc.a.deps.reductions_of(it.sid).map(|(_, op)| op).next();
+        let has_tree = it.rows.iter().any(|r| r.under_red);
+        let (il_base, il_red) = if has_tree {
+            // split chain: reduction op charged per tree level
+            let mut base = 0f64;
+            let mut red = 0f64;
+            let mut charged = false;
+            for &op in &s.chain {
+                let c = enc.dev.op_costs(enc.k.dtype, op).latency as f64;
+                if Some(op) == red_op && !charged {
+                    red = c;
+                    charged = true;
+                } else {
+                    base += c;
+                }
+            }
+            if !charged {
+                red = base.max(1.0);
+                base = 0.0;
+            }
+            (base, red)
+        } else {
+            (stmt_chain(enc, it.sid), 0.0)
+        };
+        let mut rows = above.to_vec();
+        rows.extend(it.rows.iter().copied());
+        // the pipelined loop's own partial unroll replicates units too
+        if uf > 1.0 {
+            rows.push(RowDesc {
+                tc,
+                uf,
+                above_par: false,
+                above_seq: false,
+                under_red: false,
+            });
+        }
+        let dsp = stmt_dsp(enc, it.sid);
+        // stmt units carry the pipeline II for DSP sharing (Eq 11's /II);
+        // with pipe_tc = pipe_uf = 1 the ramp term stays zero, so latency
+        // is unaffected
+        enc.emit_unit(
+            &rows,
+            il_base.max(if il_red > 0.0 { 0.0 } else { 1.0 }),
+            il_red,
+            ii,
+            1.0,
+            1.0,
+            dsp,
+            stmt_w_sum,
+        );
+    }
+
+    // ramp unit: II × (TC/UF − 1), scaled by the above factors; its ii
+    // participates in DSP sharing via its own dsp_base = 0
+    enc.emit_unit(above, 0.0, 0.0, ii, tc, uf, 0.0, w_sum);
+}
+
+fn collect_stmts(n: &Node) -> Vec<StmtId> {
+    match n {
+        Node::Stmt(s) => vec![s.id],
+        Node::Loop(l) => l.body.iter().flat_map(collect_stmts).collect(),
+    }
+}
+
+fn stmt_chain(enc: &Encoder, sid: StmtId) -> f64 {
+    let s = enc.k.stmt(sid);
+    if s.chain.is_empty() {
+        return 1.0;
+    }
+    s.chain
+        .iter()
+        .map(|&op| enc.dev.op_costs(enc.k.dtype, op).latency as f64)
+        .sum::<f64>()
+        .max(1.0)
+}
+
+fn stmt_dsp(enc: &Encoder, sid: StmtId) -> f64 {
+    enc.k
+        .stmt(sid)
+        .ops
+        .iter()
+        .map(|&(op, c)| c as f64 * enc.dev.op_costs(enc.k.dtype, op).dsp as f64)
+        .sum()
+}
+
+fn pipeline_ii(enc: &Encoder, lp: crate::ir::LoopId) -> f64 {
+    let info = enc.a.deps.loop_info(lp);
+    let mut ii = 1.0f64;
+    if info.reduction {
+        if let Some(op) = info.reduction_op {
+            ii = ii.max(enc.dev.op_costs(enc.k.dtype, op).latency as f64);
+        }
+    }
+    if info.serializing {
+        let d = info.min_distance.unwrap_or(1).max(1) as f64;
+        let max_chain = enc
+            .k
+            .loop_meta(lp)
+            .stmts
+            .iter()
+            .map(|&s| {
+                let st = enc.k.stmt(s);
+                if st.chain.is_empty() {
+                    1.0
+                } else {
+                    st.chain
+                        .iter()
+                        .map(|&op| enc.dev.op_costs(enc.k.dtype, op).latency as f64)
+                        .sum()
+                }
+            })
+            .fold(1.0f64, f64::max);
+        ii = ii.max((max_chain / d).ceil());
+    }
+    ii
+}
+
+/// Reference evaluation of the feature formula — semantically identical to
+/// the Pallas kernel / jnp oracle; the artifact's outputs must match this
+/// to 1e-6 relative.
+pub fn eval_features(f: &DesignFeatures) -> (f64, f64) {
+    let mut lat_sum = 0f64;
+    let mut lat_max = 0f64;
+    let mut dsp_max = 0f64;
+    for u in 0..Abi::UNITS {
+        let unit = &f.units[u * Abi::G..(u + 1) * Abi::G];
+        if unit[7] == 0.0 {
+            continue;
+        }
+        let (il_base, il_red, ii, pipe_tc, pipe_uf, dsp_base, w_sum) = (
+            unit[0], unit[1], unit[2], unit[3], unit[4], unit[5], unit[6],
+        );
+        let mut above = 1f64;
+        let mut tree = 1f64;
+        let mut mcu = 1f64;
+        for l in 0..Abi::LOOPS {
+            let row = &f.loops[(u * Abi::LOOPS + l) * Abi::F..(u * Abi::LOOPS + l + 1) * Abi::F];
+            if row[5] == 0.0 {
+                continue;
+            }
+            let (tc, uf) = (row[0], row[1].max(1.0));
+            if row[2] != 0.0 {
+                above *= tc / uf;
+            }
+            if row[3] != 0.0 {
+                above *= tc;
+            }
+            if row[4] != 0.0 {
+                tree *= (tc / uf) * (uf.log2().ceil()).max(1.0);
+            }
+            mcu *= uf;
+        }
+        let il = il_base + il_red * tree;
+        let lat = above * (il + ii * (pipe_tc / pipe_uf - 1.0).max(0.0));
+        if w_sum != 0.0 {
+            lat_sum += lat;
+        } else {
+            lat_max = lat_max.max(lat);
+        }
+        dsp_max = dsp_max.max(dsp_base * mcu / ii.max(1.0));
+    }
+    (lat_sum + lat_max, dsp_max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::ir::{DType, LoopId};
+    
+
+    fn setup(name: &str) -> (Kernel, Analysis, Device) {
+        let k = benchmarks::build(name, benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        (k, a, Device::u200())
+    }
+
+    #[test]
+    fn encodes_all_small_benchmarks() {
+        for name in benchmarks::ALL {
+            if name == "cnn" {
+                continue; // encoded at its single (medium) size below
+            }
+            let (k, a, dev) = setup(name);
+            let d = Design::empty(&k);
+            let f = encode_design(&k, &a, &dev, &d);
+            assert!(f.is_some(), "{name} must fit the ABI");
+        }
+        let k = benchmarks::build("cnn", benchmarks::Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let f = encode_design(&k, &a, &Device::u200(), &Design::empty(&k));
+        assert!(f.is_some(), "cnn must fit the ABI");
+    }
+
+    #[test]
+    fn features_lower_bound_vs_precise_model() {
+        // the encoded formula must stay ≤ the precise recursive model
+        // (it under-approximates at independent components)
+        for name in ["gemm", "2mm", "bicg", "atax", "mvt", "gesummv"] {
+            let (k, a, dev) = setup(name);
+            for uf in [1u64, 2] {
+                let mut d = Design::empty(&k);
+                if uf > 1 {
+                    d.get_mut(LoopId(0)).uf = uf;
+                }
+                let f = encode_design(&k, &a, &dev, &d).unwrap();
+                let (lat, _dsp) = eval_features(&f);
+                let precise = crate::model::evaluate(&k, &a, &dev, &d);
+                assert!(
+                    lat <= precise.total_cycles * 1.02 + 1.0,
+                    "{name} uf={uf}: features {lat} > precise {}",
+                    precise.total_cycles
+                );
+                // and not absurdly loose
+                assert!(
+                    lat >= precise.total_cycles * 0.2,
+                    "{name} uf={uf}: features {lat} ≪ precise {}",
+                    precise.total_cycles
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ramp_unit_matches_pipeline_formula() {
+        let (k, a, dev) = setup("gemm");
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(3)).pipeline = true;
+        d.get_mut(LoopId(3)).uf = 2;
+        let f = encode_design(&k, &a, &dev, &d).unwrap();
+        let (lat, _) = eval_features(&f);
+        let precise = crate::model::evaluate(&k, &a, &dev, &d);
+        let rel = (lat - precise.total_cycles).abs() / precise.total_cycles;
+        assert!(rel < 0.05, "features {lat} vs precise {}", precise.total_cycles);
+    }
+
+    #[test]
+    fn dsp_scales_with_unroll() {
+        let (k, a, dev) = setup("gemm");
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(3)).pipeline = true;
+        let f1 = encode_design(&k, &a, &dev, &d).unwrap();
+        let (_, dsp1) = eval_features(&f1);
+        d.get_mut(LoopId(3)).uf = 10;
+        let f10 = encode_design(&k, &a, &dev, &d).unwrap();
+        let (_, dsp10) = eval_features(&f10);
+        assert!(dsp10 >= dsp1 * 8.0, "dsp {dsp1} -> {dsp10}");
+    }
+
+    #[test]
+    fn design_pragma_change_changes_encoding() {
+        let (k, a, dev) = setup("gemm");
+        let d1 = Design::empty(&k);
+        let mut d2 = Design::empty(&k);
+        d2.get_mut(LoopId(0)).uf = 4;
+        let f1 = encode_design(&k, &a, &dev, &d1).unwrap();
+        let f2 = encode_design(&k, &a, &dev, &d2).unwrap();
+        assert_ne!(f1.loops, f2.loops);
+    }
+}

@@ -1,0 +1,24 @@
+//! The analytical latency + resource **lower bound** model (Section 4,
+//! Appendix B), parameterized by the pragma configuration.
+//!
+//! * [`eval`] — the composition template of Section 4.1 (`I`/`C`/`SL`
+//!   operators) instantiated over the kernel's summary AST: pipelining
+//!   (Theorems 4.8/4.9), partial/full unrolling (4.5–4.7), coarse-grained
+//!   replication (4.11), sequential loops (4.10), tree reductions under
+//!   unsafe-math (4.7), DSP accounting (4.12), memory transfers
+//!   (4.13/4.14), and the final composition (4.15/4.16).
+//! * [`features`] — the dense batched encoding of the same computation for
+//!   the AOT-compiled XLA evaluator (see `python/compile/kernels/`), plus
+//!   the pure-Rust reference evaluation of that encoding.
+//!
+//! The invariant maintained throughout (and property-tested in
+//! `rust/tests/property_invariants.rs`): **for any legal configuration the
+//! model's latency never exceeds the HLS oracle's measured latency when the
+//! pragmas are applied as requested** — the paper's Theorem B.21 property
+//! that makes DSE pruning safe.
+
+pub mod eval;
+pub mod features;
+
+pub use eval::{evaluate, nest_latencies, top_scope_sum_combine, ModelResult, NestBreakdown};
+pub use features::{encode_design, eval_features, Abi, DesignFeatures};

@@ -1,0 +1,234 @@
+//! NLP formulation: variables, constants and constraints (Section 5).
+//!
+//! Variables (per loop `l`): `loop_l_UF`, `loop_l_tile`, `loop_l_pip`
+//! (cache booleans are resolved automatically by Merlin in our pipeline).
+//! Constants (from `poly::Analysis`): trip counts, II ingredients,
+//! iteration latencies, DSP per op, dependence distances.
+//!
+//! The constraint set, numbered as in the paper:
+//!
+//! | Eq | Meaning | Where enforced |
+//! |----|---------|----------------|
+//! | 1  | `1 ≤ UF_l ≤ TC_l` | candidate generation |
+//! | 2  | `1 ≤ tile_l ≤ TC_l` | candidate generation |
+//! | 3  | `pip_l ∈ {0,1}` | `PipelineConfig` |
+//! | 4  | cache booleans | Merlin-auto |
+//! | 5  | ≤ 1 pipelined loop per statement | antichain enumeration |
+//! | 6  | `TC_l mod UF_l == 0` | divisor sets |
+//! | 7  | `TC_l mod tile_l == 0` | divisor sets |
+//! | 8  | `UF_l ≤ d_l` when the carried distance `d_l > 1` | `Space::ufs` |
+//! | 9  | fine-grained mode: `UF = 1` above the pipeline | candidate generation |
+//! | 10 | `Π UF ≤ MAX_PARTITIONING` per statement | [`NlpProblem::check`] |
+//! | 11 | optimistic DSP ≤ available | [`NlpProblem::check`] |
+//! | 12 | cached footprints ≤ on-chip memory | [`NlpProblem::check`] |
+//! | 13 | per-array cross-dim partitioning ≤ cap | [`NlpProblem::check`] |
+//! | 14 | cache only above the pipeline | Merlin-auto |
+//! | 15 | full unroll under the pipeline | `space::materialize` |
+
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::model;
+use crate::poly::Analysis;
+use crate::pragma::{Design, Space};
+
+/// One NLP instance: a kernel + the sub-space restrictions Algorithm 1
+/// sweeps (max array partitioning, parallelism mode).
+pub struct NlpProblem<'k> {
+    pub kernel: &'k Kernel,
+    pub analysis: &'k Analysis,
+    pub device: &'k Device,
+    pub space: Space<'k>,
+    /// `MAX_PARTITIONING` for this DSE step (`u64::MAX` = ∞ rung).
+    pub max_partitioning: u64,
+    /// Eq 9: restrict to fine-grained parallelism (UF = 1 above pipeline).
+    pub fine_grained_only: bool,
+    /// Loops whose coarse-grained replication Merlin refused in an earlier
+    /// synthesis of this DSE run (Section 7.5: the DSE detects pragmas not
+    /// applied and restricts the subspace accordingly).
+    pub coarse_banned: std::collections::BTreeSet<u32>,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Eq 10/13: partitioning cap exceeded (array name, required, cap).
+    Partitioning(String, u64, u64),
+    /// Eq 11: DSP over budget (needed, available).
+    Dsp(u64, u64),
+    /// Eq 12: on-chip memory over budget (needed bytes, available).
+    OnChip(u64, u64),
+    /// Eq 6: UF does not divide TC (loop index, uf, tc).
+    Divisibility(u32, u64, u64),
+    /// Eq 8: UF above the carried-dependence cap.
+    Dependence(u32, u64, u64),
+}
+
+impl<'k> NlpProblem<'k> {
+    pub fn new(
+        kernel: &'k Kernel,
+        analysis: &'k Analysis,
+        device: &'k Device,
+        max_partitioning: u64,
+        fine_grained_only: bool,
+    ) -> NlpProblem<'k> {
+        NlpProblem {
+            kernel,
+            analysis,
+            device,
+            space: Space::new(kernel, analysis),
+            max_partitioning,
+            fine_grained_only,
+            coarse_banned: Default::default(),
+        }
+    }
+
+    /// Effective partitioning cap: min(device limit, DSE rung).
+    pub fn partition_cap(&self) -> u64 {
+        self.device.max_array_partition.min(self.max_partitioning)
+    }
+
+    /// Check every formulation constraint on a complete design; returns the
+    /// list of violations (empty = feasible point of the NLP).
+    pub fn check(&self, d: &Design) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let k = self.kernel;
+
+        // Eq 6 + Eq 8 per loop
+        for (i, p) in d.pragmas.iter().enumerate() {
+            let tc = &self.analysis.tcs[i];
+            if p.uf > 1 {
+                if !tc.is_constant() || tc.max % p.uf != 0 {
+                    out.push(Violation::Divisibility(i as u32, p.uf, tc.max));
+                }
+                let info = &self.analysis.deps.per_loop[i];
+                if let Some(dd) = info.min_distance {
+                    if dd > 1 && p.uf > dd {
+                        out.push(Violation::Dependence(i as u32, p.uf, dd));
+                    }
+                }
+            }
+        }
+
+        // Eq 10/13 partitioning per array
+        let cap = self.partition_cap();
+        for arr in &k.arrays {
+            let part = d.partitioning(k, arr.id);
+            if part > cap {
+                out.push(Violation::Partitioning(arr.name.clone(), part, cap));
+            }
+        }
+
+        // Eq 11 + Eq 12 via the model
+        let r = model::evaluate(k, self.analysis, self.device, d);
+        if r.dsp > self.device.dsp_total as f64 {
+            out.push(Violation::Dsp(r.dsp as u64, self.device.dsp_total));
+        }
+        if r.onchip_bytes > self.device.onchip_bytes as f64 {
+            out.push(Violation::OnChip(
+                r.onchip_bytes as u64,
+                self.device.onchip_bytes,
+            ));
+        }
+        out
+    }
+
+    /// The Section 5.4 objective: the latency lower bound of the design.
+    pub fn objective(&self, d: &Design) -> f64 {
+        model::evaluate(self.kernel, self.analysis, self.device, d).total_cycles
+    }
+
+    /// Combined feasibility + objective with a single model evaluation —
+    /// the solver's leaf hot path (§Perf: halves per-leaf cost vs
+    /// `check` + `objective`). Returns `None` when any constraint is
+    /// violated.
+    pub fn check_objective(&self, d: &Design) -> Option<f64> {
+        // cheap structural constraints first (Eqs 6/8/10/13)
+        for (i, p) in d.pragmas.iter().enumerate() {
+            if p.uf > 1 {
+                let tc = &self.analysis.tcs[i];
+                if !tc.is_constant() || tc.max % p.uf != 0 {
+                    return None;
+                }
+                let info = &self.analysis.deps.per_loop[i];
+                if let Some(dd) = info.min_distance {
+                    if dd > 1 && p.uf > dd {
+                        return None;
+                    }
+                }
+            }
+        }
+        let cap = self.partition_cap();
+        for arr in &self.kernel.arrays {
+            if d.partitioning(self.kernel, arr.id) > cap {
+                return None;
+            }
+        }
+        let r = model::evaluate(self.kernel, self.analysis, self.device, d);
+        if r.dsp > self.device.dsp_total as f64
+            || r.onchip_bytes > self.device.onchip_bytes as f64
+        {
+            return None;
+        }
+        Some(r.total_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::{DType, LoopId};
+
+    fn problem<'a>(k: &'a Kernel, a: &'a Analysis, dev: &'a Device) -> NlpProblem<'a> {
+        NlpProblem::new(k, a, dev, u64::MAX, false)
+    }
+
+    #[test]
+    fn empty_design_feasible() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = problem(&k, &a, &dev);
+        assert!(p.check(&Design::empty(&k)).is_empty());
+    }
+
+    #[test]
+    fn non_divisor_uf_flagged() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = problem(&k, &a, &dev);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(0)).uf = 7; // 60 % 7 != 0
+        let v = p.check(&d);
+        assert!(v
+            .iter()
+            .any(|v| matches!(v, Violation::Divisibility(0, 7, 60))));
+    }
+
+    #[test]
+    fn partition_cap_flagged() {
+        let k = benchmarks::build("gemm", Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let mut p = problem(&k, &a, &dev);
+        p.max_partitioning = 8;
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(3)).uf = 20; // j1 → partitioning 20 > 8
+        let v = p.check(&d);
+        assert!(v.iter().any(|v| matches!(v, Violation::Partitioning(..))));
+    }
+
+    #[test]
+    fn dsp_violation_flagged() {
+        let k = benchmarks::build("gemm", Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = problem(&k, &a, &dev);
+        let mut d = Design::empty(&k);
+        // 200×220 replication of a 3-dsp statement vastly exceeds 6840
+        d.get_mut(LoopId(0)).uf = 200;
+        d.get_mut(LoopId(3)).uf = 220;
+        let v = p.check(&d);
+        assert!(v.iter().any(|v| matches!(v, Violation::Dsp(..))));
+    }
+}

@@ -1,0 +1,18 @@
+//! The Non-Linear Program of Section 5 and its solver.
+//!
+//! * [`formulation`] — variables, constants, and the constraint set
+//!   (Eqs 1–15) as checkable predicates; the objective is the Section 5.4
+//!   function, computed by `model::evaluate`.
+//! * [`solver`] — the specialized global optimizer standing in for AMPL +
+//!   BARON: per-pipeline-configuration enumeration over the divisor
+//!   lattice with branch-and-bound across loop nests, admissible
+//!   latency bounds, monotone constraint propagation (partitioning/DSP),
+//!   and a deterministic time budget. On timeout it returns the best
+//!   incumbent plus a valid lower bound, exactly as BARON's anytime
+//!   behaviour (Table 7).
+
+pub mod formulation;
+pub mod solver;
+
+pub use formulation::{NlpProblem, Violation};
+pub use solver::{solve, BatchEvaluator, RustFeatureEvaluator, SolveResult, SolverStats};

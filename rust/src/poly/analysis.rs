@@ -1,0 +1,111 @@
+//! One-stop static analysis bundle: everything the model / NLP / simulators
+//! need about a kernel, computed once.
+
+use super::deps::{self, DepAnalysis};
+use super::footprint;
+use super::tripcount::{self, TripCount};
+use crate::ir::{Kernel, LoopId, OpKind, StmtId};
+use std::collections::BTreeMap;
+
+pub struct Analysis {
+    pub tcs: Vec<TripCount>,
+    pub deps: DepAnalysis,
+    /// Exact iteration count of each statement (product of enclosing
+    /// `TC_avg`, exact for one level of affine-triangular nesting).
+    pub stmt_iters: Vec<f64>,
+    /// Total floating-point operations executed by the kernel.
+    pub total_flops: f64,
+    /// Full-extent footprint per array, bytes.
+    pub array_footprints: BTreeMap<crate::ir::ArrayId, u64>,
+    /// Total kernel footprint, bytes.
+    pub total_footprint: u64,
+}
+
+impl Analysis {
+    pub fn new(k: &Kernel) -> Analysis {
+        let tcs = tripcount::trip_counts(k);
+        let deps = deps::analyze(k);
+        let mut stmt_iters = vec![0f64; k.n_stmts()];
+        let mut total_flops = 0f64;
+        for s in k.stmts() {
+            let iters: f64 = k
+                .stmt_meta(s.id)
+                .nest
+                .iter()
+                .map(|l| tcs[l.0 as usize].avg)
+                .product();
+            stmt_iters[s.id.0 as usize] = iters;
+            total_flops += iters * s.flops() as f64;
+        }
+        let array_footprints = k
+            .arrays
+            .iter()
+            .map(|a| (a.id, a.footprint_bytes(k.dtype)))
+            .collect();
+        let total_footprint = footprint::total_footprint_bytes(k);
+        Analysis {
+            tcs,
+            deps,
+            stmt_iters,
+            total_flops,
+            array_footprints,
+            total_footprint,
+        }
+    }
+
+    pub fn tc(&self, l: LoopId) -> &TripCount {
+        &self.tcs[l.0 as usize]
+    }
+
+    /// Number of `op` operations executed per iteration of statement `s`.
+    pub fn stmt_op_count(&self, k: &Kernel, s: StmtId, op: OpKind) -> u32 {
+        k.stmt(s).op_count(op)
+    }
+
+    /// GF/s for a given total latency in cycles at `freq_hz`.
+    pub fn gflops(&self, cycles: f64, freq_hz: f64) -> f64 {
+        if cycles <= 0.0 {
+            return 0.0;
+        }
+        self.total_flops / (cycles / freq_hz) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::DType;
+
+    #[test]
+    fn gemm_flop_count_exact() {
+        // gemm: S0 C*=beta (1 mul) NI*NJ times; S1 (2 mul + 1 add... our
+        // def: C += alpha*A*B → 2 mul 1 add) NI*NJ*NK times
+        let k = crate::benchmarks::kernel_gemm(200, 220, 240, DType::F32);
+        let a = super::Analysis::new(&k);
+        let expected = 200.0 * 220.0 * (1.0 + 240.0 * 3.0);
+        assert!(
+            (a.total_flops - expected).abs() / expected < 1e-12,
+            "flops {} vs {expected}",
+            a.total_flops
+        );
+    }
+
+    #[test]
+    fn gflops_arithmetic() {
+        let k = crate::benchmarks::kernel_gemm(200, 220, 240, DType::F32);
+        let a = super::Analysis::new(&k);
+        // at 250 MHz, latency == flops cycles → 0.25 GF/s
+        let g = a.gflops(a.total_flops, 250e6);
+        assert!((g - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn triangular_iters_counted() {
+        let k = crate::benchmarks::kernel_lu(40, DType::F32);
+        let a = super::Analysis::new(&k);
+        assert!(a.total_flops > 0.0);
+        // lu has ~2/3 N^3 flops; sanity: between N^3/3 and N^3*1.5
+        let n = 40f64;
+        assert!(a.total_flops > n * n * n / 3.0 * 0.5);
+        assert!(a.total_flops < n * n * n * 3.0);
+    }
+}

@@ -1,0 +1,487 @@
+//! Data-dependence analysis.
+//!
+//! The paper's class restriction (pure polyhedral programs, Section 4.2)
+//! makes dependence analysis *exact*. The IR's access functions are affine
+//! and, across the evaluated suite, fall into forms this specialized tester
+//! resolves exactly:
+//!
+//! * **identical** index functions (e.g. `tmp[i][j] += ...` over `k`) —
+//!   the accumulation pattern: every nest loop *not* referenced by the index
+//!   carries a distance-1 dependence (a *reduction* when no other self
+//!   dependence serializes the statement — Theorem 4.7's tree-reduction
+//!   precondition);
+//! * **constant-shift** index functions, possibly on several dimensions
+//!   (stencils: `A[i][j-1]`, `y[j-2]` — Listing 9, Eq 8's unroll cap): a
+//!   carried dependence of constant distance on each shifted loop;
+//! * **structurally different** index functions (`cov[j][i]` vs
+//!   `cov[i][j]`, `path[i][k]` vs `path[i][j]`): carried by the outermost
+//!   loop whose role differs between the two functions (exact for the
+//!   transposition/propagation patterns in the suite, conservative
+//!   otherwise);
+//! * **cross-statement** dependences: shared loops absent from the index
+//!   functions carry the dependence (the Jacobi/heat time loop).
+//!
+//! Outputs:
+//! * [`LoopDepInfo`] per loop: carried?, min distance, reduction?, op;
+//! * a statement dependence matrix (the `C` operator's sum-vs-max decision,
+//!   Section 4.1);
+//! * the flat dependence list (`ND` column of Table 5).
+
+use crate::ir::{Access, ArrayId, Kernel, LoopId, OpKind, StmtId};
+use std::collections::BTreeSet;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DepKind {
+    Raw,
+    War,
+    Waw,
+}
+
+/// One dependence edge.
+#[derive(Clone, Debug)]
+pub struct Dependence {
+    pub kind: DepKind,
+    pub src: StmtId,
+    pub dst: StmtId,
+    pub array: ArrayId,
+    /// Carrying loop and constant distance when known; `None` for
+    /// loop-independent dependences.
+    pub carried: Option<(LoopId, u64)>,
+}
+
+/// Per-loop summary consumed as NLP constants.
+#[derive(Clone, Debug, Default)]
+pub struct LoopDepInfo {
+    /// Loop carries at least one dependence.
+    pub carried: bool,
+    /// Minimum constant carried distance (`d_l`; Eq 8 caps `UF <= d_l`).
+    pub min_distance: Option<u64>,
+    /// Loop is a reduction loop (associative accumulation; tree-reducible
+    /// under unsafe-math, Theorem 4.7).
+    pub reduction: bool,
+    /// The reduction operation (drives `II >= IL_red` and tree latency).
+    pub reduction_op: Option<OpKind>,
+    /// Loop carries a non-reduction dependence: iterations must execute in
+    /// order (no coarse-grained parallelization, no tree reduction).
+    pub serializing: bool,
+}
+
+impl LoopDepInfo {
+    /// A loop is *parallel* when it carries no dependence at all.
+    pub fn parallel(&self) -> bool {
+        !self.carried
+    }
+}
+
+pub struct DepAnalysis {
+    pub deps: Vec<Dependence>,
+    pub per_loop: Vec<LoopDepInfo>,
+    /// Symmetric statement dependence relation (sum-vs-max composition).
+    pub stmt_dep: Vec<Vec<bool>>,
+    /// `(stmt, loop)` pairs where `loop` is a reduction loop *for that
+    /// statement* (used by the per-statement II bound).
+    pub stmt_reductions: Vec<(StmtId, LoopId, OpKind)>,
+}
+
+impl DepAnalysis {
+    pub fn stmts_dependent(&self, a: StmtId, b: StmtId) -> bool {
+        self.stmt_dep[a.0 as usize][b.0 as usize]
+    }
+    /// Paper's `ND` column: number of polyhedral dependences.
+    pub fn nd(&self) -> usize {
+        self.deps.len()
+    }
+    pub fn loop_info(&self, l: LoopId) -> &LoopDepInfo {
+        &self.per_loop[l.0 as usize]
+    }
+    /// Reduction loops of one statement.
+    pub fn reductions_of(&self, s: StmtId) -> impl Iterator<Item = (LoopId, OpKind)> + '_ {
+        self.stmt_reductions
+            .iter()
+            .filter(move |(sid, ..)| *sid == s)
+            .map(|&(_, l, op)| (l, op))
+    }
+}
+
+/// Relation between two affine access functions to the same array.
+#[derive(Debug, PartialEq)]
+enum IndexRel {
+    /// Identical index functions.
+    Identical,
+    /// Every dimension identical or shifted by a constant on its (single)
+    /// loop axis: a constant distance vector.
+    ShiftVec(Vec<(LoopId, u64)>),
+    /// Provably never equal (distinct constants on a loop-free dimension).
+    Disjoint,
+    /// Structurally different index functions; `involved` is the set of
+    /// loops whose role differs between the two functions.
+    Different { involved: BTreeSet<LoopId> },
+}
+
+fn index_relation(a: &Access, b: &Access) -> IndexRel {
+    debug_assert_eq!(a.array, b.array);
+    let mut shifts: Vec<(LoopId, u64)> = Vec::new();
+    let mut involved: BTreeSet<LoopId> = BTreeSet::new();
+    let mut different = false;
+    for (ea, eb) in a.indices.iter().zip(&b.indices) {
+        let diff = ea.sub(eb);
+        if diff.is_constant() {
+            if diff.constant == 0 {
+                continue; // identical on this dim
+            }
+            match ea.terms.as_slice() {
+                [(l, c)] if diff.constant % *c == 0 => {
+                    shifts.push((*l, (diff.constant / *c).unsigned_abs()));
+                }
+                [] => return IndexRel::Disjoint, // a[0] vs a[1]
+                _ => {
+                    different = true;
+                    involved.extend(ea.loops());
+                }
+            }
+        } else {
+            // different index functions on this dim (a[i][j] vs a[j][i],
+            // path[i][j] vs path[i][k], ...)
+            different = true;
+            let la: BTreeSet<LoopId> = ea.loops().collect();
+            let lb: BTreeSet<LoopId> = eb.loops().collect();
+            involved.extend(la.symmetric_difference(&lb).copied());
+            // transposed pattern: same loop set, different positions
+            if la == lb {
+                involved.extend(la);
+            }
+        }
+    }
+    if different {
+        IndexRel::Different { involved }
+    } else if shifts.is_empty() {
+        IndexRel::Identical
+    } else {
+        IndexRel::ShiftVec(shifts)
+    }
+}
+
+/// Run the analysis.
+pub fn analyze(k: &Kernel) -> DepAnalysis {
+    let n_stmts = k.n_stmts();
+    let mut deps: Vec<Dependence> = Vec::new();
+    let mut per_loop: Vec<LoopDepInfo> = vec![LoopDepInfo::default(); k.n_loops()];
+    let mut stmt_dep = vec![vec![false; n_stmts]; n_stmts];
+    // pending (stmt, loop, op) reduction candidates; demoted to serializing
+    // if the statement turns out to have serializing self-dependences
+    let mut pending_red: Vec<(StmtId, LoopId, OpKind)> = Vec::new();
+    let mut stmt_serializing_self: Vec<bool> = vec![false; n_stmts];
+
+    let stmt_ids: Vec<StmtId> = (0..n_stmts as u32).map(StmtId).collect();
+
+    // -- self dependences ---------------------------------------------------
+    for &s in &stmt_ids {
+        let nest = k.stmt_meta(s).nest.clone();
+        let st = k.stmt(s).clone();
+        for w in &st.writes {
+            for (r, kind) in st
+                .reads
+                .iter()
+                .map(|r| (r, DepKind::Raw))
+                .chain(st.writes.iter().map(|r| (r, DepKind::Waw)))
+            {
+                if w.array != r.array || std::ptr::eq(w, r) {
+                    continue;
+                }
+                match index_relation(w, r) {
+                    IndexRel::Identical => {
+                        // accumulation: nest loops absent from the index
+                        let idx_loops: BTreeSet<LoopId> = w
+                            .indices
+                            .iter()
+                            .flat_map(|e| e.loops().collect::<Vec<_>>())
+                            .collect();
+                        if let Some(op) = reduction_op(&st) {
+                            for &l in &nest {
+                                if !idx_loops.contains(&l) {
+                                    pending_red.push((s, l, op));
+                                    deps.push(Dependence {
+                                        kind,
+                                        src: s,
+                                        dst: s,
+                                        array: w.array,
+                                        carried: Some((l, 1)),
+                                    });
+                                }
+                            }
+                        }
+                        if kind == DepKind::Raw {
+                            stmt_dep[s.0 as usize][s.0 as usize] = true;
+                        }
+                    }
+                    IndexRel::ShiftVec(shifts) => {
+                        // constant distance vector: each shifted loop in the
+                        // nest carries with its distance
+                        for (l, d) in shifts {
+                            if d == 0 || !nest.contains(&l) {
+                                continue;
+                            }
+                            let info = &mut per_loop[l.0 as usize];
+                            info.carried = true;
+                            info.serializing = true;
+                            info.min_distance =
+                                Some(info.min_distance.map_or(d, |x| x.min(d)));
+                            stmt_serializing_self[s.0 as usize] = true;
+                            deps.push(Dependence {
+                                kind,
+                                src: s,
+                                dst: s,
+                                array: w.array,
+                                carried: Some((l, d)),
+                            });
+                        }
+                    }
+                    IndexRel::Different { involved } => {
+                        // carried by the outermost involved loop of the nest
+                        if let Some(&l) = nest.iter().find(|l| involved.contains(l)) {
+                            let info = &mut per_loop[l.0 as usize];
+                            info.carried = true;
+                            info.serializing = true;
+                            stmt_serializing_self[s.0 as usize] = true;
+                            deps.push(Dependence {
+                                kind,
+                                src: s,
+                                dst: s,
+                                array: w.array,
+                                carried: Some((l, 1)),
+                            });
+                        }
+                    }
+                    IndexRel::Disjoint => {}
+                }
+            }
+        }
+    }
+
+    // -- cross-statement dependences ----------------------------------------
+    for (i, &s1) in stmt_ids.iter().enumerate() {
+        for &s2 in stmt_ids.iter().skip(i + 1) {
+            let nest1 = &k.stmt_meta(s1).nest;
+            let nest2 = &k.stmt_meta(s2).nest;
+            let shared: Vec<LoopId> = nest1
+                .iter()
+                .filter(|l| nest2.contains(l))
+                .copied()
+                .collect();
+            for (a1, w1) in k.stmt_accesses(s1) {
+                for (a2, w2) in k.stmt_accesses(s2) {
+                    if a1.array != a2.array || (!w1 && !w2) {
+                        continue;
+                    }
+                    let kind = match (w1, w2) {
+                        (true, true) => DepKind::Waw,
+                        (true, false) => DepKind::Raw,
+                        (false, true) => DepKind::War,
+                        _ => unreachable!(),
+                    };
+                    let rel = index_relation(a1, a2);
+                    if rel == IndexRel::Disjoint {
+                        continue;
+                    }
+                    stmt_dep[s1.0 as usize][s2.0 as usize] = true;
+                    stmt_dep[s2.0 as usize][s1.0 as usize] = true;
+
+                    // shared loops absent from both index functions carry
+                    // the dependence across iterations (jacobi time loop)
+                    let idx_loops: BTreeSet<LoopId> = a1
+                        .indices
+                        .iter()
+                        .chain(a2.indices.iter())
+                        .flat_map(|e| e.loops().collect::<Vec<_>>())
+                        .collect();
+                    let mut carried = None;
+                    for &l in &shared {
+                        if !idx_loops.contains(&l) {
+                            let info = &mut per_loop[l.0 as usize];
+                            info.carried = true;
+                            info.serializing = true;
+                            info.min_distance =
+                                Some(info.min_distance.map_or(1, |x| x.min(1)));
+                            carried = Some((l, 1u64));
+                        }
+                    }
+                    // shifted shared loop (producer/consumer stencil pair)
+                    if let IndexRel::ShiftVec(ref shifts) = rel {
+                        for &(l, d) in shifts {
+                            if d >= 1 && shared.contains(&l) {
+                                let info = &mut per_loop[l.0 as usize];
+                                info.carried = true;
+                                info.serializing = true;
+                                info.min_distance =
+                                    Some(info.min_distance.map_or(d, |x| x.min(d)));
+                                carried = carried.or(Some((l, d)));
+                            }
+                        }
+                    }
+                    deps.push(Dependence {
+                        kind,
+                        src: s1,
+                        dst: s2,
+                        array: a1.array,
+                        carried,
+                    });
+                }
+            }
+        }
+    }
+
+    // -- resolve pending reductions -----------------------------------------
+    let mut stmt_reductions: Vec<(StmtId, LoopId, OpKind)> = Vec::new();
+    for (s, l, op) in pending_red {
+        let info = &mut per_loop[l.0 as usize];
+        info.carried = true;
+        info.min_distance = Some(info.min_distance.map_or(1, |x| x.min(1)));
+        if stmt_serializing_self[s.0 as usize] || info.serializing {
+            // the statement also has order-enforcing self deps (stencil /
+            // floyd-warshall): tree reduction is illegal, iterations are
+            // sequential on this loop
+            info.serializing = true;
+        } else {
+            info.reduction = true;
+            info.reduction_op = Some(info.reduction_op.unwrap_or(op));
+            stmt_reductions.push((s, l, op));
+        }
+    }
+
+    DepAnalysis {
+        deps,
+        per_loop,
+        stmt_dep,
+        stmt_reductions,
+    }
+}
+
+/// The associative op of an accumulation statement (`+`/`-` preferred, then
+/// `*`) — tree-reducible under Vitis unsafe-math (Section 4.2.2).
+fn reduction_op(s: &crate::ir::Stmt) -> Option<OpKind> {
+    if s.op_count(OpKind::Add) > 0 {
+        Some(OpKind::Add)
+    } else if s.op_count(OpKind::Sub) > 0 {
+        Some(OpKind::Sub)
+    } else if s.op_count(OpKind::Mul) > 0 {
+        Some(OpKind::Mul)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDir, DType, KernelBuilder};
+
+    #[test]
+    fn gemm_k_is_reduction() {
+        let k = crate::benchmarks::kernel_gemm(16, 18, 20, DType::F32);
+        let da = analyze(&k);
+        assert!(!da.per_loop[0].carried, "i must be parallel");
+        assert!(!da.per_loop[1].carried, "j must be parallel");
+        assert!(da.per_loop[2].reduction, "k must be a reduction");
+        assert_eq!(da.per_loop[2].reduction_op, Some(OpKind::Add));
+        assert_eq!(da.per_loop[2].min_distance, Some(1));
+        assert!(!da.per_loop[2].serializing);
+        assert!(da.nd() > 0);
+    }
+
+    #[test]
+    fn distance_two_recurrence() {
+        // for j in [2,N): y[j] = y[j-2] + 3  (Listing 9)
+        let mut kb = KernelBuilder::new("rec2", DType::F32);
+        let y = kb.array("y", &[100], ArrayDir::InOut);
+        kb.for_const("j", 2, 100, |kb, j| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(y, &[kb.v(j)])],
+                vec![kb.at(y, &[kb.vp(j, -2)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let da = analyze(&k);
+        assert!(da.per_loop[0].carried);
+        assert_eq!(da.per_loop[0].min_distance, Some(2));
+        assert!(da.per_loop[0].serializing);
+        assert!(!da.per_loop[0].reduction);
+    }
+
+    #[test]
+    fn seidel_fully_serial_no_tree_reduction() {
+        let k = crate::benchmarks::kernel_seidel_2d(10, 40, DType::F32);
+        let da = analyze(&k);
+        // all three loops (t, i, j) carry order-enforcing deps
+        for l in 0..3 {
+            assert!(da.per_loop[l].serializing, "seidel loop {l} must serialize");
+            assert!(!da.per_loop[l].reduction, "seidel loop {l} is not tree-reducible");
+        }
+    }
+
+    #[test]
+    fn jacobi_time_loop_carries_inner_parallel() {
+        let k = crate::benchmarks::kernel_jacobi_1d(10, 40, DType::F32);
+        let da = analyze(&k);
+        assert!(da.per_loop[0].serializing, "t carries");
+        assert!(!da.per_loop[1].carried, "i of S0 is parallel");
+        assert!(!da.per_loop[2].carried, "i of S1 is parallel");
+    }
+
+    #[test]
+    fn floyd_warshall_k_serial_ij_parallel() {
+        let k = crate::benchmarks::kernel_floyd_warshall(30, DType::F32);
+        let da = analyze(&k);
+        assert!(da.per_loop[0].serializing, "k loop must serialize");
+        assert!(!da.per_loop[0].reduction);
+        assert!(!da.per_loop[1].carried, "i parallel for fixed k");
+        assert!(!da.per_loop[2].carried, "j parallel for fixed k");
+    }
+
+    #[test]
+    fn independent_statements_max_compose() {
+        let k = crate::benchmarks::kernel_bicg(30, 34, DType::F32);
+        let da = analyze(&k);
+        // S2 (s[j] +=) and S3 (q[i] +=) touch disjoint outputs but share
+        // reads of A — reads alone do not create a dependence
+        assert!(!da.stmts_dependent(StmtId(2), StmtId(3)));
+    }
+
+    #[test]
+    fn raw_dependence_across_statements() {
+        // 2mm: S1 writes tmp, S3 reads tmp → dependent
+        let k = crate::benchmarks::kernel_2mm(18, 19, 21, 22, DType::F32);
+        let da = analyze(&k);
+        assert!(da.stmts_dependent(StmtId(1), StmtId(3)));
+    }
+
+    #[test]
+    fn atax_outer_loop_is_reduction_for_y() {
+        let k = crate::benchmarks::kernel_atax(19, 21, DType::F32);
+        let da = analyze(&k);
+        // y[j] += A[i][j]*tmp[i]: i carries an additive reduction
+        let has_i_red = da
+            .stmt_reductions
+            .iter()
+            .any(|&(_, l, op)| op == OpKind::Add && da.per_loop[l.0 as usize].reduction);
+        assert!(has_i_red);
+    }
+
+    #[test]
+    fn disjoint_constant_indices() {
+        let mut kb = KernelBuilder::new("dis", DType::F32);
+        let a = kb.array("a", &[4, 100], ArrayDir::InOut);
+        kb.for_const("i", 0, 100, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(a, &[kb.c(0), kb.v(i)])],
+                vec![kb.at(a, &[kb.c(1), kb.v(i)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let da = analyze(&k);
+        assert!(!da.per_loop[0].carried, "rows 0 and 1 are disjoint");
+    }
+}

@@ -1,0 +1,145 @@
+//! Array footprint analysis for memory-transfer bounds (Theorems 4.13/4.14)
+//! and on-chip capacity constraints (Eq 12).
+//!
+//! For a cache pragma inserted above loop `l` (or at kernel top when `l` is
+//! `None`), the footprint of array `a` is the number of distinct elements
+//! touched by the sub-computation underneath, for one iteration of the
+//! enclosing loops. For affine accesses over box-like (or triangular)
+//! domains the element set per dimension is an interval; the product of
+//! interval widths is exact for the PolyBench access patterns (single
+//! iterator ± constant per dimension) and a safe over-approximation
+//! otherwise — over-approximating footprints keeps Eq 12 conservative while
+//! the *transfer* lower bound uses the full-array footprint, which is exact.
+
+use crate::ir::{Kernel, LoopId};
+use std::collections::BTreeMap;
+
+/// Per-array footprint (in elements) of the sub-computation under `level`.
+pub fn footprint_elements(k: &Kernel, level: Option<LoopId>) -> BTreeMap<crate::ir::ArrayId, u64> {
+    // iterator ranges: loops at-or-under `level` vary over their full
+    // range; loops outside are "fixed" → contribute a single point (width 0)
+    let varying: Vec<bool> = match level {
+        None => vec![true; k.n_loops()],
+        Some(root) => {
+            let mut v = vec![false; k.n_loops()];
+            for l in k.nest_loops(root) {
+                v[l.0 as usize] = true;
+            }
+            v
+        }
+    };
+
+    // Absolute iterator value ranges for every loop (outer loops fixed at
+    // their midpoint would under-count; for footprint widths only varying
+    // loops contribute spread, fixed loops contribute 0 spread).
+    let tcs = super::tripcount::trip_counts(k);
+    let ranges = |l: LoopId| -> (i64, i64) {
+        if varying[l.0 as usize] {
+            // conservative absolute range [0, TC_max - 1] shifted by the
+            // loop's absolute lower bound — computing the absolute min is
+            // enough for widths since widths are translation-invariant
+            (0, tcs[l.0 as usize].max.max(1) as i64 - 1)
+        } else {
+            (0, 0)
+        }
+    };
+
+    let mut out: BTreeMap<crate::ir::ArrayId, u64> = BTreeMap::new();
+    let stmt_in_scope = |sid: crate::ir::StmtId| -> bool {
+        match level {
+            None => true,
+            Some(root) => k.stmt_meta(sid).nest.contains(&root),
+        }
+    };
+    for s in k.stmts() {
+        if !stmt_in_scope(s.id) {
+            continue;
+        }
+        for (acc, _w) in k.stmt_accesses(s.id) {
+            let arr = k.array(acc.array);
+            let mut elems: u64 = 1;
+            for (d, idx) in acc.indices.iter().enumerate() {
+                let (lo, hi) = idx.bounds(&ranges);
+                let width = ((hi - lo + 1).max(1) as u64).min(arr.dims[d]);
+                elems = elems.saturating_mul(width);
+            }
+            let e = out.entry(acc.array).or_insert(0);
+            *e = (*e).max(elems);
+        }
+    }
+    out
+}
+
+/// Footprint of array `a` in **bytes** under cache level `level`.
+pub fn footprint_bytes(k: &Kernel, a: crate::ir::ArrayId, level: Option<LoopId>) -> u64 {
+    footprint_elements(k, level)
+        .get(&a)
+        .copied()
+        .unwrap_or(0)
+        * k.dtype.bits() as u64
+        / 8
+}
+
+/// Total kernel footprint in bytes (all arrays, full extent) — the paper's
+/// per-kernel "footprint" figures (e.g. 2mm M ≈ 773 kB).
+pub fn total_footprint_bytes(k: &Kernel) -> u64 {
+    k.arrays
+        .iter()
+        .map(|a| a.footprint_bytes(k.dtype))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::ir::DType;
+
+    #[test]
+    fn full_kernel_footprints_match_paper() {
+        // Paper §2.2: 2mm medium footprint ≈ 773 kB, gemm medium ≈ 579 kB
+        let k2mm = crate::benchmarks::kernel_2mm(180, 190, 210, 220, DType::F32);
+        let fp = super::total_footprint_bytes(&k2mm) as f64 / 1024.0;
+        assert!(
+            (700.0..850.0).contains(&fp),
+            "2mm medium footprint {fp} kB, paper says ~773 kB"
+        );
+
+        let kgemm = crate::benchmarks::kernel_gemm(200, 220, 240, DType::F32);
+        let fp = super::total_footprint_bytes(&kgemm) as f64 / 1024.0;
+        assert!(
+            (520.0..640.0).contains(&fp),
+            "gemm medium footprint {fp} kB, paper says ~579 kB"
+        );
+    }
+
+    #[test]
+    fn sub_nest_footprint_smaller() {
+        let k = crate::benchmarks::kernel_2mm(180, 190, 210, 220, DType::F32);
+        let roots = k.nest_roots();
+        let full = super::footprint_elements(&k, None);
+        let nest0 = super::footprint_elements(&k, Some(roots[0]));
+        // nest 0 touches tmp, A, B (not C, D)
+        assert!(nest0.len() < full.len());
+        for (a, e) in &nest0 {
+            assert!(e <= &full[a]);
+        }
+    }
+
+    #[test]
+    fn footprint_clamped_to_array_dims() {
+        use crate::ir::{ArrayDir, KernelBuilder, OpKind};
+        // access a[i+1] over i in [0, 10) with dim 10 → width clamped to 10
+        let mut kb = KernelBuilder::new("clamp", DType::F32);
+        let a = kb.array("a", &[10], ArrayDir::InOut);
+        kb.for_const("i", 0, 10, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(a, &[kb.v(i)])],
+                vec![kb.at(a, &[kb.vp(i, 1)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let fp = super::footprint_elements(&k, None);
+        assert_eq!(fp[&crate::ir::ArrayId(0)], 10);
+    }
+}

@@ -1,0 +1,23 @@
+//! Exact static analysis over the affine IR — the stand-in for the paper's
+//! PolyOpt-HLS front-end (Section 7.1). Everything the NLP formulation
+//! consumes as *constants* is produced here:
+//!
+//! * [`tripcount`] — per-loop `TC_min` / `TC_max` / `TC_avg`, exact for
+//!   affine (incl. triangular) bounds.
+//! * [`deps`] — data-dependence analysis: loop-carried distances (Eq 8
+//!   caps), reduction-loop detection (Theorem 4.7 tree reductions, II
+//!   recurrence bounds), statement dependence matrix (the `C` operator's
+//!   sum-vs-max decision), and the paper's `ND` dependence count.
+//! * [`footprint`] — per-array footprints at any cache insertion level
+//!   (Theorem 4.13 memory-transfer bounds, Eq 12 on-chip capacity).
+//! * [`analysis`] — one-stop [`analysis::Analysis`] aggregating all of the
+//!   above plus total flop counts for GF/s accounting.
+
+pub mod analysis;
+pub mod deps;
+pub mod footprint;
+pub mod tripcount;
+
+pub use analysis::Analysis;
+pub use deps::{DepKind, Dependence, LoopDepInfo};
+pub use tripcount::TripCount;

@@ -1,0 +1,147 @@
+//! Exact trip-count analysis.
+//!
+//! Every loop has half-open affine bounds `[lb, ub)` over enclosing
+//! iterators. Trip counts are `TC = ub - lb` (clamped at 0), with:
+//!
+//! * `TC_min` / `TC_max`: exact extremes of `ub - lb` over the enclosing
+//!   iteration box (affine ⇒ extremes at corners — `AffineExpr::bounds`);
+//! * `TC_avg`: exact expectation of `ub - lb` when enclosing iterators are
+//!   uniform over their ranges (affine ⇒ expectation at midpoints). This is
+//!   the `TC^avg` the paper's latency template uses for triangular loops.
+//!
+//! These are the `TC_i^{min}`, `TC_i^{max}` entries of the per-loop property
+//! vector PV (Section 3.1).
+
+use crate::ir::{Kernel, LoopId};
+use std::collections::BTreeMap;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TripCount {
+    pub min: u64,
+    pub max: u64,
+    pub avg: f64,
+}
+
+impl TripCount {
+    /// A loop is unrollable by Vitis only when its trip count is constant
+    /// (Section 3.1: "Only a loop with a constant TC can be unrolled").
+    pub fn is_constant(&self) -> bool {
+        self.min == self.max
+    }
+}
+
+/// Compute trip counts for every loop of `k`, in `LoopId` order.
+pub fn trip_counts(k: &Kernel) -> Vec<TripCount> {
+    // Iterator value ranges [lo, hi] (inclusive) and midpoints, computed
+    // outside-in (loop ids are assigned pre-order, so parents precede
+    // children — but don't rely on it; recurse through loop_path instead).
+    let mut ranges: BTreeMap<LoopId, (i64, i64)> = BTreeMap::new();
+    let mut mids: BTreeMap<LoopId, f64> = BTreeMap::new();
+    let mut out: Vec<Option<TripCount>> = vec![None; k.n_loops()];
+
+    // Process in pre-order via nest traversal to guarantee parents first.
+    let mut order: Vec<LoopId> = Vec::new();
+    for root in k.nest_roots() {
+        collect_preorder(k, root, &mut order);
+    }
+
+    for l in order {
+        let (lb, ub) = k.loop_bounds(l);
+        let rng = |x: LoopId| *ranges.get(&x).expect("outer loop range missing");
+        let (lb_lo, lb_hi) = lb.bounds(&rng);
+        let (ub_lo, ub_hi) = ub.bounds(&rng);
+        // tc extremes: (ub - lb) over the box
+        let tc_expr = ub.sub(lb);
+        let (tc_lo, tc_hi) = tc_expr.bounds(&rng);
+        let min = tc_lo.max(0) as u64;
+        let max = tc_hi.max(0) as u64;
+        // average at midpoints of enclosing iterators
+        let avg_env: f64 = {
+            let mut acc = tc_expr.constant as f64;
+            for &(dep, c) in &tc_expr.terms {
+                acc += c as f64 * mids[&dep];
+            }
+            acc.max(0.0)
+        };
+        out[l.0 as usize] = Some(TripCount {
+            min,
+            max,
+            avg: avg_env,
+        });
+        // iterator value range for children: [lb_lo, ub_hi - 1]
+        ranges.insert(l, (lb_lo, (ub_hi - 1).max(lb_lo)));
+        mids.insert(l, (lb_lo as f64 + lb_hi as f64) / 2.0 / 2.0 + (ub_lo as f64 + ub_hi as f64 - 2.0) / 4.0);
+        // midpoint of iterator values: average of (avg lb) and (avg ub - 1)
+    }
+
+    out.into_iter().map(|t| t.unwrap()).collect()
+}
+
+fn collect_preorder(k: &Kernel, l: LoopId, out: &mut Vec<LoopId>) {
+    out.push(l);
+    for &c in &k.loop_meta(l).children {
+        collect_preorder(k, c, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDir, DType, KernelBuilder, OpKind};
+
+    #[test]
+    fn constant_bounds() {
+        let k = crate::benchmarks::kernel_2mm(180, 190, 210, 220, DType::F32);
+        let tcs = trip_counts(&k);
+        assert_eq!(tcs.len(), 6);
+        assert_eq!(tcs[0], TripCount { min: 180, max: 180, avg: 180.0 });
+        assert_eq!(tcs[2].max, 210);
+        assert!(tcs.iter().all(|t| t.is_constant()));
+    }
+
+    #[test]
+    fn triangular_loop_tc() {
+        // for i in [0,10): for j in [0,i): TC_j in {0..9}, avg 4.5
+        let mut kb = KernelBuilder::new("tri", DType::F32);
+        let a = kb.array("a", &[10, 10], ArrayDir::InOut);
+        kb.for_const("i", 0, 10, |kb, i| {
+            kb.for_expr("j", kb.c(0), kb.v(i), |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let k = kb.finish();
+        let tcs = trip_counts(&k);
+        assert_eq!(tcs[0], TripCount { min: 10, max: 10, avg: 10.0 });
+        assert_eq!(tcs[1].min, 0);
+        assert_eq!(tcs[1].max, 9);
+        assert!((tcs[1].avg - 4.5).abs() < 1e-9, "avg={}", tcs[1].avg);
+        assert!(!tcs[1].is_constant());
+    }
+
+    #[test]
+    fn shifted_triangular_tc() {
+        // for i in [0,8): for j in [i+1, 8): TC_j = 7-i in {0..7}, avg 3.5
+        let mut kb = KernelBuilder::new("tri2", DType::F32);
+        let a = kb.array("a", &[8, 8], ArrayDir::InOut);
+        kb.for_const("i", 0, 8, |kb, i| {
+            kb.for_expr("j", kb.vp(i, 1), kb.c(8), |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![kb.at(a, &[kb.v(j), kb.v(i)])],
+                    &[(OpKind::Mul, 1)],
+                );
+            });
+        });
+        let k = kb.finish();
+        let tcs = trip_counts(&k);
+        assert_eq!(tcs[1].max, 7);
+        assert_eq!(tcs[1].min, 0);
+        assert!((tcs[1].avg - 3.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,224 @@
+//! Merlin pragma configurations — the unknowns of the NLP.
+//!
+//! A [`Design`] assigns each loop its property vector entries the user
+//! controls (Section 3.1's PV): `parallel factor=UF`, `tile factor=T`,
+//! `pipeline` on/off. Cache pragmas are applied automatically by (our
+//! simulated) Merlin at the outermost legal position, with `tile` shrinking
+//! the cached working set (Section 2.1).
+
+pub mod space;
+
+pub use space::{PipelineConfig, Space};
+
+use crate::ir::{Kernel, LoopId};
+
+/// Per-loop pragma settings (`uf = 1`, `tile = 1`, `pipeline = false` means
+/// "no pragma").
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LoopPragma {
+    /// `#pragma ACCEL parallel factor=uf`
+    pub uf: u64,
+    /// `#pragma ACCEL tile factor=tile`
+    pub tile: u64,
+    /// `#pragma ACCEL pipeline`
+    pub pipeline: bool,
+}
+
+impl Default for LoopPragma {
+    fn default() -> Self {
+        LoopPragma {
+            uf: 1,
+            tile: 1,
+            pipeline: false,
+        }
+    }
+}
+
+/// A complete pragma configuration for one kernel.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Design {
+    pub pragmas: Vec<LoopPragma>,
+}
+
+impl Design {
+    /// The pragma-free configuration (what "Original" rows measure).
+    pub fn empty(k: &Kernel) -> Design {
+        Design {
+            pragmas: vec![LoopPragma::default(); k.n_loops()],
+        }
+    }
+
+    pub fn get(&self, l: LoopId) -> LoopPragma {
+        self.pragmas[l.0 as usize]
+    }
+    pub fn get_mut(&mut self, l: LoopId) -> &mut LoopPragma {
+        &mut self.pragmas[l.0 as usize]
+    }
+
+    pub fn with(mut self, l: LoopId, p: LoopPragma) -> Design {
+        self.pragmas[l.0 as usize] = p;
+        self
+    }
+
+    /// Pipelined loops, if any.
+    pub fn pipelined(&self) -> impl Iterator<Item = LoopId> + '_ {
+        self.pragmas
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.pipeline)
+            .map(|(i, _)| LoopId(i as u32))
+    }
+
+    /// The pipelined loop governing statement-bearing loop `l`: the nearest
+    /// enclosing (or self) pipelined loop.
+    pub fn pipeline_above(&self, k: &Kernel, l: LoopId) -> Option<LoopId> {
+        let mut cur = Some(l);
+        while let Some(c) = cur {
+            if self.get(c).pipeline {
+                return Some(c);
+            }
+            cur = k.loop_meta(c).parent;
+        }
+        None
+    }
+
+    /// Array-partitioning factor required for array `a`: the product over
+    /// dimensions of the max UF of loops indexing each dimension (Section 6:
+    /// "the product of loops that iterate the same arrays on different
+    /// dimensions").
+    pub fn partitioning(&self, k: &Kernel, a: crate::ir::ArrayId) -> u64 {
+        let mut per_dim: Vec<u64> = vec![1; k.array(a).dims.len()];
+        for s in k.stmts() {
+            for (acc, _) in k.stmt_accesses(s.id) {
+                if acc.array != a {
+                    continue;
+                }
+                for (d, idx) in acc.indices.iter().enumerate() {
+                    for l in idx.loops() {
+                        per_dim[d] = per_dim[d].max(self.get(l).uf);
+                    }
+                }
+            }
+        }
+        per_dim.iter().product()
+    }
+
+    /// Max partitioning over all arrays (the DSE ladder constraint).
+    pub fn max_partitioning(&self, k: &Kernel) -> u64 {
+        k.arrays
+            .iter()
+            .map(|a| self.partitioning(k, a.id))
+            .max()
+            .unwrap_or(1)
+    }
+
+    /// Stable fingerprint for dedup / deterministic oracles.
+    pub fn fingerprint(&self) -> String {
+        let mut s = String::new();
+        for (i, p) in self.pragmas.iter().enumerate() {
+            if p.uf != 1 || p.tile != 1 || p.pipeline {
+                s.push_str(&format!(
+                    "L{i}:u{}t{}p{};",
+                    p.uf,
+                    p.tile,
+                    if p.pipeline { 1 } else { 0 }
+                ));
+            }
+        }
+        if s.is_empty() {
+            s.push_str("empty");
+        }
+        s
+    }
+
+    /// Render the design as paper-style pragma annotations (Listing 11).
+    pub fn render(&self, k: &Kernel) -> String {
+        let mut out = String::new();
+        for (i, p) in self.pragmas.iter().enumerate() {
+            let l = LoopId(i as u32);
+            let indent = "  ".repeat(k.loop_meta(l).depth as usize);
+            if p.pipeline {
+                out.push_str(&format!("{indent}#pragma ACCEL pipeline\n"));
+            }
+            if p.tile > 1 {
+                out.push_str(&format!("{indent}#pragma ACCEL tile factor={}\n", p.tile));
+            }
+            if p.uf > 1 {
+                out.push_str(&format!(
+                    "{indent}#pragma ACCEL parallel factor={}\n",
+                    p.uf
+                ));
+            }
+            out.push_str(&format!(
+                "{indent}for ({}) [TC via bounds {} .. {}]\n",
+                k.loop_name(l),
+                k.loop_bounds(l).0,
+                k.loop_bounds(l).1
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    #[test]
+    fn empty_design_is_pragma_free() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let d = Design::empty(&k);
+        assert_eq!(d.pragmas.len(), 4);
+        assert!(d.pipelined().next().is_none());
+        assert_eq!(d.fingerprint(), "empty");
+    }
+
+    #[test]
+    fn partitioning_is_cross_dim_product() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        // loops: i(0), j0(1), k(2), j1(3); C[i][j], A[i][k], B[k][j1]
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(2)).uf = 8; // k
+        d.get_mut(LoopId(3)).uf = 5; // j1
+        let a_id = k.array_by_name("A").unwrap().id;
+        let b_id = k.array_by_name("B").unwrap().id;
+        let c_id = k.array_by_name("C").unwrap().id;
+        assert_eq!(d.partitioning(&k, a_id), 8); // A[i][k] → dim1 by k
+        assert_eq!(d.partitioning(&k, b_id), 40); // B[k][j1] → 8*5
+        assert_eq!(d.partitioning(&k, c_id), 5); // C[i][j1] → dim1 by j1
+        assert_eq!(d.max_partitioning(&k), 40);
+    }
+
+    #[test]
+    fn pipeline_above_walks_ancestry() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(2)).pipeline = true; // k
+        assert_eq!(d.pipeline_above(&k, LoopId(3)), Some(LoopId(2)));
+        assert_eq!(d.pipeline_above(&k, LoopId(2)), Some(LoopId(2)));
+        assert_eq!(d.pipeline_above(&k, LoopId(0)), None);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let d1 = Design::empty(&k).with(
+            LoopId(1),
+            LoopPragma {
+                uf: 2,
+                tile: 1,
+                pipeline: true,
+            },
+        );
+        let d2 = Design::empty(&k).with(
+            LoopId(1),
+            LoopPragma {
+                uf: 4,
+                tile: 1,
+                pipeline: true,
+            },
+        );
+        assert_ne!(d1.fingerprint(), d2.fingerprint());
+    }
+}

@@ -1,0 +1,284 @@
+//! Design-space structure: pipeline configurations and space-size counting.
+//!
+//! The space follows Merlin's validity rules (Section 5.2):
+//! * per statement, at most one pipelined loop among its nest (Eq 5) — i.e.
+//!   the pipelined loops form an **antichain** in the loop forest;
+//! * loops strictly under a pipelined loop are fully unrolled (Eq 15), so
+//!   they contribute no free UF choice;
+//! * `UF` and `tile` must divide the trip count (Eqs 6–7), which requires a
+//!   constant trip count;
+//! * loops with non-constant TC (triangular) cannot be unrolled (Vitis
+//!   restriction, Section 3.1) — their UF is fixed at 1.
+
+use super::{Design, LoopPragma};
+use crate::ir::{Kernel, LoopId};
+use crate::poly::Analysis;
+use crate::util::divisors;
+
+/// One pipeline configuration: an antichain of pipelined loops. Innermost
+/// loops not dominated by a chosen loop are auto-pipelined by Vitis/Merlin
+/// (Section 3.1), which the model applies implicitly.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PipelineConfig {
+    pub pipelined: Vec<LoopId>,
+}
+
+pub struct Space<'k> {
+    pub kernel: &'k Kernel,
+    /// Divisor sets per loop (UF candidates); singleton `[1]` for loops
+    /// with non-constant TC.
+    pub uf_candidates: Vec<Vec<u64>>,
+    /// All valid pipeline configurations.
+    pub pipeline_configs: Vec<PipelineConfig>,
+}
+
+impl<'k> Space<'k> {
+    pub fn new(kernel: &'k Kernel, analysis: &Analysis) -> Space<'k> {
+        let uf_candidates = (0..kernel.n_loops())
+            .map(|i| {
+                let tc = &analysis.tcs[i];
+                if tc.is_constant() && tc.max > 0 {
+                    divisors(tc.max)
+                } else {
+                    vec![1]
+                }
+            })
+            .collect();
+        let pipeline_configs = enumerate_pipeline_configs(kernel);
+        Space {
+            kernel,
+            uf_candidates,
+            pipeline_configs,
+        }
+    }
+
+    /// UF candidates for loop `l`, additionally capped by the dependence
+    /// distance (Eq 8) and a partitioning bound.
+    pub fn ufs(&self, l: LoopId, analysis: &Analysis, cap: u64) -> Vec<u64> {
+        let dep = &analysis.deps.per_loop[l.0 as usize];
+        let dist_cap = match dep.min_distance {
+            // distance-1 reductions may still unroll (tree reduction);
+            // distance d > 1 recurrences cap UF at d (Eq 8)
+            Some(d) if d > 1 => d,
+            Some(_) if dep.serializing && !dep.reduction => 1,
+            _ => u64::MAX,
+        };
+        self.uf_candidates[l.0 as usize]
+            .iter()
+            .copied()
+            .filter(|&u| u <= cap.min(dist_cap))
+            .collect()
+    }
+
+    /// Number of valid designs (Table 2 / Table 5 "Space S" column):
+    /// Σ over pipeline configs of Π over free loops of |UF choices| ×
+    /// |tile choices| (tile on nest roots, the caching knob).
+    pub fn size(&self) -> f64 {
+        let k = self.kernel;
+        let mut total = 0f64;
+        for cfg in &self.pipeline_configs {
+            let mut prod = 1f64;
+            for i in 0..k.n_loops() {
+                let l = LoopId(i as u32);
+                // loops strictly under a pipelined loop: UF forced (Eq 15)
+                let under = cfg
+                    .pipelined
+                    .iter()
+                    .any(|&p| k.is_under(l, p));
+                if under {
+                    continue;
+                }
+                prod *= self.uf_candidates[i].len() as f64;
+                if k.loop_meta(l).parent.is_none() {
+                    // tile choices on the nest root
+                    prod *= self.uf_candidates[i].len() as f64;
+                }
+            }
+            total += prod;
+        }
+        total
+    }
+}
+
+/// Enumerate antichains of the loop forest (each statement sees ≤ 1
+/// pipelined loop). Per nest tree the choices are: pipeline some loop `l`
+/// (covering `l`'s subtree) or recurse into children independently; plus
+/// the "no explicit pipeline" option (auto-pipelining handles innermost).
+fn enumerate_pipeline_configs(k: &Kernel) -> Vec<PipelineConfig> {
+    // per nest root, the list of antichain options (each a Vec<LoopId>,
+    // possibly empty = rely on auto-pipeline)
+    fn options(k: &Kernel, l: LoopId) -> Vec<Vec<LoopId>> {
+        let meta = k.loop_meta(l);
+        let mut opts: Vec<Vec<LoopId>> = vec![vec![l]]; // pipeline here
+        if meta.children.is_empty() {
+            opts.push(vec![]); // innermost: auto-pipeline
+            return opts;
+        }
+        // don't pipeline here: cross-product of child options
+        let mut combos: Vec<Vec<LoopId>> = vec![vec![]];
+        for &c in &meta.children {
+            let child_opts = options(k, c);
+            let mut next = Vec::new();
+            for base in &combos {
+                for co in &child_opts {
+                    let mut v = base.clone();
+                    v.extend(co.iter().copied());
+                    next.push(v);
+                }
+            }
+            combos = next;
+        }
+        opts.extend(combos);
+        opts
+    }
+
+    let mut configs: Vec<Vec<LoopId>> = vec![vec![]];
+    for root in k.nest_roots() {
+        let root_opts = options(k, root);
+        let mut next = Vec::new();
+        for base in &configs {
+            for ro in &root_opts {
+                let mut v = base.clone();
+                v.extend(ro.iter().copied());
+                next.push(v);
+            }
+        }
+        configs = next;
+    }
+    // dedup (sibling recursion can produce duplicates of the empty set)
+    let mut seen = std::collections::BTreeSet::new();
+    configs
+        .into_iter()
+        .filter(|c| {
+            let mut key = c.clone();
+            key.sort();
+            seen.insert(key)
+        })
+        .map(|pipelined| PipelineConfig { pipelined })
+        .collect()
+}
+
+/// Materialize a [`Design`] from per-loop UF choices + a pipeline config,
+/// applying the Eq 15 full-unroll rule for loops under the pipeline.
+pub fn materialize(
+    k: &Kernel,
+    analysis: &Analysis,
+    cfg: &PipelineConfig,
+    ufs: &dyn Fn(LoopId) -> u64,
+    tiles: &dyn Fn(LoopId) -> u64,
+) -> Design {
+    let mut d = Design::empty(k);
+    for i in 0..k.n_loops() {
+        let l = LoopId(i as u32);
+        let under_pipe = cfg.pipelined.iter().any(|&p| k.is_under(l, p));
+        let tc = &analysis.tcs[i];
+        let info = &analysis.deps.per_loop[i];
+        let uf = if under_pipe {
+            if info.reduction || info.serializing {
+                // reduction loops keep their chosen tree-unroll factor
+                // (Section 5.4's TC/uf·log2(uf) term); order-enforcing
+                // loops stay serial
+                ufs(l).max(1)
+            } else if tc.is_constant() {
+                // parallel loops are fully unrolled under a pipeline (Eq 15)
+                tc.max.max(1)
+            } else {
+                1
+            }
+        } else {
+            ufs(l)
+        };
+        d.pragmas[i] = LoopPragma {
+            uf,
+            tile: tiles(l),
+            pipeline: cfg.pipelined.contains(&l),
+        };
+    }
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::poly::Analysis;
+
+    #[test]
+    fn gemm_pipeline_configs() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        // nest i(j0, k(j1)): {i} ∪ ({j0},{}) × ({k},{j1},{}) → 1 + 2×3 = 7
+        assert_eq!(s.pipeline_configs.len(), 7);
+    }
+
+    #[test]
+    fn atax_sibling_loops_independent() {
+        let k = crate::benchmarks::kernel_atax(116, 124, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        // nest A: single loop i0 → {i0}, {} = 2
+        // nest B: i1(j1, j2) → {i1}, then j1⊗j2 ∈ {j1,∅}×{j2,∅} = 4 → 5
+        // total = 2 × 5 = 10
+        assert_eq!(s.pipeline_configs.len(), 10);
+    }
+
+    #[test]
+    fn space_size_astronomical_for_2mm() {
+        let k = crate::benchmarks::kernel_2mm(180, 190, 210, 220, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let size = s.size();
+        // paper reports 1.37e10 valid designs; our validity convention
+        // lands in the same magnitude band
+        assert!(size > 1e8, "space {size}");
+        assert!(size < 1e13, "space {size}");
+    }
+
+    #[test]
+    fn triangular_loops_have_no_unroll() {
+        let k = crate::benchmarks::kernel_lu(120, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        // loops j0,k0 (triangular) must have singleton UF candidates
+        assert_eq!(s.uf_candidates[1], vec![1]);
+        assert_eq!(s.uf_candidates[2], vec![1]);
+        // i (constant) has all divisors of 120
+        assert_eq!(s.uf_candidates[0].len(), crate::util::divisors(120).len());
+    }
+
+    #[test]
+    fn eq8_distance_caps_uf() {
+        use crate::ir::{ArrayDir, KernelBuilder, OpKind};
+        let mut kb = KernelBuilder::new("rec2", DType::F32);
+        let y = kb.array("y", &[96], ArrayDir::InOut);
+        kb.for_const("j", 0, 96, |kb, j| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(y, &[kb.v(j)])],
+                vec![kb.at(y, &[kb.vp(j, -2)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let ufs = s.ufs(LoopId(0), &a, u64::MAX);
+        assert_eq!(ufs, vec![1, 2], "UF capped at dependence distance 2");
+    }
+
+    #[test]
+    fn materialize_full_unrolls_under_pipe() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let cfg = s
+            .pipeline_configs
+            .iter()
+            .find(|c| c.pipelined == vec![LoopId(2)])
+            .unwrap();
+        let d = materialize(&k, &a, cfg, &|_| 1, &|_| 1);
+        assert!(d.get(LoopId(2)).pipeline);
+        assert_eq!(d.get(LoopId(3)).uf, 70, "j1 fully unrolled under pipe");
+    }
+}

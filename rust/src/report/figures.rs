@@ -1,0 +1,111 @@
+//! Figure data series — emitted as TSV (x-axis, series columns), the same
+//! rows the paper plots.
+
+use crate::coordinator::CampaignResult;
+use crate::benchmarks::Size;
+
+/// Figures 2 (Large) and 3 (Medium): per-kernel GF/s and DSE time for
+/// NLP-DSE vs AutoDSE.
+pub fn figure2_3(r: &CampaignResult, size: Size) -> String {
+    let mut out = String::from("kernel\tnlpdse_gfs\tautodse_gfs\tnlpdse_T_min\tautodse_T_min\n");
+    for row in r.rows.iter().filter(|x| x.size == size) {
+        let n = row.nlpdse.as_ref();
+        let a = row.autodse.as_ref();
+        out.push_str(&format!(
+            "{}\t{:.3}\t{:.3}\t{:.1}\t{:.1}\n",
+            row.name,
+            n.map(|x| x.best_gflops).unwrap_or(0.0),
+            a.map(|x| x.best_gflops).unwrap_or(0.0),
+            n.map(|x| x.dse_minutes).unwrap_or(0.0),
+            a.map(|x| x.dse_minutes).unwrap_or(0.0),
+        ));
+    }
+    out
+}
+
+/// Figure 4: NLP-DSE vs HARP throughput (S+M).
+pub fn figure4(r: &CampaignResult) -> String {
+    let mut out = String::from("kernel\tsize\tnlpdse_gfs\tharp_gfs\n");
+    for row in &r.rows {
+        out.push_str(&format!(
+            "{}\t{}\t{:.3}\t{:.3}\n",
+            row.name,
+            row.size.tag(),
+            row.nlpdse.as_ref().map(|x| x.best_gflops).unwrap_or(0.0),
+            row.harp.as_ref().map(|x| x.best_gflops).unwrap_or(0.0),
+        ));
+    }
+    out
+}
+
+/// Figure 5: predicted lower bound vs measured latency for every
+/// synthesized design. Column `applied` distinguishes the 5a (all) vs 5b
+/// (pragmas applied) filters; `flattened` marks the red LB-exception.
+pub fn figure5(r: &CampaignResult) -> String {
+    let mut rows: Vec<(f64, f64, bool, bool, String)> = Vec::new();
+    for row in &r.rows {
+        if let Some(n) = &row.nlpdse {
+            for s in &n.trace {
+                if let Some(meas) = s.measured {
+                    rows.push((
+                        meas,
+                        s.lower_bound,
+                        s.pragmas_applied,
+                        s.flattened,
+                        format!("{}-{}", row.name, row.size.tag()),
+                    ));
+                }
+            }
+        }
+    }
+    rows.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out =
+        String::from("rank\tmeasured_cycles\tpredicted_lb_cycles\tapplied\tflattened\tdesign\n");
+    for (i, (meas, lb, applied, flat, tag)) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "{}\t{:.0}\t{:.0}\t{}\t{}\t{}\n",
+            i, meas, lb, applied, flat, tag
+        ));
+    }
+    out
+}
+
+/// Figure 6: throughput achieved at each NLP-DSE step for one kernel.
+pub fn figure6(r: &CampaignResult, kernel: &str, size: Size) -> String {
+    let mut out = String::from("step\tcap\tfine\tlb_cycles\tgflops\tstatus\n");
+    if let Some(row) = r
+        .rows
+        .iter()
+        .find(|x| x.name == kernel && x.size == size)
+    {
+        if let Some(n) = &row.nlpdse {
+            for s in &n.trace {
+                let status = if s.dedup {
+                    "dedup"
+                } else if s.pruned {
+                    "pruned"
+                } else if s.timeout {
+                    "timeout"
+                } else if s.valid {
+                    "ok"
+                } else {
+                    "invalid"
+                };
+                out.push_str(&format!(
+                    "{}\t{}\t{}\t{:.0}\t{:.3}\t{}\n",
+                    s.step,
+                    if s.cap == u64::MAX {
+                        "inf".to_string()
+                    } else {
+                        s.cap.to_string()
+                    },
+                    s.fine_only,
+                    s.lower_bound,
+                    s.gflops,
+                    status
+                ));
+            }
+        }
+    }
+    out
+}

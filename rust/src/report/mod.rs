@@ -1,0 +1,10 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §5 maps each to its module and CLI entry point).
+
+pub mod figures;
+pub mod tables;
+
+pub use figures::{figure2_3, figure4, figure5, figure6};
+pub use tables::{
+    table1, table2, table3, table5, table6, table7, table8, table9,
+};

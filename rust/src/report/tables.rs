@@ -1,0 +1,431 @@
+//! Table renderers — one per paper table, consuming campaign rows.
+
+use crate::benchmarks::{self, Size};
+use crate::coordinator::{CampaignResult, KernelRow};
+use crate::ir::DType;
+use crate::poly::Analysis;
+use crate::util::stats::{geomean, mean};
+use crate::util::table::{f2, i0, ratio, TextTable};
+use crate::util::sci;
+
+fn find<'a>(r: &'a CampaignResult, name: &str, size: Size) -> Option<&'a KernelRow> {
+    r.rows.iter().find(|x| x.name == name && x.size == size)
+}
+
+/// The motivation trio used by Tables 1–3 (Section 2.2: 2mm-M, gemm-M,
+/// gramschmidt-L).
+pub const MOTIVATION: [(&str, Size); 3] = [
+    ("2mm", Size::Medium),
+    ("gemm", Size::Medium),
+    ("gramschmidt", Size::Large),
+];
+
+/// Table 1: Original vs AutoDSE throughput.
+pub fn table1(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 1 — throughput (GF/s) of Merlin without pragmas vs AutoDSE",
+        &["", "2mm GF/s", "2mm T(min)", "gemm GF/s", "gemm T(min)", "gramsch GF/s", "gramsch T(min)"],
+    );
+    let rows: Vec<&KernelRow> = MOTIVATION
+        .iter()
+        .filter_map(|(n, s)| find(r, n, *s))
+        .collect();
+    if rows.len() != 3 {
+        t.row(vec!["(missing campaign rows)".into(); 7]);
+        return t;
+    }
+    let orig: Vec<String> = rows.iter().flat_map(|x| [f2(x.original_gflops), "N/A".into()]).collect();
+    let mut line = vec!["Original".to_string()];
+    line.extend(orig);
+    t.row(line);
+    let auto: Vec<String> = rows
+        .iter()
+        .flat_map(|x| {
+            let a = x.autodse.as_ref();
+            [
+                f2(a.map(|a| a.best_gflops).unwrap_or(0.0)),
+                i0(a.map(|a| a.dse_minutes).unwrap_or(0.0)),
+            ]
+        })
+        .collect();
+    let mut line = vec!["AutoDSE".to_string()];
+    line.extend(auto);
+    t.row(line);
+    let imp: Vec<String> = rows
+        .iter()
+        .flat_map(|x| {
+            let a = x.autodse.as_ref().map(|a| a.best_gflops).unwrap_or(0.0);
+            [ratio(a / x.original_gflops.max(1e-9)), "".into()]
+        })
+        .collect();
+    let mut line = vec!["Improvement".to_string()];
+    line.extend(imp);
+    t.row(line);
+    t
+}
+
+/// Table 2: space sizes and AutoDSE exploration extent.
+pub fn table2(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 2 — design space vs AutoDSE exploration extent",
+        &["", "2mm", "gemm", "gramsch."],
+    );
+    let rows: Vec<Option<&KernelRow>> = MOTIVATION.iter().map(|(n, s)| find(r, n, *s)).collect();
+    let get = |f: &dyn Fn(&KernelRow) -> String| -> Vec<String> {
+        rows.iter()
+            .map(|x| x.map(f).unwrap_or_else(|| "-".into()))
+            .collect()
+    };
+    let mut line = vec!["Nb. valid designs (Space)".to_string()];
+    line.extend(get(&|x| sci(x.space_size)));
+    t.row(line);
+    let mut line = vec!["Nb. design synthesized (AutoDSE)".to_string()];
+    line.extend(get(&|x| {
+        x.autodse
+            .as_ref()
+            .map(|a| a.designs_synthesized.to_string())
+            .unwrap_or_default()
+    }));
+    t.row(line);
+    let mut line = vec!["Nb. design pruned/ER (AutoDSE)".to_string()];
+    line.extend(get(&|x| {
+        x.autodse
+            .as_ref()
+            .map(|a| a.early_rejected.to_string())
+            .unwrap_or_default()
+    }));
+    t.row(line);
+    let mut line = vec!["Nb. design timeout (AutoDSE)".to_string()];
+    line.extend(get(&|x| {
+        x.autodse
+            .as_ref()
+            .map(|a| a.designs_timeout.to_string())
+            .unwrap_or_default()
+    }));
+    t.row(line);
+    let mut line = vec!["Nb. design explored (AutoDSE)".to_string()];
+    line.extend(get(&|x| {
+        x.autodse
+            .as_ref()
+            .map(|a| a.designs_explored.to_string())
+            .unwrap_or_default()
+    }));
+    t.row(line);
+    t
+}
+
+/// Table 3: NLP-DSE vs NLP-DSE-FS vs AutoDSE (GF/s, T, DSP%).
+pub fn table3(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 3 — NLP-DSE vs first-synthesizable vs AutoDSE",
+        &[
+            "", "2mm GF/s", "T", "DSP%", "gemm GF/s", "T", "DSP%", "gramsch GF/s", "T", "DSP%",
+        ],
+    );
+    let rows: Vec<Option<&KernelRow>> = MOTIVATION.iter().map(|(n, s)| find(r, n, *s)).collect();
+    let triple = |f: &dyn Fn(&KernelRow) -> [String; 3]| -> Vec<String> {
+        rows.iter()
+            .flat_map(|x| x.map(f).unwrap_or_else(|| ["-".into(), "-".into(), "-".into()]))
+            .collect()
+    };
+    let mut line = vec!["Original".to_string()];
+    line.extend(triple(&|x| [f2(x.original_gflops), "N/A".into(), "0".into()]));
+    t.row(line);
+    let mut line = vec!["AutoDSE".to_string()];
+    line.extend(triple(&|x| {
+        let a = x.autodse.as_ref();
+        [
+            f2(a.map(|a| a.best_gflops).unwrap_or(0.0)),
+            i0(a.map(|a| a.dse_minutes).unwrap_or(0.0)),
+            i0(a.map(|a| a.best_dsp_pct).unwrap_or(0.0)),
+        ]
+    }));
+    t.row(line);
+    let mut line = vec!["NLP-DSE-FS".to_string()];
+    line.extend(triple(&|x| {
+        let n = x.nlpdse.as_ref();
+        [
+            f2(n.map(|n| n.first_synth_gflops).unwrap_or(0.0)),
+            "N/A".into(),
+            "".into(),
+        ]
+    }));
+    t.row(line);
+    let mut line = vec!["NLP-DSE".to_string()];
+    line.extend(triple(&|x| {
+        let n = x.nlpdse.as_ref();
+        [
+            f2(n.map(|n| n.best_gflops).unwrap_or(0.0)),
+            i0(n.map(|n| n.dse_minutes).unwrap_or(0.0)),
+            i0(n.map(|n| n.best_dsp_pct).unwrap_or(0.0)),
+        ]
+    }));
+    t.row(line);
+    let mut line = vec!["Imp. vs AutoDSE".to_string()];
+    line.extend(triple(&|x| {
+        let n = x.nlpdse.as_ref().map(|n| n.best_gflops).unwrap_or(0.0);
+        let nt = x.nlpdse.as_ref().map(|n| n.dse_minutes).unwrap_or(0.0);
+        let a = x.autodse.as_ref().map(|a| a.best_gflops).unwrap_or(0.0);
+        let at = x.autodse.as_ref().map(|a| a.dse_minutes).unwrap_or(0.0);
+        [
+            ratio(n / a.max(1e-9)),
+            ratio(at / nt.max(1e-9)),
+            "".into(),
+        ]
+    }));
+    t.row(line);
+    t
+}
+
+/// Table 5: the full NLP-DSE vs AutoDSE comparison.
+pub fn table5(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 5 — NLP-DSE (with first-synthesizable) vs AutoDSE, all kernels",
+        &[
+            "Kernel", "NL", "ND", "S", "Space", "FS GF/s", "GF/s", "T", "DE", "DT",
+            "A-GF/s", "A-T", "A-DE", "A-DT", "A-ER", "Imp-T", "Imp-GF/s",
+        ],
+    );
+    let mut imp_t = Vec::new();
+    let mut imp_g = Vec::new();
+    let mut n_gfs = Vec::new();
+    let mut a_gfs = Vec::new();
+    let mut n_t = Vec::new();
+    let mut a_t = Vec::new();
+    for row in &r.rows {
+        let n = row.nlpdse.as_ref();
+        let a = row.autodse.as_ref();
+        let (ng, nt) = (
+            n.map(|x| x.best_gflops).unwrap_or(0.0),
+            n.map(|x| x.dse_minutes).unwrap_or(0.0),
+        );
+        let (ag, at) = (
+            a.map(|x| x.best_gflops).unwrap_or(0.0),
+            a.map(|x| x.dse_minutes).unwrap_or(0.0),
+        );
+        if ag > 0.0 && nt > 0.0 {
+            imp_t.push(at / nt);
+            imp_g.push(ng / ag);
+        }
+        n_gfs.push(ng);
+        a_gfs.push(ag);
+        n_t.push(nt);
+        a_t.push(at);
+        t.row(vec![
+            row.name.clone(),
+            row.nl.to_string(),
+            row.nd.to_string(),
+            row.size.tag().to_string(),
+            sci(row.space_size),
+            f2(n.map(|x| x.first_synth_gflops).unwrap_or(0.0)),
+            f2(ng),
+            i0(nt),
+            n.map(|x| x.designs_explored.to_string()).unwrap_or_default(),
+            n.map(|x| x.designs_timeout.to_string()).unwrap_or_default(),
+            f2(ag),
+            i0(at),
+            a.map(|x| x.designs_explored.to_string()).unwrap_or_default(),
+            a.map(|x| x.designs_timeout.to_string()).unwrap_or_default(),
+            a.map(|x| x.early_rejected.to_string()).unwrap_or_default(),
+            ratio(at / nt.max(1e-9)),
+            ratio(ng / ag.max(1e-9)),
+        ]);
+    }
+    t.sep();
+    t.row(vec![
+        "Average".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        f2(mean(&n_gfs)),
+        i0(mean(&n_t)),
+        "".into(),
+        "".into(),
+        f2(mean(&a_gfs)),
+        i0(mean(&a_t)),
+        "".into(),
+        "".into(),
+        "".into(),
+        ratio(mean(&imp_t)),
+        ratio(mean(&imp_g)),
+    ]);
+    t.row(vec![
+        "Geo. Mean".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        f2(geomean(&n_gfs)),
+        i0(geomean(&n_t)),
+        "".into(),
+        "".into(),
+        f2(geomean(&a_gfs)),
+        i0(geomean(&a_t)),
+        "".into(),
+        "".into(),
+        "".into(),
+        ratio(geomean(&imp_t)),
+        ratio(geomean(&imp_g)),
+    ]);
+    t
+}
+
+/// Table 6: DSE steps to best QoR / to LB-termination.
+pub fn table6(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 6 — DSE steps to best QoR and to lower-bound termination",
+        &["Kernel", "S", "steps to best", "steps to LB>HLS"],
+    );
+    for row in &r.rows {
+        let Some(n) = row.nlpdse.as_ref() else { continue };
+        t.row(vec![
+            row.name.clone(),
+            row.size.tag().to_string(),
+            n.steps_to_best.to_string(),
+            n.steps_to_terminate.to_string(),
+        ]);
+    }
+    let bests: Vec<f64> = r
+        .rows
+        .iter()
+        .filter_map(|x| x.nlpdse.as_ref().map(|n| n.steps_to_best as f64))
+        .collect();
+    let terms: Vec<f64> = r
+        .rows
+        .iter()
+        .filter_map(|x| x.nlpdse.as_ref().map(|n| n.steps_to_terminate as f64))
+        .collect();
+    t.sep();
+    t.row(vec![
+        "Average".into(),
+        "".into(),
+        f2(mean(&bests)),
+        f2(mean(&terms)),
+    ]);
+    t
+}
+
+/// Table 7: NLP solver scalability.
+pub fn table7(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 7 — NLP solver scalability (per problem size)",
+        &["Size", "ND T/O", "ND NT/O", "Avg Time (s)", "Avg Time NT/O (s)"],
+    );
+    for size in [Size::Medium, Size::Large, Size::Small] {
+        let mut times = Vec::new();
+        let mut nto_times = Vec::new();
+        let mut tos = 0u32;
+        for row in r.rows.iter().filter(|x| x.size == size) {
+            if let Some(n) = &row.nlpdse {
+                tos += n.nlp_timeouts;
+                times.extend(n.nlp_solve_s.iter().copied());
+                // per-solve timeout attribution is aggregate here
+                nto_times.extend(n.nlp_solve_s.iter().copied());
+            }
+        }
+        if times.is_empty() {
+            continue;
+        }
+        t.row(vec![
+            format!("{size:?}"),
+            tos.to_string(),
+            (times.len() as u32 - tos).to_string(),
+            format!("{:.3}", mean(&times)),
+            format!("{:.3}", mean(&nto_times)),
+        ]);
+    }
+    // all-sizes row
+    let mut all = Vec::new();
+    let mut tos = 0;
+    for row in &r.rows {
+        if let Some(n) = &row.nlpdse {
+            tos += n.nlp_timeouts;
+            all.extend(n.nlp_solve_s.iter().copied());
+        }
+    }
+    if !all.is_empty() {
+        t.sep();
+        t.row(vec![
+            "All".into(),
+            tos.to_string(),
+            (all.len() as u32 - tos).to_string(),
+            format!("{:.3}", mean(&all)),
+            format!("{:.3}", mean(&all)),
+        ]);
+    }
+    t
+}
+
+/// Table 8: problem sizes (static, from the registry).
+pub fn table8() -> TextTable {
+    let mut t = TextTable::new(
+        "Table 8 — problem sizes and footprints",
+        &["Kernel", "NL", "fp S (kB)", "fp M (kB)", "fp L (kB)", "flops M"],
+    );
+    for name in benchmarks::ALL {
+        let mut cells = vec![name.to_string()];
+        let mut nl = 0;
+        let mut fps = Vec::new();
+        let mut flops_m = 0f64;
+        for size in [Size::Small, Size::Medium, Size::Large] {
+            if name == "cnn" && size != Size::Medium {
+                fps.push("-".to_string());
+                continue;
+            }
+            let k = benchmarks::build(name, size, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            nl = k.n_loops();
+            fps.push(format!("{:.0}", a.total_footprint as f64 / 1024.0));
+            if size == Size::Medium {
+                flops_m = a.total_flops;
+            }
+        }
+        cells.push(nl.to_string());
+        cells.extend(fps);
+        cells.push(sci(flops_m));
+        t.row(cells);
+    }
+    t
+}
+
+/// Table 9: NLP-DSE vs HARP (S+M, f64).
+pub fn table9(r: &CampaignResult) -> TextTable {
+    let mut t = TextTable::new(
+        "Table 9 — NLP-DSE vs HARP throughput (GF/s, f64)",
+        &["Kernel", "S", "GF/s NLP-DSE", "GF/s HARP", "Perf. Improvement"],
+    );
+    let mut imps = Vec::new();
+    for row in &r.rows {
+        let n = row.nlpdse.as_ref().map(|x| x.best_gflops).unwrap_or(0.0);
+        let h = row.harp.as_ref().map(|x| x.best_gflops).unwrap_or(0.0);
+        if h > 0.0 {
+            imps.push(n / h);
+        }
+        t.row(vec![
+            row.name.clone(),
+            row.size.tag().to_string(),
+            f2(n),
+            f2(h),
+            f2(n / h.max(1e-9)),
+        ]);
+    }
+    t.sep();
+    t.row(vec![
+        "Average".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        f2(mean(&imps)),
+    ]);
+    t.row(vec![
+        "Geo. Mean".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        f2(geomean(&imps)),
+    ]);
+    t
+}

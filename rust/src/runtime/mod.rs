@@ -1,0 +1,168 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and runs
+//! bulk lower-bound evaluation from the DSE hot path.
+//!
+//! Interchange is **HLO text** — jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `python/compile/aot.py` and /opt/xla-example).
+//!
+//! Python never runs here: the artifact is compiled once per process and
+//! executed with f64 feature tensors encoded by `model::features`.
+
+use crate::model::{self, Abi, DesignFeatures};
+use crate::nlp::{BatchEvaluator, NlpProblem};
+use crate::pragma::Design;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var("NLP_DSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// The XLA-backed batch evaluator. Not `Sync` (PJRT handles are
+/// thread-affine); the coordinator instantiates one per worker.
+pub struct XlaEvaluator {
+    exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    /// Executions performed (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl XlaEvaluator {
+    /// Load + compile `lat_bound.hlo.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<XlaEvaluator> {
+        let path = dir.join("lat_bound.hlo.txt");
+        if !path.exists() {
+            return Err(anyhow!(
+                "artifact {} missing — run `make artifacts`",
+                path.display()
+            ));
+        }
+        let batch = read_abi_batch(&dir.join("abi.json")).unwrap_or(512);
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .context("parse HLO text")?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compile artifact")?;
+        Ok(XlaEvaluator {
+            exe,
+            batch,
+            executions: std::cell::Cell::new(0),
+        })
+    }
+
+    /// Evaluate encoded designs; input is chunked/padded to the artifact's
+    /// batch size. Returns `(latency_lb, dsp)` per design.
+    pub fn eval_features(&self, feats: &[DesignFeatures]) -> Result<Vec<(f64, f64)>> {
+        let mut out = Vec::with_capacity(feats.len());
+        for chunk in feats.chunks(self.batch) {
+            // flatten + zero-pad
+            let mut loops = vec![0f64; self.batch * Abi::LOOPS_LEN];
+            let mut units = vec![0f64; self.batch * Abi::UNITS_LEN];
+            for (i, f) in chunk.iter().enumerate() {
+                loops[i * Abi::LOOPS_LEN..(i + 1) * Abi::LOOPS_LEN]
+                    .copy_from_slice(&f.loops);
+                units[i * Abi::UNITS_LEN..(i + 1) * Abi::UNITS_LEN]
+                    .copy_from_slice(&f.units);
+            }
+            let l_lit = xla::Literal::vec1(&loops).reshape(&[
+                self.batch as i64,
+                Abi::UNITS as i64,
+                Abi::LOOPS as i64,
+                Abi::F as i64,
+            ])?;
+            let u_lit = xla::Literal::vec1(&units).reshape(&[
+                self.batch as i64,
+                Abi::UNITS as i64,
+                Abi::G as i64,
+            ])?;
+            let result = self.exe.execute::<xla::Literal>(&[l_lit, u_lit])?[0][0]
+                .to_literal_sync()?;
+            self.executions.set(self.executions.get() + 1);
+            // return_tuple=True → 1-tuple of f64[B,2]
+            let tuple = result.to_tuple1()?;
+            let values = tuple.to_vec::<f64>()?;
+            for (i, _) in chunk.iter().enumerate() {
+                out.push((values[i * 2], values[i * 2 + 1]));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl BatchEvaluator for XlaEvaluator {
+    fn eval_batch(&self, p: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)> {
+        // encode; designs that overflow the ABI fall back to the precise
+        // Rust model (identical lower-bound semantics)
+        let mut feats = Vec::with_capacity(designs.len());
+        let mut fallback: Vec<(usize, (f64, f64))> = Vec::new();
+        let mut idx_map = Vec::with_capacity(designs.len());
+        for (i, d) in designs.iter().enumerate() {
+            match model::encode_design(p.kernel, p.analysis, p.device, d) {
+                Some(f) => {
+                    idx_map.push(i);
+                    feats.push(f);
+                }
+                None => {
+                    let r = model::evaluate(p.kernel, p.analysis, p.device, d);
+                    fallback.push((i, (r.total_cycles, r.dsp)));
+                }
+            }
+        }
+        let mut out = vec![(0f64, 0f64); designs.len()];
+        match self.eval_features(&feats) {
+            Ok(vals) => {
+                for (slot, v) in idx_map.into_iter().zip(vals) {
+                    out[slot] = v;
+                }
+            }
+            Err(_) => {
+                // degraded mode: evaluate in-process
+                for (slot, d) in idx_map.iter().zip(feats.iter()) {
+                    out[*slot] = model::eval_features(d);
+                }
+            }
+        }
+        for (i, v) in fallback {
+            out[i] = v;
+        }
+        out
+    }
+}
+
+fn read_abi_batch(path: &Path) -> Option<usize> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let idx = text.find("\"batch\"")?;
+    let rest = &text[idx + 7..];
+    let colon = rest.find(':')?;
+    let num: String = rest[colon + 1..]
+        .trim_start()
+        .chars()
+        .take_while(|c| c.is_ascii_digit())
+        .collect();
+    num.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn abi_batch_parser() {
+        let dir = std::env::temp_dir().join("nlpdse-abi-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("abi.json");
+        std::fs::write(&p, "{\n  \"batch\": 512,\n  \"units\": 16\n}").unwrap();
+        assert_eq!(read_abi_batch(&p), Some(512));
+    }
+
+    #[test]
+    fn load_fails_cleanly_without_artifacts() {
+        let r = XlaEvaluator::load(Path::new("/nonexistent-dir"));
+        assert!(r.is_err());
+    }
+}

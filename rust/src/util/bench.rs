@@ -1,0 +1,160 @@
+//! Criterion-style micro-benchmark harness for `harness = false` bench
+//! targets (criterion itself is not available offline).
+//!
+//! Usage in `rust/benches/*.rs`:
+//! ```ignore
+//! let mut b = Bench::new("nlp_batch_eval");
+//! b.bench("rust_eval/B=512", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over adaptive iterations until a
+//! target measurement time is reached; reports mean / p50 / p95 per
+//! iteration plus throughput when `set_items` was used.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    suite: String,
+    target: Duration,
+    results: Vec<BenchResult>,
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub items_per_iter: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        let target_ms: u64 = std::env::var("BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(300);
+        println!("== bench suite: {suite} (target {target_ms} ms/case)");
+        Bench {
+            suite: suite.to_string(),
+            target: Duration::from_millis(target_ms),
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which should perform one unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &mut Self {
+        self.bench_items(name, None, f)
+    }
+
+    /// Time `f` and report throughput as `items / iteration-time`.
+    pub fn bench_with_items<F: FnMut()>(&mut self, name: &str, items: f64, f: F) -> &mut Self {
+        self.bench_items(name, Some(items), f)
+    }
+
+    fn bench_items<F: FnMut()>(&mut self, name: &str, items: Option<f64>, mut f: F) -> &mut Self {
+        // Warm-up: a few calls, also sizes a batch so each sample >= ~50 us.
+        let t0 = Instant::now();
+        f();
+        let first = t0.elapsed();
+        let mut batch = 1u64;
+        if first < Duration::from_micros(50) {
+            batch = (Duration::from_micros(50).as_nanos() / first.as_nanos().max(1)) as u64 + 1;
+        }
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total = Duration::ZERO;
+        let mut iters = 0u64;
+        while total < self.target && samples.len() < 2000 {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t.elapsed();
+            samples.push(dt.as_nanos() as f64 / batch as f64);
+            total += dt;
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p50 = samples[samples.len() / 2];
+        let p95 = samples[(samples.len() as f64 * 0.95) as usize % samples.len()];
+
+        let thr = items.map(|n| n / (mean / 1e9));
+        let thr_str = thr
+            .map(|t| format!("  thr={}/s", crate::util::sci(t)))
+            .unwrap_or_default();
+        println!(
+            "  {:<44} mean={:>12}  p50={:>12}  p95={:>12}  iters={}{}",
+            name,
+            fmt_ns(mean),
+            fmt_ns(p50),
+            fmt_ns(p95),
+            iters,
+            thr_str
+        );
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_ns: mean,
+            p50_ns: p50,
+            p95_ns: p95,
+            items_per_iter: items,
+        });
+        self
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    pub fn finish(&self) {
+        println!("== bench suite {} done ({} cases)", self.suite, self.results.len());
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (ptr read fence).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("BENCH_MS", "10");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].mean_ns > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12e3).ends_with("us"));
+        assert!(fmt_ns(12e6).ends_with("ms"));
+        assert!(fmt_ns(12e9).ends_with('s'));
+    }
+}

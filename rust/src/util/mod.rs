@@ -1,0 +1,126 @@
+//! In-repo substrates for the offline build environment.
+//!
+//! The published system used commodity crates for randomness, serialization
+//! and benchmarking; none are available offline here, so each is implemented
+//! as a small, tested module:
+//!
+//! * [`rng`] — deterministic splitmix64/xoshiro PRNG (seeded DSE traces).
+//! * [`json`] — minimal JSON value tree + emitter for result dumps.
+//! * [`bench`] — criterion-style micro-benchmark harness used by
+//!   `rust/benches/*` (`harness = false`).
+//! * [`proptest`] — mini property-based testing driver (random cases +
+//!   first-failure reporting with the generating seed).
+//! * [`stats`] — mean / geomean / percentile helpers used by the report
+//!   tables.
+//! * [`table`] — fixed-width text table renderer for paper-style output.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Integer ceiling division for positive operands.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// `ceil(log2(x))` for `x >= 1`; returns 0 for `x == 1`.
+#[inline]
+pub fn ceil_log2(x: u64) -> u32 {
+    debug_assert!(x >= 1);
+    if x <= 1 {
+        0
+    } else {
+        64 - ((x - 1).leading_zeros() as u32)
+    }
+}
+
+/// All positive divisors of `n`, ascending. `divisors(0)` is empty.
+pub fn divisors(n: u64) -> Vec<u64> {
+    if n == 0 {
+        return vec![];
+    }
+    let mut small = Vec::new();
+    let mut large = Vec::new();
+    let mut d = 1u64;
+    while d * d <= n {
+        if n % d == 0 {
+            small.push(d);
+            if d != n / d {
+                large.push(n / d);
+            }
+        }
+        d += 1;
+    }
+    large.reverse();
+    small.extend(large);
+    small
+}
+
+/// Format a cycle/design count compactly (`1.37e10` style), matching the
+/// paper's space-size columns.
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let exp = x.abs().log10().floor() as i32;
+    if (-3..4).contains(&exp) {
+        if x.fract() == 0.0 && x.abs() < 1e6 {
+            format!("{}", x as i64)
+        } else {
+            format!("{x:.2}")
+        }
+    } else {
+        let mant = x / 10f64.powi(exp);
+        format!("{mant:.2}e{exp}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(190), vec![1, 2, 5, 10, 19, 38, 95, 190]);
+        assert_eq!(divisors(0), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn divisors_count_matches_paper_kernels() {
+        // Sanity anchors used by space-size computations.
+        assert_eq!(divisors(180).len(), 18);
+        assert_eq!(divisors(210).len(), 16);
+        assert_eq!(divisors(220).len(), 12);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 1), 1);
+    }
+
+    #[test]
+    fn ceil_log2_basic() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+        assert_eq!(ceil_log2(1024), 10);
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(1.37e10), "1.37e10");
+        assert_eq!(sci(0.0), "0");
+        assert_eq!(sci(12.0), "12");
+    }
+}

@@ -1,0 +1,80 @@
+//! Mini property-based testing driver (the proptest crate is unavailable
+//! offline). Generates `cases` random inputs from a caller-supplied
+//! generator and checks a property; on failure reports the case index and
+//! seed so the exact input can be regenerated.
+//!
+//! No shrinking — generators are kept small and structured enough that raw
+//! failing cases are readable (they are printed via `Debug`).
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: u32,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        // PROPTEST_CASES mirrors the proptest crate's env knob.
+        let cases = std::env::var("PROPTEST_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Prop { cases, seed: 0x5eed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: u32) -> Prop {
+        Prop {
+            cases,
+            ..Prop::default()
+        }
+    }
+
+    /// Run `prop` on `cases` inputs drawn from `gen`. Panics (with seed and
+    /// input `Debug`) on the first failing case.
+    pub fn check<T: std::fmt::Debug>(
+        &self,
+        name: &str,
+        mut gen: impl FnMut(&mut Rng) -> T,
+        mut prop: impl FnMut(&T) -> Result<(), String>,
+    ) {
+        for i in 0..self.cases {
+            let mut rng = Rng::new(self.seed.wrapping_add(i as u64).wrapping_mul(0x9e37));
+            let input = gen(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property `{name}` failed at case {i} (seed={}):\n  input: {input:?}\n  {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Prop::new(32).check(
+            "add-commutes",
+            |r| (r.range(0, 1000), r.range(0, 1000)),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn reports_failures() {
+        Prop::new(4).check("always-fails", |r| r.next_u64(), |_| Err("no".into()));
+    }
+}

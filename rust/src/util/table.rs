@@ -1,0 +1,150 @@
+//! Fixed-width text table renderer producing the paper-style rows printed
+//! by `report::tables` and the `nlp-dse table` CLI subcommand.
+
+pub struct TextTable {
+    pub title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    aligns: Vec<Align>,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+impl TextTable {
+    pub fn new(title: &str, headers: &[&str]) -> TextTable {
+        TextTable {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+        }
+    }
+
+    pub fn align(&mut self, col: usize, a: Align) -> &mut Self {
+        self.aligns[col] = a;
+        self
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Insert a horizontal separator (rendered as a dashed row).
+    pub fn sep(&mut self) -> &mut Self {
+        self.rows.push(vec!["--".to_string(); self.headers.len()]);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncol - 1);
+        let mut out = String::new();
+        out.push_str(&format!("{}\n", self.title));
+        out.push_str(&"=".repeat(total.max(self.title.len())));
+        out.push('\n');
+        let fmt_row = |cells: &[String], widths: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str(" | ");
+                }
+                if aligns[i] == Align::Left {
+                    line.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    line.push_str(&format!("{:>w$}", c, w = widths[i]));
+                }
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths, &self.aligns));
+        out.push('\n');
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for r in &self.rows {
+            if r.iter().all(|c| c == "--") {
+                out.push_str(&"-".repeat(total));
+            } else {
+                out.push_str(&fmt_row(r, &widths, &self.aligns));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Tab-separated form for machine consumption / plotting.
+    pub fn to_tsv(&self) -> String {
+        let mut out = self.headers.join("\t");
+        out.push('\n');
+        for r in &self.rows {
+            if r.iter().all(|c| c == "--") {
+                continue;
+            }
+            out.push_str(&r.join("\t"));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers shared by report tables.
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+pub fn i0(x: f64) -> String {
+    format!("{}", x.round() as i64)
+}
+pub fn ratio(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TextTable::new("Table X", &["Kernel", "GF/s"]);
+        t.row(vec!["2mm".into(), "117.48".into()]);
+        t.row(vec!["gramschmidt".into(), "2.34".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("2mm"));
+        let lines: Vec<&str> = s.lines().collect();
+        // data rows equal width
+        assert_eq!(lines[4].len(), lines[5].len());
+    }
+
+    #[test]
+    fn tsv_skips_separators() {
+        let mut t = TextTable::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]).sep().row(vec!["3".into(), "4".into()]);
+        let tsv = t.to_tsv();
+        assert_eq!(tsv.lines().count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn arity_checked() {
+        let mut t = TextTable::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

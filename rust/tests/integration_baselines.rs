@@ -1,0 +1,118 @@
+//! Baseline engines vs NLP-DSE: the comparative *shapes* the paper claims.
+
+use nlp_dse::baselines::{run_autodse, run_harp, AutoDseConfig, HarpConfig};
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::dse::{run_nlp_dse, DseConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::RustFeatureEvaluator;
+use nlp_dse::poly::Analysis;
+use nlp_dse::util::stats::mean;
+
+#[test]
+fn nlpdse_faster_than_autodse_on_motivation_trio() {
+    let dev = Device::u200();
+    let mut time_ratios = Vec::new();
+    for (name, size) in [
+        ("2mm", Size::Medium),
+        ("gemm", Size::Medium),
+        ("gramschmidt", Size::Large),
+    ] {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let n = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+        let auto = run_autodse(&k, &a, &dev, &AutoDseConfig::default());
+        assert!(
+            n.dse_minutes < auto.dse_minutes,
+            "{name}: NLP-DSE {} min !< AutoDSE {} min",
+            n.dse_minutes,
+            auto.dse_minutes
+        );
+        time_ratios.push(auto.dse_minutes / n.dse_minutes);
+        // QoR within a band: our AutoDSE baseline hill-climbs on measured
+        // values and is stronger than the published tool (EXPERIMENTS.md
+        // §Divergences); the reproduction target is the time advantage at
+        // near-parity QoR
+        assert!(
+            n.best_gflops >= auto.best_gflops * 0.5,
+            "{name}: NLP-DSE {} ≪ AutoDSE {}",
+            n.best_gflops,
+            auto.best_gflops
+        );
+    }
+    assert!(
+        mean(&time_ratios) > 1.5,
+        "mean DSE-time improvement {:.2} too small",
+        mean(&time_ratios)
+    );
+}
+
+#[test]
+fn autodse_explores_much_more_than_nlpdse() {
+    // Table 5 shape: AutoDSE's DE is an order of magnitude above NLP-DSE's
+    let dev = Device::u200();
+    let k = benchmarks::build("atax", Size::Medium, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let n = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+    let auto = run_autodse(&k, &a, &dev, &AutoDseConfig::default());
+    assert!(
+        auto.designs_explored as f64 >= 2.0 * n.designs_explored as f64,
+        "AutoDSE DE {} vs NLP-DSE DE {}",
+        auto.designs_explored,
+        n.designs_explored
+    );
+    assert!(auto.early_rejected > 0, "AutoDSE must hit Merlin rejections");
+}
+
+#[test]
+fn harp_comparable_time_comparable_qor() {
+    // Table 9 shape: NLP-DSE ≥ ~HARP on most kernels, similar DSE time
+    let dev = Device::u200();
+    let mut wins = 0;
+    let mut total = 0;
+    for name in ["gemm", "bicg", "mvt", "gesummv", "atax"] {
+        let k = benchmarks::build(name, Size::Small, DType::F64).unwrap();
+        let a = Analysis::new(&k);
+        let n = run_nlp_dse(
+            &k,
+            &a,
+            &dev,
+            &DseConfig {
+                ladder: DseConfig::harp_ladder(),
+                ..DseConfig::default()
+            },
+            &RustFeatureEvaluator,
+        );
+        let h = run_harp(
+            &k,
+            &a,
+            &dev,
+            &HarpConfig {
+                sweep_configs: 10_000,
+                ..HarpConfig::default()
+            },
+        );
+        total += 1;
+        if n.best_gflops >= h.best_gflops * 0.9 {
+            wins += 1;
+        }
+    }
+    assert!(
+        wins * 10 >= total * 6,
+        "NLP-DSE should match-or-beat HARP on most kernels ({wins}/{total})"
+    );
+}
+
+#[test]
+fn engines_deterministic_cross_run() {
+    let dev = Device::u200();
+    let k = benchmarks::build("syrk", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let a1 = run_autodse(&k, &a, &dev, &AutoDseConfig::default());
+    let a2 = run_autodse(&k, &a, &dev, &AutoDseConfig::default());
+    assert_eq!(a1.best_gflops, a2.best_gflops);
+    assert_eq!(a1.designs_explored, a2.designs_explored);
+    let h1 = run_harp(&k, &a, &dev, &HarpConfig { sweep_configs: 3_000, ..Default::default() });
+    let h2 = run_harp(&k, &a, &dev, &HarpConfig { sweep_configs: 3_000, ..Default::default() });
+    assert_eq!(h1.best_gflops, h2.best_gflops);
+}

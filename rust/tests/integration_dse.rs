@@ -1,0 +1,138 @@
+//! Full Algorithm-1 DSE integration over several kernels + the campaign
+//! coordinator.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::coordinator::{run_campaign, CampaignConfig, Engines};
+use nlp_dse::dse::{run_nlp_dse, DseConfig};
+use nlp_dse::hls::{Device, HlsOracle};
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::RustFeatureEvaluator;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+
+fn dse(name: &str, size: Size) -> (nlp_dse::dse::DseOutcome, Analysis, Device) {
+    let k = benchmarks::build(name, size, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let o = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+    (o, a, dev)
+}
+
+#[test]
+fn nlpdse_beats_original_across_suite_medium() {
+    let dev = Device::u200();
+    for name in ["2mm", "gemm", "atax", "bicg", "mvt", "gesummv", "doitgen"] {
+        let k = benchmarks::build(name, Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let orig = HlsOracle::new(dev.clone())
+            .synth(&k, &a, &Design::empty(&k))
+            .gflops(&a, &dev);
+        let (o, ..) = dse(name, Size::Medium);
+        assert!(
+            o.best_gflops >= orig,
+            "{name}: NLP-DSE {} < original {orig}",
+            o.best_gflops
+        );
+        assert!(o.designs_explored >= 1, "{name}");
+        assert!(o.dse_minutes > 0.0, "{name}");
+    }
+}
+
+#[test]
+fn trace_lower_bounds_ascend_within_ladder() {
+    // along the descending partitioning ladder, the per-subspace optima
+    // (lower bounds) must be non-decreasing for a fixed parallelism mode
+    let (o, ..) = dse("gemm", Size::Medium);
+    let mut last_coarse = 0.0f64;
+    let mut last_fine = 0.0f64;
+    for s in o.trace.iter().filter(|s| s.lower_bound.is_finite()) {
+        let slot = if s.fine_only { &mut last_fine } else { &mut last_coarse };
+        assert!(
+            s.lower_bound >= *slot * 0.999,
+            "step {}: LB {} regressed below {}",
+            s.step,
+            s.lower_bound,
+            slot
+        );
+        *slot = s.lower_bound;
+    }
+}
+
+#[test]
+fn best_design_matches_trace_best() {
+    let (o, a, dev) = dse("2mm", Size::Medium);
+    let best_trace = o
+        .trace
+        .iter()
+        .filter(|s| s.valid)
+        .map(|s| s.gflops)
+        .fold(0.0f64, f64::max);
+    assert!((o.best_gflops - best_trace).abs() < 1e-9);
+    // and the recorded best design re-synthesizes to the same number
+    let k = benchmarks::build("2mm", Size::Medium, DType::F32).unwrap();
+    let (bd, cycles) = o.best.unwrap();
+    let rep = HlsOracle::new(dev.clone()).synth(&k, &a, &bd);
+    assert_eq!(rep.cycles, cycles);
+}
+
+#[test]
+fn fs_design_is_first_valid_in_trace() {
+    let (o, ..) = dse("gramschmidt", Size::Medium);
+    let first_valid = o.trace.iter().find(|s| s.valid).map(|s| s.gflops);
+    assert_eq!(first_valid, Some(o.first_synth_gflops));
+}
+
+#[test]
+fn campaign_full_row_consistency() {
+    let mut cfg = CampaignConfig::quick();
+    cfg.kernels = vec![
+        ("gemm".into(), Size::Small),
+        ("bicg".into(), Size::Small),
+    ];
+    cfg.engines = Engines::all();
+    cfg.harp.sweep_configs = 2_000;
+    let r = run_campaign(&cfg);
+    assert_eq!(r.rows.len(), 2);
+    for row in &r.rows {
+        assert!(row.space_size > 1.0, "{}", row.name);
+        assert!(row.nl >= 2);
+        assert!(row.original_gflops > 0.0);
+        let n = row.nlpdse.as_ref().unwrap();
+        assert!(n.best_gflops >= row.original_gflops * 0.999);
+        assert!(n.first_synth_gflops <= n.best_gflops * 1.0001);
+    }
+}
+
+#[test]
+fn harp_ladder_config_runs() {
+    let k = benchmarks::build("gemver", Size::Small, DType::F64).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let cfg = DseConfig {
+        ladder: DseConfig::harp_ladder(),
+        ..DseConfig::default()
+    };
+    let o = run_nlp_dse(&k, &a, &dev, &cfg, &RustFeatureEvaluator);
+    assert!(o.best_gflops > 0.0);
+    // 750 is part of the HARP ladder
+    assert!(o.trace.iter().any(|s| s.cap == 750));
+}
+
+#[test]
+fn dse_handles_fully_serial_kernel() {
+    // seidel-2d has no legal parallelism: the DSE must still terminate
+    // with a valid (pipelined-only) design
+    let (o, ..) = dse("seidel-2d", Size::Small);
+    assert!(o.best.is_some(), "seidel must still produce a design");
+    assert!(o.best_gflops > 0.0);
+}
+
+#[test]
+fn figure6_narrative_for_2mm() {
+    // the paper's Section 8 walk: dedup steps exist (same configs found at
+    // neighbouring rungs), and the best design arrives within ~10 steps
+    let (o, ..) = dse("2mm", Size::Medium);
+    assert!(o.trace.iter().any(|s| s.dedup), "expected dedup steps");
+    assert!(o.steps_to_best <= 12, "steps_to_best {}", o.steps_to_best);
+    assert!(o.steps_to_terminate <= 22);
+}

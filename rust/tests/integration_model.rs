@@ -1,0 +1,178 @@
+//! Cross-module model integration: analytical model ↔ Merlin ↔ HLS oracle
+//! over the whole benchmark suite.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::{Device, HlsOracle};
+use nlp_dse::ir::{DType, LoopId};
+use nlp_dse::model;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::{Design, Space};
+
+fn sizes_for(name: &str) -> Vec<Size> {
+    if name == "cnn" {
+        vec![Size::Medium]
+    } else {
+        vec![Size::Small, Size::Medium]
+    }
+}
+
+#[test]
+fn lower_bound_holds_for_empty_designs_full_suite() {
+    let dev = Device::u200();
+    let oracle = HlsOracle::new(dev.clone());
+    for name in benchmarks::ALL {
+        for size in sizes_for(name) {
+            let k = benchmarks::build(name, size, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            let d = Design::empty(&k);
+            let lb = model::evaluate(&k, &a, &dev, &d);
+            let rep = oracle.synth(&k, &a, &d);
+            assert!(rep.valid, "{name}-{size:?}: empty design must synthesize");
+            assert!(
+                rep.flattened || rep.cycles >= lb.total_cycles * 0.999,
+                "{name}-{size:?}: measured {} < bound {}",
+                rep.cycles,
+                lb.total_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn lower_bound_holds_for_pipelined_designs_full_suite() {
+    let dev = Device::u200();
+    let oracle = HlsOracle::new(dev.clone());
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        // pipeline every innermost loop with a modest unroll
+        for i in 0..k.n_loops() {
+            let l = LoopId(i as u32);
+            if !k.loop_meta(l).innermost {
+                continue;
+            }
+            let mut d = Design::empty(&k);
+            d.get_mut(l).pipeline = true;
+            let tc = &a.tcs[i];
+            if tc.is_constant() && tc.max % 2 == 0 && !a.deps.per_loop[i].serializing {
+                d.get_mut(l).uf = 2;
+            }
+            let lb = model::evaluate(&k, &a, &dev, &d);
+            let rep = oracle.synth(&k, &a, &d);
+            if !rep.valid || rep.flattened {
+                continue;
+            }
+            assert!(
+                rep.cycles >= lb.total_cycles * 0.999,
+                "{name} L{i}: measured {} < bound {}",
+                rep.cycles,
+                lb.total_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn model_monotone_in_fine_grained_unroll() {
+    // more fine-grained parallelism on the pipelined innermost loop never
+    // raises the bound
+    let dev = Device::u200();
+    for name in ["gemm", "bicg", "gesummv", "mvt", "doitgen"] {
+        let k = benchmarks::build(name, Size::Medium, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let space = Space::new(&k, &a);
+        for i in 0..k.n_loops() {
+            let l = LoopId(i as u32);
+            if !k.loop_meta(l).innermost {
+                continue;
+            }
+            let mut prev = f64::INFINITY;
+            for uf in space.ufs(l, &a, u64::MAX) {
+                let mut d = Design::empty(&k);
+                d.get_mut(l).pipeline = true;
+                d.get_mut(l).uf = uf;
+                let r = model::evaluate(&k, &a, &dev, &d);
+                assert!(
+                    r.comp_cycles <= prev * 1.0001,
+                    "{name} L{i} uf={uf}: {} > {prev}",
+                    r.comp_cycles
+                );
+                prev = r.comp_cycles;
+            }
+        }
+    }
+}
+
+#[test]
+fn feature_encoding_stays_lower_bound_suite_wide() {
+    // encoded-formula evaluation ≤ precise model (documented
+    // under-approximation), across the suite and several designs
+    let dev = Device::u200();
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, Size::Small, DType::F32)
+            .or_else(|| benchmarks::build(name, Size::Medium, DType::F32))
+            .unwrap();
+        let a = Analysis::new(&k);
+        let mut designs = vec![Design::empty(&k)];
+        for i in 0..k.n_loops() {
+            if k.loop_meta(LoopId(i as u32)).innermost {
+                let mut d = Design::empty(&k);
+                d.get_mut(LoopId(i as u32)).pipeline = true;
+                designs.push(d);
+            }
+        }
+        for d in &designs {
+            let Some(f) = model::encode_design(&k, &a, &dev, d) else {
+                continue;
+            };
+            let (lat, _) = model::eval_features(&f);
+            let precise = model::evaluate(&k, &a, &dev, d).total_cycles;
+            assert!(
+                lat <= precise * 1.02 + 1.0,
+                "{name}: features {lat} > precise {precise}"
+            );
+        }
+    }
+}
+
+#[test]
+fn dsp_accounting_consistent_between_paths() {
+    let dev = Device::u200();
+    for name in ["gemm", "2mm", "syrk"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        for i in 0..k.n_loops() {
+            let l = LoopId(i as u32);
+            if !k.loop_meta(l).innermost {
+                continue;
+            }
+            let mut d = Design::empty(&k);
+            d.get_mut(l).pipeline = true;
+            d.get_mut(l).uf = a.tcs[i].max.max(1);
+            let precise = model::evaluate(&k, &a, &dev, &d);
+            if let Some(f) = model::encode_design(&k, &a, &dev, &d) {
+                let (_, dsp) = model::eval_features(&f);
+                assert!(
+                    dsp <= precise.dsp * 1.01 + 1.0,
+                    "{name} L{i}: feature dsp {dsp} > precise {}",
+                    precise.dsp
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn gramschmidt_triangular_latency_sane() {
+    // triangular loops must use TC_avg, not TC_max: total iterations of
+    // the j-loop body ≈ N²/2, not N²
+    let dev = Device::u200();
+    let k = benchmarks::build("gramschmidt", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let d = Design::empty(&k);
+    let r = model::evaluate(&k, &a, &dev, &d);
+    // N=80, M=60: full-rectangular accounting would give ≥ N*N*M = 384k
+    // pipeline starts on S5 alone; the triangular average halves it
+    assert!(r.comp_cycles < 80.0 * 80.0 * 60.0 * 4.0, "{}", r.comp_cycles);
+    assert!(r.comp_cycles > 80.0 * 40.0 * 60.0 * 0.5, "{}", r.comp_cycles);
+}

@@ -1,0 +1,114 @@
+//! End-to-end runtime integration: the AOT artifact (jax → HLO text →
+//! PJRT) must reproduce the Rust feature evaluation to 1e-6 relative —
+//! the cross-language ABI contract of DESIGN.md §3.
+//!
+//! Requires `make artifacts`; tests are skipped (pass vacuously, with a
+//! note) when the artifacts have not been built.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, LoopId};
+use nlp_dse::model;
+use nlp_dse::nlp::{BatchEvaluator, NlpProblem, RustFeatureEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use nlp_dse::runtime::{default_artifact_dir, XlaEvaluator};
+
+fn evaluator() -> Option<XlaEvaluator> {
+    match XlaEvaluator::load(&default_artifact_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("[skip] artifacts unavailable: {err:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_matches_rust_reference_across_designs() {
+    let Some(eval) = evaluator() else { return };
+    for name in ["gemm", "2mm", "bicg", "atax", "gesummv", "mvt", "doitgen"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        // a spread of designs: empty, pipelined, unrolled
+        let mut designs = vec![Design::empty(&k)];
+        for i in 0..k.n_loops() {
+            if k.loop_meta(LoopId(i as u32)).innermost {
+                let mut d = Design::empty(&k);
+                d.get_mut(LoopId(i as u32)).pipeline = true;
+                designs.push(d.clone());
+                if a.tcs[i].is_constant() && a.tcs[i].max % 2 == 0 {
+                    d.get_mut(LoopId(i as u32)).uf = 2;
+                    designs.push(d);
+                }
+            }
+        }
+        let feats: Vec<_> = designs
+            .iter()
+            .filter_map(|d| model::encode_design(&k, &a, &dev, d))
+            .collect();
+        assert!(!feats.is_empty(), "{name}");
+        let got = eval.eval_features(&feats).expect("execute artifact");
+        for (f, (lat_x, dsp_x)) in feats.iter().zip(&got) {
+            let (lat_r, dsp_r) = model::eval_features(f);
+            let rel = (lat_x - lat_r).abs() / lat_r.abs().max(1.0);
+            assert!(rel < 1e-6, "{name}: artifact {lat_x} vs rust {lat_r}");
+            let rel_d = (dsp_x - dsp_r).abs() / dsp_r.abs().max(1.0);
+            assert!(rel_d < 1e-6, "{name}: dsp {dsp_x} vs {dsp_r}");
+        }
+    }
+}
+
+#[test]
+fn artifact_batching_pads_correctly() {
+    let Some(eval) = evaluator() else { return };
+    let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let f = model::encode_design(&k, &a, &dev, &Design::empty(&k)).unwrap();
+    // 1 design, then a batch bigger than the artifact batch (forces 2 execs)
+    let one = eval.eval_features(&[f.clone()]).unwrap();
+    let many = eval.eval_features(&vec![f; eval.batch + 3]).unwrap();
+    assert_eq!(many.len(), eval.batch + 3);
+    for v in &many {
+        assert_eq!(v.0, one[0].0);
+        assert_eq!(v.1, one[0].1);
+    }
+}
+
+#[test]
+fn xla_and_rust_evaluators_agree_in_solver_use() {
+    let Some(eval) = evaluator() else { return };
+    let k = benchmarks::build("bicg", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let p = NlpProblem::new(&k, &a, &dev, 256, false);
+    let mut designs = vec![Design::empty(&k)];
+    let mut d = Design::empty(&k);
+    d.get_mut(LoopId(2)).pipeline = true;
+    designs.push(d);
+    let via_xla = eval.eval_batch(&p, &designs);
+    let via_rust = RustFeatureEvaluator.eval_batch(&p, &designs);
+    for (x, r) in via_xla.iter().zip(&via_rust) {
+        assert!((x.0 - r.0).abs() / r.0.max(1.0) < 1e-6, "{x:?} vs {r:?}");
+    }
+}
+
+#[test]
+fn full_nlp_solve_through_xla_path() {
+    let Some(eval) = evaluator() else { return };
+    let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let p = NlpProblem::new(&k, &a, &dev, 256, false);
+    let via_xla = nlp_dse::nlp::solve(&p, 60.0, 1, &eval);
+    let via_rust = nlp_dse::nlp::solve(&p, 60.0, 1, &RustFeatureEvaluator);
+    let bx = via_xla.best().expect("xla best").1;
+    let br = via_rust.best().expect("rust best").1;
+    assert!(
+        (bx - br).abs() / br < 1e-9,
+        "solver optima must agree: xla {bx} vs rust {br}"
+    );
+    assert!(eval.executions.get() > 0, "XLA path must actually execute");
+}

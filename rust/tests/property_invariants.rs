@@ -1,0 +1,240 @@
+//! Property-based tests over the DESIGN.md §6 invariants, using the
+//! in-repo mini property-testing driver (`util::proptest`).
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::{Device, HlsOracle};
+use nlp_dse::ir::{DType, Kernel, LoopId};
+use nlp_dse::model;
+use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::{space, Design, Space};
+use nlp_dse::util::proptest::Prop;
+use nlp_dse::util::rng::Rng;
+
+const KERNELS: [&str; 8] = [
+    "gemm", "2mm", "bicg", "atax", "mvt", "gesummv", "syrk", "doitgen",
+];
+
+/// Draw a random *legal* design (pipeline antichain + divisor UFs).
+fn random_design(rng: &mut Rng, k: &Kernel, a: &Analysis, s: &Space) -> Design {
+    let cfg = s
+        .pipeline_configs
+        .get(rng.range(0, s.pipeline_configs.len() as u64) as usize)
+        .unwrap()
+        .clone();
+    let drawn: Vec<u64> = (0..k.n_loops())
+        .map(|i| {
+            let menu = s.ufs(LoopId(i as u32), a, 1024);
+            if menu.is_empty() {
+                1
+            } else {
+                menu[rng.range(0, menu.len() as u64) as usize]
+            }
+        })
+        .collect();
+    space::materialize(k, a, &cfg, &|l| drawn[l.0 as usize], &|_| 1)
+}
+
+#[test]
+fn prop_lower_bound_vs_oracle() {
+    // Invariant 1: model LB ≤ oracle latency for every valid non-flatten
+    // synthesis, across random legal designs.
+    let dev = Device::u200();
+    let oracle = HlsOracle::new(dev.clone());
+    for name in KERNELS {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        Prop::new(48).check(
+            &format!("lb-vs-oracle/{name}"),
+            |rng| random_design(rng, &k, &a, &s).fingerprint(),
+            |fp| {
+                // regenerate from fingerprint-compatible draw: use the same
+                // rng seed path by drawing again; simpler: rebuild design
+                // from a fresh rng seeded by the fingerprint hash
+                let mut rng = Rng::new(nlp_dse::util::rng::hash64(fp));
+                let d = random_design(&mut rng, &k, &a, &s);
+                let lb = model::evaluate(&k, &a, &dev, &d);
+                let rep = oracle.synth(&k, &a, &d);
+                if !rep.valid || rep.flattened {
+                    return Ok(());
+                }
+                if rep.cycles >= lb.total_cycles * 0.999 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "measured {} < bound {} for {}",
+                        rep.cycles,
+                        lb.total_cycles,
+                        d.fingerprint()
+                    ))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_feature_encoding_under_precise() {
+    // Invariant 3 (one side): encoded formula ≤ precise model.
+    let dev = Device::u200();
+    for name in KERNELS {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        Prop::new(48).check(
+            &format!("features-le-precise/{name}"),
+            |rng| random_design(rng, &k, &a, &s),
+            |d| {
+                let Some(f) = model::encode_design(&k, &a, &dev, d) else {
+                    return Ok(());
+                };
+                let (lat, _) = model::eval_features(&f);
+                let precise = model::evaluate(&k, &a, &dev, d).total_cycles;
+                if lat <= precise * 1.02 + 1.0 {
+                    Ok(())
+                } else {
+                    Err(format!("features {lat} > precise {precise}"))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_oracle_determinism() {
+    // Invariant 6: identical designs → identical reports.
+    let dev = Device::u200();
+    let oracle = HlsOracle::new(dev.clone());
+    for name in ["gemm", "2mm"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        Prop::new(24).check(
+            &format!("oracle-deterministic/{name}"),
+            |rng| random_design(rng, &k, &a, &s),
+            |d| {
+                let r1 = oracle.synth(&k, &a, d);
+                let r2 = oracle.synth(&k, &a, d);
+                if r1.cycles == r2.cycles
+                    && r1.synth_minutes == r2.synth_minutes
+                    && r1.valid == r2.valid
+                {
+                    Ok(())
+                } else {
+                    Err("non-deterministic report".into())
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_solver_never_beats_relaxation() {
+    // the solver's returned objective can never be below its own proven
+    // lower bound (anytime-soundness)
+    let dev = Device::u200();
+    Prop::new(12).check(
+        "solver-anytime-sound",
+        |rng| {
+            let name = *rng.choose(&KERNELS);
+            let cap = *rng.choose(&[8u64, 64, 256, 1024]);
+            (name, cap)
+        },
+        |&(name, cap)| {
+            let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            let p = NlpProblem::new(&k, &a, &dev, cap, false);
+            let r = nlp::solve(&p, 10.0, 1, &RustFeatureEvaluator);
+            match r.best() {
+                Some((_, obj)) => {
+                    if *obj >= r.lower_bound - 1.0 {
+                        Ok(())
+                    } else {
+                        Err(format!("obj {obj} < proven lb {}", r.lower_bound))
+                    }
+                }
+                None => Ok(()),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_pruning_safety() {
+    // Invariant 5: any design whose LB exceeds a measured latency is
+    // really never better when force-synthesized.
+    let dev = Device::u200();
+    let oracle = HlsOracle::new(dev.clone());
+    for name in ["gemm", "bicg"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        // a reference measurement
+        let mut dref = Design::empty(&k);
+        for i in 0..k.n_loops() {
+            if k.loop_meta(LoopId(i as u32)).innermost {
+                dref.get_mut(LoopId(i as u32)).pipeline = true;
+                break;
+            }
+        }
+        let ref_rep = oracle.synth(&k, &a, &dref);
+        assert!(ref_rep.valid);
+        Prop::new(48).check(
+            &format!("pruning-safe/{name}"),
+            |rng| random_design(rng, &k, &a, &s),
+            |d| {
+                let lb = model::evaluate(&k, &a, &dev, d).total_cycles;
+                if lb < ref_rep.cycles {
+                    return Ok(()); // not pruned
+                }
+                let rep = oracle.synth(&k, &a, d);
+                if !rep.valid || rep.flattened {
+                    return Ok(());
+                }
+                if rep.cycles >= ref_rep.cycles * 0.999 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "pruned design measured {} beats reference {}",
+                        rep.cycles, ref_rep.cycles
+                    ))
+                }
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_partitioning_merge_monotone() {
+    // partitioning grows monotonically with UFs (the solver's pruning
+    // assumption)
+    for name in KERNELS {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        Prop::new(32).check(
+            &format!("partition-monotone/{name}"),
+            |rng| {
+                let d = random_design(rng, &k, &a, &s);
+                let li = rng.range(0, k.n_loops() as u64) as usize;
+                (d, li)
+            },
+            |(d, li)| {
+                let base = d.max_partitioning(&k);
+                let mut d2 = d.clone();
+                let tc = &a.tcs[*li];
+                if !tc.is_constant() {
+                    return Ok(());
+                }
+                d2.pragmas[*li].uf = tc.max.max(1);
+                let grown = d2.max_partitioning(&k);
+                if grown >= base {
+                    Ok(())
+                } else {
+                    Err(format!("partitioning shrank {base} -> {grown}"))
+                }
+            },
+        );
+    }
+}
