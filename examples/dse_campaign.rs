@@ -2,23 +2,43 @@
 //! emitting the Table-5-style comparison and a JSON dump.
 //!
 //! ```bash
-//! cargo run --release --example dse_campaign -- [quick|paper|harp]
+//! cargo run --release --example dse_campaign -- [quick|paper|harp] [engines]
 //! ```
+//!
+//! The optional second argument is a comma-separated list of registry
+//! engine names (e.g. `nlpdse,random`); the coordinator schedules one
+//! `Box<dyn Engine>` job per (kernel, engine) pair. Third-party
+//! engines join the same way through
+//! `coordinator::run_campaign_with(&my_registry, &cfg)` — no
+//! coordinator edit.
 
 use nlp_dse::cli::campaign_json;
 use nlp_dse::coordinator::{run_campaign, CampaignConfig};
+use nlp_dse::engine::Registry;
 use nlp_dse::report;
 
 fn main() {
     let scope = std::env::args().nth(1).unwrap_or_else(|| "quick".into());
-    let cfg = match scope.as_str() {
+    let mut cfg = match scope.as_str() {
         "paper" => CampaignConfig::paper_autodse(),
         "harp" => CampaignConfig::paper_harp(),
         _ => CampaignConfig::quick(),
     };
+    if let Some(list) = std::env::args().nth(2) {
+        let reg = Registry::builtin();
+        cfg.engines = list.split(',').map(|s| s.trim().to_string()).collect();
+        for e in &cfg.engines {
+            assert!(
+                reg.contains(e),
+                "unknown engine `{e}` (registered: {})",
+                reg.names().join(", ")
+            );
+        }
+    }
     eprintln!(
-        "[campaign] {} kernel instances on {} threads",
+        "[campaign] {} kernel instances × engines [{}] on {} threads",
         cfg.kernels.len(),
+        cfg.engines.join(", "),
         cfg.threads
     );
     let t0 = std::time::Instant::now();

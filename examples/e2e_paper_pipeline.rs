@@ -3,28 +3,30 @@
 //!
 //!   L1/L2 (Pallas/JAX, AOT-compiled to `artifacts/lat_bound.hlo.txt`)
 //!   → runtime (PJRT CPU client executing the artifact from Rust)
-//!   → L3 (NLP solver + Algorithm-1 DSE against the simulated
-//!     Merlin/Vitis toolchain)
+//!   → L3 (the `Explorer` facade running the `nlpdse` and `autodse`
+//!     engines against the simulated Merlin/Vitis toolchain)
 //!
 //! Workload: the motivation trio of Tables 1–3 (2mm-M, gemm-M,
 //! gramschmidt-L) with both NLP-DSE and AutoDSE, reporting the paper's
 //! headline metric — throughput (GF/s) and DSE time (min) improvements.
 //! The run is recorded in EXPERIMENTS.md.
 //!
+//! The XLA evaluator is injected through `Evaluator::custom`, keeping a
+//! handle on the instrumented evaluator so the example can assert the
+//! artifact was actually exercised on the DSE hot path.
+//!
 //! ```bash
 //! make artifacts && cargo run --release --example e2e_paper_pipeline
 //! ```
+//! (requires a build with `--features xla`)
 
-use nlp_dse::baselines::{run_autodse, AutoDseConfig};
-use nlp_dse::benchmarks::{self, Size};
-use nlp_dse::dse::{run_nlp_dse, DseConfig};
+use nlp_dse::benchmarks::Size;
+use nlp_dse::engine::{Evaluator, Explorer};
 use nlp_dse::hls::{Device, HlsOracle};
-use nlp_dse::ir::DType;
-use nlp_dse::nlp::BatchEvaluator;
-use nlp_dse::poly::Analysis;
 use nlp_dse::pragma::Design;
 use nlp_dse::runtime::{default_artifact_dir, XlaEvaluator};
 use nlp_dse::util::table::{f2, i0, ratio, TextTable};
+use std::rc::Rc;
 
 fn main() {
     // --- layer check: the AOT artifact must load and execute ----------------
@@ -34,7 +36,7 @@ fn main() {
                 "[e2e] XLA artifact loaded (batch={}) — python is NOT on the request path",
                 e.batch
             );
-            e
+            Rc::new(e)
         }
         Err(e) => {
             eprintln!("[e2e] artifacts missing ({e:#}); run `make artifacts` first");
@@ -57,28 +59,32 @@ fn main() {
     );
 
     for (name, size) in trio {
-        let k = benchmarks::build(name, size, DType::F32).unwrap();
-        let a = Analysis::new(&k);
+        let explorer = Explorer::kernel(name, size)
+            .expect("registered benchmark")
+            .device(device.clone())
+            .evaluator(Evaluator::custom(eval.clone()));
+        let k = explorer.kernel_ref();
+        let a = explorer.analysis();
         let oracle = HlsOracle::new(device.clone());
-        let orig = oracle.synth(&k, &a, &Design::empty(&k)).gflops(&a, &device);
+        let orig = oracle.synth(k, a, &Design::empty(k)).gflops(a, &device);
 
         let execs_before = eval.executions.get();
-        let n = run_nlp_dse(&k, &a, &device, &DseConfig::default(), &eval);
+        let n = explorer.run_engine("nlpdse").expect("nlpdse engine");
         let execs = eval.executions.get() - execs_before;
         assert!(execs > 0, "the XLA artifact must be exercised");
 
-        let auto = run_autodse(&k, &a, &device, &AutoDseConfig::default());
+        let auto = explorer.run_engine("autodse").expect("autodse engine");
 
         table.row(vec![
             format!("{name}-{}", size.tag()),
             f2(orig),
             f2(n.best_gflops),
-            i0(n.dse_minutes),
+            i0(n.wall_minutes),
             execs.to_string(),
             f2(auto.best_gflops),
-            i0(auto.dse_minutes),
+            i0(auto.wall_minutes),
             ratio(n.best_gflops / auto.best_gflops.max(1e-9)),
-            ratio(auto.dse_minutes / n.dse_minutes.max(1e-9)),
+            ratio(auto.wall_minutes / n.wall_minutes.max(1e-9)),
         ]);
         // the paper's core claims, as assertions:
         assert!(
@@ -86,12 +92,11 @@ fn main() {
             "{name}: NLP-DSE must beat the pragma-free design"
         );
         assert!(
-            n.dse_minutes < auto.dse_minutes,
+            n.wall_minutes < auto.wall_minutes,
             "{name}: NLP-DSE must be faster than AutoDSE"
         );
     }
     println!("\n{}", table.render());
     // sanity line consumed by EXPERIMENTS.md
-    let _ = eval;
     println!("[e2e] all layer-composition checks passed");
 }

@@ -1,5 +1,5 @@
 //! Bring-your-own-kernel: define a custom affine kernel with the builder
-//! API and let NLP-DSE insert pragmas for it.
+//! API and let the `Explorer` facade insert pragmas for it.
 //!
 //! ```bash
 //! cargo run --release --example pragma_insertion
@@ -8,13 +8,11 @@
 //! The kernel is a blocked dot-product chain (`y[i] = Σ_j A[i][j]·x[j]`,
 //! then `z = Σ y[i]`) — not part of the PolyBench suite, demonstrating
 //! that the whole pipeline (analysis → NLP → Merlin/HLS verification)
-//! works on user programs.
+//! works on user programs: `Explorer::custom` accepts any `Kernel` and
+//! every registered engine runs on it unchanged.
 
-use nlp_dse::dse::{run_nlp_dse, DseConfig};
-use nlp_dse::hls::Device;
+use nlp_dse::engine::{Evaluator, Explorer};
 use nlp_dse::ir::{ArrayDir, DType, KernelBuilder, OpKind};
-use nlp_dse::nlp::RustFeatureEvaluator;
-use nlp_dse::poly::Analysis;
 
 fn main() {
     // --- define the kernel ---------------------------------------------------
@@ -50,8 +48,14 @@ fn main() {
             &[(OpKind::Add, 1)],
         );
     });
-    let kernel = kb.finish();
-    let analysis = Analysis::new(&kernel);
+
+    // --- hand the kernel to the facade ---------------------------------------
+    let explorer = Explorer::custom(kb.finish())
+        .evaluator(Evaluator::rust())
+        .engine("nlpdse")
+        .expect("nlpdse is a registered engine");
+    let kernel = explorer.kernel_ref();
+    let analysis = explorer.analysis();
     println!(
         "kernel {}: {} loops, {} deps; reduction loops: {:?}",
         kernel.name,
@@ -62,20 +66,13 @@ fn main() {
             .collect::<Vec<_>>()
     );
 
-    // --- run the full DSE (Algorithm 1) -------------------------------------
-    let device = Device::u200();
-    let out = run_nlp_dse(
-        &kernel,
-        &analysis,
-        &device,
-        &DseConfig::default(),
-        &RustFeatureEvaluator,
-    );
+    // --- run the full DSE (Algorithm 1) --------------------------------------
+    let out = explorer.run().expect("exploration succeeds");
     println!(
         "\nNLP-DSE: best {:.2} GF/s (first synthesizable {:.2}), {:.0} simulated minutes, \
          {} designs explored",
-        out.best_gflops, out.first_synth_gflops, out.dse_minutes, out.designs_explored
+        out.best_gflops, out.first_synth_gflops, out.wall_minutes, out.synth_calls
     );
     let (best, cycles) = out.best.expect("found a design");
-    println!("best design ({cycles:.0} cycles):\n{}", best.render(&kernel));
+    println!("best design ({cycles:.0} cycles):\n{}", best.render(kernel));
 }

@@ -4,23 +4,34 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Builds `gemm` (medium size), formulates the NLP, solves it, prints the
-//! chosen pragma configuration with its latency lower bound, and verifies
-//! the design against the simulated Merlin+Vitis toolchain.
+//! The **front door** is the `Explorer` session facade: pick a kernel,
+//! pick an engine from the registry (`nlpdse`, `autodse`, `harp`,
+//! `random`, …), and run — the facade owns kernel construction, exact
+//! analysis, evaluator selection (AOT XLA artifact when available,
+//! in-process Rust reference otherwise), and the simulated Merlin/Vitis
+//! oracle. Every engine returns the same normalized `Exploration`.
+//!
+//! The low-level modules (`nlp`, `hls`, `poly`, …) remain public as the
+//! **escape hatch**; the second half of this example drops down to them
+//! for a single NLP solve against the session's own substrate.
 
-use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::benchmarks::Size;
+use nlp_dse::engine::{Evaluator, Explorer};
 use nlp_dse::hls::{Device, HlsOracle};
-use nlp_dse::ir::DType;
 use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator};
-use nlp_dse::poly::Analysis;
 
 fn main() {
-    // 1. the input program: a regular loop-based affine kernel
-    let kernel = benchmarks::build("gemm", Size::Medium, DType::F32).unwrap();
-    println!("kernel: {}  (summary AST: {})\n", kernel.name, kernel.summary_ast());
+    // --- front door: one chained call ----------------------------------
+    let explorer = Explorer::kernel("gemm", Size::Medium)
+        .expect("gemm is a registered benchmark")
+        .device(Device::u200())
+        .evaluator(Evaluator::auto())
+        .engine("nlpdse")
+        .expect("nlpdse is a registered engine");
 
-    // 2. exact static analysis: trip counts, dependences, footprints
-    let analysis = Analysis::new(&kernel);
+    let kernel = explorer.kernel_ref();
+    let analysis = explorer.analysis();
+    println!("kernel: {}  (summary AST: {})", kernel.name, kernel.summary_ast());
     println!(
         "{} loops, {} dependences, {:.0} kB footprint, {:.2e} flops\n",
         kernel.n_loops(),
@@ -29,27 +40,32 @@ fn main() {
         analysis.total_flops
     );
 
-    // 3. formulate + solve the NLP (pragmas are the unknowns)
-    let device = Device::u200();
-    let problem = NlpProblem::new(&kernel, &analysis, &device, 512, false);
+    let outcome = explorer.run().expect("exploration succeeds");
+    println!("{}", outcome.render(kernel));
+
+    // --- escape hatch: one NLP solve on the same substrate --------------
+    let device = explorer.device_ref();
+    let problem = NlpProblem::new(kernel, analysis, device, 512, false);
     let solution = nlp::solve(&problem, 30.0, 1, &RustFeatureEvaluator);
     let (design, bound) = solution.best().expect("feasible design").clone();
     println!(
-        "NLP optimum (lower bound {:.0} cycles = {:.2} GF/s bound), solved in {:.0} ms:\n{}",
+        "\nsingle NLP solve at cap=512 (lower bound {:.0} cycles = {:.2} GF/s bound), \
+         solved in {:.0} ms:\n{}",
         bound,
         analysis.gflops(bound, device.freq_hz),
         solution.solve_time_s * 1e3,
-        design.render(&kernel)
+        design.render(kernel)
     );
 
-    // 4. verify with the (simulated) Merlin + Vitis toolchain
+    // verify that sub-space optimum with the simulated Merlin + Vitis
+    // toolchain — the same oracle the engines used above
     let oracle = HlsOracle::new(device.clone());
-    let report = oracle.synth(&kernel, &analysis, &design);
+    let report = oracle.synth(kernel, analysis, &design);
     println!(
         "HLS report: {:.0} cycles ({:.2} GF/s), DSP {}, BRAM {}, II {:.0}, synth {:.0} min, \
          pragmas applied: {}",
         report.cycles,
-        report.gflops(&analysis, &device),
+        report.gflops(analysis, device),
         report.dsp,
         report.bram18k,
         report.achieved_ii,

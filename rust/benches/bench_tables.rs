@@ -4,9 +4,8 @@
 //!
 //! Covers: Tables 1, 2, 3, 5, 6, 7, 8, 9 and Figures 2–6.
 
-use nlp_dse::baselines::HarpConfig;
 use nlp_dse::benchmarks::Size;
-use nlp_dse::coordinator::{run_campaign, CampaignConfig, Engines};
+use nlp_dse::coordinator::{engine_names, run_campaign, CampaignConfig};
 use nlp_dse::report;
 use nlp_dse::util::bench::{black_box, Bench};
 
@@ -21,11 +20,7 @@ fn main() {
         ("gramschmidt".into(), Size::Large),
         ("bicg".into(), Size::Medium),
     ];
-    cfg.engines = Engines {
-        nlpdse: true,
-        autodse: true,
-        harp: false,
-    };
+    cfg.engines = engine_names(&["nlpdse", "autodse"]);
     let mut auto_result = None;
     b.bench("campaign/quick-autodse(4 kernels)", || {
         auto_result = Some(black_box(run_campaign(&cfg)));
@@ -39,15 +34,8 @@ fn main() {
         ("mvt".into(), Size::Small),
     ];
     hcfg.dtype = nlp_dse::ir::DType::F64;
-    hcfg.engines = Engines {
-        nlpdse: true,
-        autodse: false,
-        harp: true,
-    };
-    hcfg.harp = HarpConfig {
-        sweep_configs: 5_000,
-        ..HarpConfig::default()
-    };
+    hcfg.engines = engine_names(&["nlpdse", "harp"]);
+    hcfg.tuning.harp.sweep_configs = 5_000;
     let mut harp_result = None;
     b.bench("campaign/quick-harp(3 kernels)", || {
         harp_result = Some(black_box(run_campaign(&hcfg)));

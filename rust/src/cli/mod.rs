@@ -3,17 +3,20 @@
 //! ```text
 //! nlp-dse table --id 5 [--scope quick|paper] [--xla] [--tsv] [--out FILE]
 //! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
-//! nlp-dse dse --kernel 2mm --size M [--engine nlpdse|autodse|harp] [--xla]
+//! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla]
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla]
 //! nlp-dse space --kernel 2mm --size M
-//! nlp-dse campaign [--scope quick|paper|harp] [--json FILE] [--xla]
+//! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla]
 //! ```
+//!
+//! The `dse` command dispatches through the engine [`Registry`] — any
+//! registered engine name works, with no per-engine code here.
 
 pub mod args;
 
 use crate::benchmarks::{self, Size};
-use crate::coordinator::{self, CampaignConfig, CampaignResult, Engines};
-use crate::dse::DseConfig;
+use crate::coordinator::{self, engine_names, CampaignConfig, CampaignResult};
+use crate::engine::{Evaluator, Explorer, Registry};
 use crate::hls::Device;
 use crate::ir::DType;
 use crate::nlp::{self, BatchEvaluator, NlpProblem, RustFeatureEvaluator};
@@ -38,6 +41,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "solve" => cmd_solve(&mut args)?,
         "space" => cmd_space(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
+        "engines" => cmd_engines(),
         "help" | "" => help(),
         other => bail!("unknown command `{other}` (try `help`)"),
     };
@@ -52,21 +56,32 @@ pub fn run(argv: &[&str]) -> Result<()> {
 }
 
 fn help() -> String {
-    "NLP-DSE — automatic HLS pragma insertion via non-linear programming\n\
-     \n\
-     commands:\n\
-       table    --id 1|2|3|5|6|7|8|9 [--scope quick|paper] [--xla] [--tsv]\n\
-       figure   --id 2|3|4|5|6 [--scope quick|paper] [--kernel K --size S]\n\
-       dse      --kernel K --size S|M|L [--engine nlpdse|autodse|harp] [--xla]\n\
-       solve    --kernel K --size S [--cap N] [--fine] [--xla]\n\
-       space    --kernel K --size S\n\
-       campaign [--scope quick|paper|harp] [--json FILE] [--xla]\n\
-     \n\
-     common flags: --out FILE  --threads N  --dtype f32|f64\n"
-        .to_string()
+    format!(
+        "NLP-DSE — automatic HLS pragma insertion via non-linear programming\n\
+         \n\
+         commands:\n\
+           table    --id 1|2|3|5|6|7|8|9 [--scope quick|paper] [--xla] [--tsv]\n\
+           figure   --id 2|3|4|5|6 [--scope quick|paper] [--kernel K --size S]\n\
+           dse      --kernel K --size S|M|L [--engine {engines}] [--xla]\n\
+           solve    --kernel K --size S [--cap N] [--fine] [--xla]\n\
+           space    --kernel K --size S\n\
+           campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
+           engines  (list the registered exploration engines)\n\
+         \n\
+         common flags: --out FILE  --threads N  --dtype f32|f64\n",
+        engines = Registry::builtin().names().join("|")
+    )
 }
 
-fn scope_campaign(args: &mut Args, engines: Engines) -> Result<CampaignResult> {
+fn cmd_engines() -> String {
+    let mut out = String::from("registered exploration engines:\n");
+    for n in Registry::builtin().names() {
+        out.push_str(&format!("  {n}\n"));
+    }
+    out
+}
+
+fn scope_campaign(args: &mut Args, engines: Vec<String>) -> Result<CampaignResult> {
     let scope = args.opt("scope").unwrap_or_else(|| "quick".into());
     let mut cfg = match scope.as_str() {
         "paper" => CampaignConfig::paper_autodse(),
@@ -91,8 +106,9 @@ fn scope_campaign(args: &mut Args, engines: Engines) -> Result<CampaignResult> {
     }
     cfg.use_xla = args.flag("xla");
     eprintln!(
-        "[campaign] scope={scope} kernels={} threads={} xla={}",
+        "[campaign] scope={scope} kernels={} engines={} threads={} xla={}",
         cfg.kernels.len(),
+        cfg.engines.join(","),
         cfg.threads,
         cfg.use_xla
     );
@@ -108,18 +124,11 @@ fn cmd_table(args: &mut Args) -> Result<String> {
     let table = match id {
         8 => report::table8(),
         9 => {
-            let r = scope_campaign(
-                args,
-                Engines {
-                    nlpdse: true,
-                    autodse: false,
-                    harp: true,
-                },
-            )?;
+            let r = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
             report::table9(&r)
         }
         7 | 6 => {
-            let r = scope_campaign(args, Engines::nlp_only())?;
+            let r = scope_campaign(args, engine_names(&["nlpdse"]))?;
             if id == 7 {
                 report::table7(&r)
             } else {
@@ -127,14 +136,7 @@ fn cmd_table(args: &mut Args) -> Result<String> {
             }
         }
         1 | 2 | 3 | 5 => {
-            let r = scope_campaign(
-                args,
-                Engines {
-                    nlpdse: true,
-                    autodse: true,
-                    harp: false,
-                },
-            )?;
+            let r = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
             match id {
                 1 => report::table1(&r),
                 2 => report::table2(&r),
@@ -154,30 +156,16 @@ fn cmd_figure(args: &mut Args) -> Result<String> {
         .parse()?;
     Ok(match id {
         2 | 3 => {
-            let r = scope_campaign(
-                args,
-                Engines {
-                    nlpdse: true,
-                    autodse: true,
-                    harp: false,
-                },
-            )?;
+            let r = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
             let size = if id == 2 { Size::Large } else { Size::Medium };
             report::figure2_3(&r, size)
         }
         4 => {
-            let r = scope_campaign(
-                args,
-                Engines {
-                    nlpdse: true,
-                    autodse: false,
-                    harp: true,
-                },
-            )?;
+            let r = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
             report::figure4(&r)
         }
         5 => {
-            let r = scope_campaign(args, Engines::nlp_only())?;
+            let r = scope_campaign(args, engine_names(&["nlpdse"]))?;
             report::figure5(&r)
         }
         6 => {
@@ -185,7 +173,7 @@ fn cmd_figure(args: &mut Args) -> Result<String> {
             let size = parse_size(args)?.unwrap_or(Size::Medium);
             let mut cfg = CampaignConfig::quick();
             cfg.kernels = vec![(kernel.clone(), size)];
-            cfg.engines = Engines::nlp_only();
+            cfg.engines = engine_names(&["nlpdse"]);
             cfg.use_xla = args.flag("xla");
             let r = coordinator::run_campaign(&cfg);
             report::figure6(&r, &kernel, size)
@@ -235,83 +223,22 @@ fn make_evaluator(args: &mut Args) -> Box<dyn BatchEvaluator> {
     Box::new(RustFeatureEvaluator)
 }
 
+/// `dse` goes through the `Explorer` facade: any registered engine name
+/// dispatches, and the output is the engine-agnostic exploration render.
 fn cmd_dse(args: &mut Args) -> Result<String> {
     let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
-    let (k, a, dev) = build_kernel(args)?;
-    let mut out = String::new();
-    match engine.as_str() {
-        "nlpdse" => {
-            let eval = make_evaluator(args);
-            let o = crate::dse::run_nlp_dse(&k, &a, &dev, &DseConfig::default(), eval.as_ref());
-            out.push_str(&format!(
-                "NLP-DSE on {} ({:?}):\n  best GF/s: {:.2}   first-synth GF/s: {:.2}\n  \
-                 DSE time: {:.0} min   explored: {}   timeouts: {}\n  \
-                 steps to best: {}   steps to terminate: {}\n\ntrace:\n",
-                k.name,
-                k.dtype,
-                o.best_gflops,
-                o.first_synth_gflops,
-                o.dse_minutes,
-                o.designs_explored,
-                o.designs_timeout,
-                o.steps_to_best,
-                o.steps_to_terminate
-            ));
-            for s in &o.trace {
-                out.push_str(&format!(
-                    "  step {:>2} cap={:<8} fine={:<5} lb={:>14.0} gfs={:>8.2} {}\n",
-                    s.step,
-                    if s.cap == u64::MAX {
-                        "inf".into()
-                    } else {
-                        s.cap.to_string()
-                    },
-                    s.fine_only,
-                    s.lower_bound,
-                    s.gflops,
-                    if s.dedup {
-                        "dedup"
-                    } else if s.pruned {
-                        "pruned"
-                    } else if s.timeout {
-                        "timeout"
-                    } else if s.valid {
-                        "ok"
-                    } else {
-                        "invalid"
-                    }
-                ));
-            }
-            if let Some((d, _)) = &o.best {
-                out.push_str("\nbest pragma configuration:\n");
-                out.push_str(&d.render(&k));
-            }
-        }
-        "autodse" => {
-            let o = crate::baselines::run_autodse(&k, &a, &dev, &Default::default());
-            out.push_str(&format!(
-                "AutoDSE on {}:\n  best GF/s: {:.2}\n  DSE time: {:.0} min\n  \
-                 explored: {} (synth {} / timeout {} / early-reject {})\n",
-                k.name,
-                o.best_gflops,
-                o.dse_minutes,
-                o.designs_explored,
-                o.designs_synthesized,
-                o.designs_timeout,
-                o.early_rejected
-            ));
-        }
-        "harp" => {
-            let o = crate::baselines::run_harp(&k, &a, &dev, &Default::default());
-            out.push_str(&format!(
-                "HARP on {}:\n  best GF/s: {:.2}\n  DSE time: {:.0} min\n  \
-                 surrogate configs: {}   synthesized: {}\n",
-                k.name, o.best_gflops, o.dse_minutes, o.configs_scored, o.designs_synthesized
-            ));
-        }
-        other => bail!("unknown engine `{other}`"),
-    }
-    Ok(out)
+    let name = args
+        .opt("kernel")
+        .ok_or_else(|| anyhow!("--kernel required"))?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args);
+    // make_evaluator reports artifact load / fallback on stderr
+    let evaluator = Evaluator::custom(std::rc::Rc::from(make_evaluator(args)));
+    let explorer = Explorer::kernel_dtype(&name, size, dtype)?
+        .evaluator(evaluator)
+        .engine(&engine)?;
+    let outcome = explorer.run()?;
+    Ok(outcome.render(explorer.kernel_ref()))
 }
 
 fn cmd_solve(args: &mut Args) -> Result<String> {
@@ -394,7 +321,23 @@ fn cmd_space(args: &mut Args) -> Result<String> {
 }
 
 fn cmd_campaign(args: &mut Args) -> Result<String> {
-    let r = scope_campaign(args, Engines::all())?;
+    let engines = match args.opt("engines") {
+        Some(list) => {
+            let names: Vec<String> = list.split(',').map(|s| s.trim().to_string()).collect();
+            let reg = Registry::builtin();
+            for n in &names {
+                if !reg.contains(n) {
+                    bail!(
+                        "unknown engine `{n}` (registered: {})",
+                        reg.names().join(", ")
+                    );
+                }
+            }
+            names
+        }
+        None => engine_names(&["nlpdse", "autodse", "harp"]),
+    };
+    let r = scope_campaign(args, engines)?;
     let json = campaign_json(&r);
     if let Some(path) = args.opt("json") {
         std::fs::write(&path, json.to_string_pretty())?;
@@ -403,7 +346,9 @@ fn cmd_campaign(args: &mut Args) -> Result<String> {
     Ok(json.to_string_pretty())
 }
 
-/// JSON dump of a campaign (for plotting / external analysis).
+/// JSON dump of a campaign (for plotting / external analysis). One
+/// object per engine under `engines`, keyed by registry name — new
+/// engines appear automatically with the normalized fields.
 pub fn campaign_json(r: &CampaignResult) -> crate::util::json::Json {
     use crate::util::json::Json;
     let mut arr = Json::Arr(vec![]);
@@ -416,33 +361,31 @@ pub fn campaign_json(r: &CampaignResult) -> crate::util::json::Json {
             .set("space", row.space_size)
             .set("footprint_bytes", row.footprint_bytes)
             .set("original_gflops", row.original_gflops);
-        if let Some(n) = &row.nlpdse {
+        let mut engines = Json::obj();
+        for e in &row.explorations {
             let mut j = Json::obj();
-            j.set("gflops", n.best_gflops)
-                .set("first_synth_gflops", n.first_synth_gflops)
-                .set("minutes", n.dse_minutes)
-                .set("explored", n.designs_explored)
-                .set("timeouts", n.designs_timeout)
-                .set("steps_to_best", n.steps_to_best)
-                .set("steps_to_terminate", n.steps_to_terminate);
-            o.set("nlpdse", j);
+            j.set("gflops", e.best_gflops)
+                .set("minutes", e.wall_minutes)
+                .set("synth_calls", e.synth_calls)
+                .set("timeouts", e.synth_timeouts)
+                .set("pruned", e.pruned)
+                .set("rejected", e.rejected);
+            if e.first_synth_gflops > 0.0 {
+                j.set("first_synth_gflops", e.first_synth_gflops);
+            }
+            if let Some(lb) = e.lower_bound {
+                j.set("lower_bound_cycles", lb);
+            }
+            if let Some(n) = e.as_nlpdse() {
+                j.set("steps_to_best", n.steps_to_best)
+                    .set("steps_to_terminate", n.steps_to_terminate);
+            }
+            if let Some(h) = e.as_harp() {
+                j.set("configs_scored", h.configs_scored);
+            }
+            engines.set(e.engine.as_str(), j);
         }
-        if let Some(a) = &row.autodse {
-            let mut j = Json::obj();
-            j.set("gflops", a.best_gflops)
-                .set("minutes", a.dse_minutes)
-                .set("explored", a.designs_explored)
-                .set("timeouts", a.designs_timeout)
-                .set("early_rejected", a.early_rejected);
-            o.set("autodse", j);
-        }
-        if let Some(h) = &row.harp {
-            let mut j = Json::obj();
-            j.set("gflops", h.best_gflops)
-                .set("minutes", h.dse_minutes)
-                .set("configs_scored", h.configs_scored);
-            o.set("harp", j);
-        }
+        o.set("engines", engines);
         arr.push(o);
     }
     arr

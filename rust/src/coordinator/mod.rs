@@ -2,16 +2,27 @@
 //! engines) across a thread pool and aggregates per-kernel rows for the
 //! report generators.
 //!
-//! Threading model: PJRT handles are thread-affine, so when the XLA path
-//! is enabled each worker thread loads its *own* copy of the artifact
-//! (compile-once-per-worker, ~100 ms) and keeps it for all its jobs —
-//! python never runs, and the artifact never crosses threads.
+//! Scheduling model: every (kernel-instance, engine) pair is one
+//! `Box<dyn Engine>` job on the pool — engines come from the
+//! [`Registry`], so a newly registered engine joins campaigns without a
+//! coordinator edit. A kernel's engines run concurrently with each
+//! other and with every other kernel; a separate lightweight job per
+//! kernel computes the static columns (space size, footprint, original
+//! throughput).
+//!
+//! Threading model: PJRT handles are thread-affine, so when the XLA
+//! path is enabled each job loads its *own* copy of the artifact
+//! (compile-once-per-job, ~100 ms) — python never runs, and the
+//! artifact never crosses threads.
 
 pub mod pool;
 
-use crate::baselines::{self, AutoDseConfig, AutoDseOutcome, HarpConfig, HarpOutcome};
+use crate::baselines::{AutoDseOutcome, HarpOutcome};
 use crate::benchmarks::{self, Size};
-use crate::dse::{self, DseConfig, DseOutcome};
+use crate::dse::{DseConfig, DseOutcome};
+use crate::engine::{
+    Engine, EngineTuning, Evaluator, Exploration, ExploreCtx, Explorer, Registry,
+};
 use crate::hls::{Device, HlsOracle};
 use crate::ir::DType;
 use crate::nlp::{BatchEvaluator, RustFeatureEvaluator};
@@ -20,42 +31,22 @@ use crate::pragma::{Design, Space};
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
 use pool::ThreadPool;
 
-/// Which engines to run per kernel instance.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Engines {
-    pub nlpdse: bool,
-    pub autodse: bool,
-    pub harp: bool,
-}
-
-impl Engines {
-    pub fn all() -> Engines {
-        Engines {
-            nlpdse: true,
-            autodse: true,
-            harp: true,
-        }
-    }
-    pub fn nlp_only() -> Engines {
-        Engines {
-            nlpdse: true,
-            autodse: false,
-            harp: false,
-        }
-    }
-}
-
 #[derive(Clone, Debug)]
 pub struct CampaignConfig {
     pub kernels: Vec<(String, Size)>,
     pub dtype: DType,
-    pub engines: Engines,
+    /// Registry names of the engines to run per kernel instance.
+    pub engines: Vec<String>,
     pub threads: usize,
     /// Evaluate NLP candidates through the AOT XLA artifact.
     pub use_xla: bool,
-    pub dse: DseConfig,
-    pub autodse: AutoDseConfig,
-    pub harp: HarpConfig,
+    /// Per-engine campaign parameters, handed to every registry factory.
+    pub tuning: EngineTuning,
+}
+
+/// `engines` helper: owned names from a literal list.
+pub fn engine_names(list: &[&str]) -> Vec<String> {
+    list.iter().map(|s| s.to_string()).collect()
 }
 
 impl CampaignConfig {
@@ -73,16 +64,10 @@ impl CampaignConfig {
         CampaignConfig {
             kernels,
             dtype: DType::F32,
-            engines: Engines {
-                nlpdse: true,
-                autodse: true,
-                harp: false,
-            },
+            engines: engine_names(&["nlpdse", "autodse"]),
             threads: num_threads(),
             use_xla: false,
-            dse: DseConfig::default(),
-            autodse: AutoDseConfig::default(),
-            harp: HarpConfig::default(),
+            tuning: EngineTuning::default(),
         }
     }
 
@@ -99,19 +84,16 @@ impl CampaignConfig {
         CampaignConfig {
             kernels,
             dtype: DType::F64,
-            engines: Engines {
-                nlpdse: true,
-                autodse: false,
-                harp: true,
-            },
+            engines: engine_names(&["nlpdse", "harp"]),
             threads: num_threads(),
             use_xla: false,
-            dse: DseConfig {
-                ladder: DseConfig::harp_ladder(),
-                ..DseConfig::default()
+            tuning: EngineTuning {
+                dse: DseConfig {
+                    ladder: DseConfig::harp_ladder(),
+                    ..DseConfig::default()
+                },
+                ..EngineTuning::default()
             },
-            autodse: AutoDseConfig::default(),
-            harp: HarpConfig::default(),
         }
     }
 
@@ -124,14 +106,15 @@ impl CampaignConfig {
         CampaignConfig {
             kernels,
             dtype: DType::F32,
-            engines: Engines::all(),
+            engines: engine_names(&["nlpdse", "autodse", "harp"]),
             threads: num_threads(),
             use_xla: false,
-            dse: DseConfig::default(),
-            autodse: AutoDseConfig::default(),
-            harp: HarpConfig {
-                sweep_configs: 5_000,
-                ..HarpConfig::default()
+            tuning: EngineTuning {
+                harp: crate::baselines::HarpConfig {
+                    sweep_configs: 5_000,
+                    ..crate::baselines::HarpConfig::default()
+                },
+                ..EngineTuning::default()
             },
         }
     }
@@ -144,7 +127,8 @@ pub fn num_threads() -> usize {
         .min(16)
 }
 
-/// One kernel-instance row: everything the tables need.
+/// One kernel-instance row: static columns + one normalized
+/// [`Exploration`] per engine (in campaign engine order).
 #[derive(Clone, Debug)]
 pub struct KernelRow {
     pub name: String,
@@ -154,9 +138,27 @@ pub struct KernelRow {
     pub space_size: f64,
     pub footprint_bytes: u64,
     pub original_gflops: f64,
-    pub nlpdse: Option<DseOutcome>,
-    pub autodse: Option<AutoDseOutcome>,
-    pub harp: Option<HarpOutcome>,
+    pub explorations: Vec<Exploration>,
+}
+
+impl KernelRow {
+    /// The outcome of a specific engine, by registry name.
+    pub fn exploration(&self, engine: &str) -> Option<&Exploration> {
+        self.explorations.iter().find(|e| e.engine == engine)
+    }
+
+    /// Legacy NLP-DSE detail (for the paper's table/figure generators).
+    pub fn nlpdse(&self) -> Option<&DseOutcome> {
+        self.explorations.iter().find_map(|e| e.as_nlpdse())
+    }
+
+    pub fn autodse(&self) -> Option<&AutoDseOutcome> {
+        self.explorations.iter().find_map(|e| e.as_autodse())
+    }
+
+    pub fn harp(&self) -> Option<&HarpOutcome> {
+        self.explorations.iter().find_map(|e| e.as_harp())
+    }
 }
 
 #[derive(Clone, Debug, Default)]
@@ -164,78 +166,163 @@ pub struct CampaignResult {
     pub rows: Vec<KernelRow>,
 }
 
-/// Run the campaign across the thread pool.
-pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
-    let pool = ThreadPool::new(cfg.threads);
-    let (tx, rx) = std::sync::mpsc::channel::<(usize, KernelRow)>();
-    let n_jobs = cfg.kernels.len();
-
-    for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
-        let tx = tx.clone();
-        let cfg = cfg.clone();
-        pool.execute(move || {
-            let row = run_one(&cfg, &name, size);
-            let _ = tx.send((idx, row));
-        });
-    }
-    drop(tx);
-
-    let mut rows: Vec<Option<KernelRow>> = vec![None; n_jobs];
-    for (idx, row) in rx {
-        rows[idx] = Some(row);
-    }
-    pool.join();
-    CampaignResult {
-        rows: rows.into_iter().flatten().collect(),
-    }
+/// Static (engine-independent) columns of one kernel row.
+#[derive(Clone, Debug)]
+struct StaticInfo {
+    nl: usize,
+    nd: usize,
+    space_size: f64,
+    footprint_bytes: u64,
+    original_gflops: f64,
 }
 
-/// Process one kernel instance (runs inside a worker thread).
-pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
-    let k = benchmarks::build(name, size, cfg.dtype)
+fn static_info(name: &str, size: Size, dtype: DType) -> StaticInfo {
+    let k = benchmarks::build(name, size, dtype)
         .unwrap_or_else(|| panic!("unknown kernel {name}"));
     let a = Analysis::new(&k);
+    static_info_from(&k, &a)
+}
+
+fn static_info_from(k: &crate::ir::Kernel, a: &Analysis) -> StaticInfo {
     let dev = Device::u200();
-
-    // each worker gets its own evaluator (PJRT is thread-affine)
-    let xla_eval = if cfg.use_xla {
-        XlaEvaluator::load(&default_artifact_dir()).ok()
-    } else {
-        None
-    };
-    let evaluator: &dyn BatchEvaluator = match &xla_eval {
-        Some(e) => e,
-        None => &RustFeatureEvaluator,
-    };
-
-    let space = Space::new(&k, &a);
-    let oracle = HlsOracle::new(dev.clone());
-    let original = oracle.synth(&k, &a, &Design::empty(&k));
-
-    let nlpdse = cfg
-        .engines
-        .nlpdse
-        .then(|| dse::run_nlp_dse(&k, &a, &dev, &cfg.dse, evaluator));
-    let autodse = cfg
-        .engines
-        .autodse
-        .then(|| baselines::run_autodse(&k, &a, &dev, &cfg.autodse));
-    let harp = cfg
-        .engines
-        .harp
-        .then(|| baselines::run_harp(&k, &a, &dev, &cfg.harp));
-
-    KernelRow {
-        name: name.to_string(),
-        size,
+    let space = Space::new(k, a);
+    let original = HlsOracle::new(dev.clone()).synth(k, a, &Design::empty(k));
+    StaticInfo {
         nl: k.n_loops(),
         nd: a.deps.nd(),
         space_size: space.size(),
         footprint_bytes: a.total_footprint,
-        original_gflops: original.gflops(&a, &dev),
-        nlpdse,
-        autodse,
-        harp,
+        original_gflops: original.gflops(a, &dev),
+    }
+}
+
+enum CampaignMsg {
+    Stat(usize, StaticInfo),
+    Expl(usize, usize, Exploration),
+}
+
+/// Run the campaign with the builtin engine registry. Third-party
+/// engines join via [`run_campaign_with`].
+pub fn run_campaign(cfg: &CampaignConfig) -> CampaignResult {
+    run_campaign_with(&Registry::builtin(), cfg)
+}
+
+/// Run the campaign against a caller-supplied registry: one pool job
+/// per kernel for the static columns, one `Box<dyn Engine>` pool job
+/// per (kernel, engine) pair.
+pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignResult {
+    let pool = ThreadPool::new(cfg.threads);
+    let (tx, rx) = std::sync::mpsc::channel::<CampaignMsg>();
+    let n_kernels = cfg.kernels.len();
+
+    for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
+        let tx = tx.clone();
+        let dtype = cfg.dtype;
+        pool.execute(move || {
+            let _ = tx.send(CampaignMsg::Stat(idx, static_info(&name, size, dtype)));
+        });
+    }
+    for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
+        for (eidx, ename) in cfg.engines.iter().enumerate() {
+            let engine: Box<dyn Engine> = match registry.create(ename, &cfg.tuning) {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("[campaign] skipping: {err:#}");
+                    continue;
+                }
+            };
+            let tx = tx.clone();
+            let name = name.clone();
+            let dtype = cfg.dtype;
+            let use_xla = cfg.use_xla;
+            pool.execute(move || {
+                let k = benchmarks::build(&name, size, dtype)
+                    .unwrap_or_else(|| panic!("unknown kernel {name}"));
+                let a = Analysis::new(&k);
+                let dev = Device::u200();
+                // each job gets its own evaluator (PJRT is thread-affine);
+                // black-box engines skip the artifact compile entirely
+                let xla = if use_xla && engine.uses_evaluator() {
+                    XlaEvaluator::load(&default_artifact_dir()).ok()
+                } else {
+                    None
+                };
+                let evaluator: &dyn BatchEvaluator = match &xla {
+                    Some(e) => e,
+                    None => &RustFeatureEvaluator,
+                };
+                let ctx = ExploreCtx {
+                    kernel: &k,
+                    analysis: &a,
+                    device: &dev,
+                    evaluator,
+                };
+                let _ = tx.send(CampaignMsg::Expl(idx, eidx, engine.explore(&ctx)));
+            });
+        }
+    }
+    drop(tx);
+
+    let mut statics: Vec<Option<StaticInfo>> = vec![None; n_kernels];
+    let mut expls: Vec<Vec<(usize, Exploration)>> = (0..n_kernels).map(|_| Vec::new()).collect();
+    for msg in rx {
+        match msg {
+            CampaignMsg::Stat(i, s) => statics[i] = Some(s),
+            CampaignMsg::Expl(i, e, x) => expls[i].push((e, x)),
+        }
+    }
+    pool.join();
+
+    let mut rows = Vec::new();
+    for (i, (name, size)) in cfg.kernels.iter().enumerate() {
+        let Some(st) = statics[i].take() else { continue };
+        let mut es = std::mem::take(&mut expls[i]);
+        es.sort_by_key(|(e, _)| *e);
+        rows.push(KernelRow {
+            name: name.clone(),
+            size: *size,
+            nl: st.nl,
+            nd: st.nd,
+            space_size: st.space_size,
+            footprint_bytes: st.footprint_bytes,
+            original_gflops: st.original_gflops,
+            explorations: es.into_iter().map(|(_, x)| x).collect(),
+        });
+    }
+    CampaignResult { rows }
+}
+
+/// Process one kernel instance sequentially through the [`Explorer`]
+/// facade (used for single-kernel flows; campaigns go through
+/// [`run_campaign`]).
+pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
+    let explorer = Explorer::kernel_dtype(name, size, cfg.dtype)
+        .unwrap_or_else(|e| panic!("{e:#}"))
+        .evaluator(if cfg.use_xla {
+            Evaluator::auto()
+        } else {
+            Evaluator::rust()
+        })
+        .tuning(cfg.tuning.clone());
+    // static columns reuse the session's kernel + analysis (the exact
+    // polyhedral analysis is the expensive static step)
+    let st = static_info_from(explorer.kernel_ref(), explorer.analysis());
+    let mut explorations = Vec::new();
+    for ename in &cfg.engines {
+        match explorer.run_engine(ename) {
+            Ok(ex) => explorations.push(ex),
+            Err(err) => eprintln!("[campaign] {name}-{}: {err:#}", size.tag()),
+        }
+    }
+    KernelRow {
+        name: name.to_string(),
+        size,
+        nl: st.nl,
+        nd: st.nd,
+        space_size: st.space_size,
+        footprint_bytes: st.footprint_bytes,
+        original_gflops: st.original_gflops,
+        explorations,
     }
 }
 
@@ -247,14 +334,17 @@ mod tests {
     fn quick_campaign_completes() {
         let mut cfg = CampaignConfig::quick();
         cfg.kernels.truncate(3);
-        cfg.harp.sweep_configs = 1_000;
+        cfg.tuning.harp.sweep_configs = 1_000;
         let r = run_campaign(&cfg);
         assert_eq!(r.rows.len(), 3);
         for row in &r.rows {
-            assert!(row.nlpdse.is_some());
-            assert!(row.autodse.is_some());
-            assert!(row.harp.is_some());
-            let n = row.nlpdse.as_ref().unwrap();
+            // explorations arrive in campaign engine order
+            let order: Vec<&str> = row.explorations.iter().map(|e| e.engine.as_str()).collect();
+            assert_eq!(order, vec!["nlpdse", "autodse", "harp"], "{}", row.name);
+            assert!(row.nlpdse().is_some());
+            assert!(row.autodse().is_some());
+            assert!(row.harp().is_some());
+            let n = row.nlpdse().unwrap();
             assert!(n.best_gflops > 0.0, "{}", row.name);
         }
     }
@@ -262,9 +352,52 @@ mod tests {
     #[test]
     fn rows_preserve_order() {
         let mut cfg = CampaignConfig::quick();
-        cfg.engines = Engines::nlp_only();
+        cfg.engines = engine_names(&["nlpdse"]);
         let r = run_campaign(&cfg);
         let names: Vec<&str> = r.rows.iter().map(|r| r.name.as_str()).collect();
         assert_eq!(names, vec!["gemm", "2mm", "bicg", "atax", "mvt"]);
+    }
+
+    #[test]
+    fn unknown_engine_is_skipped_not_fatal() {
+        let mut cfg = CampaignConfig::quick();
+        cfg.kernels.truncate(1);
+        cfg.engines = engine_names(&["nlpdse", "definitely-not-an-engine"]);
+        let r = run_campaign(&cfg);
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].explorations.len(), 1);
+        assert_eq!(r.rows[0].explorations[0].engine, "nlpdse");
+    }
+
+    #[test]
+    fn third_party_engine_joins_campaign_via_custom_registry() {
+        fn factory(_t: &EngineTuning) -> Box<dyn Engine> {
+            Box::new(crate::engine::RandomSearchEngine::new(
+                crate::engine::RandomConfig {
+                    samples: 200,
+                    synth_budget: 4,
+                    ..Default::default()
+                },
+            ))
+        }
+        let mut reg = Registry::builtin();
+        reg.register("my-search", factory);
+        let mut cfg = CampaignConfig::quick();
+        cfg.kernels.truncate(1);
+        cfg.engines = engine_names(&["my-search"]);
+        let r = run_campaign_with(&reg, &cfg);
+        assert_eq!(r.rows.len(), 1);
+        assert_eq!(r.rows[0].explorations.len(), 1);
+        assert!(r.rows[0].explorations[0].best_gflops > 0.0);
+    }
+
+    #[test]
+    fn run_one_matches_campaign_engines() {
+        let mut cfg = CampaignConfig::quick();
+        cfg.engines = engine_names(&["nlpdse", "random"]);
+        let row = run_one(&cfg, "gemm", Size::Small);
+        assert_eq!(row.explorations.len(), 2);
+        assert!(row.exploration("random").is_some());
+        assert!(row.exploration("random").unwrap().best_gflops > 0.0);
     }
 }

@@ -1,0 +1,102 @@
+//! The three published explorers wrapped as [`Engine`] implementations.
+//!
+//! Each wrapper owns its legacy config and delegates to the existing
+//! free function; the outcome is normalized through the `From`
+//! conversions in [`super::outcome`]. Research code that wants the raw
+//! outcome types can keep calling `dse::run_nlp_dse` /
+//! `baselines::run_autodse` / `baselines::run_harp` directly.
+
+use super::{Engine, ExploreCtx, Exploration};
+use crate::baselines::{run_autodse, run_harp, AutoDseConfig, HarpConfig};
+use crate::dse::{run_nlp_dse, DseConfig};
+
+/// The paper's NLP-driven DSE (Algorithm 1).
+pub struct NlpDseEngine {
+    pub cfg: DseConfig,
+}
+
+impl NlpDseEngine {
+    pub fn new(cfg: DseConfig) -> NlpDseEngine {
+        NlpDseEngine { cfg }
+    }
+}
+
+impl Default for NlpDseEngine {
+    fn default() -> Self {
+        NlpDseEngine::new(DseConfig::default())
+    }
+}
+
+impl Engine for NlpDseEngine {
+    fn name(&self) -> &str {
+        "nlpdse"
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        run_nlp_dse(ctx.kernel, ctx.analysis, ctx.device, &self.cfg, ctx.evaluator).into()
+    }
+}
+
+/// AutoDSE (FPGA'21): model-free bottleneck-driven baseline. Treats the
+/// toolchain as a black box, so it ignores `ctx.evaluator`.
+pub struct AutoDseEngine {
+    pub cfg: AutoDseConfig,
+}
+
+impl AutoDseEngine {
+    pub fn new(cfg: AutoDseConfig) -> AutoDseEngine {
+        AutoDseEngine { cfg }
+    }
+}
+
+impl Default for AutoDseEngine {
+    fn default() -> Self {
+        AutoDseEngine::new(AutoDseConfig::default())
+    }
+}
+
+impl Engine for AutoDseEngine {
+    fn name(&self) -> &str {
+        "autodse"
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        run_autodse(ctx.kernel, ctx.analysis, ctx.device, &self.cfg).into()
+    }
+
+    fn uses_evaluator(&self) -> bool {
+        false
+    }
+}
+
+/// HARP (ICCAD'23): surrogate-guided near-exhaustive sweep with top-k
+/// synthesis. Uses its own learned surrogate, not `ctx.evaluator`.
+pub struct HarpEngine {
+    pub cfg: HarpConfig,
+}
+
+impl HarpEngine {
+    pub fn new(cfg: HarpConfig) -> HarpEngine {
+        HarpEngine { cfg }
+    }
+}
+
+impl Default for HarpEngine {
+    fn default() -> Self {
+        HarpEngine::new(HarpConfig::default())
+    }
+}
+
+impl Engine for HarpEngine {
+    fn name(&self) -> &str {
+        "harp"
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        run_harp(ctx.kernel, ctx.analysis, ctx.device, &self.cfg).into()
+    }
+
+    fn uses_evaluator(&self) -> bool {
+        false
+    }
+}

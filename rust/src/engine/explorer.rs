@@ -1,0 +1,295 @@
+//! The builder-style exploration session facade — the crate's front
+//! door.
+//!
+//! `Explorer` owns everything an engine needs (kernel construction,
+//! exact polyhedral analysis, device model, Rust-vs-XLA evaluator
+//! selection behind the `dyn BatchEvaluator` boundary) so call sites
+//! stop copy-pasting the kernel-build → `Analysis::new` →
+//! evaluator-selection → oracle-setup boilerplate the CLI, coordinator,
+//! and examples used to repeat.
+
+use super::registry::EngineFactory;
+use super::{Engine, EngineTuning, ExploreCtx, Exploration, Registry};
+use crate::baselines::{AutoDseConfig, HarpConfig};
+use crate::benchmarks::{self, Size};
+use crate::dse::DseConfig;
+use crate::engine::RandomConfig;
+use crate::hls::Device;
+use crate::ir::{DType, Kernel};
+use crate::nlp::{BatchEvaluator, RustFeatureEvaluator};
+use crate::poly::Analysis;
+use crate::runtime::{default_artifact_dir, XlaEvaluator};
+use anyhow::{anyhow, bail, Result};
+use std::rc::Rc;
+
+/// Batch-evaluator selection policy, resolved once per `run`.
+#[derive(Clone)]
+pub enum Evaluator {
+    /// Use the AOT XLA artifact when it loads, else the Rust reference.
+    Auto,
+    /// Always the in-process Rust reference evaluator.
+    Rust,
+    /// Require the AOT XLA artifact; `run` fails if it cannot load.
+    Xla,
+    /// Caller-supplied evaluator (e.g. an instrumented one).
+    Custom(Rc<dyn BatchEvaluator>),
+}
+
+impl Evaluator {
+    pub fn auto() -> Evaluator {
+        Evaluator::Auto
+    }
+    pub fn rust() -> Evaluator {
+        Evaluator::Rust
+    }
+    pub fn xla() -> Evaluator {
+        Evaluator::Xla
+    }
+    pub fn custom(e: Rc<dyn BatchEvaluator>) -> Evaluator {
+        Evaluator::Custom(e)
+    }
+}
+
+impl std::fmt::Debug for Evaluator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Evaluator::Auto => "Auto",
+            Evaluator::Rust => "Rust",
+            Evaluator::Xla => "Xla",
+            Evaluator::Custom(_) => "Custom(..)",
+        })
+    }
+}
+
+enum EngineChoice {
+    Named(String),
+    Custom(Box<dyn Engine>),
+}
+
+/// One exploration session over one kernel. Build with
+/// [`Explorer::kernel`] (PolyBench registry) or [`Explorer::custom`]
+/// (bring-your-own [`Kernel`]), chain the setters, then [`run`].
+///
+/// [`run`]: Explorer::run
+pub struct Explorer {
+    kernel: Kernel,
+    analysis: Analysis,
+    device: Device,
+    evaluator: Evaluator,
+    tuning: EngineTuning,
+    registry: Registry,
+    choice: EngineChoice,
+}
+
+impl Explorer {
+    /// Session over a registered benchmark kernel at f32 precision.
+    pub fn kernel(name: &str, size: Size) -> Result<Explorer> {
+        Explorer::kernel_dtype(name, size, DType::F32)
+    }
+
+    /// Session over a registered benchmark kernel at chosen precision.
+    pub fn kernel_dtype(name: &str, size: Size, dtype: DType) -> Result<Explorer> {
+        let k = benchmarks::build(name, size, dtype).ok_or_else(|| {
+            anyhow!(
+                "unknown kernel `{name}` (known: {})",
+                benchmarks::ALL.join(", ")
+            )
+        })?;
+        Ok(Explorer::custom(k))
+    }
+
+    /// Session over a user-built kernel (see `ir::KernelBuilder`).
+    pub fn custom(kernel: Kernel) -> Explorer {
+        let analysis = Analysis::new(&kernel);
+        Explorer {
+            kernel,
+            analysis,
+            device: Device::u200(),
+            evaluator: Evaluator::Auto,
+            tuning: EngineTuning::default(),
+            registry: Registry::builtin(),
+            choice: EngineChoice::Named("nlpdse".into()),
+        }
+    }
+
+    /// Target device (default: Alveo U200 @ 250 MHz).
+    pub fn device(mut self, dev: Device) -> Explorer {
+        self.device = dev;
+        self
+    }
+
+    /// Evaluator selection policy (default: [`Evaluator::Auto`]).
+    pub fn evaluator(mut self, ev: Evaluator) -> Explorer {
+        self.evaluator = ev;
+        self
+    }
+
+    /// Replace the whole per-engine tuning bundle.
+    pub fn tuning(mut self, t: EngineTuning) -> Explorer {
+        self.tuning = t;
+        self
+    }
+
+    pub fn dse_config(mut self, c: DseConfig) -> Explorer {
+        self.tuning.dse = c;
+        self
+    }
+
+    pub fn autodse_config(mut self, c: AutoDseConfig) -> Explorer {
+        self.tuning.autodse = c;
+        self
+    }
+
+    pub fn harp_config(mut self, c: HarpConfig) -> Explorer {
+        self.tuning.harp = c;
+        self
+    }
+
+    pub fn random_config(mut self, c: RandomConfig) -> Explorer {
+        self.tuning.random = c;
+        self
+    }
+
+    /// Register an additional engine factory for this session.
+    pub fn register(mut self, name: &str, factory: EngineFactory) -> Explorer {
+        self.registry.register(name, factory);
+        self
+    }
+
+    /// Select the engine to run by registry name (default: `nlpdse`).
+    /// Fails fast on unknown names.
+    pub fn engine(mut self, name: &str) -> Result<Explorer> {
+        if !self.registry.contains(name) {
+            bail!(
+                "unknown engine `{name}` (registered: {})",
+                self.registry.names().join(", ")
+            );
+        }
+        self.choice = EngineChoice::Named(name.to_string());
+        Ok(self)
+    }
+
+    /// Run a caller-built engine instead of a registered one.
+    pub fn with_engine(mut self, e: Box<dyn Engine>) -> Explorer {
+        self.choice = EngineChoice::Custom(e);
+        self
+    }
+
+    // --- escape hatches into the owned substrate ------------------------
+
+    pub fn kernel_ref(&self) -> &Kernel {
+        &self.kernel
+    }
+
+    pub fn analysis(&self) -> &Analysis {
+        &self.analysis
+    }
+
+    pub fn device_ref(&self) -> &Device {
+        &self.device
+    }
+
+    pub fn tuning_ref(&self) -> &EngineTuning {
+        &self.tuning
+    }
+
+    /// Names of all engines this session can run.
+    pub fn engine_names(&self) -> Vec<String> {
+        self.registry.names()
+    }
+
+    // --- execution ------------------------------------------------------
+
+    /// Run the selected engine over this session's kernel.
+    pub fn run(&self) -> Result<Exploration> {
+        match &self.choice {
+            EngineChoice::Custom(e) => self.run_with(e.as_ref()),
+            EngineChoice::Named(n) => {
+                let e = self.registry.create(n, &self.tuning)?;
+                self.run_with(e.as_ref())
+            }
+        }
+    }
+
+    /// Run a specific registered engine, ignoring the selected one —
+    /// convenient for sweeping every engine over one session.
+    pub fn run_engine(&self, name: &str) -> Result<Exploration> {
+        let e = self.registry.create(name, &self.tuning)?;
+        self.run_with(e.as_ref())
+    }
+
+    fn run_with(&self, engine: &dyn Engine) -> Result<Exploration> {
+        let rust_eval = RustFeatureEvaluator;
+        let loaded: XlaEvaluator;
+        let evaluator: &dyn BatchEvaluator = match &self.evaluator {
+            Evaluator::Rust => &rust_eval,
+            Evaluator::Auto => match XlaEvaluator::load(&default_artifact_dir()) {
+                Ok(e) => {
+                    loaded = e;
+                    &loaded
+                }
+                Err(_) => &rust_eval,
+            },
+            Evaluator::Xla => {
+                loaded = XlaEvaluator::load(&default_artifact_dir())?;
+                &loaded
+            }
+            Evaluator::Custom(rc) => rc.as_ref(),
+        };
+        let ctx = ExploreCtx {
+            kernel: &self.kernel,
+            analysis: &self.analysis,
+            device: &self.device,
+            evaluator,
+        };
+        Ok(engine.explore(&ctx))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_kernel_and_engine_fail_fast() {
+        let err = Explorer::kernel("does-not-exist", Size::Small).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kernel"));
+        let err = Explorer::kernel("gemm", Size::Small)
+            .unwrap()
+            .engine("does-not-exist")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("unknown engine"));
+    }
+
+    #[test]
+    fn facade_runs_default_engine() {
+        let ex = Explorer::kernel("atax", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::rust())
+            .run()
+            .unwrap();
+        assert_eq!(ex.engine, "nlpdse");
+        assert!(ex.best.is_some());
+        assert!(ex.best_gflops > 0.0);
+    }
+
+    #[test]
+    fn facade_matches_low_level_path() {
+        // the facade must be sugar, not semantics: identical outcome to
+        // calling the engine over a hand-built context
+        let explorer = Explorer::kernel("bicg", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::rust());
+        let hi = explorer.run().unwrap();
+        let lo = crate::dse::run_nlp_dse(
+            explorer.kernel_ref(),
+            explorer.analysis(),
+            explorer.device_ref(),
+            &crate::dse::DseConfig::default(),
+            &RustFeatureEvaluator,
+        );
+        assert_eq!(hi.best_gflops, lo.best_gflops);
+        assert_eq!(hi.synth_calls, lo.designs_explored);
+        assert_eq!(hi.wall_minutes, lo.dse_minutes);
+    }
+}

@@ -1,0 +1,100 @@
+//! The unified exploration-engine subsystem.
+//!
+//! The paper's core architectural claim (Sections 6–7) is that NLP-DSE,
+//! AutoDSE, and HARP are interchangeable *explorers* over the same
+//! kernel / analysis / oracle substrate. This module makes that claim a
+//! first-class API:
+//!
+//! * [`Engine`] — the object-safe strategy trait. An engine receives an
+//!   [`ExploreCtx`] (kernel, analysis, device, batch evaluator) and
+//!   returns a normalized [`Exploration`] outcome.
+//! * [`Exploration`] — the single outcome type every engine produces:
+//!   best design + measured latency, throughput, proven lower bound,
+//!   synthesis-call accounting, wall time, and a normalized step trace.
+//!   The legacy `DseOutcome` / `AutoDseOutcome` / `HarpOutcome` types
+//!   convert into it (and remain reachable through
+//!   [`Exploration::as_nlpdse`] and friends for the report generators).
+//! * [`Registry`] — a name-keyed engine registry. The CLI, coordinator,
+//!   and examples dispatch by name; new engines register a factory and
+//!   need **zero** edits anywhere else ([`RandomSearchEngine`] is the
+//!   in-repo proof).
+//! * [`Explorer`] — the builder-style session facade and the crate's
+//!   front door:
+//!
+//! ```no_run
+//! use nlp_dse::benchmarks::Size;
+//! use nlp_dse::engine::{Evaluator, Explorer};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let outcome = Explorer::kernel("gemm", Size::Medium)?
+//!     .device(nlp_dse::hls::Device::u200())
+//!     .evaluator(Evaluator::auto())
+//!     .engine("nlpdse")?
+//!     .run()?;
+//! println!("best: {:.2} GF/s in {:.0} simulated minutes",
+//!          outcome.best_gflops, outcome.wall_minutes);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! The low-level modules (`dse`, `baselines`, `nlp`, `hls`, …) stay
+//! public as the escape hatch for research code that needs to hold the
+//! substrate pieces directly.
+
+pub mod builtin;
+pub mod explorer;
+pub mod outcome;
+pub mod random;
+pub mod registry;
+
+pub use builtin::{AutoDseEngine, HarpEngine, NlpDseEngine};
+pub use explorer::{Evaluator, Explorer};
+pub use outcome::{EngineDetail, Exploration, ExplorationStep, StepStatus};
+pub use random::{RandomConfig, RandomSearchEngine};
+pub use registry::{EngineFactory, Registry};
+
+use crate::baselines::{AutoDseConfig, HarpConfig};
+use crate::dse::DseConfig;
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::nlp::BatchEvaluator;
+use crate::poly::Analysis;
+
+/// Everything an engine may consume: the substrate the session facade
+/// (or the coordinator) owns on the engine's behalf.
+pub struct ExploreCtx<'a> {
+    pub kernel: &'a Kernel,
+    pub analysis: &'a Analysis,
+    pub device: &'a Device,
+    /// Bulk lower-bound evaluator (Rust reference or the AOT XLA
+    /// artifact) behind the `dyn BatchEvaluator` boundary. Engines that
+    /// treat the toolchain as a black box (AutoDSE, HARP) ignore it.
+    pub evaluator: &'a dyn BatchEvaluator,
+}
+
+/// A design-space exploration strategy. Object-safe: the coordinator
+/// schedules `Box<dyn Engine>` jobs across its thread pool.
+pub trait Engine: Send + Sync {
+    /// Stable engine name (what the registry keys on and the tables
+    /// print).
+    fn name(&self) -> &str;
+    /// Explore the design space of `ctx.kernel` and report the outcome.
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration;
+    /// Whether this engine reads `ctx.evaluator`. Black-box engines
+    /// return `false` so schedulers skip loading the (costly) XLA
+    /// artifact for their jobs.
+    fn uses_evaluator(&self) -> bool {
+        true
+    }
+}
+
+/// Per-engine campaign parameters, bundled so registry factories stay
+/// uniform (`fn(&EngineTuning) -> Box<dyn Engine>`). Each factory reads
+/// only its own field; third-party engines are free to ignore it.
+#[derive(Clone, Debug, Default)]
+pub struct EngineTuning {
+    pub dse: DseConfig,
+    pub autodse: AutoDseConfig,
+    pub harp: HarpConfig,
+    pub random: RandomConfig,
+}

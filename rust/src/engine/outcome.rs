@@ -1,0 +1,272 @@
+//! The normalized exploration outcome every [`Engine`](super::Engine)
+//! produces, plus the conversions from the three legacy outcome types.
+//!
+//! Normalization keeps the coordinator, CLI, and JSON dumps engine-
+//! agnostic; the engine-specific record survives in [`EngineDetail`] so
+//! the paper's table/figure generators keep their full fidelity.
+
+use crate::baselines::{AutoDseOutcome, HarpOutcome};
+use crate::dse::{DseOutcome, StepRecord};
+use crate::ir::Kernel;
+use crate::pragma::Design;
+
+/// What happened to one explored candidate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepStatus {
+    /// Synthesized to completion with a valid report.
+    Synthesized,
+    /// Synthesized but the toolchain produced an unusable design.
+    Invalid,
+    /// HLS synthesis hit its wall-clock timeout.
+    Timeout,
+    /// Skipped before synthesis (lower-bound pruning, legality screen).
+    Pruned,
+    /// Identical configuration already synthesized; result reused.
+    Dedup,
+}
+
+impl StepStatus {
+    pub fn tag(self) -> &'static str {
+        match self {
+            StepStatus::Synthesized => "ok",
+            StepStatus::Invalid => "invalid",
+            StepStatus::Timeout => "timeout",
+            StepStatus::Pruned => "pruned",
+            StepStatus::Dedup => "dedup",
+        }
+    }
+}
+
+/// One normalized exploration step (engine-agnostic trace entry).
+#[derive(Clone, Debug)]
+pub struct ExplorationStep {
+    pub step: u32,
+    /// Model/solver lower bound for this candidate, if the engine has one.
+    pub lower_bound: Option<f64>,
+    /// Measured HLS latency in cycles (valid designs only).
+    pub measured: Option<f64>,
+    pub gflops: f64,
+    pub status: StepStatus,
+}
+
+/// Engine-specific detail preserved through normalization.
+#[derive(Clone, Debug)]
+pub enum EngineDetail {
+    NlpDse(DseOutcome),
+    AutoDse(AutoDseOutcome),
+    Harp(HarpOutcome),
+    /// Engines with no legacy record (e.g. `random`, third-party).
+    Generic,
+}
+
+/// The single normalized outcome of a design-space exploration.
+#[derive(Clone, Debug)]
+pub struct Exploration {
+    /// Registry name of the engine that produced this outcome.
+    pub engine: String,
+    pub kernel: String,
+    /// Best valid design and its measured latency in cycles.
+    pub best: Option<(Design, f64)>,
+    pub best_gflops: f64,
+    /// Throughput of the first synthesizable design (0 when unknown —
+    /// only lower-bound-ordered engines report it meaningfully).
+    pub first_synth_gflops: f64,
+    /// DSP utilization % of the best design (0 when unknown).
+    pub best_dsp_pct: f64,
+    /// Proven latency floor across the explored space, cycles (engines
+    /// without a bounding model report `None`).
+    pub lower_bound: Option<f64>,
+    /// Simulated DSE wall time, minutes.
+    pub wall_minutes: f64,
+    /// Designs sent to Merlin/HLS synthesis (the tables' DE column).
+    pub synth_calls: u32,
+    /// Synthesis timeouts (DT column).
+    pub synth_timeouts: u32,
+    /// Candidates skipped before synthesis (pruning / legality screen).
+    pub pruned: u32,
+    /// Candidates rejected by the toolchain (ER column / invalid).
+    pub rejected: u32,
+    /// Normalized step trace (may be empty for black-box engines).
+    pub trace: Vec<ExplorationStep>,
+    pub detail: EngineDetail,
+}
+
+impl Exploration {
+    pub fn as_nlpdse(&self) -> Option<&DseOutcome> {
+        match &self.detail {
+            EngineDetail::NlpDse(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn as_autodse(&self) -> Option<&AutoDseOutcome> {
+        match &self.detail {
+            EngineDetail::AutoDse(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn as_harp(&self) -> Option<&HarpOutcome> {
+        match &self.detail {
+            EngineDetail::Harp(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// Engine-agnostic one-screen summary.
+    pub fn summary(&self) -> String {
+        let mut out = format!(
+            "engine `{}` on {}:\n  best GF/s: {:.2}   wall: {:.0} min\n  \
+             synthesized: {}   timeouts: {}   pruned: {}   rejected: {}\n",
+            self.engine,
+            self.kernel,
+            self.best_gflops,
+            self.wall_minutes,
+            self.synth_calls,
+            self.synth_timeouts,
+            self.pruned,
+            self.rejected
+        );
+        if self.first_synth_gflops > 0.0 {
+            out.push_str(&format!(
+                "  first synthesizable GF/s: {:.2}\n",
+                self.first_synth_gflops
+            ));
+        }
+        if let Some(lb) = self.lower_bound {
+            out.push_str(&format!("  proven latency floor: {lb:.0} cycles\n"));
+        }
+        out
+    }
+
+    /// Summary + normalized trace + the best pragma configuration.
+    /// `k` must be the kernel this exploration ran on.
+    pub fn render(&self, k: &Kernel) -> String {
+        let mut out = self.summary();
+        if !self.trace.is_empty() {
+            out.push_str("\ntrace:\n");
+            for s in &self.trace {
+                out.push_str(&format!(
+                    "  step {:>3}  lb={:>14}  measured={:>14}  gfs={:>8.2}  {}\n",
+                    s.step,
+                    fmt_opt(s.lower_bound),
+                    fmt_opt(s.measured),
+                    s.gflops,
+                    s.status.tag()
+                ));
+            }
+        }
+        if let Some((d, cycles)) = &self.best {
+            out.push_str(&format!("\nbest design ({cycles:.0} cycles):\n"));
+            out.push_str(&d.render(k));
+        }
+        out
+    }
+}
+
+fn fmt_opt(x: Option<f64>) -> String {
+    match x {
+        Some(v) => format!("{v:.0}"),
+        None => "-".into(),
+    }
+}
+
+fn step_from_record(s: &StepRecord) -> ExplorationStep {
+    let status = if s.dedup {
+        StepStatus::Dedup
+    } else if s.pruned {
+        StepStatus::Pruned
+    } else if s.timeout {
+        StepStatus::Timeout
+    } else if s.valid {
+        StepStatus::Synthesized
+    } else {
+        StepStatus::Invalid
+    };
+    ExplorationStep {
+        step: s.step,
+        lower_bound: if s.lower_bound.is_finite() {
+            Some(s.lower_bound)
+        } else {
+            None
+        },
+        measured: s.measured,
+        gflops: s.gflops,
+        status,
+    }
+}
+
+impl From<DseOutcome> for Exploration {
+    fn from(o: DseOutcome) -> Exploration {
+        let trace: Vec<ExplorationStep> = o.trace.iter().map(step_from_record).collect();
+        let floor = o
+            .trace
+            .iter()
+            .map(|s| s.lower_bound)
+            .filter(|lb| lb.is_finite())
+            .fold(f64::INFINITY, f64::min);
+        let pruned = o.trace.iter().filter(|s| s.pruned).count() as u32;
+        let rejected = trace
+            .iter()
+            .filter(|s| s.status == StepStatus::Invalid)
+            .count() as u32;
+        Exploration {
+            engine: "nlpdse".into(),
+            kernel: o.kernel.clone(),
+            best: o.best.clone(),
+            best_gflops: o.best_gflops,
+            first_synth_gflops: o.first_synth_gflops,
+            best_dsp_pct: o.best_dsp_pct,
+            lower_bound: if floor.is_finite() { Some(floor) } else { None },
+            wall_minutes: o.dse_minutes,
+            synth_calls: o.designs_explored,
+            synth_timeouts: o.designs_timeout,
+            pruned,
+            rejected,
+            trace,
+            detail: EngineDetail::NlpDse(o),
+        }
+    }
+}
+
+impl From<AutoDseOutcome> for Exploration {
+    fn from(o: AutoDseOutcome) -> Exploration {
+        Exploration {
+            engine: "autodse".into(),
+            kernel: o.kernel.clone(),
+            best: o.best.clone(),
+            best_gflops: o.best_gflops,
+            first_synth_gflops: 0.0,
+            best_dsp_pct: o.best_dsp_pct,
+            lower_bound: None,
+            wall_minutes: o.dse_minutes,
+            synth_calls: o.designs_explored,
+            synth_timeouts: o.designs_timeout,
+            pruned: 0,
+            rejected: o.early_rejected,
+            trace: Vec::new(),
+            detail: EngineDetail::AutoDse(o),
+        }
+    }
+}
+
+impl From<HarpOutcome> for Exploration {
+    fn from(o: HarpOutcome) -> Exploration {
+        Exploration {
+            engine: "harp".into(),
+            kernel: o.kernel.clone(),
+            best: o.best.clone(),
+            best_gflops: o.best_gflops,
+            first_synth_gflops: 0.0,
+            best_dsp_pct: 0.0,
+            lower_bound: None,
+            wall_minutes: o.dse_minutes,
+            synth_calls: o.designs_synthesized,
+            synth_timeouts: o.designs_timeout,
+            pruned: 0,
+            rejected: 0,
+            trace: Vec::new(),
+            detail: EngineDetail::Harp(o),
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Uniform random search — the smallest useful baseline engine, and the
+//! registry's proof that a new engine needs zero CLI/coordinator edits:
+//! it is reachable from `nlp-dse dse --engine random`, campaign scopes,
+//! and the `Explorer` facade purely through its registry entry.
+//!
+//! Strategy: synthesize the pragma-free design (guaranteed-valid
+//! baseline), then draw uniformly random pipeline-configuration × unroll
+//! assignments from the enumerated space, screen them with the same
+//! legality predicate HARP's classifier learns, and synthesize up to the
+//! budget. Deterministic per kernel via the seeded in-repo PRNG.
+
+use super::{Engine, EngineDetail, ExploreCtx, Exploration, ExplorationStep, StepStatus};
+use crate::dse::SimClock;
+use crate::hls::{Device, HlsOracle, SynthOptions};
+use crate::ir::{Kernel, LoopId};
+use crate::poly::Analysis;
+use crate::pragma::{space, Design, Space};
+use crate::util::rng::{hash64, Rng};
+use std::collections::BTreeSet;
+
+#[derive(Clone, Debug)]
+pub struct RandomConfig {
+    /// Candidate draws before giving up (screened, deduplicated).
+    pub samples: u64,
+    /// Designs actually sent to synthesis (including the baseline).
+    pub synth_budget: u32,
+    /// Parallel synthesis workers for the simulated clock.
+    pub workers: usize,
+    pub hls_timeout_min: f64,
+}
+
+impl Default for RandomConfig {
+    fn default() -> Self {
+        RandomConfig {
+            samples: 4_000,
+            synth_budget: 48,
+            workers: 8,
+            hls_timeout_min: 180.0,
+        }
+    }
+}
+
+pub struct RandomSearchEngine {
+    pub cfg: RandomConfig,
+}
+
+impl RandomSearchEngine {
+    pub fn new(cfg: RandomConfig) -> RandomSearchEngine {
+        RandomSearchEngine { cfg }
+    }
+}
+
+impl Default for RandomSearchEngine {
+    fn default() -> Self {
+        RandomSearchEngine::new(RandomConfig::default())
+    }
+}
+
+/// Mutable search state threaded through every synthesis call.
+struct SearchState {
+    clock: SimClock,
+    best: Option<(Design, f64)>,
+    best_dsp: u64,
+    min_lat: f64,
+    first_synth_gflops: f64,
+    synth_calls: u32,
+    synth_timeouts: u32,
+    pruned: u32,
+    rejected: u32,
+    trace: Vec<ExplorationStep>,
+}
+
+impl SearchState {
+    fn synth(&mut self, oracle: &HlsOracle, k: &Kernel, a: &Analysis, dev: &Device, d: &Design) {
+        let rep = oracle.synth(k, a, d);
+        self.clock.submit(rep.synth_minutes);
+        self.synth_calls += 1;
+        let status = if rep.timeout {
+            self.synth_timeouts += 1;
+            StepStatus::Timeout
+        } else if rep.valid {
+            StepStatus::Synthesized
+        } else {
+            self.rejected += 1;
+            StepStatus::Invalid
+        };
+        let gfs = rep.gflops(a, dev);
+        if rep.valid && self.first_synth_gflops == 0.0 {
+            self.first_synth_gflops = gfs;
+        }
+        if rep.valid && rep.cycles < self.min_lat {
+            self.min_lat = rep.cycles;
+            self.best = Some((d.clone(), rep.cycles));
+            self.best_dsp = rep.dsp;
+        }
+        self.trace.push(ExplorationStep {
+            step: self.synth_calls,
+            lower_bound: None,
+            measured: if rep.valid { Some(rep.cycles) } else { None },
+            gflops: gfs,
+            status,
+        });
+    }
+}
+
+impl Engine for RandomSearchEngine {
+    fn name(&self) -> &str {
+        "random"
+    }
+
+    fn uses_evaluator(&self) -> bool {
+        false
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        let (k, a, dev) = (ctx.kernel, ctx.analysis, ctx.device);
+        let oracle = HlsOracle {
+            device: dev.clone(),
+            options: SynthOptions {
+                hls_timeout_min: self.cfg.hls_timeout_min,
+            },
+        };
+        let space = Space::new(k, a);
+        let mut rng = Rng::new(hash64(&format!("random/{}/{}", k.name, k.dtype.name())));
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        let mut st = SearchState {
+            clock: SimClock::new(self.cfg.workers),
+            best: None,
+            best_dsp: 0,
+            min_lat: f64::INFINITY,
+            first_synth_gflops: 0.0,
+            synth_calls: 0,
+            synth_timeouts: 0,
+            pruned: 0,
+            rejected: 0,
+            trace: Vec::new(),
+        };
+
+        // baseline: the pragma-free design is always valid, so random
+        // search never returns empty-handed
+        let empty = Design::empty(k);
+        seen.insert(empty.fingerprint());
+        st.synth(&oracle, k, a, dev, &empty);
+
+        for _ in 0..self.cfg.samples {
+            if st.synth_calls >= self.cfg.synth_budget {
+                break;
+            }
+            let pcfg =
+                &space.pipeline_configs[rng.range(0, space.pipeline_configs.len() as u64) as usize];
+            let drawn: Vec<u64> = (0..k.n_loops())
+                .map(|i| {
+                    let menu = space.ufs(LoopId(i as u32), a, dev.max_array_partition);
+                    if menu.is_empty() {
+                        1
+                    } else {
+                        menu[rng.range(0, menu.len() as u64) as usize]
+                    }
+                })
+                .collect();
+            let d = space::materialize(k, a, pcfg, &|l: LoopId| drawn[l.0 as usize], &|_| 1);
+            if !seen.insert(d.fingerprint()) {
+                continue;
+            }
+            // the same legality screen HARP applies before scoring
+            if d.max_partitioning(k) > dev.max_array_partition
+                || crate::merlin::apply(k, a, dev, &d).early_reject
+            {
+                st.pruned += 1;
+                continue;
+            }
+            st.synth(&oracle, k, a, dev, &d);
+        }
+
+        let best_gflops = st
+            .best
+            .as_ref()
+            .map(|(_, c)| a.gflops(*c, dev.freq_hz))
+            .unwrap_or(0.0);
+        let best_dsp_pct = if st.best.is_some() {
+            st.best_dsp as f64 / dev.dsp_total as f64 * 100.0
+        } else {
+            0.0
+        };
+        Exploration {
+            engine: "random".into(),
+            kernel: k.name.clone(),
+            best: st.best,
+            best_gflops,
+            first_synth_gflops: st.first_synth_gflops,
+            best_dsp_pct,
+            lower_bound: None,
+            wall_minutes: st.clock.makespan(),
+            synth_calls: st.synth_calls,
+            synth_timeouts: st.synth_timeouts,
+            pruned: st.pruned,
+            rejected: st.rejected,
+            trace: st.trace,
+            detail: EngineDetail::Generic,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::DType;
+    use crate::nlp::RustFeatureEvaluator;
+
+    fn run(name: &str) -> Exploration {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let ctx = ExploreCtx {
+            kernel: &k,
+            analysis: &a,
+            device: &dev,
+            evaluator: &RustFeatureEvaluator,
+        };
+        RandomSearchEngine::new(RandomConfig {
+            samples: 1_000,
+            synth_budget: 16,
+            ..RandomConfig::default()
+        })
+        .explore(&ctx)
+    }
+
+    #[test]
+    fn always_finds_a_valid_design() {
+        let out = run("gemm");
+        assert!(out.best.is_some());
+        assert!(out.best_gflops > 0.0);
+        assert!(out.synth_calls >= 1);
+        assert!(out.wall_minutes > 0.0);
+        assert_eq!(out.engine, "random");
+    }
+
+    #[test]
+    fn deterministic() {
+        let o1 = run("bicg");
+        let o2 = run("bicg");
+        assert_eq!(o1.best_gflops, o2.best_gflops);
+        assert_eq!(o1.synth_calls, o2.synth_calls);
+        assert_eq!(o1.trace.len(), o2.trace.len());
+    }
+
+    #[test]
+    fn respects_synth_budget() {
+        let out = run("atax");
+        assert!(out.synth_calls <= 16, "budget exceeded: {}", out.synth_calls);
+    }
+}

@@ -1,0 +1,106 @@
+//! Name-keyed engine registry.
+//!
+//! The CLI (`--engine`), the campaign coordinator, and the [`Explorer`]
+//! facade all resolve engines here, so adding an engine is one
+//! `register` call — no dispatch site anywhere else changes. Factories
+//! are plain `fn` pointers taking the shared [`EngineTuning`] bundle;
+//! each reads only the field it cares about.
+//!
+//! [`Explorer`]: super::Explorer
+
+use super::{AutoDseEngine, Engine, EngineTuning, HarpEngine, NlpDseEngine, RandomSearchEngine};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Engine constructor: builds a boxed engine from the campaign tuning.
+pub type EngineFactory = fn(&EngineTuning) -> Box<dyn Engine>;
+
+#[derive(Clone, Default)]
+pub struct Registry {
+    factories: BTreeMap<String, EngineFactory>,
+}
+
+impl Registry {
+    /// An empty registry (for fully custom engine sets).
+    pub fn empty() -> Registry {
+        Registry::default()
+    }
+
+    /// The four in-repo engines: `nlpdse`, `autodse`, `harp`, `random`.
+    pub fn builtin() -> Registry {
+        let mut r = Registry::empty();
+        r.register("nlpdse", |t| Box::new(NlpDseEngine::new(t.dse.clone())));
+        r.register("autodse", |t| Box::new(AutoDseEngine::new(t.autodse.clone())));
+        r.register("harp", |t| Box::new(HarpEngine::new(t.harp.clone())));
+        r.register("random", |t| Box::new(RandomSearchEngine::new(t.random.clone())));
+        r
+    }
+
+    /// Register (or replace) an engine factory under `name`.
+    pub fn register(&mut self, name: &str, factory: EngineFactory) {
+        self.factories.insert(name.to_string(), factory);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.contains_key(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.keys().cloned().collect()
+    }
+
+    /// Instantiate the engine registered under `name`.
+    pub fn create(&self, name: &str, tuning: &EngineTuning) -> Result<Box<dyn Engine>> {
+        match self.factories.get(name) {
+            Some(f) => Ok(f(tuning)),
+            None => bail!(
+                "unknown engine `{name}` (registered: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_registers_all_four_engines() {
+        let r = Registry::builtin();
+        assert_eq!(r.names(), vec!["autodse", "harp", "nlpdse", "random"]);
+        for n in ["nlpdse", "autodse", "harp", "random"] {
+            assert!(r.contains(n), "{n}");
+            let e = r.create(n, &EngineTuning::default()).unwrap();
+            assert_eq!(e.name(), n);
+        }
+    }
+
+    #[test]
+    fn unknown_engine_is_a_clean_error() {
+        let r = Registry::builtin();
+        let err = r
+            .create("simulated-annealing", &EngineTuning::default())
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown engine `simulated-annealing`"), "{msg}");
+        // the error names the valid choices
+        assert!(msg.contains("nlpdse") && msg.contains("random"), "{msg}");
+    }
+
+    #[test]
+    fn third_party_registration_and_replacement() {
+        let mut r = Registry::builtin();
+        fn f(t: &EngineTuning) -> Box<dyn Engine> {
+            Box::new(RandomSearchEngine::new(t.random.clone()))
+        }
+        r.register("my-search", f);
+        assert!(r.contains("my-search"));
+        assert!(r.create("my-search", &EngineTuning::default()).is_ok());
+        // replacement under an existing key wins
+        r.register("nlpdse", f);
+        let e = r.create("nlpdse", &EngineTuning::default()).unwrap();
+        assert_eq!(e.name(), "random");
+    }
+}

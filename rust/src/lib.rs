@@ -2,9 +2,38 @@
 //!
 //! Reproduction of Pouget, Pouchet & Cong (TODAES 2024, DOI 10.1145/3711847).
 //!
-//! The library is organized as the paper's system plus every substrate it
-//! depends on (all built in-repo — see `DESIGN.md` §2 for the substitution
-//! table):
+//! ## Front door: the `Explorer` facade
+//!
+//! Most tasks are one chained call through [`engine::Explorer`], which
+//! owns kernel construction, exact analysis, Rust-vs-XLA evaluator
+//! selection, and oracle setup, and runs any engine registered in the
+//! name-keyed [`engine::Registry`] (`nlpdse`, `autodse`, `harp`,
+//! `random`, or your own):
+//!
+//! ```no_run
+//! use nlp_dse::benchmarks::Size;
+//! use nlp_dse::engine::{Evaluator, Explorer};
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let outcome = Explorer::kernel("gemm", Size::Medium)?
+//!     .evaluator(Evaluator::auto())
+//!     .engine("nlpdse")?
+//!     .run()?;
+//! println!("{}", outcome.summary());
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Every engine returns the same normalized [`engine::Exploration`]
+//! outcome, which is what the campaign coordinator aggregates and the
+//! report generators consume.
+//!
+//! ## Escape hatch: the substrate modules
+//!
+//! The library remains organized as the paper's system plus every
+//! substrate it depends on (all built in-repo — see `DESIGN.md` §2 for
+//! the substitution table), and all of it stays public for research
+//! code that needs the pieces directly:
 //!
 //! * [`ir`] — affine loop-nest intermediate representation for the input
 //!   kernels (the paper consumes PolyBench/C through PolyOpt-HLS; we consume
@@ -34,9 +63,15 @@
 //!   parallelism mode, lower-bound pruning, early termination.
 //! * [`baselines`] — AutoDSE (bottleneck-driven) and HARP (surrogate-guided)
 //!   reimplementations used as comparison points.
+//! * [`engine`] — the unified exploration API: the object-safe
+//!   [`engine::Engine`] trait, the normalized [`engine::Exploration`]
+//!   outcome, the engine [`engine::Registry`], and the
+//!   [`engine::Explorer`] session facade.
 //! * [`runtime`] — PJRT CPU client wrapper loading `artifacts/*.hlo.txt`
-//!   for bulk lower-bound evaluation (python never runs at DSE time).
-//! * [`coordinator`] — thread-pool campaign orchestration across kernels.
+//!   for bulk lower-bound evaluation (python never runs at DSE time);
+//!   built as a stub unless the `xla` cargo feature is enabled.
+//! * [`coordinator`] — thread-pool campaign orchestration: one
+//!   `Box<dyn Engine>` job per (kernel, engine) pair.
 //! * [`report`] — regenerates every table and figure of the evaluation.
 //! * [`util`] — in-repo substrates for the offline environment: PRNG,
 //!   JSON/TSV emitters, bench harness, mini property-testing helper.
@@ -52,11 +87,13 @@ pub mod nlp;
 pub mod merlin;
 pub mod dse;
 pub mod baselines;
+pub mod engine;
 pub mod runtime;
 pub mod coordinator;
 pub mod report;
 pub mod cli;
 
+pub use engine::{Engine, Evaluator, Exploration, ExploreCtx, Explorer, Registry};
 pub use ir::{ArrayId, Kernel, LoopId, StmtId};
 pub use model::ModelResult;
 pub use pragma::Design;

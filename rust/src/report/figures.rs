@@ -9,8 +9,8 @@ use crate::benchmarks::Size;
 pub fn figure2_3(r: &CampaignResult, size: Size) -> String {
     let mut out = String::from("kernel\tnlpdse_gfs\tautodse_gfs\tnlpdse_T_min\tautodse_T_min\n");
     for row in r.rows.iter().filter(|x| x.size == size) {
-        let n = row.nlpdse.as_ref();
-        let a = row.autodse.as_ref();
+        let n = row.nlpdse();
+        let a = row.autodse();
         out.push_str(&format!(
             "{}\t{:.3}\t{:.3}\t{:.1}\t{:.1}\n",
             row.name,
@@ -31,8 +31,8 @@ pub fn figure4(r: &CampaignResult) -> String {
             "{}\t{}\t{:.3}\t{:.3}\n",
             row.name,
             row.size.tag(),
-            row.nlpdse.as_ref().map(|x| x.best_gflops).unwrap_or(0.0),
-            row.harp.as_ref().map(|x| x.best_gflops).unwrap_or(0.0),
+            row.nlpdse().map(|x| x.best_gflops).unwrap_or(0.0),
+            row.harp().map(|x| x.best_gflops).unwrap_or(0.0),
         ));
     }
     out
@@ -44,7 +44,7 @@ pub fn figure4(r: &CampaignResult) -> String {
 pub fn figure5(r: &CampaignResult) -> String {
     let mut rows: Vec<(f64, f64, bool, bool, String)> = Vec::new();
     for row in &r.rows {
-        if let Some(n) = &row.nlpdse {
+        if let Some(n) = row.nlpdse() {
             for s in &n.trace {
                 if let Some(meas) = s.measured {
                     rows.push((
@@ -78,7 +78,7 @@ pub fn figure6(r: &CampaignResult, kernel: &str, size: Size) -> String {
         .iter()
         .find(|x| x.name == kernel && x.size == size)
     {
-        if let Some(n) = &row.nlpdse {
+        if let Some(n) = row.nlpdse() {
             for s in &n.trace {
                 let status = if s.dedup {
                     "dedup"

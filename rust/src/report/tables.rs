@@ -41,7 +41,7 @@ pub fn table1(r: &CampaignResult) -> TextTable {
     let auto: Vec<String> = rows
         .iter()
         .flat_map(|x| {
-            let a = x.autodse.as_ref();
+            let a = x.autodse();
             [
                 f2(a.map(|a| a.best_gflops).unwrap_or(0.0)),
                 i0(a.map(|a| a.dse_minutes).unwrap_or(0.0)),
@@ -54,7 +54,7 @@ pub fn table1(r: &CampaignResult) -> TextTable {
     let imp: Vec<String> = rows
         .iter()
         .flat_map(|x| {
-            let a = x.autodse.as_ref().map(|a| a.best_gflops).unwrap_or(0.0);
+            let a = x.autodse().map(|a| a.best_gflops).unwrap_or(0.0);
             [ratio(a / x.original_gflops.max(1e-9)), "".into()]
         })
         .collect();
@@ -81,32 +81,28 @@ pub fn table2(r: &CampaignResult) -> TextTable {
     t.row(line);
     let mut line = vec!["Nb. design synthesized (AutoDSE)".to_string()];
     line.extend(get(&|x| {
-        x.autodse
-            .as_ref()
+        x.autodse()
             .map(|a| a.designs_synthesized.to_string())
             .unwrap_or_default()
     }));
     t.row(line);
     let mut line = vec!["Nb. design pruned/ER (AutoDSE)".to_string()];
     line.extend(get(&|x| {
-        x.autodse
-            .as_ref()
+        x.autodse()
             .map(|a| a.early_rejected.to_string())
             .unwrap_or_default()
     }));
     t.row(line);
     let mut line = vec!["Nb. design timeout (AutoDSE)".to_string()];
     line.extend(get(&|x| {
-        x.autodse
-            .as_ref()
+        x.autodse()
             .map(|a| a.designs_timeout.to_string())
             .unwrap_or_default()
     }));
     t.row(line);
     let mut line = vec!["Nb. design explored (AutoDSE)".to_string()];
     line.extend(get(&|x| {
-        x.autodse
-            .as_ref()
+        x.autodse()
             .map(|a| a.designs_explored.to_string())
             .unwrap_or_default()
     }));
@@ -133,7 +129,7 @@ pub fn table3(r: &CampaignResult) -> TextTable {
     t.row(line);
     let mut line = vec!["AutoDSE".to_string()];
     line.extend(triple(&|x| {
-        let a = x.autodse.as_ref();
+        let a = x.autodse();
         [
             f2(a.map(|a| a.best_gflops).unwrap_or(0.0)),
             i0(a.map(|a| a.dse_minutes).unwrap_or(0.0)),
@@ -143,7 +139,7 @@ pub fn table3(r: &CampaignResult) -> TextTable {
     t.row(line);
     let mut line = vec!["NLP-DSE-FS".to_string()];
     line.extend(triple(&|x| {
-        let n = x.nlpdse.as_ref();
+        let n = x.nlpdse();
         [
             f2(n.map(|n| n.first_synth_gflops).unwrap_or(0.0)),
             "N/A".into(),
@@ -153,7 +149,7 @@ pub fn table3(r: &CampaignResult) -> TextTable {
     t.row(line);
     let mut line = vec!["NLP-DSE".to_string()];
     line.extend(triple(&|x| {
-        let n = x.nlpdse.as_ref();
+        let n = x.nlpdse();
         [
             f2(n.map(|n| n.best_gflops).unwrap_or(0.0)),
             i0(n.map(|n| n.dse_minutes).unwrap_or(0.0)),
@@ -163,10 +159,10 @@ pub fn table3(r: &CampaignResult) -> TextTable {
     t.row(line);
     let mut line = vec!["Imp. vs AutoDSE".to_string()];
     line.extend(triple(&|x| {
-        let n = x.nlpdse.as_ref().map(|n| n.best_gflops).unwrap_or(0.0);
-        let nt = x.nlpdse.as_ref().map(|n| n.dse_minutes).unwrap_or(0.0);
-        let a = x.autodse.as_ref().map(|a| a.best_gflops).unwrap_or(0.0);
-        let at = x.autodse.as_ref().map(|a| a.dse_minutes).unwrap_or(0.0);
+        let n = x.nlpdse().map(|n| n.best_gflops).unwrap_or(0.0);
+        let nt = x.nlpdse().map(|n| n.dse_minutes).unwrap_or(0.0);
+        let a = x.autodse().map(|a| a.best_gflops).unwrap_or(0.0);
+        let at = x.autodse().map(|a| a.dse_minutes).unwrap_or(0.0);
         [
             ratio(n / a.max(1e-9)),
             ratio(at / nt.max(1e-9)),
@@ -193,8 +189,8 @@ pub fn table5(r: &CampaignResult) -> TextTable {
     let mut n_t = Vec::new();
     let mut a_t = Vec::new();
     for row in &r.rows {
-        let n = row.nlpdse.as_ref();
-        let a = row.autodse.as_ref();
+        let n = row.nlpdse();
+        let a = row.autodse();
         let (ng, nt) = (
             n.map(|x| x.best_gflops).unwrap_or(0.0),
             n.map(|x| x.dse_minutes).unwrap_or(0.0),
@@ -280,7 +276,7 @@ pub fn table6(r: &CampaignResult) -> TextTable {
         &["Kernel", "S", "steps to best", "steps to LB>HLS"],
     );
     for row in &r.rows {
-        let Some(n) = row.nlpdse.as_ref() else { continue };
+        let Some(n) = row.nlpdse() else { continue };
         t.row(vec![
             row.name.clone(),
             row.size.tag().to_string(),
@@ -291,12 +287,12 @@ pub fn table6(r: &CampaignResult) -> TextTable {
     let bests: Vec<f64> = r
         .rows
         .iter()
-        .filter_map(|x| x.nlpdse.as_ref().map(|n| n.steps_to_best as f64))
+        .filter_map(|x| x.nlpdse().map(|n| n.steps_to_best as f64))
         .collect();
     let terms: Vec<f64> = r
         .rows
         .iter()
-        .filter_map(|x| x.nlpdse.as_ref().map(|n| n.steps_to_terminate as f64))
+        .filter_map(|x| x.nlpdse().map(|n| n.steps_to_terminate as f64))
         .collect();
     t.sep();
     t.row(vec![
@@ -319,7 +315,7 @@ pub fn table7(r: &CampaignResult) -> TextTable {
         let mut nto_times = Vec::new();
         let mut tos = 0u32;
         for row in r.rows.iter().filter(|x| x.size == size) {
-            if let Some(n) = &row.nlpdse {
+            if let Some(n) = row.nlpdse() {
                 tos += n.nlp_timeouts;
                 times.extend(n.nlp_solve_s.iter().copied());
                 // per-solve timeout attribution is aggregate here
@@ -341,7 +337,7 @@ pub fn table7(r: &CampaignResult) -> TextTable {
     let mut all = Vec::new();
     let mut tos = 0;
     for row in &r.rows {
-        if let Some(n) = &row.nlpdse {
+        if let Some(n) = row.nlpdse() {
             tos += n.nlp_timeouts;
             all.extend(n.nlp_solve_s.iter().copied());
         }
@@ -399,8 +395,8 @@ pub fn table9(r: &CampaignResult) -> TextTable {
     );
     let mut imps = Vec::new();
     for row in &r.rows {
-        let n = row.nlpdse.as_ref().map(|x| x.best_gflops).unwrap_or(0.0);
-        let h = row.harp.as_ref().map(|x| x.best_gflops).unwrap_or(0.0);
+        let n = row.nlpdse().map(|x| x.best_gflops).unwrap_or(0.0);
+        let h = row.harp().map(|x| x.best_gflops).unwrap_or(0.0);
         if h > 0.0 {
             imps.push(n / h);
         }

@@ -8,10 +8,14 @@
 //! Python never runs here: the artifact is compiled once per process and
 //! executed with f64 feature tensors encoded by `model::features`.
 
-use crate::model::{self, Abi, DesignFeatures};
+#[cfg(feature = "xla")]
+use crate::model::Abi;
+use crate::model::{self, DesignFeatures};
 use crate::nlp::{BatchEvaluator, NlpProblem};
 use crate::pragma::Design;
-use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::Context;
+use anyhow::{anyhow, Result};
 use std::path::{Path, PathBuf};
 
 /// Default artifact directory (relative to the repo root / CWD).
@@ -23,6 +27,12 @@ pub fn default_artifact_dir() -> PathBuf {
 
 /// The XLA-backed batch evaluator. Not `Sync` (PJRT handles are
 /// thread-affine); the coordinator instantiates one per worker.
+///
+/// Requires the `xla` cargo feature (the `xla` PJRT bindings are a
+/// native-library dependency that is not always available); without it
+/// this is a stub whose `load` fails cleanly and every caller falls
+/// back to the in-process Rust evaluator.
+#[cfg(feature = "xla")]
 pub struct XlaEvaluator {
     exe: xla::PjRtLoadedExecutable,
     pub batch: usize,
@@ -30,6 +40,31 @@ pub struct XlaEvaluator {
     pub executions: std::cell::Cell<u64>,
 }
 
+/// Stub built without the `xla` feature: `load` always fails, so the
+/// Rust reference evaluator is used everywhere.
+#[cfg(not(feature = "xla"))]
+pub struct XlaEvaluator {
+    pub batch: usize,
+    /// Executions performed (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaEvaluator {
+    pub fn load(dir: &Path) -> Result<XlaEvaluator> {
+        Err(anyhow!(
+            "built without the `xla` cargo feature — cannot execute AOT artifacts \
+             (artifact dir: {}); rebuild with `--features xla`",
+            dir.display()
+        ))
+    }
+
+    pub fn eval_features(&self, _feats: &[DesignFeatures]) -> Result<Vec<(f64, f64)>> {
+        Err(anyhow!("built without the `xla` cargo feature"))
+    }
+}
+
+#[cfg(feature = "xla")]
 impl XlaEvaluator {
     /// Load + compile `lat_bound.hlo.txt` from `dir`.
     pub fn load(dir: &Path) -> Result<XlaEvaluator> {
@@ -134,6 +169,7 @@ impl BatchEvaluator for XlaEvaluator {
     }
 }
 
+#[cfg_attr(not(feature = "xla"), allow(dead_code))]
 fn read_abi_batch(path: &Path) -> Option<usize> {
     let text = std::fs::read_to_string(path).ok()?;
     let idx = text.find("\"batch\"")?;

@@ -2,7 +2,7 @@
 //! coordinator.
 
 use nlp_dse::benchmarks::{self, Size};
-use nlp_dse::coordinator::{run_campaign, CampaignConfig, Engines};
+use nlp_dse::coordinator::{engine_names, run_campaign, CampaignConfig};
 use nlp_dse::dse::{run_nlp_dse, DseConfig};
 use nlp_dse::hls::{Device, HlsOracle};
 use nlp_dse::ir::DType;
@@ -89,15 +89,15 @@ fn campaign_full_row_consistency() {
         ("gemm".into(), Size::Small),
         ("bicg".into(), Size::Small),
     ];
-    cfg.engines = Engines::all();
-    cfg.harp.sweep_configs = 2_000;
+    cfg.engines = engine_names(&["nlpdse", "autodse", "harp"]);
+    cfg.tuning.harp.sweep_configs = 2_000;
     let r = run_campaign(&cfg);
     assert_eq!(r.rows.len(), 2);
     for row in &r.rows {
         assert!(row.space_size > 1.0, "{}", row.name);
         assert!(row.nl >= 2);
         assert!(row.original_gflops > 0.0);
-        let n = row.nlpdse.as_ref().unwrap();
+        let n = row.nlpdse().unwrap();
         assert!(n.best_gflops >= row.original_gflops * 0.999);
         assert!(n.first_synth_gflops <= n.best_gflops * 1.0001);
     }

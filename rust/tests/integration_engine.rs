@@ -1,0 +1,275 @@
+//! The unified engine API: registry dispatch, `Exploration`
+//! normalization from every legacy outcome type, and the `Explorer`
+//! facade end-to-end over every registered engine.
+
+use nlp_dse::baselines::{run_autodse, run_harp, AutoDseConfig, HarpConfig};
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::dse::{run_nlp_dse, DseConfig};
+use nlp_dse::engine::{
+    Engine, EngineTuning, Evaluator, Exploration, ExploreCtx, Explorer, Registry, StepStatus,
+};
+use nlp_dse::hls::{Device, HlsOracle};
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::RustFeatureEvaluator;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+
+fn substrate(name: &str, size: Size) -> (nlp_dse::Kernel, Analysis, Device) {
+    let k = benchmarks::build(name, size, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    (k, a, Device::u200())
+}
+
+// --- registry ----------------------------------------------------------
+
+#[test]
+fn registry_lists_and_resolves_builtin_engines() {
+    let r = Registry::builtin();
+    assert_eq!(r.names(), vec!["autodse", "harp", "nlpdse", "random"]);
+    for n in r.names() {
+        let e = r.create(&n, &EngineTuning::default()).unwrap();
+        assert_eq!(e.name(), n);
+    }
+}
+
+#[test]
+fn registry_unknown_engine_error_names_alternatives() {
+    let err = Registry::builtin()
+        .create("gradient-descent", &EngineTuning::default())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown engine `gradient-descent`"), "{msg}");
+    for n in ["nlpdse", "autodse", "harp", "random"] {
+        assert!(msg.contains(n), "{msg} should list {n}");
+    }
+}
+
+// --- Exploration normalization -----------------------------------------
+
+#[test]
+fn normalizes_nlpdse_outcome() {
+    let (k, a, dev) = substrate("gemm", Size::Small);
+    let o = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+    let ex: Exploration = o.clone().into();
+    assert_eq!(ex.engine, "nlpdse");
+    assert_eq!(ex.kernel, o.kernel);
+    assert_eq!(ex.best_gflops, o.best_gflops);
+    assert_eq!(ex.first_synth_gflops, o.first_synth_gflops);
+    assert_eq!(ex.wall_minutes, o.dse_minutes);
+    assert_eq!(ex.synth_calls, o.designs_explored);
+    assert_eq!(ex.synth_timeouts, o.designs_timeout);
+    assert_eq!(ex.trace.len(), o.trace.len());
+    assert_eq!(
+        ex.pruned as usize,
+        o.trace.iter().filter(|s| s.pruned).count()
+    );
+    // the proven floor is the smallest finite subspace lower bound
+    let floor = ex.lower_bound.expect("nlpdse proves a floor");
+    assert!(floor > 0.0 && floor.is_finite());
+    // detail survives for the report generators
+    let back = ex.as_nlpdse().expect("detail preserved");
+    assert_eq!(back.steps_to_best, o.steps_to_best);
+    assert!(ex.as_autodse().is_none() && ex.as_harp().is_none());
+    // normalized trace agrees with the legacy step records
+    for (ns, ls) in ex.trace.iter().zip(o.trace.iter()) {
+        assert_eq!(ns.step, ls.step);
+        assert_eq!(ns.measured, ls.measured);
+        assert_eq!(ns.status == StepStatus::Dedup, ls.dedup);
+        assert_eq!(ns.status == StepStatus::Pruned, ls.pruned && !ls.dedup);
+    }
+}
+
+#[test]
+fn normalizes_autodse_outcome() {
+    let (k, a, dev) = substrate("bicg", Size::Small);
+    let o = run_autodse(&k, &a, &dev, &AutoDseConfig::default());
+    let ex: Exploration = o.clone().into();
+    assert_eq!(ex.engine, "autodse");
+    assert_eq!(ex.best_gflops, o.best_gflops);
+    assert_eq!(ex.wall_minutes, o.dse_minutes);
+    assert_eq!(ex.synth_calls, o.designs_explored);
+    assert_eq!(ex.synth_timeouts, o.designs_timeout);
+    assert_eq!(ex.rejected, o.early_rejected);
+    assert!(ex.lower_bound.is_none(), "autodse has no bounding model");
+    assert_eq!(
+        ex.as_autodse().unwrap().designs_synthesized,
+        o.designs_synthesized
+    );
+}
+
+#[test]
+fn normalizes_harp_outcome() {
+    let (k, a, dev) = substrate("mvt", Size::Small);
+    let cfg = HarpConfig {
+        sweep_configs: 2_000,
+        ..HarpConfig::default()
+    };
+    let o = run_harp(&k, &a, &dev, &cfg);
+    let ex: Exploration = o.clone().into();
+    assert_eq!(ex.engine, "harp");
+    assert_eq!(ex.best_gflops, o.best_gflops);
+    assert_eq!(ex.wall_minutes, o.dse_minutes);
+    assert_eq!(ex.synth_calls, o.designs_synthesized);
+    assert!(ex.lower_bound.is_none());
+    assert_eq!(ex.as_harp().unwrap().configs_scored, o.configs_scored);
+}
+
+// --- Explorer facade end-to-end ----------------------------------------
+
+fn quick_tuning() -> EngineTuning {
+    EngineTuning {
+        harp: HarpConfig {
+            sweep_configs: 2_000,
+            ..HarpConfig::default()
+        },
+        random: nlp_dse::engine::RandomConfig {
+            samples: 1_000,
+            synth_budget: 16,
+            ..Default::default()
+        },
+        ..EngineTuning::default()
+    }
+}
+
+#[test]
+fn explorer_runs_every_registered_engine_end_to_end() {
+    let explorer = Explorer::kernel("gemm", Size::Small)
+        .unwrap()
+        .evaluator(Evaluator::rust())
+        .tuning(quick_tuning());
+    for name in explorer.engine_names() {
+        let ex = explorer.run_engine(&name).unwrap_or_else(|e| {
+            panic!("engine {name} failed: {e:#}");
+        });
+        assert_eq!(ex.engine, name);
+        assert_eq!(ex.kernel, "gemm");
+        assert!(ex.best.is_some(), "{name} found no design");
+        assert!(ex.best_gflops > 0.0, "{name}");
+        assert!(ex.synth_calls >= 1, "{name}");
+        assert!(ex.wall_minutes > 0.0, "{name}");
+        // every engine's summary renders without a kernel in hand
+        assert!(ex.summary().contains(&format!("engine `{name}`")));
+    }
+}
+
+#[test]
+fn explorer_selected_engine_and_builder_chain() {
+    // the issue's canonical one-liner shape
+    let outcome = Explorer::kernel("atax", Size::Small)
+        .unwrap()
+        .device(Device::u200())
+        .evaluator(Evaluator::rust())
+        .engine("random")
+        .unwrap()
+        .random_config(nlp_dse::engine::RandomConfig {
+            samples: 500,
+            synth_budget: 8,
+            ..Default::default()
+        })
+        .run()
+        .unwrap();
+    assert_eq!(outcome.engine, "random");
+    assert!(outcome.synth_calls <= 8);
+    assert!(outcome.best.is_some());
+}
+
+#[test]
+fn explorer_is_deterministic_per_engine() {
+    for engine in ["autodse", "random"] {
+        let run = || {
+            Explorer::kernel("bicg", Size::Small)
+                .unwrap()
+                .evaluator(Evaluator::rust())
+                .tuning(quick_tuning())
+                .run_engine(engine)
+                .unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.best_gflops, b.best_gflops, "{engine}");
+        assert_eq!(a.synth_calls, b.synth_calls, "{engine}");
+    }
+}
+
+// --- third-party engine: registered, zero CLI/coordinator edits ---------
+
+struct BestOfOne;
+
+impl Engine for BestOfOne {
+    fn name(&self) -> &str {
+        "best-of-one"
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        let oracle = HlsOracle::new(ctx.device.clone());
+        let d = Design::empty(ctx.kernel);
+        let rep = oracle.synth(ctx.kernel, ctx.analysis, &d);
+        let gfs = rep.gflops(ctx.analysis, ctx.device);
+        Exploration {
+            engine: "best-of-one".into(),
+            kernel: ctx.kernel.name.clone(),
+            best: rep.valid.then(|| (d, rep.cycles)),
+            best_gflops: gfs,
+            first_synth_gflops: gfs,
+            best_dsp_pct: 0.0,
+            lower_bound: None,
+            wall_minutes: rep.synth_minutes,
+            synth_calls: 1,
+            synth_timeouts: 0,
+            pruned: 0,
+            rejected: 0,
+            trace: Vec::new(),
+            detail: nlp_dse::engine::EngineDetail::Generic,
+        }
+    }
+}
+
+#[test]
+fn custom_engine_registers_into_the_facade() {
+    fn factory(_t: &EngineTuning) -> Box<dyn Engine> {
+        Box::new(BestOfOne)
+    }
+    let outcome = Explorer::kernel("gemm", Size::Small)
+        .unwrap()
+        .evaluator(Evaluator::rust())
+        .register("best-of-one", factory)
+        .engine("best-of-one")
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(outcome.engine, "best-of-one");
+    assert_eq!(outcome.synth_calls, 1);
+    assert!(outcome.best.is_some());
+}
+
+// --- CLI dispatches through the registry --------------------------------
+
+#[test]
+fn cli_dse_dispatches_any_registered_engine() {
+    let out = std::env::temp_dir().join("nlpdse-engine-cli.txt");
+    nlp_dse::cli::run(&[
+        "dse",
+        "--kernel",
+        "bicg",
+        "--size",
+        "S",
+        "--engine",
+        "random",
+        "--out",
+        out.to_str().unwrap(),
+    ])
+    .unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert!(text.contains("engine `random` on bicg"), "{text}");
+    assert!(text.contains("best design"), "{text}");
+}
+
+#[test]
+fn cli_rejects_unknown_engine_with_the_registry_list() {
+    let err = nlp_dse::cli::run(&[
+        "dse", "--kernel", "gemm", "--size", "S", "--engine", "nope",
+    ])
+    .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("unknown engine `nope`"), "{msg}");
+    assert!(msg.contains("random"), "{msg}");
+}
