@@ -10,8 +10,8 @@ cargo fmt --all -- --check
 echo "==> cargo clippy -D warnings"
 cargo clippy --workspace --all-targets -- -D warnings
 
-echo "==> cargo build --release"
-cargo build --release --workspace
+echo "==> cargo build --release (all targets: lib, bin, benches, examples, tests)"
+cargo build --release --workspace --all-targets
 
 echo "==> cargo test -q"
 cargo test -q --workspace

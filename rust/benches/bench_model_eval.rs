@@ -1,11 +1,21 @@
 //! Model-evaluation hot path: precise recursive model vs feature encoding
-//! vs encoded-formula evaluation, per kernel. These are the L3 costs the
-//! NLP solver pays per candidate — the target of the §Perf pass.
+//! vs encoded-formula evaluation vs the compiled symbolic tape, per
+//! kernel. These are the L3 costs the NLP solver pays per candidate — the
+//! target of the §Perf pass.
+//!
+//! The headline comparison for the symbolic bound-model IR is
+//! `evaluate/*` (legacy recursion, one design) against `sym_eval/*`
+//! (compiled tape, one design) and `sym_eval_batch64/*` (compiled tape,
+//! amortized over a 64-design batch with one shared scratch) — the
+//! acceptance bar is sym_eval ≤ evaluate per design. `sym_build/*` and
+//! `sym_compile/*` are the once-per-kernel setup costs;
+//! `sym_lower_bound/*` is the interval pass the DSE's partial-config
+//! pruning pays per rung.
 
 use nlp_dse::benchmarks::{self, Size};
 use nlp_dse::hls::Device;
-use nlp_dse::ir::DType;
-use nlp_dse::model;
+use nlp_dse::ir::{DType, LoopId};
+use nlp_dse::model::{self, sym};
 use nlp_dse::poly::Analysis;
 use nlp_dse::pragma::Design;
 use nlp_dse::util::bench::{black_box, Bench};
@@ -29,6 +39,35 @@ fn main() {
         let f = model::encode_design(&k, &a, &dev, &d).unwrap();
         b.bench(&format!("eval_features/{name}"), || {
             black_box(model::eval_features(&f));
+        });
+
+        // --- the symbolic bound-model consumers --------------------------
+        b.bench(&format!("sym_build/{name}"), || {
+            black_box(sym::BoundModel::build(&k, &a, &dev));
+        });
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        b.bench(&format!("sym_compile/{name}"), || {
+            black_box(bm.compile());
+        });
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        b.bench(&format!("sym_eval/{name}"), || {
+            black_box(cm.evaluate(&d, &mut scratch));
+        });
+        // a batch with varied unrolls, the solver's bulk-scoring shape
+        let batch: Vec<Design> = (0..64u64)
+            .map(|i| {
+                let mut dd = Design::empty(&k);
+                dd.get_mut(LoopId(0)).uf = 1 + (i % 4);
+                dd
+            })
+            .collect();
+        b.bench_with_items(&format!("sym_eval_batch64/{name}"), 64.0, || {
+            black_box(cm.evaluate_batch(&batch));
+        });
+        let free = sym::PartialDesign::free(k.n_loops());
+        b.bench(&format!("sym_lower_bound/{name}"), || {
+            black_box(bm.lower_bound(&free));
         });
     }
     b.finish();

@@ -3,14 +3,18 @@
 //! ```text
 //! nlp-dse table --id 5 [--scope quick|paper] [--xla] [--tsv] [--out FILE]
 //! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
-//! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla]
-//! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla]
+//! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound]
+//! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym]
+//! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
 //! nlp-dse space --kernel 2mm --size M
 //! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla]
 //! ```
 //!
 //! The `dse` command dispatches through the engine [`Registry`] — any
-//! registered engine name works, with no per-engine code here.
+//! registered engine name works, with no per-engine code here. The
+//! `bound` command goes through the `Explorer` facade's symbolic bound
+//! model: it prints the achievable-latency lower bound of a (possibly
+//! partial) pragma configuration.
 
 pub mod args;
 
@@ -33,12 +37,26 @@ pub fn main() -> Result<()> {
 }
 
 pub fn run(argv: &[&str]) -> Result<()> {
+    // `bound <kernel>` sugar: the kernel may be given positionally
+    let rewritten: Vec<&str>;
+    let argv = if argv.first() == Some(&"bound")
+        && argv.get(1).is_some_and(|a| !a.starts_with("--"))
+    {
+        rewritten = std::iter::once("bound")
+            .chain(std::iter::once("--kernel"))
+            .chain(argv[1..].iter().copied())
+            .collect();
+        &rewritten[..]
+    } else {
+        argv
+    };
     let mut args = Args::parse(argv)?;
     let out = match args.command() {
         "table" => cmd_table(&mut args)?,
         "figure" => cmd_figure(&mut args)?,
         "dse" => cmd_dse(&mut args)?,
         "solve" => cmd_solve(&mut args)?,
+        "bound" => cmd_bound(&mut args)?,
         "space" => cmd_space(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
         "engines" => cmd_engines(),
@@ -62,8 +80,10 @@ fn help() -> String {
          commands:\n\
            table    --id 1|2|3|5|6|7|8|9 [--scope quick|paper] [--xla] [--tsv]\n\
            figure   --id 2|3|4|5|6 [--scope quick|paper] [--kernel K --size S]\n\
-           dse      --kernel K --size S|M|L [--engine {engines}] [--xla]\n\
-           solve    --kernel K --size S [--cap N] [--fine] [--xla]\n\
+           dse      --kernel K --size S|M|L [--engine {engines}] [--xla|--sym] [--prune-bound]\n\
+           solve    --kernel K --size S [--cap N] [--fine] [--xla|--sym]\n\
+           bound    K [--size S] [--assign loop=uf,...] [--pipeline loop,...] [--cap N]\n\
+                    (achievable-latency lower bound of a partial pragma configuration)\n\
            space    --kernel K --size S\n\
            campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
            engines  (list the registered exploration engines)\n\
@@ -217,8 +237,12 @@ fn make_evaluator(args: &mut Args) -> Box<dyn BatchEvaluator> {
                 eprintln!("[xla] artifact loaded (batch={})", e.batch);
                 return Box::new(e);
             }
-            Err(e) => eprintln!("[xla] unavailable ({e:#}); using rust evaluator"),
+            Err(e) => eprintln!("[xla] unavailable ({e:#}); falling back"),
         }
+    }
+    if args.flag("sym") {
+        eprintln!("[sym] using the compiled symbolic bound-model evaluator");
+        return Box::new(nlp::SymbolicEvaluator);
     }
     Box::new(RustFeatureEvaluator)
 }
@@ -234,11 +258,95 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
     let dtype = parse_dtype(args);
     // make_evaluator reports artifact load / fallback on stderr
     let evaluator = Evaluator::custom(std::rc::Rc::from(make_evaluator(args)));
+    let dse_cfg = crate::dse::DseConfig {
+        prune_bound: args.flag("prune-bound"),
+        ..Default::default()
+    };
     let explorer = Explorer::kernel_dtype(&name, size, dtype)?
         .evaluator(evaluator)
+        .dse_config(dse_cfg)
         .engine(&engine)?;
     let outcome = explorer.run()?;
     Ok(outcome.render(explorer.kernel_ref()))
+}
+
+/// `bound`: achievable-latency lower bound of a (possibly partial) pragma
+/// configuration, through the `Explorer` facade's symbolic bound model.
+fn cmd_bound(args: &mut Args) -> Result<String> {
+    let name = args
+        .opt("kernel")
+        .ok_or_else(|| anyhow!("--kernel required (or `bound <kernel>`)"))?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args);
+    let ex = Explorer::kernel_dtype(&name, size, dtype)?;
+    let k = ex.kernel_ref();
+
+    let resolve = |tok: &str| -> Result<crate::ir::LoopId> {
+        for i in 0..k.n_loops() {
+            let l = crate::ir::LoopId(i as u32);
+            if k.loop_name(l) == tok || format!("L{i}") == tok || i.to_string() == tok {
+                return Ok(l);
+            }
+        }
+        bail!(
+            "unknown loop `{tok}` (loops: {})",
+            (0..k.n_loops())
+                .map(|i| k.loop_name(crate::ir::LoopId(i as u32)).to_string())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    };
+
+    let mut partial = crate::model::sym::PartialDesign::free(k.n_loops());
+    if let Some(cap) = args.opt("cap") {
+        partial = partial.with_uf_cap(cap.parse()?);
+    }
+    if let Some(assigns) = args.opt("assign") {
+        for pair in assigns.split(',').filter(|s| !s.is_empty()) {
+            let (lhs, rhs) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad --assign entry `{pair}` (want loop=uf)"))?;
+            partial.assign_uf(resolve(lhs.trim())?, rhs.trim().parse()?);
+        }
+    }
+    if let Some(pipes) = args.opt("pipeline") {
+        for tok in pipes.split(',').filter(|s| !s.is_empty()) {
+            partial.assign_pipeline(resolve(tok.trim())?, true);
+        }
+    }
+
+    let lb = ex.lower_bound(&partial);
+    let a = ex.analysis();
+    let dev = ex.device_ref();
+    let mut out = format!(
+        "symbolic bound model on {} ({} loops, {} free pragma slots):\n",
+        k.name,
+        k.n_loops(),
+        partial.free_slots()
+    );
+    for i in 0..k.n_loops() {
+        let l = crate::ir::LoopId(i as u32);
+        out.push_str(&format!(
+            "  L{i} {:<8} UF={}  pipeline={}\n",
+            k.loop_name(l),
+            partial.uf[i]
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "free".into()),
+            partial.pipeline[i]
+                .map(|v| v.to_string())
+                .unwrap_or_else(|| "free".into()),
+        ));
+    }
+    out.push_str(&format!(
+        "\nachievable-latency lower bound: {:.0} cycles ({:.2} GF/s ceiling)\n",
+        lb,
+        a.gflops(lb, dev.freq_hz)
+    ));
+    out.push_str(
+        "no completion of this partial configuration can beat the bound \
+         (Theorem B.21 admissibility)\n",
+    );
+    Ok(out)
 }
 
 fn cmd_solve(args: &mut Args) -> Result<String> {
@@ -254,7 +362,9 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
     let r = nlp::solve(&p, 30.0, 3, eval.as_ref());
     let mut out = format!(
         "NLP solve on {} (cap={}, fine={fine}):\n  proven lower bound: {:.0} cycles\n  \
-         optimal: {}   solve time: {:.3}s   nodes: {}   scored: {}\n",
+         optimal: {}   solve time: {:.3}s   nodes: {}   scored: {}\n  \
+         pruned by relaxation: {} (b&b {} + interval {})   infeasible: {}   \
+         partition-pruned: {}\n",
         k.name,
         if cap == u64::MAX {
             "inf".into()
@@ -265,7 +375,12 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
         r.optimal,
         r.solve_time_s,
         r.stats.nodes,
-        r.stats.candidates_scored
+        r.stats.candidates_scored,
+        r.pruned_by_relaxation(),
+        r.stats.pruned_bound,
+        r.stats.pruned_relaxation,
+        r.stats.infeasible,
+        r.stats.pruned_partition
     );
     for (i, (d, obj)) in r.designs.iter().enumerate() {
         out.push_str(&format!(

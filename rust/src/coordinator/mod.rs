@@ -251,11 +251,18 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
                     Some(e) => e,
                     None => &RustFeatureEvaluator,
                 };
+                // model-driven engines share one symbolic bound model per
+                // job; black-box engines (uses_evaluator = false) skip the
+                // build entirely
+                let bound = engine
+                    .uses_evaluator()
+                    .then(|| crate::model::sym::BoundModel::build(&k, &a, &dev));
                 let ctx = ExploreCtx {
                     kernel: &k,
                     analysis: &a,
                     device: &dev,
                     evaluator,
+                    bound: bound.as_ref(),
                 };
                 let _ = tx.send(CampaignMsg::Expl(idx, eidx, engine.explore(&ctx)));
             });

@@ -37,6 +37,12 @@ pub struct DseConfig {
     pub workers: usize,
     /// Overall DSE budget, minutes (paper: 600, soft).
     pub dse_timeout_min: f64,
+    /// Prune whole ladder rungs by the symbolic bound model's
+    /// achievable-latency lower bound (`BoundModel::lower_bound` on the
+    /// rung's partial configuration) before running the NLP solver — the
+    /// paper's partial-configuration pruning use case
+    /// (`dse --prune-bound`).
+    pub prune_bound: bool,
 }
 
 impl Default for DseConfig {
@@ -47,6 +53,7 @@ impl Default for DseConfig {
             nlp_timeout_s: 30.0,
             workers: 8,
             dse_timeout_min: 600.0,
+            prune_bound: false,
         }
     }
 }
@@ -104,13 +111,45 @@ pub struct DseOutcome {
     pub nlp_timeouts: u32,
 }
 
-/// Run Algorithm 1 on one kernel.
+/// Run Algorithm 1 on one kernel. Builds the kernel's symbolic bound
+/// model once and shares it across every ladder rung (and the
+/// `--prune-bound` path); use [`run_nlp_dse_with_bound`] to supply an
+/// already-built model (e.g. `ExploreCtx::bound`).
 pub fn run_nlp_dse(
     k: &Kernel,
     a: &Analysis,
     dev: &Device,
     cfg: &DseConfig,
     evaluator: &dyn BatchEvaluator,
+) -> DseOutcome {
+    let bound = std::rc::Rc::new(crate::model::sym::BoundModel::build(k, a, dev));
+    let compiled = std::rc::Rc::new(bound.compile());
+    run_ladder(k, a, dev, cfg, evaluator, bound, compiled)
+}
+
+/// [`run_nlp_dse`] over a caller-owned bound model (one clone, not one
+/// build per run).
+pub fn run_nlp_dse_with_bound(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    cfg: &DseConfig,
+    evaluator: &dyn BatchEvaluator,
+    bound: &crate::model::sym::BoundModel,
+) -> DseOutcome {
+    let bound = std::rc::Rc::new(bound.clone());
+    let compiled = std::rc::Rc::new(bound.compile());
+    run_ladder(k, a, dev, cfg, evaluator, bound, compiled)
+}
+
+fn run_ladder(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    cfg: &DseConfig,
+    evaluator: &dyn BatchEvaluator,
+    bound: std::rc::Rc<crate::model::sym::BoundModel>,
+    compiled: std::rc::Rc<crate::model::sym::CompiledModel>,
 ) -> DseOutcome {
     let oracle = HlsOracle {
         device: dev.clone(),
@@ -144,11 +183,51 @@ pub fn run_nlp_dse(
                 break 'outer;
             }
             step += 1;
+
+            // Theorem B.21 over *partial* configurations (`--prune-bound`):
+            // every design of this rung keeps UF ≤ cap on array-indexing
+            // loops, so the interval bound of that partial design floors
+            // the whole rung. The bound is monotone as the cap descends
+            // (domains only shrink), so the first rung it kills terminates
+            // the whole ladder — same semantics as the solver-LB
+            // termination below, minus the NLP solve.
+            if cfg.prune_bound && min_lat.is_finite() {
+                let partial =
+                    crate::model::sym::PartialDesign::free(k.n_loops()).with_uf_cap(cap);
+                let rung_lb = bound.lower_bound(&partial);
+                if rung_lb >= min_lat {
+                    steps_to_terminate = step;
+                    trace.push(StepRecord {
+                        step,
+                        cap,
+                        fine_only,
+                        lower_bound: rung_lb,
+                        measured: None,
+                        gflops: 0.0,
+                        valid: false,
+                        timeout: false,
+                        pragmas_applied: false,
+                        flattened: false,
+                        pruned: true,
+                        dedup: false,
+                        fingerprint: String::new(),
+                    });
+                    break 'outer;
+                }
+            }
             // a sub-space may be re-solved (bounded) after Merlin refusals
             // teach the DSE which coarse pragmas are unavailable
             let mut retry_rounds = 0;
             'retry: loop {
-            let mut problem = NlpProblem::new(k, a, dev, cap, fine_only);
+            let mut problem = NlpProblem::with_model(
+                k,
+                a,
+                dev,
+                cap,
+                fine_only,
+                bound.clone(),
+                compiled.clone(),
+            );
             problem.coarse_banned = coarse_banned.clone();
             // top-k per sub-space: the paper runs up to 8 designs per
             // iteration in parallel; when the LB-optimal configuration is
@@ -368,6 +447,28 @@ mod tests {
         assert_eq!(o1.designs_explored, o2.designs_explored);
         assert_eq!(o1.best_gflops, o2.best_gflops);
         assert_eq!(o1.trace.len(), o2.trace.len());
+    }
+
+    #[test]
+    fn prune_bound_keeps_result_and_skips_solves() {
+        // the rung-level partial-configuration bound must never change the
+        // best design (Theorem B.21 admissibility), only skip work
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let base = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+        let pruned_cfg = DseConfig {
+            prune_bound: true,
+            ..DseConfig::default()
+        };
+        let pruned = run_nlp_dse(&k, &a, &dev, &pruned_cfg, &RustFeatureEvaluator);
+        assert_eq!(base.best_gflops, pruned.best_gflops);
+        assert!(pruned.nlp_solve_s.len() <= base.nlp_solve_s.len());
+        // every rung pruned this way carries an admissible bound
+        let best_cycles = pruned.best.as_ref().unwrap().1;
+        for s in pruned.trace.iter().filter(|s| s.pruned && s.lower_bound.is_finite()) {
+            assert!(s.lower_bound >= best_cycles * 0.999);
+        }
     }
 
     #[test]

@@ -8,7 +8,7 @@
 
 use super::{Engine, ExploreCtx, Exploration};
 use crate::baselines::{run_autodse, run_harp, AutoDseConfig, HarpConfig};
-use crate::dse::{run_nlp_dse, DseConfig};
+use crate::dse::{run_nlp_dse, run_nlp_dse_with_bound, DseConfig};
 
 /// The paper's NLP-driven DSE (Algorithm 1).
 pub struct NlpDseEngine {
@@ -33,7 +33,22 @@ impl Engine for NlpDseEngine {
     }
 
     fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
-        run_nlp_dse(ctx.kernel, ctx.analysis, ctx.device, &self.cfg, ctx.evaluator).into()
+        match ctx.bound {
+            // reuse the scheduler/session's symbolic bound model
+            Some(bm) => run_nlp_dse_with_bound(
+                ctx.kernel,
+                ctx.analysis,
+                ctx.device,
+                &self.cfg,
+                ctx.evaluator,
+                bm,
+            )
+            .into(),
+            None => {
+                run_nlp_dse(ctx.kernel, ctx.analysis, ctx.device, &self.cfg, ctx.evaluator)
+                    .into()
+            }
+        }
     }
 }
 

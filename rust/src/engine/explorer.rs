@@ -16,7 +16,8 @@ use crate::dse::DseConfig;
 use crate::engine::RandomConfig;
 use crate::hls::Device;
 use crate::ir::{DType, Kernel};
-use crate::nlp::{BatchEvaluator, RustFeatureEvaluator};
+use crate::model::sym::{BoundModel, PartialDesign};
+use crate::nlp::{BatchEvaluator, RustFeatureEvaluator, SymbolicEvaluator};
 use crate::poly::Analysis;
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
 use anyhow::{anyhow, bail, Result};
@@ -29,6 +30,9 @@ pub enum Evaluator {
     Auto,
     /// Always the in-process Rust reference evaluator.
     Rust,
+    /// The compiled symbolic bound model (`model::sym`): exact model
+    /// scores from the flattened allocation-free tape.
+    Sym,
     /// Require the AOT XLA artifact; `run` fails if it cannot load.
     Xla,
     /// Caller-supplied evaluator (e.g. an instrumented one).
@@ -41,6 +45,9 @@ impl Evaluator {
     }
     pub fn rust() -> Evaluator {
         Evaluator::Rust
+    }
+    pub fn sym() -> Evaluator {
+        Evaluator::Sym
     }
     pub fn xla() -> Evaluator {
         Evaluator::Xla
@@ -55,6 +62,7 @@ impl std::fmt::Debug for Evaluator {
         f.write_str(match self {
             Evaluator::Auto => "Auto",
             Evaluator::Rust => "Rust",
+            Evaluator::Sym => "Sym",
             Evaluator::Xla => "Xla",
             Evaluator::Custom(_) => "Custom(..)",
         })
@@ -75,6 +83,8 @@ pub struct Explorer {
     kernel: Kernel,
     analysis: Analysis,
     device: Device,
+    /// Lazily built on first use (black-box engines never pay for it).
+    bound: std::cell::OnceCell<BoundModel>,
     evaluator: Evaluator,
     tuning: EngineTuning,
     registry: Registry,
@@ -105,6 +115,7 @@ impl Explorer {
             kernel,
             analysis,
             device: Device::u200(),
+            bound: std::cell::OnceCell::new(),
             evaluator: Evaluator::Auto,
             tuning: EngineTuning::default(),
             registry: Registry::builtin(),
@@ -112,9 +123,12 @@ impl Explorer {
         }
     }
 
-    /// Target device (default: Alveo U200 @ 250 MHz).
+    /// Target device (default: Alveo U200 @ 250 MHz). Invalidates any
+    /// lazily built bound model (op costs and budgets are
+    /// device-dependent).
     pub fn device(mut self, dev: Device) -> Explorer {
         self.device = dev;
+        self.bound = std::cell::OnceCell::new();
         self
     }
 
@@ -189,6 +203,20 @@ impl Explorer {
         &self.device
     }
 
+    /// The session's symbolic bound model (one per kernel × device,
+    /// built on first use).
+    pub fn bound_model(&self) -> &BoundModel {
+        self.bound
+            .get_or_init(|| BoundModel::build(&self.kernel, &self.analysis, &self.device))
+    }
+
+    /// Achievable-latency lower bound of a (possibly partial) pragma
+    /// configuration — no completion of `partial` can beat this many
+    /// cycles on this session's kernel/device.
+    pub fn lower_bound(&self, partial: &PartialDesign) -> f64 {
+        self.bound_model().lower_bound(partial)
+    }
+
     pub fn tuning_ref(&self) -> &EngineTuning {
         &self.tuning
     }
@@ -220,9 +248,11 @@ impl Explorer {
 
     fn run_with(&self, engine: &dyn Engine) -> Result<Exploration> {
         let rust_eval = RustFeatureEvaluator;
+        let sym_eval = SymbolicEvaluator;
         let loaded: XlaEvaluator;
         let evaluator: &dyn BatchEvaluator = match &self.evaluator {
             Evaluator::Rust => &rust_eval,
+            Evaluator::Sym => &sym_eval,
             Evaluator::Auto => match XlaEvaluator::load(&default_artifact_dir()) {
                 Ok(e) => {
                     loaded = e;
@@ -236,11 +266,15 @@ impl Explorer {
             }
             Evaluator::Custom(rc) => rc.as_ref(),
         };
+        // model-driven engines get the (lazily built) bound model;
+        // black-box engines never trigger the build — same policy as the
+        // coordinator's job scheduler
         let ctx = ExploreCtx {
             kernel: &self.kernel,
             analysis: &self.analysis,
             device: &self.device,
             evaluator,
+            bound: engine.uses_evaluator().then(|| self.bound_model()),
         };
         Ok(engine.explore(&ctx))
     }
@@ -266,6 +300,40 @@ mod tests {
         let ex = Explorer::kernel("atax", Size::Small)
             .unwrap()
             .evaluator(Evaluator::rust())
+            .run()
+            .unwrap();
+        assert_eq!(ex.engine, "nlpdse");
+        assert!(ex.best.is_some());
+        assert!(ex.best_gflops > 0.0);
+    }
+
+    #[test]
+    fn facade_exposes_partial_config_bounds() {
+        let ex = Explorer::kernel("gemm", Size::Small).unwrap();
+        let k = ex.kernel_ref();
+        let free = PartialDesign::free(k.n_loops());
+        let lb_free = ex.lower_bound(&free);
+        assert!(lb_free.is_finite() && lb_free > 0.0);
+        // pinning the whole design to "no pragmas" can only raise the bound
+        let empty = PartialDesign::from_design(&crate::pragma::Design::empty(k));
+        let lb_empty = ex.lower_bound(&empty);
+        assert!(lb_empty >= lb_free, "{lb_empty} < {lb_free}");
+        // ... and for a complete design the bound is the exact model value
+        let exact = crate::model::evaluate(
+            k,
+            ex.analysis(),
+            ex.device_ref(),
+            &crate::pragma::Design::empty(k),
+        );
+        let rel = (lb_empty - exact.total_cycles).abs() / exact.total_cycles;
+        assert!(rel < 1e-9, "{lb_empty} vs {}", exact.total_cycles);
+    }
+
+    #[test]
+    fn sym_evaluator_runs_default_engine() {
+        let ex = Explorer::kernel("atax", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::sym())
             .run()
             .unwrap();
         assert_eq!(ex.engine, "nlpdse");

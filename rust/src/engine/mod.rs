@@ -57,6 +57,7 @@ use crate::baselines::{AutoDseConfig, HarpConfig};
 use crate::dse::DseConfig;
 use crate::hls::Device;
 use crate::ir::Kernel;
+use crate::model::sym::BoundModel;
 use crate::nlp::BatchEvaluator;
 use crate::poly::Analysis;
 
@@ -70,6 +71,13 @@ pub struct ExploreCtx<'a> {
     /// artifact) behind the `dyn BatchEvaluator` boundary. Engines that
     /// treat the toolchain as a black box (AutoDSE, HARP) ignore it.
     pub evaluator: &'a dyn BatchEvaluator,
+    /// The kernel's symbolic bound model (built once per session/job):
+    /// `bound.lower_bound(&PartialDesign)` lets any engine prune whole
+    /// subspaces by achievable latency before enumerating them.
+    /// Schedulers may pass `None` for black-box engines (AutoDSE, HARP,
+    /// random) to skip the build; model-driven engines fall back to
+    /// building their own when absent.
+    pub bound: Option<&'a BoundModel>,
 }
 
 /// A design-space exploration strategy. Object-safe: the coordinator

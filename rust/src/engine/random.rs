@@ -217,6 +217,7 @@ mod tests {
             analysis: &a,
             device: &dev,
             evaluator: &RustFeatureEvaluator,
+            bound: None,
         };
         RandomSearchEngine::new(RandomConfig {
             samples: 1_000,

@@ -47,12 +47,20 @@
 //!   `tile`, `cache`) as per-loop property vectors, plus design-space
 //!   enumeration and counting.
 //! * [`model`] — the analytical latency + resource **lower bound** of
-//!   Section 4 / Appendix B, and the dense feature encoding consumed by the
-//!   AOT-compiled XLA evaluator.
-//! * [`nlp`] — the non-linear program of Section 5 (variables, constraints
-//!   Eqs 1–15, objective) and a specialized global solver standing in for
-//!   BARON (branch-and-bound over the divisor lattice with relaxation
-//!   bounds and timeouts).
+//!   Section 4 / Appendix B. Its front door is the symbolic bound-model IR
+//!   [`model::sym`]: one [`model::sym::BoundModel`] per kernel carries the
+//!   latency objective and the Eqs 1–15 constraints as first-class values
+//!   and serves all three consumers — the compiled allocation-free batch
+//!   evaluator on the DSE hot path, the NLP lowering, and
+//!   partial-configuration interval bounds for subspace pruning. The
+//!   executable reference recursion ([`model::evaluate`]) and the dense
+//!   feature encoding for the AOT XLA evaluator remain alongside.
+//! * [`nlp`] — the non-linear program of Section 5 as a thin view over the
+//!   shared bound model (shared `Constraint` objects produce the
+//!   `Violation`s; the objective is the compiled symbolic tape) and a
+//!   specialized global solver standing in for BARON (branch-and-bound
+//!   over the divisor lattice with symbolic interval relaxation bounds
+//!   and timeouts).
 //! * [`merlin`] — simulated AMD/Xilinx Merlin source-to-source compiler:
 //!   decides whether each requested pragma is actually applied and realizes
 //!   code transformations + memory transfers.
@@ -95,5 +103,5 @@ pub mod cli;
 
 pub use engine::{Engine, Evaluator, Exploration, ExploreCtx, Explorer, Registry};
 pub use ir::{ArrayId, Kernel, LoopId, StmtId};
-pub use model::ModelResult;
+pub use model::{BoundModel, ModelResult, PartialDesign};
 pub use pragma::Design;

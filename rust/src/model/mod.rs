@@ -10,6 +10,14 @@
 //! * [`features`] — the dense batched encoding of the same computation for
 //!   the AOT-compiled XLA evaluator (see `python/compile/kernels/`), plus
 //!   the pure-Rust reference evaluation of that encoding.
+//! * [`sym`] — **the model front door**: the symbolic bound-model IR. One
+//!   [`sym::BoundModel`] per kernel carries the latency objective and the
+//!   Eqs 1–15 constraints as first-class values, and serves all three
+//!   consumers — the compiled allocation-free batch evaluator
+//!   ([`sym::CompiledModel`]), the NLP lowering (`nlp::NlpProblem` is a
+//!   thin view over it), and partial-configuration interval bounds
+//!   ([`sym::BoundModel::lower_bound`]). [`eval`] remains the executable
+//!   reference the IR is property-tested against.
 //!
 //! The invariant maintained throughout (and property-tested in
 //! `rust/tests/property_invariants.rs`): **for any legal configuration the
@@ -19,6 +27,8 @@
 
 pub mod eval;
 pub mod features;
+pub mod sym;
 
 pub use eval::{evaluate, nest_latencies, top_scope_sum_combine, ModelResult, NestBreakdown};
 pub use features::{encode_design, eval_features, Abi, DesignFeatures};
+pub use sym::{BoundModel, CompiledModel, CompiledResult, PartialDesign};

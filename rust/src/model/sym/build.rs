@@ -1,0 +1,763 @@
+//! Lowering of the Section 4 recursion into the symbolic IR: one
+//! [`BoundModel`] per kernel, built from `ir` + `poly::Analysis`.
+//!
+//! The builder is a *transliteration* of `model::eval`: every concrete
+//! arithmetic step of the recursion becomes one pool node, in the same
+//! order and associativity, with the pragma reads (`d.get(l).uf`,
+//! `.tile`, `.pipeline`) replaced by the unknowns `UF_l` / `tile_l` /
+//! `pip_l` and the pragma-dependent branches by `select` nodes. A design
+//! plugged into the compiled tape therefore reproduces `model::evaluate`
+//! exactly (bit-for-bit on the resource side, and to the last ulp on the
+//! latency side — property-tested in `tests/property_model_sym.rs`).
+//!
+//! Structure-dependent decisions (dependence components, reduction /
+//! serializing classification, innermost-ness) do **not** depend on the
+//! pragmas, so they are resolved at build time, exactly as `eval` resolves
+//! them per call.
+
+use super::compile::CompiledModel;
+use super::constraint::Constraint;
+use super::expr::{ExprId, Interval, Pool, VarBox};
+use super::partial::PartialDesign;
+use crate::hls::Device;
+use crate::ir::{Kernel, LoopId, Node, StmtId};
+use crate::poly::Analysis;
+
+/// Per-loop unknown bounds (the Eq 1/2/8 hull used for interval
+/// relaxation). `uf_hi = 1` encodes "not unrollable" (non-constant trip
+/// count, or a serializing non-reduction carried dependence).
+#[derive(Clone, Copy, Debug)]
+pub struct VarDomain {
+    pub uf_hi: u64,
+    pub tile_hi: u64,
+    /// Whether this loop indexes any array dimension — if so, `UF_l` is
+    /// additionally capped by the partitioning rung during subspace
+    /// relaxation (a UF above the cap forces some array's partitioning
+    /// above the cap).
+    pub indexes_array: bool,
+}
+
+/// The symbolic lower-bound model of one kernel: latency objective,
+/// resource expressions, and the Eqs 1–15 constraint set, shared by the
+/// three consumers (compiled exact scoring, NLP lowering, partial-config
+/// interval bounds).
+#[derive(Clone, Debug)]
+pub struct BoundModel {
+    pub kernel: String,
+    pub n_loops: usize,
+    pub pool: Pool,
+    /// Computation latency (Theorem 4.15), including the work floor.
+    pub comp: ExprId,
+    /// Communication latency constant (Theorem 4.14).
+    pub comm: ExprId,
+    /// The objective: `comp + comm` (Theorem 4.16).
+    pub total: ExprId,
+    /// Optimistic DSP usage (Theorem 4.12 / Eq 11).
+    pub dsp: ExprId,
+    /// Cached on-chip bytes (Eq 12).
+    pub onchip: ExprId,
+    /// Max per-array partitioning (Eq 13).
+    pub max_part: ExprId,
+    /// Per-array partitioning expressions, in `kernel.arrays` order.
+    pub partitions: Vec<(String, ExprId)>,
+    /// Eqs 6/8/10–13 as first-class values, in the order the legacy
+    /// `NlpProblem::check` reported them.
+    pub constraints: Vec<Constraint>,
+    pub domains: Vec<VarDomain>,
+    pub dsp_total: u64,
+    pub onchip_bytes: u64,
+    pub max_array_partition: u64,
+}
+
+struct B<'a> {
+    k: &'a Kernel,
+    a: &'a Analysis,
+    dev: &'a Device,
+    p: Pool,
+}
+
+/// Path-compressed union-find over sibling indices (the `C` operator's
+/// dependence components) — identical to the one `eval` runs per call.
+fn uf_find(c: &mut [usize], i: usize) -> usize {
+    if c[i] != i {
+        let r = uf_find(c, c[i]);
+        c[i] = r;
+    }
+    c[i]
+}
+
+/// Canonical component root per index, unioning `(i, j)` pairs in the
+/// exact `i < j` order `eval`'s inline copies use (the roots — and hence
+/// the BTreeMap grouping/iteration order downstream — must match the
+/// reference recursion for bit-parity).
+fn dep_components(n: usize, mut dep: impl FnMut(usize, usize) -> bool) -> Vec<usize> {
+    let mut comp: Vec<usize> = (0..n).collect();
+    for i in 0..n {
+        for j in i + 1..n {
+            if dep(i, j) {
+                let (ri, rj) = (uf_find(&mut comp, i), uf_find(&mut comp, j));
+                if ri != rj {
+                    comp[ri] = rj;
+                }
+            }
+        }
+    }
+    (0..n).map(|i| uf_find(&mut comp, i)).collect()
+}
+
+fn collect_stmts(n: &Node) -> Vec<StmtId> {
+    match n {
+        Node::Stmt(s) => vec![s.id],
+        Node::Loop(l) => l.body.iter().flat_map(collect_stmts).collect(),
+    }
+}
+
+impl BoundModel {
+    /// Build the model once for `(kernel, analysis, device)`.
+    pub fn build(k: &Kernel, a: &Analysis, dev: &Device) -> BoundModel {
+        let mut b = B {
+            k,
+            a,
+            dev,
+            p: Pool::new(),
+        };
+
+        // --- computation latency -----------------------------------------
+        let roots: Vec<&Node> = k.roots.iter().collect();
+        let lat_roots = b.compose(&roots);
+        let work_floor = b.work_floor();
+        let comp = {
+            let wf = b.p.cf(work_floor);
+            b.p.max(lat_roots, wf)
+        };
+
+        // --- communication latency (constant) ----------------------------
+        let mut in_max = 0f64;
+        let mut out_max = 0f64;
+        for arr in &k.arrays {
+            let cyc = dev.transfer_cycles(arr.footprint_bytes(k.dtype));
+            if arr.dir.is_live_in() {
+                in_max = in_max.max(cyc);
+            }
+            if arr.dir.is_live_out() {
+                out_max = out_max.max(cyc);
+            }
+        }
+        let comm = b.p.cf(in_max + out_max);
+        let total = b.p.add(comp, comm);
+
+        // --- resources ----------------------------------------------------
+        let dsp = b.dsp_usage();
+        let onchip = b.onchip_usage();
+        let partitions: Vec<(String, ExprId)> = k
+            .arrays
+            .iter()
+            .map(|arr| (arr.name.clone(), b.partitioning_expr(arr.id)))
+            .collect();
+        let max_part = {
+            let mut m = b.p.cf(1.0);
+            for &(_, e) in &partitions {
+                m = b.p.max(m, e);
+            }
+            m
+        };
+
+        // --- domains (Eq 1/2/8 hull) ---------------------------------------
+        let domains: Vec<VarDomain> = (0..k.n_loops())
+            .map(|i| {
+                let tc = &a.tcs[i];
+                let info = &a.deps.per_loop[i];
+                let unrollable = tc.is_constant() && tc.max > 0;
+                let dist_cap = match info.min_distance {
+                    Some(d) if d > 1 => d,
+                    Some(_) if info.serializing && !info.reduction => 1,
+                    _ => u64::MAX,
+                };
+                VarDomain {
+                    uf_hi: if unrollable { tc.max.min(dist_cap) } else { 1 },
+                    tile_hi: if unrollable { tc.max } else { 1 },
+                    indexes_array: loop_indexes_array(k, LoopId(i as u32)),
+                }
+            })
+            .collect();
+
+        // --- constraint set, in legacy `check` report order ----------------
+        let mut constraints = Vec::new();
+        for i in 0..k.n_loops() {
+            let tc = &a.tcs[i];
+            constraints.push(Constraint::Divides {
+                l: i as u32,
+                tc_max: tc.max,
+                tc_constant: tc.is_constant(),
+            });
+            if let Some(d) = a.deps.per_loop[i].min_distance {
+                if d > 1 {
+                    constraints.push(Constraint::Distance {
+                        l: i as u32,
+                        dist: d,
+                    });
+                }
+            }
+        }
+        for (idx, (name, expr)) in partitions.iter().enumerate() {
+            constraints.push(Constraint::Partitioning {
+                array: idx,
+                name: name.clone(),
+                expr: *expr,
+            });
+        }
+        constraints.push(Constraint::Dsp {
+            expr: dsp,
+            budget: dev.dsp_total,
+        });
+        constraints.push(Constraint::OnChip {
+            expr: onchip,
+            budget: dev.onchip_bytes,
+        });
+
+        b.p.seal(); // construction done; consumers only walk the tape
+        BoundModel {
+            kernel: k.name.clone(),
+            n_loops: k.n_loops(),
+            pool: b.p,
+            comp,
+            comm,
+            total,
+            dsp,
+            onchip,
+            max_part,
+            partitions,
+            constraints,
+            domains,
+            dsp_total: dev.dsp_total,
+            onchip_bytes: dev.onchip_bytes,
+            max_array_partition: dev.max_array_partition,
+        }
+    }
+
+    /// Flatten the model into the allocation-free batch evaluator.
+    pub fn compile(&self) -> CompiledModel {
+        CompiledModel::from_model(self)
+    }
+
+    /// The per-loop interval boxes a partial configuration induces:
+    /// assigned pragmas collapse to points, free ones take their Eq 1/2/8
+    /// hull (with `UF` additionally capped by `partial.uf_cap` on loops
+    /// that index an array).
+    pub fn boxes(&self, partial: &PartialDesign) -> Vec<VarBox> {
+        assert_eq!(partial.n_loops(), self.n_loops, "partial/kernel mismatch");
+        (0..self.n_loops)
+            .map(|i| {
+                let dom = &self.domains[i];
+                let uf = match partial.uf[i] {
+                    Some(v) => Interval::point(v as f64),
+                    None => {
+                        let cap = if dom.indexes_array {
+                            partial.uf_cap
+                        } else {
+                            u64::MAX
+                        };
+                        Interval::new(1.0, dom.uf_hi.min(cap).max(1) as f64)
+                    }
+                };
+                let tile = match partial.tile[i] {
+                    Some(v) => Interval::point(v as f64),
+                    None => Interval::new(1.0, dom.tile_hi.max(1) as f64),
+                };
+                let pip = match partial.pipeline[i] {
+                    Some(b) => Interval::point(b as u8 as f64),
+                    None => Interval::new(0.0, 1.0),
+                };
+                VarBox { uf, tile, pip }
+            })
+            .collect()
+    }
+
+    /// Interval of the latency objective over every completion of
+    /// `partial` (inclusion-sound: the exact model value of any such
+    /// completion lies inside).
+    pub fn objective_interval(&self, partial: &PartialDesign) -> Interval {
+        let boxes = self.boxes(partial);
+        let mut out = Vec::new();
+        super::expr::eval_interval(self.pool.nodes(), &boxes, &mut out);
+        out[self.total.0 as usize]
+    }
+
+    /// Achievable-latency lower bound of a (possibly partial) pragma
+    /// configuration — the paper's DSE-pruning primitive: no completion of
+    /// `partial` can beat this many cycles.
+    pub fn lower_bound(&self, partial: &PartialDesign) -> f64 {
+        self.objective_interval(partial).lo
+    }
+}
+
+fn loop_indexes_array(k: &Kernel, l: LoopId) -> bool {
+    for s in k.stmts() {
+        for (acc, _) in k.stmt_accesses(s.id) {
+            for idx in &acc.indices {
+                if idx.loops().any(|il| il == l) {
+                    return true;
+                }
+            }
+        }
+    }
+    false
+}
+
+impl<'a> B<'a> {
+    /// Theorem 4.4 work floor — design-independent, computed exactly as
+    /// `eval` computes it.
+    fn work_floor(&self) -> f64 {
+        let mut work_floor = 0f64;
+        for op in crate::ir::OpKind::ALL {
+            let c = self.dev.op_costs(self.k.dtype, op);
+            if c.dsp == 0 {
+                continue;
+            }
+            let total_ops: f64 = self
+                .k
+                .stmts()
+                .map(|s| s.op_count(op) as f64 * self.a.stmt_iters[s.id.0 as usize])
+                .sum();
+            work_floor = work_floor
+                .max(total_ops * c.latency as f64 * c.dsp as f64 / self.dev.dsp_total as f64);
+        }
+        work_floor
+    }
+
+    /// The `C` operator: dependent sibling components sum, independent
+    /// components overlap (max).
+    fn compose(&mut self, nodes: &[&Node]) -> ExprId {
+        if nodes.is_empty() {
+            return self.p.cf(0.0);
+        }
+        let lats: Vec<ExprId> = nodes.iter().map(|n| self.lat_node(n)).collect();
+        let stmt_sets: Vec<Vec<StmtId>> = nodes.iter().map(|n| collect_stmts(n)).collect();
+        let n = nodes.len();
+        let roots = dep_components(n, |i, j| {
+            stmt_sets[i].iter().any(|&s1| {
+                stmt_sets[j]
+                    .iter()
+                    .any(|&s2| self.a.deps.stmts_dependent(s1, s2))
+            })
+        });
+        self.sum_per_component_then_max(&roots, &lats)
+    }
+
+    /// Shared tail of the `C`/`IL` operators: per-component `+` fold in
+    /// index order (seeded at 0.0), then a `max` fold over components in
+    /// root-key order — `eval`'s BTreeMap accumulation, symbolically.
+    fn sum_per_component_then_max(&mut self, roots: &[usize], lats: &[ExprId]) -> ExprId {
+        let mut sums: std::collections::BTreeMap<usize, ExprId> = Default::default();
+        for (i, &r) in roots.iter().enumerate() {
+            let zero = self.p.cf(0.0);
+            let e = *sums.entry(r).or_insert(zero);
+            let e2 = self.p.add(e, lats[i]);
+            sums.insert(r, e2);
+        }
+        let mut m = self.p.cf(0.0);
+        for (_, e) in sums {
+            m = self.p.max(m, e);
+        }
+        m
+    }
+
+    /// Latency of one node above any pipeline: the pragma-dependent branch
+    /// of `eval::lat_node` becomes a `select` on `pip_l`.
+    fn lat_node(&mut self, n: &Node) -> ExprId {
+        match n {
+            Node::Stmt(s) => {
+                let c = self.stmt_chain_latency(s.id);
+                self.p.cf(c)
+            }
+            Node::Loop(l) => {
+                let info = self.a.deps.loop_info(l.id).clone();
+                let tc = self.a.tc(l.id).avg.max(1.0);
+                let innermost = self.k.loop_meta(l.id).innermost;
+                let body: Vec<&Node> = l.body.iter().collect();
+                let pipe = self.pipe_lat(l.id, &body);
+                if innermost {
+                    return pipe;
+                }
+                let other = if info.reduction || info.serializing {
+                    let inner = self.compose(&body);
+                    let tcc = self.p.cf(tc);
+                    self.p.mul(tcc, inner)
+                } else {
+                    let inner = self.compose(&body);
+                    let uf = self.p.uf(l.id.0);
+                    let uf1 = self.p.max_c(uf, 1.0);
+                    let tcc = self.p.cf(tc);
+                    let per = self.p.div(tcc, uf1);
+                    let per1 = self.p.max_c(per, 1.0);
+                    self.p.mul(per1, inner)
+                };
+                let pip = self.p.pip(l.id.0);
+                self.p.select(pip, pipe, other)
+            }
+        }
+    }
+
+    /// `IL + II × (TC/UF − 1)` (Theorems 4.8/4.9), with the serializing
+    /// RecMII adjustment `II ≥ ceil(IL / d)`.
+    fn pipe_lat(&mut self, lp: LoopId, body: &[&Node]) -> ExprId {
+        let tc = self.a.tc(lp).avg.max(1.0);
+        let uf = {
+            let u = self.p.uf(lp.0);
+            let u1 = self.p.max_c(u, 1.0);
+            self.p.min_c(u1, tc)
+        };
+        let il = self.unrolled_body_latency(body);
+        let ii0 = self.pipeline_ii(lp);
+        let info = self.a.deps.loop_info(lp).clone();
+        let ii = if info.serializing {
+            let d = info.min_distance.unwrap_or(1).max(1) as f64;
+            let dc = self.p.cf(d);
+            let q = self.p.div(il, dc);
+            let qc = self.p.ceil(q);
+            let i0 = self.p.cf(ii0);
+            self.p.max(i0, qc)
+        } else {
+            self.p.cf(ii0)
+        };
+        let tcc = self.p.cf(tc);
+        let ratio = self.p.div(tcc, uf);
+        let one = self.p.cf(1.0);
+        let ramp0 = self.p.sub(ratio, one);
+        let ramp = self.p.max_c(ramp0, 0.0);
+        let rampii = self.p.mul(ii, ramp);
+        self.p.add(il, rampii)
+    }
+
+    /// Structural (design-independent) minimal II of a pipelined loop —
+    /// mirrors `eval::pipeline_ii`.
+    fn pipeline_ii(&self, lp: LoopId) -> f64 {
+        let info = self.a.deps.loop_info(lp);
+        let mut ii = 1.0f64;
+        if info.reduction {
+            if let Some(op) = info.reduction_op {
+                ii = ii.max(self.dev.op_costs(self.k.dtype, op).latency as f64);
+            }
+        }
+        if info.serializing {
+            let d = info.min_distance.unwrap_or(1).max(1) as f64;
+            let max_chain = self
+                .k
+                .loop_meta(lp)
+                .stmts
+                .iter()
+                .map(|&s| self.stmt_chain_latency(s))
+                .fold(1.0f64, f64::max);
+            ii = ii.max((max_chain / d).ceil());
+        }
+        ii
+    }
+
+    /// The `SL`/`IL` term: statements under the pipeline with their
+    /// tree-reduction and serial factors (now expressions in the inner
+    /// UFs), composed by dependence.
+    fn unrolled_body_latency(&mut self, body: &[&Node]) -> ExprId {
+        let mut items: Vec<(StmtId, ExprId, ExprId)> = Vec::new();
+        let one = self.p.cf(1.0);
+        // (node, tree-factor expr, serial-factor expr) worklist, mirroring
+        // eval's recursive walk order (depth-first, body order)
+        fn walk(
+            b: &mut B<'_>,
+            n: &Node,
+            tf: ExprId,
+            sf: ExprId,
+            items: &mut Vec<(StmtId, ExprId, ExprId)>,
+        ) {
+            match n {
+                Node::Stmt(s) => items.push((s.id, tf, sf)),
+                Node::Loop(l) => {
+                    let info = b.a.deps.loop_info(l.id).clone();
+                    let tc = b.a.tc(l.id).avg.max(1.0);
+                    let ufc = {
+                        let u = b.p.uf(l.id.0);
+                        let u1 = b.p.max_c(u, 1.0);
+                        b.p.min_c(u1, tc)
+                    };
+                    let (tfc, sfc) = if info.reduction {
+                        // Theorem 4.7: (TC/UF) tree passes of depth log2(UF)
+                        let tcc = b.p.cf(tc);
+                        let ratio = b.p.div(tcc, ufc);
+                        let depth = b.p.treelog(ufc);
+                        (b.p.mul(ratio, depth), b.p.cf(1.0))
+                    } else if info.serializing {
+                        (b.p.cf(1.0), b.p.cf(tc))
+                    } else {
+                        let tcc = b.p.cf(tc);
+                        let ratio = b.p.div(tcc, ufc);
+                        (b.p.cf(1.0), b.p.max_c(ratio, 1.0))
+                    };
+                    let tf2 = b.p.mul(tf, tfc);
+                    let sf2 = b.p.mul(sf, sfc);
+                    for c in &l.body {
+                        walk(b, c, tf2, sf2, items);
+                    }
+                }
+            }
+        }
+        for n in body {
+            walk(self, n, one, one, &mut items);
+        }
+        if items.is_empty() {
+            return self.p.cf(1.0);
+        }
+
+        let lats: Vec<ExprId> = items
+            .iter()
+            .map(|&(sid, tf, sf)| {
+                let ul = self.stmt_unrolled_latency(sid, tf);
+                self.p.mul(ul, sf)
+            })
+            .collect();
+
+        let n = items.len();
+        let roots = dep_components(n, |i, j| {
+            self.a.deps.stmts_dependent(items[i].0, items[j].0)
+        });
+        let il = self.sum_per_component_then_max(&roots, &lats);
+        self.p.max_c(il, 1.0)
+    }
+
+    /// One statement inside the unrolled pipeline body: the reduction op
+    /// of the chain is charged `tf` times when `tf > 1` (tree levels ×
+    /// sequential passes); chains with no reduction op scale wholesale.
+    fn stmt_unrolled_latency(&mut self, sid: StmtId, tf: ExprId) -> ExprId {
+        let s = self.k.stmt(sid);
+        if s.chain.is_empty() {
+            return self.p.cf(1.0);
+        }
+        let red_op = self.a.deps.reductions_of(sid).map(|(_, op)| op).next();
+        let costs: Vec<f64> = s
+            .chain
+            .iter()
+            .map(|&op| self.dev.op_costs(self.k.dtype, op).latency as f64)
+            .collect();
+        let red_pos = red_op.and_then(|ro| s.chain.iter().position(|&op| op == ro));
+
+        // the tf ≤ 1 value: the plain chain sum, folded exactly as eval's
+        // accumulation loop folds it
+        let mut base = 0f64;
+        for &c in &costs {
+            base += c;
+        }
+        let base_e = self.p.cf(base);
+
+        let one = self.p.cf(1.0);
+        let scaled = self.p.gt(tf, one);
+        let lat = match red_pos {
+            Some(pos) => {
+                // charge the first reduction-op occurrence `tf` times,
+                // keeping eval's left-to-right accumulation order
+                let mut acc = self.p.cf(0.0);
+                for (i, &c) in costs.iter().enumerate() {
+                    let cc = self.p.cf(c);
+                    let term = if i == pos { self.p.mul(cc, tf) } else { cc };
+                    acc = self.p.add(acc, term);
+                }
+                self.p.select(scaled, acc, base_e)
+            }
+            None => {
+                let all = self.p.mul(base_e, tf);
+                self.p.select(scaled, all, base_e)
+            }
+        };
+        self.p.max_c(lat, 1.0)
+    }
+
+    /// Op-chain latency constant of one statement iteration (≥ 1 cycle).
+    fn stmt_chain_latency(&self, sid: StmtId) -> f64 {
+        let s = self.k.stmt(sid);
+        if s.chain.is_empty() {
+            return 1.0;
+        }
+        s.chain
+            .iter()
+            .map(|&op| self.dev.op_costs(self.k.dtype, op).latency as f64)
+            .sum::<f64>()
+            .max(1.0)
+    }
+
+    /// Theorem 4.12 / Eq 11: per nest, independent components need
+    /// concurrent units (sum) while sequential ones share (max);
+    /// pipeline sharing divides by the II of the governing pipeline —
+    /// a `select` chain over the ancestry's `pip` unknowns.
+    fn dsp_usage(&mut self) -> ExprId {
+        let k = self.k;
+        let mut worst = self.p.cf(0.0);
+        for root in k.nest_roots() {
+            let stmts = k.loop_meta(root).stmts.clone();
+            if stmts.is_empty() {
+                continue;
+            }
+            let n = stmts.len();
+            let roots =
+                dep_components(n, |i, j| self.a.deps.stmts_dependent(stmts[i], stmts[j]));
+            let mut per_comp: std::collections::BTreeMap<usize, ExprId> = Default::default();
+            for (idx, &sid) in stmts.iter().enumerate() {
+                let nest = k.stmt_meta(sid).nest.clone();
+                let mut mcu = self.p.cf(1.0);
+                for &l in &nest {
+                    let tc = self.a.tc(l).avg.max(1.0);
+                    let u = self.p.uf(l.0);
+                    let u1 = self.p.max_c(u, 1.0);
+                    let uc = self.p.min_c(u1, tc);
+                    mcu = self.p.mul(mcu, uc);
+                }
+                let dsp_one: f64 = k
+                    .stmt(sid)
+                    .ops
+                    .iter()
+                    .map(|&(op, c)| c as f64 * self.dev.op_costs(k.dtype, op).dsp as f64)
+                    .sum();
+                // nearest enclosing pipelined loop's (structural) II, as a
+                // select chain from the innermost loop outward
+                let innermost = *nest.last().unwrap();
+                let ii_sel = self.pipeline_above_ii(innermost);
+                let d1 = self.p.cf(dsp_one);
+                let num = self.p.mul(d1, mcu);
+                let ii1 = self.p.max_c(ii_sel, 1.0);
+                let need = self.p.div(num, ii1);
+                let r = roots[idx];
+                let zero = self.p.cf(0.0);
+                let e = *per_comp.entry(r).or_insert(zero);
+                let e2 = self.p.max(e, need);
+                per_comp.insert(r, e2);
+            }
+            let mut nest_dsp = self.p.cf(0.0);
+            for (_, e) in per_comp {
+                nest_dsp = self.p.add(nest_dsp, e);
+            }
+            worst = self.p.max(worst, nest_dsp);
+        }
+        worst
+    }
+
+    /// `pipeline_above(l).map(pipeline_ii).unwrap_or(1.0)` as an
+    /// expression: walk the ancestry, selecting the first loop whose
+    /// `pip` unknown is set.
+    fn pipeline_above_ii(&mut self, l: LoopId) -> ExprId {
+        let path = self.k.loop_path(l); // root .. l
+        let mut sel = self.p.cf(1.0);
+        // fold root-first so the deepest loop's select ends up outermost:
+        // the *innermost* pipelined ancestor must win, matching
+        // `Design::pipeline_above`'s inside-out walk
+        for &anc in &path {
+            let ii = self.pipeline_ii(anc);
+            let iic = self.p.cf(ii);
+            let pip = self.p.pip(anc.0);
+            sel = self.p.select(pip, iic, sel);
+        }
+        sel
+    }
+
+    /// Eq 12: cached on-chip bytes, with `tile` shrinking the cached
+    /// extent of the dimensions its loop indexes.
+    fn onchip_usage(&mut self) -> ExprId {
+        let k = self.k;
+        let mut total = self.p.cf(0.0);
+        for arr in &k.arrays {
+            let mut per_dim: Vec<ExprId> =
+                arr.dims.iter().map(|&d| self.p.cf(d as f64)).collect();
+            for s in k.stmts() {
+                for (acc, _) in k.stmt_accesses(s.id) {
+                    if acc.array != arr.id {
+                        continue;
+                    }
+                    for (d, idx) in acc.indices.iter().enumerate() {
+                        for l in idx.loops() {
+                            let tc = self.a.tc(l).max.max(1);
+                            let tile = self.p.tile(l.0);
+                            let one = self.p.cf(1.0);
+                            let tcc = self.p.cf(tc as f64);
+                            let g = self.p.gt(tile, one);
+                            let lt = self.p.lt(tile, tcc);
+                            let cond = self.p.and(g, lt);
+                            let dim = self.p.cf(arr.dims[d] as f64);
+                            let scale = self.p.div(tile, tcc);
+                            let cand = self.p.mul(dim, scale);
+                            let shrunk = self.p.min(per_dim[d], cand);
+                            per_dim[d] = self.p.select(cond, shrunk, per_dim[d]);
+                        }
+                    }
+                }
+            }
+            let mut elems = self.p.cf(1.0);
+            for &e in &per_dim {
+                elems = self.p.mul(elems, e);
+            }
+            let bpe = self.p.cf(k.dtype.bits() as f64 / 8.0);
+            let bytes = self.p.mul(elems, bpe);
+            let capped = self.p.min_c(bytes, self.dev.working_tile_bytes() as f64);
+            total = self.p.add(total, capped);
+        }
+        total
+    }
+
+    /// Eq 13: per-array cross-dimension partitioning — the product over
+    /// dimensions of the max UF of loops indexing each dimension.
+    fn partitioning_expr(&mut self, a: crate::ir::ArrayId) -> ExprId {
+        let k = self.k;
+        let mut per_dim: Vec<ExprId> = vec![self.p.cf(1.0); k.array(a).dims.len()];
+        for s in k.stmts() {
+            for (acc, _) in k.stmt_accesses(s.id) {
+                if acc.array != a {
+                    continue;
+                }
+                for (d, idx) in acc.indices.iter().enumerate() {
+                    for l in idx.loops() {
+                        let u = self.p.uf(l.0);
+                        per_dim[d] = self.p.max(per_dim[d], u);
+                    }
+                }
+            }
+        }
+        let mut prod = self.p.cf(1.0);
+        for &e in &per_dim {
+            prod = self.p.mul(prod, e);
+        }
+        prod
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::ir::DType;
+
+    #[test]
+    fn builds_for_every_benchmark() {
+        for name in benchmarks::ALL {
+            let size = if name == "cnn" {
+                benchmarks::Size::Medium
+            } else {
+                benchmarks::Size::Small
+            };
+            let k = benchmarks::build(name, size, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            let bm = BoundModel::build(&k, &a, &Device::u200());
+            assert!(!bm.pool.is_empty(), "{name}: empty pool");
+            assert_eq!(bm.n_loops, k.n_loops());
+            assert_eq!(bm.partitions.len(), k.arrays.len());
+            // at least divisibility per loop + dsp + onchip
+            assert!(bm.constraints.len() >= k.n_loops() + 2, "{name}");
+        }
+    }
+
+    #[test]
+    fn domains_respect_triangular_and_distance_caps() {
+        let k = benchmarks::build("lu", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = BoundModel::build(&k, &a, &Device::u200());
+        // triangular loops (non-constant TC) are not unrollable
+        for (i, tc) in a.tcs.iter().enumerate() {
+            if !tc.is_constant() {
+                assert_eq!(bm.domains[i].uf_hi, 1, "loop {i}");
+            }
+        }
+    }
+}

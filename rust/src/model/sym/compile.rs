@@ -1,0 +1,272 @@
+//! Consumer 1: the flattened, allocation-free batch evaluator.
+//!
+//! [`BoundModel::compile`](super::BoundModel::compile) prunes the pool to
+//! the nodes reachable from the result roots and re-numbers them into a
+//! dense topologically-ordered tape. Evaluation is a single linear pass
+//! writing into a caller-owned [`EvalScratch`]; `evaluate_batch` reuses
+//! one scratch across the whole batch, so the per-design cost is the tape
+//! walk alone — no recursion, no per-design allocation (the DSE hot path
+//! the legacy `model::evaluate` recursion paid for with dozens of
+//! temporary `Vec`s per call).
+
+use super::build::BoundModel;
+use super::expr::{eval_concrete, ExprId, SymNode};
+use crate::pragma::Design;
+
+/// The flattened evaluator. Self-contained (owns its tape): cheap to
+/// cache per kernel and to send across threads.
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    tape: Vec<SymNode>,
+    comp: u32,
+    comm: u32,
+    total: u32,
+    dsp: u32,
+    onchip: u32,
+    max_part: u32,
+    /// Per-array partitioning slots, in kernel array order.
+    partitions: Vec<u32>,
+    dsp_total: u64,
+    onchip_bytes: u64,
+    max_array_partition: u64,
+}
+
+/// Reusable value buffer for tape evaluation.
+#[derive(Clone, Debug, Default)]
+pub struct EvalScratch {
+    vals: Vec<f64>,
+}
+
+/// The compiled counterpart of `model::ModelResult` (minus the II
+/// reporting field, which only the recursive evaluator tracks).
+#[derive(Clone, Copy, Debug)]
+pub struct CompiledResult {
+    pub comp_cycles: f64,
+    pub comm_cycles: f64,
+    pub total_cycles: f64,
+    pub dsp: f64,
+    pub onchip_bytes: f64,
+    pub max_partitioning: u64,
+    pub feasible: bool,
+}
+
+impl CompiledModel {
+    pub(super) fn from_model(m: &BoundModel) -> CompiledModel {
+        let nodes = m.pool.nodes();
+        let roots: Vec<ExprId> = [m.comp, m.comm, m.total, m.dsp, m.onchip, m.max_part]
+            .into_iter()
+            .chain(m.partitions.iter().map(|&(_, e)| e))
+            .collect();
+
+        // liveness: mark roots, then sweep the (topologically ordered)
+        // tape backwards marking children
+        let mut live = vec![false; nodes.len()];
+        for r in &roots {
+            live[r.0 as usize] = true;
+        }
+        fn mark(live: &mut [bool], e: ExprId) {
+            live[e.0 as usize] = true;
+        }
+        for i in (0..nodes.len()).rev() {
+            if !live[i] {
+                continue;
+            }
+            match nodes[i] {
+                SymNode::Const(_) | SymNode::Uf(_) | SymNode::Tile(_) | SymNode::Pip(_) => {}
+                SymNode::Ceil(a) | SymNode::TreeLog(a) => mark(&mut live, a),
+                SymNode::Add(a, b)
+                | SymNode::Sub(a, b)
+                | SymNode::Mul(a, b)
+                | SymNode::Div(a, b)
+                | SymNode::Min(a, b)
+                | SymNode::Max(a, b)
+                | SymNode::Gt(a, b)
+                | SymNode::Lt(a, b)
+                | SymNode::And(a, b) => {
+                    mark(&mut live, a);
+                    mark(&mut live, b);
+                }
+                SymNode::Select(c, t, e) => {
+                    mark(&mut live, c);
+                    mark(&mut live, t);
+                    mark(&mut live, e);
+                }
+            }
+        }
+
+        // dense renumbering, preserving topological order
+        let mut remap = vec![u32::MAX; nodes.len()];
+        let mut tape = Vec::new();
+        for (i, n) in nodes.iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            let r = |e: ExprId| ExprId(remap[e.0 as usize]);
+            let new = match *n {
+                SymNode::Const(_) | SymNode::Uf(_) | SymNode::Tile(_) | SymNode::Pip(_) => *n,
+                SymNode::Add(a, b) => SymNode::Add(r(a), r(b)),
+                SymNode::Sub(a, b) => SymNode::Sub(r(a), r(b)),
+                SymNode::Mul(a, b) => SymNode::Mul(r(a), r(b)),
+                SymNode::Div(a, b) => SymNode::Div(r(a), r(b)),
+                SymNode::Min(a, b) => SymNode::Min(r(a), r(b)),
+                SymNode::Max(a, b) => SymNode::Max(r(a), r(b)),
+                SymNode::Ceil(a) => SymNode::Ceil(r(a)),
+                SymNode::TreeLog(a) => SymNode::TreeLog(r(a)),
+                SymNode::Gt(a, b) => SymNode::Gt(r(a), r(b)),
+                SymNode::Lt(a, b) => SymNode::Lt(r(a), r(b)),
+                SymNode::And(a, b) => SymNode::And(r(a), r(b)),
+                SymNode::Select(c, t, e) => SymNode::Select(r(c), r(t), r(e)),
+            };
+            remap[i] = tape.len() as u32;
+            tape.push(new);
+        }
+
+        CompiledModel {
+            tape,
+            comp: remap[m.comp.0 as usize],
+            comm: remap[m.comm.0 as usize],
+            total: remap[m.total.0 as usize],
+            dsp: remap[m.dsp.0 as usize],
+            onchip: remap[m.onchip.0 as usize],
+            max_part: remap[m.max_part.0 as usize],
+            partitions: m
+                .partitions
+                .iter()
+                .map(|&(_, e)| remap[e.0 as usize])
+                .collect(),
+            dsp_total: m.dsp_total,
+            onchip_bytes: m.onchip_bytes,
+            max_array_partition: m.max_array_partition,
+        }
+    }
+
+    /// Tape length (for reporting / benches).
+    pub fn n_instructions(&self) -> usize {
+        self.tape.len()
+    }
+
+    /// A scratch buffer sized for this tape.
+    pub fn scratch(&self) -> EvalScratch {
+        EvalScratch {
+            vals: Vec::with_capacity(self.tape.len()),
+        }
+    }
+
+    /// Evaluate one design. Allocation-free when `scratch` has been used
+    /// with this model before.
+    pub fn evaluate(&self, d: &Design, scratch: &mut EvalScratch) -> CompiledResult {
+        eval_concrete(&self.tape, d, &mut scratch.vals);
+        let v = &scratch.vals;
+        let dsp = v[self.dsp as usize];
+        let onchip = v[self.onchip as usize];
+        let max_partitioning = v[self.max_part as usize] as u64;
+        CompiledResult {
+            comp_cycles: v[self.comp as usize],
+            comm_cycles: v[self.comm as usize],
+            total_cycles: v[self.total as usize],
+            dsp,
+            onchip_bytes: onchip,
+            max_partitioning,
+            feasible: dsp <= self.dsp_total as f64
+                && onchip <= self.onchip_bytes as f64
+                && max_partitioning <= self.max_array_partition,
+        }
+    }
+
+    /// Evaluate a batch, reusing one scratch across all designs.
+    pub fn evaluate_batch(&self, designs: &[Design]) -> Vec<CompiledResult> {
+        let mut scratch = self.scratch();
+        designs
+            .iter()
+            .map(|d| self.evaluate(d, &mut scratch))
+            .collect()
+    }
+
+    /// Partitioning of array `idx` (kernel array order) from the last
+    /// `evaluate` into `scratch`.
+    pub fn partitioning_of(&self, scratch: &EvalScratch, idx: usize) -> u64 {
+        scratch.vals[self.partitions[idx] as usize] as u64
+    }
+
+    pub fn n_arrays(&self) -> usize {
+        self.partitions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::hls::Device;
+    use crate::ir::{DType, LoopId};
+    use crate::model;
+    use crate::poly::Analysis;
+
+    #[test]
+    fn compiled_matches_recursive_model_on_gemm() {
+        let k = benchmarks::build("gemm", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let bm = super::super::BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        for (pipe, uf0, uf3) in [
+            (None, 1, 1),
+            (Some(3u32), 1, 10),
+            (Some(2), 4, 1),
+            (Some(0), 2, 70),
+        ] {
+            let mut d = crate::pragma::Design::empty(&k);
+            if let Some(p) = pipe {
+                d.get_mut(LoopId(p)).pipeline = true;
+            }
+            d.get_mut(LoopId(0)).uf = uf0;
+            d.get_mut(LoopId(3)).uf = uf3;
+            let r = cm.evaluate(&d, &mut scratch);
+            let precise = model::evaluate(&k, &a, &dev, &d);
+            let rel = (r.total_cycles - precise.total_cycles).abs()
+                / precise.total_cycles.max(1.0);
+            assert!(
+                rel < 1e-9,
+                "pipe={pipe:?} uf0={uf0} uf3={uf3}: {} vs {}",
+                r.total_cycles,
+                precise.total_cycles
+            );
+            assert_eq!(r.dsp, precise.dsp, "dsp mismatch");
+            assert_eq!(r.onchip_bytes, precise.onchip_bytes);
+            assert_eq!(r.max_partitioning, precise.max_partitioning);
+            assert_eq!(r.feasible, precise.feasible);
+        }
+    }
+
+    #[test]
+    fn pruned_tape_is_smaller_than_pool() {
+        let k = benchmarks::build("2mm", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = super::super::BoundModel::build(&k, &a, &Device::u200());
+        let cm = bm.compile();
+        assert!(cm.n_instructions() <= bm.pool.len());
+        assert!(cm.n_instructions() > 0);
+    }
+
+    #[test]
+    fn batch_matches_single_eval() {
+        let k = benchmarks::build("bicg", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = super::super::BoundModel::build(&k, &a, &Device::u200());
+        let cm = bm.compile();
+        let mut designs = Vec::new();
+        for uf in [1u64, 2, 4] {
+            let mut d = crate::pragma::Design::empty(&k);
+            d.get_mut(LoopId(0)).uf = uf;
+            designs.push(d);
+        }
+        let batch = cm.evaluate_batch(&designs);
+        let mut scratch = cm.scratch();
+        for (d, r) in designs.iter().zip(&batch) {
+            let single = cm.evaluate(d, &mut scratch);
+            assert_eq!(single.total_cycles, r.total_cycles);
+            assert_eq!(single.dsp, r.dsp);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Consumer 2's substrate: Eqs 6/8/10–13 as first-class constraint
+//! values, and the shared violation reporting both `NlpProblem` and the
+//! solver consume.
+//!
+//! The lowering map (paper Eq → [`Constraint`]):
+//!
+//! | Eq | Constraint | Carrier |
+//! |----|------------|---------|
+//! | 6  | `Divides`  | integer predicate on `UF_l` vs `TC_l` |
+//! | 8  | `Distance` | integer cap `UF_l ≤ d_l` (emitted when `d_l > 1`) |
+//! | 10/13 | `Partitioning` | symbolic per-array product, bound supplied at check time |
+//! | 11 | `Dsp` | symbolic usage vs device total |
+//! | 12 | `OnChip` | symbolic footprint vs device capacity |
+//!
+//! Eqs 1–5/7/9/14/15 are enforced *structurally* (candidate generation,
+//! `Space`, `materialize`, Merlin-auto) and therefore have no residual
+//! check-time constraint; see `nlp::formulation`'s table.
+
+use super::build::BoundModel;
+use super::compile::{CompiledModel, CompiledResult, EvalScratch};
+use super::expr::ExprId;
+use crate::pragma::Design;
+
+/// One first-class constraint of the bound model. The constraint order in
+/// `BoundModel::constraints` reproduces the legacy `NlpProblem::check`
+/// report order (per-loop Eq 6 then Eq 8, per-array Eq 10/13, Eq 11,
+/// Eq 12), which the model/NLP parity property test relies on.
+#[derive(Clone, Debug)]
+pub enum Constraint {
+    /// Eq 6: `TC_l mod UF_l == 0`; unrolling requires a constant TC.
+    Divides {
+        l: u32,
+        tc_max: u64,
+        tc_constant: bool,
+    },
+    /// Eq 8: `UF_l ≤ dist` for a carried dependence of distance > 1.
+    Distance { l: u32, dist: u64 },
+    /// Eqs 10/13: array partitioning ≤ cap (cap = min(device, DSE rung),
+    /// supplied at check time).
+    Partitioning {
+        /// Index into `kernel.arrays` / `CompiledModel` partition slots.
+        array: usize,
+        name: String,
+        /// The symbolic partitioning product (in `BoundModel::pool`).
+        expr: ExprId,
+    },
+    /// Eq 11: optimistic DSP usage ≤ device total.
+    Dsp { expr: ExprId, budget: u64 },
+    /// Eq 12: cached on-chip footprint ≤ device capacity.
+    OnChip { expr: ExprId, budget: u64 },
+}
+
+/// A violated constraint on a concrete design. (Moved here from
+/// `nlp::formulation`, which re-exports it: violations are now produced
+/// by the shared constraint objects, not per-consumer checks.)
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// Eq 10/13: partitioning cap exceeded (array name, required, cap).
+    Partitioning(String, u64, u64),
+    /// Eq 11: DSP over budget (needed, available).
+    Dsp(u64, u64),
+    /// Eq 12: on-chip memory over budget (needed bytes, available).
+    OnChip(u64, u64),
+    /// Eq 6: UF does not divide TC (loop index, uf, tc).
+    Divisibility(u32, u64, u64),
+    /// Eq 8: UF above the carried-dependence cap.
+    Dependence(u32, u64, u64),
+}
+
+impl BoundModel {
+    /// Evaluate every constraint on a complete design; returns the
+    /// violations in constraint order (empty = feasible NLP point).
+    /// `cap` is the effective partitioning cap of the DSE step.
+    pub fn check(
+        &self,
+        cm: &CompiledModel,
+        scratch: &mut EvalScratch,
+        d: &Design,
+        cap: u64,
+    ) -> Vec<Violation> {
+        let mut out = Vec::new();
+        let mut evaluated: Option<CompiledResult> = None;
+        for c in &self.constraints {
+            match c {
+                Constraint::Divides {
+                    l,
+                    tc_max,
+                    tc_constant,
+                } => {
+                    let uf = d.pragmas[*l as usize].uf;
+                    if uf > 1 && (!tc_constant || tc_max % uf != 0) {
+                        out.push(Violation::Divisibility(*l, uf, *tc_max));
+                    }
+                }
+                Constraint::Distance { l, dist } => {
+                    let uf = d.pragmas[*l as usize].uf;
+                    if uf > *dist {
+                        out.push(Violation::Dependence(*l, uf, *dist));
+                    }
+                }
+                Constraint::Partitioning { array, name, .. } => {
+                    if evaluated.is_none() {
+                        evaluated = Some(cm.evaluate(d, scratch));
+                    }
+                    let part = cm.partitioning_of(scratch, *array);
+                    if part > cap {
+                        out.push(Violation::Partitioning(name.clone(), part, cap));
+                    }
+                }
+                Constraint::Dsp { budget, .. } => {
+                    if evaluated.is_none() {
+                        evaluated = Some(cm.evaluate(d, scratch));
+                    }
+                    let dsp = evaluated.as_ref().unwrap().dsp;
+                    if dsp > *budget as f64 {
+                        out.push(Violation::Dsp(dsp as u64, *budget));
+                    }
+                }
+                Constraint::OnChip { budget, .. } => {
+                    if evaluated.is_none() {
+                        evaluated = Some(cm.evaluate(d, scratch));
+                    }
+                    let oc = evaluated.as_ref().unwrap().onchip_bytes;
+                    if oc > *budget as f64 {
+                        out.push(Violation::OnChip(oc as u64, *budget));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Combined feasibility + objective with a single tape evaluation —
+    /// the solver's leaf hot path. Returns `None` on the first violated
+    /// constraint.
+    pub fn check_objective(
+        &self,
+        cm: &CompiledModel,
+        scratch: &mut EvalScratch,
+        d: &Design,
+        cap: u64,
+    ) -> Option<f64> {
+        // integer constraints first: no tape evaluation needed
+        for c in &self.constraints {
+            match c {
+                Constraint::Divides {
+                    l,
+                    tc_max,
+                    tc_constant,
+                } => {
+                    let uf = d.pragmas[*l as usize].uf;
+                    if uf > 1 && (!tc_constant || tc_max % uf != 0) {
+                        return None;
+                    }
+                }
+                Constraint::Distance { l, dist } => {
+                    if d.pragmas[*l as usize].uf > *dist {
+                        return None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let r = cm.evaluate(d, scratch);
+        for c in &self.constraints {
+            match c {
+                Constraint::Partitioning { array, .. } => {
+                    if cm.partitioning_of(scratch, *array) > cap {
+                        return None;
+                    }
+                }
+                Constraint::Dsp { budget, .. } => {
+                    if r.dsp > *budget as f64 {
+                        return None;
+                    }
+                }
+                Constraint::OnChip { budget, .. } => {
+                    if r.onchip_bytes > *budget as f64 {
+                        return None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        Some(r.total_cycles)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::hls::Device;
+    use crate::ir::{DType, LoopId};
+    use crate::poly::Analysis;
+
+    fn setup(name: &str) -> (crate::ir::Kernel, Analysis, Device) {
+        let k = benchmarks::build(name, benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        (k, a, Device::u200())
+    }
+
+    #[test]
+    fn non_divisor_uf_flagged_by_shared_constraints() {
+        let (k, a, dev) = setup("gemm");
+        let bm = BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(0)).uf = 7; // 60 % 7 != 0
+        let v = bm.check(&cm, &mut scratch, &d, u64::MAX);
+        assert!(v
+            .iter()
+            .any(|v| matches!(v, Violation::Divisibility(0, 7, 60))));
+    }
+
+    #[test]
+    fn feasible_empty_design_has_no_violations() {
+        let (k, a, dev) = setup("gemm");
+        let bm = BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        let v = bm.check(&cm, &mut scratch, &Design::empty(&k), u64::MAX);
+        assert!(v.is_empty(), "{v:?}");
+        assert!(bm
+            .check_objective(&cm, &mut scratch, &Design::empty(&k), u64::MAX)
+            .is_some());
+    }
+
+    #[test]
+    fn check_objective_rejects_what_check_flags() {
+        let (k, a, dev) = setup("gemm");
+        let bm = BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(0)).uf = 60;
+        d.get_mut(LoopId(1)).uf = 70;
+        d.get_mut(LoopId(2)).uf = 80;
+        d.get_mut(LoopId(3)).uf = 70;
+        assert!(!bm.check(&cm, &mut scratch, &d, u64::MAX).is_empty());
+        assert!(bm
+            .check_objective(&cm, &mut scratch, &d, u64::MAX)
+            .is_none());
+    }
+}

@@ -1,0 +1,497 @@
+//! The symbolic expression pool: a hash-consed DAG of arithmetic over the
+//! per-loop pragma unknowns.
+//!
+//! Grammar (see DESIGN.md §7 for the lowering map):
+//!
+//! ```text
+//! e ::= c                                  constants (f64)
+//!     | UF_l | tile_l | pip_l              per-loop unknowns
+//!     | e + e | e - e | e * e | e / e      arithmetic
+//!     | min(e, e) | max(e, e)              lattice ops
+//!     | ceil(e)                            integer ceiling
+//!     | treelog(e)                         max(1, ceil(log2(trunc(e))))
+//!     | e > e | e < e | e ∧ e              0/1-valued predicates
+//!     | select(e, e, e)                    branch on a 0/1 predicate
+//! ```
+//!
+//! Nodes are interned ([`Pool`]): building the same subexpression twice
+//! yields the same [`ExprId`], so the pool doubles as a flattened,
+//! topologically-ordered evaluation tape (children always precede
+//! parents). Both evaluators — concrete ([`eval_concrete`]) and interval
+//! ([`eval_interval`]) — are single linear passes over that tape.
+//!
+//! Interval semantics: every operator is evaluated with standard inclusion
+//! rules (4-corner multiply/divide, hull on `select` with an undecided
+//! predicate), so for any assignment drawn from the input boxes the
+//! concrete value of every node lies inside its interval. This is the
+//! soundness property `BoundModel::lower_bound` relies on.
+
+use crate::pragma::Design;
+use crate::util::ceil_log2;
+use std::collections::HashMap;
+
+/// Index of an interned node in its [`Pool`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ExprId(pub u32);
+
+/// One interned operator node. `Const` stores the f64 bit pattern so the
+/// node is `Eq + Hash` for interning.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SymNode {
+    Const(u64),
+    /// `UF_l`: the raw `parallel factor` unknown of loop `l`.
+    Uf(u32),
+    /// `tile_l`: the raw `tile factor` unknown of loop `l`.
+    Tile(u32),
+    /// `pip_l ∈ {0,1}`: the `pipeline` unknown of loop `l`.
+    Pip(u32),
+    Add(ExprId, ExprId),
+    Sub(ExprId, ExprId),
+    Mul(ExprId, ExprId),
+    Div(ExprId, ExprId),
+    Min(ExprId, ExprId),
+    Max(ExprId, ExprId),
+    Ceil(ExprId),
+    /// `max(1, ceil_log2(trunc(x)))` — the tree-reduction depth factor of
+    /// Theorem 4.7, matching `eval`'s `(ceil_log2(uf as u64) as f64).max(1.)`.
+    TreeLog(ExprId),
+    /// `(a > b) as f64` (0.0 or 1.0).
+    Gt(ExprId, ExprId),
+    /// `(a < b) as f64`.
+    Lt(ExprId, ExprId),
+    /// Logical conjunction of two 0/1 values.
+    And(ExprId, ExprId),
+    /// `if cond != 0 { then } else { other }`.
+    Select(ExprId, ExprId, ExprId),
+}
+
+/// Hash-consing arena of [`SymNode`]s.
+#[derive(Clone, Debug, Default)]
+pub struct Pool {
+    nodes: Vec<SymNode>,
+    memo: HashMap<SymNode, ExprId>,
+}
+
+impl Pool {
+    pub fn new() -> Pool {
+        Pool::default()
+    }
+
+    pub fn nodes(&self) -> &[SymNode] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    fn intern(&mut self, n: SymNode) -> ExprId {
+        if let Some(&id) = self.memo.get(&n) {
+            return id;
+        }
+        let id = ExprId(self.nodes.len() as u32);
+        self.nodes.push(n);
+        self.memo.insert(n, id);
+        id
+    }
+
+    /// Drop the interning memo once construction is done: consumers only
+    /// walk `nodes()`, and the memo would otherwise double the model's
+    /// resident size and clone cost.
+    pub fn seal(&mut self) {
+        self.memo = HashMap::new();
+    }
+
+    pub fn cf(&mut self, v: f64) -> ExprId {
+        self.intern(SymNode::Const(v.to_bits()))
+    }
+    pub fn uf(&mut self, l: u32) -> ExprId {
+        self.intern(SymNode::Uf(l))
+    }
+    pub fn tile(&mut self, l: u32) -> ExprId {
+        self.intern(SymNode::Tile(l))
+    }
+    pub fn pip(&mut self, l: u32) -> ExprId {
+        self.intern(SymNode::Pip(l))
+    }
+    pub fn add(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Add(a, b))
+    }
+    pub fn sub(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Sub(a, b))
+    }
+    pub fn mul(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Mul(a, b))
+    }
+    pub fn div(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Div(a, b))
+    }
+    pub fn min(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Min(a, b))
+    }
+    pub fn max(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Max(a, b))
+    }
+    pub fn ceil(&mut self, a: ExprId) -> ExprId {
+        self.intern(SymNode::Ceil(a))
+    }
+    pub fn treelog(&mut self, a: ExprId) -> ExprId {
+        self.intern(SymNode::TreeLog(a))
+    }
+    pub fn gt(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Gt(a, b))
+    }
+    pub fn lt(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::Lt(a, b))
+    }
+    pub fn and(&mut self, a: ExprId, b: ExprId) -> ExprId {
+        self.intern(SymNode::And(a, b))
+    }
+    pub fn select(&mut self, c: ExprId, t: ExprId, e: ExprId) -> ExprId {
+        self.intern(SymNode::Select(c, t, e))
+    }
+
+    /// `max(x, c)` with a fresh constant — the most common clamp.
+    pub fn max_c(&mut self, x: ExprId, c: f64) -> ExprId {
+        let k = self.cf(c);
+        self.max(x, k)
+    }
+    /// `min(x, c)`.
+    pub fn min_c(&mut self, x: ExprId, c: f64) -> ExprId {
+        let k = self.cf(c);
+        self.min(x, k)
+    }
+}
+
+#[inline]
+fn treelog_f(x: f64) -> f64 {
+    let t = x.trunc().max(1.0) as u64;
+    (ceil_log2(t) as f64).max(1.0)
+}
+
+/// Evaluate every node of `nodes` on a concrete [`Design`], writing node
+/// values into `out` (resized as needed). A single linear pass: the tape
+/// is topologically ordered by construction.
+pub fn eval_concrete(nodes: &[SymNode], d: &Design, out: &mut Vec<f64>) {
+    out.clear();
+    out.resize(nodes.len(), 0.0);
+    for (i, n) in nodes.iter().enumerate() {
+        let v = match *n {
+            SymNode::Const(bits) => f64::from_bits(bits),
+            SymNode::Uf(l) => d.pragmas[l as usize].uf as f64,
+            SymNode::Tile(l) => d.pragmas[l as usize].tile as f64,
+            SymNode::Pip(l) => d.pragmas[l as usize].pipeline as u8 as f64,
+            SymNode::Add(a, b) => out[a.0 as usize] + out[b.0 as usize],
+            SymNode::Sub(a, b) => out[a.0 as usize] - out[b.0 as usize],
+            SymNode::Mul(a, b) => out[a.0 as usize] * out[b.0 as usize],
+            SymNode::Div(a, b) => out[a.0 as usize] / out[b.0 as usize],
+            SymNode::Min(a, b) => out[a.0 as usize].min(out[b.0 as usize]),
+            SymNode::Max(a, b) => out[a.0 as usize].max(out[b.0 as usize]),
+            SymNode::Ceil(a) => out[a.0 as usize].ceil(),
+            SymNode::TreeLog(a) => treelog_f(out[a.0 as usize]),
+            SymNode::Gt(a, b) => (out[a.0 as usize] > out[b.0 as usize]) as u8 as f64,
+            SymNode::Lt(a, b) => (out[a.0 as usize] < out[b.0 as usize]) as u8 as f64,
+            SymNode::And(a, b) => {
+                ((out[a.0 as usize] != 0.0) && (out[b.0 as usize] != 0.0)) as u8 as f64
+            }
+            SymNode::Select(c, t, e) => {
+                if out[c.0 as usize] != 0.0 {
+                    out[t.0 as usize]
+                } else {
+                    out[e.0 as usize]
+                }
+            }
+        };
+        out[i] = v;
+    }
+}
+
+/// A closed interval `[lo, hi]` of f64 values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Interval {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Interval {
+    pub fn point(v: f64) -> Interval {
+        Interval { lo: v, hi: v }
+    }
+    pub fn new(lo: f64, hi: f64) -> Interval {
+        debug_assert!(lo <= hi, "inverted interval [{lo}, {hi}]");
+        Interval { lo, hi }
+    }
+    pub fn contains(&self, v: f64) -> bool {
+        self.lo <= v && v <= self.hi
+    }
+    fn hull(a: Interval, b: Interval) -> Interval {
+        Interval {
+            lo: a.lo.min(b.lo),
+            hi: a.hi.max(b.hi),
+        }
+    }
+    fn corners(a: Interval, b: Interval, f: impl Fn(f64, f64) -> f64) -> Interval {
+        let c = [
+            f(a.lo, b.lo),
+            f(a.lo, b.hi),
+            f(a.hi, b.lo),
+            f(a.hi, b.hi),
+        ];
+        Interval {
+            lo: c.iter().cloned().fold(f64::INFINITY, f64::min),
+            hi: c.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+        }
+    }
+}
+
+/// Per-loop unknown boxes for interval propagation.
+#[derive(Clone, Copy, Debug)]
+pub struct VarBox {
+    pub uf: Interval,
+    pub tile: Interval,
+    pub pip: Interval,
+}
+
+/// Evaluate every node over the per-loop boxes with inclusion-sound
+/// interval rules. Division assumes a positive divisor (every divisor in
+/// the lowered model is a trip count, a clamped unroll factor, or a
+/// dependence distance, all ≥ 1); a divisor interval touching zero widens
+/// to `[0, +inf]` defensively.
+pub fn eval_interval(nodes: &[SymNode], boxes: &[VarBox], out: &mut Vec<Interval>) {
+    out.clear();
+    out.resize(nodes.len(), Interval::point(0.0));
+    for (i, n) in nodes.iter().enumerate() {
+        let v = match *n {
+            SymNode::Const(bits) => Interval::point(f64::from_bits(bits)),
+            SymNode::Uf(l) => boxes[l as usize].uf,
+            SymNode::Tile(l) => boxes[l as usize].tile,
+            SymNode::Pip(l) => boxes[l as usize].pip,
+            SymNode::Add(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                Interval::new(a.lo + b.lo, a.hi + b.hi)
+            }
+            SymNode::Sub(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                Interval::new(a.lo - b.hi, a.hi - b.lo)
+            }
+            SymNode::Mul(a, b) => {
+                Interval::corners(out[a.0 as usize], out[b.0 as usize], |x, y| x * y)
+            }
+            SymNode::Div(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                if b.lo <= 0.0 {
+                    // divisor interval touches zero (unreachable with the
+                    // current lowering, where every divisor is clamped
+                    // ≥ 1): widen to the sign-correct half-line/line so
+                    // inclusion still holds for any numerator
+                    if a.lo >= 0.0 {
+                        Interval::new(0.0, f64::INFINITY)
+                    } else {
+                        Interval::new(f64::NEG_INFINITY, f64::INFINITY)
+                    }
+                } else {
+                    Interval::corners(a, b, |x, y| x / y)
+                }
+            }
+            SymNode::Min(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                Interval::new(a.lo.min(b.lo), a.hi.min(b.hi))
+            }
+            SymNode::Max(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                Interval::new(a.lo.max(b.lo), a.hi.max(b.hi))
+            }
+            SymNode::Ceil(a) => {
+                let a = out[a.0 as usize];
+                Interval::new(a.lo.ceil(), a.hi.ceil())
+            }
+            SymNode::TreeLog(a) => {
+                let a = out[a.0 as usize];
+                Interval::new(treelog_f(a.lo), treelog_f(a.hi))
+            }
+            SymNode::Gt(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                if a.lo > b.hi {
+                    Interval::point(1.0)
+                } else if a.hi <= b.lo {
+                    Interval::point(0.0)
+                } else {
+                    Interval::new(0.0, 1.0)
+                }
+            }
+            SymNode::Lt(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                if a.hi < b.lo {
+                    Interval::point(1.0)
+                } else if a.lo >= b.hi {
+                    Interval::point(0.0)
+                } else {
+                    Interval::new(0.0, 1.0)
+                }
+            }
+            SymNode::And(a, b) => {
+                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
+                let a1 = a.lo != 0.0 || a.hi != 0.0; // can be true
+                let b1 = b.lo != 0.0 || b.hi != 0.0;
+                let a0 = a.contains(0.0); // can be false
+                let b0 = b.contains(0.0);
+                match (a1 && b1, a0 || b0) {
+                    (true, false) => Interval::point(1.0),
+                    (false, _) => Interval::point(0.0),
+                    _ => Interval::new(0.0, 1.0),
+                }
+            }
+            SymNode::Select(c, t, e) => {
+                let c = out[c.0 as usize];
+                if c.lo != 0.0 || c.hi != 0.0 {
+                    // predicate *may* hold
+                    if c.contains(0.0) {
+                        Interval::hull(out[t.0 as usize], out[e.0 as usize])
+                    } else {
+                        out[t.0 as usize]
+                    }
+                } else {
+                    out[e.0 as usize]
+                }
+            }
+        };
+        out[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+    use crate::pragma::Design;
+    use crate::util::rng::Rng;
+
+    fn d1(k: &crate::ir::Kernel, uf0: u64, pip0: bool) -> Design {
+        let mut d = Design::empty(k);
+        d.pragmas[0].uf = uf0;
+        d.pragmas[0].pipeline = pip0;
+        d
+    }
+
+    #[test]
+    fn interning_dedups() {
+        let mut p = Pool::new();
+        let a = p.uf(0);
+        let b = p.cf(2.0);
+        let e1 = p.mul(a, b);
+        let e2 = p.mul(a, b);
+        assert_eq!(e1, e2);
+        assert_eq!(p.len(), 3);
+    }
+
+    #[test]
+    fn concrete_eval_matches_hand_formula() {
+        let k = crate::benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let mut p = Pool::new();
+        let uf = p.uf(0);
+        let uf1 = p.max_c(uf, 1.0);
+        let tc = p.cf(8.0);
+        let per = p.div(tc, uf1);
+        let lat = p.max_c(per, 1.0);
+        let sel = {
+            let pip = p.pip(0);
+            let one = p.cf(1.0);
+            p.select(pip, one, lat)
+        };
+        let mut out = Vec::new();
+        eval_concrete(p.nodes(), &d1(&k, 4, false), &mut out);
+        assert_eq!(out[sel.0 as usize], 2.0);
+        eval_concrete(p.nodes(), &d1(&k, 4, true), &mut out);
+        assert_eq!(out[sel.0 as usize], 1.0);
+    }
+
+    #[test]
+    fn treelog_matches_eval_semantics() {
+        let mut p = Pool::new();
+        let uf = p.uf(0);
+        let t = p.treelog(uf);
+        let k = crate::benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let mut out = Vec::new();
+        for (ufv, expect) in [(1u64, 1.0), (2, 1.0), (3, 2.0), (8, 3.0), (9, 4.0)] {
+            eval_concrete(p.nodes(), &d1(&k, ufv, false), &mut out);
+            assert_eq!(out[t.0 as usize], expect, "uf={ufv}");
+        }
+    }
+
+    #[test]
+    fn interval_contains_concrete_samples() {
+        // randomized inclusion check on a small expression zoo
+        let k = crate::benchmarks::kernel_gemm(16, 16, 16, DType::F32);
+        let mut p = Pool::new();
+        let uf = p.uf(0);
+        let uf1 = p.max_c(uf, 1.0);
+        let tile = p.tile(0);
+        let pip = p.pip(0);
+        let tc = p.cf(16.0);
+        let ratio = p.div(tc, uf1);
+        let ramp = {
+            let one = p.cf(1.0);
+            let s = p.sub(ratio, one);
+            p.max_c(s, 0.0)
+        };
+        let tl = p.treelog(uf1);
+        let cond = {
+            let one = p.cf(1.0);
+            let g = p.gt(tile, one);
+            let l = p.lt(tile, tc);
+            p.and(g, l)
+        };
+        let scaled = {
+            let m = p.mul(ramp, tl);
+            p.select(cond, m, ratio)
+        };
+        let root = p.select(pip, scaled, ramp);
+
+        let boxes = vec![VarBox {
+            uf: Interval::new(1.0, 16.0),
+            tile: Interval::new(1.0, 16.0),
+            pip: Interval::new(0.0, 1.0),
+        }];
+        let mut iv = Vec::new();
+        eval_interval(p.nodes(), &boxes, &mut iv);
+
+        let mut rng = Rng::new(0xfeed);
+        let mut out = Vec::new();
+        for _ in 0..500 {
+            let mut d = Design::empty(&k);
+            d.pragmas[0].uf = rng.range(1, 17);
+            d.pragmas[0].tile = rng.range(1, 17);
+            d.pragmas[0].pipeline = rng.chance(0.5);
+            eval_concrete(p.nodes(), &d, &mut out);
+            for (i, &v) in out.iter().enumerate() {
+                assert!(
+                    iv[i].contains(v),
+                    "node {i} value {v} outside [{}, {}] (root {})",
+                    iv[i].lo,
+                    iv[i].hi,
+                    root.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_boxes_collapse_to_points() {
+        let mut p = Pool::new();
+        let uf = p.uf(0);
+        let tc = p.cf(12.0);
+        let e = p.div(tc, uf);
+        let boxes = vec![VarBox {
+            uf: Interval::point(3.0),
+            tile: Interval::point(1.0),
+            pip: Interval::point(0.0),
+        }];
+        let mut iv = Vec::new();
+        eval_interval(p.nodes(), &boxes, &mut iv);
+        assert_eq!(iv[e.0 as usize], Interval::point(4.0));
+    }
+}

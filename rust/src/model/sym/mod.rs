@@ -1,0 +1,50 @@
+//! The symbolic bound-model IR — **one model, three consumers**.
+//!
+//! The paper's central architectural claim is that a *single* analytical
+//! lower-bound model serves three roles: exact scoring of complete
+//! designs, the objective/constraints of the NLP (Eqs 1–15), and latency
+//! lower bounds for pruning *partial* pragma configurations during DSE.
+//! This module makes that claim a first-class API:
+//!
+//! * [`expr`] — the expression IR: constants, per-loop unknowns
+//!   `UF_l`/`tile_l`/`pip_l`, arithmetic/lattice/predicate operators, a
+//!   hash-consed [`Pool`](expr::Pool) whose tape is topologically ordered
+//!   by construction, and two linear-pass evaluators (concrete f64 and
+//!   inclusion-sound intervals).
+//! * [`build`] — [`BoundModel`]: built **once per kernel** from
+//!   `ir` + `poly::Analysis` by transliterating the `model::eval`
+//!   recursion, carrying the latency objective, the resource
+//!   expressions, the Eqs 6/8/10–13 [`Constraint`] values, and the
+//!   per-loop unknown domains.
+//! * [`compile`] — consumer 1: [`BoundModel::compile`] flattens the model
+//!   into the allocation-free [`CompiledModel`] batch evaluator that
+//!   replaces the recursion on the DSE hot path
+//!   (`CompiledModel::evaluate_batch`).
+//! * [`constraint`] — consumer 2: `NlpProblem` is a thin view over the
+//!   shared constraint objects; [`Violation`]s come from
+//!   [`BoundModel::check`], and the solver's relaxation bounds come from
+//!   interval propagation over the same expressions.
+//! * [`partial`] — consumer 3: [`PartialDesign`] +
+//!   [`BoundModel::lower_bound`] evaluate the model with unassigned
+//!   pragmas relaxed to their interval extremes, giving any engine an
+//!   achievable-latency pruning primitive for whole subspaces
+//!   (`dse --prune-bound`, `Explorer::lower_bound`).
+//!
+//! Parity invariant (property-tested in `tests/property_model_sym.rs`):
+//! for every complete design, the compiled tape reproduces
+//! `model::evaluate` (resources bit-for-bit, latency to the last ulp) and
+//! `BoundModel::check` reproduces the legacy `NlpProblem` violation set
+//! exactly. Soundness invariant: `lower_bound(partial)` never exceeds the
+//! model value of any completion of the partial configuration.
+
+pub mod build;
+pub mod compile;
+pub mod constraint;
+pub mod expr;
+pub mod partial;
+
+pub use build::{BoundModel, VarDomain};
+pub use compile::{CompiledModel, CompiledResult, EvalScratch};
+pub use constraint::{Constraint, Violation};
+pub use expr::{ExprId, Interval, Pool, SymNode, VarBox};
+pub use partial::PartialDesign;

@@ -1,0 +1,124 @@
+//! Consumer 3's input type: a pragma configuration with holes.
+//!
+//! A [`PartialDesign`] assigns some pragmas and leaves the rest free;
+//! [`BoundModel::lower_bound`](super::BoundModel::lower_bound) relaxes the
+//! free ones to their Eq 1/2/8 interval hull and propagates, yielding a
+//! latency no completion of the partial configuration can beat — the
+//! paper's partial-configuration pruning primitive for DSE.
+
+use crate::ir::LoopId;
+use crate::pragma::{Design, LoopPragma};
+
+/// A partially assigned pragma configuration. `None` entries are free.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartialDesign {
+    pub uf: Vec<Option<u64>>,
+    pub tile: Vec<Option<u64>>,
+    pub pipeline: Vec<Option<bool>>,
+    /// Partitioning rung of the subspace under consideration: free `UF`s
+    /// on array-indexing loops are additionally capped by this value
+    /// (`u64::MAX` = unconstrained). See `BoundModel::boxes`.
+    pub uf_cap: u64,
+}
+
+impl PartialDesign {
+    /// Everything free — the whole design space of the kernel.
+    pub fn free(n_loops: usize) -> PartialDesign {
+        PartialDesign {
+            uf: vec![None; n_loops],
+            tile: vec![None; n_loops],
+            pipeline: vec![None; n_loops],
+            uf_cap: u64::MAX,
+        }
+    }
+
+    /// Everything assigned — the degenerate partial for a complete design
+    /// (its lower bound is the exact model value).
+    pub fn from_design(d: &Design) -> PartialDesign {
+        PartialDesign {
+            uf: d.pragmas.iter().map(|p| Some(p.uf)).collect(),
+            tile: d.pragmas.iter().map(|p| Some(p.tile)).collect(),
+            pipeline: d.pragmas.iter().map(|p| Some(p.pipeline)).collect(),
+            uf_cap: u64::MAX,
+        }
+    }
+
+    pub fn n_loops(&self) -> usize {
+        self.uf.len()
+    }
+
+    pub fn assign_uf(&mut self, l: LoopId, v: u64) -> &mut Self {
+        self.uf[l.0 as usize] = Some(v);
+        self
+    }
+
+    pub fn assign_tile(&mut self, l: LoopId, v: u64) -> &mut Self {
+        self.tile[l.0 as usize] = Some(v);
+        self
+    }
+
+    pub fn assign_pipeline(&mut self, l: LoopId, on: bool) -> &mut Self {
+        self.pipeline[l.0 as usize] = Some(on);
+        self
+    }
+
+    /// Builder-style partitioning-rung restriction.
+    pub fn with_uf_cap(mut self, cap: u64) -> PartialDesign {
+        self.uf_cap = cap;
+        self
+    }
+
+    /// Number of still-free pragma slots (over all three kinds).
+    pub fn free_slots(&self) -> usize {
+        self.uf.iter().filter(|x| x.is_none()).count()
+            + self.tile.iter().filter(|x| x.is_none()).count()
+            + self.pipeline.iter().filter(|x| x.is_none()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.free_slots() == 0
+    }
+
+    /// The complete [`Design`], when nothing is free.
+    pub fn to_design(&self) -> Option<Design> {
+        if !self.is_complete() {
+            return None;
+        }
+        Some(Design {
+            pragmas: (0..self.n_loops())
+                .map(|i| LoopPragma {
+                    uf: self.uf[i].unwrap(),
+                    tile: self.tile[i].unwrap(),
+                    pipeline: self.pipeline[i].unwrap(),
+                })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::DType;
+
+    #[test]
+    fn roundtrip_complete_design() {
+        let k = crate::benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(2)).pipeline = true;
+        d.get_mut(LoopId(3)).uf = 4;
+        let p = PartialDesign::from_design(&d);
+        assert!(p.is_complete());
+        assert_eq!(p.to_design().unwrap(), d);
+    }
+
+    #[test]
+    fn free_partial_is_incomplete() {
+        let mut p = PartialDesign::free(4);
+        assert!(!p.is_complete());
+        assert_eq!(p.free_slots(), 12);
+        p.assign_uf(LoopId(0), 2);
+        assert_eq!(p.free_slots(), 11);
+        assert!(p.to_design().is_none());
+    }
+}

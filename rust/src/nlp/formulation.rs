@@ -1,4 +1,6 @@
-//! NLP formulation: variables, constants and constraints (Section 5).
+//! NLP formulation: variables, constants and constraints (Section 5) —
+//! now a **thin view over the shared symbolic bound model**
+//! (`model::sym::BoundModel`).
 //!
 //! Variables (per loop `l`): `loop_l_UF`, `loop_l_tile`, `loop_l_pip`
 //! (cache booleans are resolved automatically by Merlin in our pipeline).
@@ -9,30 +11,43 @@
 //!
 //! | Eq | Meaning | Where enforced |
 //! |----|---------|----------------|
-//! | 1  | `1 ≤ UF_l ≤ TC_l` | candidate generation |
-//! | 2  | `1 ≤ tile_l ≤ TC_l` | candidate generation |
+//! | 1  | `1 ≤ UF_l ≤ TC_l` | candidate generation + `BoundModel` domains |
+//! | 2  | `1 ≤ tile_l ≤ TC_l` | candidate generation + `BoundModel` domains |
 //! | 3  | `pip_l ∈ {0,1}` | `PipelineConfig` |
 //! | 4  | cache booleans | Merlin-auto |
 //! | 5  | ≤ 1 pipelined loop per statement | antichain enumeration |
-//! | 6  | `TC_l mod UF_l == 0` | divisor sets |
+//! | 6  | `TC_l mod UF_l == 0` | `Constraint::Divides` (shared) |
 //! | 7  | `TC_l mod tile_l == 0` | divisor sets |
-//! | 8  | `UF_l ≤ d_l` when the carried distance `d_l > 1` | `Space::ufs` |
+//! | 8  | `UF_l ≤ d_l` when the carried distance `d_l > 1` | `Constraint::Distance` (shared) |
 //! | 9  | fine-grained mode: `UF = 1` above the pipeline | candidate generation |
-//! | 10 | `Π UF ≤ MAX_PARTITIONING` per statement | [`NlpProblem::check`] |
-//! | 11 | optimistic DSP ≤ available | [`NlpProblem::check`] |
-//! | 12 | cached footprints ≤ on-chip memory | [`NlpProblem::check`] |
-//! | 13 | per-array cross-dim partitioning ≤ cap | [`NlpProblem::check`] |
+//! | 10 | `Π UF ≤ MAX_PARTITIONING` per statement | `Constraint::Partitioning` (shared) |
+//! | 11 | optimistic DSP ≤ available | `Constraint::Dsp` (shared) |
+//! | 12 | cached footprints ≤ on-chip memory | `Constraint::OnChip` (shared) |
+//! | 13 | per-array cross-dim partitioning ≤ cap | `Constraint::Partitioning` (shared) |
 //! | 14 | cache only above the pipeline | Merlin-auto |
 //! | 15 | full unroll under the pipeline | `space::materialize` |
+//!
+//! "Shared" rows are [`model::sym::Constraint`] values built once per
+//! kernel; [`NlpProblem::check`] walks them and the objective is the
+//! compiled symbolic tape — the same objects the solver's interval
+//! relaxation and the DSE's partial-configuration pruning consume. The
+//! pre-IR hand-written path survives as [`NlpProblem::check_legacy`] /
+//! [`NlpProblem::objective_reference`], the executable reference the
+//! model/NLP parity property test compares against.
 
 use crate::hls::Device;
 use crate::ir::Kernel;
-use crate::model;
+use crate::model::{self, sym};
 use crate::poly::Analysis;
 use crate::pragma::{Design, Space};
+use std::cell::RefCell;
+use std::rc::Rc;
+
+pub use crate::model::sym::Violation;
 
 /// One NLP instance: a kernel + the sub-space restrictions Algorithm 1
-/// sweeps (max array partitioning, parallelism mode).
+/// sweeps (max array partitioning, parallelism mode), viewing the shared
+/// [`sym::BoundModel`] for its objective and constraints.
 pub struct NlpProblem<'k> {
     pub kernel: &'k Kernel,
     pub analysis: &'k Analysis,
@@ -46,20 +61,13 @@ pub struct NlpProblem<'k> {
     /// synthesis of this DSE run (Section 7.5: the DSE detects pragmas not
     /// applied and restricts the subspace accordingly).
     pub coarse_banned: std::collections::BTreeSet<u32>,
-}
-
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum Violation {
-    /// Eq 10/13: partitioning cap exceeded (array name, required, cap).
-    Partitioning(String, u64, u64),
-    /// Eq 11: DSP over budget (needed, available).
-    Dsp(u64, u64),
-    /// Eq 12: on-chip memory over budget (needed bytes, available).
-    OnChip(u64, u64),
-    /// Eq 6: UF does not divide TC (loop index, uf, tc).
-    Divisibility(u32, u64, u64),
-    /// Eq 8: UF above the carried-dependence cap.
-    Dependence(u32, u64, u64),
+    /// The shared symbolic bound model (objective + Eqs 1–15). `Rc`: the
+    /// model depends only on (kernel, device), so callers that sweep
+    /// sub-space restrictions (the DSE ladder) share one build.
+    pub bound: Rc<sym::BoundModel>,
+    /// Its flattened batch evaluator (the leaf/scoring hot path).
+    pub compiled: Rc<sym::CompiledModel>,
+    scratch: RefCell<sym::EvalScratch>,
 }
 
 impl<'k> NlpProblem<'k> {
@@ -70,6 +78,32 @@ impl<'k> NlpProblem<'k> {
         max_partitioning: u64,
         fine_grained_only: bool,
     ) -> NlpProblem<'k> {
+        let bound = Rc::new(sym::BoundModel::build(kernel, analysis, device));
+        let compiled = Rc::new(bound.compile());
+        NlpProblem::with_model(
+            kernel,
+            analysis,
+            device,
+            max_partitioning,
+            fine_grained_only,
+            bound,
+            compiled,
+        )
+    }
+
+    /// Build a problem around an already-built (shared) bound model —
+    /// what `run_nlp_dse` uses so the ladder's 22 sub-space instances
+    /// reuse one symbolic build.
+    pub fn with_model(
+        kernel: &'k Kernel,
+        analysis: &'k Analysis,
+        device: &'k Device,
+        max_partitioning: u64,
+        fine_grained_only: bool,
+        bound: Rc<sym::BoundModel>,
+        compiled: Rc<sym::CompiledModel>,
+    ) -> NlpProblem<'k> {
+        let scratch = RefCell::new(compiled.scratch());
         NlpProblem {
             kernel,
             analysis,
@@ -78,6 +112,9 @@ impl<'k> NlpProblem<'k> {
             max_partitioning,
             fine_grained_only,
             coarse_banned: Default::default(),
+            bound,
+            compiled,
+            scratch,
         }
     }
 
@@ -87,8 +124,37 @@ impl<'k> NlpProblem<'k> {
     }
 
     /// Check every formulation constraint on a complete design; returns the
-    /// list of violations (empty = feasible point of the NLP).
+    /// list of violations (empty = feasible point of the NLP), produced by
+    /// the shared [`sym::Constraint`] objects.
     pub fn check(&self, d: &Design) -> Vec<Violation> {
+        let mut s = self.scratch.borrow_mut();
+        self.bound
+            .check(&self.compiled, &mut s, d, self.partition_cap())
+    }
+
+    /// The Section 5.4 objective: the latency lower bound of the design,
+    /// from the compiled symbolic tape.
+    pub fn objective(&self, d: &Design) -> f64 {
+        let mut s = self.scratch.borrow_mut();
+        self.compiled.evaluate(d, &mut s).total_cycles
+    }
+
+    /// Combined feasibility + objective with a single tape evaluation —
+    /// the solver's leaf hot path. Returns `None` when any constraint is
+    /// violated.
+    pub fn check_objective(&self, d: &Design) -> Option<f64> {
+        let mut s = self.scratch.borrow_mut();
+        self.bound
+            .check_objective(&self.compiled, &mut s, d, self.partition_cap())
+    }
+
+    // --- pre-IR reference implementations ---------------------------------
+    // Kept verbatim from before the symbolic IR: the parity property test
+    // (`tests/property_model_sym.rs`) asserts `check == check_legacy` and
+    // `objective == objective_reference` on every kernel.
+
+    /// The hand-written constraint walk the shared constraints replaced.
+    pub fn check_legacy(&self, d: &Design) -> Vec<Violation> {
         let mut out = Vec::new();
         let k = self.kernel;
 
@@ -117,7 +183,7 @@ impl<'k> NlpProblem<'k> {
             }
         }
 
-        // Eq 11 + Eq 12 via the model
+        // Eq 11 + Eq 12 via the recursive model
         let r = model::evaluate(k, self.analysis, self.device, d);
         if r.dsp > self.device.dsp_total as f64 {
             out.push(Violation::Dsp(r.dsp as u64, self.device.dsp_total));
@@ -131,44 +197,9 @@ impl<'k> NlpProblem<'k> {
         out
     }
 
-    /// The Section 5.4 objective: the latency lower bound of the design.
-    pub fn objective(&self, d: &Design) -> f64 {
+    /// The objective via the recursive reference model.
+    pub fn objective_reference(&self, d: &Design) -> f64 {
         model::evaluate(self.kernel, self.analysis, self.device, d).total_cycles
-    }
-
-    /// Combined feasibility + objective with a single model evaluation —
-    /// the solver's leaf hot path (§Perf: halves per-leaf cost vs
-    /// `check` + `objective`). Returns `None` when any constraint is
-    /// violated.
-    pub fn check_objective(&self, d: &Design) -> Option<f64> {
-        // cheap structural constraints first (Eqs 6/8/10/13)
-        for (i, p) in d.pragmas.iter().enumerate() {
-            if p.uf > 1 {
-                let tc = &self.analysis.tcs[i];
-                if !tc.is_constant() || tc.max % p.uf != 0 {
-                    return None;
-                }
-                let info = &self.analysis.deps.per_loop[i];
-                if let Some(dd) = info.min_distance {
-                    if dd > 1 && p.uf > dd {
-                        return None;
-                    }
-                }
-            }
-        }
-        let cap = self.partition_cap();
-        for arr in &self.kernel.arrays {
-            if d.partitioning(self.kernel, arr.id) > cap {
-                return None;
-            }
-        }
-        let r = model::evaluate(self.kernel, self.analysis, self.device, d);
-        if r.dsp > self.device.dsp_total as f64
-            || r.onchip_bytes > self.device.onchip_bytes as f64
-        {
-            return None;
-        }
-        Some(r.total_cycles)
     }
 }
 
@@ -230,5 +261,24 @@ mod tests {
         d.get_mut(LoopId(3)).uf = 220;
         let v = p.check(&d);
         assert!(v.iter().any(|v| matches!(v, Violation::Dsp(..))));
+    }
+
+    #[test]
+    fn shared_constraints_match_legacy_walk() {
+        // spot check of the parity invariant (the exhaustive version lives
+        // in tests/property_model_sym.rs)
+        let k = benchmarks::build("2mm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let mut p = problem(&k, &a, &dev);
+        p.max_partitioning = 16;
+        for uf in [1u64, 2, 7, 30, 180] {
+            let mut d = Design::empty(&k);
+            d.get_mut(LoopId(0)).uf = uf;
+            assert_eq!(p.check(&d), p.check_legacy(&d), "uf={uf}");
+            let o = p.objective(&d);
+            let r = p.objective_reference(&d);
+            assert!((o - r).abs() / r.max(1.0) < 1e-9, "uf={uf}: {o} vs {r}");
+        }
     }
 }

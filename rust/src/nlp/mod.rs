@@ -1,8 +1,9 @@
 //! The Non-Linear Program of Section 5 and its solver.
 //!
-//! * [`formulation`] — variables, constants, and the constraint set
-//!   (Eqs 1–15) as checkable predicates; the objective is the Section 5.4
-//!   function, computed by `model::evaluate`.
+//! * [`formulation`] — a thin view over the shared symbolic bound model
+//!   (`model::sym::BoundModel`): the constraint set (Eqs 1–15) and the
+//!   Section 5.4 objective are the model's first-class `Constraint` /
+//!   expression values, evaluated through the compiled tape.
 //! * [`solver`] — the specialized global optimizer standing in for AMPL +
 //!   BARON: per-pipeline-configuration enumeration over the divisor
 //!   lattice with branch-and-bound across loop nests, admissible
@@ -15,4 +16,6 @@ pub mod formulation;
 pub mod solver;
 
 pub use formulation::{NlpProblem, Violation};
-pub use solver::{solve, BatchEvaluator, RustFeatureEvaluator, SolveResult, SolverStats};
+pub use solver::{
+    solve, BatchEvaluator, RustFeatureEvaluator, SolveResult, SolverStats, SymbolicEvaluator,
+};

@@ -6,14 +6,23 @@
 //! per-dimension max) and the DSP budget (Eq 11, max over nests in the
 //! optimistic model ⇒ separable). The solver therefore:
 //!
-//! 1. enumerates per-nest candidate UF assignments over the divisor
+//! 1. prunes whole pipeline configurations by **interval propagation over
+//!    the symbolic bound model** (`BoundModel::lower_bound` on the
+//!    config's partial design) before any candidate is generated;
+//! 2. enumerates per-nest candidate UF assignments over the divisor
 //!    lattice (Eqs 1/6/8/9/15 enforced during generation);
-//! 2. scores candidates in bulk — through the XLA batch evaluator when one
-//!    is plugged in (`BatchEvaluator`), else the Rust feature evaluator;
-//! 3. branch-and-bounds across nests with an admissible bound (scores are
+//! 3. scores candidates in bulk — through the XLA batch evaluator when one
+//!    is plugged in (`BatchEvaluator`), else the Rust feature evaluator or
+//!    the compiled symbolic tape ([`SymbolicEvaluator`]);
+//! 4. branch-and-bounds across nests with an admissible bound (scores are
 //!    themselves lower bounds) and monotone partitioning pruning;
-//! 4. verifies leaves with the precise recursive model and the full
-//!    constraint set before accepting an incumbent.
+//! 5. verifies leaves with the shared constraint set + compiled objective
+//!    before accepting an incumbent.
+//!
+//! The accounting distinguishes relaxation-bound prunes
+//! (`pruned_bound` / `pruned_relaxation`) from constraint-infeasible
+//! rejections (`infeasible`), which earlier versions conflated (leaf
+//! rejections were simply invisible).
 //!
 //! Anytime behaviour: on budget exhaustion the best incumbent is returned
 //! with `optimal = false`, plus the proven lower bound — exactly what
@@ -22,6 +31,7 @@
 use super::formulation::NlpProblem;
 use crate::ir::LoopId;
 use crate::model;
+use crate::model::sym::PartialDesign;
 use crate::pragma::{space, Design, PipelineConfig};
 use std::time::Instant;
 
@@ -54,12 +64,35 @@ impl BatchEvaluator for RustFeatureEvaluator {
     }
 }
 
+/// Batch evaluator backed by the problem's compiled symbolic bound model:
+/// exact model scores (not the feature under-approximation) at flattened
+/// tape speed, with zero per-design allocation.
+pub struct SymbolicEvaluator;
+
+impl BatchEvaluator for SymbolicEvaluator {
+    fn eval_batch(&self, p: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)> {
+        p.compiled
+            .evaluate_batch(designs)
+            .into_iter()
+            .map(|r| (r.total_cycles, r.dsp))
+            .collect()
+    }
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct SolverStats {
     pub nodes: u64,
     pub leaves: u64,
+    /// Branch-and-bound nodes cut by the admissible candidate bound.
     pub pruned_bound: u64,
+    /// Whole pipeline configurations cut by symbolic interval relaxation
+    /// before candidate generation.
+    pub pruned_relaxation: u64,
     pub pruned_partition: u64,
+    /// Nodes rejected by the constraint check (infeasible leaves and
+    /// configurations with no legal candidate) — reported separately from
+    /// the relaxation prunes they used to be conflated with.
+    pub infeasible: u64,
     pub candidates_scored: u64,
     pub configs: u64,
 }
@@ -77,8 +110,23 @@ pub struct SolveResult {
 }
 
 impl SolveResult {
+    /// Best feasible design found, if any. `None` means every candidate
+    /// was cut — consult [`Self::pruned_by_relaxation`] vs
+    /// [`Self::infeasible_nodes`] to see whether bounds or constraints
+    /// emptied the search.
     pub fn best(&self) -> Option<&(Design, f64)> {
         self.designs.first()
+    }
+
+    /// Nodes cut by relaxation bounds (admissible b&b bound + symbolic
+    /// interval config prunes).
+    pub fn pruned_by_relaxation(&self) -> u64 {
+        self.stats.pruned_bound + self.stats.pruned_relaxation
+    }
+
+    /// Nodes rejected as constraint-infeasible.
+    pub fn infeasible_nodes(&self) -> u64 {
+        self.stats.infeasible
     }
 }
 
@@ -128,6 +176,22 @@ pub fn solve(
             break;
         }
 
+        // ---- symbolic interval relaxation over the whole config ------------
+        // With the pipeline fixed and the structural Eq 9/15 assignments
+        // applied, every UF left free is relaxed to its interval hull; if
+        // even that optimistic completion cannot enter the top-k (compared
+        // against the *k-th* incumbent, so runners-up are never lost), the
+        // config is pruned before any candidate is generated.
+        if best.len() >= topk {
+            let incumbent = best.last().map(|b| b.1).unwrap_or(f64::INFINITY);
+            let partial = config_partial(problem, &cfg);
+            let iv_lb = problem.bound.lower_bound(&partial);
+            if iv_lb > incumbent * (1.0 + 1e-9) {
+                stats.pruned_relaxation += 1;
+                continue;
+            }
+        }
+
         // ---- per-nest candidate generation (cached) ------------------------
         let mut per_nest: Vec<std::rc::Rc<Vec<Cand>>> = Vec::new();
         let mut infeasible_cfg = false;
@@ -156,6 +220,7 @@ pub fn solve(
             per_nest.push(cands);
         }
         if infeasible_cfg {
+            stats.infeasible += 1;
             continue;
         }
 
@@ -166,12 +231,14 @@ pub fn solve(
             .collect();
         let cfg_lb = combine(&min_lats, base.sum_combine) + base.comm;
         proven_lb = proven_lb.min(cfg_lb);
-        let incumbent = best.first().map(|b| b.1).unwrap_or(f64::INFINITY);
-        // strict comparison with tolerance: configs that *tie* the
-        // incumbent may still win the risk tie-break on the work-floor
-        // plateau (Theorem 4.4)
+        // compare against the *k-th* incumbent (not the #1): a config whose
+        // optimum lies between best[0] and best[k-1] still owes the caller
+        // a runner-up. Strict comparison with tolerance: configs that
+        // *tie* may still win the risk tie-break on the work-floor plateau
+        // (Theorem 4.4).
+        let incumbent = best.last().map(|b| b.1).unwrap_or(f64::INFINITY);
         if cfg_lb > incumbent * (1.0 + 1e-9) && best.len() >= topk {
-            continue; // config cannot improve
+            continue; // config cannot enter the top-k
         }
 
         // ---- branch and bound across nests --------------------------------
@@ -235,6 +302,50 @@ fn combine(lats: &[f64], sum: bool) -> f64 {
     } else {
         lats.iter().cloned().fold(0.0, f64::max)
     }
+}
+
+/// The partial design describing one pipeline configuration's sub-space:
+/// `pip` fixed per the config, the structurally forced UFs assigned
+/// (Eq 15 full unroll under the pipe, Eq 9 / Theorem 4.11 / Merlin bans
+/// above it — mirroring `nest_candidates`' menu rules), every other UF
+/// left free for interval relaxation, capped by the partitioning rung.
+fn config_partial(problem: &NlpProblem, cfg: &PipelineConfig) -> PartialDesign {
+    let k = problem.kernel;
+    let a = problem.analysis;
+    let mut p = PartialDesign::free(k.n_loops()).with_uf_cap(problem.partition_cap());
+    for i in 0..k.n_loops() {
+        let l = LoopId(i as u32);
+        p.assign_pipeline(l, cfg.pipelined.contains(&l));
+        p.assign_tile(l, 1); // the solver explores tile = 1 (caching is Merlin-auto)
+        let info = &a.deps.per_loop[i];
+        let tc = &a.tcs[i];
+        let pipelined_here = cfg.pipelined.contains(&l);
+        let under_pipe = cfg.pipelined.iter().any(|&pp| k.is_under(l, pp));
+        if pipelined_here {
+            continue; // UF free (space menu)
+        }
+        if under_pipe {
+            if info.reduction {
+                // tree-unroll factor stays free
+            } else if info.serializing {
+                p.assign_uf(l, 1);
+            } else if tc.is_constant() {
+                p.assign_uf(l, tc.max.max(1)); // Eq 15
+            } else {
+                p.assign_uf(l, 1);
+            }
+        } else {
+            // above the pipeline
+            if problem.fine_grained_only
+                || info.reduction
+                || info.serializing
+                || problem.coarse_banned.contains(&l.0)
+            {
+                p.assign_uf(l, 1);
+            }
+        }
+    }
+    p
 }
 
 /// Generate + score candidates for one nest under one pipeline config.
@@ -478,6 +589,7 @@ fn bb(
         // materialize the full design and verify precisely
         let d = leaf_design(problem, cfg, per_nest, chosen);
         let Some(obj) = problem.check_objective(&d) else {
+            stats.infeasible += 1;
             return;
         };
         // the Theorem 4.4 work floor creates objective plateaus; among
@@ -743,6 +855,91 @@ mod tests {
                 assert!(p.check(d).is_empty(), "{name}: infeasible result");
             }
         }
+    }
+
+    #[test]
+    fn symbolic_evaluator_matches_rust_evaluator_best() {
+        // exact-model scoring may reorder candidate fronts, but the leaf
+        // verification is the same compiled objective, so the optimum on a
+        // small exhaustive space must agree
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = NlpProblem::new(&k, &a, &dev, 64, false);
+        let r1 = solve(&p, 30.0, 1, &RustFeatureEvaluator);
+        let r2 = solve(&p, 30.0, 1, &SymbolicEvaluator);
+        let (b1, b2) = (r1.best().unwrap().1, r2.best().unwrap().1);
+        assert!(
+            (b1 - b2).abs() / b1.max(1.0) < 1e-9,
+            "rust {b1} vs symbolic {b2}"
+        );
+    }
+
+    #[test]
+    fn stats_separate_relaxation_prunes_from_infeasible() {
+        // a tight partition cap forces the b&b to cut something
+        let k = benchmarks::build("2mm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = NlpProblem::new(&k, &a, &dev, 8, false);
+        let r = solve(&p, 30.0, 2, &RustFeatureEvaluator);
+        assert!(r.best().is_some());
+        assert!(
+            r.pruned_by_relaxation() + r.stats.pruned_partition + r.stats.infeasible > 0,
+            "{:?}",
+            r.stats
+        );
+    }
+
+    #[test]
+    fn config_partial_bound_admissible_for_solver_designs() {
+        // guards the hand-mirrored Eq 9/15 rules in `config_partial`
+        // against drift from `space::materialize`/`nest_candidates`: for
+        // every design the real solver returns, the interval bound of its
+        // pipeline config's partial design must not exceed the design's
+        // own objective — if `config_partial` ever pins a pragma the
+        // candidate space actually leaves free (or vice versa), this
+        // inequality is the first thing to break
+        for (name, fine) in [
+            ("gemm", false),
+            ("gemm", true),
+            ("2mm", false),
+            ("seidel-2d", false),
+        ] {
+            let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            let dev = Device::u200();
+            let p = NlpProblem::new(&k, &a, &dev, 512, fine);
+            let r = solve(&p, 30.0, 4, &RustFeatureEvaluator);
+            for (d, obj) in &r.designs {
+                let cfg = PipelineConfig {
+                    pipelined: d.pipelined().collect(),
+                };
+                let partial = config_partial(&p, &cfg);
+                let lb = p.bound.lower_bound(&partial);
+                assert!(
+                    lb <= obj * (1.0 + 1e-9),
+                    "{name} fine={fine}: config bound {lb} beats returned design {obj} ({})",
+                    d.fingerprint()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_counter_fires_when_no_design_is_legal() {
+        // zero DSP budget: every candidate/leaf violates Eq 11, so the
+        // search must come back empty with the rejections accounted as
+        // infeasible — not silently dropped, not counted as bound prunes
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let mut dev = Device::u200();
+        dev.dsp_total = 0;
+        let p = NlpProblem::new(&k, &a, &dev, u64::MAX, false);
+        let r = solve(&p, 30.0, 2, &RustFeatureEvaluator);
+        assert!(r.best().is_none());
+        assert!(r.infeasible_nodes() > 0, "{:?}", r.stats);
+        assert_eq!(r.stats.pruned_relaxation, 0, "{:?}", r.stats);
     }
 
     #[test]

@@ -1,0 +1,306 @@
+//! Model/NLP parity and partial-bound soundness for the symbolic
+//! bound-model IR (`model::sym`), over **all 24 benchmark kernels + CNN**
+//! (PolyBench at Small, CNN at its single Medium size).
+//!
+//! Invariants:
+//! 1. **Eval parity** — `BoundModel::compile()` evaluation equals
+//!    `model::evaluate` on every complete design (resources exactly,
+//!    latency to 1e-9 relative).
+//! 2. **Violation parity** — the lowered shared constraints reproduce the
+//!    exact `Violation` sequence of the legacy hand-written
+//!    `NlpProblem::check` walk.
+//! 3. **Partial-bound admissibility** — `BoundModel::lower_bound` on a
+//!    (possibly empty) partial configuration never exceeds the model
+//!    value of any complete design in the enumerated subspace.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, Kernel, LoopId};
+use nlp_dse::model::{self, sym};
+use nlp_dse::nlp::NlpProblem;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::{space, Design, Space};
+use nlp_dse::util::proptest::Prop;
+use nlp_dse::util::rng::Rng;
+
+fn kernel_size(name: &str) -> Size {
+    if name == "cnn" {
+        Size::Medium // cnn has a single problem size (Sec 7.1)
+    } else {
+        Size::Small
+    }
+}
+
+/// Draw a random *legal* design: pipeline antichain, divisor UFs, divisor
+/// tiles (tiles exercise the Eq 12 select paths of the symbolic model).
+fn random_design(rng: &mut Rng, k: &Kernel, a: &Analysis, s: &Space) -> Design {
+    let cfg = s
+        .pipeline_configs
+        .get(rng.range(0, s.pipeline_configs.len() as u64) as usize)
+        .unwrap()
+        .clone();
+    let ufs: Vec<u64> = (0..k.n_loops())
+        .map(|i| {
+            let menu = s.ufs(LoopId(i as u32), a, 1024);
+            if menu.is_empty() {
+                1
+            } else {
+                menu[rng.range(0, menu.len() as u64) as usize]
+            }
+        })
+        .collect();
+    let tiles: Vec<u64> = (0..k.n_loops())
+        .map(|i| {
+            let tc = &a.tcs[i];
+            if tc.is_constant() && tc.max > 0 && rng.chance(0.3) {
+                let divs = nlp_dse::util::divisors(tc.max);
+                divs[rng.range(0, divs.len() as u64) as usize]
+            } else {
+                1
+            }
+        })
+        .collect();
+    space::materialize(
+        k,
+        a,
+        &cfg,
+        &|l| ufs[l.0 as usize],
+        &|l| tiles[l.0 as usize],
+    )
+}
+
+#[test]
+fn prop_compiled_evaluation_equals_recursive_model() {
+    let dev = Device::u200();
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, kernel_size(name), DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scratch = cm.scratch();
+        Prop::new(32).check(
+            &format!("sym-eval-parity/{name}"),
+            |rng| random_design(rng, &k, &a, &s),
+            |d| {
+                let sym_r = cm.evaluate(d, &mut scratch);
+                let ref_r = model::evaluate(&k, &a, &dev, d);
+                let rel = (sym_r.total_cycles - ref_r.total_cycles).abs()
+                    / ref_r.total_cycles.max(1.0);
+                if rel > 1e-9 {
+                    return Err(format!(
+                        "latency {} vs {} for {}",
+                        sym_r.total_cycles,
+                        ref_r.total_cycles,
+                        d.fingerprint()
+                    ));
+                }
+                if sym_r.dsp != ref_r.dsp {
+                    return Err(format!("dsp {} vs {}", sym_r.dsp, ref_r.dsp));
+                }
+                if sym_r.onchip_bytes != ref_r.onchip_bytes {
+                    return Err(format!(
+                        "onchip {} vs {}",
+                        sym_r.onchip_bytes, ref_r.onchip_bytes
+                    ));
+                }
+                if sym_r.max_partitioning != ref_r.max_partitioning {
+                    return Err(format!(
+                        "partitioning {} vs {}",
+                        sym_r.max_partitioning, ref_r.max_partitioning
+                    ));
+                }
+                if sym_r.feasible != ref_r.feasible {
+                    return Err(format!(
+                        "feasible {} vs {}",
+                        sym_r.feasible, ref_r.feasible
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_lowered_constraints_equal_legacy_violations() {
+    let dev = Device::u200();
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, kernel_size(name), DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        for cap in [8u64, 64, 512, u64::MAX] {
+            let p = NlpProblem::new(&k, &a, &dev, cap, false);
+            Prop::new(16).check(
+                &format!("violation-parity/{name}/cap{cap}"),
+                |rng| {
+                    let mut d = random_design(rng, &k, &a, &s);
+                    // also exercise illegal UFs (non-divisors, above the
+                    // dependence cap) so the Eq 6/8 constraints fire
+                    if rng.chance(0.4) {
+                        let li = rng.range(0, k.n_loops() as u64) as usize;
+                        d.pragmas[li].uf = rng.range(1, 2 * a.tcs[li].max.max(2));
+                    }
+                    d
+                },
+                |d| {
+                    let shared = p.check(d);
+                    let legacy = p.check_legacy(d);
+                    if shared != legacy {
+                        return Err(format!(
+                            "shared {shared:?} != legacy {legacy:?} for {}",
+                            d.fingerprint()
+                        ));
+                    }
+                    let o = p.objective(d);
+                    let r = p.objective_reference(d);
+                    if (o - r).abs() / r.max(1.0) > 1e-9 {
+                        return Err(format!("objective {o} vs reference {r}"));
+                    }
+                    Ok(())
+                },
+            );
+        }
+    }
+}
+
+/// Enumerate a bounded sub-space of valid designs the way the solver's
+/// brute-force comparison does: every pipeline config × an odometer over
+/// the capped UF menus.
+fn enumerate_designs(k: &Kernel, a: &Analysis, s: &Space, cap: u64, limit: usize) -> Vec<Design> {
+    let mut out = Vec::new();
+    let loops: Vec<LoopId> = (0..k.n_loops()).map(|i| LoopId(i as u32)).collect();
+    for cfg in &s.pipeline_configs {
+        let menus: Vec<Vec<u64>> = loops
+            .iter()
+            .map(|&l| {
+                let m = s.ufs(l, a, cap);
+                if m.is_empty() {
+                    vec![1] // non-unrollable loop: UF pinned at 1
+                } else {
+                    m
+                }
+            })
+            .collect();
+        let mut idx = vec![0usize; menus.len()];
+        'odometer: loop {
+            let d = space::materialize(
+                k,
+                a,
+                cfg,
+                &|l| menus[l.0 as usize][idx[l.0 as usize]],
+                &|_| 1,
+            );
+            out.push(d);
+            if out.len() >= limit {
+                return out;
+            }
+            let mut c = 0;
+            loop {
+                if c == menus.len() {
+                    break 'odometer; // this config exhausted; next one
+                }
+                idx[c] += 1;
+                if idx[c] < menus[c].len() {
+                    break;
+                }
+                idx[c] = 0;
+                c += 1;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn partial_bound_is_admissible_over_enumerated_subspace() {
+    let dev = Device::u200();
+    for name in ["gemm", "bicg", "atax"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        let free = sym::PartialDesign::free(k.n_loops());
+        let lb = bm.lower_bound(&free);
+        assert!(lb.is_finite() && lb > 0.0, "{name}: lb {lb}");
+        let designs = enumerate_designs(&k, &a, &s, 64, 20_000);
+        assert!(!designs.is_empty(), "{name}");
+        for d in &designs {
+            let r = model::evaluate(&k, &a, &dev, d);
+            assert!(
+                lb <= r.total_cycles * (1.0 + 1e-9),
+                "{name}: empty-partial bound {lb} beats design {} ({})",
+                r.total_cycles,
+                d.fingerprint()
+            );
+        }
+    }
+}
+
+#[test]
+fn config_partial_bound_is_admissible_per_pipeline_config() {
+    // fixing the pipeline antichain must still floor every design that
+    // uses exactly that antichain
+    let dev = Device::u200();
+    let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let s = Space::new(&k, &a);
+    let bm = sym::BoundModel::build(&k, &a, &dev);
+    for cfg in &s.pipeline_configs {
+        let mut partial = sym::PartialDesign::free(k.n_loops());
+        for i in 0..k.n_loops() {
+            let l = LoopId(i as u32);
+            partial.assign_pipeline(l, cfg.pipelined.contains(&l));
+            partial.assign_tile(l, 1);
+        }
+        let lb = bm.lower_bound(&partial);
+        let menus: Vec<Vec<u64>> = (0..k.n_loops())
+            .map(|i| s.ufs(LoopId(i as u32), &a, 64))
+            .collect();
+        let mut rng = Rng::new(nlp_dse::util::rng::hash64(&format!("{cfg:?}")));
+        for _ in 0..200 {
+            let d = space::materialize(
+                &k,
+                &a,
+                cfg,
+                &|l| {
+                    let m = &menus[l.0 as usize];
+                    m[(rng.next_u64() % m.len() as u64) as usize]
+                },
+                &|_| 1,
+            );
+            let r = model::evaluate(&k, &a, &dev, &d);
+            assert!(
+                lb <= r.total_cycles * (1.0 + 1e-9),
+                "cfg {:?}: bound {lb} beats {}",
+                cfg.pipelined,
+                r.total_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn interval_tightens_monotonically_with_assignments() {
+    // pinning pragmas can only shrink the objective interval
+    let dev = Device::u200();
+    let k = benchmarks::build("2mm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let bm = sym::BoundModel::build(&k, &a, &dev);
+    let free = sym::PartialDesign::free(k.n_loops());
+    let iv_free = bm.objective_interval(&free);
+    let mut partial = free.clone();
+    for i in 0..k.n_loops() {
+        partial.assign_pipeline(LoopId(i as u32), false);
+        partial.assign_tile(LoopId(i as u32), 1);
+        let iv = bm.objective_interval(&partial);
+        assert!(
+            iv.lo >= iv_free.lo - 1e-9 && iv.hi <= iv_free.hi + 1e-9,
+            "step {i}: [{}, {}] escapes [{}, {}]",
+            iv.lo,
+            iv.hi,
+            iv_free.lo,
+            iv_free.hi
+        );
+    }
+}
