@@ -16,4 +16,15 @@ cargo build --release --workspace --all-targets
 echo "==> cargo test -q"
 cargo test -q --workspace
 
+echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
+rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch; do
+  BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
+done
+if [ ! -f BENCH_solver.json ]; then
+  echo "ci: bench_nlp_solver did not emit BENCH_solver.json at the repo root" >&2
+  exit 1
+fi
+echo "    BENCH_solver.json emitted"
+
 echo "ci: all checks passed"

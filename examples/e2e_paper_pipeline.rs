@@ -26,7 +26,7 @@ use nlp_dse::hls::{Device, HlsOracle};
 use nlp_dse::pragma::Design;
 use nlp_dse::runtime::{default_artifact_dir, XlaEvaluator};
 use nlp_dse::util::table::{f2, i0, ratio, TextTable};
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
     // --- layer check: the AOT artifact must load and execute ----------------
@@ -36,7 +36,7 @@ fn main() {
                 "[e2e] XLA artifact loaded (batch={}) — python is NOT on the request path",
                 e.batch
             );
-            Rc::new(e)
+            Arc::new(e)
         }
         Err(e) => {
             eprintln!("[e2e] artifacts missing ({e:#}); run `make artifacts` first");
@@ -68,9 +68,9 @@ fn main() {
         let oracle = HlsOracle::new(device.clone());
         let orig = oracle.synth(k, a, &Design::empty(k)).gflops(a, &device);
 
-        let execs_before = eval.executions.get();
+        let execs_before = eval.executions();
         let n = explorer.run_engine("nlpdse").expect("nlpdse engine");
-        let execs = eval.executions.get() - execs_before;
+        let execs = eval.executions() - execs_before;
         assert!(execs > 0, "the XLA artifact must be exercised");
 
         let auto = explorer.run_engine("autodse").expect("autodse engine");

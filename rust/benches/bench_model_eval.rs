@@ -21,10 +21,18 @@ use nlp_dse::pragma::Design;
 use nlp_dse::util::bench::{black_box, Bench};
 
 fn main() {
+    // BENCH_SMOKE=1 (the ci.sh bench-smoke step): one Small kernel only
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let mut b = Bench::new("model_eval");
     let dev = Device::u200();
-    for name in ["gemm", "2mm", "gemver", "heat-3d", "cnn"] {
-        let k = benchmarks::build(name, Size::Medium, DType::F32).unwrap();
+    let kernels: &[&str] = if smoke {
+        &["gemm"]
+    } else {
+        &["gemm", "2mm", "gemver", "heat-3d", "cnn"]
+    };
+    let size = if smoke { Size::Small } else { Size::Medium };
+    for &name in kernels {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
         let a = Analysis::new(&k);
         let d = Design::empty(&k);
         b.bench(&format!("analysis/{name}"), || {

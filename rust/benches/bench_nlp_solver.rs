@@ -1,38 +1,175 @@
 //! NLP solver end-to-end benchmark: one solve per kernel × partitioning
-//! rung. These times stand in for the paper's BARON columns (Table 7) and
-//! dominate the serial phase of Algorithm 1.
+//! rung × worker count. These times stand in for the paper's BARON
+//! columns (Table 7) and dominate the serial phase of Algorithm 1.
+//!
+//! Beyond the per-case timing harness, every case reports **nodes/s and
+//! configs/s** (the search-orchestration throughput the parallel solver
+//! targets) and the run writes a repo-root `BENCH_solver.json`:
+//!
+//! ```text
+//! { "<kernel>-<size>/cap=<c>/jobs=<n>":
+//!     { "wall_s", "nodes", "nodes_per_s", "configs", "configs_per_s",
+//!       "threads", "speedup_vs_jobs1" }, ... }
+//! ```
+//!
+//! The scaling rows (3mm-M at 1/2/4/8 threads) are the EXPERIMENTS.md
+//! scaling table. `BENCH_SMOKE=1` shrinks the matrix to the smallest
+//! kernel and {1, 2} threads — the ci.sh bench-smoke step, so the bench
+//! (and its JSON emission) can't rot.
 
 use nlp_dse::benchmarks::{self, Size};
 use nlp_dse::hls::Device;
 use nlp_dse::ir::DType;
-use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator};
+use nlp_dse::nlp::{self, NlpProblem, RustFeatureEvaluator, SolveResult};
 use nlp_dse::poly::Analysis;
 use nlp_dse::util::bench::{black_box, Bench};
+use nlp_dse::util::json::Json;
+
+struct Case {
+    tag: String,
+    wall_s: f64,
+    nodes: u64,
+    configs: u64,
+    threads: usize,
+    speedup_vs_jobs1: Option<f64>,
+}
+
+fn record(cases: &mut Vec<Case>, tag: &str, r: &SolveResult, baseline_wall: Option<f64>) {
+    println!(
+        "    {tag}: {:.1} knodes/s, {:.1} configs/s ({} nodes, {} configs, {:.3}s)",
+        r.stats.nodes as f64 / r.solve_time_s.max(1e-9) / 1e3,
+        r.stats.configs as f64 / r.solve_time_s.max(1e-9),
+        r.stats.nodes,
+        r.stats.configs,
+        r.solve_time_s
+    );
+    cases.push(Case {
+        tag: tag.to_string(),
+        wall_s: r.solve_time_s,
+        nodes: r.stats.nodes,
+        configs: r.stats.configs,
+        threads: r.jobs,
+        speedup_vs_jobs1: baseline_wall.map(|b| b / r.solve_time_s.max(1e-9)),
+    });
+}
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let mut b = Bench::new("nlp_solver");
     let dev = Device::u200();
-    for (name, size) in [
-        ("gemm", Size::Medium),
-        ("2mm", Size::Medium),
-        ("2mm", Size::Large),
-        ("3mm", Size::Medium),
-        ("gemver", Size::Medium),
-        ("atax", Size::Large),
-    ] {
-        let k = benchmarks::build(name, size, DType::F32).unwrap();
+    let mut cases: Vec<Case> = Vec::new();
+
+    let matrix: Vec<(&str, Size)> = if smoke {
+        vec![("gemm", Size::Small)]
+    } else {
+        vec![
+            ("gemm", Size::Medium),
+            ("2mm", Size::Medium),
+            ("2mm", Size::Large),
+            ("3mm", Size::Medium),
+            ("gemver", Size::Medium),
+            ("atax", Size::Large),
+        ]
+    };
+    let caps: &[u64] = if smoke { &[u64::MAX] } else { &[u64::MAX, 512, 64] };
+
+    for (name, size) in &matrix {
+        let k = benchmarks::build(name, *size, DType::F32).unwrap();
         let a = Analysis::new(&k);
-        for cap in [u64::MAX, 512, 64] {
+        for &cap in caps {
             let p = NlpProblem::new(&k, &a, &dev, cap, false);
             let tag = if cap == u64::MAX {
                 "inf".to_string()
             } else {
                 cap.to_string()
             };
+            // capture the last timed iteration's result for the JSON row
+            // instead of paying one extra un-timed solve (the
+            // bench_tables pattern)
+            let mut last = None;
             b.bench(&format!("solve/{name}-{}/cap={tag}", size.tag()), || {
-                black_box(nlp::solve(&p, 30.0, 1, &RustFeatureEvaluator));
+                last = Some(black_box(nlp::solve(&p, 30.0, 1, &RustFeatureEvaluator)));
             });
+            let r = last.expect("bench ran at least once");
+            record(
+                &mut cases,
+                &format!("{name}-{}/cap={tag}/jobs=1", size.tag()),
+                &r,
+                None,
+            );
         }
     }
+
+    // ---- scaling: the parallel worker team on one Medium kernel --------
+    // (3mm-M, the EXPERIMENTS.md scaling table; parity with jobs=1 is
+    // property-tested, so this only measures wall clock)
+    let (scale_kernel, scale_size) = if smoke {
+        ("gemm", Size::Small)
+    } else {
+        ("3mm", Size::Medium)
+    };
+    let jobs_ladder: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let k = benchmarks::build(scale_kernel, scale_size, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let p = NlpProblem::new(&k, &a, &dev, u64::MAX, false);
+    // the matrix loop already benched and recorded the jobs=1 case for
+    // this kernel (same tag) — reuse its wall as the speedup denominator
+    // instead of paying another full solve
+    let baseline_tag = format!("{scale_kernel}-{}/cap=inf/jobs=1", scale_size.tag());
+    let baseline_wall: Option<f64> = cases
+        .iter()
+        .find(|c| c.tag == baseline_tag)
+        .map(|c| c.wall_s);
+    for &jobs in jobs_ladder {
+        if jobs == 1 {
+            continue; // already covered by the matrix loop
+        }
+        let mut last = None;
+        b.bench(
+            &format!("solve/{scale_kernel}-{}/jobs={jobs}", scale_size.tag()),
+            || {
+                last = Some(black_box(nlp::solve_jobs(
+                    &p,
+                    30.0,
+                    1,
+                    &RustFeatureEvaluator,
+                    jobs,
+                )));
+            },
+        );
+        let r = last.expect("bench ran at least once");
+        record(
+            &mut cases,
+            &format!(
+                "{scale_kernel}-{}/cap=inf/jobs={jobs}",
+                scale_size.tag()
+            ),
+            &r,
+            baseline_wall,
+        );
+    }
+
+    // ---- repo-root BENCH_solver.json ------------------------------------
+    // cargo runs bench binaries with cwd = the package dir (rust/), so
+    // anchor on the manifest to land the file at the workspace root
+    let mut out = Json::obj();
+    for c in &cases {
+        let mut row = Json::obj();
+        row.set("wall_s", c.wall_s)
+            .set("nodes", c.nodes)
+            .set("nodes_per_s", c.nodes as f64 / c.wall_s.max(1e-9))
+            .set("configs", c.configs)
+            .set("configs_per_s", c.configs as f64 / c.wall_s.max(1e-9))
+            .set("threads", c.threads);
+        if let Some(s) = c.speedup_vs_jobs1 {
+            row.set("speedup_vs_jobs1", s);
+        }
+        out.set(&c.tag, row);
+    }
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_solver.json");
+    std::fs::write(&path, out.to_string_pretty()).expect("write BENCH_solver.json");
+    println!("wrote {} ({} rows)", path.display(), cases.len());
     b.finish();
 }

@@ -10,13 +10,20 @@ use nlp_dse::util::bench::{black_box, Bench};
 use nlp_dse::util::divisors;
 
 fn main() {
+    // BENCH_SMOKE=1 (the ci.sh bench-smoke step): one Small kernel only
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let mut b = Bench::new("space_enum");
-    for (name, size) in [
-        ("2mm", Size::Medium),
-        ("3mm", Size::Large),
-        ("gemver", Size::Large),
-        ("cnn", Size::Medium),
-    ] {
+    let matrix: Vec<(&str, Size)> = if smoke {
+        vec![("2mm", Size::Small)]
+    } else {
+        vec![
+            ("2mm", Size::Medium),
+            ("3mm", Size::Large),
+            ("gemver", Size::Large),
+            ("cnn", Size::Medium),
+        ]
+    };
+    for (name, size) in matrix {
         let k = benchmarks::build(name, size, DType::F32).unwrap();
         let a = Analysis::new(&k);
         b.bench(&format!("space_new/{name}-{}", size.tag()), || {

@@ -3,6 +3,9 @@
 //! `dse_campaign` example / `table --scope paper` CLI).
 //!
 //! Covers: Tables 1, 2, 3, 5, 6, 7, 8, 9 and Figures 2–6.
+//! `BENCH_SMOKE=1` (the ci.sh bench-smoke step) shrinks both campaigns
+//! to single Small kernels so the bench exercises every code path in
+//! seconds.
 
 use nlp_dse::benchmarks::Size;
 use nlp_dse::coordinator::{engine_names, run_campaign, CampaignConfig};
@@ -10,16 +13,21 @@ use nlp_dse::report;
 use nlp_dse::util::bench::{black_box, Bench};
 
 fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
     let mut b = Bench::new("tables_and_figures");
 
     // shared quick campaigns (the expensive part, measured once each)
     let mut cfg = CampaignConfig::quick();
-    cfg.kernels = vec![
-        ("2mm".into(), Size::Medium),
-        ("gemm".into(), Size::Medium),
-        ("gramschmidt".into(), Size::Large),
-        ("bicg".into(), Size::Medium),
-    ];
+    cfg.kernels = if smoke {
+        vec![("gemm".into(), Size::Small), ("2mm".into(), Size::Small)]
+    } else {
+        vec![
+            ("2mm".into(), Size::Medium),
+            ("gemm".into(), Size::Medium),
+            ("gramschmidt".into(), Size::Large),
+            ("bicg".into(), Size::Medium),
+        ]
+    };
     cfg.engines = engine_names(&["nlpdse", "autodse"]);
     let mut auto_result = None;
     b.bench("campaign/quick-autodse(4 kernels)", || {
@@ -28,14 +36,18 @@ fn main() {
     let auto_result = auto_result.unwrap();
 
     let mut hcfg = CampaignConfig::quick();
-    hcfg.kernels = vec![
-        ("gemm".into(), Size::Small),
-        ("bicg".into(), Size::Small),
-        ("mvt".into(), Size::Small),
-    ];
+    hcfg.kernels = if smoke {
+        vec![("gemm".into(), Size::Small)]
+    } else {
+        vec![
+            ("gemm".into(), Size::Small),
+            ("bicg".into(), Size::Small),
+            ("mvt".into(), Size::Small),
+        ]
+    };
     hcfg.dtype = nlp_dse::ir::DType::F64;
     hcfg.engines = engine_names(&["nlpdse", "harp"]);
-    hcfg.tuning.harp.sweep_configs = 5_000;
+    hcfg.tuning.harp.sweep_configs = if smoke { 1_000 } else { 5_000 };
     let mut harp_result = None;
     b.bench("campaign/quick-harp(3 kernels)", || {
         harp_result = Some(black_box(run_campaign(&hcfg)));

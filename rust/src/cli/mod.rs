@@ -3,11 +3,11 @@
 //! ```text
 //! nlp-dse table --id 5 [--scope quick|paper] [--xla] [--tsv] [--out FILE]
 //! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
-//! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound]
-//! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym]
+//! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound] [--jobs N]
+//! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
 //! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
 //! nlp-dse space --kernel 2mm --size M
-//! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla]
+//! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla] [--jobs N]
 //! ```
 //!
 //! The `dse` command dispatches through the engine [`Registry`] — any
@@ -15,6 +15,12 @@
 //! `bound` command goes through the `Explorer` facade's symbolic bound
 //! model: it prints the achievable-latency lower bound of a (possibly
 //! partial) pragma configuration.
+//!
+//! `--jobs N` sets the NLP solver's worker-team size (default: every
+//! host core; `1` = the exact serial path). For searches that complete
+//! within budget, results are bit-identical for every value — the knob
+//! trades wall clock only (a timed-out anytime result may legitimately
+//! differ, as the solver docs spell out).
 
 pub mod args;
 
@@ -88,7 +94,9 @@ fn help() -> String {
            campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
            engines  (list the registered exploration engines)\n\
          \n\
-         common flags: --out FILE  --threads N  --dtype f32|f64\n",
+         common flags: --out FILE  --threads N  --jobs N  --dtype f32|f64\n\
+         (--jobs: NLP-solver worker threads; default = all cores, 1 = serial;\n\
+          completed searches are bit-identical for every value)\n",
         engines = Registry::builtin().names().join("|")
     )
 }
@@ -124,12 +132,18 @@ fn scope_campaign(args: &mut Args, engines: Vec<String>) -> Result<CampaignResul
     if let Some(t) = args.opt("threads") {
         cfg.threads = t.parse()?;
     }
+    // campaign constructors pin the solver to 1 job per pool thread (the
+    // pool already saturates the host); `--jobs` opts into nesting
+    if let Some(j) = parse_jobs(args)? {
+        cfg.tuning.dse.jobs = j;
+    }
     cfg.use_xla = args.flag("xla");
     eprintln!(
-        "[campaign] scope={scope} kernels={} engines={} threads={} xla={}",
+        "[campaign] scope={scope} kernels={} engines={} threads={} jobs={} xla={}",
         cfg.kernels.len(),
         cfg.engines.join(","),
         cfg.threads,
+        cfg.tuning.dse.jobs,
         cfg.use_xla
     );
     Ok(coordinator::run_campaign(&cfg))
@@ -218,6 +232,20 @@ fn parse_dtype(args: &mut Args) -> DType {
     }
 }
 
+/// `--jobs N` (≥ 1): NLP-solver worker threads. `None` = caller default.
+fn parse_jobs(args: &mut Args) -> Result<Option<usize>> {
+    match args.opt("jobs") {
+        None => Ok(None),
+        Some(s) => {
+            let n: usize = s.parse()?;
+            if n == 0 {
+                bail!("--jobs must be >= 1 (1 = serial path)");
+            }
+            Ok(Some(n))
+        }
+    }
+}
+
 fn build_kernel(args: &mut Args) -> Result<(crate::ir::Kernel, Analysis, Device)> {
     let name = args
         .opt("kernel")
@@ -257,9 +285,10 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
     let size = parse_size(args)?.unwrap_or(Size::Medium);
     let dtype = parse_dtype(args);
     // make_evaluator reports artifact load / fallback on stderr
-    let evaluator = Evaluator::custom(std::rc::Rc::from(make_evaluator(args)));
+    let evaluator = Evaluator::custom(std::sync::Arc::from(make_evaluator(args)));
     let dse_cfg = crate::dse::DseConfig {
         prune_bound: args.flag("prune-bound"),
+        jobs: parse_jobs(args)?.unwrap_or_else(nlp::default_jobs),
         ..Default::default()
     };
     let explorer = Explorer::kernel_dtype(&name, size, dtype)?
@@ -278,6 +307,10 @@ fn cmd_bound(args: &mut Args) -> Result<String> {
         .ok_or_else(|| anyhow!("--kernel required (or `bound <kernel>`)"))?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
     let dtype = parse_dtype(args);
+    // --jobs is accepted (and validated) on every solver-adjacent command
+    // for CLI uniformity, but the bound itself is a single interval
+    // evaluation — there is nothing to parallelize here
+    let _ = parse_jobs(args)?;
     let ex = Explorer::kernel_dtype(&name, size, dtype)?;
     let k = ex.kernel_ref();
 
@@ -356,21 +389,23 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
         .transpose()?
         .unwrap_or(u64::MAX);
     let fine = args.flag("fine");
+    let jobs = parse_jobs(args)?.unwrap_or_else(nlp::default_jobs);
     let (k, a, dev) = build_kernel(args)?;
     let eval = make_evaluator(args);
     let p = NlpProblem::new(&k, &a, &dev, cap, fine);
-    let r = nlp::solve(&p, 30.0, 3, eval.as_ref());
+    let r = nlp::solve_jobs(&p, 30.0, 3, eval.as_ref(), jobs);
     let mut out = format!(
-        "NLP solve on {} (cap={}, fine={fine}):\n  proven lower bound: {:.0} cycles\n  \
+        "NLP solve on {} (cap={}, fine={fine}, jobs={}):\n  proven lower bound: {:.0} cycles\n  \
          optimal: {}   solve time: {:.3}s   nodes: {}   scored: {}\n  \
          pruned by relaxation: {} (b&b {} + interval {})   infeasible: {}   \
-         partition-pruned: {}\n",
+         partition-pruned: {}   truncated menus: {}\n",
         k.name,
         if cap == u64::MAX {
             "inf".into()
         } else {
             cap.to_string()
         },
+        r.jobs,
         r.lower_bound,
         r.optimal,
         r.solve_time_s,
@@ -380,7 +415,8 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
         r.stats.pruned_bound,
         r.stats.pruned_relaxation,
         r.stats.infeasible,
-        r.stats.pruned_partition
+        r.stats.pruned_partition,
+        r.stats.truncated_menus
     );
     for (i, (d, obj)) in r.designs.iter().enumerate() {
         out.push_str(&format!(

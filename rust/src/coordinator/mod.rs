@@ -67,7 +67,7 @@ impl CampaignConfig {
             engines: engine_names(&["nlpdse", "autodse"]),
             threads: num_threads(),
             use_xla: false,
-            tuning: EngineTuning::default(),
+            tuning: serial_solver_tuning(EngineTuning::default()),
         }
     }
 
@@ -87,13 +87,13 @@ impl CampaignConfig {
             engines: engine_names(&["nlpdse", "harp"]),
             threads: num_threads(),
             use_xla: false,
-            tuning: EngineTuning {
+            tuning: serial_solver_tuning(EngineTuning {
                 dse: DseConfig {
                     ladder: DseConfig::harp_ladder(),
                     ..DseConfig::default()
                 },
                 ..EngineTuning::default()
-            },
+            }),
         }
     }
 
@@ -109,15 +109,25 @@ impl CampaignConfig {
             engines: engine_names(&["nlpdse", "autodse", "harp"]),
             threads: num_threads(),
             use_xla: false,
-            tuning: EngineTuning {
+            tuning: serial_solver_tuning(EngineTuning {
                 harp: crate::baselines::HarpConfig {
                     sweep_configs: 5_000,
                     ..crate::baselines::HarpConfig::default()
                 },
                 ..EngineTuning::default()
-            },
+            }),
         }
     }
+}
+
+/// Campaign default: the pool's kernel×engine jobs already saturate the
+/// host, so each job's NLP solver runs serially (`jobs = 1`) instead of
+/// oversubscribing cores² — the CLI's `--jobs` opts back into nesting.
+/// Results are identical either way (the solver's deterministic
+/// reduction); only the scheduling changes.
+fn serial_solver_tuning(mut t: EngineTuning) -> EngineTuning {
+    t.dse.jobs = 1;
+    t
 }
 
 pub fn num_threads() -> usize {

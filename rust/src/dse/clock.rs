@@ -36,11 +36,25 @@ impl SimClock {
         done
     }
 
-    /// A serial phase (e.g. an NLP solve): all workers wait for the current
-    /// makespan, then the phase runs alone.
+    /// A serial phase (e.g. a single-threaded NLP solve): all workers wait
+    /// for the current makespan, then the phase runs alone on one core.
     pub fn serial(&mut self, minutes: f64) {
         let m = self.makespan();
         self.serial_base = m + minutes.max(0.0);
+    }
+
+    /// An NLP-solve phase that blocks synthesis but runs on several cores:
+    /// `cpu_minutes` of *measured busy time* (summed over the solver's
+    /// workers — idle queue-waiting threads bill nothing), re-divided
+    /// across the `sim_jobs` cores the simulated machine gives the
+    /// solver. A serial solve (busy ≈ wall) on the simulated 8-way box is
+    /// charged `minutes / 8`; a solve that already used the simulated
+    /// core count is charged ≈ its wall time. Keeps the simulated
+    /// DSE-minutes column honest instead of assuming the solver owns one
+    /// core (the old `serial` accounting) or extrapolating wall × jobs
+    /// (which would let idle workers inflate the bill).
+    pub fn solve_phase(&mut self, cpu_minutes: f64, sim_jobs: usize) {
+        self.serial(cpu_minutes.max(0.0) / sim_jobs.max(1) as f64);
     }
 
     /// Current makespan in minutes.
@@ -75,6 +89,23 @@ mod tests {
         assert_eq!(c.makespan(), 13.0);
         let done = c.submit(1.0);
         assert_eq!(done, 14.0);
+    }
+
+    #[test]
+    fn solve_phase_divides_busy_time_across_sim_cores() {
+        // 10 busy minutes on an 8-way simulated solver → 1.25 min
+        let mut c = SimClock::new(8);
+        c.solve_phase(10.0, 8);
+        assert!((c.makespan() - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solve_phase_with_one_sim_core_matches_serial() {
+        let mut s = SimClock::new(8);
+        s.serial(10.0);
+        let mut p = SimClock::new(8);
+        p.solve_phase(10.0, 1);
+        assert_eq!(s.makespan(), p.makespan());
     }
 
     #[test]

@@ -48,3 +48,18 @@ pub use compile::{CompiledModel, CompiledResult, EvalScratch};
 pub use constraint::{Constraint, Violation};
 pub use expr::{ExprId, Interval, Pool, SymNode, VarBox};
 pub use partial::PartialDesign;
+
+// Thread-safety contract: one model build serves the parallel solver's
+// whole worker team behind `Arc`, so every shared model type must stay
+// `Send + Sync` (plain data, no interior mutability). Compile-time
+// enforced here so a future `Cell`/`Rc` field fails the build instead of
+// un-Sync-ing `NlpProblem` at a distance.
+#[allow(dead_code)]
+fn _assert_models_are_thread_safe() {
+    fn ok<T: Send + Sync>() {}
+    ok::<BoundModel>();
+    ok::<CompiledModel>();
+    ok::<EvalScratch>();
+    ok::<PartialDesign>();
+    ok::<Constraint>();
+}

@@ -40,14 +40,19 @@ use crate::ir::Kernel;
 use crate::model::{self, sym};
 use crate::poly::Analysis;
 use crate::pragma::{Design, Space};
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 pub use crate::model::sym::Violation;
 
 /// One NLP instance: a kernel + the sub-space restrictions Algorithm 1
 /// sweeps (max array partitioning, parallelism mode), viewing the shared
 /// [`sym::BoundModel`] for its objective and constraints.
+///
+/// `Send + Sync`: the parallel solver shares one `&NlpProblem` across its
+/// whole worker team, so the model handles are `Arc` (one symbolic build
+/// serves every thread) and the convenience scratch sits behind a mutex —
+/// the solver's hot paths bypass it entirely with the `*_in` methods and
+/// per-worker [`sym::EvalScratch`] buffers (see [`NlpProblem::scratch`]).
 pub struct NlpProblem<'k> {
     pub kernel: &'k Kernel,
     pub analysis: &'k Analysis,
@@ -61,13 +66,16 @@ pub struct NlpProblem<'k> {
     /// synthesis of this DSE run (Section 7.5: the DSE detects pragmas not
     /// applied and restricts the subspace accordingly).
     pub coarse_banned: std::collections::BTreeSet<u32>,
-    /// The shared symbolic bound model (objective + Eqs 1–15). `Rc`: the
+    /// The shared symbolic bound model (objective + Eqs 1–15). `Arc`: the
     /// model depends only on (kernel, device), so callers that sweep
-    /// sub-space restrictions (the DSE ladder) share one build.
-    pub bound: Rc<sym::BoundModel>,
+    /// sub-space restrictions (the DSE ladder) — and the solver's worker
+    /// threads — share one build.
+    pub bound: Arc<sym::BoundModel>,
     /// Its flattened batch evaluator (the leaf/scoring hot path).
-    pub compiled: Rc<sym::CompiledModel>,
-    scratch: RefCell<sym::EvalScratch>,
+    pub compiled: Arc<sym::CompiledModel>,
+    /// Convenience-path scratch (the `check`/`objective` methods).
+    /// Uncontended in serial use; worker threads use their own scratch.
+    scratch: Mutex<sym::EvalScratch>,
 }
 
 impl<'k> NlpProblem<'k> {
@@ -78,8 +86,8 @@ impl<'k> NlpProblem<'k> {
         max_partitioning: u64,
         fine_grained_only: bool,
     ) -> NlpProblem<'k> {
-        let bound = Rc::new(sym::BoundModel::build(kernel, analysis, device));
-        let compiled = Rc::new(bound.compile());
+        let bound = Arc::new(sym::BoundModel::build(kernel, analysis, device));
+        let compiled = Arc::new(bound.compile());
         NlpProblem::with_model(
             kernel,
             analysis,
@@ -100,10 +108,10 @@ impl<'k> NlpProblem<'k> {
         device: &'k Device,
         max_partitioning: u64,
         fine_grained_only: bool,
-        bound: Rc<sym::BoundModel>,
-        compiled: Rc<sym::CompiledModel>,
+        bound: Arc<sym::BoundModel>,
+        compiled: Arc<sym::CompiledModel>,
     ) -> NlpProblem<'k> {
-        let scratch = RefCell::new(compiled.scratch());
+        let scratch = Mutex::new(compiled.scratch());
         NlpProblem {
             kernel,
             analysis,
@@ -123,11 +131,18 @@ impl<'k> NlpProblem<'k> {
         self.device.max_array_partition.min(self.max_partitioning)
     }
 
+    /// A fresh tape scratch sized for this problem's compiled model —
+    /// one per solver worker, so the hot paths below never touch the
+    /// shared convenience mutex.
+    pub fn scratch(&self) -> sym::EvalScratch {
+        self.compiled.scratch()
+    }
+
     /// Check every formulation constraint on a complete design; returns the
     /// list of violations (empty = feasible point of the NLP), produced by
     /// the shared [`sym::Constraint`] objects.
     pub fn check(&self, d: &Design) -> Vec<Violation> {
-        let mut s = self.scratch.borrow_mut();
+        let mut s = self.scratch.lock().unwrap();
         self.bound
             .check(&self.compiled, &mut s, d, self.partition_cap())
     }
@@ -135,17 +150,31 @@ impl<'k> NlpProblem<'k> {
     /// The Section 5.4 objective: the latency lower bound of the design,
     /// from the compiled symbolic tape.
     pub fn objective(&self, d: &Design) -> f64 {
-        let mut s = self.scratch.borrow_mut();
+        let mut s = self.scratch.lock().unwrap();
         self.compiled.evaluate(d, &mut s).total_cycles
     }
 
+    /// [`Self::objective`] into a caller-owned scratch (no lock).
+    pub fn objective_in(&self, s: &mut sym::EvalScratch, d: &Design) -> f64 {
+        self.compiled.evaluate(d, s).total_cycles
+    }
+
     /// Combined feasibility + objective with a single tape evaluation —
-    /// the solver's leaf hot path. Returns `None` when any constraint is
-    /// violated.
+    /// the solver's leaf hot path (convenience form; workers use
+    /// [`Self::check_objective_in`]). Returns `None` when any constraint
+    /// is violated.
     pub fn check_objective(&self, d: &Design) -> Option<f64> {
-        let mut s = self.scratch.borrow_mut();
+        let mut s = self.scratch.lock().unwrap();
         self.bound
             .check_objective(&self.compiled, &mut s, d, self.partition_cap())
+    }
+
+    /// [`Self::check_objective`] into a caller-owned scratch — the
+    /// per-worker leaf hot path of the parallel solver (no lock, no
+    /// allocation once the scratch is warm).
+    pub fn check_objective_in(&self, s: &mut sym::EvalScratch, d: &Design) -> Option<f64> {
+        self.bound
+            .check_objective(&self.compiled, s, d, self.partition_cap())
     }
 
     // --- pre-IR reference implementations ---------------------------------
@@ -211,6 +240,26 @@ mod tests {
 
     fn problem<'a>(k: &'a Kernel, a: &'a Analysis, dev: &'a Device) -> NlpProblem<'a> {
         NlpProblem::new(k, a, dev, u64::MAX, false)
+    }
+
+    #[test]
+    fn problem_is_send_and_sync() {
+        // the parallel solver shares `&NlpProblem` across its worker team
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<NlpProblem<'static>>();
+    }
+
+    #[test]
+    fn explicit_scratch_paths_match_convenience_paths() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = problem(&k, &a, &dev);
+        let mut s = p.scratch();
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(3)).uf = 10;
+        assert_eq!(p.objective(&d).to_bits(), p.objective_in(&mut s, &d).to_bits());
+        assert_eq!(p.check_objective(&d), p.check_objective_in(&mut s, &d));
     }
 
     #[test]

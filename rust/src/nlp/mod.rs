@@ -8,14 +8,17 @@
 //!   BARON: per-pipeline-configuration enumeration over the divisor
 //!   lattice with branch-and-bound across loop nests, admissible
 //!   latency bounds, monotone constraint propagation (partitioning/DSP),
-//!   and a deterministic time budget. On timeout it returns the best
-//!   incumbent plus a valid lower bound, exactly as BARON's anytime
-//!   behaviour (Table 7).
+//!   and a deterministic time budget. Pipeline configurations are drained
+//!   from a shared queue by a scoped worker team ([`solve_jobs`]), with a
+//!   deterministic reduction making `jobs = N` bit-identical to
+//!   `jobs = 1`. On timeout it returns the best incumbent plus a valid
+//!   lower bound, exactly as BARON's anytime behaviour (Table 7).
 
 pub mod formulation;
 pub mod solver;
 
 pub use formulation::{NlpProblem, Violation};
 pub use solver::{
-    solve, BatchEvaluator, RustFeatureEvaluator, SolveResult, SolverStats, SymbolicEvaluator,
+    default_jobs, solve, solve_jobs, BatchEvaluator, RustFeatureEvaluator, SolveResult,
+    SolverStats, SymbolicEvaluator,
 };

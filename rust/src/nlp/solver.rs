@@ -1,4 +1,5 @@
-//! The specialized global NLP solver (the repo's stand-in for BARON).
+//! The specialized global NLP solver (the repo's stand-in for BARON) —
+//! multi-threaded end to end.
 //!
 //! Structure exploited: for a fixed pipeline configuration the objective
 //! decomposes per loop nest (sum- or max-combined per dependences), the
@@ -10,7 +11,10 @@
 //!    the symbolic bound model** (`BoundModel::lower_bound` on the
 //!    config's partial design) before any candidate is generated;
 //! 2. enumerates per-nest candidate UF assignments over the divisor
-//!    lattice (Eqs 1/6/8/9/15 enforced during generation);
+//!    lattice with an **odometer** (Eqs 1/6/8/9/15 enforced during
+//!    generation; the runaway-product guard truncates after a fixed
+//!    number of complete assignments and records it in
+//!    [`SolverStats::truncated_menus`]);
 //! 3. scores candidates in bulk — through the XLA batch evaluator when one
 //!    is plugged in (`BatchEvaluator`), else the Rust feature evaluator or
 //!    the compiled symbolic tape ([`SymbolicEvaluator`]);
@@ -19,26 +23,97 @@
 //! 5. verifies leaves with the shared constraint set + compiled objective
 //!    before accepting an incumbent.
 //!
-//! The accounting distinguishes relaxation-bound prunes
-//! (`pruned_bound` / `pruned_relaxation`) from constraint-infeasible
-//! rejections (`infeasible`), which earlier versions conflated (leaf
-//! rejections were simply invisible).
+//! ## Parallel work sharing ([`solve_jobs`])
 //!
-//! Anytime behaviour: on budget exhaustion the best incumbent is returned
-//! with `optimal = false`, plus the proven lower bound — exactly what
-//! Algorithm 1 consumes for pruning.
+//! Pipeline configurations are **embarrassingly parallel**: a scoped
+//! worker team drains them from a shared atomic queue. Per-nest candidate
+//! menus are shared across workers through a sharded concurrent map (the
+//! menu depends only on `(nest root, local pipeline choice)`), and a
+//! lock-free shared incumbent — the k-th best objective as atomic f64
+//! bits — lets every worker skip whole configurations that provably
+//! cannot enter the final top-k.
+//!
+//! ## Determinism
+//!
+//! `solve_jobs(.., jobs = N)` is **bit-identical** to
+//! `solve_jobs(.., jobs = 1)` for every `N` (property-tested over all 24
+//! kernels + CNN in `tests/property_solver_parallel.rs`). The
+//! construction:
+//!
+//! * the branch-and-bound inside one configuration is a *pure function*
+//!   of that configuration — it prunes only against its own local
+//!   incumbents and a fixed per-config tie budget, never against shared
+//!   state. This deliberately forgoes the old solver's cross-config
+//!   node-level incumbent pruning (the price of parity); the cost is
+//!   bounded because candidates are sorted ascending — the first leaf of
+//!   a config is already near its optimum, so local pruning converges
+//!   immediately — and hopeless configs are skipped wholesale by the
+//!   guard before any node is expanded, leaving at most `LEAF_BUDGET`
+//!   extra tie leaves per surviving config;
+//! * the shared incumbent guard is consulted at **configuration
+//!   granularity** only, and only for cuts that are *sound with
+//!   tolerance*: a configuration is skipped iff its lower bound is
+//!   strictly worse (beyond 1e-9 relative) than k already-found designs,
+//!   which proves none of its designs can rank in the final top-k —
+//!   so the skip can never change the reduction below, it only saves
+//!   work. (Consulting the guard *inside* the b&b would be sound for the
+//!   result set too, but would make the per-config tie-budget countdown
+//!   depend on thread timing — that is exactly the nondeterminism the
+//!   config-granularity rule avoids.)
+//! * the final reduction is a **deterministic merge**: all per-config
+//!   top-k lists are pooled, ranked by the total order
+//!   `(objective, realization risk, pragma vector)`, deduplicated, and
+//!   truncated — invariant under any work interleaving;
+//! * the proven lower bound is the minimum over *all* configurations of
+//!   the interval-relaxation bound (computed even for skipped configs),
+//!   capped by the best objective — again interleaving-invariant.
+//!
+//! `SolverStats` are merged commutatively (field-wise sums), so totals
+//! are reproducible for a fixed explored/skipped partition; with
+//! `jobs > 1` the partition itself may shift with guard timing, so node
+//! and prune *counts* (unlike results) are not guaranteed identical to
+//! the serial run.
+//!
+//! Anytime behaviour: on budget exhaustion (wall clock, or a config
+//! blowing the per-config node cap) the best incumbent is returned with
+//! `optimal = false`, plus the proven lower bound — exactly what
+//! Algorithm 1 consumes for pruning. These anytime escapes are the one
+//! documented exception to the bit-parity guarantee: a truncated search
+//! is honest about it (`optimal = false`), and only then may results —
+//! or, for a node-capped config that another interleaving guard-skips,
+//! just the flag (pessimistically false, identical designs) — depend on
+//! interleaving.
 
 use super::formulation::NlpProblem;
 use crate::ir::LoopId;
 use crate::model;
-use crate::model::sym::PartialDesign;
+use crate::model::sym::{EvalScratch, PartialDesign};
 use crate::pragma::{space, Design, PipelineConfig};
+use std::collections::hash_map::{DefaultHasher, Entry};
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Relative tolerance for objective ties (the Theorem 4.4 work-floor
+/// plateau).
+const EPS: f64 = 1e-9;
+/// Per-config tie-exploration budget (leaves). Fixed per configuration so
+/// the within-config search is a pure function of the configuration.
+const LEAF_BUDGET: i64 = 1_500;
+/// Per-config node budget (BARON-style anytime cap).
+const NODE_CAP: u64 = 1_500_000;
+/// Runaway-product guard: complete assignments enumerated per nest menu.
+const MAX_MENU_ASSIGNMENTS: usize = 200_000;
+/// Sharded concurrent nest-menu cache width (power of two).
+const CACHE_SHARDS: usize = 16;
 
 /// Bulk lower-bound scoring interface. `runtime::XlaEvaluator` implements
 /// this over the AOT artifact; [`RustFeatureEvaluator`] is the in-process
-/// fallback with identical semantics.
-pub trait BatchEvaluator {
+/// fallback with identical semantics. `Send + Sync` so one evaluator can
+/// serve the whole scoped worker team.
+pub trait BatchEvaluator: Send + Sync {
     /// Returns `(latency_lb, dsp)` per design.
     fn eval_batch(&self, problem: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)>;
 }
@@ -79,6 +154,17 @@ impl BatchEvaluator for SymbolicEvaluator {
     }
 }
 
+/// Default worker count for [`solve_jobs`]: every core the host exposes.
+/// Deliberately distinct from `coordinator::num_threads` (which caps the
+/// campaign pool at 16 and falls back to 4): a single solve should take
+/// the whole machine, and the serial fallback is the exact `jobs = 1`
+/// path.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 #[derive(Clone, Debug, Default)]
 pub struct SolverStats {
     pub nodes: u64,
@@ -86,7 +172,8 @@ pub struct SolverStats {
     /// Branch-and-bound nodes cut by the admissible candidate bound.
     pub pruned_bound: u64,
     /// Whole pipeline configurations cut by symbolic interval relaxation
-    /// before candidate generation.
+    /// (or the per-nest-minima config bound) against the shared incumbent
+    /// guard, before any branch-and-bound.
     pub pruned_relaxation: u64,
     pub pruned_partition: u64,
     /// Nodes rejected by the constraint check (infeasible leaves and
@@ -95,17 +182,47 @@ pub struct SolverStats {
     pub infeasible: u64,
     pub candidates_scored: u64,
     pub configs: u64,
+    /// Nest menus truncated by the runaway-product guard: the odometer
+    /// stopped after [`MAX_MENU_ASSIGNMENTS`] complete assignments, so the
+    /// menu is a deterministic lexicographic prefix of the full product
+    /// (visible here instead of silently asymmetric, as the old
+    /// mid-extension break was).
+    pub truncated_menus: u64,
+}
+
+impl SolverStats {
+    /// Commutative merge (field-wise sums) — the per-worker stats
+    /// reduction.
+    pub fn merge(&mut self, o: &SolverStats) {
+        self.nodes += o.nodes;
+        self.leaves += o.leaves;
+        self.pruned_bound += o.pruned_bound;
+        self.pruned_relaxation += o.pruned_relaxation;
+        self.pruned_partition += o.pruned_partition;
+        self.infeasible += o.infeasible;
+        self.candidates_scored += o.candidates_scored;
+        self.configs += o.configs;
+        self.truncated_menus += o.truncated_menus;
+    }
 }
 
 #[derive(Clone, Debug)]
 pub struct SolveResult {
-    /// Best feasible designs found, ascending objective (≤ `topk`).
+    /// Best feasible designs found, ascending `(objective, risk, pragmas)`
+    /// (≤ `topk`).
     pub designs: Vec<(Design, f64)>,
     /// Proven lower bound on the optimum over the sub-space.
     pub lower_bound: f64,
     /// Whether the search completed within budget.
     pub optimal: bool,
     pub solve_time_s: f64,
+    /// Summed per-worker busy time (seconds actually spent processing
+    /// configurations — excludes queue-idle threads). Equals
+    /// `solve_time_s` for `jobs = 1`; the simulated DSE clock charges
+    /// this, not wall × jobs, so idle workers don't inflate the bill.
+    pub cpu_time_s: f64,
+    /// Worker threads the solve ran with (1 = serial path).
+    pub jobs: usize,
     pub stats: SolverStats,
 }
 
@@ -142,165 +259,418 @@ struct Cand {
     part: Vec<((u32, usize), u64)>,
 }
 
-/// Solve one NLP instance.
+/// One accepted leaf: design + exact objective + realization risk.
+#[derive(Clone, Debug)]
+struct Incumbent {
+    design: Design,
+    obj: f64,
+    risk: f64,
+}
+
+/// The deterministic total order of the final reduction: objective, then
+/// realization risk, then the pragma vector itself (`Design: Ord`) so two
+/// distinct designs never compare equal.
+///
+/// Objectives compare *exactly* (the old 1e-9 relative-tolerance
+/// comparator was non-transitive and cannot drive a deterministic
+/// merge). The Theorem 4.4 plateau still resolves by risk: designs on
+/// the work floor share the design-independent floor term bit-for-bit,
+/// so true plateau ties are exact f64 ties and fall through to the risk
+/// key; only sub-ulp *near*-ties now order by raw objective instead.
+fn rank_cmp(a: &Incumbent, b: &Incumbent) -> std::cmp::Ordering {
+    a.obj
+        .partial_cmp(&b.obj)
+        .unwrap()
+        .then_with(|| a.risk.partial_cmp(&b.risk).unwrap())
+        .then_with(|| a.design.cmp(&b.design))
+}
+
+/// Deterministic 64-bit design key (leaf dedup without structural scans).
+/// `DefaultHasher::new()` is documented to hash identically across
+/// instances and processes, so the key — and any collision — is the same
+/// on every run and thread.
+fn design_key(d: &Design) -> u64 {
+    let mut h = DefaultHasher::new();
+    d.hash(&mut h);
+    h.finish()
+}
+
+/// Monotone-min shared f64 stored as bits; lock-free CAS loop. Carries
+/// the cross-worker incumbent guard and the lower-bound reduction.
+struct AtomicF64Min(AtomicU64);
+
+impl AtomicF64Min {
+    fn new(v: f64) -> AtomicF64Min {
+        AtomicF64Min(AtomicU64::new(v.to_bits()))
+    }
+    fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+    fn fetch_min(&self, v: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        while v < f64::from_bits(cur) {
+            match self.0.compare_exchange_weak(
+                cur,
+                v.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// One cached nest menu plus its generation accounting (charged to the
+/// worker that built it, exactly once).
+struct CandSet {
+    cands: Vec<Cand>,
+    scored: u64,
+    truncated: bool,
+}
+
+/// Menu-cache key: `(nest root, sorted pipeline choice local to the
+/// nest)` — everything the menu depends on besides the fixed problem.
+type CandKey = (u32, Vec<u32>);
+type CandShard = Mutex<HashMap<CandKey, Arc<CandSet>>>;
+
+/// Sharded concurrent map `(nest root, local pipeline choice) → menu`, so
+/// distinct configurations (and distinct workers) share per-nest menus
+/// without a global lock.
+struct CandCache {
+    shards: Vec<CandShard>,
+}
+
+impl CandCache {
+    fn new() -> CandCache {
+        CandCache {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
+    fn shard(&self, key: &CandKey) -> &CandShard {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) & (CACHE_SHARDS - 1)]
+    }
+
+    /// Returns the cached menu, building it outside the shard lock on a
+    /// miss. The bool is true iff this call inserted (the builder charges
+    /// generation stats exactly once; a lost race discards the duplicate).
+    fn get_or_build(
+        &self,
+        key: CandKey,
+        build: impl FnOnce() -> CandSet,
+    ) -> (Arc<CandSet>, bool) {
+        if let Some(v) = self.shard(&key).lock().unwrap().get(&key) {
+            return (v.clone(), false);
+        }
+        let built = Arc::new(build());
+        let shard = self.shard(&key);
+        let mut g = shard.lock().unwrap();
+        match g.entry(key) {
+            Entry::Occupied(e) => (e.get().clone(), false),
+            Entry::Vacant(e) => {
+                e.insert(built.clone());
+                (built, true)
+            }
+        }
+    }
+}
+
+/// Everything the worker team shares. `&Shared` crosses threads, so every
+/// field is `Sync` (atomics, mutexes, shared references into the
+/// `Send + Sync` problem/model).
+struct Shared<'a> {
+    problem: &'a NlpProblem<'a>,
+    configs: &'a [PipelineConfig],
+    evaluator: &'a dyn BatchEvaluator,
+    nests: Vec<LoopId>,
+    base: model::NestBreakdown,
+    cap: u64,
+    topk: usize,
+    t0: Instant,
+    timeout_s: f64,
+    /// Next unclaimed pipeline-configuration index (the work queue).
+    next_cfg: AtomicUsize,
+    /// k-th best objective over the merged global top-k (+inf until full).
+    guard: AtomicF64Min,
+    /// Min interval-relaxation bound over every processed configuration.
+    iv_lb_min: AtomicF64Min,
+    optimal: AtomicBool,
+    /// Merged global top-k, kept in `rank_cmp` order, deduped, ≤ topk.
+    best: Mutex<Vec<Incumbent>>,
+    cache: CandCache,
+}
+
+/// Per-worker reusable buffers: after the first configuration warms the
+/// capacities, branch-and-bound nodes allocate nothing (leaves write into
+/// the reused `leaf` design and clone it only on acceptance).
+struct WorkerScratch {
+    eval: EvalScratch,
+    chosen: Vec<usize>,
+    part_stack: Vec<((u32, usize), u64)>,
+    merged: Vec<((u32, usize), u64)>,
+    seen: HashSet<u64>,
+    leaf: Design,
+    cfg_nodes: u64,
+    timed_out: bool,
+}
+
+impl WorkerScratch {
+    fn new(problem: &NlpProblem) -> WorkerScratch {
+        WorkerScratch {
+            eval: problem.scratch(),
+            chosen: Vec::new(),
+            part_stack: Vec::new(),
+            merged: Vec::new(),
+            seen: HashSet::new(),
+            leaf: Design::empty(problem.kernel),
+            cfg_nodes: 0,
+            timed_out: false,
+        }
+    }
+
+    fn reset_config(&mut self, n_nests: usize) {
+        self.chosen.clear();
+        self.chosen.resize(n_nests, 0);
+        self.part_stack.clear();
+        self.seen.clear();
+        self.cfg_nodes = 0;
+    }
+}
+
+/// Solve one NLP instance serially (the `jobs = 1` path of
+/// [`solve_jobs`], with no thread spawns, queues, or lock contention).
 pub fn solve(
     problem: &NlpProblem,
     timeout_s: f64,
     topk: usize,
     evaluator: &dyn BatchEvaluator,
 ) -> SolveResult {
-    let t0 = Instant::now();
-    let mut stats = SolverStats::default();
-    let k = problem.kernel;
-    let cap = problem.partition_cap();
-    let nests = k.nest_roots();
+    solve_jobs(problem, timeout_s, topk, evaluator, 1)
+}
 
-    let mut best: Vec<(Design, f64, f64)> = Vec::new();
-    let mut proven_lb = f64::INFINITY;
-    let mut optimal = true;
+/// Solve one NLP instance with a team of `jobs` workers draining the
+/// pipeline-configuration queue. Results are bit-identical for every
+/// `jobs` value (see the module docs for the determinism construction);
+/// `jobs = 1` runs entirely on the caller thread.
+pub fn solve_jobs(
+    problem: &NlpProblem,
+    timeout_s: f64,
+    topk: usize,
+    evaluator: &dyn BatchEvaluator,
+    jobs: usize,
+) -> SolveResult {
+    let t0 = Instant::now();
+    let jobs = jobs.max(1);
+    let k = problem.kernel;
 
     // baseline per-nest latencies for the empty design (score extraction)
     let empty = Design::empty(k);
     let base = model::nest_latencies(k, problem.analysis, problem.device, &empty);
 
-    // per-nest candidate sets depend only on the pipeline choice *within*
-    // that nest — cache them across the cross-product of configs (§Perf
-    // iteration 3: 3mm has 64 configs but only 12 distinct nest options)
-    let mut cand_cache: std::collections::BTreeMap<(u32, Vec<u32>), std::rc::Rc<Vec<Cand>>> =
-        Default::default();
+    let sh = Shared {
+        problem,
+        configs: &problem.space.pipeline_configs,
+        evaluator,
+        nests: k.nest_roots(),
+        base,
+        cap: problem.partition_cap(),
+        topk,
+        t0,
+        timeout_s,
+        next_cfg: AtomicUsize::new(0),
+        guard: AtomicF64Min::new(f64::INFINITY),
+        iv_lb_min: AtomicF64Min::new(f64::INFINITY),
+        optimal: AtomicBool::new(true),
+        best: Mutex::new(Vec::new()),
+        cache: CandCache::new(),
+    };
 
-    for cfg in problem.space.pipeline_configs.clone() {
-        stats.configs += 1;
-        if t0.elapsed().as_secs_f64() > timeout_s {
-            optimal = false;
-            break;
-        }
-
-        // ---- symbolic interval relaxation over the whole config ------------
-        // With the pipeline fixed and the structural Eq 9/15 assignments
-        // applied, every UF left free is relaxed to its interval hull; if
-        // even that optimistic completion cannot enter the top-k (compared
-        // against the *k-th* incumbent, so runners-up are never lost), the
-        // config is pruned before any candidate is generated.
-        if best.len() >= topk {
-            let incumbent = best.last().map(|b| b.1).unwrap_or(f64::INFINITY);
-            let partial = config_partial(problem, &cfg);
-            let iv_lb = problem.bound.lower_bound(&partial);
-            if iv_lb > incumbent * (1.0 + 1e-9) {
-                stats.pruned_relaxation += 1;
-                continue;
-            }
-        }
-
-        // ---- per-nest candidate generation (cached) ------------------------
-        let mut per_nest: Vec<std::rc::Rc<Vec<Cand>>> = Vec::new();
-        let mut infeasible_cfg = false;
-        for (ni, &root) in nests.iter().enumerate() {
-            let nest_loops = k.nest_loops(root);
-            let mut local: Vec<u32> = cfg
-                .pipelined
-                .iter()
-                .filter(|l| nest_loops.contains(l))
-                .map(|l| l.0)
-                .collect();
-            local.sort_unstable();
-            let key = (root.0, local);
-            let cands = cand_cache
-                .entry(key)
-                .or_insert_with(|| {
-                    std::rc::Rc::new(nest_candidates(
-                        problem, &cfg, root, cap, evaluator, &base, ni, &mut stats,
-                    ))
+    let mut stats = SolverStats::default();
+    let mut cpu_time_s = 0.0f64;
+    if jobs == 1 {
+        cpu_time_s = worker(&sh, &mut stats);
+    } else {
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..jobs)
+                .map(|_| {
+                    let sh = &sh;
+                    scope.spawn(move || {
+                        let mut st = SolverStats::default();
+                        let busy = worker(sh, &mut st);
+                        (st, busy)
+                    })
                 })
-                .clone();
-            if cands.is_empty() {
-                infeasible_cfg = true;
-                break;
+                .collect();
+            for h in handles {
+                let (st, busy) = h.join().expect("solver worker panicked");
+                stats.merge(&st);
+                cpu_time_s += busy;
             }
-            per_nest.push(cands);
-        }
-        if infeasible_cfg {
-            stats.infeasible += 1;
-            continue;
-        }
-
-        // config-level relaxation bound: combine per-nest minima
-        let min_lats: Vec<f64> = per_nest
-            .iter()
-            .map(|c| c.iter().map(|x| x.lat).fold(f64::INFINITY, f64::min))
-            .collect();
-        let cfg_lb = combine(&min_lats, base.sum_combine) + base.comm;
-        proven_lb = proven_lb.min(cfg_lb);
-        // compare against the *k-th* incumbent (not the #1): a config whose
-        // optimum lies between best[0] and best[k-1] still owes the caller
-        // a runner-up. Strict comparison with tolerance: configs that
-        // *tie* may still win the risk tie-break on the work-floor plateau
-        // (Theorem 4.4).
-        let incumbent = best.last().map(|b| b.1).unwrap_or(f64::INFINITY);
-        if cfg_lb > incumbent * (1.0 + 1e-9) && best.len() >= topk {
-            continue; // config cannot enter the top-k
-        }
-
-        // ---- branch and bound across nests --------------------------------
-        let per_nest: Vec<&[Cand]> = per_nest.iter().map(|r| r.as_slice()).collect();
-        let mut chosen: Vec<usize> = vec![0; per_nest.len()];
-        // bounds plateau tie-exploration; once the incumbent list is full
-        // of risk-free ties nothing better exists (§Perf iteration 2)
-        let mut leaf_budget: i64 = if best.len() >= topk
-            && best.iter().all(|b| b.2 <= 1.0 + 1e-9)
-        {
-            0
-        } else {
-            1_500
-        };
-        bb(
-            problem,
-            &cfg,
-            &per_nest,
-            &min_lats,
-            base.sum_combine,
-            base.comm,
-            0,
-            &mut chosen,
-            &mut Vec::new(),
-            &mut best,
-            topk,
-            t0,
-            timeout_s,
-            &mut optimal,
-            &mut stats,
-            &mut leaf_budget,
-        );
+        });
     }
 
-    best.sort_by(|a, b| {
-        let rel = (a.1 - b.1).abs() / a.1.abs().max(1.0);
-        if rel < 1e-9 {
-            a.2.partial_cmp(&b.2).unwrap()
-        } else {
-            a.1.partial_cmp(&b.1).unwrap()
-        }
-    });
-    best.truncate(topk);
+    let best = sh.best.into_inner().unwrap();
+    let mut proven_lb = sh.iv_lb_min.get();
     if let Some(b) = best.first() {
         // the optimum can't be below the proven relaxation, nor above the
         // incumbent
-        proven_lb = proven_lb.min(b.1);
+        proven_lb = proven_lb.min(b.obj);
     }
     SolveResult {
-        designs: best.into_iter().map(|(d, o, _)| (d, o)).collect(),
+        designs: best.into_iter().map(|i| (i.design, i.obj)).collect(),
         lower_bound: proven_lb,
-        optimal,
+        optimal: sh.optimal.load(Ordering::Relaxed),
         solve_time_s: t0.elapsed().as_secs_f64(),
+        cpu_time_s,
+        jobs,
         stats,
     }
 }
 
-fn combine(lats: &[f64], sum: bool) -> f64 {
+/// One worker: drain configurations from the shared queue until the queue
+/// or the time budget is empty. Returns the seconds this worker spent
+/// busy on configurations (the honest per-worker CPU bill).
+fn worker(sh: &Shared, stats: &mut SolverStats) -> f64 {
+    let mut ws = WorkerScratch::new(sh.problem);
+    let mut busy = 0.0f64;
+    loop {
+        // claim first, then check the clock: a drained queue is a
+        // *completed* search even if the deadline passed while the last
+        // config finished — only flag non-optimality when work remains
+        let ci = sh.next_cfg.fetch_add(1, Ordering::Relaxed);
+        let Some(cfg) = sh.configs.get(ci) else {
+            return busy;
+        };
+        if sh.t0.elapsed().as_secs_f64() > sh.timeout_s {
+            sh.optimal.store(false, Ordering::Relaxed);
+            return busy;
+        }
+        stats.configs += 1;
+        let t = Instant::now();
+        run_config(sh, &mut ws, cfg, stats);
+        busy += t.elapsed().as_secs_f64();
+        if ws.timed_out {
+            return busy;
+        }
+    }
+}
+
+/// Process one pipeline configuration: sound config-level skips against
+/// the shared guard, per-nest candidate menus, then a purely local
+/// branch-and-bound whose top-k merges into the global reduction.
+fn run_config(sh: &Shared, ws: &mut WorkerScratch, cfg: &PipelineConfig, stats: &mut SolverStats) {
+    let problem = sh.problem;
+    let k = problem.kernel;
+
+    // ---- symbolic interval relaxation over the whole config ------------
+    // Always computed: its minimum over all configurations is the
+    // deterministic part of the proven lower bound. With the pipeline
+    // fixed and the structural Eq 9/15 assignments applied, every UF left
+    // free is relaxed to its interval hull; if even that optimistic
+    // completion cannot enter the top-k (compared against the *k-th*
+    // global incumbent with tolerance, so runners-up and ties are never
+    // lost), the whole config is skipped before any candidate exists.
+    let partial = config_partial(problem, cfg);
+    let iv_lb = problem.bound.lower_bound(&partial);
+    sh.iv_lb_min.fetch_min(iv_lb);
+    if iv_lb > sh.guard.get() * (1.0 + EPS) {
+        stats.pruned_relaxation += 1;
+        return;
+    }
+
+    // ---- per-nest candidate generation (shared sharded cache) ----------
+    let mut per_nest: Vec<Arc<CandSet>> = Vec::with_capacity(sh.nests.len());
+    for (ni, &root) in sh.nests.iter().enumerate() {
+        let nest_loops = k.nest_loops(root);
+        let mut local: Vec<u32> = cfg
+            .pipelined
+            .iter()
+            .filter(|l| nest_loops.contains(l))
+            .map(|l| l.0)
+            .collect();
+        local.sort_unstable();
+        let key = (root.0, local);
+        let (set, inserted) = sh.cache.get_or_build(key, || {
+            nest_candidates(problem, cfg, root, sh.cap, sh.evaluator, &sh.base, ni)
+        });
+        if inserted {
+            stats.candidates_scored += set.scored;
+            if set.truncated {
+                stats.truncated_menus += 1;
+            }
+        }
+        if set.cands.is_empty() {
+            stats.infeasible += 1;
+            return;
+        }
+        per_nest.push(set);
+    }
+
+    // config-level relaxation bound: combine per-nest minima into suffix
+    // bounds (candidates are sorted ascending, so the minimum is first)
+    let n = per_nest.len();
+    let mut suffix = vec![0.0f64; n + 1];
+    for i in (0..n).rev() {
+        let m = per_nest[i].cands[0].lat;
+        suffix[i] = combine2(m, suffix[i + 1], sh.base.sum_combine);
+    }
+    // compare against the *k-th* global incumbent (not the #1): a config
+    // whose optimum lies between best[0] and best[k-1] still owes the
+    // caller a runner-up; ties survive the tolerance and lose (or win) the
+    // deterministic merge instead.
+    let cfg_lb = suffix[0] + sh.base.comm;
+    if cfg_lb > sh.guard.get() * (1.0 + EPS) {
+        stats.pruned_relaxation += 1;
+        return;
+    }
+
+    // ---- branch and bound across nests (pure per-config function) ------
+    let per_nest: Vec<&[Cand]> = per_nest.iter().map(|s| s.cands.as_slice()).collect();
+    ws.reset_config(n);
+    let mut local: Vec<Incumbent> = Vec::with_capacity(sh.topk + 1);
+    let mut leaf_budget: i64 = LEAF_BUDGET;
+    bb(
+        sh,
+        ws,
+        cfg,
+        &per_nest,
+        &suffix,
+        0,
+        0.0,
+        &mut local,
+        stats,
+        &mut leaf_budget,
+    );
+    if !local.is_empty() {
+        merge_into_global(sh, local);
+    }
+}
+
+/// Merge one config's local top-k into the global reduction: pool, rank
+/// by the deterministic total order, dedup, truncate, refresh the guard.
+fn merge_into_global(sh: &Shared, mut local: Vec<Incumbent>) {
+    let mut g = sh.best.lock().unwrap();
+    g.append(&mut local);
+    g.sort_by(rank_cmp);
+    g.dedup_by(|a, b| a.design == b.design);
+    g.truncate(sh.topk);
+    if g.len() >= sh.topk {
+        if let Some(last) = g.last() {
+            sh.guard.fetch_min(last.obj);
+        }
+    }
+}
+
+#[inline]
+fn combine2(a: f64, b: f64, sum: bool) -> f64 {
     if sum {
-        lats.iter().sum()
+        a + b
     } else {
-        lats.iter().cloned().fold(0.0, f64::max)
+        a.max(b)
     }
 }
 
@@ -349,6 +719,8 @@ fn config_partial(problem: &NlpProblem, cfg: &PipelineConfig) -> PartialDesign {
 }
 
 /// Generate + score candidates for one nest under one pipeline config.
+/// Pure (no shared state): the result is cached by
+/// `(nest root, local pipeline choice)` in the sharded menu cache.
 #[allow(clippy::too_many_arguments)]
 fn nest_candidates(
     problem: &NlpProblem,
@@ -358,8 +730,7 @@ fn nest_candidates(
     evaluator: &dyn BatchEvaluator,
     base: &model::NestBreakdown,
     nest_idx: usize,
-    stats: &mut SolverStats,
-) -> Vec<Cand> {
+) -> CandSet {
     let k = problem.kernel;
     let a = problem.analysis;
     let nest_loops = k.nest_loops(root);
@@ -403,39 +774,36 @@ fn nest_candidates(
         }
     }
 
-    // cartesian product (bounded: divisor sets are small)
-    let mut assignments: Vec<Vec<(LoopId, u64)>> = vec![vec![]];
-    for (l, menu) in &free {
-        let mut next = Vec::with_capacity(assignments.len() * menu.len());
-        for base_a in &assignments {
-            for &u in menu {
-                let mut v = base_a.clone();
-                v.push((*l, u));
-                next.push(v);
-            }
-        }
-        assignments = next;
-        if assignments.len() > 200_000 {
-            break; // runaway product guard; menus stay partial but valid
-        }
-    }
-
-    // materialize candidate designs (only this nest assigned) + prefilter
-    // by per-nest partitioning
+    // cartesian product via an odometer over menu indices (last menu
+    // varies fastest), capped at a fixed number of *complete* assignments
+    // — the menu stays a deterministic lexicographic prefix instead of the
+    // old mid-extension break that truncated the last loop asymmetrically
+    let nest_cfg = PipelineConfig {
+        pipelined: cfg
+            .pipelined
+            .iter()
+            .copied()
+            .filter(|&p| nest_loops.contains(&p))
+            .collect(),
+    };
     let mut designs: Vec<Design> = Vec::new();
     let mut metas: Vec<(Vec<(LoopId, u64)>, Vec<((u32, usize), u64)>)> = Vec::new();
-    for asg in assignments {
+    let mut idx = vec![0usize; free.len()];
+    let mut enumerated = 0usize;
+    let mut truncated = false;
+    loop {
+        enumerated += 1;
+        let asg: Vec<(LoopId, u64)> = free
+            .iter()
+            .zip(idx.iter())
+            .map(|((l, menu), &i)| (*l, menu[i]))
+            .collect();
+        // materialize the candidate (only this nest assigned) + prefilter
+        // by per-nest partitioning
         let d = space::materialize(
             k,
             a,
-            &PipelineConfig {
-                pipelined: cfg
-                    .pipelined
-                    .iter()
-                    .copied()
-                    .filter(|&p| nest_loops.contains(&p))
-                    .collect(),
-            },
+            &nest_cfg,
             &|l| {
                 asg.iter()
                     .find(|(al, _)| *al == l)
@@ -475,19 +843,44 @@ fn nest_candidates(
                 }
             }
         }
-        if !ok {
-            continue;
+        if ok {
+            designs.push(d2);
+            metas.push((asg, part.into_iter().collect()));
         }
-        designs.push(d2);
-        metas.push((asg, part.into_iter().collect()));
+        if enumerated >= MAX_MENU_ASSIGNMENTS {
+            // truncated iff combinations remain beyond this prefix
+            truncated = idx
+                .iter()
+                .zip(free.iter())
+                .any(|(&i, (_, menu))| i + 1 < menu.len());
+            break;
+        }
+        // advance the odometer (last index fastest, matching the old
+        // product order so stable ties sort identically)
+        let mut advanced = false;
+        for c in (0..free.len()).rev() {
+            idx[c] += 1;
+            if idx[c] < free[c].1.len() {
+                advanced = true;
+                break;
+            }
+            idx[c] = 0;
+        }
+        if !advanced {
+            break;
+        }
     }
     if designs.is_empty() {
-        return vec![];
+        return CandSet {
+            cands: vec![],
+            scored: 0,
+            truncated,
+        };
     }
 
     // bulk score (lower bounds) — XLA artifact when plugged in
     let scores = evaluator.eval_batch(problem, &designs);
-    stats.candidates_scored += designs.len() as u64;
+    let scored = designs.len() as u64;
 
     // extract additive per-nest latency from the total score:
     // total = Σ_m≠n base[m] + lat_n + comm   (sum-combine)
@@ -530,7 +923,12 @@ fn nest_candidates(
                     }
                 })
                 .product();
-            Some(Cand { ufs, lat, risk, part })
+            Some(Cand {
+                ufs,
+                lat,
+                risk,
+                part,
+            })
         })
         .collect();
     // ascending latency; equal-latency candidates ordered by realization
@@ -543,185 +941,234 @@ fn nest_candidates(
     });
     // keep a deep-but-bounded front (ascending latency)
     out.truncate(4096);
-    out
+    CandSet {
+        cands: out,
+        scored,
+        truncated,
+    }
 }
 
-/// Recursive branch-and-bound across nests.
+/// Recursive branch-and-bound across nests. Zero allocations per node:
+/// the admissible bound is a running prefix value + the precomputed
+/// suffix-minima array, partition merging reuses worker scratch buffers,
+/// and leaves materialize into a reused design (cloned only on
+/// acceptance). Pure per configuration: prunes only against the local
+/// incumbent list and the fixed tie budget.
 #[allow(clippy::too_many_arguments)]
 fn bb(
-    problem: &NlpProblem,
+    sh: &Shared,
+    ws: &mut WorkerScratch,
     cfg: &PipelineConfig,
     per_nest: &[&[Cand]],
-    min_lats: &[f64],
-    sum_combine: bool,
-    comm: f64,
+    suffix: &[f64],
     depth: usize,
-    chosen: &mut Vec<usize>,
-    part_stack: &mut Vec<((u32, usize), u64)>,
-    best: &mut Vec<(Design, f64, f64)>,
-    topk: usize,
-    t0: Instant,
-    timeout_s: f64,
-    optimal: &mut bool,
+    prefix: f64,
+    local: &mut Vec<Incumbent>,
     stats: &mut SolverStats,
     leaf_budget: &mut i64,
 ) {
-    if t0.elapsed().as_secs_f64() > timeout_s {
-        *optimal = false;
-        return;
-    }
     stats.nodes += 1;
-    // anytime node budget per solve (BARON-style): beyond it, return the
-    // incumbent and report non-optimality — Table 7's timeout behaviour
-    if stats.nodes > 1_500_000 {
-        *optimal = false;
+    ws.cfg_nodes += 1;
+    // anytime node budget per configuration (BARON-style): beyond it,
+    // return the incumbent and report non-optimality — Table 7's timeout
+    // behaviour. Per-config so *which* configs can blow it is a pure
+    // property of the config; like the wall clock, this is an anytime
+    // escape: a capped config that one interleaving guard-skips makes the
+    // flag pessimistically false in the other (the design set is still
+    // identical — every design of a skippable config loses the merge).
+    if ws.cfg_nodes > NODE_CAP {
+        sh.optimal.store(false, Ordering::Relaxed);
         return;
     }
-    let incumbent = if best.len() >= topk {
-        best.last().map(|b| b.1).unwrap_or(f64::INFINITY)
-    } else {
-        f64::INFINITY
-    };
+    // throttled wall-clock check (syscall every 256 nodes, plus leaves)
+    if (ws.cfg_nodes & 255) == 0 && sh.t0.elapsed().as_secs_f64() > sh.timeout_s {
+        sh.optimal.store(false, Ordering::Relaxed);
+        ws.timed_out = true;
+        return;
+    }
 
     if depth == per_nest.len() {
-        stats.leaves += 1;
-        *leaf_budget -= 1;
-        // materialize the full design and verify precisely
-        let d = leaf_design(problem, cfg, per_nest, chosen);
-        let Some(obj) = problem.check_objective(&d) else {
-            stats.infeasible += 1;
-            return;
-        };
-        // the Theorem 4.4 work floor creates objective plateaus; among
-        // equal-latency solutions prefer the one with the least *risky*
-        // parallelism: coarse-grained factors above the pipeline are the
-        // pragmas Merlin most often refuses (Section 7.5), while fine
-        // under-pipe unrolls apply reliably — lexicographic
-        // (objective, Π coarse-UF) ordering
-        let par: f64 = d
-            .pragmas
-            .iter()
-            .enumerate()
-            .map(|(i, p)| {
-                let l = crate::ir::LoopId(i as u32);
-                let coarse = !problem.kernel.loop_meta(l).innermost
-                    && !p.pipeline
-                    && problem.kernel.loop_meta(l).children.len()
-                        + usize::from(!problem.kernel.loop_meta(l).innermost)
-                        > 0
-                    && d.pipeline_above(problem.kernel, l) != Some(l)
-                    && !d
-                        .pipelined()
-                        .any(|pl| problem.kernel.is_under(l, pl));
-                if coarse {
-                    p.uf.max(1) as f64
-                } else {
-                    1.0
-                }
-            })
-            .product();
-        if obj < incumbent * (1.0 + 1e-9) {
-            if !best.iter().any(|(bd, ..)| *bd == d) {
-                best.push((d, obj, par));
-                best.sort_by(|a, b| {
-                    let rel = (a.1 - b.1).abs() / a.1.abs().max(1.0);
-                    if rel < 1e-9 {
-                        a.2.partial_cmp(&b.2).unwrap()
-                    } else {
-                        a.1.partial_cmp(&b.1).unwrap()
-                    }
-                });
-                best.truncate(topk);
-            }
-        }
+        leaf(sh, ws, cfg, per_nest, local, stats, leaf_budget);
         return;
     }
 
+    let sum = sh.base.sum_combine;
     for (ci, cand) in per_nest[depth].iter().enumerate() {
-        // admissible bound: chosen lats + this cand + per-nest minima below
-        let mut lats: Vec<f64> = (0..depth)
-            .map(|i| per_nest[i][chosen[i]].lat)
-            .collect();
-        lats.push(cand.lat);
-        lats.extend(min_lats.iter().skip(depth + 1));
-        let bound = combine(&lats, sum_combine) + comm;
+        let local_kth = if local.len() >= sh.topk {
+            local.last().map(|b| b.obj).unwrap_or(f64::INFINITY)
+        } else {
+            f64::INFINITY
+        };
+        // admissible bound: chosen prefix + this cand + per-nest minima
+        // below (precomputed suffix) — no per-node vector
+        let p2 = combine2(prefix, cand.lat, sum);
+        let bound = combine2(p2, suffix[depth + 1], sum) + sh.base.comm;
         // while leaf budget remains, ties with the incumbent are explored
         // (risk tie-break on the plateau); afterwards only strict
         // improvements descend
         let cutoff = if *leaf_budget > 0 {
-            incumbent * (1.0 + 1e-9)
+            local_kth * (1.0 + EPS)
         } else {
-            incumbent
+            local_kth
         };
-        if bound > cutoff || (bound >= incumbent && *leaf_budget <= 0) {
+        if bound > cutoff || (bound >= local_kth && *leaf_budget <= 0) {
             stats.pruned_bound += 1;
             break; // candidates sorted ascending → all following worse
         }
         // monotone partitioning pruning: merge the candidate's per-
         // (array, dim) UF maxima into the stack view and check every
-        // touched array's cross-dimension product (Eq 13)
-        let cap = problem.partition_cap();
-        let mut violated = false;
-        if !part_stack.is_empty() && !cand.part.is_empty() {
-            let mut merged: std::collections::BTreeMap<(u32, usize), u64> = Default::default();
-            for &(key, uf) in part_stack.iter() {
-                let e = merged.entry(key).or_insert(1);
-                *e = (*e).max(uf);
-            }
-            for &((arr, dim), uf) in &cand.part {
-                let e = merged.entry((arr, dim)).or_insert(1);
-                *e = (*e).max(uf);
-            }
-            let mut per_arr: std::collections::BTreeMap<u32, u64> = Default::default();
-            for (&(arr, _dim), &uf) in &merged {
-                let e = per_arr.entry(arr).or_insert(1);
-                *e = e.saturating_mul(uf);
-            }
-            if per_arr.values().any(|&p| p > cap) {
-                violated = true;
-            }
-        }
-        if violated {
+        // touched array's cross-dimension product (Eq 13) — in reused
+        // scratch, no maps
+        if !ws.part_stack.is_empty() && !cand.part.is_empty() && part_violated(ws, cand, sh.cap) {
             stats.pruned_partition += 1;
             continue;
         }
-        chosen[depth] = ci;
+        ws.chosen[depth] = ci;
         let pushed = cand.part.len();
-        part_stack.extend(cand.part.iter().copied());
+        ws.part_stack.extend_from_slice(&cand.part);
         bb(
-            problem, cfg, per_nest, min_lats, sum_combine, comm, depth + 1, chosen, part_stack,
-            best, topk, t0, timeout_s, optimal, stats, leaf_budget,
+            sh,
+            ws,
+            cfg,
+            per_nest,
+            suffix,
+            depth + 1,
+            p2,
+            local,
+            stats,
+            leaf_budget,
         );
-        part_stack.truncate(part_stack.len() - pushed);
-        if t0.elapsed().as_secs_f64() > timeout_s {
-            *optimal = false;
+        let keep = ws.part_stack.len() - pushed;
+        ws.part_stack.truncate(keep);
+        if ws.timed_out {
             return;
         }
     }
 }
 
-/// Build the full design from the chosen per-nest candidates.
-fn leaf_design(
-    problem: &NlpProblem,
-    cfg: &PipelineConfig,
-    per_nest: &[&[Cand]],
-    chosen: &[usize],
-) -> Design {
-    let k = problem.kernel;
-    let a = problem.analysis;
-    let mut ufs: std::collections::BTreeMap<LoopId, u64> = Default::default();
-    for (ni, cands) in per_nest.iter().enumerate() {
-        for &(l, u) in &cands[chosen[ni]].ufs {
-            ufs.insert(l, u);
+/// Eq 13 check over `part_stack ∪ cand.part` using the reused merge
+/// buffer: sort by (array, dim), fold per-dimension maxima into per-array
+/// products, compare against the cap.
+fn part_violated(ws: &mut WorkerScratch, cand: &Cand, cap: u64) -> bool {
+    ws.merged.clear();
+    ws.merged.extend_from_slice(&ws.part_stack);
+    ws.merged.extend_from_slice(&cand.part);
+    ws.merged.sort_unstable();
+    let m = &ws.merged;
+    let mut i = 0;
+    while i < m.len() {
+        let arr = m[i].0 .0;
+        let mut prod: u64 = 1;
+        while i < m.len() && m[i].0 .0 == arr {
+            let dim = m[i].0 .1;
+            let mut dmax = 1u64;
+            while i < m.len() && m[i].0 == (arr, dim) {
+                dmax = dmax.max(m[i].1);
+                i += 1;
+            }
+            prod = prod.saturating_mul(dmax);
+        }
+        if prod > cap {
+            return true;
         }
     }
-    space::materialize(
-        k,
-        a,
-        cfg,
-        &|l| ufs.get(&l).copied().unwrap_or(1),
-        &|_| 1,
-    )
+    false
+}
+
+/// Verify one leaf: materialize the full design into the reused buffer,
+/// run the single-tape feasibility + objective check, and binary-insert
+/// an accepted incumbent into the local top-k (fingerprint-set dedup, no
+/// structural scans, no re-sort).
+fn leaf(
+    sh: &Shared,
+    ws: &mut WorkerScratch,
+    cfg: &PipelineConfig,
+    per_nest: &[&[Cand]],
+    local: &mut Vec<Incumbent>,
+    stats: &mut SolverStats,
+    leaf_budget: &mut i64,
+) {
+    stats.leaves += 1;
+    *leaf_budget -= 1;
+    let problem = sh.problem;
+    let k = problem.kernel;
+
+    // materialize the full design from the chosen per-nest candidates
+    // (linear scan over the chosen UF lists; no map)
+    let chosen = &ws.chosen;
+    let uf_of = |l: LoopId| -> u64 {
+        for (ni, cands) in per_nest.iter().enumerate() {
+            for &(al, u) in &cands[chosen[ni]].ufs {
+                if al == l {
+                    return u;
+                }
+            }
+        }
+        1
+    };
+    space::materialize_into(k, problem.analysis, cfg, &uf_of, &|_| 1, &mut ws.leaf);
+
+    // verify precisely with a single tape evaluation
+    let Some(obj) = problem.check_objective_in(&mut ws.eval, &ws.leaf) else {
+        stats.infeasible += 1;
+        return;
+    };
+
+    // exact rejection: the rank order compares objectives exactly, so a
+    // leaf strictly above the k-th would binary-insert at position k and
+    // be truncated right back out — skip the clone/insert entirely. Exact
+    // ties still enter (the risk / pragma-vector keys may rank them in).
+    // No tolerance needed here: obj and the stored incumbents come from
+    // the same tape, so plateau ties are bit-equal.
+    let local_kth = if local.len() >= sh.topk {
+        local.last().map(|b| b.obj).unwrap_or(f64::INFINITY)
+    } else {
+        f64::INFINITY
+    };
+    if obj > local_kth {
+        return;
+    }
+
+    // the Theorem 4.4 work floor creates objective plateaus; among
+    // equal-latency solutions prefer the one with the least *risky*
+    // parallelism: coarse-grained factors above the pipeline are the
+    // pragmas Merlin most often refuses (Section 7.5), while fine
+    // under-pipe unrolls apply reliably — lexicographic
+    // (objective, Π coarse-UF) ordering
+    let d = &ws.leaf;
+    let risk: f64 = d
+        .pragmas
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let l = LoopId(i as u32);
+            let coarse = !k.loop_meta(l).innermost
+                && !p.pipeline
+                && k.loop_meta(l).children.len() + usize::from(!k.loop_meta(l).innermost) > 0
+                && d.pipeline_above(k, l) != Some(l)
+                && !d.pipelined().any(|pl| k.is_under(l, pl));
+            if coarse {
+                p.uf.max(1) as f64
+            } else {
+                1.0
+            }
+        })
+        .product();
+
+    // fingerprint-set dedup (a rejected duplicate would re-rank
+    // identically; the deterministic 64-bit key replaces the old
+    // structural equality scan over the whole incumbent list)
+    if !ws.seen.insert(design_key(&ws.leaf)) {
+        return;
+    }
+    let inc = Incumbent {
+        design: ws.leaf.clone(),
+        obj,
+        risk,
+    };
+    let pos = local.partition_point(|x| rank_cmp(x, &inc) == std::cmp::Ordering::Less);
+    local.insert(pos, inc);
+    local.truncate(sh.topk);
 }
 
 #[cfg(test)]
@@ -951,5 +1398,65 @@ mod tests {
         let r = solve(&p, 0.000001, 1, &RustFeatureEvaluator);
         assert!(!r.optimal);
         assert!(r.lower_bound.is_finite() || r.designs.is_empty());
+    }
+
+    #[test]
+    fn parallel_matches_serial_on_gemm() {
+        // the exhaustive 24-kernel parity property lives in
+        // tests/property_solver_parallel.rs; this is the in-module smoke
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = NlpProblem::new(&k, &a, &dev, 512, false);
+        let serial = solve_jobs(&p, 60.0, 4, &RustFeatureEvaluator, 1);
+        let par = solve_jobs(&p, 60.0, 4, &RustFeatureEvaluator, 4);
+        assert_eq!(serial.optimal, par.optimal);
+        assert_eq!(serial.lower_bound.to_bits(), par.lower_bound.to_bits());
+        assert_eq!(serial.designs.len(), par.designs.len());
+        for ((d1, o1), (d2, o2)) in serial.designs.iter().zip(&par.designs) {
+            assert_eq!(d1, d2);
+            assert_eq!(o1.to_bits(), o2.to_bits());
+        }
+        assert_eq!(par.jobs, 4);
+    }
+
+    #[test]
+    fn atomic_f64_min_is_monotone() {
+        let a = AtomicF64Min::new(f64::INFINITY);
+        assert!(a.get().is_infinite());
+        a.fetch_min(10.0);
+        assert_eq!(a.get(), 10.0);
+        a.fetch_min(20.0);
+        assert_eq!(a.get(), 10.0, "min must not regress");
+        a.fetch_min(5.0);
+        assert_eq!(a.get(), 5.0);
+    }
+
+    #[test]
+    fn rank_order_is_total_and_deterministic() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let d1 = Design::empty(&k);
+        let mut d2 = Design::empty(&k);
+        d2.get_mut(LoopId(0)).uf = 2;
+        let a = Incumbent {
+            design: d1.clone(),
+            obj: 10.0,
+            risk: 1.0,
+        };
+        let b = Incumbent {
+            design: d2,
+            obj: 10.0,
+            risk: 1.0,
+        };
+        // equal objective and risk: the pragma vector breaks the tie, and
+        // consistently so in both directions
+        assert_eq!(rank_cmp(&a, &b), rank_cmp(&b, &a).reverse());
+        assert_ne!(rank_cmp(&a, &b), std::cmp::Ordering::Equal);
+        let c = Incumbent {
+            design: d1,
+            obj: 9.0,
+            risk: 5.0,
+        };
+        assert_eq!(rank_cmp(&c, &a), std::cmp::Ordering::Less, "objective first");
     }
 }

@@ -13,8 +13,10 @@ pub use space::{PipelineConfig, Space};
 use crate::ir::{Kernel, LoopId};
 
 /// Per-loop pragma settings (`uf = 1`, `tile = 1`, `pipeline = false` means
-/// "no pragma").
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+/// "no pragma"). The derived `(uf, tile, pipeline)` lexicographic order
+/// gives [`Design`] a total order — the deterministic final tie-break of
+/// the parallel solver's top-k reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct LoopPragma {
     /// `#pragma ACCEL parallel factor=uf`
     pub uf: u64,
@@ -34,8 +36,11 @@ impl Default for LoopPragma {
     }
 }
 
-/// A complete pragma configuration for one kernel.
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+/// A complete pragma configuration for one kernel. Totally ordered (the
+/// per-loop pragma vector, lexicographically): two distinct designs never
+/// compare equal, which the parallel solver's deterministic merge relies
+/// on.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Design {
     pub pragmas: Vec<LoopPragma>,
 }

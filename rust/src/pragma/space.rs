@@ -168,6 +168,22 @@ pub fn materialize(
     tiles: &dyn Fn(LoopId) -> u64,
 ) -> Design {
     let mut d = Design::empty(k);
+    materialize_into(k, analysis, cfg, ufs, tiles, &mut d);
+    d
+}
+
+/// [`materialize`] into a caller-owned design buffer — the parallel
+/// solver's leaf path reuses one buffer per worker so interior
+/// branch-and-bound nodes stay allocation-free.
+pub fn materialize_into(
+    k: &Kernel,
+    analysis: &Analysis,
+    cfg: &PipelineConfig,
+    ufs: &dyn Fn(LoopId) -> u64,
+    tiles: &dyn Fn(LoopId) -> u64,
+    d: &mut Design,
+) {
+    debug_assert_eq!(d.pragmas.len(), k.n_loops(), "buffer/kernel mismatch");
     for i in 0..k.n_loops() {
         let l = LoopId(i as u32);
         let under_pipe = cfg.pipelined.iter().any(|&p| k.is_under(l, p));
@@ -194,7 +210,6 @@ pub fn materialize(
             pipeline: cfg.pipelined.contains(&l),
         };
     }
-    d
 }
 
 #[cfg(test)]
@@ -265,6 +280,19 @@ mod tests {
         let s = Space::new(&k, &a);
         let ufs = s.ufs(LoopId(0), &a, u64::MAX);
         assert_eq!(ufs, vec![1, 2], "UF capped at dependence distance 2");
+    }
+
+    #[test]
+    fn materialize_into_reuses_buffer_identically() {
+        let k = crate::benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let mut buf = Design::empty(&k);
+        for cfg in &s.pipeline_configs {
+            let fresh = materialize(&k, &a, cfg, &|l| if l.0 == 0 { 2 } else { 1 }, &|_| 1);
+            materialize_into(&k, &a, cfg, &|l| if l.0 == 0 { 2 } else { 1 }, &|_| 1, &mut buf);
+            assert_eq!(fresh, buf, "{:?}", cfg.pipelined);
+        }
     }
 
     #[test]

@@ -25,8 +25,11 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-/// The XLA-backed batch evaluator. Not `Sync` (PJRT handles are
-/// thread-affine); the coordinator instantiates one per worker.
+/// The XLA-backed batch evaluator. `Send + Sync` (the `BatchEvaluator`
+/// contract, required by the parallel NLP solver's worker team): the
+/// PJRT executable sits behind an internal mutex, so cross-thread use is
+/// *safe* but executions serialize per evaluator — the coordinator still
+/// instantiates one per job, which remains the performant layout.
 ///
 /// Requires the `xla` cargo feature (the `xla` PJRT bindings are a
 /// native-library dependency that is not always available); without it
@@ -34,19 +37,39 @@ pub fn default_artifact_dir() -> PathBuf {
 /// back to the in-process Rust evaluator.
 #[cfg(feature = "xla")]
 pub struct XlaEvaluator {
-    exe: xla::PjRtLoadedExecutable,
+    exe: std::sync::Mutex<xla::PjRtLoadedExecutable>,
     pub batch: usize,
-    /// Executions performed (perf accounting).
-    pub executions: std::cell::Cell<u64>,
+    /// Executions performed (perf accounting); see [`Self::executions`].
+    executions: std::sync::atomic::AtomicU64,
 }
+
+// SAFETY: the PJRT handle types in the `xla` bindings carry raw FFI
+// pointers and are not auto-`Send`/`Sync`, but the PJRT C API documents
+// client/executable operations as thread-safe, and every use of `exe`
+// here goes through the internal `Mutex` (one execution at a time, no
+// thread-local PJRT state is relied upon). Required because
+// `BatchEvaluator` is `Send + Sync` so one evaluator can serve the
+// parallel solver's scoped worker team; the coordinator still creates
+// one evaluator per job, which remains the performant layout.
+#[cfg(feature = "xla")]
+unsafe impl Send for XlaEvaluator {}
+#[cfg(feature = "xla")]
+unsafe impl Sync for XlaEvaluator {}
 
 /// Stub built without the `xla` feature: `load` always fails, so the
 /// Rust reference evaluator is used everywhere.
 #[cfg(not(feature = "xla"))]
 pub struct XlaEvaluator {
     pub batch: usize,
-    /// Executions performed (perf accounting).
-    pub executions: std::cell::Cell<u64>,
+    /// Executions performed (perf accounting); see [`Self::executions`].
+    executions: std::sync::atomic::AtomicU64,
+}
+
+impl XlaEvaluator {
+    /// Artifact executions performed so far (perf accounting).
+    pub fn executions(&self) -> u64 {
+        self.executions.load(std::sync::atomic::Ordering::Relaxed)
+    }
 }
 
 #[cfg(not(feature = "xla"))]
@@ -84,9 +107,9 @@ impl XlaEvaluator {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = client.compile(&comp).context("compile artifact")?;
         Ok(XlaEvaluator {
-            exe,
+            exe: std::sync::Mutex::new(exe),
             batch,
-            executions: std::cell::Cell::new(0),
+            executions: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -115,9 +138,14 @@ impl XlaEvaluator {
                 Abi::UNITS as i64,
                 Abi::G as i64,
             ])?;
-            let result = self.exe.execute::<xla::Literal>(&[l_lit, u_lit])?[0][0]
-                .to_literal_sync()?;
-            self.executions.set(self.executions.get() + 1);
+            let result = {
+                // PJRT execution serializes behind the lock; one evaluator
+                // per worker (the coordinator's layout) never contends
+                let exe = self.exe.lock().unwrap();
+                exe.execute::<xla::Literal>(&[l_lit, u_lit])?[0][0].to_literal_sync()?
+            };
+            self.executions
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             // return_tuple=True → 1-tuple of f64[B,2]
             let tuple = result.to_tuple1()?;
             let values = tuple.to_vec::<f64>()?;

@@ -110,5 +110,5 @@ fn full_nlp_solve_through_xla_path() {
         (bx - br).abs() / br < 1e-9,
         "solver optima must agree: xla {bx} vs rust {br}"
     );
-    assert!(eval.executions.get() > 0, "XLA path must actually execute");
+    assert!(eval.executions() > 0, "XLA path must actually execute");
 }
