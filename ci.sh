@@ -16,6 +16,13 @@ cargo build --release --workspace --all-targets
 echo "==> cargo test -q"
 cargo test -q --workspace
 
+echo "==> fuzz smoke (FUZZ_SMOKE=1 — generative differential suites at bounded N)"
+# mirrors BENCH_SMOKE: a fast bounded re-run that keeps the env-knob
+# replay path (FUZZ_SMOKE / FUZZ_KERNELS / FUZZ_SEED) from rotting; the
+# full-N suites (N >= 100 kernels per mode) already ran in `cargo test`
+# above. --nocapture so the logged seed ranges land in the CI output.
+FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz -- --nocapture
+
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
 for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch; do

@@ -12,6 +12,8 @@ mod linalg_tri;
 pub mod sizes;
 mod stencil;
 
+use crate::ir::{DType, Kernel};
+
 pub use cnn::kernel_cnn;
 pub use linalg::{
     kernel_2mm, kernel_3mm, kernel_atax, kernel_bicg, kernel_doitgen, kernel_gemm,
@@ -26,6 +28,32 @@ pub use stencil::{
     kernel_floyd_warshall, kernel_heat_3d, kernel_jacobi_1d, kernel_jacobi_2d,
     kernel_seidel_2d,
 };
+
+/// Resolve a kernel *spec*: a registered benchmark name (honouring
+/// `size`/`dtype`) or a path to a `.knl` file (which carries its own
+/// dtype and problem size — `size`/`dtype` are ignored).
+///
+/// This is the one kernel-by-name entry point the CLI, the campaign
+/// coordinator, and the `Explorer` facade all route through; unknown
+/// specs produce a clean error instead of the old `panic!` paths.
+pub fn lookup(spec: &str, size: Size, dtype: DType) -> anyhow::Result<Kernel> {
+    if let Some(k) = build(spec, size, dtype) {
+        return Ok(k);
+    }
+    // a `.knl` suffix always means "parse as a file" (so a missing file
+    // reports the read error, not "unknown kernel"); anything else only
+    // dispatches to the parser when it names an actual file — a typo'd
+    // kernel name colliding with a directory must keep the clean
+    // unknown-kernel guidance below
+    if spec.ends_with(".knl") || std::path::Path::new(spec).is_file() {
+        return crate::frontend::parse_file(spec);
+    }
+    anyhow::bail!(
+        "unknown kernel `{spec}` — not a registered benchmark (known: {}) and not a .knl \
+         file; try `--kernel-file <path.knl>` or generate one with `gen`",
+        ALL.join(", ")
+    )
+}
 
 /// All benchmark names, in Table 5 order.
 pub const ALL: [&str; 24] = [
@@ -58,7 +86,31 @@ pub const ALL: [&str; 24] = [
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::ir::DType;
+
+    #[test]
+    fn lookup_resolves_registry_names_and_knl_files() {
+        let k = lookup("gemm", Size::Small, DType::F32).unwrap();
+        assert_eq!(k.name, "gemm");
+        // a .knl file path resolves through the frontend parser
+        let gen = crate::frontend::generate(&crate::frontend::GenConfig::with_seed(11));
+        let path = std::env::temp_dir().join("nlp_dse_lookup_test.knl");
+        std::fs::write(&path, crate::frontend::pretty::print(&gen)).unwrap();
+        let k2 = lookup(path.to_str().unwrap(), Size::Small, DType::F32).unwrap();
+        assert_eq!(gen.structural_diff(&k2), None);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn lookup_unknown_kernel_is_a_clean_error() {
+        let err = lookup("definitely-not-a-kernel", Size::Small, DType::F32).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown kernel `definitely-not-a-kernel`"), "{msg}");
+        assert!(msg.contains("--kernel-file"), "{msg}");
+        assert!(msg.contains("`gen`"), "{msg}");
+        // a missing .knl path errors with the file context, not "unknown"
+        let err = lookup("/nope/missing.knl", Size::Small, DType::F32).unwrap_err();
+        assert!(format!("{err:#}").contains("reading kernel file"), "{err:#}");
+    }
 
     #[test]
     fn all_kernels_build_at_all_sizes() {

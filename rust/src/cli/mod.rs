@@ -7,8 +7,15 @@
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
 //! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
 //! nlp-dse space --kernel 2mm --size M
+//! nlp-dse gen [--seed S] [--count N] [--out-dir DIR] [--sampled] [--depth/--width/...]
 //! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla] [--jobs N]
 //! ```
+//!
+//! Everywhere a kernel is named, the spec is either a registered
+//! benchmark (`--kernel 2mm`) or a `.knl` file (`--kernel-file p.knl`,
+//! or a path given to `--kernel`) — resolution goes through
+//! [`benchmarks::lookup`], and `gen` emits seeded random `.knl` corpora
+//! for the other commands to consume.
 //!
 //! The `dse` command dispatches through the engine [`Registry`] — any
 //! registered engine name works, with no per-engine code here. The
@@ -27,6 +34,7 @@ pub mod args;
 use crate::benchmarks::{self, Size};
 use crate::coordinator::{self, engine_names, CampaignConfig, CampaignResult};
 use crate::engine::{Evaluator, Explorer, Registry};
+use crate::frontend;
 use crate::hls::Device;
 use crate::ir::DType;
 use crate::nlp::{self, BatchEvaluator, NlpProblem, RustFeatureEvaluator};
@@ -64,6 +72,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "solve" => cmd_solve(&mut args)?,
         "bound" => cmd_bound(&mut args)?,
         "space" => cmd_space(&mut args)?,
+        "gen" => cmd_gen(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
         "engines" => cmd_engines(),
         "help" | "" => help(),
@@ -91,12 +100,17 @@ fn help() -> String {
            bound    K [--size S] [--assign loop=uf,...] [--pipeline loop,...] [--cap N]\n\
                     (achievable-latency lower bound of a partial pragma configuration)\n\
            space    --kernel K --size S\n\
+           gen      [--seed S] [--count N] [--out-dir DIR] [--sampled]\n\
+                    [--depth D --width W --nests K --arrays A --max-trip T]\n\
+                    (emit seeded random .knl kernels; single kernel prints to stdout)\n\
            campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
            engines  (list the registered exploration engines)\n\
          \n\
          common flags: --out FILE  --threads N  --jobs N  --dtype f32|f64\n\
          (--jobs: NLP-solver worker threads; default = all cores, 1 = serial;\n\
-          completed searches are bit-identical for every value)\n",
+          completed searches are bit-identical for every value)\n\
+         kernel specs: --kernel takes a benchmark name or a .knl path;\n\
+         --kernel-file PATH forces file parsing (see `gen`)\n",
         engines = Registry::builtin().names().join("|")
     )
 }
@@ -225,11 +239,19 @@ fn parse_size(args: &mut Args) -> Result<Option<Size>> {
     }
 }
 
-fn parse_dtype(args: &mut Args) -> DType {
-    match args.opt("dtype").as_deref() {
-        Some("f64") => DType::F64,
-        _ => DType::F32,
+/// `--dtype` as given (`None` when the flag is absent).
+fn parse_dtype_opt(args: &mut Args) -> Result<Option<DType>> {
+    match args.opt("dtype") {
+        None => Ok(None),
+        Some(v) => DType::from_name(&v)
+            .map(Some)
+            .ok_or_else(|| anyhow!("bad --dtype {v} (want f32 or f64)")),
     }
+}
+
+/// `--dtype`, defaulting to f32 (the paper's main precision).
+fn parse_dtype(args: &mut Args) -> Result<DType> {
+    Ok(parse_dtype_opt(args)?.unwrap_or(DType::F32))
 }
 
 /// `--jobs N` (≥ 1): NLP-solver worker threads. `None` = caller default.
@@ -246,14 +268,39 @@ fn parse_jobs(args: &mut Args) -> Result<Option<usize>> {
     }
 }
 
+/// Kernel spec: `--kernel-file PATH` (always parsed as a `.knl` file,
+/// never consulted against the registry — a file named like a benchmark
+/// must not silently resolve to the benchmark) or `--kernel NAME`
+/// (registry name or `.knl` path — [`benchmarks::lookup`] resolves both).
+enum KernelSpec {
+    File(String),
+    Name(String),
+}
+
+impl KernelSpec {
+    fn kernel(&self, size: Size, dtype: DType) -> Result<crate::ir::Kernel> {
+        match self {
+            KernelSpec::File(p) => frontend::parse_file(p),
+            KernelSpec::Name(n) => benchmarks::lookup(n, size, dtype),
+        }
+    }
+}
+
+fn kernel_spec(args: &mut Args) -> Result<KernelSpec> {
+    if let Some(p) = args.opt("kernel-file") {
+        return Ok(KernelSpec::File(p));
+    }
+    if let Some(n) = args.opt("kernel") {
+        return Ok(KernelSpec::Name(n));
+    }
+    Err(anyhow!("--kernel <name> or --kernel-file <path.knl> required"))
+}
+
 fn build_kernel(args: &mut Args) -> Result<(crate::ir::Kernel, Analysis, Device)> {
-    let name = args
-        .opt("kernel")
-        .ok_or_else(|| anyhow!("--kernel required"))?;
+    let spec = kernel_spec(args)?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
-    let dtype = parse_dtype(args);
-    let k = benchmarks::build(&name, size, dtype)
-        .ok_or_else(|| anyhow!("unknown kernel `{name}` (see `space` for the list)"))?;
+    let dtype = parse_dtype(args)?;
+    let k = spec.kernel(size, dtype)?;
     let a = Analysis::new(&k);
     Ok((k, a, Device::u200()))
 }
@@ -279,11 +326,9 @@ fn make_evaluator(args: &mut Args) -> Box<dyn BatchEvaluator> {
 /// dispatches, and the output is the engine-agnostic exploration render.
 fn cmd_dse(args: &mut Args) -> Result<String> {
     let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
-    let name = args
-        .opt("kernel")
-        .ok_or_else(|| anyhow!("--kernel required"))?;
+    let spec = kernel_spec(args)?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
-    let dtype = parse_dtype(args);
+    let dtype = parse_dtype(args)?;
     // make_evaluator reports artifact load / fallback on stderr
     let evaluator = Evaluator::custom(std::sync::Arc::from(make_evaluator(args)));
     let dse_cfg = crate::dse::DseConfig {
@@ -291,7 +336,7 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
         jobs: parse_jobs(args)?.unwrap_or_else(nlp::default_jobs),
         ..Default::default()
     };
-    let explorer = Explorer::kernel_dtype(&name, size, dtype)?
+    let explorer = Explorer::custom(spec.kernel(size, dtype)?)
         .evaluator(evaluator)
         .dse_config(dse_cfg)
         .engine(&engine)?;
@@ -302,16 +347,15 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
 /// `bound`: achievable-latency lower bound of a (possibly partial) pragma
 /// configuration, through the `Explorer` facade's symbolic bound model.
 fn cmd_bound(args: &mut Args) -> Result<String> {
-    let name = args
-        .opt("kernel")
-        .ok_or_else(|| anyhow!("--kernel required (or `bound <kernel>`)"))?;
+    let spec = kernel_spec(args)
+        .map_err(|_| anyhow!("--kernel or --kernel-file required (or `bound <kernel>`)"))?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
-    let dtype = parse_dtype(args);
+    let dtype = parse_dtype(args)?;
     // --jobs is accepted (and validated) on every solver-adjacent command
     // for CLI uniformity, but the bound itself is a single interval
     // evaluation — there is nothing to parallelize here
     let _ = parse_jobs(args)?;
-    let ex = Explorer::kernel_dtype(&name, size, dtype)?;
+    let ex = Explorer::custom(spec.kernel(size, dtype)?);
     let k = ex.kernel_ref();
 
     let resolve = |tok: &str| -> Result<crate::ir::LoopId> {
@@ -431,14 +475,16 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
 }
 
 fn cmd_space(args: &mut Args) -> Result<String> {
-    if args.opt("kernel").is_none() {
+    if args.opt("kernel").is_none() && args.opt("kernel-file").is_none() {
         let mut out = String::from("available kernels:\n");
         for n in benchmarks::ALL {
             out.push_str(&format!("  {n}\n"));
         }
+        out.push_str("(or any .knl file — see `gen` and --kernel-file)\n");
         return Ok(out);
     }
     args.put_back("kernel");
+    args.put_back("kernel-file");
     let (k, a, _dev) = build_kernel(args)?;
     let s = Space::new(&k, &a);
     let mut out = format!(
@@ -469,6 +515,116 @@ fn cmd_space(args: &mut Args) -> Result<String> {
         ));
     }
     Ok(out)
+}
+
+/// `gen`: emit seeded random `.knl` kernels — one to stdout, or a
+/// corpus under `--out-dir` with one file per seed. Seeds are logged in
+/// the summary so any kernel can be regenerated exactly.
+fn cmd_gen(args: &mut Args) -> Result<String> {
+    let seed: u64 = args.opt("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+    let count: usize = args
+        .opt("count")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(1);
+    if count == 0 {
+        bail!("--count must be >= 1");
+    }
+    // the summary advertises seeds `seed..=last` as the replay handle —
+    // they must exist, not wrap
+    let last = seed
+        .checked_add(count as u64 - 1)
+        .ok_or_else(|| anyhow!("--seed {seed} + --count {count} overflows the seed range"))?;
+    // --sampled derives the knobs from each seed (max scenario
+    // diversity, one-u64 replay); explicitly passed knob flags apply on
+    // top in either mode, so a `--max-trip 8` cap is never silently lost
+    let sampled = args.flag("sampled");
+    let depth: Option<usize> = args.opt("depth").map(|v| v.parse()).transpose()?;
+    let width: Option<usize> = args.opt("width").map(|v| v.parse()).transpose()?;
+    let nests: Option<usize> = args.opt("nests").map(|v| v.parse()).transpose()?;
+    let arrays: Option<usize> = args.opt("arrays").map(|v| v.parse()).transpose()?;
+    let max_trip: Option<u64> = args.opt("max-trip").map(|v| v.parse()).transpose()?;
+    let dtype = parse_dtype_opt(args)?;
+    let out_dir = args.opt("out-dir");
+    if count > 1 && out_dir.is_none() {
+        bail!("--count {count} needs --out-dir <dir> (a corpus is one file per seed)");
+    }
+    let mut summary = String::new();
+    for i in 0..count {
+        let s = seed + i as u64;
+        let mut cfg = if sampled {
+            frontend::GenConfig::sampled(s)
+        } else {
+            frontend::GenConfig::with_seed(s)
+        };
+        if let Some(v) = depth {
+            cfg.depth = v;
+        }
+        if let Some(v) = width {
+            cfg.width = v;
+        }
+        if let Some(v) = nests {
+            cfg.nests = v;
+        }
+        if let Some(v) = arrays {
+            cfg.arrays = v;
+        }
+        if let Some(v) = max_trip {
+            cfg.max_trip = v;
+        }
+        if let Some(v) = dtype {
+            cfg.dtype = v;
+        }
+        let k = frontend::generate(&cfg);
+        let text = frontend::pretty::print(&k);
+        match &out_dir {
+            None => return Ok(text),
+            Some(dir) => {
+                std::fs::create_dir_all(dir)?;
+                let path = format!("{dir}/{}.knl", k.name);
+                std::fs::write(&path, &text)?;
+                summary.push_str(&format!(
+                    "seed {s:>6}  {}  ({} loops, {} stmts) -> {path}\n",
+                    k.name,
+                    k.n_loops(),
+                    k.n_stmts()
+                ));
+            }
+        }
+    }
+    let mut knobs: Vec<String> = Vec::new();
+    if let Some(v) = depth {
+        knobs.push(format!("depth<={v}"));
+    }
+    if let Some(v) = width {
+        knobs.push(format!("width<={v}"));
+    }
+    if let Some(v) = nests {
+        knobs.push(format!("nests<={v}"));
+    }
+    if let Some(v) = arrays {
+        knobs.push(format!("arrays~{v}"));
+    }
+    if let Some(v) = max_trip {
+        knobs.push(format!("max-trip {v}"));
+    }
+    if let Some(v) = dtype {
+        knobs.push(v.name().to_string());
+    }
+    summary.push_str(&format!(
+        "generated {count} kernel(s), seeds {seed}..={last} ({}{})\n",
+        if sampled {
+            "knobs sampled per seed"
+        } else {
+            "default knobs"
+        },
+        if knobs.is_empty() {
+            String::new()
+        } else {
+            format!("; pinned: {}", knobs.join(" "))
+        }
+    ));
+    Ok(summary)
 }
 
 fn cmd_campaign(args: &mut Args) -> Result<String> {
@@ -540,4 +696,70 @@ pub fn campaign_json(r: &CampaignResult) -> crate::util::json::Json {
         arr.push(o);
     }
     arr
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_kernel_surfaces_the_clean_lookup_error() {
+        for argv in [
+            &["dse", "--kernel", "definitely-not-a-kernel"][..],
+            &["solve", "--kernel", "definitely-not-a-kernel", "--cap", "16"][..],
+            &["bound", "definitely-not-a-kernel"][..],
+            &["space", "--kernel", "definitely-not-a-kernel"][..],
+        ] {
+            let err = run(argv).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("unknown kernel"), "{argv:?}: {msg}");
+            assert!(msg.contains("--kernel-file"), "{argv:?}: {msg}");
+            assert!(msg.contains("`gen`"), "{argv:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn kernel_file_never_falls_back_to_the_registry() {
+        // a --kernel-file named like a benchmark must be parsed as a
+        // file (here: reported missing), never resolved to the benchmark
+        let err = run(&["solve", "--kernel-file", "gemm", "--cap", "16"]).unwrap_err();
+        assert!(format!("{err:#}").contains("reading kernel file"), "{err:#}");
+    }
+
+    #[test]
+    fn missing_kernel_flag_is_reported() {
+        let err = run(&["solve"]).unwrap_err();
+        assert!(format!("{err:#}").contains("--kernel <name> or --kernel-file"));
+    }
+
+    #[test]
+    fn gen_then_solve_via_kernel_file() {
+        let dir = std::env::temp_dir().join("nlp_dse_cli_gen_test");
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        run(&["gen", "--seed", "9", "--count", "3", "--max-trip", "8", "--out-dir", &dir_s])
+            .unwrap();
+        let mut files: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().path())
+            .collect();
+        files.sort();
+        assert_eq!(files.len(), 3, "{files:?}");
+        let knl = files[0].to_str().unwrap();
+        // the emitted corpus drives every kernel-consuming command
+        run(&["solve", "--kernel-file", knl, "--cap", "16", "--jobs", "1"]).unwrap();
+        run(&["space", "--kernel-file", knl]).unwrap();
+        run(&["bound", "--kernel-file", knl]).unwrap();
+        // and a path passed to --kernel resolves identically
+        run(&["space", "--kernel", knl]).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gen_without_out_dir_prints_knl_text() {
+        // count 1 prints; count > 1 requires a directory
+        run(&["gen", "--seed", "3", "--max-trip", "8"]).unwrap();
+        let err = run(&["gen", "--count", "2"]).unwrap_err();
+        assert!(format!("{err:#}").contains("--out-dir"));
+    }
 }

@@ -186,11 +186,10 @@ struct StaticInfo {
     original_gflops: f64,
 }
 
-fn static_info(name: &str, size: Size, dtype: DType) -> StaticInfo {
-    let k = benchmarks::build(name, size, dtype)
-        .unwrap_or_else(|| panic!("unknown kernel {name}"));
+fn static_info(name: &str, size: Size, dtype: DType) -> anyhow::Result<StaticInfo> {
+    let k = benchmarks::lookup(name, size, dtype)?;
     let a = Analysis::new(&k);
-    static_info_from(&k, &a)
+    Ok(static_info_from(&k, &a))
 }
 
 fn static_info_from(k: &crate::ir::Kernel, a: &Analysis) -> StaticInfo {
@@ -228,8 +227,13 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
     for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
         let tx = tx.clone();
         let dtype = cfg.dtype;
-        pool.execute(move || {
-            let _ = tx.send(CampaignMsg::Stat(idx, static_info(&name, size, dtype)));
+        pool.execute(move || match static_info(&name, size, dtype) {
+            Ok(st) => {
+                let _ = tx.send(CampaignMsg::Stat(idx, st));
+            }
+            // an unresolvable kernel drops its row (reported, not fatal —
+            // the rest of the campaign proceeds)
+            Err(err) => eprintln!("[campaign] skipping kernel `{name}`: {err:#}"),
         });
     }
     for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
@@ -246,8 +250,19 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
             let dtype = cfg.dtype;
             let use_xla = cfg.use_xla;
             pool.execute(move || {
-                let k = benchmarks::build(&name, size, dtype)
-                    .unwrap_or_else(|| panic!("unknown kernel {name}"));
+                let k = match benchmarks::lookup(&name, size, dtype) {
+                    Ok(k) => k,
+                    // report independently: for file-backed kernels this
+                    // lookup re-reads the file and can fail even when the
+                    // static-columns job succeeded (file changed between)
+                    Err(err) => {
+                        eprintln!(
+                            "[campaign] {name}-{}: exploration skipped: {err:#}",
+                            size.tag()
+                        );
+                        return;
+                    }
+                };
                 let a = Analysis::new(&k);
                 let dev = Device::u200();
                 // each job gets its own evaluator (PJRT is thread-affine);
@@ -311,10 +326,10 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
 
 /// Process one kernel instance sequentially through the [`Explorer`]
 /// facade (used for single-kernel flows; campaigns go through
-/// [`run_campaign`]).
-pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
-    let explorer = Explorer::kernel_dtype(name, size, cfg.dtype)
-        .unwrap_or_else(|e| panic!("{e:#}"))
+/// [`run_campaign`]). Errors on unresolvable kernel specs (the facade
+/// accepts registry names and `.knl` file paths alike).
+pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> anyhow::Result<KernelRow> {
+    let explorer = Explorer::kernel_dtype(name, size, cfg.dtype)?
         .evaluator(if cfg.use_xla {
             Evaluator::auto()
         } else {
@@ -331,7 +346,7 @@ pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
             Err(err) => eprintln!("[campaign] {name}-{}: {err:#}", size.tag()),
         }
     }
-    KernelRow {
+    Ok(KernelRow {
         name: name.to_string(),
         size,
         nl: st.nl,
@@ -340,7 +355,7 @@ pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> KernelRow {
         footprint_bytes: st.footprint_bytes,
         original_gflops: st.original_gflops,
         explorations,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -412,9 +427,27 @@ mod tests {
     fn run_one_matches_campaign_engines() {
         let mut cfg = CampaignConfig::quick();
         cfg.engines = engine_names(&["nlpdse", "random"]);
-        let row = run_one(&cfg, "gemm", Size::Small);
+        let row = run_one(&cfg, "gemm", Size::Small).unwrap();
         assert_eq!(row.explorations.len(), 2);
         assert!(row.exploration("random").is_some());
         assert!(row.exploration("random").unwrap().best_gflops > 0.0);
+    }
+
+    #[test]
+    fn unknown_kernel_is_skipped_not_fatal_too() {
+        // the old path panicked the worker thread; now the row is
+        // dropped with a clean report and the campaign completes
+        let mut cfg = CampaignConfig::quick();
+        cfg.kernels = vec![
+            ("gemm".into(), Size::Small),
+            ("definitely-not-a-kernel".into(), Size::Small),
+        ];
+        cfg.engines = engine_names(&["nlpdse"]);
+        let r = run_campaign(&cfg);
+        let names: Vec<&str> = r.rows.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names, vec!["gemm"]);
+        // single-kernel flows surface the same clean error
+        let err = run_one(&cfg, "definitely-not-a-kernel", Size::Small).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown kernel"), "{err:#}");
     }
 }

@@ -20,7 +20,7 @@ use crate::model::sym::{BoundModel, PartialDesign};
 use crate::nlp::{BatchEvaluator, RustFeatureEvaluator, SymbolicEvaluator};
 use crate::poly::Analysis;
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::sync::Arc;
 
 /// Batch-evaluator selection policy, resolved once per `run`.
@@ -99,15 +99,23 @@ impl Explorer {
         Explorer::kernel_dtype(name, size, DType::F32)
     }
 
-    /// Session over a registered benchmark kernel at chosen precision.
+    /// Session over a kernel spec at chosen precision: a registered
+    /// benchmark name or a `.knl` file path (which carries its own dtype
+    /// and size — see [`benchmarks::lookup`]).
     pub fn kernel_dtype(name: &str, size: Size, dtype: DType) -> Result<Explorer> {
-        let k = benchmarks::build(name, size, dtype).ok_or_else(|| {
-            anyhow!(
-                "unknown kernel `{name}` (known: {})",
-                benchmarks::ALL.join(", ")
-            )
-        })?;
-        Ok(Explorer::custom(k))
+        Ok(Explorer::custom(benchmarks::lookup(name, size, dtype)?))
+    }
+
+    /// Session over a kernel parsed from a `.knl` file.
+    pub fn kernel_file(path: &str) -> Result<Explorer> {
+        Ok(Explorer::custom(crate::frontend::parse_file(path)?))
+    }
+
+    /// Session over a freshly generated random kernel (see
+    /// [`crate::frontend::generate`]) — every engine and evaluator runs
+    /// on generated kernels exactly as on the benchmark corpus.
+    pub fn generated(cfg: &crate::frontend::GenConfig) -> Explorer {
+        Explorer::custom(crate::frontend::generate(cfg))
     }
 
     /// Session over a user-built kernel (see `ir::KernelBuilder`).
@@ -304,6 +312,33 @@ mod tests {
             .engine("does-not-exist")
             .unwrap_err();
         assert!(format!("{err:#}").contains("unknown engine"));
+    }
+
+    #[test]
+    fn facade_accepts_generated_and_file_kernels() {
+        let cfg = crate::frontend::GenConfig {
+            max_trip: 8,
+            depth: 2,
+            ..crate::frontend::GenConfig::with_seed(5)
+        };
+        let ex = Explorer::generated(&cfg)
+            .evaluator(Evaluator::rust())
+            .run()
+            .unwrap();
+        assert_eq!(ex.engine, "nlpdse");
+        assert!(ex.best.is_some());
+        // the same kernel via a .knl file gives the same exploration
+        let k = crate::frontend::generate(&cfg);
+        let path = std::env::temp_dir().join("nlp_dse_explorer_test.knl");
+        std::fs::write(&path, crate::frontend::pretty::print(&k)).unwrap();
+        let ex2 = Explorer::kernel_file(path.to_str().unwrap())
+            .unwrap()
+            .evaluator(Evaluator::rust())
+            .run()
+            .unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(ex.best_gflops, ex2.best_gflops);
+        assert_eq!(ex.synth_calls, ex2.synth_calls);
     }
 
     #[test]

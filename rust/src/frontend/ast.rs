@@ -1,0 +1,115 @@
+//! Surface AST of the `.knl` DSL — what the parser produces and the
+//! random-kernel generator constructs directly (both lower through the
+//! same semantic checks in [`super::parser::lower`], so generated
+//! kernels are by construction inside the DSL's expressible class).
+//!
+//! Names are unresolved strings here; lowering resolves iterator names
+//! against the enclosing-loop scope and array names against the
+//! declaration list, reporting failures against each node's [`Span`].
+
+use super::diag::Span;
+use crate::ir::{ArrayDir, DType, OpKind};
+
+#[derive(Clone, Debug)]
+pub struct KernelAst {
+    pub name: String,
+    pub dtype: DType,
+    pub arrays: Vec<ArrayAst>,
+    pub roots: Vec<LoopAst>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArrayAst {
+    pub name: String,
+    pub dims: Vec<u64>,
+    pub dir: ArrayDir,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub enum NodeAst {
+    Loop(LoopAst),
+    Stmt(StmtAst),
+}
+
+#[derive(Clone, Debug)]
+pub struct LoopAst {
+    pub name: String,
+    pub lb: AffAst,
+    pub ub: AffAst,
+    pub body: Vec<NodeAst>,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct StmtAst {
+    pub name: String,
+    pub writes: Vec<AccessAst>,
+    pub reads: Vec<AccessAst>,
+    /// `(op, count)` entries, order- and grouping-preserving (the IR
+    /// compares `ops` vectors exactly).
+    pub ops: Vec<(OpKind, u32)>,
+    /// Explicit internal op chain; `None` = the default all-sequential
+    /// expansion of `ops`.
+    pub chain: Option<Vec<OpKind>>,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug)]
+pub struct AccessAst {
+    pub array: String,
+    pub indices: Vec<AffAst>,
+    pub span: Span,
+}
+
+/// An affine expression as written: a signed sum of terms.
+#[derive(Clone, Debug, Default)]
+pub struct AffAst {
+    pub terms: Vec<AffTermAst>,
+    pub span: Span,
+}
+
+/// One affine term: `coeff * iter`, or a constant when `iter` is `None`.
+#[derive(Clone, Debug)]
+pub struct AffTermAst {
+    pub coeff: i64,
+    pub iter: Option<String>,
+    pub span: Span,
+}
+
+impl AffAst {
+    pub fn constant(c: i64) -> AffAst {
+        AffAst {
+            terms: vec![AffTermAst {
+                coeff: c,
+                iter: None,
+                span: Span::default(),
+            }],
+            span: Span::default(),
+        }
+    }
+
+    pub fn var(name: &str) -> AffAst {
+        AffAst {
+            terms: vec![AffTermAst {
+                coeff: 1,
+                iter: Some(name.to_string()),
+                span: Span::default(),
+            }],
+            span: Span::default(),
+        }
+    }
+
+    /// `name + c` (the generator's stencil-offset form).
+    pub fn var_plus(name: &str, c: i64) -> AffAst {
+        let mut e = AffAst::var(name);
+        if c != 0 {
+            e.terms.push(AffTermAst {
+                coeff: c,
+                iter: None,
+                span: Span::default(),
+            });
+        }
+        e
+    }
+}

@@ -1,0 +1,142 @@
+//! Source-span diagnostics for the `.knl` frontend.
+//!
+//! Every token and AST node carries a byte-offset [`Span`]; when the
+//! lexer, parser, or lowering rejects an input, the [`ParseError`] is
+//! rendered against the original source with a line/column header and a
+//! caret underline — the diagnostic style users of rustc/clang expect:
+//!
+//! ```text
+//! error: unknown iterator `k2` (in scope: i, j)
+//!   --> gemm.knl:12:20
+//!    |
+//! 12 |   stmt S1 writes C[i][k2] reads A[i][k2];
+//!    |                       ^^
+//! ```
+
+/// A half-open byte range into the source text.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Span {
+    pub off: u32,
+    pub len: u32,
+}
+
+impl Span {
+    pub fn new(off: usize, len: usize) -> Span {
+        Span {
+            off: off as u32,
+            len: len as u32,
+        }
+    }
+
+    /// The span covering both `self` and `other`.
+    pub fn to(self, other: Span) -> Span {
+        let off = self.off.min(other.off);
+        let end = (self.off + self.len).max(other.off + other.len);
+        Span {
+            off,
+            len: end - off,
+        }
+    }
+}
+
+/// A frontend error: one message anchored to one source span, rendered
+/// eagerly (the error outlives the source text it points into).
+#[derive(Debug)]
+pub struct ParseError {
+    /// One-line description (no source context).
+    pub msg: String,
+    /// Origin label (file path, `<generated>`, `<inline>`).
+    pub origin: String,
+    /// 1-based source line of the span start.
+    pub line: u32,
+    /// 1-based source column of the span start.
+    pub col: u32,
+    rendered: String,
+}
+
+impl ParseError {
+    pub fn new(src: &str, origin: &str, span: Span, msg: impl Into<String>) -> ParseError {
+        let msg = msg.into();
+        let (line, col, text) = locate(src, span.off as usize);
+        let mut rendered = format!("error: {msg}\n  --> {origin}:{line}:{col}\n");
+        // snippet + caret underline (skip when the span points past a
+        // source we don't have, e.g. generator-internal lowering)
+        if !src.is_empty() {
+            let gutter = line.to_string();
+            let pad = " ".repeat(gutter.len());
+            let avail = (text.len() + 1).saturating_sub(col as usize).max(1);
+            let carets = "^".repeat((span.len as usize).clamp(1, avail));
+            rendered.push_str(&format!("{pad} |\n{gutter} | {text}\n{pad} | "));
+            rendered.push_str(&" ".repeat(col as usize - 1));
+            rendered.push_str(&carets);
+            rendered.push('\n');
+        }
+        ParseError {
+            msg,
+            origin: origin.to_string(),
+            line,
+            col,
+            rendered,
+        }
+    }
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.rendered.trim_end())
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+/// Map a byte offset to (1-based line, 1-based column, line text).
+fn locate(src: &str, off: usize) -> (u32, u32, String) {
+    let off = off.min(src.len());
+    let mut line = 1u32;
+    let mut line_start = 0usize;
+    for (i, b) in src.bytes().enumerate() {
+        if i >= off {
+            break;
+        }
+        if b == b'\n' {
+            line += 1;
+            line_start = i + 1;
+        }
+    }
+    let text: String = src[line_start..].lines().next().unwrap_or("").to_string();
+    let col = (off - line_start) as u32 + 1;
+    (line, col, text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locates_line_and_column() {
+        let src = "kernel \"x\" f32\narray a[4] in\nfor i in 0 .. 4 {\n";
+        let e = ParseError::new(src, "x.knl", Span::new(21, 3), "boom");
+        assert_eq!(e.line, 2);
+        assert_eq!(e.col, 7);
+        let s = format!("{e}");
+        assert!(s.contains("error: boom"), "{s}");
+        assert!(s.contains("x.knl:2:7"), "{s}");
+        assert!(s.contains("array a[4] in"), "{s}");
+        assert!(s.contains('^'), "{s}");
+    }
+
+    #[test]
+    fn span_union() {
+        let a = Span::new(4, 2);
+        let b = Span::new(10, 3);
+        assert_eq!(a.to(b), Span::new(4, 9));
+        assert_eq!(b.to(a), Span::new(4, 9));
+    }
+
+    #[test]
+    fn tolerates_offset_past_end() {
+        let e = ParseError::new("ab", "x", Span::new(99, 1), "eof");
+        assert_eq!(e.line, 1);
+        assert!(format!("{e}").contains("error: eof"));
+    }
+}

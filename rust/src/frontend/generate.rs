@@ -1,0 +1,440 @@
+//! Seeded random-kernel generator: unbounded scenario diversity for the
+//! differential fuzz suites (`tests/property_frontend_fuzz.rs`), corpus
+//! emission (`nlp-dse gen`), and ad-hoc stress kernels.
+//!
+//! The generator emits the parser's surface AST and lowers it through
+//! the exact same semantic checks as textual input, so every generated
+//! kernel is **by construction regular** — inside the paper's restricted
+//! program class and inside the DSL's expressible set:
+//!
+//! * unit-stride loops with affine bounds: constant `[0, E)` or
+//!   triangular against an enclosing iterator (`[0, i)` / `[i+1, E)`);
+//! * every array access is affine with indices of the form `iter`,
+//!   `iter + c`, or a constant, always within the array's extents
+//!   (all arrays share one extent `B` ≥ every loop extent, and offsets
+//!   are only drawn when they provably fit);
+//! * statement op multisets/chains drawn from the four scalar op kinds;
+//! * array directions are derived from actual use (read-only → `in`,
+//!   write-only → `out`, both → `inout`/`temp`), so transfer analysis
+//!   sees a consistent story.
+//!
+//! Determinism: `(seed, knobs)` fully determine the kernel — identical
+//! calls reproduce identical kernels bit-for-bit (splitmix64, stable
+//! across platforms), which is what lets failing fuzz cases be replayed
+//! from the seed alone.
+
+use super::ast::{AccessAst, AffAst, ArrayAst, KernelAst, LoopAst, NodeAst, StmtAst};
+use super::diag::Span;
+use super::parser;
+use crate::ir::{ArrayDir, DType, Kernel, OpKind, Stmt};
+use crate::util::rng::Rng;
+
+/// Generator knobs. All counts are *maxima* — each kernel draws its
+/// actual shape uniformly under them.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    pub seed: u64,
+    /// Max loop-nest depth (≥ 1).
+    pub depth: usize,
+    /// Max statements per innermost loop (≥ 1).
+    pub width: usize,
+    /// Max top-level loop nests (≥ 1).
+    pub nests: usize,
+    /// Soft cap on distinct arrays (≥ 1): reuse is forced once reached,
+    /// except when a statement needs an arity no existing array has.
+    pub arrays: usize,
+    /// Loop extents are drawn from a divisor-rich menu capped here.
+    pub max_trip: u64,
+    /// Probability that an eligible inner loop gets triangular bounds.
+    pub triangular: f64,
+    pub dtype: DType,
+}
+
+impl Default for GenConfig {
+    fn default() -> GenConfig {
+        GenConfig {
+            seed: 0,
+            depth: 3,
+            width: 2,
+            nests: 2,
+            arrays: 4,
+            max_trip: 64,
+            triangular: 0.25,
+            dtype: DType::F32,
+        }
+    }
+}
+
+impl GenConfig {
+    pub fn with_seed(seed: u64) -> GenConfig {
+        GenConfig {
+            seed,
+            ..GenConfig::default()
+        }
+    }
+
+    /// Derive the knobs themselves from the seed — one `u64` reproduces
+    /// the whole scenario (what the fuzz suites log for replay).
+    pub fn sampled(seed: u64) -> GenConfig {
+        let mut r = Rng::new(seed).derive("gen-knobs");
+        GenConfig {
+            seed,
+            depth: 1 + r.range(0, 3) as usize,
+            width: 1 + r.range(0, 2) as usize,
+            nests: 1 + r.range(0, 2) as usize,
+            arrays: 2 + r.range(0, 4) as usize,
+            max_trip: *r.choose(&[8, 12, 16, 24, 32, 48, 64]),
+            triangular: if r.chance(0.5) { 0.35 } else { 0.0 },
+            dtype: if r.chance(0.2) { DType::F64 } else { DType::F32 },
+        }
+    }
+}
+
+/// Generate one always-regular kernel from the config.
+pub fn generate(cfg: &GenConfig) -> Kernel {
+    let menu: Vec<u64> = [2u64, 3, 4, 6, 8, 10, 12, 16, 20, 24, 32, 40, 48, 64, 96, 128, 192, 256]
+        .into_iter()
+        .filter(|&e| e <= cfg.max_trip.max(2))
+        .collect();
+    let menu = if menu.is_empty() { vec![2] } else { menu };
+    let b = *menu.last().unwrap();
+    let mut g = Gen {
+        cfg,
+        rng: Rng::new(cfg.seed).derive("frontend-gen"),
+        menu,
+        b,
+        arrays: Vec::new(),
+        loop_ctr: 0,
+        stmt_ctr: 0,
+    };
+    let n_nests = 1 + g.rng.range(0, cfg.nests.max(1) as u64) as usize;
+    let mut roots = Vec::new();
+    let mut scope = Vec::new();
+    for _ in 0..n_nests {
+        let depth = 1 + g.rng.range(0, cfg.depth.max(1) as u64) as usize;
+        roots.push(g.gen_loop(depth, &mut scope));
+    }
+    // split the generator: direction draws need the rng while reading
+    // the accumulated array specs
+    let mut rng = g.rng;
+    let b = g.b;
+    let arrays = g
+        .arrays
+        .iter()
+        .map(|a| ArrayAst {
+            name: a.name.clone(),
+            dims: vec![b; a.arity],
+            dir: a.dir(&mut rng),
+            span: Span::default(),
+        })
+        .collect();
+    let ast = KernelAst {
+        name: format!("gen-{:016x}", cfg.seed),
+        dtype: cfg.dtype,
+        arrays,
+        roots,
+    };
+    parser::lower(&ast, "", "<generated>").unwrap_or_else(|e| {
+        panic!(
+            "generator produced an invalid kernel (seed {:#x}): {e}",
+            cfg.seed
+        )
+    })
+}
+
+struct ArrSpec {
+    name: String,
+    arity: usize,
+    read: bool,
+    written: bool,
+}
+
+impl ArrSpec {
+    fn dir(&self, rng: &mut Rng) -> ArrayDir {
+        match (self.read, self.written) {
+            (true, false) => ArrayDir::In,
+            (false, true) => ArrayDir::Out,
+            // an accumulator both produced and consumed here is
+            // occasionally a pure intermediate
+            (true, true) if rng.chance(0.3) => ArrayDir::Temp,
+            _ => ArrayDir::InOut,
+        }
+    }
+}
+
+/// One enclosing loop during generation: its name and an exclusive
+/// upper bound on the iterator's value (`values ∈ [0, hint)`), the
+/// invariant that keeps every access inside the shared extent `B`.
+struct ScopeLoop {
+    name: String,
+    hint: u64,
+}
+
+struct Gen<'c> {
+    cfg: &'c GenConfig,
+    rng: Rng,
+    menu: Vec<u64>,
+    /// Shared array extent: every dimension of every array, ≥ every
+    /// loop extent, so any iterator indexes any dimension safely.
+    b: u64,
+    arrays: Vec<ArrSpec>,
+    loop_ctr: usize,
+    stmt_ctr: usize,
+}
+
+impl<'c> Gen<'c> {
+    fn gen_loop(&mut self, depth_left: usize, scope: &mut Vec<ScopeLoop>) -> LoopAst {
+        let name = format!("l{}", self.loop_ctr);
+        self.loop_ctr += 1;
+        // triangular bounds need an enclosing iterator with ≥ 2 values
+        let tri: Vec<usize> = (0..scope.len()).filter(|&i| scope[i].hint >= 2).collect();
+        let (lb, ub, hint) = if !tri.is_empty() && self.rng.chance(self.cfg.triangular) {
+            let o = &scope[*self.rng.choose(&tri)];
+            if self.rng.chance(0.5) {
+                // [0, outer) — lu/covariance style
+                (AffAst::constant(0), AffAst::var(&o.name), o.hint)
+            } else {
+                // [outer + 1, E) — trmm/symm style
+                (
+                    AffAst::var_plus(&o.name, 1),
+                    AffAst::constant(o.hint as i64),
+                    o.hint,
+                )
+            }
+        } else {
+            let e = *self.rng.choose(&self.menu);
+            (AffAst::constant(0), AffAst::constant(e as i64), e)
+        };
+        scope.push(ScopeLoop {
+            name: name.clone(),
+            hint,
+        });
+        let mut body = Vec::new();
+        if depth_left <= 1 {
+            let n = 1 + self.rng.range(0, self.cfg.width.max(1) as u64) as usize;
+            for _ in 0..n {
+                body.push(NodeAst::Stmt(self.gen_stmt(scope, false)));
+            }
+        } else {
+            // optional init statement before the inner nest (gemm's
+            // `C *= beta` / 2mm's zero-fill shape)
+            if self.rng.chance(0.3) {
+                body.push(NodeAst::Stmt(self.gen_stmt(scope, true)));
+            }
+            let children = if self.rng.chance(0.25) { 2 } else { 1 };
+            for _ in 0..children {
+                let d = 1 + self.rng.range(0, depth_left as u64 - 1) as usize;
+                body.push(NodeAst::Loop(self.gen_loop(d, scope)));
+            }
+            if self.rng.chance(0.15) {
+                body.push(NodeAst::Stmt(self.gen_stmt(scope, false)));
+            }
+        }
+        scope.pop();
+        LoopAst {
+            name,
+            lb,
+            ub,
+            body,
+            span: Span::default(),
+        }
+    }
+
+    fn gen_stmt(&mut self, scope: &[ScopeLoop], init: bool) -> StmtAst {
+        let name = format!("s{}", self.stmt_ctr);
+        self.stmt_ctr += 1;
+        let depth = scope.len();
+        // reduction: the write ignores the innermost iterator and reads
+        // itself, making the innermost loop a tree-reducible recurrence
+        let reduction = !init && self.rng.chance(0.45);
+        let avail: Vec<usize> = if reduction { (0..depth.saturating_sub(1)).collect() } else { (0..depth).collect() };
+        let write_idx = self.pick_indices(scope, &avail, false);
+        let w_arr = self.pick_array(write_idx.len());
+        self.arrays[w_arr].written = true;
+        let write = AccessAst {
+            array: self.arrays[w_arr].name.clone(),
+            indices: write_idx,
+            span: Span::default(),
+        };
+        let mut reads = Vec::new();
+        let mut ops = Vec::new();
+        if !init {
+            if reduction {
+                self.arrays[w_arr].read = true;
+                reads.push(write.clone());
+            }
+            let all: Vec<usize> = (0..depth).collect();
+            let n_sources = 1 + self.rng.range(0, 2) as usize;
+            for _ in 0..n_sources {
+                let idx = self.pick_indices(scope, &all, true);
+                let arr = self.pick_array(idx.len());
+                self.arrays[arr].read = true;
+                reads.push(AccessAst {
+                    array: self.arrays[arr].name.clone(),
+                    indices: idx,
+                    span: Span::default(),
+                });
+            }
+            let n_entries = 1 + self.rng.range(0, 3) as usize;
+            for _ in 0..n_entries {
+                // Add/Mul-heavy mix, Div rare — matching the corpus
+                let op = match self.rng.range(0, 10) {
+                    0 => OpKind::Div,
+                    1 | 2 => OpKind::Sub,
+                    3..=6 => OpKind::Mul,
+                    _ => OpKind::Add,
+                };
+                let c = 1 + self.rng.range(0, 2) as u32;
+                ops.push((op, c));
+            }
+        }
+        // occasionally a shorter explicit chain (internal parallelism à
+        // la `(a*b) + (c*d)`)
+        let chain = if !ops.is_empty() && self.rng.chance(0.15) {
+            let full = Stmt::default_chain(&ops);
+            let len = 1 + self.rng.range(0, full.len() as u64) as usize;
+            let cut = full[..len].to_vec();
+            if cut == full {
+                None
+            } else {
+                Some(cut)
+            }
+        } else {
+            None
+        };
+        StmtAst {
+            name,
+            writes: vec![write],
+            reads,
+            ops,
+            chain,
+            span: Span::default(),
+        }
+    }
+
+    /// Index expressions over a subset of `avail` enclosing iterators,
+    /// outermost-first; empty `avail` degenerates to a scalar `[0]`
+    /// access (the `s += ...` accumulator shape). Offsets (`iter + c`)
+    /// are only drawn when `c` provably fits inside the shared extent.
+    fn pick_indices(&mut self, scope: &[ScopeLoop], avail: &[usize], offsets: bool) -> Vec<AffAst> {
+        if avail.is_empty() {
+            return vec![AffAst::constant(0)];
+        }
+        let max_arity = avail.len().min(3);
+        let mut arity = 1;
+        if max_arity > 1 && self.rng.chance(0.6) {
+            arity += 1;
+        }
+        if max_arity > 2 && self.rng.chance(0.3) {
+            arity += 1;
+        }
+        let mut picks = avail.to_vec();
+        self.rng.shuffle(&mut picks);
+        picks.truncate(arity);
+        picks.sort_unstable();
+        picks
+            .into_iter()
+            .map(|i| {
+                let l = &scope[i];
+                let room = self.b.saturating_sub(l.hint).min(2);
+                if offsets && room > 0 && self.rng.chance(0.25) {
+                    AffAst::var_plus(&l.name, (1 + self.rng.range(0, room)) as i64)
+                } else {
+                    AffAst::var(&l.name)
+                }
+            })
+            .collect()
+    }
+
+    /// Reuse an existing array of the wanted arity, or mint a new one
+    /// while under the (soft) array-count cap.
+    fn pick_array(&mut self, arity: usize) -> usize {
+        let candidates: Vec<usize> = (0..self.arrays.len())
+            .filter(|&i| self.arrays[i].arity == arity)
+            .collect();
+        let full = self.arrays.len() >= self.cfg.arrays.max(1);
+        if !candidates.is_empty() && (full || self.rng.chance(0.55)) {
+            return *self.rng.choose(&candidates);
+        }
+        let id = self.arrays.len();
+        self.arrays.push(ArrSpec {
+            name: format!("a{id}"),
+            arity,
+            read: false,
+            written: false,
+        });
+        id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{parse_kernel, pretty};
+    use crate::poly::Analysis;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = GenConfig::with_seed(42);
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.structural_diff(&b), None);
+        assert_eq!(pretty::print(&a), pretty::print(&b));
+    }
+
+    #[test]
+    fn seeds_diversify() {
+        let texts: std::collections::BTreeSet<String> = (0..8)
+            .map(|s| pretty::print(&generate(&GenConfig::sampled(s))))
+            .collect();
+        assert!(texts.len() >= 7, "only {} distinct kernels from 8 seeds", texts.len());
+    }
+
+    #[test]
+    fn generated_kernels_are_regular_and_roundtrip() {
+        for seed in 0..24 {
+            let cfg = GenConfig::sampled(seed);
+            let k = generate(&cfg);
+            assert!(k.n_loops() >= 1, "seed {seed}");
+            assert!(k.n_stmts() >= 1, "seed {seed}");
+            // analyses must hold on every generated kernel
+            let a = Analysis::new(&k);
+            assert!(a.total_flops >= 0.0);
+            for (i, tc) in a.tcs.iter().enumerate() {
+                assert!(
+                    tc.max <= cfg.max_trip.max(2),
+                    "seed {seed}: loop {i} TC {} above max_trip {}",
+                    tc.max,
+                    cfg.max_trip
+                );
+            }
+            // round-trip through the textual form
+            let text = pretty::print(&k);
+            let k2 = parse_kernel(&text, "<gen>").unwrap_or_else(|e| {
+                panic!("seed {seed}: generated kernel failed to reparse:\n{e}\n{text}")
+            });
+            assert_eq!(k.structural_diff(&k2), None, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn knobs_bound_the_shape() {
+        let cfg = GenConfig {
+            seed: 7,
+            depth: 2,
+            width: 1,
+            nests: 1,
+            arrays: 3,
+            max_trip: 8,
+            triangular: 0.0,
+            dtype: DType::F32,
+        };
+        for seed in 0..16 {
+            let k = generate(&GenConfig { seed, ..cfg.clone() });
+            assert!(k.loops.iter().all(|m| m.depth < 2), "depth bound");
+            assert_eq!(k.nest_roots().len(), 1, "nest bound");
+            let a = Analysis::new(&k);
+            assert!(a.tcs.iter().all(|t| t.max <= 8), "trip bound");
+        }
+    }
+}

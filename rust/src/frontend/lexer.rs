@@ -1,0 +1,235 @@
+//! Tokenizer for the `.knl` loop-nest DSL.
+//!
+//! The token set is deliberately tiny: identifiers, unsigned integer
+//! literals, quoted strings (kernel names may contain `-`), and the
+//! punctuation of the grammar. Keywords (`kernel`, `array`, `for`, `in`,
+//! `stmt`, …) are **contextual** — the lexer emits them as plain
+//! identifiers and the parser matches on the spelling where the grammar
+//! expects a keyword, so arrays named `in` or `out` (the CNN kernel has
+//! both) never collide with the syntax.
+
+use super::diag::{ParseError, Span};
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    Ident(String),
+    Int(u64),
+    Str(String),
+    LBrack,
+    RBrack,
+    LBrace,
+    RBrace,
+    Comma,
+    Semi,
+    Plus,
+    Minus,
+    Star,
+    DotDot,
+    Eof,
+}
+
+impl Tok {
+    /// Short human name for "expected X, found Y" messages.
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("`{s}`"),
+            Tok::Int(n) => format!("`{n}`"),
+            Tok::Str(s) => format!("\"{s}\""),
+            Tok::LBrack => "`[`".into(),
+            Tok::RBrack => "`]`".into(),
+            Tok::LBrace => "`{`".into(),
+            Tok::RBrace => "`}`".into(),
+            Tok::Comma => "`,`".into(),
+            Tok::Semi => "`;`".into(),
+            Tok::Plus => "`+`".into(),
+            Tok::Minus => "`-`".into(),
+            Tok::Star => "`*`".into(),
+            Tok::DotDot => "`..`".into(),
+            Tok::Eof => "end of input".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub span: Span,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Tokenize `src`. `#` starts a comment running to end of line.
+pub fn lex(src: &str, origin: &str) -> Result<Vec<Token>, ParseError> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut push = |tok: Tok, off: usize, len: usize, out: &mut Vec<Token>| {
+        out.push(Token {
+            tok,
+            span: Span::new(off, len),
+        });
+    };
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'[' | b']' | b'{' | b'}' | b',' | b';' | b'+' | b'-' | b'*' => {
+                let tok = match c {
+                    b'[' => Tok::LBrack,
+                    b']' => Tok::RBrack,
+                    b'{' => Tok::LBrace,
+                    b'}' => Tok::RBrace,
+                    b',' => Tok::Comma,
+                    b';' => Tok::Semi,
+                    b'+' => Tok::Plus,
+                    b'-' => Tok::Minus,
+                    _ => Tok::Star,
+                };
+                push(tok, i, 1, &mut out);
+                i += 1;
+            }
+            b'.' => {
+                if i + 1 < b.len() && b[i + 1] == b'.' {
+                    push(Tok::DotDot, i, 2, &mut out);
+                    i += 2;
+                } else {
+                    return Err(ParseError::new(
+                        src,
+                        origin,
+                        Span::new(i, 1),
+                        "stray `.` (ranges are written `lo .. hi`)",
+                    ));
+                }
+            }
+            b'"' => {
+                let start = i;
+                i += 1;
+                while i < b.len() && b[i] != b'"' && b[i] != b'\n' {
+                    i += 1;
+                }
+                if i >= b.len() || b[i] != b'"' {
+                    return Err(ParseError::new(
+                        src,
+                        origin,
+                        Span::new(start, i - start),
+                        "unterminated string literal",
+                    ));
+                }
+                let s = &src[start + 1..i];
+                i += 1;
+                push(Tok::Str(s.to_string()), start, i - start, &mut out);
+            }
+            b'0'..=b'9' => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let text = &src[start..i];
+                let n: u64 = text.parse().map_err(|_| {
+                    ParseError::new(
+                        src,
+                        origin,
+                        Span::new(start, i - start),
+                        format!("integer literal `{text}` overflows u64"),
+                    )
+                })?;
+                push(Tok::Int(n), start, i - start, &mut out);
+            }
+            c if is_ident_start(c) => {
+                let start = i;
+                while i < b.len() && is_ident_cont(b[i]) {
+                    i += 1;
+                }
+                push(Tok::Ident(src[start..i].to_string()), start, i - start, &mut out);
+            }
+            other => {
+                return Err(ParseError::new(
+                    src,
+                    origin,
+                    Span::new(i, 1),
+                    format!("unexpected character `{}`", other as char),
+                ));
+            }
+        }
+    }
+    push(Tok::Eof, src.len(), 0, &mut out);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src, "<test>").unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn basic_stream() {
+        let toks = kinds("for i in 0 .. 64 { stmt s0 writes a[i]; }");
+        assert_eq!(toks[0], Tok::Ident("for".into()));
+        assert_eq!(toks[2], Tok::Ident("in".into()));
+        assert_eq!(toks[3], Tok::Int(0));
+        assert_eq!(toks[4], Tok::DotDot);
+        assert_eq!(toks[5], Tok::Int(64));
+        assert_eq!(toks[6], Tok::LBrace);
+        assert_eq!(*toks.last().unwrap(), Tok::Eof);
+    }
+
+    #[test]
+    fn comments_and_strings() {
+        let toks = kinds("# header\nkernel \"jacobi-1d\" f32 # tail\n");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Ident("kernel".into()),
+                Tok::Str("jacobi-1d".into()),
+                Tok::Ident("f32".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn spans_point_at_tokens() {
+        let toks = lex("ab 12", "<test>").unwrap();
+        assert_eq!(toks[0].span, Span::new(0, 2));
+        assert_eq!(toks[1].span, Span::new(3, 2));
+    }
+
+    #[test]
+    fn affine_punctuation() {
+        let toks = kinds("2*i - j + 1");
+        assert_eq!(
+            toks,
+            vec![
+                Tok::Int(2),
+                Tok::Star,
+                Tok::Ident("i".into()),
+                Tok::Minus,
+                Tok::Ident("j".into()),
+                Tok::Plus,
+                Tok::Int(1),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn rejects_stray_dot_and_bad_char() {
+        assert!(lex("a . b", "<t>").unwrap_err().msg.contains("stray"));
+        assert!(lex("a @ b", "<t>").unwrap_err().msg.contains("unexpected character"));
+        assert!(lex("\"open", "<t>").unwrap_err().msg.contains("unterminated"));
+    }
+}

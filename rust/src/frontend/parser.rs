@@ -1,0 +1,985 @@
+//! Recursive-descent parser for the `.knl` loop-nest DSL, plus the
+//! lowering pass that resolves names and drives [`KernelBuilder`].
+//!
+//! Grammar (see DESIGN.md §9 for the full EBNF):
+//!
+//! ```text
+//! kernel  := "kernel" (STRING | IDENT) ("f32" | "f64") item*
+//! item    := "array" IDENT ("[" INT "]")+ dir
+//!          | loop
+//! dir     := "in" | "out" | "inout" | "temp"
+//! loop    := "for" IDENT "in" affine ".." affine "{" (loop | stmt)* "}"
+//! stmt    := "stmt" IDENT ["writes" accs] ["reads" accs]
+//!            ["ops" opcounts] ["chain" opchain] ";"
+//! accs    := access ("," access)*
+//! access  := IDENT ("[" affine "]")+
+//! opcounts:= opcount ("," opcount)*      opcount := [INT "*"] op
+//! opchain := op ("," op)*                op      := "add"|"sub"|"mul"|"div"
+//! affine  := ["+"|"-"] term (("+"|"-") term)*
+//! term    := INT | IDENT | INT "*" IDENT
+//! ```
+//!
+//! Keywords are contextual (the CNN kernel has arrays named `in` and
+//! `out`); every parse or lowering failure is a [`ParseError`] carrying
+//! the offending source span.
+//!
+//! Lowering enforces the semantic rules the rest of the stack assumes:
+//! iterators and loop bounds resolve only against *enclosing* loops, a
+//! loop may not shadow an enclosing loop's name (iterator references
+//! would become ambiguous and pretty-print → parse would not round-trip),
+//! loop bodies are non-empty, constant bounds are non-degenerate, every
+//! statement writes at least one access, and access arity matches the
+//! array declaration.
+
+use super::ast::{AccessAst, AffAst, ArrayAst, KernelAst, LoopAst, NodeAst, StmtAst};
+use super::diag::{ParseError, Span};
+use super::lexer::{lex, Tok, Token};
+use crate::ir::{Access, AffineExpr, ArrayDir, ArrayId, DType, Kernel, KernelBuilder, LoopId, OpKind};
+
+/// Ceiling on one statement's **total** per-iteration op count (summed
+/// over the `ops` entries): counts expand into per-op chain vectors
+/// downstream ([`crate::ir::Stmt::default_chain`]), so untrusted `.knl`
+/// input must not amplify a few bytes into huge allocations — neither
+/// via one literal nor by repeating entries. Far above any real kernel
+/// (the corpus maximum is 3 ops per statement).
+pub const MAX_OP_COUNT: u64 = 4096;
+
+/// Magnitude cap on affine literals (constants and coefficients). With
+/// at most [`MAX_AFFINE_TERMS`] terms per expression and iterator value
+/// ranges capped at `MAX_RANGE` (checked per loop during lowering),
+/// every interval computation the frontend and the downstream analyses
+/// perform stays below `64 · 2^22 · 2^31 < 2^63` — untrusted input
+/// cannot overflow the unchecked `i64` arithmetic in
+/// [`crate::ir::AffineExpr`], by induction over the loop nest. Far
+/// above any real kernel (the corpus maximum literal is 2800).
+pub const MAX_AFFINE: u64 = 1 << 16;
+/// Terms per affine expression (see [`MAX_AFFINE`]).
+pub const MAX_AFFINE_TERMS: usize = 64;
+/// Iterator value-range magnitude bound (see [`MAX_AFFINE`]).
+const MAX_RANGE: i64 = 1 << 31;
+/// Element-count cap per array: `Array::elements` multiplies the dims
+/// in unchecked `u64`, so the declared product must be checked here.
+const MAX_ELEMENTS: u64 = 1 << 40;
+/// Loop-nest depth cap (bounds the lowering recursion and the range
+/// induction above).
+const MAX_DEPTH: usize = 64;
+
+/// Parse (and lower) one `.knl` kernel. `origin` labels diagnostics
+/// (usually the file path).
+pub fn parse_kernel(src: &str, origin: &str) -> Result<Kernel, ParseError> {
+    let ast = parse_ast(src, origin)?;
+    lower(&ast, src, origin)
+}
+
+/// Parse to the surface AST without lowering (tests, tooling).
+pub(super) fn parse_ast(src: &str, origin: &str) -> Result<KernelAst, ParseError> {
+    let toks = lex(src, origin)?;
+    Parser {
+        src,
+        origin,
+        toks,
+        pos: 0,
+        depth: 0,
+    }
+    .kernel()
+}
+
+struct Parser<'s> {
+    src: &'s str,
+    origin: &'s str,
+    toks: Vec<Token>,
+    pos: usize,
+    /// Current `for` nesting depth — capped at [`MAX_DEPTH`] *during
+    /// parsing* (the lowering check alone would come after the parser
+    /// already recursed arbitrarily deep on hostile input).
+    depth: usize,
+}
+
+impl<'s> Parser<'s> {
+    fn peek(&self) -> &Token {
+        &self.toks[self.pos]
+    }
+
+    fn advance(&mut self) -> Token {
+        let t = self.toks[self.pos].clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn err<T>(&self, span: Span, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError::new(self.src, self.origin, span, msg))
+    }
+
+    fn eat(&mut self, tok: &Tok) -> bool {
+        if &self.peek().tok == tok {
+            self.advance();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat_kw(&mut self, word: &str) -> bool {
+        if matches!(&self.peek().tok, Tok::Ident(w) if w == word) {
+            self.advance();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, tok: Tok, what: &str) -> Result<Span, ParseError> {
+        if self.peek().tok == tok {
+            Ok(self.advance().span)
+        } else {
+            let found = self.peek().tok.describe();
+            self.err(
+                self.peek().span,
+                format!("expected {} ({what}), found {found}", tok.describe()),
+            )
+        }
+    }
+
+    fn expect_ident(&mut self, what: &str) -> Result<(String, Span), ParseError> {
+        match self.peek().tok.clone() {
+            Tok::Ident(s) => Ok((s, self.advance().span)),
+            other => self.err(
+                self.peek().span,
+                format!("expected {what}, found {}", other.describe()),
+            ),
+        }
+    }
+
+    // --- grammar productions --------------------------------------------
+
+    fn kernel(&mut self) -> Result<KernelAst, ParseError> {
+        if !self.eat_kw("kernel") {
+            return self.err(
+                self.peek().span,
+                "a .knl file starts with `kernel \"name\" f32|f64`",
+            );
+        }
+        let name = match self.peek().tok.clone() {
+            Tok::Str(s) => {
+                self.advance();
+                s
+            }
+            Tok::Ident(s) => {
+                self.advance();
+                s
+            }
+            other => {
+                return self.err(
+                    self.peek().span,
+                    format!("expected kernel name, found {}", other.describe()),
+                )
+            }
+        };
+        let (dt, dspan) = self.expect_ident("scalar dtype `f32` or `f64`")?;
+        let Some(dtype) = DType::from_name(&dt) else {
+            return self.err(dspan, format!("unknown dtype `{dt}` (want f32 or f64)"));
+        };
+        let mut arrays = Vec::new();
+        let mut roots = Vec::new();
+        loop {
+            if self.eat_kw("array") {
+                arrays.push(self.array()?);
+            } else if self.eat_kw("for") {
+                roots.push(self.loop_()?);
+            } else if self.peek().tok == Tok::Eof {
+                break;
+            } else {
+                let found = self.peek().tok.describe();
+                return self.err(
+                    self.peek().span,
+                    format!("expected `array` or `for` at top level, found {found}"),
+                );
+            }
+        }
+        Ok(KernelAst {
+            name,
+            dtype,
+            arrays,
+            roots,
+        })
+    }
+
+    fn array(&mut self) -> Result<ArrayAst, ParseError> {
+        let (name, span) = self.expect_ident("array name")?;
+        let mut dims = Vec::new();
+        while self.eat(&Tok::LBrack) {
+            match self.peek().tok.clone() {
+                Tok::Int(n) => {
+                    let s = self.advance().span;
+                    if n == 0 {
+                        return self.err(s, format!("array `{name}` has a zero-extent dimension"));
+                    }
+                    dims.push(n);
+                }
+                other => {
+                    return self.err(
+                        self.peek().span,
+                        format!("expected dimension extent, found {}", other.describe()),
+                    )
+                }
+            }
+            self.expect(Tok::RBrack, "closing the dimension")?;
+        }
+        if dims.is_empty() {
+            return self.err(span, format!("array `{name}` needs at least one `[extent]`"));
+        }
+        // Array::elements multiplies dims unchecked; cap the product
+        let elements = dims
+            .iter()
+            .try_fold(1u64, |acc, &d| acc.checked_mul(d))
+            .filter(|&e| e <= MAX_ELEMENTS);
+        if elements.is_none() {
+            return self.err(
+                span,
+                format!("array `{name}` is too large (more than 2^40 elements)"),
+            );
+        }
+        let (dw, dirspan) = self.expect_ident("array direction `in|out|inout|temp`")?;
+        let Some(dir) = ArrayDir::from_word(&dw) else {
+            return self.err(
+                dirspan,
+                format!("unknown array direction `{dw}` (want in, out, inout, or temp)"),
+            );
+        };
+        Ok(ArrayAst {
+            name,
+            dims,
+            dir,
+            span,
+        })
+    }
+
+    fn loop_(&mut self) -> Result<LoopAst, ParseError> {
+        let (name, span) = self.expect_ident("loop iterator name")?;
+        if self.depth >= MAX_DEPTH {
+            return self.err(
+                span,
+                format!("loops nested deeper than the supported {MAX_DEPTH} levels"),
+            );
+        }
+        self.depth += 1;
+        let result = self.loop_body(name, span);
+        self.depth -= 1;
+        result
+    }
+
+    fn loop_body(&mut self, name: String, span: Span) -> Result<LoopAst, ParseError> {
+        if !self.eat_kw("in") {
+            let found = self.peek().tok.describe();
+            return self.err(
+                self.peek().span,
+                format!("expected `in` after loop iterator `{name}`, found {found}"),
+            );
+        }
+        let lb = self.affine()?;
+        self.expect(Tok::DotDot, "separating the loop bounds")?;
+        let ub = self.affine()?;
+        self.expect(Tok::LBrace, "opening the loop body")?;
+        let mut body = Vec::new();
+        loop {
+            if self.eat(&Tok::RBrace) {
+                break;
+            }
+            if self.eat_kw("for") {
+                body.push(NodeAst::Loop(self.loop_()?));
+            } else if self.eat_kw("stmt") {
+                body.push(NodeAst::Stmt(self.stmt()?));
+            } else {
+                let found = self.peek().tok.describe();
+                return self.err(
+                    self.peek().span,
+                    format!("expected `for`, `stmt`, or `}}` in loop body, found {found}"),
+                );
+            }
+        }
+        Ok(LoopAst {
+            name,
+            lb,
+            ub,
+            body,
+            span,
+        })
+    }
+
+    fn stmt(&mut self) -> Result<StmtAst, ParseError> {
+        let (name, span) = self.expect_ident("statement name")?;
+        let mut writes: Option<Vec<AccessAst>> = None;
+        let mut reads: Option<Vec<AccessAst>> = None;
+        let mut ops: Option<Vec<(OpKind, u32)>> = None;
+        let mut chain: Option<Vec<OpKind>> = None;
+        loop {
+            if self.eat(&Tok::Semi) {
+                break;
+            }
+            let cspan = self.peek().span;
+            if self.eat_kw("writes") {
+                if writes.replace(self.access_list()?).is_some() {
+                    return self.err(cspan, format!("duplicate `writes` clause in `{name}`"));
+                }
+            } else if self.eat_kw("reads") {
+                if reads.replace(self.access_list()?).is_some() {
+                    return self.err(cspan, format!("duplicate `reads` clause in `{name}`"));
+                }
+            } else if self.eat_kw("ops") {
+                if ops.replace(self.op_counts()?).is_some() {
+                    return self.err(cspan, format!("duplicate `ops` clause in `{name}`"));
+                }
+            } else if self.eat_kw("chain") {
+                if chain.replace(self.op_chain()?).is_some() {
+                    return self.err(cspan, format!("duplicate `chain` clause in `{name}`"));
+                }
+            } else {
+                let found = self.peek().tok.describe();
+                return self.err(
+                    self.peek().span,
+                    format!(
+                        "expected `writes`, `reads`, `ops`, `chain`, or `;` in `{name}`, \
+                         found {found}"
+                    ),
+                );
+            }
+        }
+        Ok(StmtAst {
+            name,
+            writes: writes.unwrap_or_default(),
+            reads: reads.unwrap_or_default(),
+            ops: ops.unwrap_or_default(),
+            chain,
+            span,
+        })
+    }
+
+    fn access_list(&mut self) -> Result<Vec<AccessAst>, ParseError> {
+        let mut out = Vec::new();
+        loop {
+            out.push(self.access()?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn access(&mut self) -> Result<AccessAst, ParseError> {
+        let (array, span) = self.expect_ident("array name")?;
+        if self.peek().tok != Tok::LBrack {
+            let found = self.peek().tok.describe();
+            return self.err(
+                self.peek().span,
+                format!("expected `[` after `{array}` (every access is subscripted), found {found}"),
+            );
+        }
+        let mut indices = Vec::new();
+        while self.eat(&Tok::LBrack) {
+            indices.push(self.affine()?);
+            self.expect(Tok::RBrack, "closing the subscript")?;
+        }
+        Ok(AccessAst {
+            array,
+            indices,
+            span,
+        })
+    }
+
+    fn op_word(&mut self) -> Result<OpKind, ParseError> {
+        let (w, span) = self.expect_ident("op `add|sub|mul|div`")?;
+        OpKind::from_word(&w)
+            .ok_or_else(|| {
+                ParseError::new(
+                    self.src,
+                    self.origin,
+                    span,
+                    format!("unknown op `{w}` (want add, sub, mul, or div)"),
+                )
+            })
+    }
+
+    fn op_counts(&mut self) -> Result<Vec<(OpKind, u32)>, ParseError> {
+        let mut out = Vec::new();
+        let mut total: u64 = 0;
+        loop {
+            let espan = self.peek().span;
+            let n = match self.peek().tok.clone() {
+                Tok::Int(n) => {
+                    self.advance();
+                    self.expect(Tok::Star, "op counts are written `N*op`")?;
+                    n
+                }
+                _ => 1,
+            };
+            // the chain default expands counts into a per-op Vec, so
+            // untrusted counts must stay allocation-sane — in total, not
+            // just per literal (repetition must not defeat the cap)
+            total = total.saturating_add(n);
+            if total > MAX_OP_COUNT {
+                return self.err(
+                    espan,
+                    format!(
+                        "statement op multiset expands to {total}+ ops \
+                         (max {MAX_OP_COUNT} total)"
+                    ),
+                );
+            }
+            out.push((self.op_word()?, n as u32));
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn op_chain(&mut self) -> Result<Vec<OpKind>, ParseError> {
+        let mut out = vec![self.op_word()?];
+        while self.eat(&Tok::Comma) {
+            out.push(self.op_word()?);
+        }
+        Ok(out)
+    }
+
+    fn affine(&mut self) -> Result<AffAst, ParseError> {
+        let start = self.peek().span;
+        let mut terms = Vec::new();
+        let mut sign: i64 = 1;
+        if self.eat(&Tok::Minus) {
+            sign = -1;
+        } else {
+            self.eat(&Tok::Plus);
+        }
+        loop {
+            terms.push(self.affine_term(sign)?);
+            if self.eat(&Tok::Plus) {
+                sign = 1;
+            } else if self.eat(&Tok::Minus) {
+                sign = -1;
+            } else {
+                break;
+            }
+        }
+        let end = terms.last().map(|t: &super::ast::AffTermAst| t.span).unwrap_or(start);
+        let span = start.to(end);
+        if terms.len() > MAX_AFFINE_TERMS {
+            return self.err(
+                span,
+                format!(
+                    "affine expression has {} terms (max {MAX_AFFINE_TERMS})",
+                    terms.len()
+                ),
+            );
+        }
+        Ok(AffAst { terms, span })
+    }
+
+    fn affine_term(&mut self, sign: i64) -> Result<super::ast::AffTermAst, ParseError> {
+        use super::ast::AffTermAst;
+        match self.peek().tok.clone() {
+            Tok::Int(n) => {
+                let span = self.advance().span;
+                if n > MAX_AFFINE {
+                    return self.err(
+                        span,
+                        format!("affine literal {n} exceeds the supported magnitude ({MAX_AFFINE})"),
+                    );
+                }
+                if self.eat(&Tok::Star) {
+                    let (it, ispan) = self.expect_ident("iterator after `*`")?;
+                    Ok(AffTermAst {
+                        coeff: sign * n as i64,
+                        iter: Some(it),
+                        span: span.to(ispan),
+                    })
+                } else {
+                    Ok(AffTermAst {
+                        coeff: sign * n as i64,
+                        iter: None,
+                        span,
+                    })
+                }
+            }
+            Tok::Ident(it) => {
+                let span = self.advance().span;
+                Ok(AffTermAst {
+                    coeff: sign,
+                    iter: Some(it),
+                    span,
+                })
+            }
+            other => self.err(
+                self.peek().span,
+                format!(
+                    "expected an integer or iterator in affine expression, found {}",
+                    other.describe()
+                ),
+            ),
+        }
+    }
+}
+
+// --- lowering -----------------------------------------------------------
+
+/// Lower a surface AST into a finalized [`Kernel`] through
+/// [`KernelBuilder`], performing every semantic check with span-anchored
+/// diagnostics. The random-kernel generator feeds its ASTs through this
+/// same path, so generated kernels satisfy the same rules by
+/// construction.
+pub(super) fn lower(ast: &KernelAst, src: &str, origin: &str) -> Result<Kernel, ParseError> {
+    let mut kb = KernelBuilder::new(&ast.name, ast.dtype);
+    let mut ctx = Lower {
+        src,
+        origin,
+        arrays: Vec::new(),
+        scope: Vec::new(),
+    };
+    for a in &ast.arrays {
+        if ctx.arrays.iter().any(|(n, ..)| n == &a.name) {
+            return ctx.err(a.span, format!("array `{}` is declared twice", a.name));
+        }
+        let id = kb.array(&a.name, &a.dims, a.dir);
+        ctx.arrays.push((a.name.clone(), id, a.dims.clone()));
+    }
+    if ast.roots.is_empty() {
+        return ctx.err(
+            Span::default(),
+            format!("kernel `{}` has no loops (nothing to explore)", ast.name),
+        );
+    }
+    for l in &ast.roots {
+        ctx.lower_loop(&mut kb, l)?;
+    }
+    Ok(kb.finish())
+}
+
+struct Lower<'s> {
+    src: &'s str,
+    origin: &'s str,
+    /// `(name, id, dims)` in declaration order.
+    arrays: Vec<(String, ArrayId, Vec<u64>)>,
+    /// Enclosing loops, outermost first, with each iterator's inclusive
+    /// value range (exact for affine bounds, computed outside-in the way
+    /// `poly::tripcount` does).
+    scope: Vec<(String, LoopId, (i64, i64))>,
+}
+
+impl<'s> Lower<'s> {
+    fn err<T>(&self, span: Span, msg: impl Into<String>) -> Result<T, ParseError> {
+        Err(ParseError::new(self.src, self.origin, span, msg))
+    }
+
+    /// Inclusive value range of enclosing iterator `l`.
+    fn range_of(&self, l: LoopId) -> (i64, i64) {
+        self.scope
+            .iter()
+            .find(|(_, id, _)| *id == l)
+            .map(|(_, _, r)| *r)
+            .expect("resolved iterator must be in scope")
+    }
+
+    fn lower_loop(&mut self, kb: &mut KernelBuilder, la: &LoopAst) -> Result<(), ParseError> {
+        if self.scope.iter().any(|(n, ..)| n == &la.name) {
+            return self.err(
+                la.span,
+                format!(
+                    "loop `{}` shadows an enclosing loop of the same name \
+                     (iterator references would be ambiguous)",
+                    la.name
+                ),
+            );
+        }
+        let lb = self.resolve(&la.lb)?;
+        let ub = self.resolve(&la.ub)?;
+        if lb.is_constant() && ub.is_constant() && ub.constant <= lb.constant {
+            return self.err(
+                la.span,
+                format!(
+                    "loop `{}` is empty: bounds [{}, {}) contain no iterations",
+                    la.name, lb.constant, ub.constant
+                ),
+            );
+        }
+        if la.body.is_empty() {
+            return self.err(la.span, format!("loop `{}` has an empty body", la.name));
+        }
+        if self.scope.len() >= MAX_DEPTH {
+            return self.err(
+                la.span,
+                format!("loops nested deeper than the supported {MAX_DEPTH} levels"),
+            );
+        }
+        // iterator value range [lb_lo, ub_hi - 1], exact for affine
+        // bounds over the enclosing box (extremes at corners). The
+        // magnitude check keeps the range induction of [`MAX_AFFINE`]
+        // going: every enclosing range is known ≤ MAX_RANGE here, so
+        // this level's bounds() could not have overflowed.
+        let rng = |l: LoopId| self.range_of(l);
+        let (lb_lo, _) = lb.bounds(&rng);
+        let (_, ub_hi) = ub.bounds(&rng);
+        if lb_lo.abs() > MAX_RANGE || ub_hi.abs() > MAX_RANGE {
+            return self.err(
+                la.span,
+                format!(
+                    "bounds of loop `{}` reach magnitude {} (max {MAX_RANGE})",
+                    la.name,
+                    lb_lo.abs().max(ub_hi.abs())
+                ),
+            );
+        }
+        let range = (lb_lo, (ub_hi - 1).max(lb_lo));
+        let mut result = Ok(());
+        kb.for_expr(&la.name, lb, ub, |kb, id| {
+            self.scope.push((la.name.clone(), id, range));
+            for node in &la.body {
+                result = match node {
+                    NodeAst::Loop(l) => self.lower_loop(kb, l),
+                    NodeAst::Stmt(s) => self.lower_stmt(kb, s),
+                };
+                if result.is_err() {
+                    break;
+                }
+            }
+            self.scope.pop();
+        });
+        result
+    }
+
+    fn lower_stmt(&mut self, kb: &mut KernelBuilder, sa: &StmtAst) -> Result<(), ParseError> {
+        if sa.writes.is_empty() {
+            return self.err(
+                sa.span,
+                format!(
+                    "statement `{}` writes nothing (every statement needs a `writes` clause)",
+                    sa.name
+                ),
+            );
+        }
+        let writes = sa
+            .writes
+            .iter()
+            .map(|a| self.lower_access(a))
+            .collect::<Result<Vec<_>, _>>()?;
+        let reads = sa
+            .reads
+            .iter()
+            .map(|a| self.lower_access(a))
+            .collect::<Result<Vec<_>, _>>()?;
+        match &sa.chain {
+            None => kb.stmt(&sa.name, writes, reads, &sa.ops),
+            Some(c) => kb.stmt_with_chain(&sa.name, writes, reads, &sa.ops, c.clone()),
+        };
+        Ok(())
+    }
+
+    fn lower_access(&self, aa: &AccessAst) -> Result<Access, ParseError> {
+        let Some((_, id, dims)) = self.arrays.iter().find(|(n, ..)| n == &aa.array) else {
+            let declared: Vec<&str> = self.arrays.iter().map(|(n, ..)| n.as_str()).collect();
+            return self.err(
+                aa.span,
+                format!(
+                    "unknown array `{}` (declared: {})",
+                    aa.array,
+                    if declared.is_empty() {
+                        "none".to_string()
+                    } else {
+                        declared.join(", ")
+                    }
+                ),
+            );
+        };
+        if aa.indices.len() != dims.len() {
+            return self.err(
+                aa.span,
+                format!(
+                    "access to `{}` has {} subscripts but the array has {} dimensions",
+                    aa.array,
+                    aa.indices.len(),
+                    dims.len()
+                ),
+            );
+        }
+        let indices = aa
+            .indices
+            .iter()
+            .map(|e| self.resolve(e))
+            .collect::<Result<Vec<_>, _>>()?;
+        // bounds check where the box range is *exact*: constant and
+        // single-iterator subscripts (extremes at iterator endpoints).
+        // Multi-iterator subscripts (cnn's `h + p`, durbin's `k - i - 1`)
+        // are skipped — their box corners over-approximate correlated
+        // iterators, and `poly::footprint` clamps to the extent anyway.
+        for (d, (expr, idx_ast)) in indices.iter().zip(&aa.indices).enumerate() {
+            if expr.terms.len() > 1 {
+                continue;
+            }
+            let (lo, hi) = expr.bounds(&|l| self.range_of(l));
+            if lo < 0 || hi >= dims[d] as i64 {
+                return self.err(
+                    idx_ast.span,
+                    format!(
+                        "subscript {d} of `{}` spans [{lo}, {hi}] but the dimension \
+                         has extent {}",
+                        aa.array, dims[d]
+                    ),
+                );
+            }
+        }
+        Ok(Access::new(*id, indices))
+    }
+
+    fn resolve(&self, e: &AffAst) -> Result<AffineExpr, ParseError> {
+        let mut out = AffineExpr::constant(0);
+        for t in &e.terms {
+            match &t.iter {
+                None => out.constant += t.coeff,
+                Some(name) => {
+                    // innermost-first: lexical scoping (shadowing is
+                    // rejected at loop entry, so this is unambiguous)
+                    let Some((_, id, _)) = self.scope.iter().rev().find(|(n, ..)| n == name)
+                    else {
+                        let in_scope: Vec<&str> =
+                            self.scope.iter().map(|(n, ..)| n.as_str()).collect();
+                        return self.err(
+                            t.span,
+                            format!(
+                                "unknown iterator `{name}` (in scope: {})",
+                                if in_scope.is_empty() {
+                                    "none".to_string()
+                                } else {
+                                    in_scope.join(", ")
+                                }
+                            ),
+                        );
+                    };
+                    out.add_term(*id, t.coeff);
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GEMM_ISH: &str = r#"
+# a gemm-shaped kernel
+kernel "mini-gemm" f32
+
+array C[8][8] inout
+array A[8][8] in
+array B[8][8] in
+
+for i in 0 .. 8 {
+  for j0 in 0 .. 8 {
+    stmt S0 writes C[i][j0] reads C[i][j0] ops mul;
+  }
+  for k in 0 .. 8 {
+    for j1 in 0 .. 8 {
+      stmt S1 writes C[i][j1] reads C[i][j1], A[i][k], B[k][j1] ops 2*mul, add;
+    }
+  }
+}
+"#;
+
+    #[test]
+    fn parses_gemm_shape() {
+        let k = parse_kernel(GEMM_ISH, "<test>").unwrap();
+        assert_eq!(k.name, "mini-gemm");
+        assert_eq!(k.n_loops(), 4);
+        assert_eq!(k.n_stmts(), 2);
+        assert_eq!(k.arrays.len(), 3);
+        assert_eq!(k.summary_ast(), "Loop_i(Loop_j0(S0), Loop_k(Loop_j1(S1)))");
+        assert_eq!(k.stmt(crate::ir::StmtId(1)).flops(), 3);
+        // default chain = expanded op multiset
+        assert_eq!(
+            k.stmt(crate::ir::StmtId(1)).chain,
+            vec![OpKind::Mul, OpKind::Mul, OpKind::Add]
+        );
+    }
+
+    #[test]
+    fn triangular_and_offset_bounds() {
+        let src = r#"
+kernel tri f64
+array a[16][16] inout
+for i in 0 .. 16 {
+  for j in i + 1 .. 16 {
+    stmt s writes a[i][j] reads a[j][i] ops add chain add;
+  }
+}
+"#;
+        let k = parse_kernel(src, "<test>").unwrap();
+        let (lb, ub) = k.loop_bounds(LoopId(1));
+        assert_eq!(lb, &AffineExpr::var(LoopId(0)).plus_const(1));
+        assert!(ub.is_constant());
+        assert_eq!(k.dtype, DType::F64);
+    }
+
+    #[test]
+    fn scalar_accumulator_and_negative_offsets() {
+        let src = r#"
+kernel acc f32
+array s[1] inout
+array y[64] in
+for i in 2 .. 32 {
+  stmt s0 writes s[0] reads s[0], y[i - 2], y[2*i - 4] ops add, add;
+}
+"#;
+        let k = parse_kernel(src, "<test>").unwrap();
+        let st = k.stmt(crate::ir::StmtId(0));
+        assert_eq!(st.reads[1].indices[0], AffineExpr::var(LoopId(0)).plus_const(-2));
+        assert_eq!(
+            st.reads[2].indices[0],
+            AffineExpr::var_scaled(LoopId(0), 2).plus_const(-4)
+        );
+    }
+
+    fn expect_err(src: &str, needle: &str) -> ParseError {
+        let e = parse_kernel(src, "bad.knl").unwrap_err();
+        assert!(
+            e.msg.contains(needle),
+            "error `{}` does not mention `{needle}`",
+            e.msg
+        );
+        e
+    }
+
+    #[test]
+    fn diagnostics_carry_spans() {
+        let e = expect_err(
+            "kernel k f32\narray a[4] in\nfor i in 0 .. 4 {\n  stmt s writes a[j];\n}\n",
+            "unknown iterator `j`",
+        );
+        assert_eq!((e.line, e.col), (4, 19));
+        let shown = format!("{e}");
+        assert!(shown.contains("bad.knl:4:19"), "{shown}");
+        assert!(shown.contains("stmt s writes a[j];"), "{shown}");
+        assert!(shown.contains("in scope: i"), "{shown}");
+    }
+
+    #[test]
+    fn semantic_rejections() {
+        expect_err("array a[4] in", "starts with `kernel");
+        expect_err("kernel k f16", "unknown dtype `f16`");
+        expect_err(
+            "kernel k f32\narray a[4] in\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i]; }",
+            "declared twice",
+        );
+        expect_err("kernel k f32\narray a[4] in", "has no loops");
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { }",
+            "empty body",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 4 .. 4 { stmt s writes a[i]; }",
+            "contain no iterations",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { for i in 0 .. 2 { stmt s writes a[i]; } }",
+            "shadows an enclosing loop",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s reads a[i]; }",
+            "writes nothing",
+        );
+        expect_err(
+            "kernel k f32\narray a[4][4] out\nfor i in 0 .. 4 { stmt s writes a[i]; }",
+            "1 subscripts but the array has 2",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes b[i]; }",
+            "unknown array `b`",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i] ops 2*xor; }",
+            "unknown op `xor`",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i] ops 4294967295*mul; }",
+            "expands to 4294967295+ ops",
+        );
+        // repetition must not defeat the expansion cap either
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i] ops 4096*mul, 4096*mul; }",
+            "max 4096 total",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. i { stmt s writes a[i]; }",
+            "unknown iterator `i`",
+        );
+        expect_err(
+            "kernel k f32\narray a[0] out\nfor i in 0 .. 4 { stmt s writes a[i]; }",
+            "zero-extent",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i] writes a[i]; }",
+            "duplicate `writes`",
+        );
+        // untrusted-input magnitude caps (overflow hardening)
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i + 9223372036854775807]; }",
+            "exceeds the supported magnitude",
+        );
+        expect_err(
+            "kernel k f32\narray a[1099511627776][1099511627776] out\nfor i in 0 .. 4 { stmt s writes a[0][0]; }",
+            "too large (more than 2^40 elements)",
+        );
+        // exact (constant / single-iterator) out-of-bounds subscripts
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 64 { stmt s writes a[i]; }",
+            "subscript 0 of `a` spans [0, 63] but the dimension has extent 4",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[i - 1]; }",
+            "spans [-1, 2]",
+        );
+        expect_err(
+            "kernel k f32\narray a[4] out\nfor i in 0 .. 4 { stmt s writes a[4]; }",
+            "spans [4, 4]",
+        );
+    }
+
+    #[test]
+    fn parse_depth_is_capped_before_recursing() {
+        // hostile nesting must produce a ParseError, not a stack overflow
+        let mut src = String::from("kernel k f32\narray a[4] out\n");
+        for i in 0..70 {
+            src.push_str(&format!("for x{i} in 0 .. 2 {{\n"));
+        }
+        let e = parse_kernel(&src, "<t>").unwrap_err();
+        assert!(e.msg.contains("nested deeper"), "{}", e.msg);
+    }
+
+    #[test]
+    fn correlated_multi_iterator_subscripts_are_not_box_rejected() {
+        // durbin's `r[k - i - 1]` is in-bounds for the true (coupled)
+        // ranges but its box corners go negative — must stay accepted
+        let src = r#"
+kernel mini-durbin f32
+array r[16] in
+array s[1] inout
+for k in 1 .. 16 {
+  for i in 0 .. k {
+    stmt s2 writes s[0] reads s[0], r[k - i - 1] ops mul, add;
+  }
+}
+"#;
+        let k = parse_kernel(src, "<t>").unwrap();
+        assert_eq!(k.n_loops(), 2);
+    }
+
+    #[test]
+    fn ops_order_and_grouping_preserved() {
+        let src = "kernel k f32\narray a[4] out\nfor i in 0 .. 4 {\n  stmt s writes a[i] ops 2*mul, add, mul;\n}\n";
+        let k = parse_kernel(src, "<t>").unwrap();
+        assert_eq!(
+            k.stmt(crate::ir::StmtId(0)).ops,
+            vec![(OpKind::Mul, 2), (OpKind::Add, 1), (OpKind::Mul, 1)]
+        );
+    }
+}

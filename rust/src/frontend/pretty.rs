@@ -1,0 +1,209 @@
+//! `Kernel` → `.knl` text. The emitter is the inverse of the parser:
+//! for every kernel whose array/loop/statement names are identifiers
+//! (`[A-Za-z_][A-Za-z0-9_]*` — all in-repo builders and the generator
+//! comply; [`print`] asserts it rather than silently emitting text that
+//! lexes differently), `parse_kernel(print(k))` is structurally
+//! identical to `k` ([`Kernel::structural_diff`] returns `None`) — the
+//! round-trip invariant proven over the whole benchmark corpus in
+//! `tests/frontend_roundtrip.rs`. The kernel name itself is quoted, so
+//! it only needs to avoid `"` and newlines.
+
+use crate::ir::{Access, AffineExpr, Kernel, Node, Stmt};
+
+fn ident_ok(s: &str) -> bool {
+    let b = s.as_bytes();
+    !b.is_empty()
+        && (b[0].is_ascii_alphabetic() || b[0] == b'_')
+        && b.iter().all(|&c| c.is_ascii_alphanumeric() || c == b'_')
+}
+
+/// Render a kernel as `.knl` source text.
+///
+/// Panics when a name cannot survive the trip back through the lexer
+/// (loud beats silently corrupting the interchange text).
+pub fn print(k: &Kernel) -> String {
+    assert!(
+        !k.name.contains('"') && !k.name.contains('\n'),
+        "kernel name {:?} cannot be quoted in .knl",
+        k.name
+    );
+    let mut out = format!(
+        "# {} — {} loops, {} statements ({})\n",
+        k.name,
+        k.n_loops(),
+        k.n_stmts(),
+        k.summary_ast()
+    );
+    out.push_str(&format!("kernel \"{}\" {}\n\n", k.name, k.dtype.name()));
+    for a in &k.arrays {
+        assert!(ident_ok(&a.name), "array name {:?} is not a .knl identifier", a.name);
+        let dims: String = a.dims.iter().map(|d| format!("[{d}]")).collect();
+        out.push_str(&format!("array {}{dims} {}\n", a.name, a.dir.word()));
+    }
+    for root in &k.roots {
+        out.push('\n');
+        print_node(k, root, 0, &mut out);
+    }
+    out
+}
+
+fn indent(depth: usize, out: &mut String) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn print_node(k: &Kernel, n: &Node, depth: usize, out: &mut String) {
+    match n {
+        Node::Loop(l) => {
+            assert!(ident_ok(&l.name), "loop name {:?} is not a .knl identifier", l.name);
+            indent(depth, out);
+            out.push_str(&format!(
+                "for {} in {} .. {} {{\n",
+                l.name,
+                affine(k, &l.lb),
+                affine(k, &l.ub)
+            ));
+            for c in &l.body {
+                print_node(k, c, depth + 1, out);
+            }
+            indent(depth, out);
+            out.push_str("}\n");
+        }
+        Node::Stmt(s) => {
+            assert!(ident_ok(&s.name), "stmt name {:?} is not a .knl identifier", s.name);
+            indent(depth, out);
+            out.push_str(&format!("stmt {}", s.name));
+            if !s.writes.is_empty() {
+                out.push_str(" writes ");
+                out.push_str(&access_list(k, &s.writes));
+            }
+            if !s.reads.is_empty() {
+                out.push_str(" reads ");
+                out.push_str(&access_list(k, &s.reads));
+            }
+            if !s.ops.is_empty() {
+                out.push_str(" ops ");
+                let entries: Vec<String> = s
+                    .ops
+                    .iter()
+                    .map(|&(o, c)| {
+                        if c == 1 {
+                            o.word().to_string()
+                        } else {
+                            format!("{c}*{}", o.word())
+                        }
+                    })
+                    .collect();
+                out.push_str(&entries.join(", "));
+            }
+            // the chain clause is elided when it is the default expansion
+            if s.chain != Stmt::default_chain(&s.ops) {
+                out.push_str(" chain ");
+                let words: Vec<&str> = s.chain.iter().map(|o| o.word()).collect();
+                out.push_str(&words.join(", "));
+            }
+            out.push_str(";\n");
+        }
+    }
+}
+
+fn access_list(k: &Kernel, accs: &[Access]) -> String {
+    let rendered: Vec<String> = accs
+        .iter()
+        .map(|a| {
+            let idx: String = a
+                .indices
+                .iter()
+                .map(|e| format!("[{}]", affine(k, e)))
+                .collect();
+            format!("{}{idx}", k.array(a.array).name)
+        })
+        .collect();
+    rendered.join(", ")
+}
+
+/// Affine expression with loop *names* (the IR `Display` uses raw
+/// `L<id>` labels). Same sign/spacing conventions as the parser accepts.
+fn affine(k: &Kernel, e: &AffineExpr) -> String {
+    let mut out = String::new();
+    let mut first = true;
+    for &(l, c) in &e.terms {
+        let name = k.loop_name(l);
+        if first {
+            if c == 1 {
+                out.push_str(name);
+            } else if c == -1 {
+                out.push_str(&format!("-{name}"));
+            } else {
+                out.push_str(&format!("{c}*{name}"));
+            }
+            first = false;
+        } else if c == 1 {
+            out.push_str(&format!(" + {name}"));
+        } else if c == -1 {
+            out.push_str(&format!(" - {name}"));
+        } else if c > 0 {
+            out.push_str(&format!(" + {c}*{name}"));
+        } else {
+            out.push_str(&format!(" - {}*{name}", -c));
+        }
+    }
+    if first {
+        out.push_str(&format!("{}", e.constant));
+    } else if e.constant > 0 {
+        out.push_str(&format!(" + {}", e.constant));
+    } else if e.constant < 0 {
+        out.push_str(&format!(" - {}", -e.constant));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::frontend::parse_kernel;
+    use crate::ir::DType;
+
+    #[test]
+    fn gemm_prints_and_reparses() {
+        let k = benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let text = print(&k);
+        assert!(text.contains("kernel \"gemm\" f32"), "{text}");
+        assert!(text.contains("array C[60][70] inout"), "{text}");
+        assert!(text.contains("for i in 0 .. 60 {"), "{text}");
+        let k2 = parse_kernel(&text, "<pretty>").unwrap();
+        assert_eq!(k.structural_diff(&k2), None);
+    }
+
+    #[test]
+    fn triangular_bounds_print_with_names() {
+        let k = benchmarks::kernel_lu(120, DType::F32);
+        let text = print(&k);
+        // lu's j0 loop runs [0, i); k0 runs [0, j0); j1 runs [i+1, n)
+        assert!(text.contains("for j0 in 0 .. i {"), "{text}");
+        let k2 = parse_kernel(&text, "<pretty>").unwrap();
+        assert_eq!(k.structural_diff(&k2), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a .knl identifier")]
+    fn non_identifier_names_are_rejected_loudly() {
+        use crate::ir::{ArrayDir, KernelBuilder, OpKind};
+        let mut kb = KernelBuilder::new("bad", DType::F32);
+        let a = kb.array("my array", &[4], ArrayDir::Out);
+        kb.for_const("i", 0, 4, |kb, i| {
+            kb.stmt("s", vec![kb.at(a, &[kb.v(i)])], vec![], &[(OpKind::Add, 1)]);
+        });
+        print(&kb.finish());
+    }
+
+    #[test]
+    fn printing_is_stable_under_roundtrip() {
+        let k = benchmarks::kernel_2mm(40, 50, 70, 80, DType::F32);
+        let t1 = print(&k);
+        let t2 = print(&parse_kernel(&t1, "<pretty>").unwrap());
+        assert_eq!(t1, t2);
+    }
+}

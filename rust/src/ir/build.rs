@@ -114,11 +114,7 @@ impl KernelBuilder {
         reads: Vec<Access>,
         ops: &[(OpKind, u32)],
     ) -> StmtId {
-        let chain: Vec<OpKind> = ops
-            .iter()
-            .flat_map(|&(o, c)| std::iter::repeat(o).take(c as usize))
-            .collect();
-        self.stmt_with_chain(name, writes, reads, ops, chain)
+        self.stmt_with_chain(name, writes, reads, ops, Stmt::default_chain(ops))
     }
 
     /// Like [`Self::stmt`] but with an explicit internal op chain (for

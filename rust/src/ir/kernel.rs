@@ -26,6 +26,14 @@ impl DType {
             DType::F64 => "f64",
         }
     }
+    /// Inverse of [`Self::name`] (the `.knl` frontend's dtype token).
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "f64" => Some(DType::F64),
+            _ => None,
+        }
+    }
 }
 
 /// Transfer direction of an array w.r.t. off-chip DRAM.
@@ -48,6 +56,25 @@ impl ArrayDir {
     }
     pub fn is_live_out(self) -> bool {
         matches!(self, ArrayDir::Out | ArrayDir::InOut)
+    }
+    /// The `.knl` frontend's direction keyword.
+    pub fn word(self) -> &'static str {
+        match self {
+            ArrayDir::In => "in",
+            ArrayDir::Out => "out",
+            ArrayDir::InOut => "inout",
+            ArrayDir::Temp => "temp",
+        }
+    }
+    /// Inverse of [`Self::word`].
+    pub fn from_word(s: &str) -> Option<ArrayDir> {
+        match s {
+            "in" => Some(ArrayDir::In),
+            "out" => Some(ArrayDir::Out),
+            "inout" => Some(ArrayDir::InOut),
+            "temp" => Some(ArrayDir::Temp),
+            _ => None,
+        }
     }
 }
 
@@ -91,6 +118,25 @@ impl OpKind {
             OpKind::Div => "/",
         }
     }
+    /// The `.knl` frontend's op keyword.
+    pub fn word(self) -> &'static str {
+        match self {
+            OpKind::Add => "add",
+            OpKind::Sub => "sub",
+            OpKind::Mul => "mul",
+            OpKind::Div => "div",
+        }
+    }
+    /// Inverse of [`Self::word`].
+    pub fn from_word(s: &str) -> Option<OpKind> {
+        match s {
+            "add" => Some(OpKind::Add),
+            "sub" => Some(OpKind::Sub),
+            "mul" => Some(OpKind::Mul),
+            "div" => Some(OpKind::Div),
+            _ => None,
+        }
+    }
 }
 
 /// An affine array access `array[indices...]`.
@@ -125,6 +171,16 @@ pub struct Stmt {
 }
 
 impl Stmt {
+    /// The conservative all-sequential internal chain: every op of the
+    /// multiset in entry order (`a ⊕ b ⊕ c` as a pure chain). This is what
+    /// [`super::KernelBuilder::stmt`] and the `.knl` frontend default to
+    /// when no explicit `chain` is given.
+    pub fn default_chain(ops: &[(OpKind, u32)]) -> Vec<OpKind> {
+        ops.iter()
+            .flat_map(|&(o, c)| std::iter::repeat(o).take(c as usize))
+            .collect()
+    }
+
     pub fn op_count(&self, op: OpKind) -> u32 {
         self.ops
             .iter()
@@ -387,6 +443,62 @@ impl Kernel {
         false
     }
 
+    /// Deep structural comparison against another kernel: name, dtype,
+    /// arrays (name/dims/direction), and the full node tree including
+    /// loop bounds, statement accesses, op multisets, and chains. Ids
+    /// are compared too, but both sides being finalized pre-order
+    /// kernels, they agree iff the trees agree.
+    ///
+    /// Returns `None` when structurally identical, or a human-readable
+    /// description of the **first** difference — the `.knl` round-trip
+    /// invariant (`parse(pretty(k)) ≡ k`) is asserted through this.
+    pub fn structural_diff(&self, other: &Kernel) -> Option<String> {
+        if self.name != other.name {
+            return Some(format!("kernel name: `{}` vs `{}`", self.name, other.name));
+        }
+        if self.dtype != other.dtype {
+            return Some(format!(
+                "dtype: {} vs {}",
+                self.dtype.name(),
+                other.dtype.name()
+            ));
+        }
+        if self.arrays.len() != other.arrays.len() {
+            return Some(format!(
+                "array count: {} vs {}",
+                self.arrays.len(),
+                other.arrays.len()
+            ));
+        }
+        for (a, b) in self.arrays.iter().zip(&other.arrays) {
+            if a.name != b.name || a.dims != b.dims || a.dir != b.dir || a.id != b.id {
+                return Some(format!(
+                    "array {}: {:?}[{:?}] {} vs {:?}[{:?}] {}",
+                    a.id,
+                    a.name,
+                    a.dims,
+                    a.dir.word(),
+                    b.name,
+                    b.dims,
+                    b.dir.word()
+                ));
+            }
+        }
+        if self.roots.len() != other.roots.len() {
+            return Some(format!(
+                "top-level nest count: {} vs {}",
+                self.roots.len(),
+                other.roots.len()
+            ));
+        }
+        for (i, (a, b)) in self.roots.iter().zip(&other.roots).enumerate() {
+            if let Some(d) = node_diff(a, b, &format!("nest #{i}")) {
+                return Some(d);
+            }
+        }
+        None
+    }
+
     /// Render the summary AST in constructor notation, e.g.
     /// `Loop_i(Loop_j1(S1), Loop_j2(S2, S3))` (Section 3.1).
     pub fn summary_ast(&self) -> String {
@@ -413,6 +525,66 @@ impl Kernel {
             walk(self, r, &mut out);
         }
         out
+    }
+}
+
+/// First structural difference between two summary-AST nodes, or `None`.
+fn node_diff(a: &Node, b: &Node, path: &str) -> Option<String> {
+    match (a, b) {
+        (Node::Loop(x), Node::Loop(y)) => {
+            if x.id != y.id || x.name != y.name {
+                return Some(format!(
+                    "{path}: loop {}/`{}` vs {}/`{}`",
+                    x.id, x.name, y.id, y.name
+                ));
+            }
+            let path = format!("{path}.{}", x.name);
+            if x.lb != y.lb || x.ub != y.ub {
+                return Some(format!(
+                    "{path}: bounds [{}, {}) vs [{}, {})",
+                    x.lb, x.ub, y.lb, y.ub
+                ));
+            }
+            if x.body.len() != y.body.len() {
+                return Some(format!(
+                    "{path}: body length {} vs {}",
+                    x.body.len(),
+                    y.body.len()
+                ));
+            }
+            x.body
+                .iter()
+                .zip(&y.body)
+                .find_map(|(c, d)| node_diff(c, d, &path))
+        }
+        (Node::Stmt(x), Node::Stmt(y)) => {
+            if x.id != y.id || x.name != y.name {
+                return Some(format!(
+                    "{path}: stmt {}/`{}` vs {}/`{}`",
+                    x.id, x.name, y.id, y.name
+                ));
+            }
+            let path = format!("{path}.{}", x.name);
+            if x.writes != y.writes {
+                return Some(format!("{path}: writes differ"));
+            }
+            if x.reads != y.reads {
+                return Some(format!("{path}: reads differ"));
+            }
+            if x.ops != y.ops {
+                return Some(format!("{path}: ops {:?} vs {:?}", x.ops, y.ops));
+            }
+            if x.chain != y.chain {
+                return Some(format!("{path}: chain {:?} vs {:?}", x.chain, y.chain));
+            }
+            None
+        }
+        (Node::Loop(x), Node::Stmt(y)) => {
+            Some(format!("{path}: loop `{}` vs stmt `{}`", x.name, y.name))
+        }
+        (Node::Stmt(x), Node::Loop(y)) => {
+            Some(format!("{path}: stmt `{}` vs loop `{}`", x.name, y.name))
+        }
     }
 }
 

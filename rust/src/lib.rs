@@ -38,6 +38,10 @@
 //! * [`ir`] — affine loop-nest intermediate representation for the input
 //!   kernels (the paper consumes PolyBench/C through PolyOpt-HLS; we consume
 //!   the same programs expressed directly in this IR).
+//! * [`frontend`] — the textual `.knl` loop-nest DSL (parser with
+//!   source-span diagnostics + pretty-printer, round-trip-proven over the
+//!   whole corpus) and the seeded always-regular random-kernel generator
+//!   behind `nlp-dse gen` and the differential fuzz suites.
 //! * [`poly`] — exact static analysis: trip counts (incl. triangular loops),
 //!   data-dependence analysis with distance vectors, reduction detection,
 //!   array footprints and live-in/live-out sets.
@@ -86,6 +90,7 @@
 
 pub mod util;
 pub mod ir;
+pub mod frontend;
 pub mod poly;
 pub mod benchmarks;
 pub mod pragma;

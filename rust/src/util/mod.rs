@@ -21,6 +21,19 @@ pub mod rng;
 pub mod stats;
 pub mod table;
 
+/// Read a `usize` knob from the environment (`FUZZ_KERNELS=500`-style);
+/// unset or unparsable values fall back to `default`. Used by the
+/// generative property suites and the bench smoke harness.
+pub fn env_usize(name: &str, default: usize) -> usize {
+    parse_usize_or(std::env::var(name).ok(), default)
+}
+
+/// The pure half of [`env_usize`] (testable without mutating the
+/// process environment, which is UB-prone in threaded test binaries).
+fn parse_usize_or(value: Option<String>, default: usize) -> usize {
+    value.and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
 /// Integer ceiling division for positive operands.
 #[inline]
 pub fn ceil_div(a: u64, b: u64) -> u64 {
@@ -98,6 +111,14 @@ mod tests {
         assert_eq!(divisors(180).len(), 18);
         assert_eq!(divisors(210).len(), 16);
         assert_eq!(divisors(220).len(), 12);
+    }
+
+    #[test]
+    fn env_usize_defaults_and_parses() {
+        assert_eq!(env_usize("NLP_DSE_SURELY_UNSET_KNOB", 7), 7);
+        assert_eq!(parse_usize_or(Some("42".into()), 7), 42);
+        assert_eq!(parse_usize_or(Some("not-a-number".into()), 7), 7);
+        assert_eq!(parse_usize_or(None, 7), 7);
     }
 
     #[test]

@@ -1,0 +1,302 @@
+//! Generative differential suite: the fuzz extension of the PR 2/3
+//! parity tests beyond the fixed corpus. For N seeded random kernels
+//! (default **N = 100 per mode**; `FUZZ_KERNELS` overrides, and
+//! `FUZZ_SMOKE=1` bounds it for the ci.sh smoke re-run):
+//!
+//! 1. the three redundant evaluators are mutual oracles —
+//!    `CompiledModel::evaluate` ≡ `model::evaluate` ≡ the legacy
+//!    formulation walk (`check_legacy` / `objective_reference`) on
+//!    random valid designs;
+//! 2. `solve_jobs(jobs = 4)` is bit-identical to `jobs = 1`, in both
+//!    coarse and fine parallelism modes;
+//! 3. `BoundModel::lower_bound` is **refinement-monotone**: pinning
+//!    additional loops of a partial design never decreases the bound
+//!    (the soundness condition behind `--prune-bound`), and stays
+//!    admissible against the completion it is refined towards;
+//! 4. every generated kernel round-trips through pretty-print → parse.
+//!
+//! Seeds are logged on entry and every failure panics with the
+//! reproducing seed **and the offending `.knl` text**, so any case
+//! replays with `FUZZ_SEED=<seed> FUZZ_KERNELS=1`.
+
+use nlp_dse::frontend::{self, GenConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{Kernel, LoopId};
+use nlp_dse::model::{self, sym};
+use nlp_dse::nlp::{self, NlpProblem, SolveResult, SymbolicEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::{space, Design, Space};
+use nlp_dse::util::{env_usize, rng::Rng};
+
+/// Kernels per suite. The acceptance floor is 100; the CI smoke step
+/// re-runs the suites bounded (like `BENCH_SMOKE` for the benches).
+fn fuzz_n() -> usize {
+    let n = if std::env::var("FUZZ_SMOKE").as_deref() == Ok("1") {
+        env_usize("FUZZ_KERNELS", 16)
+    } else {
+        env_usize("FUZZ_KERNELS", 100)
+    };
+    n.max(1)
+}
+
+const BASE_SEED: u64 = 0xF052_2026;
+
+/// The seed list for one suite, logged for replay.
+fn seeds(label: &str) -> Vec<u64> {
+    let n = fuzz_n() as u64;
+    let base: u64 = std::env::var("FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(BASE_SEED)
+        .min(u64::MAX - n); // keep the seed range addition-safe
+    eprintln!("[fuzz:{label}] {n} kernels, seeds {base}..={}", base + n - 1);
+    (base..base + n).collect()
+}
+
+/// Panic with everything needed to reproduce: the seed and the kernel
+/// as `.knl` text.
+fn fail(seed: u64, k: &Kernel, msg: &str) -> ! {
+    panic!(
+        "\n=== generative fuzz failure ===\n\
+         seed: {seed}\n\
+         replay: FUZZ_SEED={seed} FUZZ_KERNELS=1 cargo test --test property_frontend_fuzz\n\
+         {msg}\n\
+         --- offending kernel (.knl) ---\n{}",
+        frontend::pretty::print(k)
+    )
+}
+
+/// Draw a random *legal* design: pipeline antichain from the space,
+/// divisor UFs under the Eq 8 caps, occasional divisor tiles — the same
+/// shape as the PR 2 parity suite's generator, over arbitrary kernels.
+fn random_design(rng: &mut Rng, k: &Kernel, a: &Analysis, s: &Space) -> Design {
+    let cfg = s
+        .pipeline_configs
+        .get(rng.range(0, s.pipeline_configs.len() as u64) as usize)
+        .unwrap()
+        .clone();
+    let ufs: Vec<u64> = (0..k.n_loops())
+        .map(|i| {
+            let menu = s.ufs(LoopId(i as u32), a, 1024);
+            if menu.is_empty() {
+                1
+            } else {
+                menu[rng.range(0, menu.len() as u64) as usize]
+            }
+        })
+        .collect();
+    let tiles: Vec<u64> = (0..k.n_loops())
+        .map(|i| {
+            let tc = &a.tcs[i];
+            if tc.is_constant() && tc.max > 0 && rng.chance(0.3) {
+                let divs = nlp_dse::util::divisors(tc.max);
+                divs[rng.range(0, divs.len() as u64) as usize]
+            } else {
+                1
+            }
+        })
+        .collect();
+    space::materialize(k, a, &cfg, &|l| ufs[l.0 as usize], &|l| tiles[l.0 as usize])
+}
+
+#[test]
+fn prop_generated_corpus_roundtrips_and_analyzes() {
+    for seed in seeds("roundtrip") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let text = frontend::pretty::print(&k);
+        let k2 = match frontend::parse_kernel(&text, "<fuzz>") {
+            Ok(k2) => k2,
+            Err(e) => fail(seed, &k, &format!("generated kernel failed to reparse:\n{e}")),
+        };
+        if let Some(diff) = k.structural_diff(&k2) {
+            fail(seed, &k, &format!("round-trip diverged: {diff}"));
+        }
+        // the full static stack must hold on every generated kernel
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        if s.pipeline_configs.is_empty() || s.size() < 1.0 {
+            fail(seed, &k, "degenerate design space");
+        }
+    }
+}
+
+#[test]
+fn prop_three_evaluators_agree_on_generated_kernels() {
+    let dev = Device::u200();
+    for seed in seeds("evaluators") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let p = NlpProblem::new(&k, &a, &dev, 64, false);
+        let mut scratch = p.scratch();
+        let mut rng = Rng::new(seed).derive("designs");
+        for case in 0..8 {
+            let d = random_design(&mut rng, &k, &a, &s);
+            let ctx = |what: &str| format!("case {case}, design {}: {what}", d.fingerprint());
+            // compiled symbolic tape vs the reference recursion
+            let sym_r = p.compiled.evaluate(&d, &mut scratch);
+            let ref_r = model::evaluate(&k, &a, &dev, &d);
+            let rel = (sym_r.total_cycles - ref_r.total_cycles).abs()
+                / ref_r.total_cycles.max(1.0);
+            if rel > 1e-9 {
+                fail(
+                    seed,
+                    &k,
+                    &ctx(&format!(
+                        "latency {} (compiled) vs {} (recursive)",
+                        sym_r.total_cycles, ref_r.total_cycles
+                    )),
+                );
+            }
+            if sym_r.dsp != ref_r.dsp
+                || sym_r.onchip_bytes != ref_r.onchip_bytes
+                || sym_r.max_partitioning != ref_r.max_partitioning
+                || sym_r.feasible != ref_r.feasible
+            {
+                fail(
+                    seed,
+                    &k,
+                    &ctx(&format!(
+                        "resources diverged: dsp {}/{} onchip {}/{} part {}/{} feas {}/{}",
+                        sym_r.dsp,
+                        ref_r.dsp,
+                        sym_r.onchip_bytes,
+                        ref_r.onchip_bytes,
+                        sym_r.max_partitioning,
+                        ref_r.max_partitioning,
+                        sym_r.feasible,
+                        ref_r.feasible
+                    )),
+                );
+            }
+            // shared-constraint walk vs the legacy hand-written walk
+            let o = p.objective(&d);
+            let r = p.objective_reference(&d);
+            if (o - r).abs() / r.max(1.0) > 1e-9 {
+                fail(seed, &k, &ctx(&format!("objective {o} vs legacy reference {r}")));
+            }
+            let shared = p.check(&d);
+            let legacy = p.check_legacy(&d);
+            if shared != legacy {
+                fail(
+                    seed,
+                    &k,
+                    &ctx(&format!("violations {shared:?} vs legacy {legacy:?}")),
+                );
+            }
+        }
+    }
+}
+
+fn diff_results(serial: &SolveResult, par: &SolveResult) -> Option<String> {
+    if serial.optimal != par.optimal {
+        return Some(format!("optimal {} vs {}", serial.optimal, par.optimal));
+    }
+    if serial.lower_bound.to_bits() != par.lower_bound.to_bits() {
+        return Some(format!(
+            "lower bound {} vs {}",
+            serial.lower_bound, par.lower_bound
+        ));
+    }
+    if serial.designs.len() != par.designs.len() {
+        return Some(format!(
+            "top-k {} vs {}",
+            serial.designs.len(),
+            par.designs.len()
+        ));
+    }
+    for (i, ((d1, o1), (d2, o2))) in serial.designs.iter().zip(&par.designs).enumerate() {
+        if d1.fingerprint() != d2.fingerprint() {
+            return Some(format!(
+                "design #{i}: {} vs {}",
+                d1.fingerprint(),
+                d2.fingerprint()
+            ));
+        }
+        if o1.to_bits() != o2.to_bits() {
+            return Some(format!("objective #{i}: {o1} vs {o2}"));
+        }
+    }
+    None
+}
+
+#[test]
+fn prop_parallel_solver_bit_identical_on_generated_kernels() {
+    let dev = Device::u200();
+    for seed in seeds("solver-parity") {
+        // keep the per-kernel solve tiny: the suite runs hundreds of
+        // (kernel × mode × jobs) searches
+        let mut cfg = GenConfig::sampled(seed);
+        cfg.max_trip = cfg.max_trip.min(16);
+        cfg.depth = cfg.depth.min(2);
+        let k = frontend::generate(&cfg);
+        let a = Analysis::new(&k);
+        for fine in [false, true] {
+            let p = NlpProblem::new(&k, &a, &dev, 16, fine);
+            let serial = nlp::solve_jobs(&p, 120.0, 3, &SymbolicEvaluator, 1);
+            if !serial.optimal {
+                fail(
+                    seed,
+                    &k,
+                    &format!("fine={fine}: serial solve did not complete within budget"),
+                );
+            }
+            let par = nlp::solve_jobs(&p, 120.0, 3, &SymbolicEvaluator, 4);
+            if let Some(diff) = diff_results(&serial, &par) {
+                fail(seed, &k, &format!("fine={fine}, jobs=4 diverged: {diff}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_lower_bound_monotone_under_refinement() {
+    let dev = Device::u200();
+    for seed in seeds("bound-monotone") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        let mut rng = Rng::new(seed).derive("refinement");
+        for case in 0..4 {
+            // refine the free partial towards a random legal completion,
+            // one loop at a time in random order
+            let d = random_design(&mut rng, &k, &a, &s);
+            let target = model::evaluate(&k, &a, &dev, &d).total_cycles;
+            let mut partial = sym::PartialDesign::free(k.n_loops());
+            let mut prev = bm.lower_bound(&partial);
+            let mut order: Vec<usize> = (0..k.n_loops()).collect();
+            rng.shuffle(&mut order);
+            for (step, &i) in order.iter().enumerate() {
+                let l = LoopId(i as u32);
+                partial.assign_uf(l, d.pragmas[i].uf);
+                partial.assign_tile(l, d.pragmas[i].tile);
+                partial.assign_pipeline(l, d.pragmas[i].pipeline);
+                let lb = bm.lower_bound(&partial);
+                if lb < prev - prev.abs() * 1e-9 - 1e-9 {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case}: bound DECREASED at step {step} (pinning L{i}): \
+                             {prev} -> {lb} (design {})",
+                            d.fingerprint()
+                        ),
+                    );
+                }
+                if lb > target * (1.0 + 1e-9) {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case}: bound {lb} beats its own completion {target} \
+                             at step {step} (design {}) — inadmissible",
+                            d.fingerprint()
+                        ),
+                    );
+                }
+                prev = lb;
+            }
+        }
+    }
+}
