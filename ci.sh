@@ -16,6 +16,12 @@ cargo build --release --workspace --all-targets
 echo "==> cargo test -q"
 cargo test -q --workspace
 
+echo "==> cargo doc --no-deps (rustdoc warnings are errors: missing docs, broken intra-doc links)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --workspace
+
+echo "==> doc-tests (the GUIDE/rustdoc examples must keep running as written)"
+cargo test -q --workspace --doc
+
 echo "==> fuzz smoke (FUZZ_SMOKE=1 — generative differential suites at bounded N)"
 # mirrors BENCH_SMOKE: a fast bounded re-run that keeps the env-knob
 # replay path (FUZZ_SMOKE / FUZZ_KERNELS / FUZZ_SEED) from rotting; the
@@ -25,7 +31,7 @@ FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz -- --nocapture
 
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
-for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch; do
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen; do
   BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
 done
 if [ ! -f BENCH_solver.json ]; then

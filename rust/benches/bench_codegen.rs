@@ -1,0 +1,96 @@
+//! Emission throughput of the pragma-annotated C backend: per-kernel
+//! latency in both dialects (+ realized mode, which folds in a full
+//! simulated-Merlin run) and whole-corpus kernels/s — the cost of
+//! dumping every campaign row's best design (`campaign --emit-dir`).
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::codegen::{self, EmitConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, Kernel, LoopId};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use nlp_dse::util::bench::{black_box, Bench};
+
+/// The golden suite's deterministic showcase design (same construction
+/// as `tests/codegen_golden.rs`): pipeline + unroll innermost loops,
+/// tile nest roots — so the throughput numbers describe the snapshot
+/// corpus.
+fn showcase(k: &Kernel, a: &Analysis) -> Design {
+    let mut d = Design::empty(k);
+    for i in 0..k.n_loops() {
+        let l = LoopId(i as u32);
+        let meta = k.loop_meta(l);
+        let tc = &a.tcs[i];
+        if meta.innermost {
+            d.get_mut(l).pipeline = true;
+            if tc.is_constant() && tc.max > 1 {
+                d.get_mut(l).uf = nlp_dse::util::divisors(tc.max)
+                    .into_iter()
+                    .filter(|&x| x <= 8)
+                    .max()
+                    .unwrap_or(1);
+            }
+        } else if meta.parent.is_none() && tc.is_constant() && tc.max > 1 {
+            d.get_mut(l).tile = nlp_dse::util::divisors(tc.max)
+                .into_iter()
+                .filter(|&x| x <= 4)
+                .max()
+                .unwrap_or(1);
+        }
+    }
+    d
+}
+
+fn main() {
+    // BENCH_SMOKE=1 (the ci.sh bench-smoke step): one Small kernel only
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("codegen");
+    let dev = Device::u200();
+
+    let matrix: Vec<(&str, Size)> = if smoke {
+        vec![("gemm", Size::Small)]
+    } else {
+        vec![
+            ("gemm", Size::Medium),
+            ("2mm", Size::Medium),
+            ("cnn", Size::Medium),
+            ("heat-3d", Size::Medium),
+        ]
+    };
+    for (name, size) in matrix {
+        let k = benchmarks::build(name, size, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let d = showcase(&k, &a);
+        b.bench(&format!("emit/merlin/{name}-{}", size.tag()), || {
+            black_box(codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin()));
+        });
+        b.bench(&format!("emit/vitis/{name}-{}", size.tag()), || {
+            black_box(codegen::emit(&k, &a, &dev, &d, &EmitConfig::vitis()));
+        });
+        b.bench(&format!("emit/realized/{name}-{}", size.tag()), || {
+            black_box(codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin().realized()));
+        });
+        b.bench(&format!("lint/{name}-{}", size.tag()), || {
+            let code = codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin());
+            black_box(codegen::lint(&k, &code).unwrap());
+        });
+    }
+
+    // whole-corpus throughput: kernels/s for a campaign-wide dump
+    let corpus: Vec<(Kernel, Analysis, Design)> = benchmarks::ALL
+        .iter()
+        .map(|name| {
+            let size = if *name == "cnn" { Size::Medium } else { Size::Small };
+            let k = benchmarks::build(name, size, DType::F32).unwrap();
+            let a = Analysis::new(&k);
+            let d = showcase(&k, &a);
+            (k, a, d)
+        })
+        .collect();
+    b.bench_with_items("emit_corpus/merlin/S", corpus.len() as f64, || {
+        for (k, a, d) in &corpus {
+            black_box(codegen::emit(k, a, &dev, d, &EmitConfig::merlin()));
+        }
+    });
+    b.finish();
+}

@@ -26,10 +26,14 @@ use crate::util::divisors;
 use crate::util::rng::{hash64, Rng};
 use std::collections::BTreeSet;
 
+/// AutoDSE campaign parameters (Section 7.2's setup).
 #[derive(Clone, Debug)]
 pub struct AutoDseConfig {
+    /// Parallel synthesis workers (paper: 4 kernels x 2 threads).
     pub workers: usize,
+    /// Per-synthesis HLS timeout, minutes.
     pub hls_timeout_min: f64,
+    /// Overall exploration budget, minutes.
     pub dse_budget_min: f64,
     /// Candidate moves evaluated per round (one per worker-thread).
     pub wave: usize,
@@ -46,12 +50,18 @@ impl Default for AutoDseConfig {
     }
 }
 
+/// What one AutoDSE run produced (feeds Tables 1/3/5).
 #[derive(Clone, Debug)]
 pub struct AutoDseOutcome {
+    /// Kernel the exploration ran on.
     pub kernel: String,
+    /// Best valid design and its measured latency, cycles.
     pub best: Option<(Design, f64)>,
+    /// Best measured throughput.
     pub best_gflops: f64,
+    /// DSP utilization % of the best design.
     pub best_dsp_pct: f64,
+    /// Simulated exploration wall time, minutes.
     pub dse_minutes: f64,
     /// DE: total designs sent to Merlin/HLS.
     pub designs_explored: u32,

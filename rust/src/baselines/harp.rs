@@ -22,14 +22,18 @@ use crate::pragma::{space, Design, Space};
 use crate::util::rng::{hash64, Rng};
 use std::collections::BTreeSet;
 
+/// HARP campaign parameters (Section 7.4's setup).
 #[derive(Clone, Debug)]
 pub struct HarpConfig {
     /// Surrogate sweep budget (Section 7.2.2: one hour).
     pub sweep_minutes: f64,
     /// Configurations the surrogate can score in the budget.
     pub sweep_configs: u64,
+    /// Surrogate-ranked designs sent to real synthesis.
     pub top_k: usize,
+    /// Parallel synthesis workers.
     pub workers: usize,
+    /// Per-synthesis HLS timeout, minutes.
     pub hls_timeout_min: f64,
 }
 
@@ -45,14 +49,22 @@ impl Default for HarpConfig {
     }
 }
 
+/// What one HARP run produced (feeds Table 9 / Fig 4).
 #[derive(Clone, Debug)]
 pub struct HarpOutcome {
+    /// Kernel the exploration ran on.
     pub kernel: String,
+    /// Best valid design and its measured latency, cycles.
     pub best: Option<(Design, f64)>,
+    /// Best measured throughput.
     pub best_gflops: f64,
+    /// Simulated exploration wall time, minutes.
     pub dse_minutes: f64,
+    /// Configurations scored by the surrogate sweep.
     pub configs_scored: u64,
+    /// Designs sent through real synthesis.
     pub designs_synthesized: u32,
+    /// Synthesis timeouts among them.
     pub designs_timeout: u32,
 }
 

@@ -36,6 +36,19 @@ pub use stencil::{
 /// This is the one kernel-by-name entry point the CLI, the campaign
 /// coordinator, and the `Explorer` facade all route through; unknown
 /// specs produce a clean error instead of the old `panic!` paths.
+///
+/// # Examples
+///
+/// ```
+/// use nlp_dse::benchmarks::{lookup, Size};
+/// use nlp_dse::ir::DType;
+///
+/// let k = lookup("gemm", Size::Small, DType::F32)?;
+/// assert_eq!(k.name, "gemm");
+/// assert_eq!(k.n_loops(), 4);
+/// assert!(lookup("not-a-kernel", Size::Small, DType::F32).is_err());
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub fn lookup(spec: &str, size: Size, dtype: DType) -> anyhow::Result<Kernel> {
     if let Some(k) = build(spec, size, dtype) {
         return Ok(k);

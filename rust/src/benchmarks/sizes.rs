@@ -3,14 +3,19 @@
 use super::*;
 use crate::ir::{DType, Kernel};
 
+/// Problem-size class of Table 8.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Size {
+    /// Table 8 `S` (HARP-comparison scale).
     Small,
+    /// Table 8 `M` (the paper's main scale).
     Medium,
+    /// Table 8 `L`.
     Large,
 }
 
 impl Size {
+    /// One-letter tag (`S`/`M`/`L`) used in filenames and tables.
     pub fn tag(self) -> &'static str {
         match self {
             Size::Small => "S",
@@ -18,6 +23,7 @@ impl Size {
             Size::Large => "L",
         }
     }
+    /// Parse a size spec (`s`/`small`/`m`/… case-insensitive).
     pub fn parse(s: &str) -> Option<Size> {
         match s.to_ascii_lowercase().as_str() {
             "s" | "small" => Some(Size::Small),

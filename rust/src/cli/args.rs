@@ -3,6 +3,7 @@
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
+/// Parsed argv: one command, `--key value` options, `--flag`s.
 pub struct Args {
     command: String,
     opts: BTreeMap<String, String>,
@@ -11,6 +12,7 @@ pub struct Args {
 }
 
 impl Args {
+    /// Parse raw argv tokens (no escaping; values may not start with `--`).
     pub fn parse(argv: &[&str]) -> Result<Args> {
         let mut command = String::new();
         let mut opts = BTreeMap::new();
@@ -41,6 +43,7 @@ impl Args {
         })
     }
 
+    /// The leading positional command (empty when none).
     pub fn command(&self) -> &str {
         &self.command
     }
@@ -55,6 +58,7 @@ impl Args {
         }
     }
 
+    /// Restore a previously consumed option so a later reader sees it.
     pub fn put_back(&mut self, key: &str) {
         if let Some(pos) = self.consumed.iter().position(|(k, _)| k == key) {
             let (k, v) = self.consumed.remove(pos);
@@ -62,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Whether the bare flag `--key` was given.
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

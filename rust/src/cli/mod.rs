@@ -6,9 +6,12 @@
 //! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound] [--jobs N]
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
 //! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
+//! nlp-dse emit gemm [--design-from solve|dse|empty] [--assign i=4] [--pipeline k]
+//!                   [--dialect merlin|vitis] [--realized] [--out gemm.c]
 //! nlp-dse space --kernel 2mm --size M
 //! nlp-dse gen [--seed S] [--count N] [--out-dir DIR] [--sampled] [--depth/--width/...]
 //! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla] [--jobs N]
+//!                  [--emit-dir DIR]
 //! ```
 //!
 //! Everywhere a kernel is named, the spec is either a registered
@@ -45,18 +48,21 @@ use crate::runtime::{default_artifact_dir, XlaEvaluator};
 use anyhow::{anyhow, bail, Result};
 use args::Args;
 
+/// Binary entry point: parse `std::env::args` and run.
 pub fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     run(&argv.iter().map(|s| s.as_str()).collect::<Vec<_>>())
 }
 
+/// Run one CLI invocation against explicit argv (testable entry point).
 pub fn run(argv: &[&str]) -> Result<()> {
-    // `bound <kernel>` sugar: the kernel may be given positionally
+    // `bound <kernel>` / `emit <kernel>` sugar: the kernel may be given
+    // positionally
     let rewritten: Vec<&str>;
-    let argv = if argv.first() == Some(&"bound")
+    let argv = if matches!(argv.first().copied(), Some("bound") | Some("emit"))
         && argv.get(1).is_some_and(|a| !a.starts_with("--"))
     {
-        rewritten = std::iter::once("bound")
+        rewritten = std::iter::once(argv[0])
             .chain(std::iter::once("--kernel"))
             .chain(argv[1..].iter().copied())
             .collect();
@@ -71,6 +77,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "dse" => cmd_dse(&mut args)?,
         "solve" => cmd_solve(&mut args)?,
         "bound" => cmd_bound(&mut args)?,
+        "emit" => cmd_emit(&mut args)?,
         "space" => cmd_space(&mut args)?,
         "gen" => cmd_gen(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
@@ -99,11 +106,16 @@ fn help() -> String {
            solve    --kernel K --size S [--cap N] [--fine] [--xla|--sym]\n\
            bound    K [--size S] [--assign loop=uf,...] [--pipeline loop,...] [--cap N]\n\
                     (achievable-latency lower bound of a partial pragma configuration)\n\
+           emit     K [--size S] [--design-from solve|dse|empty | --assign loop=uf,...\n\
+                    --pipeline loop,... --tile loop=t,...] [--dialect merlin|vitis]\n\
+                    [--realized] [--cap N] [--fine] [--engine E] [--out FILE]\n\
+                    (pragma-annotated HLS C; --realized shows what Merlin accepts)\n\
            space    --kernel K --size S\n\
            gen      [--seed S] [--count N] [--out-dir DIR] [--sampled]\n\
                     [--depth D --width W --nests K --arrays A --max-trip T]\n\
                     (emit seeded random .knl kernels; single kernel prints to stdout)\n\
            campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
+                    [--emit-dir DIR [--dialect merlin|vitis] [--realized]]\n\
            engines  (list the registered exploration engines)\n\
          \n\
          common flags: --out FILE  --threads N  --jobs N  --dtype f32|f64\n\
@@ -123,7 +135,10 @@ fn cmd_engines() -> String {
     out
 }
 
-fn scope_campaign(args: &mut Args, engines: Vec<String>) -> Result<CampaignResult> {
+fn scope_campaign(
+    args: &mut Args,
+    engines: Vec<String>,
+) -> Result<(CampaignConfig, CampaignResult)> {
     let scope = args.opt("scope").unwrap_or_else(|| "quick".into());
     let mut cfg = match scope.as_str() {
         "paper" => CampaignConfig::paper_autodse(),
@@ -160,7 +175,8 @@ fn scope_campaign(args: &mut Args, engines: Vec<String>) -> Result<CampaignResul
         cfg.tuning.dse.jobs,
         cfg.use_xla
     );
-    Ok(coordinator::run_campaign(&cfg))
+    let result = coordinator::run_campaign(&cfg);
+    Ok((cfg, result))
 }
 
 fn cmd_table(args: &mut Args) -> Result<String> {
@@ -172,11 +188,11 @@ fn cmd_table(args: &mut Args) -> Result<String> {
     let table = match id {
         8 => report::table8(),
         9 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
             report::table9(&r)
         }
         7 | 6 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse"]))?;
             if id == 7 {
                 report::table7(&r)
             } else {
@@ -184,7 +200,7 @@ fn cmd_table(args: &mut Args) -> Result<String> {
             }
         }
         1 | 2 | 3 | 5 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
             match id {
                 1 => report::table1(&r),
                 2 => report::table2(&r),
@@ -204,16 +220,16 @@ fn cmd_figure(args: &mut Args) -> Result<String> {
         .parse()?;
     Ok(match id {
         2 | 3 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse", "autodse"]))?;
             let size = if id == 2 { Size::Large } else { Size::Medium };
             report::figure2_3(&r, size)
         }
         4 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse", "harp"]))?;
             report::figure4(&r)
         }
         5 => {
-            let r = scope_campaign(args, engine_names(&["nlpdse"]))?;
+            let (_, r) = scope_campaign(args, engine_names(&["nlpdse"]))?;
             report::figure5(&r)
         }
         6 => {
@@ -357,22 +373,7 @@ fn cmd_bound(args: &mut Args) -> Result<String> {
     let _ = parse_jobs(args)?;
     let ex = Explorer::custom(spec.kernel(size, dtype)?);
     let k = ex.kernel_ref();
-
-    let resolve = |tok: &str| -> Result<crate::ir::LoopId> {
-        for i in 0..k.n_loops() {
-            let l = crate::ir::LoopId(i as u32);
-            if k.loop_name(l) == tok || format!("L{i}") == tok || i.to_string() == tok {
-                return Ok(l);
-            }
-        }
-        bail!(
-            "unknown loop `{tok}` (loops: {})",
-            (0..k.n_loops())
-                .map(|i| k.loop_name(crate::ir::LoopId(i as u32)).to_string())
-                .collect::<Vec<_>>()
-                .join(", ")
-        )
-    };
+    let resolve = |tok: &str| resolve_loop(k, tok);
 
     let mut partial = crate::model::sym::PartialDesign::free(k.n_loops());
     if let Some(cap) = args.opt("cap") {
@@ -424,6 +425,137 @@ fn cmd_bound(args: &mut Args) -> Result<String> {
          (Theorem B.21 admissibility)\n",
     );
     Ok(out)
+}
+
+/// Resolve a loop token against a kernel: loop name, `L<i>`, or the
+/// bare index (shared by `bound` and `emit`).
+fn resolve_loop(k: &crate::ir::Kernel, tok: &str) -> Result<crate::ir::LoopId> {
+    for i in 0..k.n_loops() {
+        let l = crate::ir::LoopId(i as u32);
+        if k.loop_name(l) == tok || format!("L{i}") == tok || i.to_string() == tok {
+            return Ok(l);
+        }
+    }
+    bail!(
+        "unknown loop `{tok}` (loops: {})",
+        (0..k.n_loops())
+            .map(|i| k.loop_name(crate::ir::LoopId(i as u32)).to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+}
+
+/// `--dialect` (default: merlin, the paper's flow).
+fn parse_dialect(args: &mut Args) -> Result<crate::codegen::Dialect> {
+    match args.opt("dialect") {
+        None => Ok(crate::codegen::Dialect::Merlin),
+        Some(s) => crate::codegen::Dialect::parse(&s)
+            .ok_or_else(|| anyhow!("bad --dialect {s} (want merlin or vitis)")),
+    }
+}
+
+/// `emit`: lower a kernel + pragma design to annotated HLS C — the
+/// paper's end-to-end deliverable. The design comes from the NLP solver
+/// (`--design-from solve`, the default), a full DSE engine run
+/// (`--design-from dse [--engine E]`), the pragma-free baseline
+/// (`--design-from empty`), or explicit `--assign`/`--pipeline`/`--tile`
+/// settings. `--realized` emits what simulated Merlin actually applies.
+fn cmd_emit(args: &mut Args) -> Result<String> {
+    let spec = kernel_spec(args)
+        .map_err(|_| anyhow!("--kernel or --kernel-file required (or `emit <kernel>`)"))?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args)?;
+    let dialect = parse_dialect(args)?;
+    let realized = args.flag("realized");
+    let k = spec.kernel(size, dtype)?;
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+
+    let assigns = args.opt("assign");
+    let tiles = args.opt("tile");
+    let pipes = args.opt("pipeline");
+    let manual = assigns.is_some() || tiles.is_some() || pipes.is_some();
+    let from = args.opt("design-from");
+    if manual && from.is_some() {
+        bail!("--design-from conflicts with --assign/--pipeline/--tile (pick one design source)");
+    }
+
+    let design = if manual {
+        let mut d = crate::pragma::Design::empty(&k);
+        if let Some(list) = assigns {
+            for pair in list.split(',').filter(|s| !s.is_empty()) {
+                let (lhs, rhs) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad --assign entry `{pair}` (want loop=uf)"))?;
+                d.get_mut(resolve_loop(&k, lhs.trim())?).uf = rhs.trim().parse()?;
+            }
+        }
+        if let Some(list) = tiles {
+            for pair in list.split(',').filter(|s| !s.is_empty()) {
+                let (lhs, rhs) = pair
+                    .split_once('=')
+                    .ok_or_else(|| anyhow!("bad --tile entry `{pair}` (want loop=factor)"))?;
+                d.get_mut(resolve_loop(&k, lhs.trim())?).tile = rhs.trim().parse()?;
+            }
+        }
+        if let Some(list) = pipes {
+            for tok in list.split(',').filter(|s| !s.is_empty()) {
+                d.get_mut(resolve_loop(&k, tok.trim())?).pipeline = true;
+            }
+        }
+        d
+    } else {
+        match from.as_deref().unwrap_or("solve") {
+            "empty" => crate::pragma::Design::empty(&k),
+            "solve" => {
+                let cap = args
+                    .opt("cap")
+                    .map(|s| s.parse::<u64>())
+                    .transpose()?
+                    .unwrap_or(u64::MAX);
+                let fine = args.flag("fine");
+                let jobs = parse_jobs(args)?.unwrap_or_else(nlp::default_jobs);
+                let eval = make_evaluator(args);
+                let p = NlpProblem::new(&k, &a, &dev, cap, fine);
+                let r = nlp::solve_jobs(&p, 30.0, 1, eval.as_ref(), jobs);
+                r.best().map(|(d, _)| d.clone()).ok_or_else(|| {
+                    anyhow!(
+                        "solver found no feasible design for `{}` (try a larger --cap)",
+                        k.name
+                    )
+                })?
+            }
+            "dse" => {
+                let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
+                let evaluator =
+                    Evaluator::custom(std::sync::Arc::from(make_evaluator(args)));
+                let dse_cfg = crate::dse::DseConfig {
+                    jobs: parse_jobs(args)?.unwrap_or_else(nlp::default_jobs),
+                    ..Default::default()
+                };
+                let outcome = Explorer::custom(k.clone())
+                    .evaluator(evaluator)
+                    .dse_config(dse_cfg)
+                    .engine(&engine)?
+                    .run()?;
+                outcome.best.map(|(d, _)| d).ok_or_else(|| {
+                    anyhow!("engine `{engine}` found no valid design for `{}`", k.name)
+                })?
+            }
+            other => bail!(
+                "bad --design-from `{other}` (want solve|dse|empty, \
+                 or use --assign/--pipeline/--tile)"
+            ),
+        }
+    };
+
+    Ok(crate::codegen::emit(
+        &k,
+        &a,
+        &dev,
+        &design,
+        &crate::codegen::EmitConfig { dialect, realized },
+    ))
 }
 
 fn cmd_solve(args: &mut Args) -> Result<String> {
@@ -644,13 +776,79 @@ fn cmd_campaign(args: &mut Args) -> Result<String> {
         }
         None => engine_names(&["nlpdse", "autodse", "harp"]),
     };
-    let r = scope_campaign(args, engines)?;
+    let emit_dir = args.opt("emit-dir");
+    let emit_cfg = crate::codegen::EmitConfig {
+        dialect: parse_dialect(args)?,
+        realized: args.flag("realized"),
+    };
+    let (cfg, r) = scope_campaign(args, engines)?;
+    // best-design artifacts: one annotated C file per (row, engine),
+    // indexed by a report table so campaigns link code, not just numbers
+    let emit_note = match emit_dir {
+        None => String::new(),
+        Some(dir) => {
+            let rows = emit_campaign(&r, cfg.dtype, &dir, &emit_cfg)?;
+            format!("\n{}", report::emitted_index(&rows).render())
+        }
+    };
     let json = campaign_json(&r);
     if let Some(path) = args.opt("json") {
         std::fs::write(&path, json.to_string_pretty())?;
-        return Ok(format!("campaign complete: {} rows -> {path}", r.rows.len()));
+        return Ok(format!(
+            "campaign complete: {} rows -> {path}{emit_note}",
+            r.rows.len()
+        ));
     }
-    Ok(json.to_string_pretty())
+    Ok(format!("{}{emit_note}", json.to_string_pretty()))
+}
+
+/// Write one pragma-annotated C file per (campaign row, engine) best
+/// design into `dir` and return the index rows for
+/// [`report::emitted_index`]. Rows whose kernel no longer resolves are
+/// skipped with a report, like every other campaign-robustness path.
+fn emit_campaign(
+    r: &CampaignResult,
+    dtype: DType,
+    dir: &str,
+    cfg: &crate::codegen::EmitConfig,
+) -> Result<Vec<report::EmittedRow>> {
+    std::fs::create_dir_all(dir)?;
+    let mut out = Vec::new();
+    for row in &r.rows {
+        let k = match benchmarks::lookup(&row.name, row.size, dtype) {
+            Ok(k) => k,
+            Err(err) => {
+                eprintln!("[campaign] emit skipped for `{}`: {err:#}", row.name);
+                continue;
+            }
+        };
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        for e in &row.explorations {
+            let Some((d, _)) = &e.best else { continue };
+            let code = crate::codegen::emit(&k, &a, &dev, d, cfg);
+            let safe: String = row
+                .name
+                .chars()
+                .map(|c| if c == '/' || c == '\\' { '_' } else { c })
+                .collect();
+            let path = format!(
+                "{dir}/{safe}-{}-{}.{}.c",
+                row.size.tag(),
+                e.engine,
+                cfg.dialect.name()
+            );
+            std::fs::write(&path, &code)?;
+            out.push(report::EmittedRow {
+                kernel: row.name.clone(),
+                size: row.size.tag().to_string(),
+                engine: e.engine.clone(),
+                gflops: e.best_gflops,
+                path,
+            });
+        }
+    }
+    Ok(out)
 }
 
 /// JSON dump of a campaign (for plotting / external analysis). One
@@ -752,6 +950,121 @@ mod tests {
         run(&["bound", "--kernel-file", knl]).unwrap();
         // and a path passed to --kernel resolves identically
         run(&["space", "--kernel", knl]).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kernel_file_parse_errors_keep_the_caret_snippet() {
+        // the rendered ParseError diagnostic (line/col header + caret
+        // underline) must survive the anyhow chain on every
+        // --kernel-file command path
+        let path = std::env::temp_dir().join("nlp_dse_cli_diag_test.knl");
+        let path_s = path.to_str().unwrap().to_string();
+        std::fs::write(
+            &path,
+            "kernel \"bad\" f32\narray a[4] out\nfor i in 0 .. 4 {\n  stmt s writes a[zz];\n}\n",
+        )
+        .unwrap();
+        for argv in [
+            &["solve", "--kernel-file", &path_s, "--cap", "16"][..],
+            &["emit", "--kernel-file", &path_s][..],
+            &["space", "--kernel-file", &path_s][..],
+        ] {
+            let err = run(argv).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("parsing kernel file"), "{argv:?}: {msg}");
+            assert!(msg.contains(":4:"), "{argv:?}: {msg}");
+            assert!(msg.contains("stmt s writes a[zz];"), "{argv:?}: {msg}");
+            assert!(msg.contains('^'), "{argv:?}: {msg}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn emit_manual_design_writes_lintable_c() {
+        let out = std::env::temp_dir().join("nlp_dse_cli_emit_manual.c");
+        let out_s = out.to_str().unwrap().to_string();
+        for dialect in ["merlin", "vitis"] {
+            run(&[
+                "emit", "gemm", "--size", "S", "--assign", "k=8", "--pipeline", "j1", "--tile",
+                "i=2", "--dialect", dialect, "--out", &out_s,
+            ])
+            .unwrap();
+            let code = std::fs::read_to_string(&out).unwrap();
+            let k = benchmarks::lookup("gemm", Size::Small, DType::F32).unwrap();
+            crate::codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{dialect}: {e}\n{code}"));
+            assert!(code.contains("void kernel_gemm("), "{code}");
+        }
+        // realized mode also lints (and reports the merlin outcome)
+        run(&[
+            "emit", "gemm", "--size", "S", "--assign", "k=8", "--realized", "--out", &out_s,
+        ])
+        .unwrap();
+        let code = std::fs::read_to_string(&out).unwrap();
+        assert!(code.contains("mode: realized"), "{code}");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn emit_design_sources_are_mutually_exclusive() {
+        let err = run(&["emit", "gemm", "--design-from", "solve", "--assign", "i=2"]).unwrap_err();
+        assert!(format!("{err:#}").contains("conflicts"), "{err:#}");
+        let err = run(&["emit", "gemm", "--design-from", "nope"]).unwrap_err();
+        assert!(format!("{err:#}").contains("bad --design-from"), "{err:#}");
+    }
+
+    #[test]
+    fn emit_via_solve_and_dse_covers_kernels_end_to_end() {
+        let dir = std::env::temp_dir().join("nlp_dse_cli_emit_solve");
+        std::fs::create_dir_all(&dir).unwrap();
+        // the acceptance flow: `emit K --design-from solve --dialect merlin`
+        for name in ["gemm", "bicg", "atax"] {
+            let out = dir.join(format!("{name}.c"));
+            let out_s = out.to_str().unwrap().to_string();
+            run(&[
+                "emit", name, "--size", "S", "--design-from", "solve", "--cap", "16", "--jobs",
+                "1", "--dialect", "merlin", "--out", &out_s,
+            ])
+            .unwrap();
+            let code = std::fs::read_to_string(&out).unwrap();
+            let k = benchmarks::lookup(name, Size::Small, DType::F32).unwrap();
+            crate::codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{name}: {e}\n{code}"));
+            assert!(code.contains("#pragma ACCEL"), "{name}: {code}");
+        }
+        // a DSE engine's best design is emittable the same way
+        let out = dir.join("mvt-dse.c");
+        let out_s = out.to_str().unwrap().to_string();
+        run(&[
+            "emit", "mvt", "--size", "S", "--design-from", "dse", "--jobs", "1", "--out", &out_s,
+        ])
+        .unwrap();
+        let k = benchmarks::lookup("mvt", Size::Small, DType::F32).unwrap();
+        let code = std::fs::read_to_string(&out).unwrap();
+        crate::codegen::lint(&k, &code).unwrap_or_else(|e| panic!("mvt/dse: {e}\n{code}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_emit_dir_writes_indexed_artifacts() {
+        let dir = std::env::temp_dir().join("nlp_dse_cli_emit_campaign");
+        let dir_s = dir.to_str().unwrap().to_string();
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = CampaignConfig::quick();
+        cfg.engines = engine_names(&["nlpdse", "random"]);
+        let row = coordinator::run_one(&cfg, "gemm", Size::Small).unwrap();
+        let r = CampaignResult { rows: vec![row] };
+        let rows =
+            emit_campaign(&r, DType::F32, &dir_s, &crate::codegen::EmitConfig::merlin()).unwrap();
+        // one artifact per engine with a valid best design
+        assert_eq!(rows.len(), 2, "{rows:?}");
+        let k = benchmarks::lookup("gemm", Size::Small, DType::F32).unwrap();
+        for er in &rows {
+            let code = std::fs::read_to_string(&er.path).unwrap();
+            crate::codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{}: {e}", er.engine));
+        }
+        let index = report::emitted_index(&rows).render();
+        assert!(index.contains("nlpdse"), "{index}");
+        assert!(index.contains(&rows[0].path), "{index}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,225 @@
+//! Structural re-parse of emitted C: the invariants every emission must
+//! satisfy, checked without a C compiler (none exists in the offline
+//! environment).
+//!
+//! [`lint`] verifies, against the kernel the code was emitted from:
+//!
+//! 1. **balanced delimiters** — `{}`/`[]`/`()` match with comments
+//!    stripped (an unbalanced emission cannot be compilable C);
+//! 2. **loop coverage** — exactly one `for (` header per IR loop;
+//! 3. **statement coverage** — every statement name appears as a
+//!    `/* name */` marker, and at least one `;`-terminated assignment
+//!    per statement exists;
+//! 4. **pragma attachment** — every loop-level pragma line is adjacent
+//!    to a loop: Merlin `#pragma ACCEL` lines (other than `cache`,
+//!    which also binds to the following loop) are followed by a `for`
+//!    header, Vitis loop pragmas immediately follow one;
+//! 5. **pragma well-formedness** — every `#pragma` line is either
+//!    `#pragma ACCEL …` or `#pragma HLS …`.
+//!
+//! The golden-file suite and the generative fuzz suite both run every
+//! emission through this before comparing bytes.
+
+use crate::ir::Kernel;
+
+/// Counts gathered while linting (handy for test assertions).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LintReport {
+    /// `for (` loop headers found.
+    pub for_loops: usize,
+    /// `#pragma` lines found.
+    pub pragmas: usize,
+    /// `/* name */` statement markers found.
+    pub stmt_markers: usize,
+}
+
+/// Check `code` against the kernel it claims to implement. Returns the
+/// lint counts, or a description of the first violated invariant.
+pub fn lint(k: &Kernel, code: &str) -> Result<LintReport, String> {
+    let stripped = strip_comments(code);
+
+    // 1. balanced delimiters
+    let mut stack: Vec<char> = Vec::new();
+    for (i, ch) in stripped.chars().enumerate() {
+        match ch {
+            '(' | '[' | '{' => stack.push(ch),
+            ')' | ']' | '}' => {
+                let want = match ch {
+                    ')' => '(',
+                    ']' => '[',
+                    _ => '{',
+                };
+                if stack.pop() != Some(want) {
+                    return Err(format!("unbalanced `{ch}` at byte {i}"));
+                }
+            }
+            _ => {}
+        }
+    }
+    if let Some(open) = stack.pop() {
+        return Err(format!("unclosed `{open}`"));
+    }
+
+    let mut report = LintReport {
+        for_loops: stripped.matches("for (").count(),
+        ..LintReport::default()
+    };
+
+    // 2. one `for (` per IR loop
+    if report.for_loops != k.n_loops() {
+        return Err(format!(
+            "{} `for (` headers for {} IR loops",
+            report.for_loops,
+            k.n_loops()
+        ));
+    }
+
+    // 3. every statement appears (markers live in comments: scan `code`)
+    for s in k.stmts() {
+        let marker = format!("/* {} */", s.name);
+        if !code.contains(&marker) {
+            return Err(format!("statement marker `{marker}` missing"));
+        }
+        report.stmt_markers += 1;
+    }
+    if stripped.matches(';').count() < k.n_stmts() {
+        return Err("fewer `;` than statements".into());
+    }
+
+    // 4 + 5. pragma shape and attachment
+    let lines: Vec<&str> = code.lines().map(str::trim_start).collect();
+    for (i, line) in lines.iter().enumerate() {
+        if !line.starts_with("#pragma") {
+            continue;
+        }
+        report.pragmas += 1;
+        let is_accel = line.starts_with("#pragma ACCEL ");
+        let is_hls = line.starts_with("#pragma HLS ");
+        if !is_accel && !is_hls {
+            return Err(format!("malformed pragma line `{line}`"));
+        }
+        if is_accel {
+            // next non-pragma/non-comment line must open a loop
+            let mut j = i + 1;
+            while j < lines.len()
+                && (lines[j].starts_with("#pragma") || lines[j].starts_with("//"))
+            {
+                j += 1;
+            }
+            if j >= lines.len() || !lines[j].starts_with("for (") {
+                return Err(format!("`{line}` not attached to a loop header"));
+            }
+        }
+        if is_hls && !line.contains("array_partition") {
+            // loop-body placement: the nearest preceding non-pragma,
+            // non-comment line must be a `for (...) {` header
+            let mut j = i;
+            loop {
+                if j == 0 {
+                    return Err(format!("`{line}` has no enclosing loop header"));
+                }
+                j -= 1;
+                let prev = lines[j];
+                if prev.starts_with("#pragma") || prev.starts_with("//") || prev.is_empty() {
+                    continue;
+                }
+                if prev.starts_with("for (") && prev.ends_with('{') {
+                    break;
+                }
+                return Err(format!("`{line}` not placed directly inside a loop"));
+            }
+        }
+    }
+
+    Ok(report)
+}
+
+/// Remove `//` and `/* */` comments (emitted code has no string
+/// literals, so a naive scan is exact).
+fn strip_comments(code: &str) -> String {
+    let bytes = code.as_bytes();
+    let mut out = String::with_capacity(code.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+            while i < bytes.len() && bytes[i] != b'\n' {
+                i += 1;
+            }
+        } else if bytes[i] == b'/' && i + 1 < bytes.len() && bytes[i + 1] == b'*' {
+            i += 2;
+            while i + 1 < bytes.len() && !(bytes[i] == b'*' && bytes[i + 1] == b'/') {
+                i += 1;
+            }
+            i = (i + 2).min(bytes.len());
+        } else {
+            out.push(bytes[i] as char);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::codegen::{self, Dialect, EmitConfig};
+    use crate::hls::Device;
+    use crate::ir::DType;
+    use crate::poly::Analysis;
+    use crate::pragma::Design;
+
+    fn emit(name: &str, dialect: Dialect) -> (crate::ir::Kernel, String) {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let mut d = Design::empty(&k);
+        for i in 0..k.n_loops() {
+            if k.loops[i].innermost {
+                d.pragmas[i].pipeline = true;
+            }
+        }
+        let code = codegen::emit(
+            &k,
+            &a,
+            &dev,
+            &d,
+            &EmitConfig {
+                dialect,
+                realized: false,
+            },
+        );
+        (k, code)
+    }
+
+    #[test]
+    fn clean_emissions_lint() {
+        for name in ["gemm", "2mm", "lu", "jacobi-2d"] {
+            for dialect in [Dialect::Merlin, Dialect::Vitis] {
+                let (k, code) = emit(name, dialect);
+                let rep = lint(&k, &code).unwrap_or_else(|e| panic!("{name}: {e}\n{code}"));
+                assert_eq!(rep.for_loops, k.n_loops(), "{name}");
+                assert!(rep.pragmas > 0, "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn mutilated_code_is_rejected() {
+        let (k, code) = emit("gemm", Dialect::Merlin);
+        let unbalanced = code.replacen('}', "", 1);
+        assert!(lint(&k, &unbalanced).is_err());
+        let no_loop = code.replacen("for (", "while (", 1);
+        assert!(lint(&k, &no_loop).is_err());
+        let floating = format!("#pragma ACCEL pipeline\n{code}");
+        assert!(lint(&k, &floating).is_err());
+        let bad = code.replace("#pragma ACCEL cache", "#pragma WEIRD cache");
+        assert!(lint(&k, &bad).is_err());
+    }
+
+    #[test]
+    fn strip_comments_removes_both_styles() {
+        let s = strip_comments("a /* x { */ b // y }\nc");
+        assert_eq!(s, "a  b \nc");
+    }
+}

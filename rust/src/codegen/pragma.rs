@@ -1,0 +1,251 @@
+//! The pragma annotation layer: per-loop pragma text in two dialects.
+//!
+//! * [`Dialect::Merlin`] — the paper's source-to-source flow:
+//!   `#pragma ACCEL parallel factor=UF` / `#pragma ACCEL tile factor=T`
+//!   / `#pragma ACCEL pipeline` placed **before** the loop header, plus
+//!   `#pragma ACCEL cache variable=A` at the outermost position of each
+//!   nest (the placement simulated `merlin::` applies automatically —
+//!   Section 2.1).
+//! * [`Dialect::Vitis`] — raw Vitis HLS: `#pragma HLS unroll factor=UF`
+//!   / `#pragma HLS pipeline II=1` placed just **inside** the loop
+//!   body, plus `#pragma HLS array_partition variable=A cyclic
+//!   factor=F dim=D` at function scope (the partitioning Merlin would
+//!   derive — Section 6's cross-dimension product, per dimension).
+//!
+//! When the emission is *realized* (`EmitConfig::realized`), the
+//! annotation is computed from the design Merlin actually implements,
+//! and every pragma the simulator refused is kept visible as a
+//! `// not applied:` comment in place of the pragma line — the paper's
+//! §7.5 observation ("about half of the designs have at least one
+//! pragma not applied") made inspectable in the artifact itself.
+
+use crate::ir::{ArrayId, Kernel, LoopId};
+use crate::pragma::Design;
+
+/// Output pragma dialect of the C emitter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dialect {
+    /// AMD/Xilinx Merlin `#pragma ACCEL` annotations (the paper's flow).
+    Merlin,
+    /// Raw Vitis HLS `#pragma HLS` annotations (no Merlin in the loop).
+    Vitis,
+}
+
+impl Dialect {
+    /// Stable lowercase name (CLI `--dialect` value, file-name infix).
+    pub fn name(self) -> &'static str {
+        match self {
+            Dialect::Merlin => "merlin",
+            Dialect::Vitis => "vitis",
+        }
+    }
+
+    /// Inverse of [`Self::name`].
+    pub fn parse(s: &str) -> Option<Dialect> {
+        match s.to_ascii_lowercase().as_str() {
+            "merlin" | "accel" => Some(Dialect::Merlin),
+            "vitis" | "hls" => Some(Dialect::Vitis),
+            _ => None,
+        }
+    }
+}
+
+/// Pragma lines computed per loop and per function, ready for the C
+/// emitter to indent and splice.
+pub(crate) struct Annotations {
+    /// Function-scope lines, emitted right after the opening brace
+    /// (Vitis `array_partition` directives).
+    pub fn_top: Vec<String>,
+    /// Lines placed immediately **before** loop `i`'s `for` header
+    /// (Merlin placement).
+    pub before: Vec<Vec<String>>,
+    /// Lines placed immediately **inside** loop `i`'s body (Vitis
+    /// placement).
+    pub inside: Vec<Vec<String>>,
+}
+
+/// Compute the annotation for `effective` (what the pragmas say), with
+/// `requested` kept alongside so refused pragmas surface as comments.
+/// In requested mode the two are the same design and no refusal
+/// comments are generated.
+pub(crate) fn annotate(
+    k: &Kernel,
+    requested: &Design,
+    effective: &Design,
+    dialect: Dialect,
+) -> Annotations {
+    let n = k.n_loops();
+    let mut ann = Annotations {
+        fn_top: Vec::new(),
+        before: vec![Vec::new(); n],
+        inside: vec![Vec::new(); n],
+    };
+
+    if dialect == Dialect::Vitis {
+        // function-scope partitioning: per-dimension max-UF factors of
+        // the effective design (Design::partitioning_dims), cyclic —
+        // Merlin's derivation made explicit for the raw-Vitis flow
+        for arr in &k.arrays {
+            for (dim, f) in effective.partitioning_dims(k, arr.id).iter().enumerate() {
+                if *f > 1 {
+                    ann.fn_top.push(format!(
+                        "#pragma HLS array_partition variable={} cyclic factor={} dim={}",
+                        arr.name,
+                        f,
+                        dim + 1
+                    ));
+                }
+            }
+        }
+    }
+
+    if dialect == Dialect::Merlin {
+        // cache pragmas at the outermost position of each nest, one per
+        // array the nest touches (simulated Merlin's automatic placement)
+        for root in k.nest_roots() {
+            let lines = &mut ann.before[root.0 as usize];
+            for a in nest_arrays(k, root) {
+                lines.push(format!("#pragma ACCEL cache variable={}", k.array(a).name));
+            }
+        }
+    }
+
+    for i in 0..n {
+        let l = LoopId(i as u32);
+        let req = requested.get(l);
+        let eff = effective.get(l);
+        let target = match dialect {
+            Dialect::Merlin => &mut ann.before[i],
+            Dialect::Vitis => &mut ann.inside[i],
+        };
+        match dialect {
+            Dialect::Merlin => {
+                if eff.pipeline {
+                    target.push("#pragma ACCEL pipeline".into());
+                }
+                if eff.tile > 1 {
+                    target.push(format!("#pragma ACCEL tile factor={}", eff.tile));
+                }
+                if eff.uf > 1 {
+                    target.push(format!("#pragma ACCEL parallel factor={}", eff.uf));
+                }
+            }
+            Dialect::Vitis => {
+                if eff.pipeline {
+                    target.push("#pragma HLS pipeline II=1".into());
+                }
+                if eff.uf > 1 {
+                    target.push(format!("#pragma HLS unroll factor={}", eff.uf));
+                }
+                if eff.tile > 1 {
+                    // no direct Vitis pragma: Merlin realizes `tile` by
+                    // strip-mining the loop before HLS sees it
+                    target.push(format!(
+                        "// tile factor={} (Merlin strip-mines; no direct Vitis pragma)",
+                        eff.tile
+                    ));
+                }
+            }
+        }
+        // refusal comments: every knob where the realized design lost
+        // the requested pragma stays visible at the loop it annotated
+        if req.pipeline && !eff.pipeline {
+            target.push("// not applied: pipeline (refused by Merlin)".into());
+        }
+        if req.tile > 1 && eff.tile != req.tile {
+            target.push(format!(
+                "// not applied: tile factor={} (refused by Merlin)",
+                req.tile
+            ));
+        }
+        if req.uf > 1 && eff.uf != req.uf {
+            target.push(format!(
+                "// not applied: parallel factor={} (refused by Merlin)",
+                req.uf
+            ));
+        }
+    }
+    ann
+}
+
+/// Arrays accessed by statements under nest root `root`, by id order.
+fn nest_arrays(k: &Kernel, root: LoopId) -> Vec<ArrayId> {
+    let mut ids: Vec<ArrayId> = Vec::new();
+    for &s in &k.loop_meta(root).stmts {
+        for (acc, _) in k.stmt_accesses(s) {
+            if !ids.contains(&acc.array) {
+                ids.push(acc.array);
+            }
+        }
+    }
+    ids.sort();
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::DType;
+    use crate::pragma::LoopPragma;
+
+    #[test]
+    fn dialect_parse_roundtrips() {
+        for d in [Dialect::Merlin, Dialect::Vitis] {
+            assert_eq!(Dialect::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dialect::parse("hls"), Some(Dialect::Vitis));
+        assert_eq!(Dialect::parse("nope"), None);
+    }
+
+    #[test]
+    fn merlin_annotation_places_loop_pragmas_before() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(2)).pipeline = true; // k
+        d.get_mut(LoopId(2)).uf = 4;
+        let ann = annotate(&k, &d, &d, Dialect::Merlin);
+        assert!(ann.fn_top.is_empty());
+        assert!(ann.before[2].contains(&"#pragma ACCEL pipeline".to_string()));
+        assert!(ann.before[2].contains(&"#pragma ACCEL parallel factor=4".to_string()));
+        assert!(ann.inside.iter().all(|v| v.is_empty()));
+        // cache pragmas sit at the (only) nest root
+        assert!(ann.before[0].iter().any(|l| l.starts_with("#pragma ACCEL cache")));
+    }
+
+    #[test]
+    fn vitis_annotation_places_partitioning_at_fn_top() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let mut d = Design::empty(&k);
+        d.get_mut(LoopId(2)).uf = 8; // k indexes A dim 1, B dim 0
+        let ann = annotate(&k, &d, &d, Dialect::Vitis);
+        assert!(ann
+            .fn_top
+            .iter()
+            .any(|l| l.contains("variable=A") && l.contains("factor=8") && l.contains("dim=2")));
+        assert!(ann.inside[2].contains(&"#pragma HLS unroll factor=8".to_string()));
+        assert!(ann.before.iter().all(|v| v.is_empty()));
+    }
+
+    #[test]
+    fn refused_pragma_becomes_comment() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let req = Design::empty(&k).with(
+            LoopId(0),
+            LoopPragma {
+                uf: 8,
+                tile: 1,
+                pipeline: false,
+            },
+        );
+        let eff = Design::empty(&k); // Merlin reset the parallel pragma
+        let ann = annotate(&k, &req, &eff, Dialect::Merlin);
+        let pragma_hit = ann.before[0]
+            .iter()
+            .any(|l| l.contains("parallel factor=8") && l.starts_with('#'));
+        assert!(!pragma_hit);
+        assert!(ann.before[0]
+            .iter()
+            .any(|l| l == "// not applied: parallel factor=8 (refused by Merlin)"));
+    }
+}

@@ -31,12 +31,16 @@ use crate::pragma::{Design, Space};
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
 use pool::ThreadPool;
 
+/// One campaign: which kernels, which engines, how to run them.
 #[derive(Clone, Debug)]
 pub struct CampaignConfig {
+    /// Kernel instances (registry name or `.knl` path, with size).
     pub kernels: Vec<(String, Size)>,
+    /// Precision for every registry kernel in the campaign.
     pub dtype: DType,
     /// Registry names of the engines to run per kernel instance.
     pub engines: Vec<String>,
+    /// Thread-pool width for the (kernel, engine) jobs.
     pub threads: usize,
     /// Evaluate NLP candidates through the AOT XLA artifact.
     pub use_xla: bool,
@@ -130,6 +134,7 @@ fn serial_solver_tuning(mut t: EngineTuning) -> EngineTuning {
     t
 }
 
+/// Default pool width: host parallelism, capped at 16.
 pub fn num_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -141,13 +146,21 @@ pub fn num_threads() -> usize {
 /// [`Exploration`] per engine (in campaign engine order).
 #[derive(Clone, Debug)]
 pub struct KernelRow {
+    /// Kernel spec of the row.
     pub name: String,
+    /// Problem size of the row.
     pub size: Size,
+    /// Number of loops (`NL` column).
     pub nl: usize,
+    /// Number of dependences (`ND` column).
     pub nd: usize,
+    /// Count of valid designs in the pragma space.
     pub space_size: f64,
+    /// Total array footprint, bytes (Table 8).
     pub footprint_bytes: u64,
+    /// Throughput of the pragma-free design (the `Original` rows).
     pub original_gflops: f64,
+    /// One normalized outcome per engine, in campaign engine order.
     pub explorations: Vec<Exploration>,
 }
 
@@ -162,17 +175,21 @@ impl KernelRow {
         self.explorations.iter().find_map(|e| e.as_nlpdse())
     }
 
+    /// Legacy AutoDSE detail, if an `autodse` exploration ran.
     pub fn autodse(&self) -> Option<&AutoDseOutcome> {
         self.explorations.iter().find_map(|e| e.as_autodse())
     }
 
+    /// Legacy HARP detail, if a `harp` exploration ran.
     pub fn harp(&self) -> Option<&HarpOutcome> {
         self.explorations.iter().find_map(|e| e.as_harp())
     }
 }
 
+/// All finished rows of a campaign, in configured kernel order.
 #[derive(Clone, Debug, Default)]
 pub struct CampaignResult {
+    /// One row per kernel instance that resolved.
     pub rows: Vec<KernelRow>,
 }
 

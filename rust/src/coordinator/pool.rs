@@ -8,12 +8,14 @@ use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Fixed-size worker pool draining a FIFO job queue.
 pub struct ThreadPool {
     workers: Vec<thread::JoinHandle<()>>,
     tx: Option<mpsc::Sender<Job>>,
 }
 
 impl ThreadPool {
+    /// Spawn `n` workers (`n >= 1`).
     pub fn new(n: usize) -> ThreadPool {
         assert!(n > 0);
         let (tx, rx) = mpsc::channel::<Job>();
@@ -42,6 +44,7 @@ impl ThreadPool {
         }
     }
 
+    /// Enqueue a job; runs as soon as a worker frees up.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
         self.tx
             .as_ref()

@@ -5,6 +5,7 @@
 //! serial phases that advance the frontier. The campaign's `T` is the
 //! makespan.
 
+/// Simulated wall-clock over `workers` parallel synthesis slots.
 #[derive(Clone, Debug)]
 pub struct SimClock {
     /// Per-worker next-free time, minutes.
@@ -14,6 +15,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// A clock with `workers` parallel slots, all free at t = 0.
     pub fn new(workers: usize) -> SimClock {
         assert!(workers > 0);
         SimClock {

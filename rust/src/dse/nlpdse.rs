@@ -75,26 +75,40 @@ impl DseConfig {
 /// One DSE step (drives Fig 6 and the Fig 5 scatter).
 #[derive(Clone, Debug)]
 pub struct StepRecord {
+    /// 1-based exploration step index.
     pub step: u32,
+    /// Max-partitioning ladder rung the candidate came from.
     pub cap: u64,
+    /// Candidate came from the fine-grained-only sub-space (Eq 9).
     pub fine_only: bool,
     /// NLP lower bound for the sub-space optimum.
     pub lower_bound: f64,
     /// Measured HLS latency (None: pruned / dedup / timeout / reject).
     pub measured: Option<f64>,
+    /// Measured throughput (0 when invalid/timeout).
     pub gflops: f64,
+    /// Synthesis produced a usable design.
     pub valid: bool,
+    /// Synthesis hit its wall-clock timeout.
     pub timeout: bool,
+    /// Merlin applied every requested pragma as given.
     pub pragmas_applied: bool,
+    /// Vitis auto-applied `loop_flatten` (Fig 5 exception).
     pub flattened: bool,
+    /// Skipped before synthesis by the lower-bound screen.
     pub pruned: bool,
+    /// Identical configuration already synthesized; result reused.
     pub dedup: bool,
+    /// Stable design fingerprint (dedup/oracle key).
     pub fingerprint: String,
 }
 
+/// What one NLP-DSE (Algorithm 1) run produced.
 #[derive(Clone, Debug)]
 pub struct DseOutcome {
+    /// Kernel the exploration ran on.
     pub kernel: String,
+    /// Best valid design and its measured latency, cycles.
     pub best: Option<(Design, f64)>,
     /// Best measured throughput.
     pub best_gflops: f64,
@@ -112,9 +126,11 @@ pub struct DseOutcome {
     pub steps_to_terminate: u32,
     /// Peak DSP utilization % of the best design (Table 3).
     pub best_dsp_pct: f64,
+    /// Per-step record of the whole exploration.
     pub trace: Vec<StepRecord>,
     /// Total NLP solve seconds (Table 7 ingredients).
     pub nlp_solve_s: Vec<f64>,
+    /// NLP solves that hit their time budget.
     pub nlp_timeouts: u32,
 }
 

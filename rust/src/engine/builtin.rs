@@ -12,10 +12,12 @@ use crate::dse::{run_nlp_dse, run_nlp_dse_with_bound, DseConfig};
 
 /// The paper's NLP-driven DSE (Algorithm 1).
 pub struct NlpDseEngine {
+    /// Algorithm 1 parameters this engine runs with.
     pub cfg: DseConfig,
 }
 
 impl NlpDseEngine {
+    /// Engine over explicit NLP-DSE parameters.
     pub fn new(cfg: DseConfig) -> NlpDseEngine {
         NlpDseEngine { cfg }
     }
@@ -55,10 +57,12 @@ impl Engine for NlpDseEngine {
 /// AutoDSE (FPGA'21): model-free bottleneck-driven baseline. Treats the
 /// toolchain as a black box, so it ignores `ctx.evaluator`.
 pub struct AutoDseEngine {
+    /// AutoDSE parameters this engine runs with.
     pub cfg: AutoDseConfig,
 }
 
 impl AutoDseEngine {
+    /// Engine over explicit AutoDSE parameters.
     pub fn new(cfg: AutoDseConfig) -> AutoDseEngine {
         AutoDseEngine { cfg }
     }
@@ -87,10 +91,12 @@ impl Engine for AutoDseEngine {
 /// HARP (ICCAD'23): surrogate-guided near-exhaustive sweep with top-k
 /// synthesis. Uses its own learned surrogate, not `ctx.evaluator`.
 pub struct HarpEngine {
+    /// HARP parameters this engine runs with.
     pub cfg: HarpConfig,
 }
 
 impl HarpEngine {
+    /// Engine over explicit HARP parameters.
     pub fn new(cfg: HarpConfig) -> HarpEngine {
         HarpEngine { cfg }
     }

@@ -42,18 +42,23 @@ pub enum Evaluator {
 }
 
 impl Evaluator {
+    /// XLA artifact when it loads, Rust reference otherwise.
     pub fn auto() -> Evaluator {
         Evaluator::Auto
     }
+    /// Always the in-process Rust reference evaluator.
     pub fn rust() -> Evaluator {
         Evaluator::Rust
     }
+    /// Always the compiled symbolic bound-model tape.
     pub fn sym() -> Evaluator {
         Evaluator::Sym
     }
+    /// Require the AOT XLA artifact (fail instead of falling back).
     pub fn xla() -> Evaluator {
         Evaluator::Xla
     }
+    /// A caller-supplied evaluator (shared across solver workers).
     pub fn custom(e: Arc<dyn BatchEvaluator>) -> Evaluator {
         Evaluator::Custom(e)
     }
@@ -79,6 +84,29 @@ enum EngineChoice {
 /// One exploration session over one kernel. Build with
 /// [`Explorer::kernel`] (PolyBench registry) or [`Explorer::custom`]
 /// (bring-your-own [`Kernel`]), chain the setters, then [`run`].
+///
+/// # Examples
+///
+/// Explore a registry kernel and emit its best design as annotated C:
+///
+/// ```no_run
+/// use nlp_dse::benchmarks::Size;
+/// use nlp_dse::codegen::EmitConfig;
+/// use nlp_dse::engine::{Evaluator, Explorer};
+///
+/// # fn main() -> anyhow::Result<()> {
+/// let explorer = Explorer::kernel("gemm", Size::Medium)?
+///     .evaluator(Evaluator::rust())
+///     .jobs(1)
+///     .engine("nlpdse")?;
+/// let outcome = explorer.run()?;
+/// println!("{}", outcome.summary());
+/// if let Some(code) = explorer.emit_best(&outcome, &EmitConfig::merlin()) {
+///     std::fs::write("gemm_annotated.c", code)?;
+/// }
+/// # Ok(())
+/// # }
+/// ```
 ///
 /// [`run`]: Explorer::run
 pub struct Explorer {
@@ -154,6 +182,7 @@ impl Explorer {
         self
     }
 
+    /// Set the NLP-DSE (Algorithm 1) parameters.
     pub fn dse_config(mut self, c: DseConfig) -> Explorer {
         self.tuning.dse = c;
         self
@@ -168,16 +197,19 @@ impl Explorer {
         self
     }
 
+    /// Set the AutoDSE baseline parameters.
     pub fn autodse_config(mut self, c: AutoDseConfig) -> Explorer {
         self.tuning.autodse = c;
         self
     }
 
+    /// Set the HARP baseline parameters.
     pub fn harp_config(mut self, c: HarpConfig) -> Explorer {
         self.tuning.harp = c;
         self
     }
 
+    /// Set the random-search baseline parameters.
     pub fn random_config(mut self, c: RandomConfig) -> Explorer {
         self.tuning.random = c;
         self
@@ -210,14 +242,17 @@ impl Explorer {
 
     // --- escape hatches into the owned substrate ------------------------
 
+    /// The session's kernel.
     pub fn kernel_ref(&self) -> &Kernel {
         &self.kernel
     }
 
+    /// The session's exact polyhedral analysis.
     pub fn analysis(&self) -> &Analysis {
         &self.analysis
     }
 
+    /// The session's target device.
     pub fn device_ref(&self) -> &Device {
         &self.device
     }
@@ -236,8 +271,27 @@ impl Explorer {
         self.bound_model().lower_bound(partial)
     }
 
+    /// The session's per-engine tuning bundle.
     pub fn tuning_ref(&self) -> &EngineTuning {
         &self.tuning
+    }
+
+    /// Lower `design` on this session's kernel to pragma-annotated HLS
+    /// C text (see [`crate::codegen`]). Works for any design — solved,
+    /// hand-built, or partial-free — and honours the session's device.
+    pub fn emit(&self, design: &crate::pragma::Design, cfg: &crate::codegen::EmitConfig) -> String {
+        crate::codegen::emit(&self.kernel, &self.analysis, &self.device, design, cfg)
+    }
+
+    /// Emit the best design of an [`Exploration`] produced by this
+    /// session (any engine), or `None` when the engine found no valid
+    /// design.
+    pub fn emit_best(
+        &self,
+        outcome: &Exploration,
+        cfg: &crate::codegen::EmitConfig,
+    ) -> Option<String> {
+        outcome.best.as_ref().map(|(d, _)| self.emit(d, cfg))
     }
 
     /// Names of all engines this session can run.
@@ -403,6 +457,24 @@ mod tests {
             .unwrap();
         assert_eq!(r1.best_gflops, r4.best_gflops);
         assert_eq!(r1.synth_calls, r4.synth_calls);
+    }
+
+    #[test]
+    fn emit_best_produces_lintable_c_for_any_engine() {
+        let explorer = Explorer::kernel("bicg", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::rust());
+        for engine in ["nlpdse", "random"] {
+            let outcome = explorer.run_engine(engine).unwrap();
+            let code = explorer
+                .emit_best(&outcome, &crate::codegen::EmitConfig::merlin())
+                .unwrap_or_else(|| panic!("{engine}: no best design"));
+            crate::codegen::lint(explorer.kernel_ref(), &code)
+                .unwrap_or_else(|e| panic!("{engine}: {e}\n{code}"));
+            // the emitted design is the outcome's best, verbatim
+            let (d, _) = outcome.best.as_ref().unwrap();
+            assert!(code.contains(&format!("design: {}", d.fingerprint())), "{engine}");
+        }
     }
 
     #[test]

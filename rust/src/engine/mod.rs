@@ -64,8 +64,11 @@ use crate::poly::Analysis;
 /// Everything an engine may consume: the substrate the session facade
 /// (or the coordinator) owns on the engine's behalf.
 pub struct ExploreCtx<'a> {
+    /// The kernel under exploration.
     pub kernel: &'a Kernel,
+    /// Its exact polyhedral analysis.
     pub analysis: &'a Analysis,
+    /// The target device model.
     pub device: &'a Device,
     /// Bulk lower-bound evaluator (Rust reference or the AOT XLA
     /// artifact) behind the `dyn BatchEvaluator` boundary. Engines that
@@ -101,8 +104,12 @@ pub trait Engine: Send + Sync {
 /// only its own field; third-party engines are free to ignore it.
 #[derive(Clone, Debug, Default)]
 pub struct EngineTuning {
+    /// NLP-DSE (Algorithm 1) parameters.
     pub dse: DseConfig,
+    /// AutoDSE baseline parameters.
     pub autodse: AutoDseConfig,
+    /// HARP baseline parameters.
     pub harp: HarpConfig,
+    /// Random-search baseline parameters.
     pub random: RandomConfig,
 }

@@ -26,6 +26,7 @@ pub enum StepStatus {
 }
 
 impl StepStatus {
+    /// Short status tag rendered in trace listings.
     pub fn tag(self) -> &'static str {
         match self {
             StepStatus::Synthesized => "ok",
@@ -40,20 +41,26 @@ impl StepStatus {
 /// One normalized exploration step (engine-agnostic trace entry).
 #[derive(Clone, Debug)]
 pub struct ExplorationStep {
+    /// 1-based exploration step index.
     pub step: u32,
     /// Model/solver lower bound for this candidate, if the engine has one.
     pub lower_bound: Option<f64>,
     /// Measured HLS latency in cycles (valid designs only).
     pub measured: Option<f64>,
+    /// Measured throughput (0 when not synthesized/valid).
     pub gflops: f64,
+    /// What happened to the candidate.
     pub status: StepStatus,
 }
 
 /// Engine-specific detail preserved through normalization.
 #[derive(Clone, Debug)]
 pub enum EngineDetail {
+    /// The full NLP-DSE record.
     NlpDse(DseOutcome),
+    /// The full AutoDSE record.
     AutoDse(AutoDseOutcome),
+    /// The full HARP record.
     Harp(HarpOutcome),
     /// Engines with no legacy record (e.g. `random`, third-party).
     Generic,
@@ -64,9 +71,11 @@ pub enum EngineDetail {
 pub struct Exploration {
     /// Registry name of the engine that produced this outcome.
     pub engine: String,
+    /// Kernel the exploration ran on.
     pub kernel: String,
     /// Best valid design and its measured latency in cycles.
     pub best: Option<(Design, f64)>,
+    /// Best measured throughput.
     pub best_gflops: f64,
     /// Throughput of the first synthesizable design (0 when unknown —
     /// only lower-bound-ordered engines report it meaningfully).
@@ -88,10 +97,12 @@ pub struct Exploration {
     pub rejected: u32,
     /// Normalized step trace (may be empty for black-box engines).
     pub trace: Vec<ExplorationStep>,
+    /// Engine-specific record preserved through normalization.
     pub detail: EngineDetail,
 }
 
 impl Exploration {
+    /// The legacy NLP-DSE record, when this outcome is one.
     pub fn as_nlpdse(&self) -> Option<&DseOutcome> {
         match &self.detail {
             EngineDetail::NlpDse(o) => Some(o),
@@ -99,6 +110,7 @@ impl Exploration {
         }
     }
 
+    /// The legacy AutoDSE record, when this outcome is one.
     pub fn as_autodse(&self) -> Option<&AutoDseOutcome> {
         match &self.detail {
             EngineDetail::AutoDse(o) => Some(o),
@@ -106,6 +118,7 @@ impl Exploration {
         }
     }
 
+    /// The legacy HARP record, when this outcome is one.
     pub fn as_harp(&self) -> Option<&HarpOutcome> {
         match &self.detail {
             EngineDetail::Harp(o) => Some(o),

@@ -18,6 +18,7 @@ use crate::pragma::{space, Design, Space};
 use crate::util::rng::{hash64, Rng};
 use std::collections::BTreeSet;
 
+/// Random-search baseline parameters.
 #[derive(Clone, Debug)]
 pub struct RandomConfig {
     /// Candidate draws before giving up (screened, deduplicated).
@@ -26,6 +27,7 @@ pub struct RandomConfig {
     pub synth_budget: u32,
     /// Parallel synthesis workers for the simulated clock.
     pub workers: usize,
+    /// Per-synthesis HLS timeout, minutes.
     pub hls_timeout_min: f64,
 }
 
@@ -40,11 +42,15 @@ impl Default for RandomConfig {
     }
 }
 
+/// Uniform random search over legal designs — the registry's proof
+/// that new engines need zero dispatch edits.
 pub struct RandomSearchEngine {
+    /// Sampling and synthesis budgets.
     pub cfg: RandomConfig,
 }
 
 impl RandomSearchEngine {
+    /// Engine over explicit random-search parameters.
     pub fn new(cfg: RandomConfig) -> RandomSearchEngine {
         RandomSearchEngine { cfg }
     }

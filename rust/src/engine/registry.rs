@@ -15,6 +15,7 @@ use std::collections::BTreeMap;
 /// Engine constructor: builds a boxed engine from the campaign tuning.
 pub type EngineFactory = fn(&EngineTuning) -> Box<dyn Engine>;
 
+/// Name-keyed engine factory table (CLI/coordinator/Explorer dispatch).
 #[derive(Clone, Default)]
 pub struct Registry {
     factories: BTreeMap<String, EngineFactory>,
@@ -41,6 +42,7 @@ impl Registry {
         self.factories.insert(name.to_string(), factory);
     }
 
+    /// Whether `name` is registered.
     pub fn contains(&self, name: &str) -> bool {
         self.factories.contains_key(name)
     }

@@ -1,6 +1,6 @@
 //! Surface AST of the `.knl` DSL — what the parser produces and the
 //! random-kernel generator constructs directly (both lower through the
-//! same semantic checks in [`super::parser::lower`], so generated
+//! same semantic checks in `parser::lower`, so generated
 //! kernels are by construction inside the DSL's expressible class).
 //!
 //! Names are unresolved strings here; lowering resolves iterator names
@@ -10,41 +10,64 @@
 use super::diag::Span;
 use crate::ir::{ArrayDir, DType, OpKind};
 
+/// A parsed (un-lowered) kernel: the parser's output, the generator's interchange form.
 #[derive(Clone, Debug)]
 pub struct KernelAst {
+    /// Kernel name (quoted string or identifier in the source).
     pub name: String,
+    /// Scalar element type.
     pub dtype: DType,
+    /// Array declarations, in source order.
     pub arrays: Vec<ArrayAst>,
+    /// Top-level loop nests, in source order.
     pub roots: Vec<LoopAst>,
 }
 
+/// One `array name[d0][d1] dir` declaration.
 #[derive(Clone, Debug)]
 pub struct ArrayAst {
+    /// Array identifier.
     pub name: String,
+    /// Constant extents, outermost first.
     pub dims: Vec<u64>,
+    /// Transfer direction keyword.
     pub dir: ArrayDir,
+    /// Source span of the declaration.
     pub span: Span,
 }
 
+/// One loop-body item.
 #[derive(Clone, Debug)]
 pub enum NodeAst {
+    /// A nested loop.
     Loop(LoopAst),
+    /// A statement.
     Stmt(StmtAst),
 }
 
+/// One `for it in lb .. ub { ... }` loop.
 #[derive(Clone, Debug)]
 pub struct LoopAst {
+    /// Iterator identifier.
     pub name: String,
+    /// Lower bound (inclusive).
     pub lb: AffAst,
+    /// Upper bound (exclusive).
     pub ub: AffAst,
+    /// Loops and statements in source order (non-empty after lowering checks).
     pub body: Vec<NodeAst>,
+    /// Source span of the loop header.
     pub span: Span,
 }
 
+/// One `stmt name writes ... reads ... ops ...;` statement.
 #[derive(Clone, Debug)]
 pub struct StmtAst {
+    /// Statement identifier.
     pub name: String,
+    /// Written accesses (at least one required by lowering).
     pub writes: Vec<AccessAst>,
+    /// Read accesses.
     pub reads: Vec<AccessAst>,
     /// `(op, count)` entries, order- and grouping-preserving (the IR
     /// compares `ops` vectors exactly).
@@ -52,32 +75,43 @@ pub struct StmtAst {
     /// Explicit internal op chain; `None` = the default all-sequential
     /// expansion of `ops`.
     pub chain: Option<Vec<OpKind>>,
+    /// Source span of the statement.
     pub span: Span,
 }
 
+/// One `array[aff]...[aff]` access.
 #[derive(Clone, Debug)]
 pub struct AccessAst {
+    /// Array identifier (resolved during lowering).
     pub array: String,
+    /// One affine index per dimension.
     pub indices: Vec<AffAst>,
+    /// Source span of the access.
     pub span: Span,
 }
 
 /// An affine expression as written: a signed sum of terms.
 #[derive(Clone, Debug, Default)]
 pub struct AffAst {
+    /// Signed terms, in source order.
     pub terms: Vec<AffTermAst>,
+    /// Source span of the expression.
     pub span: Span,
 }
 
 /// One affine term: `coeff * iter`, or a constant when `iter` is `None`.
 #[derive(Clone, Debug)]
 pub struct AffTermAst {
+    /// Signed coefficient (the sign carries `+`/`-`).
     pub coeff: i64,
+    /// Iterator name; `None` for a constant term.
     pub iter: Option<String>,
+    /// Source span of the term.
     pub span: Span,
 }
 
 impl AffAst {
+    /// The constant expression `c`.
     pub fn constant(c: i64) -> AffAst {
         AffAst {
             terms: vec![AffTermAst {
@@ -89,6 +123,7 @@ impl AffAst {
         }
     }
 
+    /// The single-iterator expression `name`.
     pub fn var(name: &str) -> AffAst {
         AffAst {
             terms: vec![AffTermAst {

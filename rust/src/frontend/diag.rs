@@ -16,11 +16,14 @@
 /// A half-open byte range into the source text.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Span {
+    /// Byte offset of the span start.
     pub off: u32,
+    /// Span length in bytes.
     pub len: u32,
 }
 
 impl Span {
+    /// Span from byte offset + length.
     pub fn new(off: usize, len: usize) -> Span {
         Span {
             off: off as u32,
@@ -55,6 +58,7 @@ pub struct ParseError {
 }
 
 impl ParseError {
+    /// Render a diagnostic for `span` in `src` eagerly (the error outlives the source).
     pub fn new(src: &str, origin: &str, span: Span, msg: impl Into<String>) -> ParseError {
         let msg = msg.into();
         let (line, col, text) = locate(src, span.off as usize);

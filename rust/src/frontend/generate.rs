@@ -33,6 +33,7 @@ use crate::util::rng::Rng;
 /// actual shape uniformly under them.
 #[derive(Clone, Debug)]
 pub struct GenConfig {
+    /// PRNG seed; every knob draw derives from it (bit-exact replay).
     pub seed: u64,
     /// Max loop-nest depth (≥ 1).
     pub depth: usize,
@@ -47,6 +48,7 @@ pub struct GenConfig {
     pub max_trip: u64,
     /// Probability that an eligible inner loop gets triangular bounds.
     pub triangular: f64,
+    /// Scalar element type of the generated kernel.
     pub dtype: DType,
 }
 
@@ -66,6 +68,7 @@ impl Default for GenConfig {
 }
 
 impl GenConfig {
+    /// Default knobs under an explicit seed.
     pub fn with_seed(seed: u64) -> GenConfig {
         GenConfig {
             seed,

@@ -10,21 +10,37 @@
 
 use super::diag::{ParseError, Span};
 
+/// Token kinds of the `.knl` lexer. Keywords are contextual: the
+/// lexer only ever emits `Ident` for words.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Tok {
+    /// Identifier (or contextual keyword).
     Ident(String),
+    /// Unsigned integer literal.
     Int(u64),
+    /// Double-quoted string (kernel names).
     Str(String),
+    /// `[`
     LBrack,
+    /// `]`
     RBrack,
+    /// `{`
     LBrace,
+    /// `}`
     RBrace,
+    /// `,`
     Comma,
+    /// `;`
     Semi,
+    /// `+`
     Plus,
+    /// `-`
     Minus,
+    /// `*`
     Star,
+    /// `..`
     DotDot,
+    /// End of input.
     Eof,
 }
 
@@ -50,9 +66,12 @@ impl Tok {
     }
 }
 
+/// One token with its source span.
 #[derive(Clone, Debug)]
 pub struct Token {
+    /// The token kind/payload.
     pub tok: Tok,
+    /// Where it came from (caret diagnostics).
     pub span: Span,
 }
 

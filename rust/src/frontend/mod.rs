@@ -38,10 +38,18 @@ use crate::ir::Kernel;
 use anyhow::Context;
 
 /// Parse a `.knl` file from disk. Diagnostics carry the file path.
+///
+/// Parse failures convert the [`ParseError`] into the `anyhow` chain
+/// **by value** (never `Debug`-formatted), so the rendered line/column
+/// header and caret-underlined source snippet survive verbatim all the
+/// way to the CLI error surface — `cli::tests` asserts the snippet on
+/// the `--kernel-file` paths.
 pub fn parse_file(path: &str) -> anyhow::Result<Kernel> {
     let src = std::fs::read_to_string(path)
         .with_context(|| format!("reading kernel file `{path}`"))?;
-    parse_kernel(&src, path).map_err(anyhow::Error::from)
+    parse_kernel(&src, path)
+        .map_err(anyhow::Error::from)
+        .with_context(|| format!("parsing kernel file `{path}`"))
 }
 
 #[cfg(test)]
@@ -52,6 +60,25 @@ mod tests {
     fn parse_file_reports_missing_path() {
         let err = parse_file("/definitely/not/here.knl").unwrap_err();
         assert!(format!("{err:#}").contains("reading kernel file"));
+    }
+
+    #[test]
+    fn parse_file_preserves_the_caret_snippet_through_anyhow() {
+        let path = std::env::temp_dir().join("nlp_dse_frontend_diag_test.knl");
+        std::fs::write(
+            &path,
+            "kernel \"bad\" f32\narray a[4] out\nfor i in 0 .. 4 {\n  stmt s writes a[zz];\n}\n",
+        )
+        .unwrap();
+        let err = parse_file(path.to_str().unwrap()).unwrap_err();
+        let msg = format!("{err:#}");
+        // the context names the file AND the rendered diagnostic keeps
+        // its line/column header + caret underline
+        assert!(msg.contains("parsing kernel file"), "{msg}");
+        assert!(msg.contains(":4:"), "{msg}");
+        assert!(msg.contains("stmt s writes a[zz];"), "{msg}");
+        assert!(msg.contains('^'), "{msg}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

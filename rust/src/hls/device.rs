@@ -15,10 +15,14 @@ pub struct OpCosts {
     pub dsp: u64,
 }
 
+/// One FPGA target: frequency, resource budgets, transfer widths.
 #[derive(Clone, Debug)]
 pub struct Device {
+    /// Device name tag.
     pub name: &'static str,
+    /// Kernel clock frequency, Hz.
     pub freq_hz: f64,
+    /// DSP slices available.
     pub dsp_total: u64,
     /// On-chip memory (BRAM + URAM) in bytes usable for data caching.
     pub onchip_bytes: u64,

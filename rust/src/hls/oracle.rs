@@ -46,8 +46,11 @@ impl Default for SynthOptions {
 pub struct HlsReport {
     /// Measured kernel latency in cycles (valid only when `valid`).
     pub cycles: f64,
+    /// DSP slices used.
     pub dsp: u64,
+    /// BRAM18K blocks used.
     pub bram18k: u64,
+    /// Worst achieved pipeline II.
     pub achieved_ii: f64,
     /// Simulated synthesis wall-clock minutes (capped at the timeout).
     pub synth_minutes: f64,
@@ -61,10 +64,12 @@ pub struct HlsReport {
     pub pragmas_applied: bool,
     /// Vitis auto-applied loop_flatten (lower-bound exception).
     pub flattened: bool,
+    /// The full Merlin outcome behind this report.
     pub merlin: MerlinOutcome,
 }
 
 impl HlsReport {
+    /// Measured throughput; 0 for invalid/timed-out designs.
     pub fn gflops(&self, analysis: &Analysis, device: &Device) -> f64 {
         if !self.valid || self.timeout {
             return 0.0;
@@ -76,11 +81,14 @@ impl HlsReport {
 /// The oracle. Stateless; all variation is hash-derived from
 /// (kernel, dtype, design fingerprint).
 pub struct HlsOracle {
+    /// Target device tables.
     pub device: Device,
+    /// Synthesis options (timeout).
     pub options: SynthOptions,
 }
 
 impl HlsOracle {
+    /// Oracle over `device` with default options.
     pub fn new(device: Device) -> HlsOracle {
         HlsOracle {
             device,

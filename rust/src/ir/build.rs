@@ -22,6 +22,8 @@ use super::expr::AffineExpr;
 use super::kernel::{Access, Array, ArrayDir, DType, Kernel, Loop, Node, OpKind, Stmt};
 use super::{ArrayId, LoopId, StmtId};
 
+/// Incremental kernel constructor: declare arrays, nest loops with
+/// closures, add statements, then [`Self::finish`].
 pub struct KernelBuilder {
     name: String,
     dtype: DType,
@@ -34,6 +36,7 @@ pub struct KernelBuilder {
 }
 
 impl KernelBuilder {
+    /// Start a kernel named `name` with element type `dtype`.
     pub fn new(name: &str, dtype: DType) -> KernelBuilder {
         KernelBuilder {
             name: name.to_string(),
@@ -157,6 +160,7 @@ impl KernelBuilder {
     pub fn v(&self, l: LoopId) -> AffineExpr {
         AffineExpr::var(l)
     }
+    /// Constant affine expression.
     pub fn c(&self, x: i64) -> AffineExpr {
         AffineExpr::constant(x)
     }
@@ -169,6 +173,7 @@ impl KernelBuilder {
         a.add(b)
     }
 
+    /// Finalize into a [`Kernel`] (computes all loop/statement metadata).
     pub fn finish(self) -> Kernel {
         assert!(self.open.is_empty(), "unclosed loops at finish()");
         let mut frames = self.frames;

@@ -7,14 +7,17 @@
 
 use super::LoopId;
 
+/// `Σ coeff_i · iter_i + constant` over loop iterators.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct AffineExpr {
     /// `(loop, coefficient)` terms; kept sorted by loop id, no zero coeffs.
     pub terms: Vec<(LoopId, i64)>,
+    /// The constant term.
     pub constant: i64,
 }
 
 impl AffineExpr {
+    /// The constant expression `c`.
     pub fn constant(c: i64) -> AffineExpr {
         AffineExpr {
             terms: vec![],
@@ -30,6 +33,7 @@ impl AffineExpr {
         }
     }
 
+    /// `coeff * iter` (normalized; zero coeff collapses to a constant).
     pub fn var_scaled(loop_id: LoopId, coeff: i64) -> AffineExpr {
         let mut e = AffineExpr {
             terms: vec![(loop_id, coeff)],
@@ -39,11 +43,13 @@ impl AffineExpr {
         e
     }
 
+    /// Add `c` to the constant term.
     pub fn plus_const(mut self, c: i64) -> AffineExpr {
         self.constant += c;
         self
     }
 
+    /// Sum of two affine expressions.
     pub fn add(&self, other: &AffineExpr) -> AffineExpr {
         let mut out = self.clone();
         for &(l, c) in &other.terms {
@@ -54,6 +60,7 @@ impl AffineExpr {
         out
     }
 
+    /// Add `c * iter_l` in place (normalizing zeros and order).
     pub fn add_term(&mut self, l: LoopId, c: i64) {
         if let Some(t) = self.terms.iter_mut().find(|t| t.0 == l) {
             t.1 += c;
@@ -68,6 +75,7 @@ impl AffineExpr {
         self.terms.sort_by_key(|t| t.0);
     }
 
+    /// True when no iterator terms remain.
     pub fn is_constant(&self) -> bool {
         self.terms.is_empty()
     }

@@ -9,17 +9,21 @@ use std::collections::BTreeMap;
 /// against AutoDSE (Section 7.1) and f64 against HARP (Section 7.4).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit IEEE float (the paper's main precision).
     F32,
+    /// 64-bit IEEE float (the HARP comparison, Section 7.4).
     F64,
 }
 
 impl DType {
+    /// Bit width of one element.
     pub fn bits(self) -> u64 {
         match self {
             DType::F32 => 32,
             DType::F64 => 64,
         }
     }
+    /// Lowercase type name (`f32`/`f64`).
     pub fn name(self) -> &'static str {
         match self {
             DType::F32 => "f32",
@@ -51,9 +55,11 @@ pub enum ArrayDir {
 }
 
 impl ArrayDir {
+    /// Array must be transferred in from DRAM.
     pub fn is_live_in(self) -> bool {
         matches!(self, ArrayDir::In | ArrayDir::InOut)
     }
+    /// Array must be transferred back to DRAM.
     pub fn is_live_out(self) -> bool {
         matches!(self, ArrayDir::Out | ArrayDir::InOut)
     }
@@ -78,11 +84,16 @@ impl ArrayDir {
     }
 }
 
+/// One declared array.
 #[derive(Clone, Debug)]
 pub struct Array {
+    /// Dense id (declaration order).
     pub id: ArrayId,
+    /// Array identifier.
     pub name: String,
+    /// Constant extents, outermost first.
     pub dims: Vec<u64>,
+    /// Transfer direction w.r.t. off-chip DRAM.
     pub dir: ArrayDir,
 }
 
@@ -102,14 +113,20 @@ impl Array {
 /// which is equivalent for latency/resource purposes and far terser).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum OpKind {
+    /// Floating add.
     Add,
+    /// Floating subtract.
     Sub,
+    /// Floating multiply.
     Mul,
+    /// Floating divide.
     Div,
 }
 
 impl OpKind {
+    /// Every op kind, in a stable order.
     pub const ALL: [OpKind; 4] = [OpKind::Add, OpKind::Sub, OpKind::Mul, OpKind::Div];
+    /// C operator spelling (`+`, `-`, `*`, `/`).
     pub fn name(self) -> &'static str {
         match self {
             OpKind::Add => "+",
@@ -142,11 +159,14 @@ impl OpKind {
 /// An affine array access `array[indices...]`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Access {
+    /// Accessed array.
     pub array: ArrayId,
+    /// One affine index per dimension.
     pub indices: Vec<AffineExpr>,
 }
 
 impl Access {
+    /// Access to `array` at `indices`.
     pub fn new(array: ArrayId, indices: Vec<AffineExpr>) -> Access {
         Access { array, indices }
     }
@@ -156,9 +176,13 @@ impl Access {
 /// multiset of scalar ops one iteration performs.
 #[derive(Clone, Debug)]
 pub struct Stmt {
+    /// Dense id (creation order).
     pub id: StmtId,
+    /// Statement label (`S0`, `S1`, …).
     pub name: String,
+    /// Written accesses (at least one).
     pub writes: Vec<Access>,
+    /// Read accesses.
     pub reads: Vec<Access>,
     /// `(op, count)` per iteration; e.g. `tmp += alpha*A*B` is
     /// `[(Mul, 2), (Add, 1)]`.
@@ -181,6 +205,7 @@ impl Stmt {
             .collect()
     }
 
+    /// Per-iteration count of `op`.
     pub fn op_count(&self, op: OpKind) -> u32 {
         self.ops
             .iter()
@@ -198,7 +223,9 @@ impl Stmt {
 /// One node of the summary AST.
 #[derive(Clone, Debug)]
 pub enum Node {
+    /// A (possibly nested) loop.
     Loop(Loop),
+    /// A straight-line statement.
     Stmt(Stmt),
 }
 
@@ -207,18 +234,26 @@ pub enum Node {
 /// `ludcmp`/`deriche`/`nussinov` for the same reason).
 #[derive(Clone, Debug)]
 pub struct Loop {
+    /// Dense id (creation order).
     pub id: LoopId,
+    /// Iterator identifier.
     pub name: String,
+    /// Lower bound (inclusive), affine over enclosing iterators.
     pub lb: AffineExpr,
+    /// Upper bound (exclusive), affine over enclosing iterators.
     pub ub: AffineExpr,
+    /// Loops and statements in syntactic order.
     pub body: Vec<Node>,
 }
 
 /// Finalized per-loop metadata.
 #[derive(Clone, Debug)]
 pub struct LoopMeta {
+    /// The loop this metadata describes.
     pub id: LoopId,
+    /// Iterator identifier.
     pub name: String,
+    /// Directly enclosing loop, if any.
     pub parent: Option<LoopId>,
     /// 0 for top-level (nest root) loops.
     pub depth: u32,
@@ -235,6 +270,7 @@ pub struct LoopMeta {
 /// Finalized per-statement metadata.
 #[derive(Clone, Debug)]
 pub struct StmtMeta {
+    /// The statement this metadata describes.
     pub id: StmtId,
     /// Enclosing loops, outermost first.
     pub nest: Vec<LoopId>,
@@ -243,11 +279,17 @@ pub struct StmtMeta {
 /// A finalized kernel.
 #[derive(Clone, Debug)]
 pub struct Kernel {
+    /// Kernel name.
     pub name: String,
+    /// Scalar element type of every array.
     pub dtype: DType,
+    /// Declared arrays, by id.
     pub arrays: Vec<Array>,
+    /// Top-level loop nests, in syntactic order.
     pub roots: Vec<Node>,
+    /// Per-loop metadata, by id.
     pub loops: Vec<LoopMeta>,
+    /// Per-statement metadata, by id.
     pub stmts_meta: Vec<StmtMeta>,
     stmt_table: Vec<Stmt>,
     loop_table: Vec<Loop>, // bounds + names snapshot (bodies not duplicated)
@@ -351,32 +393,41 @@ impl Kernel {
         }
     }
 
+    /// Number of loops.
     pub fn n_loops(&self) -> usize {
         self.loops.len()
     }
+    /// Number of statements.
     pub fn n_stmts(&self) -> usize {
         self.stmt_table.len()
     }
 
+    /// Metadata of loop `l`.
     pub fn loop_meta(&self, l: LoopId) -> &LoopMeta {
         &self.loops[l.0 as usize]
     }
+    /// `[lb, ub)` bounds of loop `l`.
     pub fn loop_bounds(&self, l: LoopId) -> (&AffineExpr, &AffineExpr) {
         let lp = &self.loop_table[l.0 as usize];
         (&lp.lb, &lp.ub)
     }
+    /// Iterator name of loop `l`.
     pub fn loop_name(&self, l: LoopId) -> &str {
         &self.loop_table[l.0 as usize].name
     }
+    /// Statement `s`.
     pub fn stmt(&self, s: StmtId) -> &Stmt {
         &self.stmt_table[s.0 as usize]
     }
+    /// Metadata of statement `s`.
     pub fn stmt_meta(&self, s: StmtId) -> &StmtMeta {
         &self.stmts_meta[s.0 as usize]
     }
+    /// Array `a`.
     pub fn array(&self, a: ArrayId) -> &Array {
         &self.arrays[a.0 as usize]
     }
+    /// Array with the given name, if any.
     pub fn array_by_name(&self, name: &str) -> Option<&Array> {
         self.arrays.iter().find(|a| a.name == name)
     }

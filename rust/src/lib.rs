@@ -73,6 +73,11 @@
 //!   usage, achieved II, and synthesis wall-time.
 //! * [`dse`] — NLP-DSE itself (Algorithm 1): array-partitioning ladder ×
 //!   parallelism mode, lower-bound pruning, early termination.
+//! * [`codegen`] — the exit path: lowers a kernel + solved pragma
+//!   [`pragma::Design`] to compilable, pragma-annotated HLS C in two
+//!   dialects (Merlin `#pragma ACCEL`, raw Vitis `#pragma HLS`), with a
+//!   *realized* mode that emits what simulated Merlin actually accepted
+//!   next to what was requested.
 //! * [`baselines`] — AutoDSE (bottleneck-driven) and HARP (surrogate-guided)
 //!   reimplementations used as comparison points.
 //! * [`engine`] — the unified exploration API: the object-safe
@@ -88,6 +93,8 @@
 //! * [`util`] — in-repo substrates for the offline environment: PRNG,
 //!   JSON/TSV emitters, bench harness, mini property-testing helper.
 
+#![warn(missing_docs)]
+
 pub mod util;
 pub mod ir;
 pub mod frontend;
@@ -99,6 +106,7 @@ pub mod model;
 pub mod nlp;
 pub mod merlin;
 pub mod dse;
+pub mod codegen;
 pub mod baselines;
 pub mod engine;
 pub mod runtime;
@@ -106,6 +114,7 @@ pub mod coordinator;
 pub mod report;
 pub mod cli;
 
+pub use codegen::{Dialect, EmitConfig};
 pub use engine::{Engine, Evaluator, Exploration, ExploreCtx, Explorer, Registry};
 pub use ir::{ArrayId, Kernel, LoopId, StmtId};
 pub use model::{BoundModel, ModelResult, PartialDesign};

@@ -47,6 +47,7 @@ pub enum Reject {
 /// Realized memory-transfer plan for one array.
 #[derive(Clone, Debug)]
 pub struct Transfer {
+    /// The transferred array.
     pub array: ArrayId,
     /// How many times the array crosses the off-chip boundary.
     pub times: u32,
@@ -61,9 +62,11 @@ pub struct Transfer {
 pub struct MerlinOutcome {
     /// The design Merlin actually implements (refused pragmas reset).
     pub realized: Design,
+    /// Every pragma refusal, in decision order.
     pub rejects: Vec<Reject>,
     /// Achieved II multiplier (≥ 1) from imperfect partitioning.
     pub ii_penalty: f64,
+    /// Realized off-chip transfer plan, per array.
     pub transfers: Vec<Transfer>,
     /// Total realized communication cycles (transfers serialize per nest
     /// group — pessimistic vs the Theorem 4.14 bound).

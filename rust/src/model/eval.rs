@@ -42,6 +42,7 @@ pub struct ModelResult {
 }
 
 impl ModelResult {
+    /// Throughput implied by the latency bound.
     pub fn gflops(&self, analysis: &Analysis, device: &Device) -> f64 {
         analysis.gflops(self.total_cycles, device.freq_hz)
     }
@@ -142,6 +143,7 @@ pub struct NestBreakdown {
 }
 
 impl NestBreakdown {
+    /// Combine per-nest latencies (sum when dependent, max when independent).
     pub fn total(&self) -> f64 {
         let c = if self.sum_combine {
             self.per_nest.iter().sum::<f64>()

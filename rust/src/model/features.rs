@@ -35,7 +35,9 @@ use crate::pragma::Design;
 pub struct Abi;
 
 impl Abi {
+    /// Max pipeline units the encoding carries.
     pub const UNITS: usize = 16;
+    /// Max loops per unit the encoding carries.
     pub const LOOPS: usize = 8;
     /// per-loop features: tc, uf, above_par, above_seq, under_red, valid
     pub const F: usize = 6;
@@ -44,6 +46,7 @@ impl Abi {
     pub const G: usize = 8;
     /// Flattened lengths per design.
     pub const LOOPS_LEN: usize = Self::UNITS * Self::LOOPS * Self::F;
+    /// Flattened length of the per-unit block.
     pub const UNITS_LEN: usize = Self::UNITS * Self::G;
 }
 
@@ -51,11 +54,14 @@ impl Abi {
 /// `[UNITS][G]`).
 #[derive(Clone, Debug)]
 pub struct DesignFeatures {
+    /// `[UNITS][LOOPS][F]` row-major per-loop features.
     pub loops: Vec<f64>,
+    /// `[UNITS][G]` row-major per-unit scalars.
     pub units: Vec<f64>,
 }
 
 impl DesignFeatures {
+    /// All-zero (padding) feature block.
     pub fn zeros() -> DesignFeatures {
         DesignFeatures {
             loops: vec![0.0; Abi::LOOPS_LEN],

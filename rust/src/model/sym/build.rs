@@ -28,7 +28,9 @@ use crate::poly::Analysis;
 /// count, or a serializing non-reduction carried dependence).
 #[derive(Clone, Copy, Debug)]
 pub struct VarDomain {
+    /// Upper bound of the `UF` unknown (1 = not unrollable).
     pub uf_hi: u64,
+    /// Upper bound of the `tile` unknown.
     pub tile_hi: u64,
     /// Whether this loop indexes any array dimension — if so, `UF_l` is
     /// additionally capped by the partitioning rung during subspace
@@ -43,8 +45,11 @@ pub struct VarDomain {
 /// interval bounds).
 #[derive(Clone, Debug)]
 pub struct BoundModel {
+    /// Kernel name the model was built from.
     pub kernel: String,
+    /// Number of per-loop unknown triples.
     pub n_loops: usize,
+    /// The hash-consed expression arena (topological tape).
     pub pool: Pool,
     /// Computation latency (Theorem 4.15), including the work floor.
     pub comp: ExprId,
@@ -63,9 +68,13 @@ pub struct BoundModel {
     /// Eqs 6/8/10–13 as first-class values, in the order the legacy
     /// `NlpProblem::check` reported them.
     pub constraints: Vec<Constraint>,
+    /// Per-loop unknown domains (Eq 1/2/8 hulls).
     pub domains: Vec<VarDomain>,
+    /// Device DSP budget (Eq 11 right-hand side).
     pub dsp_total: u64,
+    /// Device on-chip byte budget (Eq 12 right-hand side).
     pub onchip_bytes: u64,
+    /// Vitis per-array partition limit (Eq 13 cap).
     pub max_array_partition: u64,
 }
 

@@ -41,12 +41,19 @@ pub struct EvalScratch {
 /// reporting field, which only the recursive evaluator tracks).
 #[derive(Clone, Copy, Debug)]
 pub struct CompiledResult {
+    /// Computation latency lower bound, cycles.
     pub comp_cycles: f64,
+    /// Communication latency lower bound, cycles.
     pub comm_cycles: f64,
+    /// `comp + comm` — the objective.
     pub total_cycles: f64,
+    /// Optimistic DSP usage (Eq 11).
     pub dsp: f64,
+    /// Cached on-chip bytes (Eq 12).
     pub onchip_bytes: f64,
+    /// Max per-array partitioning factor (Eq 13).
     pub max_partitioning: u64,
+    /// All resource constraints satisfied.
     pub feasible: bool,
 }
 
@@ -188,6 +195,7 @@ impl CompiledModel {
         scratch.vals[self.partitions[idx] as usize] as u64
     }
 
+    /// Number of per-array partitioning slots.
     pub fn n_arrays(&self) -> usize {
         self.partitions.len()
     }

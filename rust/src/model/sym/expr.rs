@@ -38,6 +38,7 @@ pub struct ExprId(pub u32);
 /// node is `Eq + Hash` for interning.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum SymNode {
+    /// Constant (f64 bits, for `Eq + Hash` interning).
     Const(u64),
     /// `UF_l`: the raw `parallel factor` unknown of loop `l`.
     Uf(u32),
@@ -45,12 +46,19 @@ pub enum SymNode {
     Tile(u32),
     /// `pip_l ∈ {0,1}`: the `pipeline` unknown of loop `l`.
     Pip(u32),
+    /// `a + b`
     Add(ExprId, ExprId),
+    /// `a - b`
     Sub(ExprId, ExprId),
+    /// `a * b`
     Mul(ExprId, ExprId),
+    /// `a / b` (divisors are positive in this model).
     Div(ExprId, ExprId),
+    /// `min(a, b)`
     Min(ExprId, ExprId),
+    /// `max(a, b)`
     Max(ExprId, ExprId),
+    /// Integer ceiling.
     Ceil(ExprId),
     /// `max(1, ceil_log2(trunc(x)))` — the tree-reduction depth factor of
     /// Theorem 4.7, matching `eval`'s `(ceil_log2(uf as u64) as f64).max(1.)`.
@@ -73,18 +81,22 @@ pub struct Pool {
 }
 
 impl Pool {
+    /// An empty pool.
     pub fn new() -> Pool {
         Pool::default()
     }
 
+    /// The interned nodes in topological (tape) order.
     pub fn nodes(&self) -> &[SymNode] {
         &self.nodes
     }
 
+    /// Number of interned nodes.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True when nothing is interned.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }
@@ -106,51 +118,67 @@ impl Pool {
         self.memo = HashMap::new();
     }
 
+    /// Intern the constant `v`.
     pub fn cf(&mut self, v: f64) -> ExprId {
         self.intern(SymNode::Const(v.to_bits()))
     }
+    /// Intern loop `l`'s `UF` unknown.
     pub fn uf(&mut self, l: u32) -> ExprId {
         self.intern(SymNode::Uf(l))
     }
+    /// Intern loop `l`'s `tile` unknown.
     pub fn tile(&mut self, l: u32) -> ExprId {
         self.intern(SymNode::Tile(l))
     }
+    /// Intern loop `l`'s `pipeline` unknown.
     pub fn pip(&mut self, l: u32) -> ExprId {
         self.intern(SymNode::Pip(l))
     }
+    /// Intern `a + b`.
     pub fn add(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Add(a, b))
     }
+    /// Intern `a - b`.
     pub fn sub(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Sub(a, b))
     }
+    /// Intern `a * b`.
     pub fn mul(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Mul(a, b))
     }
+    /// Intern `a / b`.
     pub fn div(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Div(a, b))
     }
+    /// Intern `min(a, b)`.
     pub fn min(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Min(a, b))
     }
+    /// Intern `max(a, b)`.
     pub fn max(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Max(a, b))
     }
+    /// Intern `ceil(a)`.
     pub fn ceil(&mut self, a: ExprId) -> ExprId {
         self.intern(SymNode::Ceil(a))
     }
+    /// Intern the Theorem 4.7 tree-depth factor of `a`.
     pub fn treelog(&mut self, a: ExprId) -> ExprId {
         self.intern(SymNode::TreeLog(a))
     }
+    /// Intern the 0/1 predicate `a > b`.
     pub fn gt(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Gt(a, b))
     }
+    /// Intern the 0/1 predicate `a < b`.
     pub fn lt(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::Lt(a, b))
     }
+    /// Intern the 0/1 conjunction `a ∧ b`.
     pub fn and(&mut self, a: ExprId, b: ExprId) -> ExprId {
         self.intern(SymNode::And(a, b))
     }
+    /// Intern `if c != 0 { t } else { e }`.
     pub fn select(&mut self, c: ExprId, t: ExprId, e: ExprId) -> ExprId {
         self.intern(SymNode::Select(c, t, e))
     }
@@ -213,18 +241,23 @@ pub fn eval_concrete(nodes: &[SymNode], d: &Design, out: &mut Vec<f64>) {
 /// A closed interval `[lo, hi]` of f64 values.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Interval {
+    /// Lower endpoint.
     pub lo: f64,
+    /// Upper endpoint.
     pub hi: f64,
 }
 
 impl Interval {
+    /// The degenerate interval `[v, v]`.
     pub fn point(v: f64) -> Interval {
         Interval { lo: v, hi: v }
     }
+    /// The interval `[lo, hi]` (debug-asserts `lo <= hi`).
     pub fn new(lo: f64, hi: f64) -> Interval {
         debug_assert!(lo <= hi, "inverted interval [{lo}, {hi}]");
         Interval { lo, hi }
     }
+    /// Whether `v` lies in the interval.
     pub fn contains(&self, v: f64) -> bool {
         self.lo <= v && v <= self.hi
     }
@@ -251,8 +284,11 @@ impl Interval {
 /// Per-loop unknown boxes for interval propagation.
 #[derive(Clone, Copy, Debug)]
 pub struct VarBox {
+    /// Box of the `UF` unknown.
     pub uf: Interval,
+    /// Box of the `tile` unknown.
     pub tile: Interval,
+    /// Box of the `pipeline` unknown.
     pub pip: Interval,
 }
 

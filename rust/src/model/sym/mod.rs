@@ -21,8 +21,8 @@
 //!   replaces the recursion on the DSE hot path
 //!   (`CompiledModel::evaluate_batch`).
 //! * [`constraint`] — consumer 2: `NlpProblem` is a thin view over the
-//!   shared constraint objects; [`Violation`]s come from
-//!   [`BoundModel::check`], and the solver's relaxation bounds come from
+//!   shared constraint objects; [`Violation`]s come from walking the
+//!   shared [`Constraint`] values, and the solver's relaxation bounds come from
 //!   interval propagation over the same expressions.
 //! * [`partial`] — consumer 3: [`PartialDesign`] +
 //!   [`BoundModel::lower_bound`] evaluate the model with unassigned

@@ -12,8 +12,11 @@ use crate::pragma::{Design, LoopPragma};
 /// A partially assigned pragma configuration. `None` entries are free.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PartialDesign {
+    /// Per-loop `UF` assignment (`None` = free).
     pub uf: Vec<Option<u64>>,
+    /// Per-loop `tile` assignment (`None` = free).
     pub tile: Vec<Option<u64>>,
+    /// Per-loop `pipeline` assignment (`None` = free).
     pub pipeline: Vec<Option<bool>>,
     /// Partitioning rung of the subspace under consideration: free `UF`s
     /// on array-indexing loops are additionally capped by this value
@@ -43,20 +46,24 @@ impl PartialDesign {
         }
     }
 
+    /// Number of loops this partial design spans.
     pub fn n_loops(&self) -> usize {
         self.uf.len()
     }
 
+    /// Pin loop `l`'s unroll factor.
     pub fn assign_uf(&mut self, l: LoopId, v: u64) -> &mut Self {
         self.uf[l.0 as usize] = Some(v);
         self
     }
 
+    /// Pin loop `l`'s tile factor.
     pub fn assign_tile(&mut self, l: LoopId, v: u64) -> &mut Self {
         self.tile[l.0 as usize] = Some(v);
         self
     }
 
+    /// Pin loop `l`'s pipeline flag.
     pub fn assign_pipeline(&mut self, l: LoopId, on: bool) -> &mut Self {
         self.pipeline[l.0 as usize] = Some(on);
         self
@@ -75,6 +82,7 @@ impl PartialDesign {
             + self.pipeline.iter().filter(|x| x.is_none()).count()
     }
 
+    /// Every slot pinned (the bound is then the exact model value).
     pub fn is_complete(&self) -> bool {
         self.free_slots() == 0
     }

@@ -54,9 +54,13 @@ pub use crate::model::sym::Violation;
 /// the solver's hot paths bypass it entirely with the `*_in` methods and
 /// per-worker [`sym::EvalScratch`] buffers (see [`NlpProblem::scratch`]).
 pub struct NlpProblem<'k> {
+    /// The kernel under optimization.
     pub kernel: &'k Kernel,
+    /// Its exact polyhedral analysis.
     pub analysis: &'k Analysis,
+    /// The target device model.
     pub device: &'k Device,
+    /// Enumerated design space (UF menus, pipeline configs).
     pub space: Space<'k>,
     /// `MAX_PARTITIONING` for this DSE step (`u64::MAX` = ∞ rung).
     pub max_partitioning: u64,
@@ -79,6 +83,7 @@ pub struct NlpProblem<'k> {
 }
 
 impl<'k> NlpProblem<'k> {
+    /// Build the problem (and its symbolic model) for one sub-space.
     pub fn new(
         kernel: &'k Kernel,
         analysis: &'k Analysis,

@@ -165,9 +165,12 @@ pub fn default_jobs() -> usize {
         .unwrap_or(1)
 }
 
+/// Search counters, merged field-wise across workers.
 #[derive(Clone, Debug, Default)]
 pub struct SolverStats {
+    /// Branch-and-bound nodes expanded.
     pub nodes: u64,
+    /// Complete assignments reached.
     pub leaves: u64,
     /// Branch-and-bound nodes cut by the admissible candidate bound.
     pub pruned_bound: u64,
@@ -175,15 +178,18 @@ pub struct SolverStats {
     /// (or the per-nest-minima config bound) against the shared incumbent
     /// guard, before any branch-and-bound.
     pub pruned_relaxation: u64,
+    /// Candidates cut by the monotone partitioning screen.
     pub pruned_partition: u64,
     /// Nodes rejected by the constraint check (infeasible leaves and
     /// configurations with no legal candidate) — reported separately from
     /// the relaxation prunes they used to be conflated with.
     pub infeasible: u64,
+    /// Designs scored through the batch evaluator.
     pub candidates_scored: u64,
+    /// Pipeline configurations processed.
     pub configs: u64,
     /// Nest menus truncated by the runaway-product guard: the odometer
-    /// stopped after [`MAX_MENU_ASSIGNMENTS`] complete assignments, so the
+    /// stopped after `MAX_MENU_ASSIGNMENTS` complete assignments, so the
     /// menu is a deterministic lexicographic prefix of the full product
     /// (visible here instead of silently asymmetric, as the old
     /// mid-extension break was).
@@ -206,6 +212,7 @@ impl SolverStats {
     }
 }
 
+/// Outcome of one (sub-space) NLP solve.
 #[derive(Clone, Debug)]
 pub struct SolveResult {
     /// Best feasible designs found, ascending `(objective, risk, pragmas)`
@@ -215,6 +222,7 @@ pub struct SolveResult {
     pub lower_bound: f64,
     /// Whether the search completed within budget.
     pub optimal: bool,
+    /// Wall-clock of the solve, seconds.
     pub solve_time_s: f64,
     /// Summed per-worker busy time (seconds actually spent processing
     /// configurations — excludes queue-idle threads). Equals
@@ -223,6 +231,7 @@ pub struct SolveResult {
     pub cpu_time_s: f64,
     /// Worker threads the solve ran with (1 = serial path).
     pub jobs: usize,
+    /// Merged search counters.
     pub stats: SolverStats,
 }
 

@@ -7,8 +7,11 @@ use super::tripcount::{self, TripCount};
 use crate::ir::{Kernel, LoopId, OpKind, StmtId};
 use std::collections::BTreeMap;
 
+/// The complete static-analysis bundle of one kernel.
 pub struct Analysis {
+    /// Per-loop trip counts, by loop id.
     pub tcs: Vec<TripCount>,
+    /// Dependence analysis (distances, reductions, serialization).
     pub deps: DepAnalysis,
     /// Exact iteration count of each statement (product of enclosing
     /// `TC_avg`, exact for one level of affine-triangular nesting).
@@ -22,6 +25,7 @@ pub struct Analysis {
 }
 
 impl Analysis {
+    /// Run every analysis on `k`.
     pub fn new(k: &Kernel) -> Analysis {
         let tcs = tripcount::trip_counts(k);
         let deps = deps::analyze(k);
@@ -53,6 +57,7 @@ impl Analysis {
         }
     }
 
+    /// Trip count of loop `l`.
     pub fn tc(&self, l: LoopId) -> &TripCount {
         &self.tcs[l.0 as usize]
     }

@@ -30,19 +30,27 @@
 use crate::ir::{Access, ArrayId, Kernel, LoopId, OpKind, StmtId};
 use std::collections::BTreeSet;
 
+/// Dependence class.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DepKind {
+    /// Read-after-write (true dependence).
     Raw,
+    /// Write-after-read (anti).
     War,
+    /// Write-after-write (output).
     Waw,
 }
 
 /// One dependence edge.
 #[derive(Clone, Debug)]
 pub struct Dependence {
+    /// Dependence class.
     pub kind: DepKind,
+    /// Source statement.
     pub src: StmtId,
+    /// Destination statement.
     pub dst: StmtId,
+    /// Array carrying the dependence.
     pub array: ArrayId,
     /// Carrying loop and constant distance when known; `None` for
     /// loop-independent dependences.
@@ -73,8 +81,11 @@ impl LoopDepInfo {
     }
 }
 
+/// All dependence facts of one kernel.
 pub struct DepAnalysis {
+    /// Flat dependence list (`ND` column of Table 5).
     pub deps: Vec<Dependence>,
+    /// Per-loop summary, by loop id.
     pub per_loop: Vec<LoopDepInfo>,
     /// Symmetric statement dependence relation (sum-vs-max composition).
     pub stmt_dep: Vec<Vec<bool>>,
@@ -84,6 +95,7 @@ pub struct DepAnalysis {
 }
 
 impl DepAnalysis {
+    /// Whether statements `a` and `b` depend on each other (symmetric).
     pub fn stmts_dependent(&self, a: StmtId, b: StmtId) -> bool {
         self.stmt_dep[a.0 as usize][b.0 as usize]
     }
@@ -91,6 +103,7 @@ impl DepAnalysis {
     pub fn nd(&self) -> usize {
         self.deps.len()
     }
+    /// Per-loop summary of loop `l`.
     pub fn loop_info(&self, l: LoopId) -> &LoopDepInfo {
         &self.per_loop[l.0 as usize]
     }

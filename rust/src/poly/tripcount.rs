@@ -15,10 +15,14 @@
 use crate::ir::{Kernel, LoopId};
 use std::collections::BTreeMap;
 
+/// Iteration-count summary of one loop (PV entries, Section 3.1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct TripCount {
+    /// Minimum trip count over the iteration domain.
     pub min: u64,
+    /// Maximum trip count (`TC^max`; the divisor menu base).
     pub max: u64,
+    /// Average trip count (exact for affine-triangular nests).
     pub avg: f64,
 }
 

@@ -42,6 +42,7 @@ impl Default for LoopPragma {
 /// on.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Design {
+    /// One pragma triple per loop, by loop id.
     pub pragmas: Vec<LoopPragma>,
 }
 
@@ -53,13 +54,16 @@ impl Design {
         }
     }
 
+    /// Pragma triple of loop `l`.
     pub fn get(&self, l: LoopId) -> LoopPragma {
         self.pragmas[l.0 as usize]
     }
+    /// Mutable pragma triple of loop `l`.
     pub fn get_mut(&mut self, l: LoopId) -> &mut LoopPragma {
         &mut self.pragmas[l.0 as usize]
     }
 
+    /// Builder-style copy with loop `l` replaced.
     pub fn with(mut self, l: LoopId, p: LoopPragma) -> Design {
         self.pragmas[l.0 as usize] = p;
         self
@@ -87,11 +91,11 @@ impl Design {
         None
     }
 
-    /// Array-partitioning factor required for array `a`: the product over
-    /// dimensions of the max UF of loops indexing each dimension (Section 6:
-    /// "the product of loops that iterate the same arrays on different
-    /// dimensions").
-    pub fn partitioning(&self, k: &Kernel, a: crate::ir::ArrayId) -> u64 {
+    /// Per-dimension partitioning factors required for array `a`: for
+    /// each dimension, the max UF over the loops indexing it. The
+    /// `codegen` Vitis dialect emits these as one `array_partition`
+    /// pragma per dimension.
+    pub fn partitioning_dims(&self, k: &Kernel, a: crate::ir::ArrayId) -> Vec<u64> {
         let mut per_dim: Vec<u64> = vec![1; k.array(a).dims.len()];
         for s in k.stmts() {
             for (acc, _) in k.stmt_accesses(s.id) {
@@ -105,7 +109,15 @@ impl Design {
                 }
             }
         }
-        per_dim.iter().product()
+        per_dim
+    }
+
+    /// Array-partitioning factor required for array `a`: the product over
+    /// dimensions of the max UF of loops indexing each dimension (Section 6:
+    /// "the product of loops that iterate the same arrays on different
+    /// dimensions").
+    pub fn partitioning(&self, k: &Kernel, a: crate::ir::ArrayId) -> u64 {
+        self.partitioning_dims(k, a).iter().product()
     }
 
     /// Max partitioning over all arrays (the DSE ladder constraint).

@@ -20,10 +20,13 @@ use crate::util::divisors;
 /// (Section 3.1), which the model applies implicitly.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct PipelineConfig {
+    /// The chosen pipelined loops (no ancestor relations among them).
     pub pipelined: Vec<LoopId>,
 }
 
+/// The enumerable pragma design space of one kernel.
 pub struct Space<'k> {
+    /// The kernel the space belongs to.
     pub kernel: &'k Kernel,
     /// Divisor sets per loop (UF candidates); singleton `[1]` for loops
     /// with non-constant TC.
@@ -33,6 +36,7 @@ pub struct Space<'k> {
 }
 
 impl<'k> Space<'k> {
+    /// Enumerate menus and pipeline configurations for `kernel`.
     pub fn new(kernel: &'k Kernel, analysis: &Analysis) -> Space<'k> {
         let uf_candidates = (0..kernel.n_loops())
             .map(|i| {

@@ -425,3 +425,66 @@ pub fn table9(r: &CampaignResult) -> TextTable {
     ]);
     t
 }
+
+/// One emitted-artifact index entry: the annotated C file written for a
+/// campaign row × engine best design (`campaign --emit-dir`).
+#[derive(Clone, Debug)]
+pub struct EmittedRow {
+    /// Kernel name of the campaign row.
+    pub kernel: String,
+    /// Problem-size tag (`S`/`M`/`L`).
+    pub size: String,
+    /// Engine whose best design was emitted.
+    pub engine: String,
+    /// Best measured throughput of that design.
+    pub gflops: f64,
+    /// Path of the emitted `.c` file.
+    pub path: String,
+}
+
+/// Index table linking each campaign row to its emitted pragma-annotated
+/// C artifact (the paper's actual deliverable — Section 7's generated
+/// designs, regenerable from any campaign).
+pub fn emitted_index(rows: &[EmittedRow]) -> TextTable {
+    let mut t = TextTable::new(
+        "Emitted designs — pragma-annotated HLS C per campaign row",
+        &["Kernel", "S", "Engine", "GF/s", "File"],
+    );
+    if rows.is_empty() {
+        let mut cells = vec!["(no valid designs to emit)".to_string()];
+        cells.extend(std::iter::repeat(String::new()).take(4));
+        t.row(cells);
+        return t;
+    }
+    for r in rows {
+        t.row(vec![
+            r.kernel.clone(),
+            r.size.clone(),
+            r.engine.clone(),
+            f2(r.gflops),
+            r.path.clone(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod emitted_tests {
+    use super::*;
+
+    #[test]
+    fn emitted_index_renders_rows_and_empty_note() {
+        let rows = vec![EmittedRow {
+            kernel: "gemm".into(),
+            size: "M".into(),
+            engine: "nlpdse".into(),
+            gflops: 12.5,
+            path: "out/gemm-M-nlpdse.merlin.c".into(),
+        }];
+        let t = emitted_index(&rows).render();
+        assert!(t.contains("gemm"), "{t}");
+        assert!(t.contains("out/gemm-M-nlpdse.merlin.c"), "{t}");
+        let empty = emitted_index(&[]).render();
+        assert!(empty.contains("no valid designs"), "{empty}");
+    }
+}

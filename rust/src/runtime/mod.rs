@@ -38,6 +38,7 @@ pub fn default_artifact_dir() -> PathBuf {
 #[cfg(feature = "xla")]
 pub struct XlaEvaluator {
     exe: std::sync::Mutex<xla::PjRtLoadedExecutable>,
+    /// Batch size the artifact was compiled for.
     pub batch: usize,
     /// Executions performed (perf accounting); see [`Self::executions`].
     executions: std::sync::atomic::AtomicU64,
@@ -60,6 +61,7 @@ unsafe impl Sync for XlaEvaluator {}
 /// Rust reference evaluator is used everywhere.
 #[cfg(not(feature = "xla"))]
 pub struct XlaEvaluator {
+    /// Batch size the artifact was compiled for.
     pub batch: usize,
     /// Executions performed (perf accounting); see [`Self::executions`].
     executions: std::sync::atomic::AtomicU64,
@@ -74,6 +76,7 @@ impl XlaEvaluator {
 
 #[cfg(not(feature = "xla"))]
 impl XlaEvaluator {
+    /// Stub `load`: always fails (build with `--features xla` to enable).
     pub fn load(dir: &Path) -> Result<XlaEvaluator> {
         Err(anyhow!(
             "built without the `xla` cargo feature — cannot execute AOT artifacts \
@@ -82,6 +85,7 @@ impl XlaEvaluator {
         ))
     }
 
+    /// Stub evaluation: always fails (build with `--features xla`).
     pub fn eval_features(&self, _feats: &[DesignFeatures]) -> Result<Vec<(f64, f64)>> {
         Err(anyhow!("built without the `xla` cargo feature"))
     }

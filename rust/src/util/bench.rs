@@ -14,23 +14,32 @@
 
 use std::time::{Duration, Instant};
 
+/// One bench suite: named cases, adaptive iteration, printed stats.
 pub struct Bench {
     suite: String,
     target: Duration,
     results: Vec<BenchResult>,
 }
 
+/// Measured statistics of one case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Total timed iterations.
     pub iters: u64,
+    /// Mean per-iteration time, ns.
     pub mean_ns: f64,
+    /// Median per-iteration time, ns.
     pub p50_ns: f64,
+    /// 95th-percentile per-iteration time, ns.
     pub p95_ns: f64,
+    /// Items per iteration when throughput was requested.
     pub items_per_iter: Option<f64>,
 }
 
 impl Bench {
+    /// Start a suite (target ms/case from `BENCH_MS`, default 300).
     pub fn new(suite: &str) -> Bench {
         let target_ms: u64 = std::env::var("BENCH_MS")
             .ok()
@@ -106,10 +115,12 @@ impl Bench {
         self
     }
 
+    /// All measured cases so far.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
 
+    /// Print the suite footer.
     pub fn finish(&self) {
         println!("== bench suite {} done ({} cases)", self.suite, self.results.len());
     }

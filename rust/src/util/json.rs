@@ -7,21 +7,30 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// A JSON value (offline stand-in for serde_json).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Number.
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (key-sorted for stable output).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// An empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Set `key` on an object (panics on non-objects).
     pub fn set(&mut self, key: &str, val: impl Into<Json>) -> &mut Self {
         if let Json::Obj(m) = self {
             m.insert(key.to_string(), val.into());
@@ -31,6 +40,7 @@ impl Json {
         self
     }
 
+    /// Append to an array (panics on non-arrays).
     pub fn push(&mut self, val: impl Into<Json>) -> &mut Self {
         if let Json::Arr(v) = self {
             v.push(val.into());
@@ -40,6 +50,7 @@ impl Json {
         self
     }
 
+    /// Render with 2-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, 0);

@@ -8,8 +8,11 @@
 
 use super::rng::Rng;
 
+/// Mini property-test harness: N seeded cases per property.
 pub struct Prop {
+    /// Cases to run.
     pub cases: u32,
+    /// Base seed (case i derives from it).
     pub seed: u64,
 }
 
@@ -25,6 +28,7 @@ impl Default for Prop {
 }
 
 impl Prop {
+    /// Harness running `cases` cases from the default seed.
     pub fn new(cases: u32) -> Prop {
         Prop {
             cases,

@@ -12,6 +12,7 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// PRNG seeded with `seed` (splitmix64 stream).
     pub fn new(seed: u64) -> Self {
         Rng {
             state: seed ^ 0x9e37_79b9_7f4a_7c15,
@@ -29,6 +30,7 @@ impl Rng {
         Rng::new(h)
     }
 
+    /// Next raw 64-bit draw.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9e37_79b9_7f4a_7c15);

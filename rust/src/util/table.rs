@@ -1,20 +1,26 @@
 //! Fixed-width text table renderer producing the paper-style rows printed
 //! by `report::tables` and the `nlp-dse table` CLI subcommand.
 
+/// Fixed-width text table with a title row (byte-stable output).
 pub struct TextTable {
+    /// Table title, printed above the header.
     pub title: String,
     headers: Vec<String>,
     rows: Vec<Vec<String>>,
     aligns: Vec<Align>,
 }
 
+/// Per-column cell alignment.
 #[derive(Clone, Copy, PartialEq)]
 pub enum Align {
+    /// Left-aligned.
     Left,
+    /// Right-aligned.
     Right,
 }
 
 impl TextTable {
+    /// Table with a title and header row.
     pub fn new(title: &str, headers: &[&str]) -> TextTable {
         TextTable {
             title: title.to_string(),
@@ -28,11 +34,13 @@ impl TextTable {
         }
     }
 
+    /// Set the alignment of column `col`.
     pub fn align(&mut self, col: usize, a: Align) -> &mut Self {
         self.aligns[col] = a;
         self
     }
 
+    /// Append a row (cell count should match the header).
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
         self.rows.push(cells);
@@ -45,6 +53,7 @@ impl TextTable {
         self
     }
 
+    /// Render the padded text table.
     pub fn render(&self) -> String {
         let ncol = self.headers.len();
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
@@ -106,12 +115,15 @@ impl TextTable {
 pub fn f2(x: f64) -> String {
     format!("{x:.2}")
 }
+/// Format with 1 decimal.
 pub fn f1(x: f64) -> String {
     format!("{x:.1}")
 }
+/// Format as a rounded integer.
 pub fn i0(x: f64) -> String {
     format!("{}", x.round() as i64)
 }
+/// Format as a `x N.N` ratio.
 pub fn ratio(x: f64) -> String {
     format!("{x:.2}x")
 }

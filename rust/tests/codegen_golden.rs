@@ -1,0 +1,167 @@
+//! Golden-file snapshot tests for the pragma-annotated C emitter over
+//! the **entire registry corpus**: all 24 registered kernels (23
+//! PolyBench + CNN), Merlin dialect, plus Vitis and realized-mode
+//! snapshots on representative kernels.
+//!
+//! Protocol (documented in GUIDE.md):
+//!
+//! * snapshots live in `rust/tests/golden/codegen/*.c`;
+//! * a **missing** snapshot is blessed on first run (written + reported)
+//!   — the offline environment has no other way to mint the bytes —
+//!   and compared byte-exactly on every run after;
+//! * `UPDATE_GOLDEN=1 cargo test --test codegen_golden` refreshes every
+//!   snapshot after an intentional emitter change; commit the diff.
+//!
+//! Blessing never skips the structural gate: every emission (fresh or
+//! compared) must pass `codegen::lint` — balanced delimiters, one
+//! `for (` per IR loop, statement coverage, pragma attachment — so a
+//! broken emitter cannot bless broken snapshots.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::codegen::{self, EmitConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, Kernel, LoopId};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use std::path::PathBuf;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden/codegen")
+}
+
+/// Compare `content` against the named snapshot, blessing it when
+/// absent or when `UPDATE_GOLDEN=1`.
+fn check_golden(file: &str, content: &str) {
+    let path = golden_dir().join(file);
+    let update = std::env::var("UPDATE_GOLDEN").as_deref() == Ok("1");
+    if update || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, content).unwrap();
+        eprintln!("[golden] blessed {}", path.display());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want,
+        content,
+        "golden mismatch for {file}; run UPDATE_GOLDEN=1 cargo test --test codegen_golden \
+         and commit the refreshed snapshot if the change is intentional"
+    );
+}
+
+/// The deterministic showcase design the snapshots use: pipeline every
+/// innermost loop (with a modest divisor unroll), tile the nest roots.
+/// Pure function of the kernel + analysis — no solver in the loop, so
+/// snapshots only churn when the *emitter* changes.
+fn showcase(k: &Kernel, a: &Analysis) -> Design {
+    let mut d = Design::empty(k);
+    for i in 0..k.n_loops() {
+        let l = LoopId(i as u32);
+        let meta = k.loop_meta(l);
+        let tc = &a.tcs[i];
+        if meta.innermost {
+            d.get_mut(l).pipeline = true;
+            if tc.is_constant() && tc.max > 1 {
+                let uf = nlp_dse::util::divisors(tc.max)
+                    .into_iter()
+                    .filter(|&x| x <= 8)
+                    .max()
+                    .unwrap_or(1);
+                d.get_mut(l).uf = uf;
+            }
+        } else if meta.parent.is_none() && tc.is_constant() && tc.max > 1 {
+            let t = nlp_dse::util::divisors(tc.max)
+                .into_iter()
+                .filter(|&x| x <= 4)
+                .max()
+                .unwrap_or(1);
+            d.get_mut(l).tile = t;
+        }
+    }
+    d
+}
+
+fn setup(name: &str) -> (Kernel, Analysis, Device) {
+    let size = if name == "cnn" { Size::Medium } else { Size::Small };
+    let k = benchmarks::build(name, size, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    (k, a, Device::u200())
+}
+
+#[test]
+fn golden_merlin_every_registry_kernel() {
+    for name in benchmarks::ALL {
+        let (k, a, dev) = setup(name);
+        let d = showcase(&k, &a);
+        let code = codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin());
+        codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{name}: {e}\n{code}"));
+        check_golden(&format!("{name}.merlin.c"), &code);
+    }
+}
+
+#[test]
+fn golden_vitis_representatives() {
+    for name in ["gemm", "2mm", "cnn", "lu", "jacobi-2d"] {
+        let (k, a, dev) = setup(name);
+        let d = showcase(&k, &a);
+        let code = codegen::emit(&k, &a, &dev, &d, &EmitConfig::vitis());
+        codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{name}: {e}\n{code}"));
+        check_golden(&format!("{name}.vitis.c"), &code);
+    }
+}
+
+#[test]
+fn golden_realized_representatives() {
+    // realized snapshots pin the §7.5 behaviour: what simulated Merlin
+    // accepts is deterministic per (kernel, design), so the emitted
+    // refusal comments are stable snapshot material
+    for name in ["gemm", "2mm", "gemver"] {
+        let (k, a, dev) = setup(name);
+        let d = showcase(&k, &a);
+        let code = codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin().realized());
+        codegen::lint(&k, &code).unwrap_or_else(|e| panic!("{name}: {e}\n{code}"));
+        check_golden(&format!("{name}.merlin.realized.c"), &code);
+    }
+}
+
+#[test]
+fn emission_is_deterministic() {
+    for name in ["gemm", "cnn", "durbin"] {
+        let (k, a, dev) = setup(name);
+        let d = showcase(&k, &a);
+        for cfg in [EmitConfig::merlin(), EmitConfig::vitis(), EmitConfig::merlin().realized()] {
+            let one = codegen::emit(&k, &a, &dev, &d, &cfg);
+            let two = codegen::emit(&k, &a, &dev, &d, &cfg);
+            assert_eq!(one, two, "{name}");
+        }
+    }
+}
+
+#[test]
+fn realized_pragmas_match_the_realized_design_corpus_wide() {
+    // acceptance invariant: the --realized output differs from the
+    // requested output exactly where simulated Merlin rejects a pragma
+    let pragmas = |code: &str| -> Vec<String> {
+        code.lines()
+            .map(str::trim_start)
+            .filter(|l| l.starts_with("#pragma"))
+            .map(str::to_string)
+            .collect()
+    };
+    for name in benchmarks::ALL {
+        let (k, a, dev) = setup(name);
+        let d = showcase(&k, &a);
+        let outcome = nlp_dse::merlin::apply(&k, &a, &dev, &d);
+        let requested = codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin());
+        let realized = codegen::emit(&k, &a, &dev, &d, &EmitConfig::merlin().realized());
+        let of_realized = codegen::emit(&k, &a, &dev, &outcome.realized, &EmitConfig::merlin());
+        assert_eq!(pragmas(&realized), pragmas(&of_realized), "{name}");
+        if outcome.realized == d {
+            assert_eq!(pragmas(&realized), pragmas(&requested), "{name}");
+            assert!(!realized.contains("// not applied:"), "{name}");
+        } else {
+            assert_ne!(pragmas(&realized), pragmas(&requested), "{name}");
+            assert!(realized.contains("// not applied:"), "{name}");
+        }
+    }
+}

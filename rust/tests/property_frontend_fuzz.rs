@@ -13,12 +13,17 @@
 //!    additional loops of a partial design never decreases the bound
 //!    (the soundness condition behind `--prune-bound`), and stays
 //!    admissible against the completion it is refined towards;
-//! 4. every generated kernel round-trips through pretty-print → parse.
+//! 4. every generated kernel round-trips through pretty-print → parse;
+//! 5. every generated kernel emits lintable pragma-annotated C in both
+//!    dialects, and the realized emission's pragma set is exactly the
+//!    requested emission of the design Merlin realizes — differing from
+//!    the requested emission precisely at refused pragmas.
 //!
 //! Seeds are logged on entry and every failure panics with the
 //! reproducing seed **and the offending `.knl` text**, so any case
 //! replays with `FUZZ_SEED=<seed> FUZZ_KERNELS=1`.
 
+use nlp_dse::codegen::{self, Dialect, EmitConfig};
 use nlp_dse::frontend::{self, GenConfig};
 use nlp_dse::hls::Device;
 use nlp_dse::ir::{Kernel, LoopId};
@@ -296,6 +301,101 @@ fn prop_lower_bound_monotone_under_refinement() {
                     );
                 }
                 prev = lb;
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_emission_lints_and_realized_diffs_only_at_rejects() {
+    let dev = Device::u200();
+    let pragma_lines = |code: &str| -> Vec<String> {
+        code.lines()
+            .map(str::trim_start)
+            .filter(|l| l.starts_with("#pragma"))
+            .map(str::to_string)
+            .collect()
+    };
+    for seed in seeds("emission") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let mut rng = Rng::new(seed).derive("emit-designs");
+        for case in 0..4 {
+            let d = random_design(&mut rng, &k, &a, &s);
+            for dialect in [Dialect::Merlin, Dialect::Vitis] {
+                let cfg = EmitConfig {
+                    dialect,
+                    realized: false,
+                };
+                let code = codegen::emit(&k, &a, &dev, &d, &cfg);
+                if let Err(e) = codegen::lint(&k, &code) {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case} ({}, requested): lint failed: {e}\n--- C ---\n{code}",
+                            dialect.name()
+                        ),
+                    );
+                }
+                let real_cfg = EmitConfig {
+                    dialect,
+                    realized: true,
+                };
+                let realized = codegen::emit(&k, &a, &dev, &d, &real_cfg);
+                if let Err(e) = codegen::lint(&k, &realized) {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case} ({}, realized): lint failed: {e}\n--- C ---\n{realized}",
+                            dialect.name()
+                        ),
+                    );
+                }
+                // the realized emission's pragma set is the requested
+                // emission of the design Merlin actually implements
+                let outcome = nlp_dse::merlin::apply(&k, &a, &dev, &d);
+                let of_realized = codegen::emit(&k, &a, &dev, &outcome.realized, &cfg);
+                if pragma_lines(&realized) != pragma_lines(&of_realized) {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case} ({}): realized pragma set diverged from the \
+                             realized design's own emission (design {})",
+                            dialect.name(),
+                            d.fingerprint()
+                        ),
+                    );
+                }
+                let code_p = pragma_lines(&code);
+                let real_p = pragma_lines(&realized);
+                let refused = outcome.realized != d;
+                if refused && real_p == code_p && dialect == Dialect::Merlin {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case}: merlin refused pragmas (design {}) but the \
+                             realized emission's pragma set did not change",
+                            d.fingerprint()
+                        ),
+                    );
+                }
+                if !refused && real_p != code_p {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case} ({}): nothing was refused (design {}) but the \
+                             realized pragma set changed",
+                            dialect.name(),
+                            d.fingerprint()
+                        ),
+                    );
+                }
             }
         }
     }
