@@ -28,10 +28,52 @@ echo "==> fuzz smoke (FUZZ_SMOKE=1 — generative differential suites at bounded
 # full-N suites (N >= 100 kernels per mode) already ran in `cargo test`
 # above. --nocapture so the logged seed ranges land in the CI output.
 FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz -- --nocapture
+FUZZ_SMOKE=1 cargo test -q --test property_fingerprint -- --nocapture
+
+echo "==> serve smoke (SERVE_SMOKE=1 — real daemon: solve, cache hit, stats, SIGTERM)"
+# Drives the release binary end to end over TCP: start `serve` on an
+# ephemeral port, parse the bound port from the banner, issue the same
+# solve twice (miss then hit), check `stats` counted the hit, then
+# SIGTERM and require a clean exit. Uses bash's /dev/tcp so no netcat
+# is needed. Skip with SERVE_SMOKE=0 (sandboxes without loopback).
+if [ "${SERVE_SMOKE:-1}" != "0" ]; then
+  SERVE_LOG=$(mktemp)
+  target/release/nlp-dse serve --addr 127.0.0.1:0 --threads 2 --jobs 1 2>"$SERVE_LOG" &
+  SERVE_PID=$!
+  PORT=""
+  for _ in $(seq 1 100); do
+    PORT=$(sed -n 's/.*listening on 127\.0\.0\.1:\([0-9]*\).*/\1/p' "$SERVE_LOG" | head -n1)
+    [ -n "$PORT" ] && break
+    sleep 0.1
+  done
+  if [ -z "$PORT" ]; then
+    echo "ci: serve daemon never reported its port:" >&2
+    cat "$SERVE_LOG" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+  fi
+  serve_request() {  # one request line -> the terminal result/error line
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf '%s\n' "$1" >&3
+    grep -m1 -E '"event":"(result|error)"' <&3
+    exec 3>&- 3<&-
+  }
+  REQ='{"op":"solve","kernel":"gemm","size":"S","cap":16}'
+  R1=$(serve_request "$REQ")
+  R2=$(serve_request "$REQ")
+  R3=$(serve_request '{"op":"stats"}')
+  echo "$R1" | grep -q '"cache":"miss"' || { echo "ci: first solve was not a cache miss: $R1" >&2; exit 1; }
+  echo "$R2" | grep -q '"cache":"hit"'  || { echo "ci: repeated solve was not a cache hit: $R2" >&2; exit 1; }
+  echo "$R3" | grep -q '"hits":1'       || { echo "ci: stats did not count the hit: $R3" >&2; exit 1; }
+  kill -TERM "$SERVE_PID"
+  wait "$SERVE_PID"  # non-zero exit (unclean shutdown) fails ci via set -e
+  rm -f "$SERVE_LOG"
+  echo "    serve smoke passed (port $PORT, cache hit observed, clean SIGTERM exit)"
+fi
 
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
-for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen; do
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve; do
   BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
 done
 if [ ! -f BENCH_solver.json ]; then

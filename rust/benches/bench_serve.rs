@@ -1,0 +1,82 @@
+//! Serve-path benchmarks (ISSUE 6): what the warm cache actually buys.
+//!
+//! All cases drive [`nlp_dse::serve::handle_line`] in-process — the
+//! daemon minus the socket — so the numbers isolate dispatch + cache +
+//! solve, not TCP. Cases:
+//!
+//! * `fingerprint/<kernel>` — the per-request key derivation (two hash
+//!   walks); this is the cache's fixed overhead on every solve;
+//! * `parse+dispatch/stats` — protocol floor: parse a request line,
+//!   run the cheapest op, serialize the response;
+//! * `solve-miss/<kernel>` — cold solve including bound-model build
+//!   (fresh state each iteration, nothing reusable);
+//! * `solve-hit/<kernel>` — the same request against a primed cache:
+//!   the bit-identical replay path the ISSUE's acceptance names.
+//!
+//! `BENCH_SMOKE=1` shrinks the matrix to gemm-S (the ci.sh bench-smoke
+//! loop), keeping the bench compiling and honest.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::ir::DType;
+use nlp_dse::serve::{fingerprint, handle_line, ServeConfig, ServeState};
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn state() -> ServeState {
+    ServeState::new(ServeConfig {
+        jobs: 1,
+        cache_entries: 16,
+    })
+}
+
+/// Run one request line, discarding events (the sink is what the TCP
+/// writer would be).
+fn drive(state: &ServeState, line: &str) {
+    let mut sink = |l: &str| {
+        black_box(l.len());
+    };
+    handle_line(state, line, &mut sink);
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("serve");
+
+    let kernels: &[(&str, &str)] = if smoke {
+        &[("gemm", "S")]
+    } else {
+        &[("gemm", "S"), ("atax", "S"), ("bicg", "S")]
+    };
+
+    for (name, size) in kernels {
+        let k = benchmarks::lookup(name, Size::parse(size).unwrap(), DType::F32).unwrap();
+        b.bench(&format!("fingerprint/{name}-{size}"), || {
+            black_box(fingerprint(&k));
+        });
+    }
+
+    {
+        let st = state();
+        b.bench("parse+dispatch/stats", || {
+            drive(&st, r#"{"op":"stats"}"#);
+        });
+    }
+
+    for (name, size) in kernels {
+        let req = format!(r#"{{"op":"solve","kernel":"{name}","size":"{size}","cap":16}}"#);
+        // cold path: a fresh daemon state per iteration — model build +
+        // full branch-and-bound every time
+        b.bench(&format!("solve-miss/{name}-{size}"), || {
+            let st = state();
+            drive(&st, &req);
+        });
+        // hot path: primed cache, every iteration replays the stored
+        // result (lookup + reserialization only)
+        let st = state();
+        drive(&st, &req);
+        b.bench(&format!("solve-hit/{name}-{size}"), || {
+            drive(&st, &req);
+        });
+    }
+
+    b.finish();
+}

@@ -12,6 +12,7 @@
 //! nlp-dse gen [--seed S] [--count N] [--out-dir DIR] [--sampled] [--depth/--width/...]
 //! nlp-dse campaign [--scope quick|paper|harp] [--engines a,b] [--json FILE] [--xla] [--jobs N]
 //!                  [--emit-dir DIR]
+//! nlp-dse serve [--addr HOST:PORT] [--cache-entries K] [--threads N] [--jobs N]
 //! ```
 //!
 //! Everywhere a kernel is named, the spec is either a registered
@@ -81,6 +82,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "space" => cmd_space(&mut args)?,
         "gen" => cmd_gen(&mut args)?,
         "campaign" => cmd_campaign(&mut args)?,
+        "serve" => cmd_serve(&mut args)?,
         "engines" => cmd_engines(),
         "help" | "" => help(),
         other => bail!("unknown command `{other}` (try `help`)"),
@@ -116,6 +118,9 @@ fn help() -> String {
                     (emit seeded random .knl kernels; single kernel prints to stdout)\n\
            campaign [--scope quick|paper|harp] [--engines a,b,c] [--json FILE] [--xla]\n\
                     [--emit-dir DIR [--dialect merlin|vitis] [--realized]]\n\
+           serve    [--addr HOST:PORT] [--cache-entries K] [--threads N]\n\
+                    (line-JSON DSE daemon with a fingerprint-keyed warm cache;\n\
+                     ops: solve|dse|bound|emit|gen|stats|shutdown — see GUIDE.md)\n\
            engines  (list the registered exploration engines)\n\
          \n\
          common flags: --out FILE  --threads N  --jobs N  --dtype f32|f64\n\
@@ -163,16 +168,15 @@ fn scope_campaign(
     }
     // campaign constructors pin the solver to 1 job per pool thread (the
     // pool already saturates the host); `--jobs` opts into nesting
-    if let Some(j) = parse_jobs(args)? {
-        cfg.tuning.dse.jobs = j;
-    }
+    // through the config knob — the scope's tuning stays untouched
+    cfg.solver_jobs = parse_jobs(args)?;
     cfg.use_xla = args.flag("xla");
     eprintln!(
         "[campaign] scope={scope} kernels={} engines={} threads={} jobs={} xla={}",
         cfg.kernels.len(),
         cfg.engines.join(","),
         cfg.threads,
-        cfg.tuning.dse.jobs,
+        cfg.effective_tuning().dse.jobs,
         cfg.use_xla
     );
     let result = coordinator::run_campaign(&cfg);
@@ -849,6 +853,53 @@ fn emit_campaign(
         }
     }
     Ok(out)
+}
+
+/// `serve`: the DSE-as-a-service daemon of [`crate::serve`]. Binds
+/// `--addr` (default `127.0.0.1:4517`; port `0` picks an ephemeral one)
+/// and blocks until a `shutdown` op or SIGTERM/SIGINT, then drains
+/// in-flight requests and returns. `--threads` bounds concurrent
+/// requests (default: the campaign pool width); `--jobs` sets the NLP
+/// solver's worker team *per request* (default 1 — the request pool
+/// already saturates the host, exactly like campaigns; individual
+/// requests may still override with a `"jobs"` field).
+fn cmd_serve(args: &mut Args) -> Result<String> {
+    let addr = args.opt("addr").unwrap_or_else(|| "127.0.0.1:4517".into());
+    let cache_entries: usize = args
+        .opt("cache-entries")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(64);
+    let jobs = parse_jobs(args)?.unwrap_or(1);
+    let threads: usize = match args.opt("threads") {
+        Some(t) => t.parse()?,
+        None => coordinator::num_threads(),
+    };
+    crate::serve::install_signal_handlers();
+    let h = crate::serve::spawn(&addr, crate::serve::ServeConfig { jobs, cache_entries }, threads)?;
+    let bound = h.addr();
+    eprintln!(
+        "[serve] listening on {bound} (threads={threads} jobs={jobs} cache-entries={cache_entries})\n\
+         [serve] line-JSON ops: solve|dse|bound|emit|gen|stats|shutdown — e.g.\n\
+         [serve]   printf '%s\\n' '{{\"op\":\"solve\",\"kernel\":\"gemm\",\"size\":\"S\"}}' | nc {} {}\n\
+         [serve] ^C (or the `shutdown` op) stops the daemon cleanly",
+        bound.ip(),
+        bound.port()
+    );
+    let state = h.state().clone();
+    h.join();
+    // parting observability: issue one in-process `stats` op against the
+    // drained daemon and render it as a table
+    let mut last = String::new();
+    let _ = crate::serve::handle_line(&state, r#"{"op":"stats"}"#, &mut |l: &str| {
+        last = l.to_string();
+    });
+    let stats = crate::util::json::Json::parse(&last)
+        .ok()
+        .and_then(|j| j.get("data").cloned())
+        .map(|d| format!("\n\n{}", report::serve_stats(&d).render()))
+        .unwrap_or_default();
+    Ok(format!("serve: daemon on {bound} shut down cleanly{stats}"))
 }
 
 /// JSON dump of a campaign (for plotting / external analysis). One

@@ -46,6 +46,14 @@ pub struct CampaignConfig {
     pub use_xla: bool,
     /// Per-engine campaign parameters, handed to every registry factory.
     pub tuning: EngineTuning,
+    /// NLP-solver worker threads *per pool job*. The constructors pin
+    /// the tuning to the serial path (`jobs = 1`) because the pool
+    /// already saturates the host; this knob re-opens nesting without
+    /// reaching into `tuning` — it overrides `tuning.dse.jobs` at run
+    /// time in every campaign path (`None` keeps the tuning's value).
+    /// Results are bit-identical for any value (the solver's
+    /// deterministic reduction).
+    pub solver_jobs: Option<usize>,
 }
 
 /// `engines` helper: owned names from a literal list.
@@ -72,6 +80,7 @@ impl CampaignConfig {
             threads: num_threads(),
             use_xla: false,
             tuning: serial_solver_tuning(EngineTuning::default()),
+            solver_jobs: None,
         }
     }
 
@@ -98,6 +107,7 @@ impl CampaignConfig {
                 },
                 ..EngineTuning::default()
             }),
+            solver_jobs: None,
         }
     }
 
@@ -120,7 +130,18 @@ impl CampaignConfig {
                 },
                 ..EngineTuning::default()
             }),
+            solver_jobs: None,
         }
+    }
+
+    /// The tuning each campaign job actually receives: `tuning` with
+    /// [`solver_jobs`](CampaignConfig::solver_jobs) applied on top.
+    pub fn effective_tuning(&self) -> EngineTuning {
+        let mut t = self.tuning.clone();
+        if let Some(j) = self.solver_jobs {
+            t.dse.jobs = j.max(1);
+        }
+        t
     }
 }
 
@@ -253,9 +274,10 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
             Err(err) => eprintln!("[campaign] skipping kernel `{name}`: {err:#}"),
         });
     }
+    let tuning = cfg.effective_tuning();
     for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
         for (eidx, ename) in cfg.engines.iter().enumerate() {
-            let engine: Box<dyn Engine> = match registry.create(ename, &cfg.tuning) {
+            let engine: Box<dyn Engine> = match registry.create(ename, &tuning) {
                 Ok(e) => e,
                 Err(err) => {
                     eprintln!("[campaign] skipping: {err:#}");
@@ -352,7 +374,7 @@ pub fn run_one(cfg: &CampaignConfig, name: &str, size: Size) -> anyhow::Result<K
         } else {
             Evaluator::rust()
         })
-        .tuning(cfg.tuning.clone());
+        .tuning(cfg.effective_tuning());
     // static columns reuse the session's kernel + analysis (the exact
     // polyhedral analysis is the expensive static step)
     let st = static_info_from(explorer.kernel_ref(), explorer.analysis());
@@ -448,6 +470,27 @@ mod tests {
         assert_eq!(row.explorations.len(), 2);
         assert!(row.exploration("random").is_some());
         assert!(row.exploration("random").unwrap().best_gflops > 0.0);
+    }
+
+    #[test]
+    fn solver_jobs_overrides_the_serial_pin_without_changing_results() {
+        let mut cfg = CampaignConfig::quick();
+        cfg.engines = engine_names(&["nlpdse"]);
+        // the constructors pin the per-job solver serial...
+        assert_eq!(cfg.effective_tuning().dse.jobs, 1);
+        // ...and the knob overrides it without touching `tuning`
+        cfg.solver_jobs = Some(2);
+        assert_eq!(cfg.effective_tuning().dse.jobs, 2);
+        assert_eq!(cfg.tuning.dse.jobs, 1, "tuning itself stays untouched");
+        let par = run_one(&cfg, "atax", Size::Small).unwrap();
+        cfg.solver_jobs = None;
+        let ser = run_one(&cfg, "atax", Size::Small).unwrap();
+        // deterministic reduction: nesting changes scheduling only
+        assert_eq!(
+            par.explorations[0].best_gflops,
+            ser.explorations[0].best_gflops
+        );
+        assert_eq!(par.explorations[0].best, ser.explorations[0].best);
     }
 
     #[test]

@@ -16,8 +16,10 @@ use crate::dse::DseConfig;
 use crate::engine::RandomConfig;
 use crate::hls::Device;
 use crate::ir::{DType, Kernel};
-use crate::model::sym::{BoundModel, PartialDesign};
-use crate::nlp::{BatchEvaluator, RustFeatureEvaluator, SymbolicEvaluator};
+use crate::model::sym::{BoundModel, CompiledModel, PartialDesign};
+use crate::nlp::{
+    self, BatchEvaluator, NlpProblem, RustFeatureEvaluator, SolveResult, SymbolicEvaluator,
+};
 use crate::poly::Analysis;
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
 use anyhow::{bail, Result};
@@ -81,6 +83,26 @@ enum EngineChoice {
     Custom(Box<dyn Engine>),
 }
 
+/// An [`Evaluator`] policy resolved to a concrete evaluator for one run
+/// (owns the loaded XLA artifact when the policy selected one).
+enum ResolvedEvaluator {
+    Rust(RustFeatureEvaluator),
+    Sym(SymbolicEvaluator),
+    Xla(XlaEvaluator),
+    Shared(Arc<dyn BatchEvaluator>),
+}
+
+impl ResolvedEvaluator {
+    fn as_dyn(&self) -> &dyn BatchEvaluator {
+        match self {
+            ResolvedEvaluator::Rust(e) => e,
+            ResolvedEvaluator::Sym(e) => e,
+            ResolvedEvaluator::Xla(e) => e,
+            ResolvedEvaluator::Shared(e) => e.as_ref(),
+        }
+    }
+}
+
 /// One exploration session over one kernel. Build with
 /// [`Explorer::kernel`] (PolyBench registry) or [`Explorer::custom`]
 /// (bring-your-own [`Kernel`]), chain the setters, then [`run`].
@@ -113,8 +135,12 @@ pub struct Explorer {
     kernel: Kernel,
     analysis: Analysis,
     device: Device,
-    /// Lazily built on first use (black-box engines never pay for it).
-    bound: std::cell::OnceCell<BoundModel>,
+    /// Lazily built on first use (black-box engines never pay for it);
+    /// `Arc` so a warm cache (the serve daemon) can share one build
+    /// across sessions over structurally identical kernels.
+    bound: std::cell::OnceCell<Arc<BoundModel>>,
+    /// The bound model's flattened tape, same lifecycle.
+    compiled: std::cell::OnceCell<Arc<CompiledModel>>,
     evaluator: Evaluator,
     tuning: EngineTuning,
     registry: Registry,
@@ -154,6 +180,7 @@ impl Explorer {
             analysis,
             device: Device::u200(),
             bound: std::cell::OnceCell::new(),
+            compiled: std::cell::OnceCell::new(),
             evaluator: Evaluator::Auto,
             tuning: EngineTuning::default(),
             registry: Registry::builtin(),
@@ -167,6 +194,22 @@ impl Explorer {
     pub fn device(mut self, dev: Device) -> Explorer {
         self.device = dev;
         self.bound = std::cell::OnceCell::new();
+        self.compiled = std::cell::OnceCell::new();
+        self
+    }
+
+    /// Seed the session's bound model + compiled tape from a previous
+    /// build instead of rebuilding — the serve daemon's model-cache
+    /// hook. The caller asserts the pair was built for a structurally
+    /// identical kernel (equal exact [`crate::serve::Fingerprint`]) on
+    /// the same device; nothing here re-checks.
+    pub fn with_shared_model(
+        mut self,
+        bound: Arc<BoundModel>,
+        compiled: Arc<CompiledModel>,
+    ) -> Explorer {
+        self.bound = std::cell::OnceCell::from(bound);
+        self.compiled = std::cell::OnceCell::from(compiled);
         self
     }
 
@@ -261,7 +304,22 @@ impl Explorer {
     /// built on first use).
     pub fn bound_model(&self) -> &BoundModel {
         self.bound
-            .get_or_init(|| BoundModel::build(&self.kernel, &self.analysis, &self.device))
+            .get_or_init(|| Arc::new(BoundModel::build(&self.kernel, &self.analysis, &self.device)))
+            .as_ref()
+    }
+
+    /// The bound model as a shareable handle (what a warm cache stores).
+    pub fn bound_model_arc(&self) -> Arc<BoundModel> {
+        self.bound_model();
+        self.bound.get().expect("just initialized").clone()
+    }
+
+    /// The bound model's compiled tape as a shareable handle, built on
+    /// first use (or seeded via [`Explorer::with_shared_model`]).
+    pub fn compiled_model_arc(&self) -> Arc<CompiledModel> {
+        self.compiled
+            .get_or_init(|| Arc::new(self.bound_model().compile()))
+            .clone()
     }
 
     /// Achievable-latency lower bound of a (possibly partial) pragma
@@ -319,26 +377,65 @@ impl Explorer {
         self.run_with(e.as_ref())
     }
 
-    fn run_with(&self, engine: &dyn Engine) -> Result<Exploration> {
-        let rust_eval = RustFeatureEvaluator;
-        let sym_eval = SymbolicEvaluator;
-        let loaded: XlaEvaluator;
-        let evaluator: &dyn BatchEvaluator = match &self.evaluator {
-            Evaluator::Rust => &rust_eval,
-            Evaluator::Sym => &sym_eval,
+    /// Solve the Section 5 NLP over this session's kernel with the
+    /// session's evaluator and `jobs` setting: sub-space cap `cap`
+    /// (`u64::MAX` = unrestricted), Eq 9 restriction `fine`, `topk`
+    /// designs, `timeout_s` budget. Reuses a shared bound model when
+    /// [`Explorer::with_shared_model`] seeded one.
+    pub fn solve(&self, cap: u64, fine: bool, topk: usize, timeout_s: f64) -> Result<SolveResult> {
+        self.solve_seeded(cap, fine, topk, timeout_s, &[])
+    }
+
+    /// [`Explorer::solve`] warm-started from `seeds` — cached incumbent
+    /// designs from a previous solve of a same-shaped kernel (the serve
+    /// daemon's warm path). Seeds are re-verified against *this*
+    /// problem before use, so stale or alien seeds are dropped, never
+    /// trusted (see [`nlp::solve_jobs_seeded`]).
+    pub fn solve_seeded(
+        &self,
+        cap: u64,
+        fine: bool,
+        topk: usize,
+        timeout_s: f64,
+        seeds: &[crate::pragma::Design],
+    ) -> Result<SolveResult> {
+        let problem = NlpProblem::with_model(
+            &self.kernel,
+            &self.analysis,
+            &self.device,
+            cap,
+            fine,
+            self.bound_model_arc(),
+            self.compiled_model_arc(),
+        );
+        let resolved = self.resolve_evaluator()?;
+        let jobs = self.tuning.dse.jobs.max(1);
+        Ok(nlp::solve_jobs_seeded(
+            &problem,
+            timeout_s,
+            topk,
+            resolved.as_dyn(),
+            jobs,
+            seeds,
+        ))
+    }
+
+    fn resolve_evaluator(&self) -> Result<ResolvedEvaluator> {
+        Ok(match &self.evaluator {
+            Evaluator::Rust => ResolvedEvaluator::Rust(RustFeatureEvaluator),
+            Evaluator::Sym => ResolvedEvaluator::Sym(SymbolicEvaluator),
             Evaluator::Auto => match XlaEvaluator::load(&default_artifact_dir()) {
-                Ok(e) => {
-                    loaded = e;
-                    &loaded
-                }
-                Err(_) => &rust_eval,
+                Ok(e) => ResolvedEvaluator::Xla(e),
+                Err(_) => ResolvedEvaluator::Rust(RustFeatureEvaluator),
             },
-            Evaluator::Xla => {
-                loaded = XlaEvaluator::load(&default_artifact_dir())?;
-                &loaded
-            }
-            Evaluator::Custom(shared) => shared.as_ref(),
-        };
+            Evaluator::Xla => ResolvedEvaluator::Xla(XlaEvaluator::load(&default_artifact_dir())?),
+            Evaluator::Custom(shared) => ResolvedEvaluator::Shared(shared.clone()),
+        })
+    }
+
+    fn run_with(&self, engine: &dyn Engine) -> Result<Exploration> {
+        let resolved = self.resolve_evaluator()?;
+        let evaluator = resolved.as_dyn();
         // model-driven engines get the (lazily built) bound model;
         // black-box engines never trigger the build — same policy as the
         // coordinator's job scheduler
@@ -475,6 +572,28 @@ mod tests {
             let (d, _) = outcome.best.as_ref().unwrap();
             assert!(code.contains(&format!("design: {}", d.fingerprint())), "{engine}");
         }
+    }
+
+    #[test]
+    fn shared_model_and_seeded_solve_match_the_fresh_path() {
+        let ex1 = Explorer::kernel("gemm", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::rust())
+            .jobs(1);
+        let r1 = ex1.solve(16, false, 3, 30.0).unwrap();
+        assert!(r1.optimal && !r1.designs.is_empty());
+        // a second session seeded with the first one's model + incumbents
+        // (the serve daemon's warm path) must reproduce the result bit
+        // for bit
+        let seeds: Vec<_> = r1.designs.iter().map(|(d, _)| d.clone()).collect();
+        let ex2 = Explorer::kernel("gemm", Size::Small)
+            .unwrap()
+            .evaluator(Evaluator::rust())
+            .jobs(1)
+            .with_shared_model(ex1.bound_model_arc(), ex1.compiled_model_arc());
+        let r2 = ex2.solve_seeded(16, false, 3, 30.0, &seeds).unwrap();
+        assert_eq!(r1.designs, r2.designs);
+        assert_eq!(r1.lower_bound, r2.lower_bound);
     }
 
     #[test]

@@ -89,6 +89,10 @@
 //!   built as a stub unless the `xla` cargo feature is enabled.
 //! * [`coordinator`] — thread-pool campaign orchestration: one
 //!   `Box<dyn Engine>` job per (kernel, engine) pair.
+//! * [`serve`] — DSE-as-a-service: a line-JSON TCP daemon
+//!   (`nlp-dse serve`) with a structural-fingerprint-keyed warm cache —
+//!   bit-identical replay of completed solves, bound-model reuse, and
+//!   warm-started resubmissions.
 //! * [`report`] — regenerates every table and figure of the evaluation.
 //! * [`util`] — in-repo substrates for the offline environment: PRNG,
 //!   JSON/TSV emitters, bench harness, mini property-testing helper.
@@ -111,6 +115,7 @@ pub mod baselines;
 pub mod engine;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 pub mod report;
 pub mod cli;
 

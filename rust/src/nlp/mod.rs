@@ -19,6 +19,6 @@ pub mod solver;
 
 pub use formulation::{NlpProblem, Violation};
 pub use solver::{
-    default_jobs, solve, solve_jobs, BatchEvaluator, RustFeatureEvaluator, SolveResult,
-    SolverStats, SymbolicEvaluator,
+    default_jobs, design_risk, solve, solve_jobs, solve_jobs_seeded, BatchEvaluator,
+    RustFeatureEvaluator, SolveResult, SolverStats, SymbolicEvaluator,
 };

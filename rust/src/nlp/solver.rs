@@ -85,7 +85,7 @@
 //! interleaving.
 
 use super::formulation::NlpProblem;
-use crate::ir::LoopId;
+use crate::ir::{Kernel, LoopId};
 use crate::model;
 use crate::model::sym::{EvalScratch, PartialDesign};
 use crate::pragma::{space, Design, PipelineConfig};
@@ -294,6 +294,35 @@ fn rank_cmp(a: &Incumbent, b: &Incumbent) -> std::cmp::Ordering {
         .then_with(|| a.design.cmp(&b.design))
 }
 
+/// Realization risk of a complete design — the rank tie-break key. The
+/// Theorem 4.4 work floor creates objective plateaus; among equal-latency
+/// solutions the reduction prefers the least *risky* parallelism:
+/// coarse-grained factors above the pipeline are the pragmas Merlin most
+/// often refuses (Section 7.5), while fine under-pipe unrolls apply
+/// reliably — hence the lexicographic (objective, Π coarse-UF) ordering.
+/// A pure function of (kernel, design): search leaves and warm-start
+/// seeds compute identical keys, so [`solve_jobs_seeded`]'s reduction
+/// ranks a seeded design exactly like a search-found copy of it.
+pub fn design_risk(k: &Kernel, d: &Design) -> f64 {
+    d.pragmas
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let l = LoopId(i as u32);
+            let coarse = !k.loop_meta(l).innermost
+                && !p.pipeline
+                && k.loop_meta(l).children.len() + usize::from(!k.loop_meta(l).innermost) > 0
+                && d.pipeline_above(k, l) != Some(l)
+                && !d.pipelined().any(|pl| k.is_under(l, pl));
+            if coarse {
+                p.uf.max(1) as f64
+            } else {
+                1.0
+            }
+        })
+        .product()
+}
+
 /// Deterministic 64-bit design key (leaf dedup without structural scans).
 /// `DefaultHasher::new()` is documented to hash identically across
 /// instances and processes, so the key — and any collision — is the same
@@ -472,9 +501,59 @@ pub fn solve_jobs(
     evaluator: &dyn BatchEvaluator,
     jobs: usize,
 ) -> SolveResult {
+    solve_jobs_seeded(problem, timeout_s, topk, evaluator, jobs, &[])
+}
+
+/// [`solve_jobs`] warm-started from candidate incumbent designs (the
+/// serve daemon's fingerprint cache passes the previous solve's top-k
+/// when only sizes/precision changed).
+///
+/// Soundness: every seed is **re-verified against this problem** with
+/// the same single-tape feasibility + objective check a search leaf
+/// passes; infeasible seeds are dropped, feasible ones enter the
+/// incumbent reduction as ordinary incumbents (identical objective,
+/// risk, and dedup keys to a search-found copy of the same design). The
+/// incumbent guard only engages once `topk` incumbents exist — exactly
+/// as in a cold solve — so seeding can prune work but never prunes a
+/// design that would have ranked in a cold top-k. A completed seeded
+/// solve therefore returns the cold result, except that a seed the
+/// restricted candidate menus cannot reach (e.g. carried over from a
+/// different partition rung) may *improve* the top-k; timed-out anytime
+/// results keep the same caveats as the unseeded path.
+pub fn solve_jobs_seeded(
+    problem: &NlpProblem,
+    timeout_s: f64,
+    topk: usize,
+    evaluator: &dyn BatchEvaluator,
+    jobs: usize,
+    seeds: &[Design],
+) -> SolveResult {
     let t0 = Instant::now();
     let jobs = jobs.max(1);
     let k = problem.kernel;
+
+    // re-verify the seeds into genuine incumbents before any worker runs
+    let mut seeded: Vec<Incumbent> = Vec::new();
+    let mut seed_keys: HashSet<u64> = HashSet::new();
+    for d in seeds {
+        if d.pragmas.len() != k.n_loops() || !seed_keys.insert(design_key(d)) {
+            continue; // foreign-shape or duplicate seed
+        }
+        if let Some(obj) = problem.check_objective(d) {
+            seeded.push(Incumbent {
+                design: d.clone(),
+                obj,
+                risk: design_risk(k, d),
+            });
+        }
+    }
+    seeded.sort_by(rank_cmp);
+    seeded.truncate(topk);
+    let seed_guard = if seeded.len() >= topk {
+        seeded.last().map(|i| i.obj).unwrap_or(f64::INFINITY)
+    } else {
+        f64::INFINITY
+    };
 
     // baseline per-nest latencies for the empty design (score extraction)
     let empty = Design::empty(k);
@@ -491,10 +570,10 @@ pub fn solve_jobs(
         t0,
         timeout_s,
         next_cfg: AtomicUsize::new(0),
-        guard: AtomicF64Min::new(f64::INFINITY),
+        guard: AtomicF64Min::new(seed_guard),
         iv_lb_min: AtomicF64Min::new(f64::INFINITY),
         optimal: AtomicBool::new(true),
-        best: Mutex::new(Vec::new()),
+        best: Mutex::new(seeded),
         cache: CandCache::new(),
     };
 
@@ -1138,31 +1217,7 @@ fn leaf(
         return;
     }
 
-    // the Theorem 4.4 work floor creates objective plateaus; among
-    // equal-latency solutions prefer the one with the least *risky*
-    // parallelism: coarse-grained factors above the pipeline are the
-    // pragmas Merlin most often refuses (Section 7.5), while fine
-    // under-pipe unrolls apply reliably — lexicographic
-    // (objective, Π coarse-UF) ordering
-    let d = &ws.leaf;
-    let risk: f64 = d
-        .pragmas
-        .iter()
-        .enumerate()
-        .map(|(i, p)| {
-            let l = LoopId(i as u32);
-            let coarse = !k.loop_meta(l).innermost
-                && !p.pipeline
-                && k.loop_meta(l).children.len() + usize::from(!k.loop_meta(l).innermost) > 0
-                && d.pipeline_above(k, l) != Some(l)
-                && !d.pipelined().any(|pl| k.is_under(l, pl));
-            if coarse {
-                p.uf.max(1) as f64
-            } else {
-                1.0
-            }
-        })
-        .product();
+    let risk = design_risk(k, &ws.leaf);
 
     // fingerprint-set dedup (a rejected duplicate would re-rank
     // identically; the deterministic 64-bit key replaces the old
@@ -1427,6 +1482,67 @@ mod tests {
             assert_eq!(o1.to_bits(), o2.to_bits());
         }
         assert_eq!(par.jobs, 4);
+    }
+
+    #[test]
+    fn seeded_solve_matches_cold_solve_when_complete() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = NlpProblem::new(&k, &a, &dev, 512, false);
+        let cold = solve_jobs(&p, 30.0, 3, &RustFeatureEvaluator, 1);
+        assert!(cold.optimal);
+        // seeding with the cold optimum (the warm-cache scenario) must
+        // return the identical design set — the seeds are already in the
+        // search space, so they can only prune, never change the answer
+        let seeds: Vec<Design> = cold.designs.iter().map(|(d, _)| d.clone()).collect();
+        let warm = solve_jobs_seeded(&p, 30.0, 3, &RustFeatureEvaluator, 1, &seeds);
+        assert_eq!(cold.designs.len(), warm.designs.len());
+        for ((d1, o1), (d2, o2)) in cold.designs.iter().zip(&warm.designs) {
+            assert_eq!(d1, d2);
+            assert_eq!(o1.to_bits(), o2.to_bits());
+        }
+        // an infeasible or foreign-shape seed is dropped, not propagated
+        let mut bad = Design::empty(&k);
+        bad.get_mut(LoopId(0)).uf = 7; // 60 % 7 != 0 → infeasible
+        let alien = Design { pragmas: vec![] };
+        let r = solve_jobs_seeded(&p, 30.0, 3, &RustFeatureEvaluator, 1, &[bad.clone(), alien]);
+        assert!(!r.designs.iter().any(|(d, _)| *d == bad));
+        assert_eq!(r.designs.len(), cold.designs.len());
+    }
+
+    #[test]
+    fn seeded_solve_can_only_improve_the_incumbent_set() {
+        // seeds from a *different* rung (larger cap) stay in the result
+        // when feasible here — the documented "may improve" escape
+        let k = benchmarks::build("2mm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p8 = NlpProblem::new(&k, &a, &dev, 8, false);
+        let cold8 = solve_jobs(&p8, 30.0, 2, &RustFeatureEvaluator, 1);
+        let p512 = NlpProblem::new(&k, &a, &dev, 512, false);
+        let best512 = solve_jobs(&p512, 30.0, 2, &RustFeatureEvaluator, 1);
+        let seeds: Vec<Design> = best512.designs.iter().map(|(d, _)| d.clone()).collect();
+        let warm8 = solve_jobs_seeded(&p8, 30.0, 2, &RustFeatureEvaluator, 1, &seeds);
+        let cold_best = cold8.best().unwrap().1;
+        let warm_best = warm8.best().unwrap().1;
+        assert!(warm_best <= cold_best, "warm {warm_best} vs cold {cold_best}");
+    }
+
+    #[test]
+    fn design_risk_counts_coarse_factors_only() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let empty = Design::empty(&k);
+        assert_eq!(design_risk(&k, &empty), 1.0);
+        // a coarse UF on the outer loop multiplies the risk…
+        let mut coarse = Design::empty(&k);
+        coarse.get_mut(LoopId(0)).uf = 4;
+        assert_eq!(design_risk(&k, &coarse), 4.0);
+        // …while the same factor under a pipeline is risk-free
+        let mut fine = Design::empty(&k);
+        fine.get_mut(LoopId(0)).pipeline = true;
+        fine.get_mut(LoopId(1)).uf = 4;
+        assert_eq!(design_risk(&k, &fine), 1.0);
     }
 
     #[test]

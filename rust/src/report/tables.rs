@@ -468,6 +468,97 @@ pub fn emitted_index(rows: &[EmittedRow]) -> TextTable {
     t
 }
 
+/// Daemon observability: render one `stats`-op payload (the `data`
+/// object the [`crate::serve`] daemon returns) as a table — cache
+/// effectiveness first, then one row per op with its request count,
+/// errors, and log2-bucket latency histogram (`~ms:count` pairs, the
+/// lower bucket edge; zero buckets elided). The CLI prints this on
+/// clean daemon shutdown.
+pub fn serve_stats(data: &crate::util::json::Json) -> TextTable {
+    use crate::util::json::Json;
+    let mut t = TextTable::new(
+        "Serve stats — fingerprint cache and per-op latency",
+        &["", "Count", "Errors", "Latency histogram"],
+    );
+    let u = |j: Option<&Json>| j.and_then(|x| x.as_u64()).unwrap_or(0);
+    let cache = data.get("cache");
+    let g = |k: &str| u(cache.and_then(|c| c.get(k)));
+    let hit_rate = cache
+        .and_then(|c| c.get("hit_rate"))
+        .and_then(|x| x.as_f64())
+        .unwrap_or(0.0);
+    t.row(vec![
+        format!("cache (hit rate {:.0}%)", hit_rate * 100.0),
+        format!(
+            "{} hit / {} warm / {} miss",
+            g("hits"),
+            g("warm"),
+            g("misses")
+        ),
+        String::new(),
+        format!("models reused {}, evicted {}", g("model_hits"), g("evictions")),
+    ]);
+    if let Some(Json::Obj(ops)) = data.get("ops") {
+        for (op, rec) in ops {
+            let lat = rec
+                .get("latency_ms_log2")
+                .and_then(|x| x.as_arr())
+                .map(|buckets| {
+                    buckets
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, b)| {
+                            let n = b.as_u64().unwrap_or(0);
+                            (n > 0).then(|| format!("~{}ms:{n}", 1u64 << i))
+                        })
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                })
+                .unwrap_or_default();
+            t.row(vec![
+                format!("op {op}"),
+                u(rec.get("count")).to_string(),
+                u(rec.get("errors")).to_string(),
+                lat,
+            ]);
+        }
+    }
+    t.row(vec![
+        "uptime / queue".into(),
+        format!(
+            "{:.0}s",
+            data.get("uptime_s").and_then(|x| x.as_f64()).unwrap_or(0.0)
+        ),
+        String::new(),
+        format!("queue depth {}", u(data.get("queue_depth"))),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod serve_stats_tests {
+    use super::*;
+
+    #[test]
+    fn serve_stats_renders_cache_and_op_rows() {
+        let data = crate::util::json::Json::parse(
+            r#"{"uptime_s":12.5,"queue_depth":1,
+                "cache":{"hits":3,"misses":2,"warm":1,"model_hits":2,
+                         "evictions":0,"hit_rate":0.5,
+                         "entries":{"solves":2,"models":2,"warm":2}},
+                "ops":{"solve":{"count":6,"errors":1,
+                                "latency_ms_log2":[0,2,0,4,0,0,0,0,0,0,0,0,0,0,0,0]}}}"#,
+        )
+        .unwrap();
+        let out = serve_stats(&data).render();
+        assert!(out.contains("hit rate 50%"), "{out}");
+        assert!(out.contains("op solve"), "{out}");
+        assert!(out.contains("~2ms:2"), "{out}");
+        assert!(out.contains("~8ms:4"), "{out}");
+        assert!(out.contains("queue depth 1"), "{out}");
+    }
+}
+
 #[cfg(test)]
 mod emitted_tests {
     use super::*;

@@ -1,0 +1,343 @@
+//! The daemon's warm cache: fingerprint-keyed LRU over built bound
+//! models, compiled tapes, and completed `SolveResult`s.
+//!
+//! Three maps, one eviction budget (`--cache-entries`):
+//!
+//! * **solve cache** — [`SolveKey`] → `Arc<SolveResult>`. Only results
+//!   with `optimal == true` are admitted: a completed solve is a pure
+//!   function of (kernel structure, space restrictions, device,
+//!   evaluator) — the key — while an anytime (timed-out) result also
+//!   depends on the timeout and scheduling, so caching it would break
+//!   the coherence argument (DESIGN.md §11). `jobs` is deliberately
+//!   *not* part of the key: the solver's deterministic reduction makes
+//!   every worker count bit-identical.
+//! * **model cache** — `(exact fingerprint, device)` →
+//!   `Arc<BoundModel>` + `Arc<CompiledModel>`. The symbolic build and
+//!   tape compilation depend only on (kernel, device), so even a solve
+//!   *miss* with different space options reuses them via
+//!   [`NlpProblem::with_model`].
+//! * **warm index** — `(warm fingerprint, device)` → the design list of
+//!   the most recent completed solve of any same-shaped kernel. On a
+//!   solve miss whose shape warm-matches, these designs seed
+//!   [`crate::nlp::solve_jobs_seeded`] (re-verified there; see its
+//!   soundness note) and the response reports `cache: "warm"`.
+//!
+//! The cache is plain data (no interior locking): the serve session
+//! wraps it in one mutex, held only around lookups/inserts — never
+//! across a solve.
+//!
+//! [`NlpProblem::with_model`]: crate::nlp::NlpProblem::with_model
+
+use crate::model::sym::{BoundModel, CompiledModel};
+use crate::nlp::SolveResult;
+use crate::pragma::Design;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Full cache-hit key: everything a completed [`SolveResult`] depends
+/// on. `jobs` and the timeout are excluded by construction (see module
+/// docs).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SolveKey {
+    /// Name-blind exact structural fingerprint of the kernel
+    /// (structure + bounds + dtype).
+    pub kernel_fp: u64,
+    /// Target device name (op costs and budgets).
+    pub device: String,
+    /// Evaluator tag (`rust` / `sym` / `xla` — distinct scoring fronts
+    /// can rank candidate menus differently).
+    pub evaluator: String,
+    /// `MAX_PARTITIONING` sub-space rung.
+    pub cap: u64,
+    /// Eq 9 fine-grained-only restriction.
+    pub fine: bool,
+    /// Requested top-k width.
+    pub topk: usize,
+}
+
+/// Model-cache key: the symbolic build depends only on (kernel, device).
+type ModelKey = (u64, String);
+/// Warm-index key: same nest shape on the same device.
+type WarmKey = (u64, String);
+
+struct SolveEntry {
+    result: Arc<SolveResult>,
+    last_used: u64,
+}
+
+struct ModelEntry {
+    bound: Arc<BoundModel>,
+    compiled: Arc<CompiledModel>,
+    last_used: u64,
+}
+
+/// Cumulative cache counters (monotone; the `stats` op snapshots them).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CacheStats {
+    /// Solve-cache hits (bit-identical replay).
+    pub hits: u64,
+    /// Solve-cache misses with no warm seed either.
+    pub misses: u64,
+    /// Solve-cache misses answered with warm-started solves.
+    pub warm: u64,
+    /// Model-cache hits (bound model + tape reused).
+    pub model_hits: u64,
+    /// Entries dropped by LRU eviction (all three maps).
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    /// Solve-cache hit rate over all attributed requests.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses + self.warm;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// The daemon's warm cache (see module docs).
+pub struct WarmCache {
+    capacity: usize,
+    tick: u64,
+    solves: HashMap<SolveKey, SolveEntry>,
+    models: HashMap<ModelKey, ModelEntry>,
+    warm: HashMap<WarmKey, (Vec<Design>, u64)>,
+    /// Cumulative counters.
+    pub stats: CacheStats,
+}
+
+impl WarmCache {
+    /// Cache bounded at `capacity` entries per map (`--cache-entries`;
+    /// a capacity of 0 disables caching entirely).
+    pub fn new(capacity: usize) -> WarmCache {
+        WarmCache {
+            capacity,
+            tick: 0,
+            solves: HashMap::new(),
+            models: HashMap::new(),
+            warm: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn bump(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Exact-key lookup. A hit returns the stored result verbatim
+    /// (`Arc` clone — bit-identical to the solve that populated it) and
+    /// refreshes its LRU stamp.
+    pub fn lookup_solve(&mut self, key: &SolveKey) -> Option<Arc<SolveResult>> {
+        let tick = self.bump();
+        match self.solves.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.stats.hits += 1;
+                Some(e.result.clone())
+            }
+            None => None,
+        }
+    }
+
+    /// Warm-index lookup (does not count as a hit by itself — the
+    /// caller attributes `warm` vs `miss` when the solve dispatches).
+    pub fn warm_seeds(&self, warm_fp: u64, device: &str) -> Option<Vec<Design>> {
+        self.warm
+            .get(&(warm_fp, device.to_string()))
+            .map(|(d, _)| d.clone())
+    }
+
+    /// Count one dispatched solve as warm-started or a cold miss.
+    pub fn note_dispatch(&mut self, warm_started: bool) {
+        if warm_started {
+            self.stats.warm += 1;
+        } else {
+            self.stats.misses += 1;
+        }
+    }
+
+    /// Admit a completed solve. Non-optimal (anytime) results are
+    /// rejected — they are not pure functions of the key — but their
+    /// designs still refresh the warm index (a partial incumbent is a
+    /// legitimate seed; seeds are re-verified at use).
+    pub fn insert_solve(&mut self, key: SolveKey, warm_fp: u64, result: &Arc<SolveResult>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.bump();
+        let designs: Vec<Design> = result.designs.iter().map(|(d, _)| d.clone()).collect();
+        if !designs.is_empty() {
+            self.warm
+                .insert((warm_fp, key.device.clone()), (designs, tick));
+            if self.warm.len() > self.capacity {
+                evict_min(&mut self.warm, |(_, t)| *t);
+                self.stats.evictions += 1;
+            }
+        }
+        if result.optimal {
+            self.solves.insert(
+                key,
+                SolveEntry {
+                    result: result.clone(),
+                    last_used: tick,
+                },
+            );
+            if self.solves.len() > self.capacity {
+                evict_min(&mut self.solves, |e| e.last_used);
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    /// Shared bound model + compiled tape for `(kernel fingerprint,
+    /// device)`, if cached.
+    pub fn lookup_model(
+        &mut self,
+        fp: u64,
+        device: &str,
+    ) -> Option<(Arc<BoundModel>, Arc<CompiledModel>)> {
+        let tick = self.bump();
+        match self.models.get_mut(&(fp, device.to_string())) {
+            Some(e) => {
+                e.last_used = tick;
+                self.stats.model_hits += 1;
+                Some((e.bound.clone(), e.compiled.clone()))
+            }
+            None => None,
+        }
+    }
+
+    /// Admit a freshly built model pair.
+    pub fn insert_model(
+        &mut self,
+        fp: u64,
+        device: &str,
+        bound: Arc<BoundModel>,
+        compiled: Arc<CompiledModel>,
+    ) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.bump();
+        self.models.insert(
+            (fp, device.to_string()),
+            ModelEntry {
+                bound,
+                compiled,
+                last_used: tick,
+            },
+        );
+        if self.models.len() > self.capacity {
+            evict_min(&mut self.models, |e| e.last_used);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Live entry counts `(solves, models, warm)` for the `stats` op.
+    pub fn sizes(&self) -> (usize, usize, usize) {
+        (self.solves.len(), self.models.len(), self.warm.len())
+    }
+}
+
+/// Drop the least-recently-used entry (O(n) scan — the cache is bounded
+/// by `--cache-entries`, far below where a heap would matter).
+fn evict_min<K: Clone + Eq + std::hash::Hash, V>(
+    map: &mut HashMap<K, V>,
+    stamp: impl Fn(&V) -> u64,
+) {
+    if let Some(k) = map
+        .iter()
+        .min_by_key(|(_, v)| stamp(v))
+        .map(|(k, _)| k.clone())
+    {
+        map.remove(&k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nlp::SolverStats;
+
+    fn result(optimal: bool) -> Arc<SolveResult> {
+        Arc::new(SolveResult {
+            designs: vec![(Design { pragmas: vec![] }, 42.0)],
+            lower_bound: 42.0,
+            optimal,
+            solve_time_s: 0.1,
+            cpu_time_s: 0.1,
+            jobs: 1,
+            stats: SolverStats::default(),
+        })
+    }
+
+    fn key(fp: u64) -> SolveKey {
+        SolveKey {
+            kernel_fp: fp,
+            device: "xilinx-u200".into(),
+            evaluator: "rust".into(),
+            cap: 512,
+            fine: false,
+            topk: 3,
+        }
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc_and_counts() {
+        let mut c = WarmCache::new(4);
+        assert!(c.lookup_solve(&key(1)).is_none());
+        let r = result(true);
+        c.insert_solve(key(1), 10, &r);
+        let hit = c.lookup_solve(&key(1)).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &r), "bit-identical replay is the same Arc");
+        assert_eq!(c.stats.hits, 1);
+        // a different rung is a different key
+        let mut k2 = key(1);
+        k2.cap = 8;
+        assert!(c.lookup_solve(&k2).is_none());
+    }
+
+    #[test]
+    fn non_optimal_results_feed_warm_index_only() {
+        let mut c = WarmCache::new(4);
+        c.insert_solve(key(2), 20, &result(false));
+        assert!(c.lookup_solve(&key(2)).is_none(), "anytime result not cached");
+        assert!(c.warm_seeds(20, "xilinx-u200").is_some(), "but seeds survive");
+        assert!(c.warm_seeds(20, "other-device").is_none());
+    }
+
+    #[test]
+    fn lru_evicts_the_oldest() {
+        let mut c = WarmCache::new(2);
+        c.insert_solve(key(1), 1, &result(true));
+        c.insert_solve(key(2), 2, &result(true));
+        assert!(c.lookup_solve(&key(1)).is_some()); // refresh 1
+        c.insert_solve(key(3), 3, &result(true)); // evicts 2
+        assert!(c.lookup_solve(&key(1)).is_some());
+        assert!(c.lookup_solve(&key(2)).is_none());
+        assert!(c.lookup_solve(&key(3)).is_some());
+        assert!(c.stats.evictions > 0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_caching() {
+        let mut c = WarmCache::new(0);
+        c.insert_solve(key(1), 1, &result(true));
+        assert!(c.lookup_solve(&key(1)).is_none());
+        assert_eq!(c.sizes(), (0, 0, 0));
+    }
+
+    #[test]
+    fn hit_rate_counts_all_attributed_requests() {
+        let mut c = WarmCache::new(4);
+        c.note_dispatch(false);
+        c.note_dispatch(true);
+        c.insert_solve(key(1), 1, &result(true));
+        let _ = c.lookup_solve(&key(1));
+        assert!((c.stats.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,175 @@
+//! Name-blind structural kernel fingerprints — the cache key derivation.
+//!
+//! Two 64-bit hashes per kernel, both computed in one positional
+//! pre-order walk over the finalized tree (the same canonical form
+//! [`Kernel::structural_diff`] compares, minus every name):
+//!
+//! * **exact** — everything the solve outcome depends on: dtype, array
+//!   extents/directions, the loop tree shape, affine bounds, statement
+//!   accesses (array id + index expressions), op multisets and chains.
+//!   Two kernels with equal exact fingerprints produce bit-identical
+//!   `SolveResult`s for the same (device, space, evaluator) — the full
+//!   cache-hit key.
+//! * **warm** — the shape alone: extents, bound constants, and dtype are
+//!   dropped, keeping the tree, the bound/index *coefficient* structure,
+//!   array directions, and op structure. Two kernels with equal warm
+//!   fingerprints are "the same nest at new sizes/precision" — the
+//!   resubmission regime the ISSUE's warm-start targets, where a cached
+//!   incumbent re-verifies as a seed but the solve must still run.
+//!
+//! Names are deliberately excluded everywhere (kernel, iterators,
+//! statements, arrays): a pretty-printed round-trip or a renamed-iterator
+//! copy of a kernel is the *same* problem, and must hit the same cache
+//! line. Ids do participate — they are dense creation-order indices, so
+//! after finalization they encode tree positions, not spellings.
+//!
+//! `DefaultHasher` is documented to hash identically across instances and
+//! processes (the solver's `design_key` already relies on this), so the
+//! fingerprints are stable across daemon restarts.
+
+use crate::ir::{AffineExpr, Kernel, Node};
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+
+/// The pair of structural hashes of one kernel (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Fingerprint {
+    /// Full structural hash: same value ⇒ same solve outcome (given the
+    /// same space/device/evaluator).
+    pub exact: u64,
+    /// Shape-only hash: same value ⇒ same nest modulo sizes/precision
+    /// (the warm-start index).
+    pub warm: u64,
+}
+
+/// Compute both fingerprints of a kernel in one tree walk.
+pub fn fingerprint(k: &Kernel) -> Fingerprint {
+    Fingerprint {
+        exact: hash_kernel(k, true),
+        warm: hash_kernel(k, false),
+    }
+}
+
+fn hash_kernel(k: &Kernel, exact: bool) -> u64 {
+    let mut h = DefaultHasher::new();
+    if exact {
+        k.dtype.bits().hash(&mut h);
+    }
+    k.arrays.len().hash(&mut h);
+    for a in &k.arrays {
+        // positional: id order is declaration order on both sides
+        a.id.0.hash(&mut h);
+        if exact {
+            a.dims.hash(&mut h);
+        } else {
+            // shape only: dimensionality, not extents
+            a.dims.len().hash(&mut h);
+        }
+        a.dir.word().hash(&mut h);
+    }
+    k.roots.len().hash(&mut h);
+    for r in &k.roots {
+        hash_node(k, r, exact, &mut h);
+    }
+    h.finish()
+}
+
+fn hash_node(k: &Kernel, n: &Node, exact: bool, h: &mut DefaultHasher) {
+    match n {
+        Node::Loop(l) => {
+            0u8.hash(h);
+            l.id.0.hash(h);
+            hash_expr(&l.lb, exact, h);
+            hash_expr(&l.ub, exact, h);
+            l.body.len().hash(h);
+            for c in &l.body {
+                hash_node(k, c, exact, h);
+            }
+        }
+        Node::Stmt(s) => {
+            1u8.hash(h);
+            s.id.0.hash(h);
+            for (accs, tag) in [(&s.writes, 2u8), (&s.reads, 3u8)] {
+                tag.hash(h);
+                accs.len().hash(h);
+                for a in accs {
+                    a.array.0.hash(h);
+                    a.indices.len().hash(h);
+                    for idx in &a.indices {
+                        // index constants are structural (A[i+1] vs A[i]),
+                        // not sizes — hash them in both modes
+                        idx.hash(h);
+                    }
+                }
+            }
+            s.ops.hash(h);
+            s.chain.hash(h);
+        }
+    }
+}
+
+/// Bound expressions: the warm hash keeps the iterator/coefficient
+/// structure (which loops a bound depends on, triangularity) but drops
+/// the constant — that is where problem sizes live.
+fn hash_expr(e: &AffineExpr, exact: bool, h: &mut DefaultHasher) {
+    e.terms.hash(h);
+    if exact {
+        e.constant.hash(h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::ir::DType;
+
+    #[test]
+    fn fingerprint_is_deterministic_and_name_blind() {
+        let k1 = benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let k2 = benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        assert_eq!(fingerprint(&k1), fingerprint(&k2));
+
+        // a pretty-printed round-trip is structurally identical and must
+        // map to the same key (the ISSUE's soundness direction)
+        let text = crate::frontend::pretty::print(&k1);
+        let k3 = crate::frontend::parse_kernel(&text, "<test>").unwrap();
+        assert_eq!(k1.structural_diff(&k3), None);
+        assert_eq!(fingerprint(&k1), fingerprint(&k3));
+
+        // renaming the kernel and every identifier changes no fingerprint
+        let renamed = text
+            .replace("gemm", "zzz")
+            .replace("for i ", "for ii ")
+            .replace("[i]", "[ii]");
+        let k4 = crate::frontend::parse_kernel(&renamed, "<test>").unwrap();
+        assert!(k1.structural_diff(&k4).is_some(), "names differ");
+        assert_eq!(fingerprint(&k1), fingerprint(&k4), "fingerprints must not");
+    }
+
+    #[test]
+    fn sizes_and_dtype_split_exact_but_not_warm() {
+        let small = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let medium = benchmarks::build("gemm", Size::Medium, DType::F32).unwrap();
+        let f64v = benchmarks::build("gemm", Size::Small, DType::F64).unwrap();
+        let (fs, fm, f6) = (fingerprint(&small), fingerprint(&medium), fingerprint(&f64v));
+        assert_ne!(fs.exact, fm.exact, "sizes change the exact key");
+        assert_ne!(fs.exact, f6.exact, "precision changes the exact key");
+        assert_eq!(fs.warm, fm.warm, "same nest shape warm-matches");
+        assert_eq!(fs.warm, f6.warm, "precision is warm-invariant");
+    }
+
+    #[test]
+    fn different_kernels_have_different_keys() {
+        let names = ["gemm", "2mm", "bicg", "atax", "mvt", "gesummv"];
+        let fps: Vec<u64> = names
+            .iter()
+            .map(|n| fingerprint(&benchmarks::build(n, Size::Small, DType::F32).unwrap()).exact)
+            .collect();
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "{} vs {}", names[i], names[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! DSE-as-a-service: a long-running daemon answering solve/DSE/bound/
+//! emit/gen requests over newline-framed JSON, with a fingerprint-keyed
+//! warm cache (`nlp-dse serve --addr HOST:PORT`).
+//!
+//! The paper's tool runs one kernel per invocation and rebuilds
+//! everything — polyhedral analysis, the symbolic bound model, the
+//! compiled tape — from scratch each time. In the iterative workflows
+//! the evaluation section describes (resubmitting a kernel after a
+//! source tweak, sweeping problem sizes, regenerating pragmas per
+//! dialect), most of that work is identical across invocations. This
+//! module keeps it hot:
+//!
+//! * [`fingerprint`](mod@fingerprint) — name-blind structural kernel hashes: `exact`
+//!   (same value ⇒ same solve outcome) and `warm` (same nest shape
+//!   modulo sizes/precision);
+//! * [`cache`] — one LRU budget over completed `SolveResult`s (replayed
+//!   bit-identically on `cache: "hit"`), built bound models + tapes, and
+//!   a warm index whose designs seed
+//!   [`solve_jobs_seeded`](crate::nlp::solve_jobs_seeded) for
+//!   `cache: "warm"` requests;
+//! * [`protocol`] — the line-JSON request/event grammar (documented in
+//!   full in `docs/DESIGN.md` §11);
+//! * [`session`] — transport-agnostic dispatch: the whole daemon minus
+//!   the socket, driven directly by the test suites;
+//! * [`server`] — the TCP accept loop over the coordinator's bounded
+//!   [`ThreadPool`](crate::coordinator::pool::ThreadPool), with clean
+//!   SIGTERM/`shutdown`-op termination.
+//!
+//! No new dependencies: `std::net`, the in-repo JSON codec, and the
+//! existing worker pool. A session with `nc` works verbatim:
+//!
+//! ```text
+//! $ nlp-dse serve --addr 127.0.0.1:4517 &
+//! $ printf '%s\n' '{"op":"solve","kernel":"gemm","size":"S","cap":16}' \
+//!     | nc 127.0.0.1 4517
+//! {"event":"progress","op":"solve","msg":"model built | 0 warm seed(s) | solving jobs=8"}
+//! {"event":"result","op":"solve","cache":"miss","data":{...}}
+//! ```
+
+pub mod cache;
+pub mod fingerprint;
+pub mod protocol;
+pub mod server;
+pub mod session;
+
+pub use cache::{CacheStats, SolveKey, WarmCache};
+pub use fingerprint::{fingerprint, Fingerprint};
+pub use server::{install_signal_handlers, spawn, ServerHandle};
+pub use session::{handle_line, Control, ServeConfig, ServeState};

@@ -1,0 +1,260 @@
+//! The daemon's wire protocol: newline-framed JSON, one value per line.
+//!
+//! A client writes one request object per line and reads response
+//! *events* until a terminal one arrives for that request:
+//!
+//! ```text
+//! → {"op":"solve","kernel":"gemm","size":"S","cap":16,"id":1}
+//! ← {"event":"progress","id":1,"op":"solve","msg":"model built"}
+//! ← {"event":"result","id":1,"op":"solve","cache":"miss","data":{...}}
+//! ```
+//!
+//! * every request: `op` (required) ∈ `solve | dse | bound | emit | gen |
+//!   stats | shutdown`, plus an optional `id` echoed verbatim on every
+//!   event the request produces (clients multiplexing one connection
+//!   correlate by it);
+//! * kernel-carrying ops take either `kernel` (registry benchmark name)
+//!   or `knl` (inline `.knl` source text), with optional `size`
+//!   (`S|M|L`) and `dtype` (`f32|f64`) — the same resolution as the CLI;
+//! * terminal events are `result` (with `data`, and on cache-eligible
+//!   ops a `cache: "hit" | "warm" | "miss"` attribution) and `error`
+//!   (with `message`, and — when the failure is a `.knl` parse error —
+//!   `diagnostic` holding the full rendered caret snippet, newlines
+//!   JSON-escaped).
+//!
+//! Everything here is transport-agnostic string-to-string plumbing; the
+//! TCP loop lives in [`super::server`], dispatch in [`super::session`].
+
+use crate::util::json::Json;
+
+/// One parsed request line. Op-specific options stay in `body` and are
+/// read through the typed accessors (which reject wrong JSON types
+/// instead of silently ignoring them).
+#[derive(Debug)]
+pub struct Request {
+    /// Client correlation id, echoed verbatim (any JSON scalar).
+    pub id: Option<Json>,
+    /// The operation name.
+    pub op: String,
+    body: Json,
+}
+
+/// Parse one request line. `Err` is a human-readable message for an
+/// `error` event (malformed JSON, missing `op`, non-object payload).
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let v = Json::parse(line).map_err(|e| format!("bad request JSON: {e}"))?;
+    if !matches!(v, Json::Obj(_)) {
+        return Err("request must be a JSON object".into());
+    }
+    let op = match v.get("op").and_then(|o| o.as_str()) {
+        Some(s) => s.to_string(),
+        None => return Err("request needs a string \"op\" field".into()),
+    };
+    let id = v.get("id").cloned().filter(|j| !matches!(j, Json::Null));
+    Ok(Request { id, op, body: v })
+}
+
+impl Request {
+    /// String option, `Err` when present but not a string.
+    pub fn str_opt(&self, key: &str) -> Result<Option<String>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| format!("\"{key}\" must be a string")),
+        }
+    }
+
+    /// Non-negative integer option, `Err` on fractions/negatives/strings.
+    pub fn u64_opt(&self, key: &str) -> Result<Option<u64>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j
+                .as_u64()
+                .map(Some)
+                .ok_or_else(|| format!("\"{key}\" must be a non-negative integer")),
+        }
+    }
+
+    /// Float option.
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| format!("\"{key}\" must be a number")),
+        }
+    }
+
+    /// Boolean option.
+    pub fn bool_opt(&self, key: &str) -> Result<Option<bool>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => j
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| format!("\"{key}\" must be a boolean")),
+        }
+    }
+
+    /// `loop → n` assignment option: accepts a JSON object
+    /// (`{"i": 4, "k": 8}`) or the CLI's string form (`"i=4,k=8"`).
+    pub fn assign_opt(&self, key: &str) -> Result<Vec<(String, u64)>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(Vec::new()),
+            Some(Json::Obj(m)) => {
+                let mut out = Vec::new();
+                for (l, v) in m {
+                    let n = v
+                        .as_u64()
+                        .ok_or_else(|| format!("\"{key}\".{l} must be a non-negative integer"))?;
+                    out.push((l.clone(), n));
+                }
+                Ok(out)
+            }
+            Some(Json::Str(s)) => {
+                let mut out = Vec::new();
+                for pair in s.split(',').filter(|p| !p.is_empty()) {
+                    let (l, n) = pair
+                        .split_once('=')
+                        .ok_or_else(|| format!("bad \"{key}\" entry `{pair}` (want loop=n)"))?;
+                    let n: u64 = n
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("bad \"{key}\" entry `{pair}` (want loop=n)"))?;
+                    out.push((l.trim().to_string(), n));
+                }
+                Ok(out)
+            }
+            Some(_) => Err(format!("\"{key}\" must be an object or \"loop=n,...\" string")),
+        }
+    }
+
+    /// Loop-list option: a JSON array of strings or the CLI's
+    /// comma-separated string form.
+    pub fn list_opt(&self, key: &str) -> Result<Vec<String>, String> {
+        match self.body.get(key) {
+            None | Some(Json::Null) => Ok(Vec::new()),
+            Some(Json::Arr(items)) => items
+                .iter()
+                .map(|j| {
+                    j.as_str()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| format!("\"{key}\" entries must be strings"))
+                })
+                .collect(),
+            Some(Json::Str(s)) => Ok(s
+                .split(',')
+                .map(|t| t.trim().to_string())
+                .filter(|t| !t.is_empty())
+                .collect()),
+            Some(_) => Err(format!("\"{key}\" must be an array or comma string")),
+        }
+    }
+}
+
+fn base(event: &str, id: &Option<Json>, op: Option<&str>) -> Json {
+    let mut o = Json::obj();
+    o.set("event", event);
+    if let Some(id) = id {
+        o.set("id", id.clone());
+    }
+    if let Some(op) = op {
+        o.set("op", op);
+    }
+    o
+}
+
+/// A `progress` event line (no trailing newline; the transport frames).
+pub fn progress_line(id: &Option<Json>, op: &str, msg: &str) -> String {
+    let mut o = base("progress", id, Some(op));
+    o.set("msg", msg);
+    o.to_line()
+}
+
+/// A terminal `result` event line. `cache` carries the per-request
+/// attribution on cache-eligible ops (`hit`/`warm`/`miss`) and is
+/// omitted elsewhere.
+pub fn result_line(id: &Option<Json>, op: &str, cache: Option<&str>, data: Json) -> String {
+    let mut o = base("result", id, Some(op));
+    if let Some(c) = cache {
+        o.set("cache", c);
+    }
+    o.set("data", data);
+    o.to_line()
+}
+
+/// A terminal `error` event line. `diagnostic` carries the frontend's
+/// rendered caret snippet when the failure was a `.knl` parse error.
+pub fn error_line(id: &Option<Json>, message: &str, diagnostic: Option<&str>) -> String {
+    let mut o = base("error", id, None);
+    o.set("message", message);
+    if let Some(d) = diagnostic {
+        o.set("diagnostic", d);
+    }
+    o.to_line()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_minimal_request() {
+        let r = parse_request(r#"{"op":"solve","kernel":"gemm","id":7}"#).unwrap();
+        assert_eq!(r.op, "solve");
+        assert_eq!(r.id.as_ref().and_then(|j| j.as_u64()), Some(7));
+        assert_eq!(r.str_opt("kernel").unwrap().as_deref(), Some("gemm"));
+        assert_eq!(r.str_opt("knl").unwrap(), None);
+    }
+
+    #[test]
+    fn rejects_malformed_lines_with_a_reason() {
+        assert!(parse_request("not json").unwrap_err().contains("bad request JSON"));
+        assert!(parse_request("[1,2]").unwrap_err().contains("JSON object"));
+        assert!(parse_request(r#"{"kernel":"gemm"}"#).unwrap_err().contains("\"op\""));
+        assert!(parse_request(r#"{"op":5}"#).unwrap_err().contains("\"op\""));
+    }
+
+    #[test]
+    fn typed_accessors_reject_wrong_types() {
+        let r = parse_request(r#"{"op":"solve","cap":"big","fine":1}"#).unwrap();
+        assert!(r.u64_opt("cap").is_err());
+        assert!(r.bool_opt("fine").is_err());
+        assert_eq!(r.u64_opt("topk").unwrap(), None);
+    }
+
+    #[test]
+    fn assign_and_list_accept_both_forms() {
+        let r = parse_request(r#"{"op":"bound","assign":{"i":4,"k":8},"pipeline":["j1"]}"#)
+            .unwrap();
+        assert_eq!(
+            r.assign_opt("assign").unwrap(),
+            vec![("i".into(), 4), ("k".into(), 8)]
+        );
+        assert_eq!(r.list_opt("pipeline").unwrap(), vec!["j1".to_string()]);
+        let r = parse_request(r#"{"op":"bound","assign":"i=4, k=8","pipeline":"j1,i"}"#).unwrap();
+        assert_eq!(
+            r.assign_opt("assign").unwrap(),
+            vec![("i".into(), 4), ("k".into(), 8)]
+        );
+        assert_eq!(r.list_opt("pipeline").unwrap().len(), 2);
+        assert!(r.assign_opt("missing").unwrap().is_empty());
+    }
+
+    #[test]
+    fn event_lines_are_single_line_json() {
+        let id = Some(Json::from("a1"));
+        let p = progress_line(&id, "solve", "queued");
+        assert!(!p.contains('\n'));
+        let v = Json::parse(&p).unwrap();
+        assert_eq!(v.get("event").and_then(|j| j.as_str()), Some("progress"));
+        assert_eq!(v.get("id").and_then(|j| j.as_str()), Some("a1"));
+        let e = error_line(&None, "boom", Some("error: x\n  --> <r>:1:2"));
+        let v = Json::parse(&e).unwrap();
+        assert!(v.get("diagnostic").and_then(|j| j.as_str()).unwrap().contains("-->"));
+        assert!(!e.contains('\n'), "newlines must be escaped: {e}");
+    }
+}

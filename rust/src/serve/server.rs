@@ -1,0 +1,263 @@
+//! The TCP front of the daemon: accept loop, per-connection readers, and
+//! the bounded worker pool that actually runs requests.
+//!
+//! Layout (no async runtime — std networking plus the coordinator's
+//! [`ThreadPool`]):
+//!
+//! * the **accept thread** polls a non-blocking listener (~25 ms) so it
+//!   can notice the shutdown latch between connections;
+//! * each connection gets a cheap **reader thread** that frames lines
+//!   and enqueues one pool job per request — concurrency across clients
+//!   is bounded by the pool (`--threads`), not by connection count;
+//! * responses go back through a per-connection mutexed writer, so
+//!   concurrent jobs of one pipelining client interleave whole lines,
+//!   never bytes (clients correlate by `id`);
+//! * shutdown latches via the `shutdown` op, [`ServerHandle::shutdown`],
+//!   or SIGTERM/SIGINT when [`install_signal_handlers`] was called (the
+//!   CLI does; in-process tests don't touch process signals). The accept
+//!   thread then drains the pool and returns.
+
+use super::session::{self, ServeConfig, ServeState};
+use crate::coordinator::pool::ThreadPool;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// Accept-loop poll interval: the latency bound on noticing shutdown.
+const POLL: Duration = Duration::from_millis(25);
+
+/// A running daemon: its bound address, shared state, and the accept
+/// thread to join.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    state: Arc<ServeState>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The daemon's shared state (tests and the smoke harness poke the
+    /// cache/stats through this).
+    pub fn state(&self) -> &Arc<ServeState> {
+        &self.state
+    }
+
+    /// Latch shutdown; the accept loop exits within one poll interval.
+    pub fn shutdown(&self) {
+        self.state.request_shutdown();
+    }
+
+    /// Wait for the accept loop to drain in-flight work and exit.
+    pub fn join(mut self) {
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.state.request_shutdown();
+        if let Some(t) = self.accept.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `127.0.0.1:4517`; port `0` picks an ephemeral one)
+/// and serve on a pool of `threads` workers until shutdown latches.
+pub fn spawn(addr: &str, cfg: ServeConfig, threads: usize) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let bound = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let state = Arc::new(ServeState::new(cfg));
+    let accept_state = state.clone();
+    let threads = threads.max(1);
+    let accept = thread::Builder::new()
+        .name("nlpdse-serve-accept".into())
+        .spawn(move || accept_loop(listener, accept_state, threads))
+        .context("spawning accept thread")?;
+    Ok(ServerHandle {
+        addr: bound,
+        state,
+        accept: Some(accept),
+    })
+}
+
+fn accept_loop(listener: TcpListener, state: Arc<ServeState>, threads: usize) {
+    // The pool lives on the accept thread: dropping it at loop exit
+    // drains every queued request before `join` returns. Readers share
+    // it behind a mutex (held only to enqueue — `execute` is one
+    // channel send).
+    let pool = Arc::new(Mutex::new(ThreadPool::new(threads)));
+    let mut readers = Vec::new();
+    while !state.shutdown_requested() && !term_signalled() {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let state = state.clone();
+                let pool = pool.clone();
+                let r = thread::Builder::new()
+                    .name("nlpdse-serve-conn".into())
+                    .spawn(move || serve_connection(state, pool, stream));
+                if let Ok(r) = r {
+                    readers.push(r);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => thread::sleep(POLL),
+        }
+        readers.retain(|r| !r.is_finished());
+    }
+    if term_signalled() {
+        state.request_shutdown();
+    }
+    // drain queued work, then give lingering readers a short grace
+    // period; ones still blocked on an open client socket are left
+    // detached (they exit when their client disconnects)
+    drop(pool);
+    let deadline = std::time::Instant::now() + Duration::from_millis(250);
+    while std::time::Instant::now() < deadline && readers.iter().any(|r| !r.is_finished()) {
+        thread::sleep(Duration::from_millis(10));
+    }
+    for r in readers {
+        if r.is_finished() {
+            let _ = r.join();
+        }
+    }
+}
+
+fn serve_connection(state: Arc<ServeState>, pool: Arc<Mutex<ThreadPool>>, stream: TcpStream) {
+    // accepted sockets can inherit the listener's non-blocking mode
+    let _ = stream.set_nonblocking(false);
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if state.shutdown_requested() {
+            break;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        state.queue_enter();
+        let state = state.clone();
+        let writer = writer.clone();
+        let job = move || {
+            let mut emit = |l: &str| {
+                let mut w = writer.lock().unwrap();
+                let _ = writeln!(w, "{l}");
+                let _ = w.flush();
+            };
+            // a Shutdown control already latched the shared state; the
+            // accept loop notices within one poll interval
+            let _ = session::handle_line(&state, &line, &mut emit);
+            state.queue_exit();
+        };
+        pool.lock().unwrap().execute(job);
+    }
+}
+
+#[cfg(unix)]
+mod sig {
+    //! SIGTERM/SIGINT latch without the libc crate: the two symbols we
+    //! need (`signal(2)` and the handler ABI) are declared directly.
+
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    pub static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_signum: i32) {
+        // async-signal-safe: one atomic store
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_term as usize);
+            signal(SIGINT, on_term as usize);
+        }
+    }
+}
+
+/// Route SIGTERM/SIGINT into a clean daemon shutdown (the accept loop
+/// polls the latch). The CLI `serve` command calls this; in-process
+/// embedders (tests) should not, as it replaces process-wide handlers.
+/// No-op on non-unix targets.
+pub fn install_signal_handlers() {
+    #[cfg(unix)]
+    sig::install();
+}
+
+fn term_signalled() -> bool {
+    #[cfg(unix)]
+    {
+        sig::TERM.load(std::sync::atomic::Ordering::SeqCst)
+    }
+    #[cfg(not(unix))]
+    {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn send(addr: SocketAddr, lines: &[&str], expect: usize) -> Vec<Json> {
+        let mut s = TcpStream::connect(addr).expect("connect");
+        for l in lines {
+            writeln!(s, "{l}").unwrap();
+        }
+        let mut out = Vec::new();
+        let mut r = BufReader::new(s.try_clone().unwrap());
+        let mut buf = String::new();
+        while out.len() < expect {
+            buf.clear();
+            if r.read_line(&mut buf).unwrap() == 0 {
+                break;
+            }
+            out.push(Json::parse(buf.trim()).unwrap_or_else(|e| panic!("`{buf}`: {e}")));
+        }
+        out
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_clean_shutdown() {
+        let h = spawn(
+            "127.0.0.1:0",
+            ServeConfig {
+                jobs: 1,
+                cache_entries: 8,
+            },
+            2,
+        )
+        .unwrap();
+        let addr = h.addr();
+        let events = send(addr, &[r#"{"op":"stats","id":1}"#], 1);
+        assert_eq!(events[0].get("event").and_then(|j| j.as_str()), Some("result"));
+        assert_eq!(events[0].get("id").and_then(|j| j.as_u64()), Some(1));
+        // `shutdown` answers, then the daemon exits on its own
+        let events = send(addr, &[r#"{"op":"shutdown","id":2}"#], 1);
+        assert_eq!(events[0].get("event").and_then(|j| j.as_str()), Some("result"));
+        h.join();
+        assert!(TcpStream::connect(addr).is_err(), "listener must be gone");
+    }
+}

@@ -1,0 +1,768 @@
+//! Transport-agnostic request dispatch: one line in, event lines out.
+//!
+//! [`handle_line`] is the whole daemon minus the socket: it parses a
+//! request, lowers the kernel spec exactly like the CLI
+//! (registry name via [`benchmarks::lookup`], inline `.knl` text via
+//! [`frontend::parse_kernel`]), consults the [`WarmCache`], runs the op,
+//! and hands every response line to the caller's `emit` closure. The TCP
+//! server ([`super::server`]) feeds it socket lines; the test suites feed
+//! it strings directly — both exercise the identical code path.
+//!
+//! Solve requests get the full cache treatment (DESIGN.md §11):
+//!
+//! 1. exact fingerprint + (device, evaluator, cap, fine, topk) hits the
+//!    solve cache → the stored result is replayed bit-identically,
+//!    `cache: "hit"`;
+//! 2. on a miss, the bound model + compiled tape are reused from the
+//!    model cache when any same-fingerprint kernel built them before;
+//! 3. the warm index is consulted for a same-shape (warm-fingerprint)
+//!    prior solve; its designs seed [`nlp::solve_jobs_seeded`] and the
+//!    response reports `cache: "warm"`, else `"miss"`.
+//!
+//! `emit --design_from solve` routes through the same path, so repeated
+//! emissions of a cached kernel are instant and attributed.
+
+use super::cache::{SolveKey, WarmCache};
+use super::fingerprint::fingerprint;
+use super::protocol::{self, Request};
+use crate::benchmarks::{self, Size};
+use crate::engine::{Evaluator, Explorer};
+use crate::frontend;
+use crate::hls::Device;
+use crate::ir::{DType, Kernel, LoopId};
+use crate::model::sym::{BoundModel, PartialDesign};
+use crate::nlp::{self, BatchEvaluator, NlpProblem, SolveResult};
+use crate::poly::Analysis;
+use crate::pragma::Design;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Daemon-wide knobs (CLI: `serve --jobs N --cache-entries K`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Default NLP-solver worker-team size per request (a request's own
+    /// `jobs` field overrides; results are bit-identical either way).
+    pub jobs: usize,
+    /// LRU capacity of each cache map; 0 disables caching.
+    pub cache_entries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            jobs: nlp::default_jobs(),
+            cache_entries: 64,
+        }
+    }
+}
+
+/// Number of log₂ latency buckets tracked per op (bucket *i* counts
+/// requests that took `[2^i, 2^(i+1))` milliseconds; the last bucket is
+/// open-ended).
+pub const LAT_BUCKETS: usize = 16;
+
+#[derive(Clone, Copy, Default)]
+struct OpRecord {
+    count: u64,
+    errors: u64,
+    lat: [u64; LAT_BUCKETS],
+}
+
+/// Shared daemon state: config, warm cache, per-op counters, queue
+/// depth, and the shutdown latch. One instance per daemon, shared by
+/// every connection.
+pub struct ServeState {
+    cfg: ServeConfig,
+    cache: Mutex<WarmCache>,
+    ops: Mutex<BTreeMap<String, OpRecord>>,
+    queue_depth: AtomicUsize,
+    shutdown: AtomicBool,
+    started: Instant,
+}
+
+impl ServeState {
+    /// Fresh daemon state.
+    pub fn new(cfg: ServeConfig) -> ServeState {
+        ServeState {
+            cache: Mutex::new(WarmCache::new(cfg.cache_entries)),
+            cfg,
+            ops: Mutex::new(BTreeMap::new()),
+            queue_depth: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            started: Instant::now(),
+        }
+    }
+
+    /// Latch the shutdown flag (idempotent; `shutdown` op or SIGTERM).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether shutdown has been requested.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// A request entered the work queue (server accounting).
+    pub fn queue_enter(&self) {
+        self.queue_depth.fetch_add(1, Ordering::SeqCst);
+    }
+
+    /// A request left the work queue.
+    pub fn queue_exit(&self) {
+        self.queue_depth.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    fn record(&self, op: &str, elapsed: Duration, ok: bool) {
+        let ms = elapsed.as_millis() as u64;
+        let idx = (u64::BITS - ms.clamp(1, 1 << (LAT_BUCKETS - 1)).leading_zeros() - 1) as usize;
+        let mut ops = self.ops.lock().unwrap();
+        let rec = ops.entry(op.to_string()).or_default();
+        rec.count += 1;
+        if !ok {
+            rec.errors += 1;
+        }
+        rec.lat[idx] += 1;
+    }
+}
+
+/// What the connection loop should do after a handled line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Control {
+    /// Keep reading requests.
+    Continue,
+    /// The client asked the daemon to stop: close and shut down.
+    Shutdown,
+}
+
+/// A failed request: a one-line message, plus the frontend's rendered
+/// caret diagnostic when the failure was a `.knl` parse error.
+struct Fail {
+    msg: String,
+    diagnostic: Option<String>,
+}
+
+impl From<String> for Fail {
+    fn from(msg: String) -> Fail {
+        Fail {
+            msg,
+            diagnostic: None,
+        }
+    }
+}
+
+impl From<anyhow::Error> for Fail {
+    fn from(e: anyhow::Error) -> Fail {
+        Fail {
+            msg: format!("{e:#}"),
+            diagnostic: None,
+        }
+    }
+}
+
+/// Handle one request line, emitting zero or more progress lines and
+/// exactly one terminal line through `emit` (blank input emits nothing).
+/// Every line is a complete JSON object without trailing newline.
+pub fn handle_line(state: &ServeState, line: &str, emit: &mut dyn FnMut(&str)) -> Control {
+    let line = line.trim();
+    if line.is_empty() {
+        return Control::Continue;
+    }
+    let req = match protocol::parse_request(line) {
+        Ok(r) => r,
+        Err(msg) => {
+            emit(&protocol::error_line(&None, &msg, None));
+            return Control::Continue;
+        }
+    };
+    let t0 = Instant::now();
+    let out = dispatch(state, &req, emit);
+    let ok = out.is_ok();
+    state.record(&req.op, t0.elapsed(), ok);
+    match out {
+        Ok((cache, data)) => emit(&protocol::result_line(&req.id, &req.op, cache, data)),
+        Err(f) => emit(&protocol::error_line(&req.id, &f.msg, f.diagnostic.as_deref())),
+    }
+    if ok && req.op == "shutdown" {
+        state.request_shutdown();
+        Control::Shutdown
+    } else {
+        Control::Continue
+    }
+}
+
+fn dispatch(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+) -> Result<(Option<&'static str>, Json), Fail> {
+    match req.op.as_str() {
+        "solve" => op_solve(state, req, emit),
+        "dse" => op_dse(state, req, emit),
+        "bound" => op_bound(req),
+        "emit" => op_emit(state, req, emit),
+        "gen" => op_gen(req),
+        "stats" => Ok((None, op_stats(state))),
+        "shutdown" => {
+            let mut data = Json::obj();
+            data.set("stopping", true);
+            Ok((None, data))
+        }
+        other => Err(format!(
+            "unknown op `{other}` (want solve|dse|bound|emit|gen|stats|shutdown)"
+        )
+        .into()),
+    }
+}
+
+/// Kernel resolution, mirroring the CLI: inline `knl` source text wins
+/// (sizes live in the text), else `kernel` names a registry benchmark at
+/// `size`/`dtype`.
+fn resolve_kernel(req: &Request) -> Result<Kernel, Fail> {
+    if let Some(text) = req.str_opt("knl")? {
+        return frontend::parse_kernel(&text, "<request>").map_err(|e| Fail {
+            msg: format!("parsing inline kernel: {}", e.msg),
+            diagnostic: Some(e.to_string()),
+        });
+    }
+    let name = req.str_opt("kernel")?.ok_or_else(|| {
+        String::from("request needs \"kernel\" (benchmark name) or \"knl\" (inline .knl source)")
+    })?;
+    let size = match req.str_opt("size")? {
+        None => Size::Medium,
+        Some(s) => Size::parse(&s).ok_or_else(|| format!("bad \"size\" `{s}` (want S|M|L)"))?,
+    };
+    let dtype = match req.str_opt("dtype")? {
+        None => DType::F32,
+        Some(s) => {
+            DType::from_name(&s).ok_or_else(|| format!("bad \"dtype\" `{s}` (want f32|f64)"))?
+        }
+    };
+    Ok(benchmarks::lookup(&name, size, dtype)?)
+}
+
+fn resolve_loop(k: &Kernel, tok: &str) -> Result<LoopId, Fail> {
+    for i in 0..k.n_loops() {
+        let l = LoopId(i as u32);
+        if k.loop_name(l) == tok || format!("L{i}") == tok || i.to_string() == tok {
+            return Ok(l);
+        }
+    }
+    Err(format!(
+        "unknown loop `{tok}` (loops: {})",
+        (0..k.n_loops())
+            .map(|i| k.loop_name(LoopId(i as u32)).to_string())
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+    .into())
+}
+
+fn evaluator_tag(req: &Request) -> Result<String, Fail> {
+    let tag = req.str_opt("evaluator")?.unwrap_or_else(|| "rust".into());
+    match tag.as_str() {
+        "rust" | "sym" => Ok(tag),
+        other => Err(format!("bad \"evaluator\" `{other}` (want rust|sym)").into()),
+    }
+}
+
+fn solver_evaluator(tag: &str) -> Box<dyn BatchEvaluator> {
+    match tag {
+        "sym" => Box::new(nlp::SymbolicEvaluator),
+        _ => Box::new(nlp::RustFeatureEvaluator),
+    }
+}
+
+/// The cached solve pipeline shared by `solve` and `emit --design_from
+/// solve`: exact-key replay, model reuse, warm-start seeding (module
+/// docs spell out the order).
+fn run_solve(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+) -> Result<(&'static str, Arc<SolveResult>), Fail> {
+    let cap = req.u64_opt("cap")?.unwrap_or(u64::MAX);
+    let fine = req.bool_opt("fine")?.unwrap_or(false);
+    let topk = req.u64_opt("topk")?.unwrap_or(3).clamp(1, 64) as usize;
+    let jobs = match req.u64_opt("jobs")? {
+        Some(0) => return Err(String::from("\"jobs\" must be >= 1 (1 = serial path)").into()),
+        Some(n) => n as usize,
+        None => state.cfg.jobs,
+    };
+    let timeout_s = req.f64_opt("timeout_s")?.unwrap_or(30.0);
+    let eval_tag = evaluator_tag(req)?;
+
+    let fp = fingerprint(k);
+    let key = SolveKey {
+        kernel_fp: fp.exact,
+        device: dev.name.to_string(),
+        evaluator: eval_tag.clone(),
+        cap,
+        fine,
+        topk,
+    };
+    if let Some(hit) = state.cache.lock().unwrap().lookup_solve(&key) {
+        return Ok(("hit", hit));
+    }
+
+    // miss: reuse (or build and admit) the bound model + compiled tape
+    let cached_model = state.cache.lock().unwrap().lookup_model(fp.exact, dev.name);
+    let model_cached = cached_model.is_some();
+    let (bound, compiled) = match cached_model {
+        Some(pair) => pair,
+        None => {
+            let bound = Arc::new(BoundModel::build(k, a, dev));
+            let compiled = Arc::new(bound.compile());
+            state.cache.lock().unwrap().insert_model(
+                fp.exact,
+                dev.name,
+                bound.clone(),
+                compiled.clone(),
+            );
+            (bound, compiled)
+        }
+    };
+    let seeds = {
+        let mut cache = state.cache.lock().unwrap();
+        let seeds = cache.warm_seeds(fp.warm, dev.name).unwrap_or_default();
+        cache.note_dispatch(!seeds.is_empty());
+        seeds
+    };
+    emit(&protocol::progress_line(
+        &req.id,
+        &req.op,
+        &format!(
+            "model {} | {} warm seed(s) | solving jobs={jobs}",
+            if model_cached { "cached" } else { "built" },
+            seeds.len()
+        ),
+    ));
+
+    let problem = NlpProblem::with_model(k, a, dev, cap, fine, bound, compiled);
+    let eval = solver_evaluator(&eval_tag);
+    let result = Arc::new(nlp::solve_jobs_seeded(
+        &problem,
+        timeout_s,
+        topk,
+        eval.as_ref(),
+        jobs,
+        &seeds,
+    ));
+    let tag = if seeds.is_empty() { "miss" } else { "warm" };
+    state
+        .cache
+        .lock()
+        .unwrap()
+        .insert_solve(key, fp.warm, &result);
+    Ok((tag, result))
+}
+
+fn design_json(k: &Kernel, d: &Design) -> Json {
+    let mut pragmas = Json::Arr(vec![]);
+    for (i, p) in d.pragmas.iter().enumerate() {
+        let mut o = Json::obj();
+        o.set("loop", k.loop_name(LoopId(i as u32)))
+            .set("uf", p.uf)
+            .set("tile", p.tile)
+            .set("pipeline", p.pipeline);
+        pragmas.push(o);
+    }
+    pragmas
+}
+
+fn solve_json(k: &Kernel, a: &Analysis, dev: &Device, r: &SolveResult) -> Json {
+    let mut designs = Json::Arr(vec![]);
+    for (d, obj) in &r.designs {
+        let mut o = Json::obj();
+        o.set("objective_cycles", *obj)
+            .set("gflops", a.gflops(*obj, dev.freq_hz))
+            .set("pragmas", design_json(k, d));
+        designs.push(o);
+    }
+    let mut data = Json::obj();
+    data.set("kernel", k.name.as_str())
+        .set("lower_bound", r.lower_bound)
+        .set("optimal", r.optimal)
+        .set("solve_time_s", r.solve_time_s)
+        .set("jobs", r.jobs)
+        .set("nodes", r.stats.nodes)
+        .set("scored", r.stats.candidates_scored)
+        .set("designs", designs);
+    data
+}
+
+fn op_solve(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+) -> Result<(Option<&'static str>, Json), Fail> {
+    let k = resolve_kernel(req)?;
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let (tag, r) = run_solve(state, req, emit, &k, &a, &dev)?;
+    Ok((Some(tag), solve_json(&k, &a, &dev, &r)))
+}
+
+fn op_dse(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+) -> Result<(Option<&'static str>, Json), Fail> {
+    let k = resolve_kernel(req)?;
+    let engine = req.str_opt("engine")?.unwrap_or_else(|| "nlpdse".into());
+    let eval = match evaluator_tag(req)?.as_str() {
+        "sym" => Evaluator::sym(),
+        _ => Evaluator::rust(),
+    };
+    let jobs = match req.u64_opt("jobs")? {
+        Some(0) => return Err(String::from("\"jobs\" must be >= 1").into()),
+        Some(n) => n as usize,
+        None => state.cfg.jobs,
+    };
+    let dse_cfg = crate::dse::DseConfig {
+        prune_bound: req.bool_opt("prune_bound")?.unwrap_or(false),
+        jobs,
+        ..Default::default()
+    };
+    emit(&protocol::progress_line(
+        &req.id,
+        &req.op,
+        &format!("exploring with engine `{engine}`"),
+    ));
+    let explorer = Explorer::custom(k)
+        .evaluator(eval)
+        .dse_config(dse_cfg)
+        .engine(&engine)?;
+    let o = explorer.run()?;
+    let k = explorer.kernel_ref();
+    let mut data = Json::obj();
+    data.set("kernel", o.kernel.as_str())
+        .set("engine", o.engine.as_str())
+        .set("best_gflops", o.best_gflops)
+        .set("wall_minutes", o.wall_minutes)
+        .set("synth_calls", o.synth_calls)
+        .set("summary", o.summary().as_str());
+    if let Some(lb) = o.lower_bound {
+        data.set("lower_bound_cycles", lb);
+    }
+    match &o.best {
+        Some((d, cycles)) => {
+            data.set("best_cycles", *cycles)
+                .set("best_pragmas", design_json(k, d));
+        }
+        None => {
+            data.set("best_pragmas", Json::Null);
+        }
+    }
+    Ok((None, data))
+}
+
+fn op_bound(req: &Request) -> Result<(Option<&'static str>, Json), Fail> {
+    let k = resolve_kernel(req)?;
+    let ex = Explorer::custom(k);
+    let k = ex.kernel_ref();
+    let mut partial = PartialDesign::free(k.n_loops());
+    if let Some(cap) = req.u64_opt("cap")? {
+        partial = partial.with_uf_cap(cap);
+    }
+    for (l, uf) in req.assign_opt("assign")? {
+        partial.assign_uf(resolve_loop(k, &l)?, uf);
+    }
+    for tok in req.list_opt("pipeline")? {
+        partial.assign_pipeline(resolve_loop(k, &tok)?, true);
+    }
+    let lb = ex.lower_bound(&partial);
+    let mut data = Json::obj();
+    data.set("kernel", k.name.as_str())
+        .set("lower_bound_cycles", lb)
+        .set("gflops_ceiling", ex.analysis().gflops(lb, ex.device_ref().freq_hz))
+        .set("free_slots", partial.free_slots());
+    Ok((None, data))
+}
+
+fn op_emit(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+) -> Result<(Option<&'static str>, Json), Fail> {
+    let k = resolve_kernel(req)?;
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let dialect = match req.str_opt("dialect")? {
+        None => crate::codegen::Dialect::Merlin,
+        Some(s) => crate::codegen::Dialect::parse(&s)
+            .ok_or_else(|| format!("bad \"dialect\" `{s}` (want merlin|vitis)"))?,
+    };
+    let realized = req.bool_opt("realized")?.unwrap_or(false);
+
+    let assigns = req.assign_opt("assign")?;
+    let tiles = req.assign_opt("tile")?;
+    let pipes = req.list_opt("pipeline")?;
+    let manual = !assigns.is_empty() || !tiles.is_empty() || !pipes.is_empty();
+    let from = req.str_opt("design_from")?;
+    if manual && from.is_some() {
+        return Err(String::from(
+            "\"design_from\" conflicts with \"assign\"/\"pipeline\"/\"tile\" \
+             (pick one design source)",
+        )
+        .into());
+    }
+
+    let (cache, design) = if manual {
+        let mut d = Design::empty(&k);
+        for (l, uf) in assigns {
+            d.get_mut(resolve_loop(&k, &l)?).uf = uf;
+        }
+        for (l, t) in tiles {
+            d.get_mut(resolve_loop(&k, &l)?).tile = t;
+        }
+        for tok in pipes {
+            d.get_mut(resolve_loop(&k, &tok)?).pipeline = true;
+        }
+        (None, d)
+    } else {
+        match from.as_deref().unwrap_or("solve") {
+            "empty" => (None, Design::empty(&k)),
+            "solve" => {
+                let (tag, r) = run_solve(state, req, emit, &k, &a, &dev)?;
+                let d = r.best().map(|(d, _)| d.clone()).ok_or_else(|| {
+                    format!(
+                        "solver found no feasible design for `{}` (try a larger \"cap\")",
+                        k.name
+                    )
+                })?;
+                (Some(tag), d)
+            }
+            other => {
+                return Err(format!(
+                    "bad \"design_from\" `{other}` (want solve|empty, \
+                     or use \"assign\"/\"pipeline\"/\"tile\")"
+                )
+                .into())
+            }
+        }
+    };
+
+    let code = crate::codegen::emit(
+        &k,
+        &a,
+        &dev,
+        &design,
+        &crate::codegen::EmitConfig { dialect, realized },
+    );
+    let mut data = Json::obj();
+    data.set("kernel", k.name.as_str())
+        .set("dialect", dialect.name())
+        .set("pragmas", design_json(&k, &design))
+        .set("code", code);
+    Ok((cache, data))
+}
+
+/// Per-request corpus cap: `gen` returns kernels inline, so a runaway
+/// `count` would balloon one response line.
+const MAX_GEN_COUNT: u64 = 32;
+
+fn op_gen(req: &Request) -> Result<(Option<&'static str>, Json), Fail> {
+    let seed = req.u64_opt("seed")?.unwrap_or(0);
+    let count = req.u64_opt("count")?.unwrap_or(1);
+    if count == 0 || count > MAX_GEN_COUNT {
+        return Err(format!("\"count\" must be 1..={MAX_GEN_COUNT}").into());
+    }
+    if seed.checked_add(count - 1).is_none() {
+        return Err(format!("\"seed\" {seed} + \"count\" {count} overflows the seed range").into());
+    }
+    let sampled = req.bool_opt("sampled")?.unwrap_or(false);
+    let mut kernels = Json::Arr(vec![]);
+    for i in 0..count {
+        let s = seed + i;
+        let mut cfg = if sampled {
+            frontend::GenConfig::sampled(s)
+        } else {
+            frontend::GenConfig::with_seed(s)
+        };
+        if let Some(v) = req.u64_opt("depth")? {
+            cfg.depth = v as usize;
+        }
+        if let Some(v) = req.u64_opt("width")? {
+            cfg.width = v as usize;
+        }
+        if let Some(v) = req.u64_opt("nests")? {
+            cfg.nests = v as usize;
+        }
+        if let Some(v) = req.u64_opt("arrays")? {
+            cfg.arrays = v as usize;
+        }
+        if let Some(v) = req.u64_opt("max_trip")? {
+            cfg.max_trip = v;
+        }
+        if let Some(s) = req.str_opt("dtype")? {
+            cfg.dtype = DType::from_name(&s)
+                .ok_or_else(|| format!("bad \"dtype\" `{s}` (want f32|f64)"))?;
+        }
+        let k = frontend::generate(&cfg);
+        let mut o = Json::obj();
+        o.set("seed", s)
+            .set("name", k.name.as_str())
+            .set("loops", k.n_loops())
+            .set("stmts", k.n_stmts())
+            .set("knl", frontend::pretty::print(&k));
+        kernels.push(o);
+    }
+    let mut data = Json::obj();
+    data.set("count", count).set("kernels", kernels);
+    Ok((None, data))
+}
+
+fn op_stats(state: &ServeState) -> Json {
+    let mut data = Json::obj();
+    data.set("uptime_s", state.started.elapsed().as_secs_f64())
+        .set("queue_depth", state.queue_depth.load(Ordering::SeqCst))
+        .set("jobs", state.cfg.jobs)
+        .set("cache_entries", state.cfg.cache_entries);
+
+    let cache = state.cache.lock().unwrap();
+    let s = cache.stats;
+    let (solves, models, warm) = cache.sizes();
+    drop(cache);
+    let mut cj = Json::obj();
+    cj.set("hits", s.hits)
+        .set("misses", s.misses)
+        .set("warm", s.warm)
+        .set("model_hits", s.model_hits)
+        .set("evictions", s.evictions)
+        .set("hit_rate", s.hit_rate());
+    let mut entries = Json::obj();
+    entries
+        .set("solves", solves)
+        .set("models", models)
+        .set("warm", warm);
+    cj.set("entries", entries);
+    data.set("cache", cj);
+
+    let ops = state.ops.lock().unwrap();
+    let mut oj = Json::obj();
+    for (op, rec) in ops.iter() {
+        let mut r = Json::obj();
+        r.set("count", rec.count).set("errors", rec.errors).set(
+            "latency_ms_log2",
+            rec.lat.iter().copied().collect::<Vec<u64>>(),
+        );
+        oj.set(op.as_str(), r);
+    }
+    data.set("ops", oj);
+    data
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Collect every emitted line for one request.
+    fn call(state: &ServeState, line: &str) -> (Vec<Json>, Control) {
+        let mut out = Vec::new();
+        let ctl = handle_line(state, line, &mut |l| {
+            out.push(Json::parse(l).unwrap_or_else(|e| panic!("bad line `{l}`: {e}")))
+        });
+        (out, ctl)
+    }
+
+    fn terminal(lines: &[Json]) -> &Json {
+        lines.last().expect("at least one line")
+    }
+
+    #[test]
+    fn solve_hits_the_cache_on_the_second_identical_request() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let req = r#"{"op":"solve","kernel":"gemm","size":"S","cap":16,"id":1}"#;
+        let (first, _) = call(&state, req);
+        let r1 = terminal(&first);
+        assert_eq!(r1.get("event").and_then(|j| j.as_str()), Some("result"));
+        assert_eq!(r1.get("cache").and_then(|j| j.as_str()), Some("miss"));
+        let (second, _) = call(&state, req);
+        let r2 = terminal(&second);
+        assert_eq!(r2.get("cache").and_then(|j| j.as_str()), Some("hit"));
+        assert_eq!(
+            r1.get("data").unwrap().to_line(),
+            r2.get("data").unwrap().to_line(),
+            "cache replay must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn inline_parse_errors_carry_the_caret_diagnostic() {
+        let state = ServeState::new(ServeConfig::default());
+        let bad = "kernel \\\"b\\\" f32\\narray a[4] out\\nfor i in 0 .. 4 {\\n  stmt s writes a[zz];\\n}\\n";
+        let (lines, _) = call(
+            &state,
+            &format!(r#"{{"op":"solve","knl":"{bad}","id":"x"}}"#),
+        );
+        let e = terminal(&lines);
+        assert_eq!(e.get("event").and_then(|j| j.as_str()), Some("error"));
+        assert_eq!(e.get("id").and_then(|j| j.as_str()), Some("x"));
+        let diag = e.get("diagnostic").and_then(|j| j.as_str()).expect("diagnostic");
+        assert!(diag.contains("<request>:4:"), "{diag}");
+        assert!(diag.contains('^'), "{diag}");
+    }
+
+    #[test]
+    fn unknown_ops_and_bad_lines_stay_structured() {
+        let state = ServeState::new(ServeConfig::default());
+        let (lines, ctl) = call(&state, r#"{"op":"frobnicate"}"#);
+        assert_eq!(ctl, Control::Continue);
+        let msg = terminal(&lines).get("message").and_then(|j| j.as_str()).unwrap();
+        assert!(msg.contains("unknown op"), "{msg}");
+        let (lines, _) = call(&state, "}{ not json");
+        let msg = terminal(&lines).get("message").and_then(|j| j.as_str()).unwrap();
+        assert!(msg.contains("bad request JSON"), "{msg}");
+        // blank lines are keepalive noise, not errors
+        let (lines, _) = call(&state, "   ");
+        assert!(lines.is_empty());
+    }
+
+    #[test]
+    fn stats_reports_ops_cache_and_histograms() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let req = r#"{"op":"solve","kernel":"atax","size":"S","cap":8}"#;
+        call(&state, req);
+        call(&state, req);
+        let (lines, _) = call(&state, r#"{"op":"stats"}"#);
+        let data = terminal(&lines).get("data").unwrap().clone();
+        assert_eq!(
+            data.get("cache").unwrap().get("hits").and_then(|j| j.as_u64()),
+            Some(1)
+        );
+        assert!(
+            data.get("cache").unwrap().get("hit_rate").and_then(|j| j.as_f64()).unwrap() > 0.0
+        );
+        let solve = data.get("ops").unwrap().get("solve").expect("solve op stats");
+        assert_eq!(solve.get("count").and_then(|j| j.as_u64()), Some(2));
+        let histo = solve.get("latency_ms_log2").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(histo.len(), LAT_BUCKETS);
+        let total: u64 = histo.iter().filter_map(|j| j.as_u64()).sum();
+        assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn shutdown_op_latches_and_reports() {
+        let state = ServeState::new(ServeConfig::default());
+        assert!(!state.shutdown_requested());
+        let (lines, ctl) = call(&state, r#"{"op":"shutdown","id":9}"#);
+        assert_eq!(ctl, Control::Shutdown);
+        assert!(state.shutdown_requested());
+        let r = terminal(&lines);
+        assert_eq!(r.get("event").and_then(|j| j.as_str()), Some("result"));
+        assert_eq!(r.get("id").and_then(|j| j.as_u64()), Some(9));
+    }
+}

@@ -1,8 +1,12 @@
-//! Minimal JSON value tree + emitter (serde is unavailable offline).
+//! Minimal JSON value tree + emitter + parser (serde is unavailable
+//! offline).
 //!
-//! Only what the result dumps and report tooling need: construction,
-//! pretty-printing with stable key order, and string escaping. No parser —
-//! nothing in the pipeline reads JSON back (artifacts are HLO text).
+//! Construction, pretty- and compact printing with stable key order,
+//! string escaping, and — since the `serve` daemon speaks line-delimited
+//! JSON both ways — a small recursive-descent parser ([`Json::parse`])
+//! with typed accessors. The parser accepts standard JSON (RFC 8259):
+//! it is not streaming (the serve protocol frames one value per line)
+//! and rejects trailing garbage.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -55,6 +59,111 @@ impl Json {
         let mut out = String::new();
         self.write(&mut out, 0);
         out
+    }
+
+    /// Render without any whitespace — one line, the serve protocol's
+    /// wire framing (newline-delimited JSON requires the value itself to
+    /// contain no raw newlines; string escaping already guarantees that).
+    pub fn to_line(&self) -> String {
+        let mut out = String::new();
+        self.write_compact(&mut out);
+        out
+    }
+
+    fn write_compact(&self, out: &mut String) {
+        match self {
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write_compact(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out, 0);
+                    out.push(':');
+                    v.write_compact(out);
+                }
+                out.push('}');
+            }
+            // scalars render identically in both modes
+            other => other.write(out, 0),
+        }
+    }
+
+    // --- accessors (the serve protocol's request-field reads) -----------
+
+    /// Object field lookup (`None` on non-objects and missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// The string payload, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The numeric payload as an unsigned integer (rejects fractions and
+    /// negatives rather than silently truncating a request field).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    /// The boolean payload, if this is a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The element list, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    // --- parser ---------------------------------------------------------
+
+    /// Parse one JSON value from `src`. The whole input must be consumed
+    /// (modulo surrounding whitespace) — trailing garbage is an error,
+    /// so a mangled protocol line can't half-parse silently.
+    pub fn parse(src: &str) -> Result<Json, String> {
+        let b = src.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            return Err(format!("trailing characters at byte {pos}"));
+        }
+        Ok(v)
     }
 
     fn write(&self, out: &mut String, indent: usize) {
@@ -127,6 +236,170 @@ impl Json {
                 out.push_str(&pad);
                 out.push('}');
             }
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, c: u8) -> Result<(), String> {
+    if *pos < b.len() && b[*pos] == c {
+        *pos += 1;
+        Ok(())
+    } else {
+        Err(format!(
+            "expected `{}` at byte {} (found {})",
+            c as char,
+            *pos,
+            b.get(*pos).map(|&c| (c as char).to_string()).unwrap_or_else(|| "end of input".into())
+        ))
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => Err("unexpected end of input".into()),
+        Some(b'{') => parse_obj(b, pos),
+        Some(b'[') => parse_arr(b, pos),
+        Some(b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(b't') => parse_lit(b, pos, "true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, pos, "false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, pos, "null", Json::Null),
+        Some(_) => parse_num(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json, String> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        Err(format!("bad literal at byte {} (expected `{word}`)", *pos))
+    }
+}
+
+fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-') {
+        *pos += 1;
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).map_err(|_| "non-utf8 number".to_string())?;
+    text.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("bad number `{text}` at byte {start}"))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String, String> {
+    expect(b, pos, b'"')?;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                match b.get(*pos) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*pos + 1..*pos + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .ok_or_else(|| "truncated \\u escape".to_string())?;
+                        let cp = u32::from_str_radix(hex, 16)
+                            .map_err(|_| format!("bad \\u escape `{hex}`"))?;
+                        // surrogate pairs are not reassembled (the emitter
+                        // never writes them; BMP codepoints cover the
+                        // protocol's diagnostics); lone surrogates map to
+                        // the replacement character instead of erroring
+                        out.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
+                        *pos += 4;
+                    }
+                    other => {
+                        return Err(format!("bad escape `\\{:?}`", other.map(|&c| c as char)))
+                    }
+                }
+                *pos += 1;
+            }
+            Some(_) => {
+                // consume one UTF-8 scalar (multi-byte sequences pass
+                // through unmodified — the source is a &str, so they are
+                // valid)
+                let s = std::str::from_utf8(&b[*pos..]).map_err(|_| "non-utf8".to_string())?;
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'[')?;
+    let mut v = Vec::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b']') {
+        *pos += 1;
+        return Ok(Json::Arr(v));
+    }
+    loop {
+        v.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(v));
+            }
+            _ => return Err(format!("expected `,` or `]` at byte {}", *pos)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], pos: &mut usize) -> Result<Json, String> {
+    expect(b, pos, b'{')?;
+    let mut m = BTreeMap::new();
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b'}') {
+        *pos += 1;
+        return Ok(Json::Obj(m));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        m.insert(key, val);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => {
+                *pos += 1;
+            }
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(m));
+            }
+            _ => return Err(format!("expected `,` or `}}` at byte {}", *pos)),
         }
     }
 }
@@ -209,5 +482,51 @@ mod tests {
     #[test]
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::INFINITY).to_string_pretty(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_pretty_and_compact() {
+        let mut o = Json::obj();
+        o.set("op", "solve")
+            .set("kernel", "2mm")
+            .set("cap", 512u64)
+            .set("fine", false)
+            .set("t", 1.5);
+        let mut arr = Json::Arr(vec![]);
+        arr.push(1u64).push(Json::Null).push("x");
+        o.set("steps", arr);
+        for text in [o.to_string_pretty(), o.to_line()] {
+            assert_eq!(Json::parse(&text).unwrap(), o, "{text}");
+        }
+        assert!(!o.to_line().contains('\n'), "line framing must stay one line");
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"a": 3, "b": "x", "c": true, "d": [1, 2], "e": -2.5}"#).unwrap();
+        assert_eq!(j.get("a").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("b").and_then(Json::as_str), Some("x"));
+        assert_eq!(j.get("c").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("d").and_then(Json::as_arr).map(<[Json]>::len), Some(2));
+        assert_eq!(j.get("e").and_then(Json::as_f64), Some(-2.5));
+        assert_eq!(j.get("e").and_then(Json::as_u64), None, "negative is not u64");
+        assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn parse_escapes_and_unicode() {
+        let j = Json::parse(r#""a\"b\\c\ndAé""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\ndAé"));
+        // escaping survives a full round-trip (the caret diagnostics the
+        // serve error payloads carry are multi-line strings)
+        let s = Json::Str("line1\nline2 | ^^\n".into());
+        assert_eq!(Json::parse(&s.to_line()).unwrap(), s);
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1 2", "{\"a\":1} x", "\"unterminated"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should fail");
+        }
     }
 }

@@ -1,0 +1,187 @@
+//! Property suite for the serve cache's structural fingerprints
+//! (ISSUE 6 satellite), over the seeded random-kernel generator:
+//!
+//! * **soundness of sharing** — kernels that are structurally identical
+//!   (`structural_diff ≡ None`: a pretty-print → parse round-trip) or
+//!   differ *only in names* (renamed kernel + renamed iterators) map to
+//!   the same exact and warm keys;
+//! * **separation** — deterministic structural mutations move the keys:
+//!   flipping the dtype or shrinking a loop bound changes the exact key
+//!   while warm-matching (the warm-start regime), and duplicating a
+//!   statement changes both keys.
+//!
+//! `FUZZ_KERNELS` / `FUZZ_SMOKE=1` bound the corpus like the frontend
+//! fuzz suite; failures panic with the seed and the `.knl` text.
+
+use nlp_dse::frontend::{self, GenConfig};
+use nlp_dse::ir::Kernel;
+use nlp_dse::serve::fingerprint;
+use nlp_dse::util::env_usize;
+
+fn fuzz_n() -> usize {
+    let n = if std::env::var("FUZZ_SMOKE").as_deref() == Ok("1") {
+        env_usize("FUZZ_KERNELS", 16)
+    } else {
+        env_usize("FUZZ_KERNELS", 100)
+    };
+    n.max(1)
+}
+
+const BASE_SEED: u64 = 0xF1F0_2026;
+
+fn seeds(label: &str) -> Vec<u64> {
+    let n = fuzz_n() as u64;
+    let base: u64 = std::env::var("FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(BASE_SEED)
+        .min(u64::MAX - n);
+    eprintln!("[fuzz:{label}] {n} kernels, seeds {base}..={}", base + n - 1);
+    (base..base + n).collect()
+}
+
+fn fail(seed: u64, k: &Kernel, msg: &str) -> ! {
+    panic!(
+        "\n=== fingerprint property failure ===\n\
+         seed: {seed}\n\
+         replay: FUZZ_SEED={seed} FUZZ_KERNELS=1 cargo test --test property_fingerprint\n\
+         {msg}\n\
+         --- offending kernel (.knl) ---\n{}",
+        frontend::pretty::print(k)
+    )
+}
+
+fn reparse(seed: u64, k: &Kernel, text: &str, what: &str) -> Kernel {
+    frontend::parse_kernel(text, "<mutated>").unwrap_or_else(|e| {
+        fail(seed, k, &format!("{what}: mutated text failed to reparse:\n{e}\n--- mutated ---\n{text}"))
+    })
+}
+
+/// Rename every loop iterator `l<N>` to `q<N>_r`. Generator names are
+/// systematic (`l0`, `l1`, …), so replacing longest-first and mapping
+/// into an `l`-free namespace can never corrupt another identifier.
+fn rename_iterators(k: &Kernel, text: &str) -> String {
+    let mut names: Vec<String> = (0..k.n_loops())
+        .map(|i| k.loop_name(nlp_dse::ir::LoopId(i as u32)).to_string())
+        .collect();
+    names.sort_by_key(|n| std::cmp::Reverse(n.len()));
+    let mut out = text.to_string();
+    for n in &names {
+        out = out.replace(n.as_str(), &format!("q{}_r", &n[1..]));
+    }
+    out
+}
+
+#[test]
+fn prop_roundtrips_and_renames_share_the_key() {
+    for seed in seeds("fp-sound") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let fp = fingerprint(&k);
+        let text = frontend::pretty::print(&k);
+
+        // structural_diff ≡ None ⇒ same key
+        let k2 = reparse(seed, &k, &text, "roundtrip");
+        if let Some(d) = k.structural_diff(&k2) {
+            fail(seed, &k, &format!("round-trip diverged: {d}"));
+        }
+        if fingerprint(&k2) != fp {
+            fail(seed, &k, "round-trip changed the fingerprint");
+        }
+
+        // renamed kernel + renamed iterators: names differ, keys don't
+        let renamed = rename_iterators(&k, &text).replace(
+            &format!("\"{}\"", k.name),
+            "\"renamed-elsewhere\"",
+        );
+        let k3 = reparse(seed, &k, &renamed, "rename");
+        if k.structural_diff(&k3).is_none() {
+            fail(seed, &k, "rename produced no structural_diff (names should differ)");
+        }
+        if fingerprint(&k3) != fp {
+            fail(seed, &k, "renaming identifiers changed the fingerprint");
+        }
+    }
+}
+
+#[test]
+fn prop_structural_mutations_move_the_key() {
+    for seed in seeds("fp-separate") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let fp = fingerprint(&k);
+        let text = frontend::pretty::print(&k);
+
+        // dtype flip: a different solve problem (exact splits), same
+        // nest shape (warm matches)
+        let flipped = if text.contains("\" f32\n") {
+            text.replacen("\" f32\n", "\" f64\n", 1)
+        } else {
+            text.replacen("\" f64\n", "\" f32\n", 1)
+        };
+        let kd = reparse(seed, &k, &flipped, "dtype flip");
+        let fpd = fingerprint(&kd);
+        if fpd.exact == fp.exact {
+            fail(seed, &k, "dtype flip did not change the exact key");
+        }
+        if fpd.warm != fp.warm {
+            fail(seed, &k, "dtype flip changed the warm key (must be warm-invariant)");
+        }
+
+        // shrink the first constant top-level loop bound: new sizes,
+        // same shape — the warm-start resubmission regime
+        if let Some(shrunk) = shrink_first_bound(&text) {
+            let ks = reparse(seed, &k, &shrunk, "bound shrink");
+            let fps = fingerprint(&ks);
+            if fps.exact == fp.exact {
+                fail(seed, &k, "bound shrink did not change the exact key");
+            }
+            if fps.warm != fp.warm {
+                fail(seed, &k, "bound shrink changed the warm key (sizes are warm-invariant)");
+            }
+        }
+
+        // duplicate a statement: a different nest entirely — both split
+        let dup = duplicate_last_stmt(&text)
+            .unwrap_or_else(|| fail(seed, &k, "no stmt line found to duplicate"));
+        let kx = reparse(seed, &k, &dup, "stmt duplication");
+        let fpx = fingerprint(&kx);
+        if fpx.exact == fp.exact || fpx.warm == fp.warm {
+            fail(seed, &k, "statement duplication left a key unchanged");
+        }
+    }
+}
+
+/// Replace the first `for <it> in 0 .. <C> {` whose upper bound is a
+/// constant > 1 with `C - 1`. Returns `None` when no loop qualifies
+/// (e.g. every trip count is 1 or bounds are triangular).
+fn shrink_first_bound(text: &str) -> Option<String> {
+    for line in text.lines() {
+        let t = line.trim_start();
+        let Some(rest) = t.strip_prefix("for ") else { continue };
+        let Some((_, after)) = rest.split_once(" .. ") else { continue };
+        let Some(ub) = after.strip_suffix(" {") else { continue };
+        if let Ok(c) = ub.trim().parse::<u64>() {
+            if c > 1 {
+                let old = format!(" .. {c} {{");
+                let new = format!(" .. {} {{", c - 1);
+                return Some(text.replacen(&old, &new, 1));
+            }
+        }
+    }
+    None
+}
+
+/// Duplicate the last `stmt <name> …;` line under a fresh name, right
+/// after the original (same loop body, so the tree stays well-formed).
+fn duplicate_last_stmt(text: &str) -> Option<String> {
+    let lines: Vec<&str> = text.lines().collect();
+    let idx = lines
+        .iter()
+        .rposition(|l| l.trim_start().starts_with("stmt "))?;
+    let line = lines[idx];
+    let name = line.trim_start().strip_prefix("stmt ")?.split_whitespace().next()?;
+    let name = name.trim_end_matches(';');
+    let dup = line.replacen(&format!("stmt {name}"), &format!("stmt {name}_dup"), 1);
+    let mut out: Vec<String> = lines.iter().map(|s| s.to_string()).collect();
+    out.insert(idx + 1, dup);
+    Some(out.join("\n") + "\n")
+}

@@ -1,0 +1,208 @@
+//! End-to-end tests of the DSE-as-a-service daemon over real TCP
+//! sockets (ISSUE 6 satellite): solve/bound/emit round-trips, inline
+//! parse errors keeping the caret diagnostic inside the JSON error
+//! payload, concurrent clients, and the acceptance criterion — a
+//! repeated structurally-identical solve is answered from the cache
+//! bit-identically with `cache: "hit"`, and `stats` reports a nonzero
+//! hit rate.
+//!
+//! Each test spawns its own daemon on an ephemeral port
+//! (`127.0.0.1:0`), so the suite is parallel-safe and needs no free
+//! well-known port.
+
+use nlp_dse::serve::{spawn, ServeConfig, ServerHandle};
+use nlp_dse::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+fn daemon() -> ServerHandle {
+    spawn(
+        "127.0.0.1:0",
+        ServeConfig {
+            jobs: 1,
+            cache_entries: 16,
+        },
+        2,
+    )
+    .expect("spawn daemon")
+}
+
+/// One connection, one request line; collect events until the terminal
+/// `result`/`error` line arrives. Progress lines ride along in order.
+fn request(h: &ServerHandle, line: &str) -> Vec<Json> {
+    let mut s = TcpStream::connect(h.addr()).expect("connect");
+    writeln!(s, "{line}").unwrap();
+    read_events(&mut BufReader::new(s), 1)
+}
+
+/// Read events until `terminals` result/error lines have arrived.
+fn read_events(r: &mut impl BufRead, terminals: usize) -> Vec<Json> {
+    let mut out = Vec::new();
+    let mut seen = 0usize;
+    let mut buf = String::new();
+    while seen < terminals {
+        buf.clear();
+        if r.read_line(&mut buf).expect("read") == 0 {
+            panic!("connection closed after {seen}/{terminals} terminal events: {out:?}");
+        }
+        let j = Json::parse(buf.trim()).unwrap_or_else(|e| panic!("bad line `{buf}`: {e}"));
+        if matches!(
+            j.get("event").and_then(|x| x.as_str()),
+            Some("result") | Some("error")
+        ) {
+            seen += 1;
+        }
+        out.push(j);
+    }
+    out
+}
+
+fn terminal(events: &[Json]) -> &Json {
+    events.last().expect("at least one event")
+}
+
+#[test]
+fn solve_bound_and_emit_round_trip() {
+    let h = daemon();
+
+    let ev = request(&h, r#"{"op":"solve","kernel":"gemm","size":"S","cap":16,"id":1}"#);
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
+    assert_eq!(r.get("id").and_then(|x| x.as_u64()), Some(1));
+    assert_eq!(r.get("cache").and_then(|x| x.as_str()), Some("miss"));
+    let data = r.get("data").unwrap();
+    assert_eq!(data.get("optimal").and_then(|x| x.as_bool()), Some(true));
+    assert!(!data.get("designs").and_then(|x| x.as_arr()).unwrap().is_empty());
+    // the miss emitted a progress line before the result
+    assert!(ev
+        .iter()
+        .any(|e| e.get("event").and_then(|x| x.as_str()) == Some("progress")));
+
+    let ev = request(
+        &h,
+        r#"{"op":"bound","kernel":"gemm","size":"S","assign":{"i":4},"pipeline":["j1"],"id":2}"#,
+    );
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
+    let data = r.get("data").unwrap();
+    assert!(data.get("lower_bound_cycles").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    assert!(data.get("free_slots").and_then(|x| x.as_u64()).unwrap() > 0);
+
+    let ev = request(
+        &h,
+        r#"{"op":"emit","kernel":"gemm","size":"S","assign":{"k":8},"pipeline":["j1"],"id":3}"#,
+    );
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
+    let code = r.get("data").unwrap().get("code").and_then(|x| x.as_str()).unwrap();
+    assert!(code.contains("#pragma ACCEL"), "{code}");
+    assert!(code.contains("void kernel_gemm("), "{code}");
+
+    h.shutdown();
+    h.join();
+}
+
+#[test]
+fn malformed_inline_kernel_reports_the_caret_snippet_in_json() {
+    let h = daemon();
+    // line 4 of the inline text references an unknown identifier; the
+    // frontend's rendered caret diagnostic must survive into the error
+    // payload (the `\n`s below are JSON escapes inside the request line)
+    let bad = "kernel \\\"b\\\" f32\\narray a[4] out\\nfor i in 0 .. 4 {\\n  stmt s writes a[zz];\\n}\\n";
+    let ev = request(
+        &h,
+        &format!(r#"{{"op":"solve","knl":"{bad}","id":"e1"}}"#),
+    );
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("error"));
+    assert_eq!(r.get("id").and_then(|x| x.as_str()), Some("e1"));
+    let msg = r.get("message").and_then(|x| x.as_str()).unwrap();
+    assert!(msg.contains("parsing inline kernel"), "{msg}");
+    let diag = r.get("diagnostic").and_then(|x| x.as_str()).expect("diagnostic field");
+    assert!(diag.contains("<request>:4:"), "{diag}");
+    assert!(diag.contains("stmt s writes a[zz];"), "{diag}");
+    assert!(diag.contains('^'), "{diag}");
+    h.shutdown();
+    h.join();
+}
+
+#[test]
+fn concurrent_clients_each_get_their_answers() {
+    let h = daemon();
+    let addr = h.addr();
+    let kernels = ["gemm", "atax", "bicg", "mvt"];
+    let mut threads = Vec::new();
+    for (i, name) in kernels.iter().enumerate() {
+        let name = name.to_string();
+        threads.push(std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            writeln!(
+                s,
+                r#"{{"op":"solve","kernel":"{name}","size":"S","cap":8,"id":{i}}}"#
+            )
+            .unwrap();
+            let ev = read_events(&mut BufReader::new(s), 1);
+            let r = ev.last().unwrap().clone();
+            assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"), "{name}");
+            assert_eq!(r.get("id").and_then(|x| x.as_u64()), Some(i as u64), "{name}");
+            r.get("data").unwrap().get("kernel").and_then(|x| x.as_str()).unwrap().to_string()
+        }));
+    }
+    let answered: Vec<String> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for name in kernels {
+        assert!(answered.iter().any(|a| a == name), "{name} missing: {answered:?}");
+    }
+    h.shutdown();
+    h.join();
+}
+
+#[test]
+fn repeated_solve_hits_the_cache_bit_identically_and_stats_sees_it() {
+    let h = daemon();
+    // two identical solves: the second must replay the first from the
+    // solve cache, not recompute
+    let req = r#"{"op":"solve","kernel":"gemm","size":"S","cap":16,"id":10}"#;
+    let first = request(&h, req);
+    let second = request(&h, req);
+    let r1 = terminal(&first);
+    let r2 = terminal(&second);
+    assert_eq!(r1.get("cache").and_then(|x| x.as_str()), Some("miss"));
+    assert_eq!(r2.get("cache").and_then(|x| x.as_str()), Some("hit"));
+    assert_eq!(
+        r1.get("data").unwrap().to_line(),
+        r2.get("data").unwrap().to_line(),
+        "cache replay must be bit-identical"
+    );
+    // a cache hit answers without a progress (solving) line
+    assert_eq!(second.len(), 1, "{second:?}");
+
+    let ev = request(&h, r#"{"op":"stats","id":11}"#);
+    let data = terminal(&ev).get("data").unwrap().clone();
+    let cache = data.get("cache").unwrap();
+    assert_eq!(cache.get("hits").and_then(|x| x.as_u64()), Some(1));
+    assert!(
+        cache.get("hit_rate").and_then(|x| x.as_f64()).unwrap() > 0.0,
+        "nonzero hit rate required: {data:?}"
+    );
+    let solve_ops = data.get("ops").unwrap().get("solve").unwrap();
+    assert_eq!(solve_ops.get("count").and_then(|x| x.as_u64()), Some(2));
+
+    // `emit --design_from solve` reuses the cached solve and says so
+    let ev = request(
+        &h,
+        r#"{"op":"emit","kernel":"gemm","size":"S","cap":16,"design_from":"solve","id":12}"#,
+    );
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
+    assert_eq!(r.get("cache").and_then(|x| x.as_str()), Some("hit"));
+
+    // the `shutdown` op answers, then the daemon exits on its own
+    let ev = request(&h, r#"{"op":"shutdown","id":13}"#);
+    assert_eq!(
+        terminal(&ev).get("event").and_then(|x| x.as_str()),
+        Some("result")
+    );
+    let addr = h.addr();
+    h.join();
+    assert!(TcpStream::connect(addr).is_err(), "listener must be gone");
+}
