@@ -16,11 +16,26 @@
 //!   tape compilation depend only on (kernel, device), so even a solve
 //!   *miss* with different space options reuses them via
 //!   [`NlpProblem::with_model`].
-//! * **warm index** — `(warm fingerprint, device)` → the design list of
-//!   the most recent completed solve of any same-shaped kernel. On a
-//!   solve miss whose shape warm-matches, these designs seed
+//! * **warm index** — [`WarmKey`] (warm fingerprint + device +
+//!   evaluator + cap + fine — the *same space restrictions* as the
+//!   solve key, with only the exact structural hash relaxed to the
+//!   shape hash) → the design list of the most recent solve of a
+//!   same-shaped kernel in the same restricted space. On a solve miss
+//!   whose shape warm-matches, these designs seed
 //!   [`crate::nlp::solve_jobs_seeded`] (re-verified there; see its
-//!   soundness note) and the response reports `cache: "warm"`.
+//!   soundness note) and the response reports `cache: "warm"`. The
+//!   space restrictions are part of the key because a seed carried
+//!   across rungs (say cap=512 → cap=8) can be feasible yet
+//!   unreachable by the restricted candidate menus, and
+//!   `solve_jobs_seeded` documents that such a seed may *improve* the
+//!   top-k — which would make warm answers depend on daemon history.
+//!
+//! Even within one warm key, a seeded solve is not *proven* equal to
+//! the cold solve (the menus are derived from trip counts, which the
+//! warm key deliberately ignores), so [`WarmCache::insert_solve`]
+//! refuses to admit warm-seeded results into the exact replay cache:
+//! every replayed entry comes from an unseeded solve and is therefore
+//! a pure function of its [`SolveKey`] (DESIGN.md §11).
 //!
 //! The cache is plain data (no interior locking): the serve session
 //! wraps it in one mutex, held only around lookups/inserts — never
@@ -55,10 +70,41 @@ pub struct SolveKey {
     pub topk: usize,
 }
 
+impl SolveKey {
+    /// The warm-index key this solve reads and writes: identical space
+    /// restrictions, with the exact structural hash relaxed to the
+    /// shape-only `warm_fp`.
+    pub fn warm_key(&self, warm_fp: u64) -> WarmKey {
+        WarmKey {
+            warm_fp,
+            device: self.device.clone(),
+            evaluator: self.evaluator.clone(),
+            cap: self.cap,
+            fine: self.fine,
+        }
+    }
+}
+
+/// Warm-index key: same nest shape, same device, and the same space
+/// restrictions (evaluator/cap/fine) as the solves it seeds. `topk` is
+/// excluded: seeds are re-verified incumbents, and how many the donor
+/// solve kept does not change what any of them mean.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct WarmKey {
+    /// Shape-only structural fingerprint (sizes/precision relaxed).
+    pub warm_fp: u64,
+    /// Target device name.
+    pub device: String,
+    /// Evaluator tag.
+    pub evaluator: String,
+    /// `MAX_PARTITIONING` sub-space rung.
+    pub cap: u64,
+    /// Eq 9 fine-grained-only restriction.
+    pub fine: bool,
+}
+
 /// Model-cache key: the symbolic build depends only on (kernel, device).
 type ModelKey = (u64, String);
-/// Warm-index key: same nest shape on the same device.
-type WarmKey = (u64, String);
 
 struct SolveEntry {
     result: Arc<SolveResult>,
@@ -145,10 +191,8 @@ impl WarmCache {
 
     /// Warm-index lookup (does not count as a hit by itself — the
     /// caller attributes `warm` vs `miss` when the solve dispatches).
-    pub fn warm_seeds(&self, warm_fp: u64, device: &str) -> Option<Vec<Design>> {
-        self.warm
-            .get(&(warm_fp, device.to_string()))
-            .map(|(d, _)| d.clone())
+    pub fn warm_seeds(&self, key: &WarmKey) -> Option<Vec<Design>> {
+        self.warm.get(key).map(|(d, _)| d.clone())
     }
 
     /// Count one dispatched solve as warm-started or a cold miss.
@@ -160,25 +204,40 @@ impl WarmCache {
         }
     }
 
-    /// Admit a completed solve. Non-optimal (anytime) results are
-    /// rejected — they are not pure functions of the key — but their
-    /// designs still refresh the warm index (a partial incumbent is a
-    /// legitimate seed; seeds are re-verified at use).
-    pub fn insert_solve(&mut self, key: SolveKey, warm_fp: u64, result: &Arc<SolveResult>) {
+    /// Admit a completed solve. Two classes of result never reach the
+    /// exact replay cache, because neither is a pure function of the
+    /// [`SolveKey`]:
+    ///
+    /// * non-optimal (anytime) results — they depend on the time
+    ///   budget;
+    /// * warm-`seeded` results — a seed the restricted candidate menus
+    ///   cannot reach may have improved the top-k beyond what a cold
+    ///   solve of this key returns (`solve_jobs_seeded`'s documented
+    ///   escape), so replaying one would make identical requests
+    ///   answer differently depending on daemon history.
+    ///
+    /// Both still refresh the warm index: their designs are legitimate
+    /// seeds (re-verified at use), just not replayable answers.
+    pub fn insert_solve(
+        &mut self,
+        key: SolveKey,
+        warm_fp: u64,
+        result: &Arc<SolveResult>,
+        seeded: bool,
+    ) {
         if self.capacity == 0 {
             return;
         }
         let tick = self.bump();
         let designs: Vec<Design> = result.designs.iter().map(|(d, _)| d.clone()).collect();
         if !designs.is_empty() {
-            self.warm
-                .insert((warm_fp, key.device.clone()), (designs, tick));
+            self.warm.insert(key.warm_key(warm_fp), (designs, tick));
             if self.warm.len() > self.capacity {
                 evict_min(&mut self.warm, |(_, t)| *t);
                 self.stats.evictions += 1;
             }
         }
-        if result.optimal {
+        if result.optimal && !seeded {
             self.solves.insert(
                 key,
                 SolveEntry {
@@ -291,7 +350,7 @@ mod tests {
         let mut c = WarmCache::new(4);
         assert!(c.lookup_solve(&key(1)).is_none());
         let r = result(true);
-        c.insert_solve(key(1), 10, &r);
+        c.insert_solve(key(1), 10, &r, false);
         let hit = c.lookup_solve(&key(1)).expect("hit");
         assert!(Arc::ptr_eq(&hit, &r), "bit-identical replay is the same Arc");
         assert_eq!(c.stats.hits, 1);
@@ -304,19 +363,51 @@ mod tests {
     #[test]
     fn non_optimal_results_feed_warm_index_only() {
         let mut c = WarmCache::new(4);
-        c.insert_solve(key(2), 20, &result(false));
+        c.insert_solve(key(2), 20, &result(false), false);
         assert!(c.lookup_solve(&key(2)).is_none(), "anytime result not cached");
-        assert!(c.warm_seeds(20, "xilinx-u200").is_some(), "but seeds survive");
-        assert!(c.warm_seeds(20, "other-device").is_none());
+        assert!(c.warm_seeds(&key(2).warm_key(20)).is_some(), "but seeds survive");
+        let mut other_dev = key(2).warm_key(20);
+        other_dev.device = "other-device".into();
+        assert!(c.warm_seeds(&other_dev).is_none());
+    }
+
+    #[test]
+    fn warm_seeded_results_feed_warm_index_only() {
+        let mut c = WarmCache::new(4);
+        // an optimal but warm-seeded solve: its top-k may contain a
+        // menu-unreachable seed, so it must never be replayed verbatim
+        c.insert_solve(key(3), 30, &result(true), true);
+        assert!(c.lookup_solve(&key(3)).is_none(), "seeded result not replayable");
+        assert!(c.warm_seeds(&key(3).warm_key(30)).is_some(), "but seeds survive");
+    }
+
+    #[test]
+    fn warm_index_is_partitioned_by_space_and_evaluator() {
+        let mut c = WarmCache::new(8);
+        c.insert_solve(key(4), 40, &result(true), false);
+        let base = key(4).warm_key(40);
+        assert!(c.warm_seeds(&base).is_some());
+        // a different rung / restriction / evaluator must not donate
+        // seeds: cross-space seeds can be menu-unreachable and change
+        // the seeded solve's answer
+        let mut rung = base.clone();
+        rung.cap = 8;
+        assert!(c.warm_seeds(&rung).is_none());
+        let mut fine = base.clone();
+        fine.fine = true;
+        assert!(c.warm_seeds(&fine).is_none());
+        let mut eval = base;
+        eval.evaluator = "sym".into();
+        assert!(c.warm_seeds(&eval).is_none());
     }
 
     #[test]
     fn lru_evicts_the_oldest() {
         let mut c = WarmCache::new(2);
-        c.insert_solve(key(1), 1, &result(true));
-        c.insert_solve(key(2), 2, &result(true));
+        c.insert_solve(key(1), 1, &result(true), false);
+        c.insert_solve(key(2), 2, &result(true), false);
         assert!(c.lookup_solve(&key(1)).is_some()); // refresh 1
-        c.insert_solve(key(3), 3, &result(true)); // evicts 2
+        c.insert_solve(key(3), 3, &result(true), false); // evicts 2
         assert!(c.lookup_solve(&key(1)).is_some());
         assert!(c.lookup_solve(&key(2)).is_none());
         assert!(c.lookup_solve(&key(3)).is_some());
@@ -326,7 +417,7 @@ mod tests {
     #[test]
     fn zero_capacity_disables_caching() {
         let mut c = WarmCache::new(0);
-        c.insert_solve(key(1), 1, &result(true));
+        c.insert_solve(key(1), 1, &result(true), false);
         assert!(c.lookup_solve(&key(1)).is_none());
         assert_eq!(c.sizes(), (0, 0, 0));
     }
@@ -336,7 +427,7 @@ mod tests {
         let mut c = WarmCache::new(4);
         c.note_dispatch(false);
         c.note_dispatch(true);
-        c.insert_solve(key(1), 1, &result(true));
+        c.insert_solve(key(1), 1, &result(true), false);
         let _ = c.lookup_solve(&key(1));
         assert!((c.stats.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
     }

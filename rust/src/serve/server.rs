@@ -7,8 +7,10 @@
 //! * the **accept thread** polls a non-blocking listener (~25 ms) so it
 //!   can notice the shutdown latch between connections;
 //! * each connection gets a cheap **reader thread** that frames lines
-//!   and enqueues one pool job per request — concurrency across clients
-//!   is bounded by the pool (`--threads`), not by connection count;
+//!   and enqueues one pool job per request through a `Weak` pool handle
+//!   (the accept thread stays the pool's only owner, so shutdown can
+//!   always drain) — concurrency across clients is bounded by the pool
+//!   (`--threads`), not by connection count;
 //! * responses go back through a per-connection mutexed writer, so
 //!   concurrent jobs of one pipelining client interleave whole lines,
 //!   never bytes (clients correlate by `id`);
@@ -22,7 +24,7 @@ use crate::coordinator::pool::ThreadPool;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread;
 use std::time::Duration;
 
@@ -92,17 +94,19 @@ pub fn spawn(addr: &str, cfg: ServeConfig, threads: usize) -> Result<ServerHandl
 }
 
 fn accept_loop(listener: TcpListener, state: Arc<ServeState>, threads: usize) {
-    // The pool lives on the accept thread: dropping it at loop exit
-    // drains every queued request before `join` returns. Readers share
-    // it behind a mutex (held only to enqueue — `execute` is one
-    // channel send).
-    let pool = Arc::new(Mutex::new(ThreadPool::new(threads)));
+    // The accept thread is the pool's *only* strong owner: readers get a
+    // Weak they upgrade just long enough to enqueue (`execute` is one
+    // channel send). That keeps the drain-then-exit guarantee honest —
+    // if readers held Arc clones, a reader blocked on an open client
+    // socket would keep the pool alive past loop exit and in-flight
+    // solves would be killed when main returns.
+    let mut pool = Arc::new(Mutex::new(ThreadPool::new(threads)));
     let mut readers = Vec::new();
     while !state.shutdown_requested() && !term_signalled() {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 let state = state.clone();
-                let pool = pool.clone();
+                let pool = Arc::downgrade(&pool);
                 let r = thread::Builder::new()
                     .name("nlpdse-serve-conn".into())
                     .spawn(move || serve_connection(state, pool, stream));
@@ -118,10 +122,23 @@ fn accept_loop(listener: TcpListener, state: Arc<ServeState>, threads: usize) {
     if term_signalled() {
         state.request_shutdown();
     }
-    // drain queued work, then give lingering readers a short grace
-    // period; ones still blocked on an open client socket are left
-    // detached (they exit when their client disconnects)
-    drop(pool);
+    // reclaim sole ownership (readers only hold transient upgrades
+    // across an enqueue, so this converges in microseconds), then drain:
+    // ThreadPool::join closes the queue and runs every request already
+    // accepted — clients awaiting long solves still get their results
+    let pool = loop {
+        match Arc::try_unwrap(pool) {
+            Ok(m) => break m.into_inner().unwrap_or_else(|e| e.into_inner()),
+            Err(p) => {
+                pool = p;
+                thread::sleep(Duration::from_millis(1));
+            }
+        }
+    };
+    pool.join();
+    // give lingering readers a short grace period; ones still blocked on
+    // an open client socket are left detached (their next upgrade fails,
+    // so they exit without touching the drained pool)
     let deadline = std::time::Instant::now() + Duration::from_millis(250);
     while std::time::Instant::now() < deadline && readers.iter().any(|r| !r.is_finished()) {
         thread::sleep(Duration::from_millis(10));
@@ -133,7 +150,7 @@ fn accept_loop(listener: TcpListener, state: Arc<ServeState>, threads: usize) {
     }
 }
 
-fn serve_connection(state: Arc<ServeState>, pool: Arc<Mutex<ThreadPool>>, stream: TcpStream) {
+fn serve_connection(state: Arc<ServeState>, pool: Weak<Mutex<ThreadPool>>, stream: TcpStream) {
     // accepted sockets can inherit the listener's non-blocking mode
     let _ = stream.set_nonblocking(false);
     let writer = match stream.try_clone() {
@@ -149,6 +166,9 @@ fn serve_connection(state: Arc<ServeState>, pool: Arc<Mutex<ThreadPool>>, stream
         if line.trim().is_empty() {
             continue;
         }
+        // the accept loop dropped the pool: it is drained/draining, so
+        // stop reading rather than enqueue work that can never run
+        let Some(pool) = pool.upgrade() else { break };
         state.queue_enter();
         let state = state.clone();
         let writer = writer.clone();

@@ -15,9 +15,13 @@
 //!    `cache: "hit"`;
 //! 2. on a miss, the bound model + compiled tape are reused from the
 //!    model cache when any same-fingerprint kernel built them before;
-//! 3. the warm index is consulted for a same-shape (warm-fingerprint)
-//!    prior solve; its designs seed [`nlp::solve_jobs_seeded`] and the
-//!    response reports `cache: "warm"`, else `"miss"`.
+//! 3. the warm index is consulted for a same-shape (warm fingerprint,
+//!    same device/evaluator/cap/fine) prior solve; its designs seed
+//!    [`nlp::solve_jobs_seeded`] and the response reports
+//!    `cache: "warm"`, else `"miss"`. Warm-seeded results refresh the
+//!    warm index but are *not* admitted to the exact solve cache — a
+//!    menu-unreachable seed may improve the top-k, so only unseeded
+//!    solves are pure functions of their key (DESIGN.md §11).
 //!
 //! `emit --design_from solve` routes through the same path, so repeated
 //! emissions of a cached kernel are instant and attributed.
@@ -328,9 +332,13 @@ fn run_solve(
             (bound, compiled)
         }
     };
+    // seeds only cross size/precision changes, never space restrictions
+    // or evaluators: the warm key repeats every SolveKey field except
+    // the exact structural hash
+    let warm_key = key.warm_key(fp.warm);
     let seeds = {
         let mut cache = state.cache.lock().unwrap();
-        let seeds = cache.warm_seeds(fp.warm, dev.name).unwrap_or_default();
+        let seeds = cache.warm_seeds(&warm_key).unwrap_or_default();
         cache.note_dispatch(!seeds.is_empty());
         seeds
     };
@@ -354,12 +362,13 @@ fn run_solve(
         jobs,
         &seeds,
     ));
-    let tag = if seeds.is_empty() { "miss" } else { "warm" };
+    let seeded = !seeds.is_empty();
+    let tag = if seeded { "warm" } else { "miss" };
     state
         .cache
         .lock()
         .unwrap()
-        .insert_solve(key, fp.warm, &result);
+        .insert_solve(key, fp.warm, &result, seeded);
     Ok((tag, result))
 }
 
@@ -695,6 +704,46 @@ mod tests {
             r2.get("data").unwrap().to_line(),
             "cache replay must be bit-identical"
         );
+    }
+
+    #[test]
+    fn warm_solves_stay_in_their_space_and_are_never_replayed() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let cache = |lines: &[Json]| {
+            terminal(lines)
+                .get("cache")
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+        };
+        let (first, _) = call(
+            &state,
+            r#"{"op":"solve","kernel":"gemm","size":"S","cap":8,"id":1}"#,
+        );
+        assert_eq!(cache(&first).as_deref(), Some("miss"));
+        // same nest shape at a new size, same space restrictions → warm
+        let m_req = r#"{"op":"solve","kernel":"gemm","size":"M","cap":8,"id":2}"#;
+        let (second, _) = call(&state, m_req);
+        assert_eq!(cache(&second).as_deref(), Some("warm"));
+        // a warm-seeded result is not a pure function of the exact key,
+        // so the repeat must re-solve (warm again), never replay "hit" —
+        // and the deterministic solver makes the answers agree anyway
+        let (third, _) = call(&state, m_req);
+        assert_eq!(cache(&third).as_deref(), Some("warm"));
+        let answer = |lines: &[Json]| terminal(lines).get("data").unwrap().get("designs").unwrap().to_line();
+        assert_eq!(answer(&second), answer(&third));
+        // a different rung never donates seeds: cross-rung seeds can be
+        // menu-unreachable, so cap 4 starts cold
+        let (other, _) = call(
+            &state,
+            r#"{"op":"solve","kernel":"gemm","size":"M","cap":4,"id":3}"#,
+        );
+        assert_eq!(cache(&other).as_deref(), Some("miss"));
+        // attribution reached the stats counters too
+        let s = state.cache.lock().unwrap().stats;
+        assert_eq!((s.misses, s.warm, s.hits), (2, 2, 0));
     }
 
     #[test]

@@ -12,13 +12,22 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 /// A JSON value (offline stand-in for serde_json).
+///
+/// Integers and floats are distinct variants: an integer lexeme parses
+/// to [`Json::Int`] and round-trips losslessly over the full `i64`
+/// range, so a client correlation `id` such as a 64-bit snowflake is
+/// echoed bit-exactly instead of being squeezed through an `f64`
+/// (which silently rounds above 2⁵³). Integers outside `i64` fall back
+/// to [`Json::Num`] with `f64` precision.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
     /// `null`
     Null,
     /// `true` / `false`
     Bool(bool),
-    /// Number.
+    /// Integer number (lossless over the `i64` range).
+    Int(i64),
+    /// Floating-point number (also integers outside the `i64` range).
     Num(f64),
     /// String.
     Str(String),
@@ -117,9 +126,11 @@ impl Json {
         }
     }
 
-    /// The numeric payload, if this is a number.
+    /// The numeric payload, if this is a number (`Int` widens to `f64`,
+    /// lossily above 2⁵³ — use [`Json::as_u64`] for exact integers).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
+            Json::Int(i) => Some(*i as f64),
             Json::Num(x) => Some(*x),
             _ => None,
         }
@@ -127,8 +138,11 @@ impl Json {
 
     /// The numeric payload as an unsigned integer (rejects fractions and
     /// negatives rather than silently truncating a request field).
+    /// `Int` values are exact; whole `Num` floats are accepted only
+    /// below 2⁵³ where `f64` is still exact.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
+            Json::Int(i) if *i >= 0 => Some(*i as u64),
             Json::Num(x) if x.fract() == 0.0 && *x >= 0.0 && *x < 9e15 => Some(*x as u64),
             _ => None,
         }
@@ -173,6 +187,9 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => {
                 let _ = write!(out, "{b}");
+            }
+            Json::Int(i) => {
+                let _ = write!(out, "{i}");
             }
             Json::Num(x) => {
                 if x.fract() == 0.0 && x.abs() < 9e15 {
@@ -292,6 +309,13 @@ fn parse_num(b: &[u8], pos: &mut usize) -> Result<Json, String> {
         *pos += 1;
     }
     let text = std::str::from_utf8(&b[start..*pos]).map_err(|_| "non-utf8 number".to_string())?;
+    // integer lexemes stay exact (Int) — crucial for echoed correlation
+    // ids above 2^53; only i64 overflow falls back to f64
+    if !text.bytes().any(|c| matches!(c, b'.' | b'e' | b'E')) {
+        if let Ok(i) = text.parse::<i64>() {
+            return Ok(Json::Int(i));
+        }
+    }
     text.parse::<f64>()
         .map(Json::Num)
         .map_err(|_| format!("bad number `{text}` at byte {start}"))
@@ -411,22 +435,22 @@ impl From<f64> for Json {
 }
 impl From<u64> for Json {
     fn from(x: u64) -> Json {
-        Json::Num(x as f64)
+        i64::try_from(x).map(Json::Int).unwrap_or(Json::Num(x as f64))
     }
 }
 impl From<u32> for Json {
     fn from(x: u32) -> Json {
-        Json::Num(x as f64)
+        Json::Int(x as i64)
     }
 }
 impl From<usize> for Json {
     fn from(x: usize) -> Json {
-        Json::Num(x as f64)
+        i64::try_from(x).map(Json::Int).unwrap_or(Json::Num(x as f64))
     }
 }
 impl From<i64> for Json {
     fn from(x: i64) -> Json {
-        Json::Num(x as f64)
+        Json::Int(x)
     }
 }
 impl From<bool> for Json {
@@ -511,6 +535,25 @@ mod tests {
         assert_eq!(j.get("e").and_then(Json::as_f64), Some(-2.5));
         assert_eq!(j.get("e").and_then(Json::as_u64), None, "negative is not u64");
         assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn large_integer_ids_round_trip_losslessly() {
+        // a snowflake-style correlation id above 2^53: an f64 round-trip
+        // would corrupt it, Int must not
+        let id: i64 = 9_007_199_254_740_993; // 2^53 + 1
+        let line = format!(r#"{{"id":{id}}}"#);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id"), Some(&Json::Int(id)));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(id as u64));
+        assert_eq!(j.to_line(), line, "echoed id must be bit-exact");
+        // i64 extremes survive; fractional lexemes still parse as floats
+        for extreme in [i64::MAX, i64::MIN] {
+            let rt = Json::parse(&Json::Int(extreme).to_line()).unwrap();
+            assert_eq!(rt, Json::Int(extreme));
+        }
+        assert_eq!(Json::parse("3.0").unwrap(), Json::Num(3.0));
+        assert_eq!(Json::from(3u64), Json::Int(3));
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! End-to-end tests of the DSE-as-a-service daemon over real TCP
 //! sockets (ISSUE 6 satellite): solve/bound/emit round-trips, inline
 //! parse errors keeping the caret diagnostic inside the JSON error
-//! payload, concurrent clients, and the acceptance criterion — a
-//! repeated structurally-identical solve is answered from the cache
+//! payload, concurrent clients, the shutdown drain guarantee (a solve
+//! in flight when another client requests shutdown still delivers its
+//! result), and the acceptance criterion — a repeated
+//! structurally-identical solve is answered from the cache
 //! bit-identically with `cache: "hit"`, and `stats` reports a nonzero
 //! hit rate.
 //!
@@ -153,6 +155,35 @@ fn concurrent_clients_each_get_their_answers() {
         assert!(answered.iter().any(|a| a == name), "{name} missing: {answered:?}");
     }
     h.shutdown();
+    h.join();
+}
+
+#[test]
+fn shutdown_drains_in_flight_solves_before_exit() {
+    let h = daemon();
+    // client A starts a cold solve and waits for its progress line, so
+    // the job is provably running on the worker pool...
+    let mut a = TcpStream::connect(h.addr()).expect("connect");
+    writeln!(a, r#"{{"op":"solve","kernel":"2mm","size":"S","cap":16,"id":"A"}}"#).unwrap();
+    let mut ra = BufReader::new(a.try_clone().unwrap());
+    let mut buf = String::new();
+    loop {
+        buf.clear();
+        assert!(ra.read_line(&mut buf).expect("read") > 0, "daemon closed before progress");
+        let j = Json::parse(buf.trim()).unwrap();
+        if j.get("event").and_then(|x| x.as_str()) == Some("progress") {
+            break;
+        }
+    }
+    // ...while client B shuts the daemon down
+    let ev = request(&h, r#"{"op":"shutdown","id":"B"}"#);
+    assert_eq!(terminal(&ev).get("event").and_then(|x| x.as_str()), Some("result"));
+    // the drain guarantee: A's solve completes and its result arrives
+    // even though A's connection outlives the accept loop
+    let ev = read_events(&mut ra, 1);
+    let r = terminal(&ev);
+    assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
+    assert_eq!(r.get("id").and_then(|x| x.as_str()), Some("A"));
     h.join();
 }
 
