@@ -29,6 +29,14 @@ echo "==> fuzz smoke (FUZZ_SMOKE=1 — generative differential suites at bounded
 # above. --nocapture so the logged seed ranges land in the CI output.
 FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz -- --nocapture
 FUZZ_SMOKE=1 cargo test -q --test property_fingerprint -- --nocapture
+FUZZ_SMOKE=1 cargo test -q --test property_deps -- --nocapture
+
+echo "==> transform fuzz smoke (TRANSFORM_FUZZ=1 — full-width variant suites at bounded N)"
+# the transform suites self-cap at 12 kernels under plain `cargo test`;
+# TRANSFORM_FUZZ=1 lifts the cap to the FUZZ_KERNELS width, and pairing
+# it with FUZZ_SMOKE keeps the CI cost bounded while exercising the
+# widened path (replay: TRANSFORM_FUZZ=1 FUZZ_SEED=… FUZZ_KERNELS=1).
+TRANSFORM_FUZZ=1 FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz prop_transform_ -- --nocapture
 
 echo "==> serve smoke (SERVE_SMOKE=1 — real daemon: solve, cache hit, stats, SIGTERM)"
 # Drives the release binary end to end over TCP: start `serve` on an
@@ -73,7 +81,7 @@ fi
 
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
-for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve; do
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform; do
   BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
 done
 if [ ! -f BENCH_solver.json ]; then

@@ -1,0 +1,81 @@
+//! Transform-layer benchmarks (ISSUE 7): what the `(variant × pragma)`
+//! mode costs on top of a plain DSE run.
+//!
+//! Cases:
+//!
+//! * `deps/<kernel>` — the dependence analysis (direction/distance
+//!   vectors included) every enumeration step re-runs on its frontier
+//!   kernel; this is the legality substrate's unit cost;
+//! * `enumerate/<kernel>` — bounded variant enumeration: candidate
+//!   generation, per-candidate legality certification, rebuild, and
+//!   fingerprint dedup;
+//! * `verify/<kernel>` — certificate replay (`verify_trace`) over every
+//!   enumerated variant: the machine-check a consumer pays to trust a
+//!   winning trace;
+//! * `transform-dse/<kernel>` — the full `(variant × pragma)` search at
+//!   Small size with the symbolic evaluator and `jobs=1`: enumeration +
+//!   per-variant lower-bound pruning + the NLP ladder per survivor.
+//!
+//! `BENCH_SMOKE=1` shrinks the matrix to mvt-S (the ci.sh bench-smoke
+//! loop), keeping the bench compiling and honest.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::dse::DseConfig;
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::SymbolicEvaluator;
+use nlp_dse::poly::deps::analyze;
+use nlp_dse::transform::{enumerate, run_transform_dse, verify_trace, TransformConfig};
+use nlp_dse::util::bench::{black_box, Bench};
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("transform");
+
+    let kernels: &[&str] = if smoke {
+        &["mvt"]
+    } else {
+        &["mvt", "atax", "gemm", "2mm"]
+    };
+    let cfg = TransformConfig {
+        max_variants: 8,
+        max_depth: 1,
+        max_perm_loops: 3,
+    };
+
+    for name in kernels {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        b.bench(&format!("deps/{name}-S"), || {
+            black_box(analyze(&k).dir_vectors.len());
+        });
+        b.bench(&format!("enumerate/{name}-S"), || {
+            black_box(enumerate(&k, &cfg).len());
+        });
+        let variants = enumerate(&k, &cfg);
+        b.bench(&format!("verify/{name}-S"), || {
+            for v in &variants {
+                verify_trace(&k, v).expect("enumerated trace verifies");
+            }
+            black_box(variants.len());
+        });
+    }
+
+    // the end-to-end mode: bounded variant space, serial solver — the
+    // simulated DSE clock makes this deterministic, so iteration times
+    // measure real work, not search noise
+    let dse_kernels: &[&str] = if smoke { &["mvt"] } else { &["mvt", "atax"] };
+    let dev = Device::u200();
+    let dse_cfg = DseConfig {
+        jobs: 1,
+        ..Default::default()
+    };
+    for name in dse_kernels {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        b.bench(&format!("transform-dse/{name}-S"), || {
+            let o = run_transform_dse(&k, &dev, &dse_cfg, &cfg, &SymbolicEvaluator);
+            black_box(o.records.len());
+        });
+    }
+
+    b.finish();
+}

@@ -4,6 +4,7 @@
 //! nlp-dse table --id 5 [--scope quick|paper] [--xla] [--tsv] [--out FILE]
 //! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
 //! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound] [--jobs N]
+//!             [--transform [--max-variants N] [--max-depth D] [--max-perm-loops P]]
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
 //! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
 //! nlp-dse emit gemm [--design-from solve|dse|empty] [--assign i=4] [--pipeline k]
@@ -22,7 +23,13 @@
 //! for the other commands to consume.
 //!
 //! The `dse` command dispatches through the engine [`Registry`] — any
-//! registered engine name works, with no per-engine code here. The
+//! registered engine name works, with no per-engine code here. With
+//! `--transform` it instead runs the `(variant × pragma)` search of
+//! [`crate::transform`]: legality-certified interchange / distribution /
+//! fusion variants are enumerated and the NLP ladder runs per variant,
+//! pruning variants whose bound-model floor already loses to the
+//! incumbent; `emit --design-from dse --transform` lowers the winning
+//! variant. The
 //! `bound` command goes through the `Explorer` facade's symbolic bound
 //! model: it prints the achievable-latency lower bound of a (possibly
 //! partial) pragma configuration.
@@ -37,7 +44,7 @@ pub mod args;
 
 use crate::benchmarks::{self, Size};
 use crate::coordinator::{self, engine_names, CampaignConfig, CampaignResult};
-use crate::engine::{Evaluator, Explorer, Registry};
+use crate::engine::{Evaluator, Exploration, Explorer, Registry};
 use crate::frontend;
 use crate::hls::Device;
 use crate::ir::DType;
@@ -105,13 +112,17 @@ fn help() -> String {
            table    --id 1|2|3|5|6|7|8|9 [--scope quick|paper] [--xla] [--tsv]\n\
            figure   --id 2|3|4|5|6 [--scope quick|paper] [--kernel K --size S]\n\
            dse      --kernel K --size S|M|L [--engine {engines}] [--xla|--sym] [--prune-bound]\n\
+                    [--transform [--max-variants N] [--max-depth D] [--max-perm-loops P]]\n\
+                    (--transform: legality-checked interchange/distribution/fusion\n\
+                     variants × pragma search, bound-pruned per variant)\n\
            solve    --kernel K --size S [--cap N] [--fine] [--xla|--sym]\n\
            bound    K [--size S] [--assign loop=uf,...] [--pipeline loop,...] [--cap N]\n\
                     (achievable-latency lower bound of a partial pragma configuration)\n\
            emit     K [--size S] [--design-from solve|dse|empty | --assign loop=uf,...\n\
                     --pipeline loop,... --tile loop=t,...] [--dialect merlin|vitis]\n\
                     [--realized] [--cap N] [--fine] [--engine E] [--out FILE]\n\
-                    (pragma-annotated HLS C; --realized shows what Merlin accepts)\n\
+                    (pragma-annotated HLS C; --realized shows what Merlin accepts;\n\
+                     --design-from dse --transform lowers the winning variant)\n\
            space    --kernel K --size S\n\
            gen      [--seed S] [--count N] [--out-dir DIR] [--sampled]\n\
                     [--depth D --width W --nests K --arrays A --max-trip T]\n\
@@ -345,6 +356,9 @@ fn make_evaluator(args: &mut Args) -> Box<dyn BatchEvaluator> {
 /// `dse` goes through the `Explorer` facade: any registered engine name
 /// dispatches, and the output is the engine-agnostic exploration render.
 fn cmd_dse(args: &mut Args) -> Result<String> {
+    if args.flag("transform") {
+        return cmd_dse_transform(args);
+    }
     let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
     let spec = kernel_spec(args)?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
@@ -362,6 +376,78 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
         .engine(&engine)?;
     let outcome = explorer.run()?;
     Ok(outcome.render(explorer.kernel_ref()))
+}
+
+/// `--max-variants/--max-depth/--max-perm-loops` over the defaults.
+fn parse_transform_config(args: &mut Args) -> Result<crate::transform::TransformConfig> {
+    let mut t = crate::transform::TransformConfig::default();
+    if let Some(v) = args.opt("max-variants") {
+        t.max_variants = v.parse()?;
+        if t.max_variants == 0 {
+            bail!("--max-variants must be at least 1 (the original)");
+        }
+    }
+    if let Some(v) = args.opt("max-depth") {
+        t.max_depth = v.parse()?;
+    }
+    if let Some(v) = args.opt("max-perm-loops") {
+        t.max_perm_loops = v.parse()?;
+    }
+    Ok(t)
+}
+
+/// `dse --transform`: the `(variant × pragma)` search — enumerate
+/// legality-certified loop-transformation variants, run the NLP ladder
+/// per variant with lower-bound variant pruning, report the winner.
+fn cmd_dse_transform(args: &mut Args) -> Result<String> {
+    let spec = kernel_spec(args)?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args)?;
+    let k = spec.kernel(size, dtype)?;
+    let evaluator = make_evaluator(args);
+    let dse_cfg = crate::dse::DseConfig {
+        prune_bound: args.flag("prune-bound"),
+        jobs: parse_jobs(args)?.unwrap_or_else(nlp::default_jobs),
+        ..Default::default()
+    };
+    let tcfg = parse_transform_config(args)?;
+    let dev = Device::u200();
+    let o = crate::transform::run_transform_dse(&k, &dev, &dse_cfg, &tcfg, evaluator.as_ref());
+
+    let mut out = format!(
+        "(variant × pragma) DSE on {} [{}]: {} variant(s) enumerated, {} pruned by bound\n\n",
+        o.kernel,
+        o.config.describe(),
+        o.records.len(),
+        o.pruned
+    );
+    for r in &o.records {
+        let chain = if r.trace.is_empty() {
+            "(original)".to_string()
+        } else {
+            r.trace.join(" ; ")
+        };
+        let fate = if r.pruned {
+            "pruned".to_string()
+        } else {
+            match r.cycles {
+                Some(c) => format!("{c:.0} cycles"),
+                None => "no valid design".to_string(),
+            }
+        };
+        let mark = if r.index == o.winner { " <- winner" } else { "" };
+        out.push_str(&format!(
+            "  v{:<2} lb={:>12.0}  {fate:<16} {chain}{mark}\n",
+            r.index, r.lower_bound
+        ));
+    }
+    let winner_kernel = o.variant.kernel.clone();
+    match &o.winning_trace()[..] {
+        [] => out.push_str("\nwinner: the untransformed original\n\n"),
+        steps => out.push_str(&format!("\nwinner trace: {}\n\n", steps.join(" ; "))),
+    }
+    out.push_str(&Exploration::from(o).render(&winner_kernel));
+    Ok(out)
 }
 
 /// `bound`: achievable-latency lower bound of a (possibly partial) pragma
@@ -471,8 +557,8 @@ fn cmd_emit(args: &mut Args) -> Result<String> {
     let dtype = parse_dtype(args)?;
     let dialect = parse_dialect(args)?;
     let realized = args.flag("realized");
-    let k = spec.kernel(size, dtype)?;
-    let a = Analysis::new(&k);
+    let mut k = spec.kernel(size, dtype)?;
+    let mut a = Analysis::new(&k);
     let dev = Device::u200();
 
     let assigns = args.opt("assign");
@@ -528,6 +614,24 @@ fn cmd_emit(args: &mut Args) -> Result<String> {
                         k.name
                     )
                 })?
+            }
+            "dse" if args.flag("transform") => {
+                // (variant × pragma): lower the *winning variant* — the
+                // transformed kernel is a plain ir::Kernel, so codegen
+                // runs unchanged once k and its analysis are swapped
+                let dse_cfg = crate::dse::DseConfig {
+                    jobs: parse_jobs(args)?.unwrap_or_else(nlp::default_jobs),
+                    ..Default::default()
+                };
+                let tcfg = parse_transform_config(args)?;
+                let eval = make_evaluator(args);
+                let o = crate::transform::run_transform_dse(&k, &dev, &dse_cfg, &tcfg, eval.as_ref());
+                let d = o.outcome.best.clone().map(|(d, _)| d).ok_or_else(|| {
+                    anyhow!("transform DSE found no valid design for `{}`", k.name)
+                })?;
+                k = o.variant.kernel;
+                a = Analysis::new(&k);
+                d
             }
             "dse" => {
                 let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
@@ -1002,6 +1106,38 @@ mod tests {
         // and a path passed to --kernel resolves identically
         run(&["space", "--kernel", knl]).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn dse_transform_reports_variants_and_winner() {
+        let out = std::env::temp_dir().join("nlp_dse_cli_transform_test.txt");
+        let out_s = out.to_str().unwrap().to_string();
+        run(&[
+            "dse", "--kernel", "mvt", "--size", "S", "--transform", "--max-variants", "2",
+            "--jobs", "1", "--out", &out_s,
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("(variant × pragma) DSE on mvt"), "{text}");
+        assert!(text.contains("(original)"), "{text}");
+        assert!(text.contains("winner"), "{text}");
+        assert!(text.contains("engine `transform`"), "{text}");
+        let _ = std::fs::remove_file(&out);
+    }
+
+    #[test]
+    fn emit_transform_lowers_the_winning_variant() {
+        let out = std::env::temp_dir().join("nlp_dse_cli_transform_emit_test.c");
+        let out_s = out.to_str().unwrap().to_string();
+        run(&[
+            "emit", "mvt", "--size", "S", "--design-from", "dse", "--transform",
+            "--max-variants", "2", "--jobs", "1", "--out", &out_s,
+        ])
+        .unwrap();
+        let c = std::fs::read_to_string(&out).unwrap();
+        assert!(c.contains("#pragma"), "{c}");
+        assert!(c.contains("void kernel_mvt("), "{c}");
+        let _ = std::fs::remove_file(&out);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use crate::baselines::{AutoDseOutcome, HarpOutcome};
 use crate::dse::{DseOutcome, StepRecord};
 use crate::ir::Kernel;
 use crate::pragma::Design;
+use crate::transform::TransformOutcome;
 
 /// What happened to one explored candidate.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +63,9 @@ pub enum EngineDetail {
     AutoDse(AutoDseOutcome),
     /// The full HARP record.
     Harp(HarpOutcome),
+    /// The full `(variant × pragma)` transform-DSE record (boxed — it
+    /// carries the winning kernel and its whole trace).
+    Transform(Box<TransformOutcome>),
     /// Engines with no legacy record (e.g. `random`, third-party).
     Generic,
 }
@@ -122,6 +126,15 @@ impl Exploration {
     pub fn as_harp(&self) -> Option<&HarpOutcome> {
         match &self.detail {
             EngineDetail::Harp(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// The `(variant × pragma)` transform-DSE record, when this outcome
+    /// is one.
+    pub fn as_transform(&self) -> Option<&TransformOutcome> {
+        match &self.detail {
+            EngineDetail::Transform(o) => Some(o),
             _ => None,
         }
     }
@@ -260,6 +273,19 @@ impl From<AutoDseOutcome> for Exploration {
             trace: Vec::new(),
             detail: EngineDetail::AutoDse(o),
         }
+    }
+}
+
+impl From<TransformOutcome> for Exploration {
+    fn from(o: TransformOutcome) -> Exploration {
+        // normalize from the winning variant's ladder; variant-level
+        // prunes fold into the engine-agnostic `pruned` counter
+        let mut e: Exploration = o.outcome.clone().into();
+        e.engine = "transform".into();
+        e.kernel = o.kernel.clone();
+        e.pruned += o.pruned;
+        e.detail = EngineDetail::Transform(Box::new(o));
+        e
     }
 }
 

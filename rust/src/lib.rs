@@ -73,6 +73,11 @@
 //!   usage, achieved II, and synthesis wall-time.
 //! * [`dse`] — NLP-DSE itself (Algorithm 1): array-partitioning ladder ×
 //!   parallelism mode, lower-bound pruning, early termination.
+//! * [`transform`] — legality-checked pre-pragma loop transformations
+//!   (interchange / distribution / fusion), each admitted by a
+//!   machine-checkable certificate over the `poly::deps`
+//!   direction-vector analysis, plus the bounded variant enumerator and
+//!   the `(variant × pragma)` DSE mode (`dse --transform`).
 //! * [`codegen`] — the exit path: lowers a kernel + solved pragma
 //!   [`pragma::Design`] to compilable, pragma-annotated HLS C in two
 //!   dialects (Merlin `#pragma ACCEL`, raw Vitis `#pragma HLS`), with a
@@ -110,6 +115,7 @@ pub mod model;
 pub mod nlp;
 pub mod merlin;
 pub mod dse;
+pub mod transform;
 pub mod codegen;
 pub mod baselines;
 pub mod engine;

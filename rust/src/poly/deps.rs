@@ -28,7 +28,7 @@
 //! * the flat dependence list (`ND` column of Table 5).
 
 use crate::ir::{Access, ArrayId, Kernel, LoopId, OpKind, StmtId};
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Dependence class.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -81,6 +81,68 @@ impl LoopDepInfo {
     }
 }
 
+/// One component of a dependence direction/distance vector: the
+/// constraint the dependence places on a single shared loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DirComp {
+    /// Known constant signed distance on this loop (`Dist(0)` is the
+    /// classical `=` direction: loop-independent at this level).
+    Dist(i64),
+    /// Carried with a strictly positive but non-constant distance (`<`).
+    Pos,
+    /// Unknown relation (`*`): the analysis cannot bound this loop's
+    /// contribution, so any reordering against the other non-`=`
+    /// components must be refused.
+    Any,
+}
+
+impl DirComp {
+    /// The `=` direction — distance zero at this level.
+    pub fn is_eq(self) -> bool {
+        self == DirComp::Dist(0)
+    }
+}
+
+/// Full direction/distance vector of one dependence edge: the per-loop
+/// constraints over the statement pair's shared nest, outermost first.
+///
+/// Vectors are normalized lexicographically non-negative: when the
+/// leading constant component comes out negative the edge is flipped
+/// (`src`/`dst` swapped, RAW ↔ WAR) and every constant component
+/// negated, so `src` is always the side executing first. Transform
+/// legality (loop interchange, distribution, fusion) is decided against
+/// these vectors — see `transform::legality`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DirVector {
+    /// Dependence class (after normalization).
+    pub kind: DepKind,
+    /// Source statement — executes first.
+    pub src: StmtId,
+    /// Destination statement.
+    pub dst: StmtId,
+    /// Array carrying the dependence.
+    pub array: ArrayId,
+    /// `(loop, component)` per shared-nest level, outermost first.
+    pub entries: Vec<(LoopId, DirComp)>,
+}
+
+impl DirVector {
+    /// Component for loop `l`, if `l` belongs to the shared nest.
+    pub fn component(&self, l: LoopId) -> Option<DirComp> {
+        self.entries.iter().find(|(x, _)| *x == l).map(|&(_, c)| c)
+    }
+    /// Every component is `=`: the dependence is loop-independent and
+    /// only constrains textual statement order.
+    pub fn loop_independent(&self) -> bool {
+        self.entries.iter().all(|(_, c)| c.is_eq())
+    }
+    /// The outermost loop with a non-`=` component (the carrying
+    /// level), if any.
+    pub fn carrier(&self) -> Option<LoopId> {
+        self.entries.iter().find(|(_, c)| !c.is_eq()).map(|&(l, _)| l)
+    }
+}
+
 /// All dependence facts of one kernel.
 pub struct DepAnalysis {
     /// Flat dependence list (`ND` column of Table 5).
@@ -92,6 +154,9 @@ pub struct DepAnalysis {
     /// `(stmt, loop)` pairs where `loop` is a reduction loop *for that
     /// statement* (used by the per-statement II bound).
     pub stmt_reductions: Vec<(StmtId, LoopId, OpKind)>,
+    /// Per-dependence direction/distance vectors (deduplicated), the
+    /// legality substrate for pre-pragma loop transformations.
+    pub dir_vectors: Vec<DirVector>,
 }
 
 impl DepAnalysis {
@@ -114,6 +179,17 @@ impl DepAnalysis {
             .filter(move |(sid, ..)| *sid == s)
             .map(|&(_, l, op)| (l, op))
     }
+    /// Direction/distance vectors whose edge touches both `a` and `b`
+    /// (in either orientation; `a == b` selects self-dependences).
+    pub fn vectors_between(
+        &self,
+        a: StmtId,
+        b: StmtId,
+    ) -> impl Iterator<Item = &DirVector> + '_ {
+        self.dir_vectors
+            .iter()
+            .filter(move |v| (v.src == a && v.dst == b) || (v.src == b && v.dst == a))
+    }
 }
 
 /// Relation between two affine access functions to the same array.
@@ -122,8 +198,9 @@ enum IndexRel {
     /// Identical index functions.
     Identical,
     /// Every dimension identical or shifted by a constant on its (single)
-    /// loop axis: a constant distance vector.
-    ShiftVec(Vec<(LoopId, u64)>),
+    /// loop axis: a constant distance vector. Distances are signed with
+    /// the convention `iter_b = iter_a + d` on the aliasing cell.
+    ShiftVec(Vec<(LoopId, i64)>),
     /// Provably never equal (distinct constants on a loop-free dimension).
     Disjoint,
     /// Structurally different index functions; `involved` is the set of
@@ -133,7 +210,7 @@ enum IndexRel {
 
 fn index_relation(a: &Access, b: &Access) -> IndexRel {
     debug_assert_eq!(a.array, b.array);
-    let mut shifts: Vec<(LoopId, u64)> = Vec::new();
+    let mut shifts: Vec<(LoopId, i64)> = Vec::new();
     let mut involved: BTreeSet<LoopId> = BTreeSet::new();
     let mut different = false;
     for (ea, eb) in a.indices.iter().zip(&b.indices) {
@@ -144,7 +221,7 @@ fn index_relation(a: &Access, b: &Access) -> IndexRel {
             }
             match ea.terms.as_slice() {
                 [(l, c)] if diff.constant % *c == 0 => {
-                    shifts.push((*l, (diff.constant / *c).unsigned_abs()));
+                    shifts.push((*l, diff.constant / *c));
                 }
                 [] => return IndexRel::Disjoint, // a[0] vs a[1]
                 _ => {
@@ -171,6 +248,131 @@ fn index_relation(a: &Access, b: &Access) -> IndexRel {
         IndexRel::Identical
     } else {
         IndexRel::ShiftVec(shifts)
+    }
+}
+
+/// Per-loop direction components for the access pair `(a, b)` over the
+/// `shared` nest (outermost first). A loop is pinned to an exact
+/// constant distance only when some index dimension is a single-term
+/// affine function of that loop on *both* sides with a divisible
+/// constant difference (`c*x + k_a` vs `c*x + k_b`); any appearance in
+/// a multi-term or structurally different dimension demotes the loop to
+/// `Any`, as does a conflicting pin from a second dimension.
+fn pair_components(a: &Access, b: &Access, shared: &[LoopId]) -> Vec<(LoopId, DirComp)> {
+    // pinned: loop -> Some(distance) or None on conflicting pins
+    let mut pinned: BTreeMap<LoopId, Option<i64>> = BTreeMap::new();
+    let mut fuzzy: BTreeSet<LoopId> = BTreeSet::new();
+    for (ea, eb) in a.indices.iter().zip(&b.indices) {
+        match (ea.terms.as_slice(), eb.terms.as_slice()) {
+            ([(la, ca)], [(lb, cb)])
+                if la == lb && ca == cb && *ca != 0 && (ea.constant - eb.constant) % *ca == 0 =>
+            {
+                // cell equality forces iter_b = iter_a + d on this loop
+                let d = (ea.constant - eb.constant) / *ca;
+                pinned
+                    .entry(*la)
+                    .and_modify(|e| {
+                        if *e != Some(d) {
+                            *e = None;
+                        }
+                    })
+                    .or_insert(Some(d));
+            }
+            _ => {
+                fuzzy.extend(ea.loops());
+                fuzzy.extend(eb.loops());
+            }
+        }
+    }
+    shared
+        .iter()
+        .map(|&l| {
+            let comp = match pinned.get(&l) {
+                Some(&Some(d)) if !fuzzy.contains(&l) => DirComp::Dist(d),
+                _ => DirComp::Any,
+            };
+            (l, comp)
+        })
+        .collect()
+}
+
+/// Public wrapper over the pair classifier for transform legality:
+/// per-loop components of the access pair `(a, b)` over `shared`
+/// (outermost first), *un-normalized* — `Dist(d)` means the aliasing
+/// cell satisfies `iter_b = iter_a + d` on that loop. Fusion legality
+/// needs this raw orientation (which side was the first nest), which
+/// the normalized [`DirVector`]s intentionally erase.
+pub fn access_pair_components(
+    a: &Access,
+    b: &Access,
+    shared: &[LoopId],
+) -> Vec<(LoopId, DirComp)> {
+    pair_components(a, b, shared)
+}
+
+/// Build the normalized direction/distance vector of one access pair.
+fn build_vector(
+    kind: DepKind,
+    src: StmtId,
+    dst: StmtId,
+    array: ArrayId,
+    shared: &[LoopId],
+    a: &Access,
+    b: &Access,
+) -> DirVector {
+    let mut entries = pair_components(a, b, shared);
+    if src == dst {
+        // Self-dependence refinement: iterations pinned equal on every
+        // other level must differ — strictly forward in time — on a
+        // sole unconstrained loop (the accumulation pattern: gemm's k).
+        let idx_loops: BTreeSet<LoopId> = a
+            .indices
+            .iter()
+            .chain(b.indices.iter())
+            .flat_map(|e| e.loops().collect::<Vec<_>>())
+            .collect();
+        let absent_any: Vec<usize> = entries
+            .iter()
+            .enumerate()
+            .filter(|(_, (l, c))| *c == DirComp::Any && !idx_loops.contains(l))
+            .map(|(i, _)| i)
+            .collect();
+        let any_total = entries.iter().filter(|(_, c)| *c == DirComp::Any).count();
+        if absent_any.len() == 1
+            && any_total == 1
+            && entries.iter().all(|(_, c)| c.is_eq() || *c == DirComp::Any)
+        {
+            entries[absent_any[0]].1 = DirComp::Pos;
+        }
+    }
+    // Lexicographic normalization: a leading negative constant means the
+    // dependence actually flows the other way.
+    let (mut kind, mut src, mut dst) = (kind, src, dst);
+    let lead = entries.iter().find_map(|&(_, c)| match c {
+        DirComp::Dist(0) => None,
+        c => Some(c),
+    });
+    if let Some(DirComp::Dist(d)) = lead {
+        if d < 0 {
+            for (_, c) in entries.iter_mut() {
+                if let DirComp::Dist(x) = c {
+                    *c = DirComp::Dist(-*x);
+                }
+            }
+            std::mem::swap(&mut src, &mut dst);
+            kind = match kind {
+                DepKind::Raw => DepKind::War,
+                DepKind::War => DepKind::Raw,
+                DepKind::Waw => DepKind::Waw,
+            };
+        }
+    }
+    DirVector {
+        kind,
+        src,
+        dst,
+        array,
+        entries,
     }
 }
 
@@ -231,6 +433,7 @@ pub fn analyze(k: &Kernel) -> DepAnalysis {
                         // constant distance vector: each shifted loop in the
                         // nest carries with its distance
                         for (l, d) in shifts {
+                            let d = d.unsigned_abs();
                             if d == 0 || !nest.contains(&l) {
                                 continue;
                             }
@@ -321,6 +524,7 @@ pub fn analyze(k: &Kernel) -> DepAnalysis {
                     // shifted shared loop (producer/consumer stencil pair)
                     if let IndexRel::ShiftVec(ref shifts) = rel {
                         for &(l, d) in shifts {
+                            let d = d.unsigned_abs();
                             if d >= 1 && shared.contains(&l) {
                                 let info = &mut per_loop[l.0 as usize];
                                 info.carried = true;
@@ -361,11 +565,74 @@ pub fn analyze(k: &Kernel) -> DepAnalysis {
         }
     }
 
+    // -- direction/distance vectors ------------------------------------------
+    // A clean second pass over the same access pairs: one normalized
+    // vector per (pair, kind), deduplicated. Self-vectors that are
+    // loop-independent (all `=`) constrain nothing and are dropped.
+    let mut dir_vectors: Vec<DirVector> = Vec::new();
+    let mut push_vec = |v: DirVector| {
+        if !dir_vectors.contains(&v) {
+            dir_vectors.push(v);
+        }
+    };
+    for &s in &stmt_ids {
+        let nest = k.stmt_meta(s).nest.clone();
+        let st = k.stmt(s).clone();
+        for w in &st.writes {
+            for (r, kind) in st
+                .reads
+                .iter()
+                .map(|r| (r, DepKind::Raw))
+                .chain(st.writes.iter().map(|r| (r, DepKind::Waw)))
+            {
+                if w.array != r.array || std::ptr::eq(w, r) {
+                    continue;
+                }
+                if index_relation(w, r) == IndexRel::Disjoint {
+                    continue;
+                }
+                let v = build_vector(kind, s, s, w.array, &nest, w, r);
+                if !v.loop_independent() {
+                    push_vec(v);
+                }
+            }
+        }
+    }
+    for (i, &s1) in stmt_ids.iter().enumerate() {
+        for &s2 in stmt_ids.iter().skip(i + 1) {
+            let nest1 = &k.stmt_meta(s1).nest;
+            let nest2 = &k.stmt_meta(s2).nest;
+            let shared: Vec<LoopId> = nest1
+                .iter()
+                .filter(|l| nest2.contains(l))
+                .copied()
+                .collect();
+            for (a1, w1) in k.stmt_accesses(s1) {
+                for (a2, w2) in k.stmt_accesses(s2) {
+                    if a1.array != a2.array || (!w1 && !w2) {
+                        continue;
+                    }
+                    if index_relation(a1, a2) == IndexRel::Disjoint {
+                        continue;
+                    }
+                    let kind = match (w1, w2) {
+                        (true, true) => DepKind::Waw,
+                        (true, false) => DepKind::Raw,
+                        (false, true) => DepKind::War,
+                        _ => unreachable!(),
+                    };
+                    push_vec(build_vector(kind, s1, s2, a1.array, &shared, a1, a2));
+                }
+            }
+        }
+    }
+
     DepAnalysis {
         deps,
         per_loop,
         stmt_dep,
         stmt_reductions,
+        dir_vectors,
     }
 }
 
@@ -479,6 +746,160 @@ mod tests {
             .iter()
             .any(|&(_, l, op)| op == OpKind::Add && da.per_loop[l.0 as usize].reduction);
         assert!(has_i_red);
+    }
+
+    #[test]
+    fn gemm_direction_vector_is_eq_eq_pos() {
+        let k = crate::benchmarks::kernel_gemm(16, 18, 20, DType::F32);
+        let da = analyze(&k);
+        // the += statement's self-RAW: (=, =, <) over (i, j, k)
+        let v = da
+            .dir_vectors
+            .iter()
+            .find(|v| v.src == v.dst && v.kind == DepKind::Raw && v.entries.len() == 3)
+            .expect("gemm self-RAW vector");
+        assert_eq!(v.entries[0].1, DirComp::Dist(0), "i is =");
+        assert_eq!(v.entries[1].1, DirComp::Dist(0), "j is =");
+        assert_eq!(v.entries[2].1, DirComp::Pos, "k is <");
+        assert_eq!(v.carrier(), Some(v.entries[2].0));
+    }
+
+    #[test]
+    fn distance_two_recurrence_vector() {
+        let mut kb = KernelBuilder::new("rec2", DType::F32);
+        let y = kb.array("y", &[100], ArrayDir::InOut);
+        kb.for_const("j", 2, 100, |kb, j| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(y, &[kb.v(j)])],
+                vec![kb.at(y, &[kb.vp(j, -2)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let da = analyze(&kb.finish());
+        let v = da.vectors_between(StmtId(0), StmtId(0)).next().expect("vector");
+        assert_eq!(v.kind, DepKind::Raw);
+        assert_eq!(v.entries, vec![(LoopId(0), DirComp::Dist(2))]);
+    }
+
+    #[test]
+    fn read_ahead_normalizes_to_forward_anti_dep() {
+        // a[i] = a[i+1] * 2: the RAW pair points backwards; normalization
+        // must flip it into a forward WAR of distance 1
+        let mut kb = KernelBuilder::new("anti", DType::F32);
+        let a = kb.array("a", &[64], ArrayDir::InOut);
+        kb.for_const("i", 0, 63, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(a, &[kb.v(i)])],
+                vec![kb.at(a, &[kb.vp(i, 1)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        let da = analyze(&kb.finish());
+        let v = da.vectors_between(StmtId(0), StmtId(0)).next().expect("vector");
+        assert_eq!(v.kind, DepKind::War, "read-ahead is an anti dependence");
+        assert_eq!(v.entries, vec![(LoopId(0), DirComp::Dist(1))]);
+    }
+
+    #[test]
+    fn output_dep_across_statements_is_loop_independent() {
+        // S0 and S1 both write b[i] each iteration: WAW with vector (=)
+        let mut kb = KernelBuilder::new("waw", DType::F32);
+        let b = kb.array("b", &[64], ArrayDir::Out);
+        let c = kb.array("c", &[64], ArrayDir::In);
+        kb.for_const("i", 0, 64, |kb, i| {
+            kb.stmt("S0", vec![kb.at(b, &[kb.v(i)])], vec![kb.at(c, &[kb.v(i)])], &[(OpKind::Add, 1)]);
+            kb.stmt("S1", vec![kb.at(b, &[kb.v(i)])], vec![kb.at(c, &[kb.v(i)])], &[(OpKind::Mul, 1)]);
+        });
+        let da = analyze(&kb.finish());
+        let v = da
+            .vectors_between(StmtId(0), StmtId(1))
+            .find(|v| v.kind == DepKind::Waw)
+            .expect("WAW vector");
+        assert!(v.loop_independent());
+        assert_eq!(v.src, StmtId(0), "textual order orients the edge");
+    }
+
+    #[test]
+    fn transposed_access_is_any_any() {
+        // a[i][j] = a[j][i]: neither loop's distance is representable
+        let mut kb = KernelBuilder::new("tr", DType::F32);
+        let a = kb.array("a", &[32, 32], ArrayDir::InOut);
+        kb.for_const("i", 0, 32, |kb, i| {
+            kb.for_const("j", 0, 32, |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![kb.at(a, &[kb.v(j), kb.v(i)])],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let da = analyze(&kb.finish());
+        let v = da.vectors_between(StmtId(0), StmtId(0)).next().expect("vector");
+        assert_eq!(v.component(LoopId(0)), Some(DirComp::Any));
+        assert_eq!(v.component(LoopId(1)), Some(DirComp::Any));
+    }
+
+    #[test]
+    fn triangular_bounds_keep_exact_distances() {
+        // for i, for j in [0, i): a[i][j] = a[i-1][j] — triangular inner
+        // bound, still an exact distance-1 vector on i
+        let mut kb = KernelBuilder::new("tri", DType::F32);
+        let a = kb.array("a", &[32, 32], ArrayDir::InOut);
+        kb.for_const("i", 1, 32, |kb, i| {
+            kb.for_expr("j", kb.c(0), kb.v(i), |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![kb.at(a, &[kb.vp(i, -1), kb.v(j)])],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let da = analyze(&kb.finish());
+        let v = da.vectors_between(StmtId(0), StmtId(0)).next().expect("vector");
+        assert_eq!(v.entries[0].1, DirComp::Dist(1), "i carries distance 1");
+        assert_eq!(v.entries[1].1, DirComp::Dist(0), "j is =");
+    }
+
+    #[test]
+    fn jacobi_shared_time_loop_is_any() {
+        let k = crate::benchmarks::kernel_jacobi_1d(10, 40, DType::F32);
+        let da = analyze(&k);
+        let t = LoopId(0);
+        let cross: Vec<&DirVector> = da
+            .dir_vectors
+            .iter()
+            .filter(|v| v.src != v.dst && v.component(t).is_some())
+            .collect();
+        assert!(!cross.is_empty(), "jacobi has cross-statement deps over t");
+        for v in cross {
+            assert_eq!(v.component(t), Some(DirComp::Any), "t is unbounded: {v:?}");
+        }
+    }
+
+    #[test]
+    fn vectors_are_deduplicated_and_normalized(){
+        for (name, k) in [
+            ("gemm", crate::benchmarks::kernel_gemm(8, 8, 8, DType::F32)),
+            ("jacobi", crate::benchmarks::kernel_jacobi_1d(6, 16, DType::F32)),
+            ("fw", crate::benchmarks::kernel_floyd_warshall(10, DType::F32)),
+        ] {
+            let da = analyze(&k);
+            for (i, v) in da.dir_vectors.iter().enumerate() {
+                assert!(
+                    !da.dir_vectors[i + 1..].contains(v),
+                    "{name}: duplicate vector {v:?}"
+                );
+                // normalization: the leading constant is never negative
+                let lead = v.entries.iter().find(|(_, c)| !c.is_eq());
+                if let Some(&(_, DirComp::Dist(d))) = lead {
+                    assert!(d > 0, "{name}: lex-negative vector {v:?}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod footprint;
 pub mod tripcount;
 
 pub use analysis::Analysis;
-pub use deps::{DepKind, Dependence, LoopDepInfo};
+pub use deps::{DepKind, Dependence, DirComp, DirVector, LoopDepInfo};
 pub use tripcount::TripCount;

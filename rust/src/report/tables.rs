@@ -515,9 +515,19 @@ pub fn serve_stats(data: &crate::util::json::Json) -> TextTable {
                         .join(" ")
                 })
                 .unwrap_or_default();
+            // per-op cache attribution (ops that never touch a cache —
+            // gen, stats — show the bare count)
+            let per_op = rec.get("cache");
+            let oc = |k: &str| u(per_op.and_then(|c| c.get(k)));
+            let (h, w, m) = (oc("hit"), oc("warm"), oc("miss"));
+            let count = if h + w + m > 0 {
+                format!("{} ({h} hit / {w} warm / {m} miss)", u(rec.get("count")))
+            } else {
+                u(rec.get("count")).to_string()
+            };
             t.row(vec![
                 format!("op {op}"),
-                u(rec.get("count")).to_string(),
+                count,
                 u(rec.get("errors")).to_string(),
                 lat,
             ]);
@@ -546,13 +556,22 @@ mod serve_stats_tests {
                 "cache":{"hits":3,"misses":2,"warm":1,"model_hits":2,
                          "evictions":0,"hit_rate":0.5,
                          "entries":{"solves":2,"models":2,"warm":2}},
-                "ops":{"solve":{"count":6,"errors":1,
+                "ops":{"gen":{"count":2,"errors":0,
+                              "cache":{"hit":0,"warm":0,"miss":0},
+                              "latency_ms_log2":[2,0,0,0,0,0,0,0,0,0,0,0,0,0,0,0]},
+                       "solve":{"count":6,"errors":1,
+                                "cache":{"hit":3,"warm":1,"miss":2},
                                 "latency_ms_log2":[0,2,0,4,0,0,0,0,0,0,0,0,0,0,0,0]}}}"#,
         )
         .unwrap();
         let out = serve_stats(&data).render();
         assert!(out.contains("hit rate 50%"), "{out}");
         assert!(out.contains("op solve"), "{out}");
+        // per-op attribution rides in the count column
+        assert!(out.contains("6 (3 hit / 1 warm / 2 miss)"), "{out}");
+        // ops with no cache traffic keep the bare count
+        assert!(out.contains("op gen"), "{out}");
+        assert!(!out.contains("2 (0 hit"), "{out}");
         assert!(out.contains("~2ms:2"), "{out}");
         assert!(out.contains("~8ms:4"), "{out}");
         assert!(out.contains("queue depth 1"), "{out}");

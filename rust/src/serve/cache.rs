@@ -1,7 +1,8 @@
 //! The daemon's warm cache: fingerprint-keyed LRU over built bound
-//! models, compiled tapes, and completed `SolveResult`s.
+//! models, compiled tapes, completed `SolveResult`s, and completed
+//! `dse` responses.
 //!
-//! Three maps, one eviction budget (`--cache-entries`):
+//! Four maps, one eviction budget (`--cache-entries`):
 //!
 //! * **solve cache** — [`SolveKey`] → `Arc<SolveResult>`. Only results
 //!   with `optimal == true` are admitted: a completed solve is a pure
@@ -29,6 +30,11 @@
 //!   unreachable by the restricted candidate menus, and
 //!   `solve_jobs_seeded` documents that such a seed may *improve* the
 //!   top-k — which would make warm answers depend on daemon history.
+//! * **dse replay cache** — [`DseKey`] → the rendered response
+//!   payload. The key's kernel fingerprint is *spaced*: `dse
+//!   --transform` mixes its enumeration bounds into the hash so
+//!   variant-space results cache-partition correctly (the same kernel
+//!   ± `--transform` never shares a line).
 //!
 //! Even within one warm key, a seeded solve is not *proven* equal to
 //! the cold solve (the menus are derived from trip counts, which the
@@ -46,6 +52,7 @@
 use crate::model::sym::{BoundModel, CompiledModel};
 use crate::nlp::SolveResult;
 use crate::pragma::Design;
+use crate::util::json::Json;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -103,6 +110,32 @@ pub struct WarmKey {
     pub fine: bool,
 }
 
+/// Replay key for a completed `dse` request. A finished exploration is
+/// a pure function of (kernel structure, search space, device,
+/// evaluator, engine, bound-pruning switch): the DSE clock is
+/// simulated and every engine's schedule is deterministic, so the
+/// rendered response replays bit-identically. The kernel fingerprint
+/// is *spaced* ([`fingerprint_spaced`]) — `dse --transform` mixes its
+/// enumeration bounds into the hash, so the same kernel with and
+/// without `--transform` (or with different bounds) occupies distinct
+/// cache lines. `jobs` is excluded for the same reason as in
+/// [`SolveKey`].
+///
+/// [`fingerprint_spaced`]: super::fingerprint::fingerprint_spaced
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DseKey {
+    /// Spaced exact structural fingerprint of the kernel.
+    pub kernel_fp: u64,
+    /// Target device name.
+    pub device: String,
+    /// Evaluator tag.
+    pub evaluator: String,
+    /// Engine registry name, or `transform` for the variant search.
+    pub engine: String,
+    /// Lower-bound pruning switch (changes the explored schedule).
+    pub prune_bound: bool,
+}
+
 /// Model-cache key: the symbolic build depends only on (kernel, device).
 type ModelKey = (u64, String);
 
@@ -120,9 +153,9 @@ struct ModelEntry {
 /// Cumulative cache counters (monotone; the `stats` op snapshots them).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CacheStats {
-    /// Solve-cache hits (bit-identical replay).
+    /// Replay-cache hits (bit-identical replay), solve and dse alike.
     pub hits: u64,
-    /// Solve-cache misses with no warm seed either.
+    /// Replay-cache misses with no warm seed either.
     pub misses: u64,
     /// Solve-cache misses answered with warm-started solves.
     pub warm: u64,
@@ -151,6 +184,7 @@ pub struct WarmCache {
     solves: HashMap<SolveKey, SolveEntry>,
     models: HashMap<ModelKey, ModelEntry>,
     warm: HashMap<WarmKey, (Vec<Design>, u64)>,
+    dses: HashMap<DseKey, (Arc<Json>, u64)>,
     /// Cumulative counters.
     pub stats: CacheStats,
 }
@@ -165,6 +199,7 @@ impl WarmCache {
             solves: HashMap::new(),
             models: HashMap::new(),
             warm: HashMap::new(),
+            dses: HashMap::new(),
             stats: CacheStats::default(),
         }
     }
@@ -195,7 +230,37 @@ impl WarmCache {
         self.warm.get(key).map(|(d, _)| d.clone())
     }
 
-    /// Count one dispatched solve as warm-started or a cold miss.
+    /// Spaced-key lookup for a completed `dse` response. A hit returns
+    /// the stored payload verbatim (bit-identical replay) and refreshes
+    /// its LRU stamp.
+    pub fn lookup_dse(&mut self, key: &DseKey) -> Option<Arc<Json>> {
+        let tick = self.bump();
+        match self.dses.get_mut(key) {
+            Some((data, t)) => {
+                *t = tick;
+                self.stats.hits += 1;
+                Some(data.clone())
+            }
+            None => None,
+        }
+    }
+
+    /// Admit a completed `dse` response for replay (simulated clocks
+    /// make every run a pure function of its [`DseKey`]).
+    pub fn insert_dse(&mut self, key: DseKey, data: Arc<Json>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.bump();
+        self.dses.insert(key, (data, tick));
+        if self.dses.len() > self.capacity {
+            evict_min(&mut self.dses, |(_, t)| *t);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Count one dispatched solve or exploration as warm-started or a
+    /// cold miss.
     pub fn note_dispatch(&mut self, warm_started: bool) {
         if warm_started {
             self.stats.warm += 1;
@@ -296,9 +361,15 @@ impl WarmCache {
         }
     }
 
-    /// Live entry counts `(solves, models, warm)` for the `stats` op.
-    pub fn sizes(&self) -> (usize, usize, usize) {
-        (self.solves.len(), self.models.len(), self.warm.len())
+    /// Live entry counts `(solves, models, warm, dses)` for the
+    /// `stats` op.
+    pub fn sizes(&self) -> (usize, usize, usize, usize) {
+        (
+            self.solves.len(),
+            self.models.len(),
+            self.warm.len(),
+            self.dses.len(),
+        )
     }
 }
 
@@ -419,7 +490,38 @@ mod tests {
         let mut c = WarmCache::new(0);
         c.insert_solve(key(1), 1, &result(true), false);
         assert!(c.lookup_solve(&key(1)).is_none());
-        assert_eq!(c.sizes(), (0, 0, 0));
+        c.insert_dse(dse_key(1, "nlpdse"), Arc::new(Json::obj()));
+        assert!(c.lookup_dse(&dse_key(1, "nlpdse")).is_none());
+        assert_eq!(c.sizes(), (0, 0, 0, 0));
+    }
+
+    fn dse_key(fp: u64, engine: &str) -> DseKey {
+        DseKey {
+            kernel_fp: fp,
+            device: "xilinx-u200".into(),
+            evaluator: "rust".into(),
+            engine: engine.into(),
+            prune_bound: false,
+        }
+    }
+
+    #[test]
+    fn dse_replay_is_partitioned_by_key_fields() {
+        let mut c = WarmCache::new(4);
+        assert!(c.lookup_dse(&dse_key(1, "nlpdse")).is_none());
+        let mut payload = Json::obj();
+        payload.set("best_gflops", 1.5);
+        let arc = Arc::new(payload);
+        c.insert_dse(dse_key(1, "nlpdse"), arc.clone());
+        let hit = c.lookup_dse(&dse_key(1, "nlpdse")).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &arc), "replay is the stored payload");
+        assert_eq!(c.stats.hits, 1);
+        // spaced fingerprints and engines partition the map
+        assert!(c.lookup_dse(&dse_key(2, "nlpdse")).is_none());
+        assert!(c.lookup_dse(&dse_key(1, "transform")).is_none());
+        let mut pruned = dse_key(1, "nlpdse");
+        pruned.prune_bound = true;
+        assert!(c.lookup_dse(&pruned).is_none());
     }
 
     #[test]

@@ -50,6 +50,33 @@ pub fn fingerprint(k: &Kernel) -> Fingerprint {
     }
 }
 
+/// [`fingerprint`] within a named search space.
+///
+/// Ops whose answer depends on more than the kernel structure — `dse
+/// --transform` explores an enumerated variant space whose extent is
+/// set by the request's enumeration bounds — mix a `space`
+/// discriminator into *both* hashes, so results computed over
+/// different spaces never share a cache line: the same kernel with and
+/// without `--transform` (or with different bounds) gets distinct
+/// exact keys, and a warm seed from one space cannot leak into
+/// another. The empty space is the plain structural [`fingerprint`].
+pub fn fingerprint_spaced(k: &Kernel, space: &str) -> Fingerprint {
+    let base = fingerprint(k);
+    if space.is_empty() {
+        return base;
+    }
+    let mix = |seed: u64| {
+        let mut h = DefaultHasher::new();
+        seed.hash(&mut h);
+        space.hash(&mut h);
+        h.finish()
+    };
+    Fingerprint {
+        exact: mix(base.exact),
+        warm: mix(base.warm),
+    }
+}
+
 fn hash_kernel(k: &Kernel, exact: bool) -> u64 {
     let mut h = DefaultHasher::new();
     if exact {
@@ -157,6 +184,23 @@ mod tests {
         assert_ne!(fs.exact, f6.exact, "precision changes the exact key");
         assert_eq!(fs.warm, fm.warm, "same nest shape warm-matches");
         assert_eq!(fs.warm, f6.warm, "precision is warm-invariant");
+    }
+
+    #[test]
+    fn spaced_fingerprints_partition_by_space_string() {
+        let k = benchmarks::kernel_gemm(60, 70, 80, DType::F32);
+        let base = fingerprint(&k);
+        assert_eq!(fingerprint_spaced(&k, ""), base, "empty space is the plain key");
+        let t1 = fingerprint_spaced(&k, "transform variants=24 depth=2 perm=4");
+        let t2 = fingerprint_spaced(&k, "transform variants=8 depth=1 perm=4");
+        assert_ne!(t1.exact, base.exact, "± transform must split the exact key");
+        assert_ne!(t1.warm, base.warm, "warm seeds must not cross spaces");
+        assert_ne!(t1.exact, t2.exact, "different bounds are different spaces");
+        // deterministic: same kernel + same space → same key
+        assert_eq!(
+            t1,
+            fingerprint_spaced(&k, "transform variants=24 depth=2 perm=4")
+        );
     }
 
     #[test]

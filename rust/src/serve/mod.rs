@@ -43,7 +43,7 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use cache::{CacheStats, SolveKey, WarmCache, WarmKey};
-pub use fingerprint::{fingerprint, Fingerprint};
+pub use cache::{CacheStats, DseKey, SolveKey, WarmCache, WarmKey};
+pub use fingerprint::{fingerprint, fingerprint_spaced, Fingerprint};
 pub use server::{install_signal_handlers, spawn, ServerHandle};
 pub use session::{handle_line, Control, ServeConfig, ServeState};

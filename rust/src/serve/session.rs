@@ -25,9 +25,19 @@
 //!
 //! `emit --design_from solve` routes through the same path, so repeated
 //! emissions of a cached kernel are instant and attributed.
+//!
+//! `dse` requests replay through their own spaced-fingerprint cache
+//! ([`DseKey`]): the simulated DSE clock makes every completed
+//! exploration a pure function of its key, and `dse` with
+//! `"transform": true` mixes the variant-enumeration bounds into the
+//! fingerprint so the same kernel ± transform occupies distinct cache
+//! lines. Every op's `hit`/`warm`/`miss` attribution is also counted
+//! per op (the `stats` payload's per-op `cache` object) — the global
+//! [`CacheStats`](super::cache::CacheStats) counters alone cannot say
+//! *which* op's traffic warmed or missed.
 
-use super::cache::{SolveKey, WarmCache};
-use super::fingerprint::fingerprint;
+use super::cache::{DseKey, SolveKey, WarmCache};
+use super::fingerprint::{fingerprint, fingerprint_spaced};
 use super::protocol::{self, Request};
 use crate::benchmarks::{self, Size};
 use crate::engine::{Evaluator, Explorer};
@@ -38,6 +48,7 @@ use crate::model::sym::{BoundModel, PartialDesign};
 use crate::nlp::{self, BatchEvaluator, NlpProblem, SolveResult};
 use crate::poly::Analysis;
 use crate::pragma::Design;
+use crate::transform::{run_transform_dse, TransformConfig, TransformOutcome};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -72,6 +83,12 @@ pub const LAT_BUCKETS: usize = 16;
 struct OpRecord {
     count: u64,
     errors: u64,
+    /// Requests answered from a replay cache (`cache: "hit"`).
+    hit: u64,
+    /// Requests solved with warm-start seeds (`cache: "warm"`).
+    warm: u64,
+    /// Requests computed cold (`cache: "miss"`).
+    miss: u64,
     lat: [u64; LAT_BUCKETS],
 }
 
@@ -120,7 +137,7 @@ impl ServeState {
         self.queue_depth.fetch_sub(1, Ordering::SeqCst);
     }
 
-    fn record(&self, op: &str, elapsed: Duration, ok: bool) {
+    fn record(&self, op: &str, elapsed: Duration, ok: bool, cache: Option<&str>) {
         let ms = elapsed.as_millis() as u64;
         let idx = (u64::BITS - ms.clamp(1, 1 << (LAT_BUCKETS - 1)).leading_zeros() - 1) as usize;
         let mut ops = self.ops.lock().unwrap();
@@ -128,6 +145,12 @@ impl ServeState {
         rec.count += 1;
         if !ok {
             rec.errors += 1;
+        }
+        match cache {
+            Some("hit") => rec.hit += 1,
+            Some("warm") => rec.warm += 1,
+            Some("miss") => rec.miss += 1,
+            _ => {}
         }
         rec.lat[idx] += 1;
     }
@@ -185,7 +208,11 @@ pub fn handle_line(state: &ServeState, line: &str, emit: &mut dyn FnMut(&str)) -
     let t0 = Instant::now();
     let out = dispatch(state, &req, emit);
     let ok = out.is_ok();
-    state.record(&req.op, t0.elapsed(), ok);
+    let cache_tag = match &out {
+        Ok((tag, _)) => *tag,
+        Err(_) => None,
+    };
+    state.record(&req.op, t0.elapsed(), ok, cache_tag);
     match out {
         Ok((cache, data)) => emit(&protocol::result_line(&req.id, &req.op, cache, data)),
         Err(f) => emit(&protocol::error_line(&req.id, &f.msg, f.diagnostic.as_deref())),
@@ -418,17 +445,82 @@ fn op_solve(
     Ok((Some(tag), solve_json(&k, &a, &dev, &r)))
 }
 
+/// The `(variant × pragma)` enumeration bounds of a `dse` request with
+/// `"transform": true`.
+fn transform_config(req: &Request) -> Result<TransformConfig, Fail> {
+    let mut tcfg = TransformConfig::default();
+    if let Some(v) = req.u64_opt("max_variants")? {
+        if v == 0 {
+            return Err(String::from("\"max_variants\" must be >= 1").into());
+        }
+        tcfg.max_variants = v as usize;
+    }
+    if let Some(v) = req.u64_opt("max_depth")? {
+        tcfg.max_depth = v as usize;
+    }
+    if let Some(v) = req.u64_opt("max_perm_loops")? {
+        tcfg.max_perm_loops = v as usize;
+    }
+    Ok(tcfg)
+}
+
+/// Render a `(variant × pragma)` search as the `dse` response payload:
+/// per-variant fates, the winning rewrite chain, and the winner's best
+/// design (pragmas are named against the *winning* kernel's loops).
+fn transform_dse_json(o: &TransformOutcome, dev: &Device) -> Json {
+    let wk = &o.variant.kernel;
+    let a = Analysis::new(wk);
+    let trace_json = |trace: &[String]| {
+        let mut t = Json::Arr(vec![]);
+        for s in trace {
+            t.push(Json::from(s.as_str()));
+        }
+        t
+    };
+    let mut variants = Json::Arr(vec![]);
+    for r in &o.records {
+        let mut v = Json::obj();
+        v.set("index", r.index)
+            .set("trace", trace_json(&r.trace))
+            .set("lower_bound", r.lower_bound)
+            .set("pruned", r.pruned);
+        if let Some(c) = r.cycles {
+            v.set("cycles", c);
+        }
+        if let Some(g) = r.gflops {
+            v.set("gflops", g);
+        }
+        variants.push(v);
+    }
+    let mut data = Json::obj();
+    data.set("kernel", o.kernel.as_str())
+        .set("engine", "transform")
+        .set("space", o.config.describe())
+        .set("variants", variants)
+        .set("variants_pruned", o.pruned)
+        .set("winner", o.winner)
+        .set("winner_trace", trace_json(&o.winning_trace()))
+        .set("best_gflops", o.outcome.best_gflops);
+    match &o.outcome.best {
+        Some((d, cycles)) => {
+            data.set("best_cycles", *cycles)
+                .set("gflops", a.gflops(*cycles, dev.freq_hz))
+                .set("best_pragmas", design_json(wk, d));
+        }
+        None => {
+            data.set("best_pragmas", Json::Null);
+        }
+    }
+    data
+}
+
 fn op_dse(
     state: &ServeState,
     req: &Request,
     emit: &mut dyn FnMut(&str),
 ) -> Result<(Option<&'static str>, Json), Fail> {
     let k = resolve_kernel(req)?;
-    let engine = req.str_opt("engine")?.unwrap_or_else(|| "nlpdse".into());
-    let eval = match evaluator_tag(req)?.as_str() {
-        "sym" => Evaluator::sym(),
-        _ => Evaluator::rust(),
-    };
+    let eval_tag = evaluator_tag(req)?;
     let jobs = match req.u64_opt("jobs")? {
         Some(0) => return Err(String::from("\"jobs\" must be >= 1").into()),
         Some(n) => n as usize,
@@ -439,37 +531,81 @@ fn op_dse(
         jobs,
         ..Default::default()
     };
+    let transform = req.bool_opt("transform")?.unwrap_or(false);
+    let tcfg = transform_config(req)?;
+    let engine = if transform {
+        "transform".to_string()
+    } else {
+        req.str_opt("engine")?.unwrap_or_else(|| "nlpdse".into())
+    };
+    let dev = Device::u200();
+
+    // replay lookup: the spaced fingerprint partitions variant spaces,
+    // so the same kernel ± `transform` (or with different enumeration
+    // bounds) never shares a cache line
+    let space = if transform {
+        format!("transform {}", tcfg.describe())
+    } else {
+        String::new()
+    };
+    let fp = fingerprint_spaced(&k, &space);
+    let key = DseKey {
+        kernel_fp: fp.exact,
+        device: dev.name.to_string(),
+        evaluator: eval_tag.clone(),
+        engine: engine.clone(),
+        prune_bound: dse_cfg.prune_bound,
+    };
+    if let Some(hit) = state.cache.lock().unwrap().lookup_dse(&key) {
+        return Ok((Some("hit"), (*hit).clone()));
+    }
+
     emit(&protocol::progress_line(
         &req.id,
         &req.op,
         &format!("exploring with engine `{engine}`"),
     ));
-    let explorer = Explorer::custom(k)
-        .evaluator(eval)
-        .dse_config(dse_cfg)
-        .engine(&engine)?;
-    let o = explorer.run()?;
-    let k = explorer.kernel_ref();
-    let mut data = Json::obj();
-    data.set("kernel", o.kernel.as_str())
-        .set("engine", o.engine.as_str())
-        .set("best_gflops", o.best_gflops)
-        .set("wall_minutes", o.wall_minutes)
-        .set("synth_calls", o.synth_calls)
-        .set("summary", o.summary().as_str());
-    if let Some(lb) = o.lower_bound {
-        data.set("lower_bound_cycles", lb);
-    }
-    match &o.best {
-        Some((d, cycles)) => {
-            data.set("best_cycles", *cycles)
-                .set("best_pragmas", design_json(k, d));
+    let data = if transform {
+        let eval = solver_evaluator(&eval_tag);
+        let o = run_transform_dse(&k, &dev, &dse_cfg, &tcfg, eval.as_ref());
+        transform_dse_json(&o, &dev)
+    } else {
+        let eval = match eval_tag.as_str() {
+            "sym" => Evaluator::sym(),
+            _ => Evaluator::rust(),
+        };
+        let explorer = Explorer::custom(k)
+            .evaluator(eval)
+            .dse_config(dse_cfg)
+            .engine(&engine)?;
+        let o = explorer.run()?;
+        let k = explorer.kernel_ref();
+        let mut data = Json::obj();
+        data.set("kernel", o.kernel.as_str())
+            .set("engine", o.engine.as_str())
+            .set("best_gflops", o.best_gflops)
+            .set("wall_minutes", o.wall_minutes)
+            .set("synth_calls", o.synth_calls)
+            .set("summary", o.summary().as_str());
+        if let Some(lb) = o.lower_bound {
+            data.set("lower_bound_cycles", lb);
         }
-        None => {
-            data.set("best_pragmas", Json::Null);
+        match &o.best {
+            Some((d, cycles)) => {
+                data.set("best_cycles", *cycles)
+                    .set("best_pragmas", design_json(k, d));
+            }
+            None => {
+                data.set("best_pragmas", Json::Null);
+            }
         }
-    }
-    Ok((None, data))
+        data
+    };
+    let mut cache = state.cache.lock().unwrap();
+    cache.note_dispatch(false);
+    cache.insert_dse(key, Arc::new(data.clone()));
+    drop(cache);
+    Ok((Some("miss"), data))
 }
 
 fn op_bound(req: &Request) -> Result<(Option<&'static str>, Json), Fail> {
@@ -637,7 +773,7 @@ fn op_stats(state: &ServeState) -> Json {
 
     let cache = state.cache.lock().unwrap();
     let s = cache.stats;
-    let (solves, models, warm) = cache.sizes();
+    let (solves, models, warm, dses) = cache.sizes();
     drop(cache);
     let mut cj = Json::obj();
     cj.set("hits", s.hits)
@@ -650,18 +786,27 @@ fn op_stats(state: &ServeState) -> Json {
     entries
         .set("solves", solves)
         .set("models", models)
-        .set("warm", warm);
+        .set("warm", warm)
+        .set("dses", dses);
     cj.set("entries", entries);
     data.set("cache", cj);
 
     let ops = state.ops.lock().unwrap();
     let mut oj = Json::obj();
     for (op, rec) in ops.iter() {
+        let mut cache_counts = Json::obj();
+        cache_counts
+            .set("hit", rec.hit)
+            .set("warm", rec.warm)
+            .set("miss", rec.miss);
         let mut r = Json::obj();
-        r.set("count", rec.count).set("errors", rec.errors).set(
-            "latency_ms_log2",
-            rec.lat.iter().copied().collect::<Vec<u64>>(),
-        );
+        r.set("count", rec.count)
+            .set("errors", rec.errors)
+            .set("cache", cache_counts)
+            .set(
+                "latency_ms_log2",
+                rec.lat.iter().copied().collect::<Vec<u64>>(),
+            );
         oj.set(op.as_str(), r);
     }
     data.set("ops", oj);
@@ -797,10 +942,66 @@ mod tests {
         );
         let solve = data.get("ops").unwrap().get("solve").expect("solve op stats");
         assert_eq!(solve.get("count").and_then(|j| j.as_u64()), Some(2));
+        // per-op attribution: the eponymous miss then hit, no warms
+        let per_op = solve.get("cache").expect("per-op cache counters");
+        assert_eq!(per_op.get("miss").and_then(|j| j.as_u64()), Some(1));
+        assert_eq!(per_op.get("hit").and_then(|j| j.as_u64()), Some(1));
+        assert_eq!(per_op.get("warm").and_then(|j| j.as_u64()), Some(0));
         let histo = solve.get("latency_ms_log2").and_then(|j| j.as_arr()).unwrap();
         assert_eq!(histo.len(), LAT_BUCKETS);
         let total: u64 = histo.iter().filter_map(|j| j.as_u64()).sum();
         assert_eq!(total, 2);
+    }
+
+    #[test]
+    fn dse_replays_and_partitions_by_transform_space() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let cache = |lines: &[Json]| {
+            terminal(lines)
+                .get("cache")
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+        };
+        let plain = r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"id":1}"#;
+        let (first, _) = call(&state, plain);
+        assert_eq!(cache(&first).as_deref(), Some("miss"));
+        let (second, _) = call(&state, plain);
+        assert_eq!(cache(&second).as_deref(), Some("hit"));
+        assert_eq!(
+            terminal(&first).get("data").unwrap().to_line(),
+            terminal(&second).get("data").unwrap().to_line(),
+            "dse replay must be bit-identical"
+        );
+        // the same kernel with `transform` explores a different space:
+        // the spaced fingerprint gives it a distinct exact key, so it
+        // starts cold — then replays from its own line
+        let t = r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"transform":true,"max_variants":2,"id":2}"#;
+        let (third, _) = call(&state, t);
+        assert_eq!(cache(&third).as_deref(), Some("miss"));
+        let data = terminal(&third).get("data").unwrap();
+        assert_eq!(data.get("engine").and_then(|j| j.as_str()), Some("transform"));
+        assert!(!data.get("variants").and_then(|j| j.as_arr()).unwrap().is_empty());
+        let (fourth, _) = call(&state, t);
+        assert_eq!(cache(&fourth).as_deref(), Some("hit"));
+        assert_eq!(
+            terminal(&third).get("data").unwrap().to_line(),
+            terminal(&fourth).get("data").unwrap().to_line(),
+            "transform replay must be bit-identical"
+        );
+        // per-op attribution saw all four: 2 cold, 2 replayed
+        let (lines, _) = call(&state, r#"{"op":"stats"}"#);
+        let data = terminal(&lines).get("data").unwrap().clone();
+        let dse = data.get("ops").unwrap().get("dse").expect("dse op stats");
+        let per_op = dse.get("cache").unwrap();
+        assert_eq!(per_op.get("hit").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(per_op.get("miss").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(per_op.get("warm").and_then(|j| j.as_u64()), Some(0));
+        // both spaces live side by side in the replay map
+        let entries = data.get("cache").unwrap().get("entries").unwrap();
+        assert_eq!(entries.get("dses").and_then(|j| j.as_u64()), Some(2));
     }
 
     #[test]

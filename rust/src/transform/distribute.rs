@@ -1,0 +1,110 @@
+//! Loop distribution: split one loop's body into two sibling copies.
+//!
+//! `for i { A; B }` becomes `for i { A } for i { B }`. Within one
+//! iteration of any enclosing loop, all of `A`'s iterations now run
+//! before all of `B`'s. A crossing dependence whose source is in `A`
+//! is therefore always still satisfied — running the whole first copy
+//! early only over-satisfies it — while one whose source is in `B`
+//! (which the original interleaving ordered before later `A`
+//! iterations) is broken unless an enclosing loop above the split
+//! carries it with a proven-positive distance (distribution never
+//! reorders across enclosing iterations). An `Any` component above the
+//! split refuses conservatively.
+
+use crate::ir::{Kernel, Loop, LoopId, Node, StmtId};
+use crate::poly::deps::{DepAnalysis, DirComp, DirVector};
+use std::collections::BTreeSet;
+
+use super::legality::LegalityCert;
+use super::rebuild::{find_loop, rebuild, splice, stmts_under};
+
+/// The rule string recorded in distribution certificates.
+pub const RULE: &str = "distribute: every crossing dependence flows first-copy to second-copy \
+                        or is carried above the split";
+
+/// Whether one crossing vector survives distributing `at`.
+/// `src_in_first`: the vector's source statement lies in the group kept
+/// in the textually first copy.
+fn crossing_legal(v: &DirVector, at: LoopId, src_in_first: bool) -> bool {
+    for &(l, c) in &v.entries {
+        if l == at {
+            // all enclosing levels are `=`: the pair's order within this
+            // enclosing iteration is decided by the copies' sequence
+            return src_in_first;
+        }
+        match c {
+            DirComp::Dist(0) => continue,
+            DirComp::Dist(d) if d > 0 => return true, // outer loop enforces
+            DirComp::Pos => return true,
+            _ => return false, // Any / negative above: refuse
+        }
+    }
+    src_in_first // `at` missing from the shared nest: conservative
+}
+
+/// Certify and apply: split loop `at`'s body after `split` nodes.
+pub fn apply(
+    k: &Kernel,
+    da: &DepAnalysis,
+    at: LoopId,
+    split: usize,
+) -> Result<(Kernel, LegalityCert), String> {
+    let node = find_loop(&k.roots, at)
+        .ok_or_else(|| format!("loop {} not found", at))?
+        .clone();
+    let m = node.body.len();
+    if m < 2 || split == 0 || split >= m {
+        return Err(format!(
+            "split {split} outside (0, {m}) for loop {}",
+            k.loop_name(at)
+        ));
+    }
+    let a_stmts: BTreeSet<StmtId> = node.body[..split].iter().flat_map(stmts_under).collect();
+    let b_stmts: BTreeSet<StmtId> = node.body[split..].iter().flat_map(stmts_under).collect();
+
+    let mut checked = Vec::new();
+    for v in &da.dir_vectors {
+        let forward = a_stmts.contains(&v.src) && b_stmts.contains(&v.dst);
+        let backward = b_stmts.contains(&v.src) && a_stmts.contains(&v.dst);
+        if !forward && !backward {
+            continue;
+        }
+        if !crossing_legal(v, at, forward) {
+            return Err(format!(
+                "dependence {:?} {}→{} flows second-copy→first across the cut at {}",
+                v.kind,
+                v.src,
+                v.dst,
+                k.loop_name(at)
+            ));
+        }
+        checked.push(v.clone());
+    }
+    let cert = LegalityCert {
+        rule: RULE,
+        checked,
+    };
+
+    let halves = [
+        Node::Loop(Loop {
+            id: node.id,
+            name: node.name.clone(),
+            lb: node.lb.clone(),
+            ub: node.ub.clone(),
+            body: node.body[..split].to_vec(),
+        }),
+        Node::Loop(Loop {
+            id: node.id,
+            name: node.name.clone(),
+            lb: node.lb.clone(),
+            ub: node.ub.clone(),
+            body: node.body[split..].to_vec(),
+        }),
+    ];
+    let (new_roots, hit) = splice(&k.roots, at, &halves);
+    debug_assert!(hit);
+    Ok((
+        rebuild(&k.name, k.dtype, k.arrays.clone(), &new_roots),
+        cert,
+    ))
+}

@@ -1,0 +1,136 @@
+//! The `(variant × pragma)` design-space exploration.
+//!
+//! Enumerate legal variants ([`enumerate`]), then run the NLP ladder
+//! (Algorithm 1) per variant — cheapest first: each variant's
+//! [`BoundModel`] free-design lower bound is computed before any solve,
+//! and a variant whose bound already meets or exceeds the incumbent's
+//! measured cycles is pruned wholesale, ladder unrun. The untransformed
+//! original is always variant 0 and is never pruned, so the search
+//! cannot return a worse objective than the no-transform baseline; a
+//! transformed variant replaces the incumbent only on strictly better
+//! cycles (ties keep the earlier, shorter-trace winner).
+
+use crate::dse::{run_nlp_dse_with_bound, DseConfig, DseOutcome};
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::model::{BoundModel, PartialDesign};
+use crate::nlp::BatchEvaluator;
+use crate::poly::Analysis;
+
+use super::{enumerate, TransformConfig, Variant};
+
+/// What happened to one enumerated variant.
+#[derive(Clone, Debug)]
+pub struct VariantRecord {
+    /// Index in enumeration order (0 = original).
+    pub index: usize,
+    /// Rendered rewrite chain (empty for the original).
+    pub trace: Vec<String>,
+    /// Free-design objective lower bound (cycles) of this variant.
+    pub lower_bound: f64,
+    /// True when the bound met the incumbent and the ladder was skipped.
+    pub pruned: bool,
+    /// Best measured cycles, when the ladder ran and synthesized
+    /// anything.
+    pub cycles: Option<f64>,
+    /// Best GF/s, when the ladder ran.
+    pub gflops: Option<f64>,
+}
+
+/// What one `(variant × pragma)` search produced.
+#[derive(Clone, Debug)]
+pub struct TransformOutcome {
+    /// Kernel name.
+    pub kernel: String,
+    /// Enumeration bounds used.
+    pub config: TransformConfig,
+    /// Per-variant fates, in enumeration order.
+    pub records: Vec<VariantRecord>,
+    /// Index of the winning variant.
+    pub winner: usize,
+    /// The winning variant itself — `emit` lowers `variant.kernel`
+    /// with zero codegen changes.
+    pub variant: Variant,
+    /// The winning variant's ladder outcome.
+    pub outcome: DseOutcome,
+    /// Variants pruned by their lower bound.
+    pub pruned: u32,
+}
+
+impl TransformOutcome {
+    /// The winning rewrite chain (empty when the original won).
+    pub fn winning_trace(&self) -> Vec<String> {
+        self.variant.trace_strings()
+    }
+}
+
+/// Run the `(variant × pragma)` DSE on `k`.
+pub fn run_transform_dse(
+    k: &Kernel,
+    dev: &Device,
+    cfg: &DseConfig,
+    tcfg: &TransformConfig,
+    evaluator: &dyn BatchEvaluator,
+) -> TransformOutcome {
+    let variants = enumerate(k, tcfg);
+    let mut records = Vec::with_capacity(variants.len());
+    let mut incumbent = f64::INFINITY;
+    let mut winner = 0usize;
+    let mut best: Option<(Variant, DseOutcome)> = None;
+    let mut pruned = 0u32;
+
+    for (i, v) in variants.iter().enumerate() {
+        let a = Analysis::new(&v.kernel);
+        let bound = BoundModel::build(&v.kernel, &a, dev);
+        let lb = bound.lower_bound(&PartialDesign::free(v.kernel.n_loops()));
+        // variant 0 (the original) always runs: it seeds the incumbent
+        // and guarantees the never-worse-than-baseline property
+        if i > 0 && lb >= incumbent {
+            pruned += 1;
+            records.push(VariantRecord {
+                index: i,
+                trace: v.trace_strings(),
+                lower_bound: lb,
+                pruned: true,
+                cycles: None,
+                gflops: None,
+            });
+            continue;
+        }
+        let outcome = run_nlp_dse_with_bound(&v.kernel, &a, dev, cfg, evaluator, &bound);
+        let cycles = outcome.best.as_ref().map(|(_, c)| *c);
+        records.push(VariantRecord {
+            index: i,
+            trace: v.trace_strings(),
+            lower_bound: lb,
+            pruned: false,
+            cycles,
+            gflops: Some(outcome.best_gflops),
+        });
+        let better = match (cycles, best.is_some()) {
+            (Some(c), _) => c < incumbent,
+            // keep the original as placeholder winner even if its
+            // ladder synthesized nothing
+            (None, false) => true,
+            (None, true) => false,
+        };
+        if better {
+            if let Some(c) = cycles {
+                incumbent = c;
+            }
+            winner = i;
+            best = Some((v.clone(), outcome));
+        }
+    }
+
+    let (variant, outcome) = best.expect("variant 0 always runs");
+    TransformOutcome {
+        kernel: k.name.clone(),
+        config: tcfg.clone(),
+        records,
+        winner,
+        variant,
+        outcome,
+        pruned,
+    }
+}

@@ -1,0 +1,169 @@
+//! Bounded, deterministic variant enumeration.
+//!
+//! Breadth-first over rewrite chains: depth 1 applies every legal
+//! candidate to the original, depth 2 to each depth-1 survivor, and so
+//! on up to [`TransformConfig::max_depth`]. Candidates are generated in
+//! a fixed order (interchanges by nest then lexicographic permutation,
+//! distributions by loop id then split, fusions in pre-order position)
+//! and duplicates are dropped by exact structural fingerprint, so for a
+//! given kernel and config the variant list — indices, traces, and all
+//! — is reproducible. A replayed `gen`-corpus failure therefore needs
+//! only the corpus seed and this config to name its variant exactly.
+
+use crate::ir::{Kernel, LoopId, Node};
+use crate::serve::fingerprint;
+use std::collections::BTreeSet;
+
+use super::{apply_with, interchange, AppliedRewrite, Rewrite, Variant};
+
+/// Deterministic enumeration bounds. All knobs are part of the serve
+/// cache key space, so two daemons with different bounds never share
+/// variant-space cache entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TransformConfig {
+    /// Total variants kept, original included.
+    pub max_variants: usize,
+    /// Longest rewrite chain explored.
+    pub max_depth: usize,
+    /// Widest perfect nest considered for interchange (permutation
+    /// count is factorial in this).
+    pub max_perm_loops: usize,
+}
+
+impl Default for TransformConfig {
+    fn default() -> Self {
+        TransformConfig {
+            max_variants: 24,
+            max_depth: 2,
+            max_perm_loops: 4,
+        }
+    }
+}
+
+impl TransformConfig {
+    /// Canonical rendering, mixed into serve fingerprints and printed
+    /// in fuzz replay lines.
+    pub fn describe(&self) -> String {
+        format!(
+            "variants={} depth={} perm={}",
+            self.max_variants, self.max_depth, self.max_perm_loops
+        )
+    }
+}
+
+/// All candidate rewrites of `k`, in the fixed enumeration order.
+/// Candidates are structural only — legality is decided by `apply_with`.
+pub fn candidates(k: &Kernel, cfg: &TransformConfig) -> Vec<Rewrite> {
+    let mut out = Vec::new();
+    for root in k.nest_roots() {
+        if let Some(chain) = interchange::perfect_chain(k, root) {
+            if chain.len() >= 2 && chain.len() <= cfg.max_perm_loops {
+                for idx in permutations(chain.len()) {
+                    let perm: Vec<LoopId> = idx.iter().map(|&i| chain[i]).collect();
+                    if perm != chain {
+                        out.push(Rewrite::Interchange { root, perm });
+                    }
+                }
+            }
+        }
+    }
+    for lid in 0..k.n_loops() as u32 {
+        let l = LoopId(lid);
+        if let Some(node) = super::rebuild::find_loop(&k.roots, l) {
+            for split in 1..node.body.len() {
+                out.push(Rewrite::Distribute { at: l, split });
+            }
+        }
+    }
+    collect_fusions(&k.roots, &mut out);
+    out
+}
+
+fn collect_fusions(nodes: &[Node], out: &mut Vec<Rewrite>) {
+    for w in nodes.windows(2) {
+        if let [Node::Loop(a), Node::Loop(b)] = w {
+            if a.lb == b.lb && a.ub == b.ub {
+                out.push(Rewrite::Fuse {
+                    first: a.id,
+                    second: b.id,
+                });
+            }
+        }
+    }
+    for n in nodes {
+        if let Node::Loop(l) = n {
+            collect_fusions(&l.body, out);
+        }
+    }
+}
+
+/// All permutations of `0..n` in lexicographic order.
+fn permutations(n: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut cur = Vec::with_capacity(n);
+    let mut used = vec![false; n];
+    perm_rec(n, &mut cur, &mut used, &mut out);
+    out
+}
+
+fn perm_rec(n: usize, cur: &mut Vec<usize>, used: &mut [bool], out: &mut Vec<Vec<usize>>) {
+    if cur.len() == n {
+        out.push(cur.clone());
+        return;
+    }
+    for i in 0..n {
+        if used[i] {
+            continue;
+        }
+        used[i] = true;
+        cur.push(i);
+        perm_rec(n, cur, used, out);
+        cur.pop();
+        used[i] = false;
+    }
+}
+
+/// Enumerate legal variants of `k` breadth-first under `cfg`. The
+/// original is always variant 0; every other entry carries a non-empty
+/// certified trace. Structurally identical kernels (exact fingerprint)
+/// are enumerated once, whichever chain reaches them first.
+pub fn enumerate(k: &Kernel, cfg: &TransformConfig) -> Vec<Variant> {
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    seen.insert(fingerprint(k).exact);
+    let mut variants = vec![Variant::original(k)];
+    let mut frontier: Vec<usize> = vec![0];
+    for _depth in 0..cfg.max_depth {
+        if variants.len() >= cfg.max_variants {
+            break;
+        }
+        let mut next_frontier = Vec::new();
+        for vi in frontier {
+            let base = variants[vi].clone();
+            let da = crate::poly::deps::analyze(&base.kernel);
+            for rw in candidates(&base.kernel, cfg) {
+                if variants.len() >= cfg.max_variants {
+                    break;
+                }
+                let Ok((kernel, cert)) = apply_with(&base.kernel, &da, &rw) else {
+                    continue;
+                };
+                if !seen.insert(fingerprint(&kernel).exact) {
+                    continue;
+                }
+                let mut trace = base.trace.clone();
+                trace.push(AppliedRewrite {
+                    desc: rw.describe(&base.kernel),
+                    rewrite: rw,
+                    cert,
+                });
+                next_frontier.push(variants.len());
+                variants.push(Variant { kernel, trace });
+            }
+        }
+        if next_frontier.is_empty() {
+            break;
+        }
+        frontier = next_frontier;
+    }
+    variants
+}

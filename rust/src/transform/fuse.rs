@@ -1,0 +1,150 @@
+//! Loop fusion: merge two adjacent sibling nests with identical bounds.
+//!
+//! `for i { A } for i' { B }` becomes `for i { A; B }` when `i` and
+//! `i'` share `[lb, ub)`. Fusion makes iteration `B(i)` run before
+//! `A(i+1), A(i+2), …` that originally preceded it, so legality is per
+//! conflicting access pair across the nests: with the second nest's
+//! iterator identified with the first's, the *raw* (un-normalized)
+//! fused-level distance `d` (meaning `iter_B = iter_A + d` on the
+//! aliasing cell) must satisfy `d >= 0` — the producing `A` iteration
+//! still precedes the consuming `B` iteration after fusion. A non-zero
+//! constant component at an outer shared level orders the pair
+//! identically in both programs and ends the check early; an `Any`
+//! component refuses.
+
+use crate::ir::{Access, AffineExpr, Kernel, Loop, LoopId, Node};
+use crate::poly::deps::{access_pair_components, DepKind, DirComp, DirVector};
+
+use super::legality::LegalityCert;
+use super::rebuild::{find_loop, rebuild, splice, substitute};
+
+/// The rule string recorded in fusion certificates.
+pub const RULE: &str = "fuse: raw fused-level distance is non-negative for every conflicting pair";
+
+/// The fusion criterion for one raw pair vector (entries outermost
+/// first, ending at the fused level).
+fn pair_legal(comps: &[(LoopId, DirComp)], fused: LoopId) -> bool {
+    for &(l, c) in comps {
+        if l == fused {
+            return matches!(c, DirComp::Dist(d) if d >= 0);
+        }
+        match c {
+            DirComp::Dist(0) => continue,
+            // a non-`=` outer level orders the pair identically in both
+            // programs: fusion only reorders within enclosing iterations
+            DirComp::Dist(_) | DirComp::Pos => return true,
+            DirComp::Any => return false,
+        }
+    }
+    false // fused level missing from the shared nest: conservative refuse
+}
+
+/// Certify and apply: fuse adjacent sibling `second` into `first`.
+pub fn apply(k: &Kernel, first: LoopId, second: LoopId) -> Result<(Kernel, LegalityCert), String> {
+    if first == second {
+        return Err("cannot fuse a loop with itself".into());
+    }
+    let m1 = k.loop_meta(first);
+    let m2 = k.loop_meta(second);
+    if m1.parent != m2.parent {
+        return Err(format!(
+            "{} and {} are not siblings",
+            k.loop_name(first),
+            k.loop_name(second)
+        ));
+    }
+    let siblings: &[Node] = match m1.parent {
+        Some(p) => &find_loop(&k.roots, p).expect("parent exists").body,
+        None => &k.roots,
+    };
+    let pos_of = |id: LoopId| {
+        siblings
+            .iter()
+            .position(|n| matches!(n, Node::Loop(l) if l.id == id))
+    };
+    let (p1, p2) = match (pos_of(first), pos_of(second)) {
+        (Some(a), Some(b)) => (a, b),
+        _ => return Err("loop not found among its siblings".into()),
+    };
+    if p2 != p1 + 1 {
+        return Err(format!(
+            "{} does not immediately follow {}",
+            k.loop_name(second),
+            k.loop_name(first)
+        ));
+    }
+    let (Node::Loop(l1), Node::Loop(l2)) = (&siblings[p1], &siblings[p2]) else {
+        unreachable!("positions matched Loop nodes")
+    };
+    if l1.lb != l2.lb || l1.ub != l2.ub {
+        return Err(format!(
+            "bounds of {} and {} differ",
+            k.loop_name(first),
+            k.loop_name(second)
+        ));
+    }
+
+    // Legality: raw pair vectors over the shared nest *after*
+    // identifying `second`'s iterator with `first`'s. Normalized
+    // whole-kernel vectors erase which nest ran first, so the check
+    // derives orientation-preserving components directly.
+    let shared = k.loop_path(first);
+    let subst = |e: &AffineExpr| -> AffineExpr {
+        let mut out = AffineExpr::constant(e.constant);
+        for &(l, c) in &e.terms {
+            out.add_term(if l == second { first } else { l }, c);
+        }
+        out
+    };
+    let mut checked = Vec::new();
+    for &sa in &m1.stmts {
+        for &sb in &m2.stmts {
+            for (aa, wa) in k.stmt_accesses(sa) {
+                for (ab, wb) in k.stmt_accesses(sb) {
+                    if aa.array != ab.array || (!wa && !wb) {
+                        continue;
+                    }
+                    let ab2 = Access::new(ab.array, ab.indices.iter().map(&subst).collect());
+                    let comps = access_pair_components(aa, &ab2, &shared);
+                    if !pair_legal(&comps, first) {
+                        return Err(format!(
+                            "dependence on {} between {sa} and {sb} reverses under fusion",
+                            k.array(aa.array).name
+                        ));
+                    }
+                    let kind = match (wa, wb) {
+                        (true, true) => DepKind::Waw,
+                        (true, false) => DepKind::Raw,
+                        _ => DepKind::War,
+                    };
+                    checked.push(DirVector {
+                        kind,
+                        src: sa,
+                        dst: sb,
+                        array: aa.array,
+                        entries: comps,
+                    });
+                }
+            }
+        }
+    }
+    let cert = LegalityCert {
+        rule: RULE,
+        checked,
+    };
+
+    let mut body = l1.body.clone();
+    body.extend(l2.body.iter().map(|n| substitute(n, second, first)));
+    let fused = Node::Loop(Loop {
+        id: l1.id,
+        name: l1.name.clone(),
+        lb: l1.lb.clone(),
+        ub: l1.ub.clone(),
+        body,
+    });
+    let (roots, hit) = splice(&k.roots, first, &[fused]);
+    debug_assert!(hit);
+    let (roots, hit) = splice(&roots, second, &[]);
+    debug_assert!(hit);
+    Ok((rebuild(&k.name, k.dtype, k.arrays.clone(), &roots), cert))
+}

@@ -1,0 +1,120 @@
+//! Loop interchange: permute the loops of a top-level perfect nest.
+//!
+//! Legal iff no dependence direction vector is reversed by the
+//! permutation ([`legality::permuted_vector_legal`]). Structural
+//! preconditions: the nest must be perfect (each level's body is a
+//! single loop until a straight-line innermost body), the root must be
+//! top-level, and no loop bound may reference a loop that the
+//! permutation moves below it (triangular nests admit only
+//! order-respecting permutations).
+
+use crate::ir::{Kernel, Loop, LoopId, Node};
+use crate::poly::deps::DepAnalysis;
+
+use super::legality::{permuted_vector_legal, LegalityCert};
+use super::rebuild::{find_loop, rebuild, splice};
+
+/// The rule string recorded in interchange certificates.
+pub const RULE: &str = "interchange: leading non-`=` component stays forward under permutation";
+
+/// The perfect-nest chain rooted at `root` (outermost first), if the
+/// nest is perfect: every non-innermost body is exactly one loop, the
+/// innermost body is non-empty straight-line code.
+pub fn perfect_chain(k: &Kernel, root: LoopId) -> Option<Vec<LoopId>> {
+    let mut chain = Vec::new();
+    let mut cur = find_loop(&k.roots, root)?;
+    loop {
+        chain.push(cur.id);
+        if cur.body.iter().all(|n| matches!(n, Node::Stmt(_))) {
+            return if cur.body.is_empty() { None } else { Some(chain) };
+        }
+        match cur.body.as_slice() {
+            [Node::Loop(inner)] => cur = inner,
+            _ => return None,
+        }
+    }
+}
+
+/// Certify and apply `perm` to the perfect nest rooted at `root`.
+pub fn apply(
+    k: &Kernel,
+    da: &DepAnalysis,
+    root: LoopId,
+    perm: &[LoopId],
+) -> Result<(Kernel, LegalityCert), String> {
+    if k.loop_meta(root).parent.is_some() {
+        return Err(format!("loop {} is not a nest root", k.loop_name(root)));
+    }
+    let chain =
+        perfect_chain(k, root).ok_or_else(|| format!("{} is not a perfect nest", k.loop_name(root)))?;
+    let mut sorted = perm.to_vec();
+    sorted.sort();
+    let mut chain_sorted = chain.clone();
+    chain_sorted.sort();
+    if sorted != chain_sorted {
+        return Err("permutation does not cover the nest chain".into());
+    }
+    if perm == chain.as_slice() {
+        return Err("identity permutation".into());
+    }
+    // structural precondition: every bound references only loops that
+    // stay above it in the new order
+    for (p, &l) in perm.iter().enumerate() {
+        let (lb, ub) = k.loop_bounds(l);
+        for dep in lb.loops().chain(ub.loops()) {
+            if !perm[..p].contains(&dep) {
+                return Err(format!(
+                    "bound of {} references {}, which the permutation moves below it",
+                    k.loop_name(l),
+                    k.loop_name(dep)
+                ));
+            }
+        }
+    }
+    // legality: every vector touching the band survives the reorder
+    let mut checked = Vec::new();
+    for v in &da.dir_vectors {
+        if !v.entries.iter().any(|(l, _)| chain.contains(l)) {
+            continue;
+        }
+        if !permuted_vector_legal(v, perm) {
+            return Err(format!(
+                "dependence {:?} {}→{} reversed by permutation",
+                v.kind, v.src, v.dst
+            ));
+        }
+        checked.push(v.clone());
+    }
+    let cert = LegalityCert {
+        rule: RULE,
+        checked,
+    };
+
+    // rebuild the nest in permuted order: each loop keeps its own
+    // (id, name, bounds); the innermost statements move wholesale
+    let innermost_body = find_loop(&k.roots, *chain.last().unwrap())
+        .expect("chain tail exists")
+        .body
+        .clone();
+    let mut nest: Option<Node> = None;
+    for &l in perm.iter().rev() {
+        let lp = find_loop(&k.roots, l).expect("chain loop exists");
+        let body = match nest.take() {
+            Some(inner) => vec![inner],
+            None => innermost_body.clone(),
+        };
+        nest = Some(Node::Loop(Loop {
+            id: lp.id,
+            name: lp.name.clone(),
+            lb: lp.lb.clone(),
+            ub: lp.ub.clone(),
+            body,
+        }));
+    }
+    let (new_roots, hit) = splice(&k.roots, root, &[nest.expect("non-empty chain")]);
+    debug_assert!(hit);
+    Ok((
+        rebuild(&k.name, k.dtype, k.arrays.clone(), &new_roots),
+        cert,
+    ))
+}

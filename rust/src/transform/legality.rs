@@ -1,0 +1,120 @@
+//! Legality certificates and their verification.
+//!
+//! Every admitted rewrite carries a [`LegalityCert`]: the rule name and
+//! the exact direction/distance vectors the rule examined. The
+//! certificate is *machine-checkable*: [`verify_rewrite`] re-derives it
+//! from scratch against the pre-rewrite kernel and compares, and
+//! [`verify_trace`] replays a whole variant chain from the original
+//! kernel, verifying every step and structurally diffing the final
+//! kernel against the variant's. The property suites run both over the
+//! PolyBench registry and the generated corpus.
+//!
+//! The per-rewrite criteria (DESIGN.md §12):
+//!
+//! * **interchange** — for every dependence vector touching the
+//!   permuted band, the leading non-`=` component in the *permuted*
+//!   order must stay forward: a positive constant distance or a proven-
+//!   positive (`<`) component. An `Any` (`*`) component is admitted
+//!   only when the permutation preserves the relative order of all the
+//!   vector's non-`=` components (then the permuted vector is
+//!   order-equivalent to the original, which is lexicographically
+//!   non-negative by construction).
+//! * **distribution** — a dependence crossing the cut is legal when an
+//!   enclosing loop above the split carries it with a proven-positive
+//!   distance (distribution never reorders across enclosing
+//!   iterations), or — with all `=` components above — when its source
+//!   lies in the textually first group (the first copy running wholly
+//!   early only over-satisfies first→second flows). A source in the
+//!   second group with no positive outer carrier is broken by the
+//!   split; `Any` above the split refuses conservatively.
+//! * **fusion** — per conflicting access pair across the two nests,
+//!   the un-normalized fused-level distance (`iter_second = iter_first
+//!   + d`) must satisfy `d >= 0` unless an outer constant level already
+//!   orders the pair; `Any` anywhere refuses.
+
+use crate::ir::Kernel;
+use crate::poly::deps::{DirComp, DirVector};
+
+use super::{Rewrite, Variant};
+
+/// The dependence facts one rewrite's admission rested on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LegalityCert {
+    /// The rule that admitted the rewrite.
+    pub rule: &'static str,
+    /// Direction vectors examined, exactly as the rule saw them (for
+    /// fusion these are raw, un-normalized pair vectors).
+    pub checked: Vec<DirVector>,
+}
+
+/// Re-derive the certificate of `rw` against `pre` and require it to
+/// match `cert` bit-for-bit. `Err` when the rewrite no longer applies,
+/// is no longer legal, or was admitted on different facts.
+pub fn verify_rewrite(pre: &Kernel, rw: &Rewrite, cert: &LegalityCert) -> Result<Kernel, String> {
+    let (next, fresh) = super::apply(pre, rw)?;
+    if &fresh == cert {
+        Ok(next)
+    } else {
+        Err(format!(
+            "certificate mismatch for {rw:?}: recorded {} vector(s) under rule `{}`, \
+             re-derivation yields {} under `{}`",
+            cert.checked.len(),
+            cert.rule,
+            fresh.checked.len(),
+            fresh.rule,
+        ))
+    }
+}
+
+/// Replay a variant's whole rewrite chain from `original`, verifying
+/// each step's certificate, then structurally diff the replayed kernel
+/// against the variant's.
+pub fn verify_trace(original: &Kernel, v: &Variant) -> Result<(), String> {
+    let mut k = original.clone();
+    for (i, step) in v.trace.iter().enumerate() {
+        k = verify_rewrite(&k, &step.rewrite, &step.cert)
+            .map_err(|e| format!("step {} ({}): {e}", i + 1, step.desc))?;
+    }
+    match k.structural_diff(&v.kernel) {
+        None => Ok(()),
+        Some(d) => Err(format!("replayed kernel diverges from variant: {d}")),
+    }
+}
+
+/// The interchange criterion for one vector under a permuted loop
+/// order (outermost first). See the module docs.
+pub(crate) fn permuted_vector_legal(v: &DirVector, order: &[crate::ir::LoopId]) -> bool {
+    for &l in order {
+        match v.component(l) {
+            None => continue, // not part of this vector's shared nest
+            Some(DirComp::Dist(0)) => continue,
+            Some(DirComp::Dist(d)) if d > 0 => return true,
+            Some(DirComp::Dist(_)) => return false, // negative would lead
+            Some(DirComp::Pos) => return true,
+            Some(DirComp::Any) => return relative_order_preserved(v, order),
+        }
+    }
+    true // loop-independent under this order
+}
+
+/// Whether `order` keeps all of `v`'s non-`=` components in their
+/// original relative order (sufficient for legality: the permuted
+/// vector is then order-equivalent to the original).
+fn relative_order_preserved(v: &DirVector, order: &[crate::ir::LoopId]) -> bool {
+    let mut last: Option<usize> = None;
+    for (l, c) in &v.entries {
+        if c.is_eq() {
+            continue;
+        }
+        let Some(pos) = order.iter().position(|x| x == l) else {
+            return false; // a constrained loop left the band: refuse
+        };
+        if let Some(p) = last {
+            if pos < p {
+                return false;
+            }
+        }
+        last = Some(pos);
+    }
+    true
+}

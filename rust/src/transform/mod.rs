@@ -1,0 +1,497 @@
+//! Pre-pragma, legality-checked loop transformations and the
+//! `(variant × pragma)` DSE mode (ISSUE 7).
+//!
+//! The paper optimizes pragmas on a *fixed* loop nest; the FPGA'25
+//! follow-up ("A Unified Framework for Automated Code Transformation
+//! and Pragma Insertion", PAPERS.md) lets the same NLP model choose
+//! among *transformed variants* of the nest. This module supplies that
+//! variant space:
+//!
+//! * [`Rewrite`] — the three structural rewrites: loop **interchange**
+//!   (permute a perfect nest), loop **distribution** (split one loop's
+//!   body into two sibling copies), loop **fusion** (merge adjacent
+//!   compatible sibling nests);
+//! * every application is admitted by a [`LegalityCert`] derived from
+//!   the [`poly::deps`](crate::poly::deps) direction/distance vectors
+//!   ([`DirVector`](crate::poly::deps::DirVector)) — and every
+//!   certificate is *machine-checkable*: [`legality::verify_trace`]
+//!   replays a variant's rewrite chain from the original kernel,
+//!   re-derives each certificate, and structurally diffs the result;
+//! * [`enumerate`](enumerate::enumerate) — a bounded, deterministic,
+//!   breadth-first [`Variant`] enumerator deduplicated by exact
+//!   structural fingerprint;
+//! * [`dse`](mod@dse) — the `(variant × pragma)` search: the NLP ladder
+//!   (Algorithm 1) per variant, with
+//!   [`BoundModel::lower_bound`](crate::model::BoundModel::lower_bound)
+//!   pruning whole variants whose free-design bound already exceeds the
+//!   incumbent. The untransformed original always runs first, so the
+//!   mode never returns a worse objective than the no-transform
+//!   baseline.
+//!
+//! Variants are plain [`ir::Kernel`](crate::ir::Kernel)s — dense
+//! pre-order ids restored by [`rebuild`](rebuild::rebuild) — so pragma
+//! spaces, evaluators, codegen, and the `.knl` round trip all apply
+//! unchanged.
+
+pub mod distribute;
+pub mod dse;
+pub mod enumerate;
+pub mod fuse;
+pub mod interchange;
+pub mod legality;
+pub mod rebuild;
+
+pub use dse::{run_transform_dse, TransformOutcome, VariantRecord};
+pub use enumerate::{enumerate, TransformConfig};
+pub use legality::{verify_rewrite, verify_trace, LegalityCert};
+
+use crate::ir::{Kernel, LoopId};
+use crate::poly::deps::DepAnalysis;
+
+/// One structural rewrite, expressed over the loop ids of the kernel it
+/// is applied to (ids are renumbered by the application itself, so a
+/// chain of rewrites names each step's ids, not the original's).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Rewrite {
+    /// Reorder the perfect-nest chain rooted at the top-level loop
+    /// `root` into `perm` (the full chain, new outermost first).
+    Interchange {
+        /// Nest root (must be top-level and perfect).
+        root: LoopId,
+        /// The permuted chain, new outermost first.
+        perm: Vec<LoopId>,
+    },
+    /// Split loop `at`'s body after its first `split` nodes into two
+    /// sibling copies of the loop.
+    Distribute {
+        /// The loop being distributed.
+        at: LoopId,
+        /// Number of leading body nodes kept in the first copy.
+        split: usize,
+    },
+    /// Merge adjacent sibling loop `second` into `first` (identical
+    /// bounds; `second`'s body is appended to `first`'s).
+    Fuse {
+        /// The surviving loop.
+        first: LoopId,
+        /// The loop fused away.
+        second: LoopId,
+    },
+}
+
+impl Rewrite {
+    /// Human-readable rendering against the pre-rewrite kernel.
+    pub fn describe(&self, k: &Kernel) -> String {
+        match self {
+            Rewrite::Interchange { root, perm } => {
+                let names: Vec<&str> = perm.iter().map(|&l| k.loop_name(l)).collect();
+                format!("interchange {} -> ({})", k.loop_name(*root), names.join(","))
+            }
+            Rewrite::Distribute { at, split } => {
+                format!("distribute {} @ {}", k.loop_name(*at), split)
+            }
+            Rewrite::Fuse { first, second } => {
+                format!("fuse {} + {}", k.loop_name(*first), k.loop_name(*second))
+            }
+        }
+    }
+}
+
+/// A rewrite together with the certificate that admitted it and its
+/// rendering against the kernel it was applied to.
+#[derive(Clone, Debug)]
+pub struct AppliedRewrite {
+    /// The rewrite, over pre-rewrite loop ids.
+    pub rewrite: Rewrite,
+    /// `rewrite.describe(..)` at application time.
+    pub desc: String,
+    /// The dependence facts that admitted it.
+    pub cert: LegalityCert,
+}
+
+/// A transformed kernel plus the rewrite chain that produced it.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    /// The transformed kernel (a plain, finalized `ir::Kernel`).
+    pub kernel: Kernel,
+    /// Rewrites applied, in order, from the original kernel.
+    pub trace: Vec<AppliedRewrite>,
+}
+
+impl Variant {
+    /// The untransformed original.
+    pub fn original(k: &Kernel) -> Variant {
+        Variant {
+            kernel: k.clone(),
+            trace: Vec::new(),
+        }
+    }
+    /// No rewrites applied.
+    pub fn is_original(&self) -> bool {
+        self.trace.is_empty()
+    }
+    /// The rendered rewrite chain (empty for the original).
+    pub fn trace_strings(&self) -> Vec<String> {
+        self.trace.iter().map(|a| a.desc.clone()).collect()
+    }
+}
+
+/// Apply one rewrite: certify legality against `k`'s dependence
+/// direction vectors, then rebuild. `Err(reason)` when the rewrite is
+/// structurally inapplicable or refused by the legality rule.
+pub fn apply(k: &Kernel, rw: &Rewrite) -> Result<(Kernel, LegalityCert), String> {
+    apply_with(k, &crate::poly::deps::analyze(k), rw)
+}
+
+/// [`apply`] over a caller-owned dependence analysis of `k` (the
+/// enumerator analyzes each frontier kernel once and tries every
+/// candidate against it).
+pub fn apply_with(
+    k: &Kernel,
+    da: &DepAnalysis,
+    rw: &Rewrite,
+) -> Result<(Kernel, LegalityCert), String> {
+    match rw {
+        Rewrite::Interchange { root, perm } => interchange::apply(k, da, *root, perm),
+        Rewrite::Distribute { at, split } => distribute::apply(k, da, *at, *split),
+        Rewrite::Fuse { first, second } => fuse::apply(k, *first, *second),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::{ArrayDir, DType, KernelBuilder, OpKind, StmtId};
+    use crate::serve::fingerprint::fingerprint;
+
+    /// A perfect 3-nest matmul: `for i { for j { for k {
+    /// C[i][j] += A[i][k] * B[k][j] } } }` (the PolyBench `gemm`
+    /// registry kernel is deliberately imperfect — beta-scaling sibling
+    /// nest — so interchange tests build their own).
+    fn mm() -> Kernel {
+        let mut kb = KernelBuilder::new("mm", DType::F32);
+        let c = kb.array("C", &[16, 18], ArrayDir::InOut);
+        let a = kb.array("A", &[16, 20], ArrayDir::In);
+        let b = kb.array("B", &[20, 18], ArrayDir::In);
+        kb.for_const("i", 0, 16, |kb, i| {
+            kb.for_const("j", 0, 18, |kb, j| {
+                kb.for_const("k", 0, 20, |kb, kk| {
+                    kb.stmt(
+                        "S0",
+                        vec![kb.at(c, &[kb.v(i), kb.v(j)])],
+                        vec![
+                            kb.at(c, &[kb.v(i), kb.v(j)]),
+                            kb.at(a, &[kb.v(i), kb.v(kk)]),
+                            kb.at(b, &[kb.v(kk), kb.v(j)]),
+                        ],
+                        &[(OpKind::Mul, 2), (OpKind::Add, 1)],
+                    );
+                });
+            });
+        });
+        kb.finish()
+    }
+
+    #[test]
+    fn mm_interchange_kji_is_legal_and_certified() {
+        let k = mm();
+        let rw = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(2), LoopId(1), LoopId(0)],
+        };
+        let (k2, cert) = apply(&k, &rw).expect("mm admits any permutation");
+        assert_eq!(cert.rule, interchange::RULE);
+        assert!(!cert.checked.is_empty(), "the += self-RAW must be examined");
+        // ids renumber pre-order: the new outermost loop is k
+        assert_eq!(k2.loop_name(LoopId(0)), "k");
+        assert_eq!(k2.loop_name(LoopId(2)), "i");
+        assert_eq!(k2.n_loops(), k.n_loops());
+        assert_eq!(k2.n_stmts(), k.n_stmts());
+        assert!(k2.structural_diff(&k).is_some(), "the nest actually moved");
+        // the certificate re-derives bit-for-bit
+        legality::verify_rewrite(&k, &rw, &cert).expect("certificate verifies");
+    }
+
+    #[test]
+    fn interchange_refuses_reversed_vector() {
+        // a[i+1][j] = a[i][j+1]: self-RAW distance (1, -1) — swapping
+        // i and j would lead with -1
+        let mut kb = KernelBuilder::new("skew", DType::F32);
+        let a = kb.array("a", &[70, 70], ArrayDir::InOut);
+        kb.for_const("i", 0, 63, |kb, i| {
+            kb.for_const("j", 0, 63, |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.vp(i, 1), kb.v(j)])],
+                    vec![kb.at(a, &[kb.v(i), kb.vp(j, 1)])],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(1), LoopId(0)],
+        };
+        let err = apply(&k, &rw).expect_err("(1,-1) must refuse interchange");
+        assert!(err.contains("reversed"), "got: {err}");
+    }
+
+    #[test]
+    fn interchange_rejects_identity_and_partial_permutations() {
+        let k = mm();
+        let id = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(0), LoopId(1), LoopId(2)],
+        };
+        assert!(apply(&k, &id).is_err());
+        let partial = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(1), LoopId(0)],
+        };
+        assert!(apply(&k, &partial).is_err());
+    }
+
+    #[test]
+    fn triangular_bound_blocks_structural_interchange() {
+        // for i { for j in i.. } — j's lower bound names i, so (j, i)
+        // is structurally inapplicable whatever the dependences say
+        let mut kb = KernelBuilder::new("tri", DType::F32);
+        let a = kb.array("a", &[64, 64], ArrayDir::Out);
+        kb.for_const("i", 0, 64, |kb, i| {
+            kb.for_expr("j", kb.v(i), kb.c(64), |kb, j| {
+                kb.stmt(
+                    "S0",
+                    vec![kb.at(a, &[kb.v(i), kb.v(j)])],
+                    vec![],
+                    &[(OpKind::Add, 1)],
+                );
+            });
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(1), LoopId(0)],
+        };
+        let err = apply(&k, &rw).expect_err("triangular bound must refuse");
+        assert!(err.contains("bound"), "got: {err}");
+    }
+
+    /// `for i { b[i] = a[i]; c[i] = b[i-1] }`: the crossing RAW is
+    /// carried at i but flows first-copy→second-copy — distributable.
+    #[test]
+    fn distribute_producer_consumer_is_legal() {
+        let mut kb = KernelBuilder::new("pc", DType::F32);
+        let a = kb.array("a", &[64], ArrayDir::In);
+        let b = kb.array("b", &[64], ArrayDir::InOut);
+        let c = kb.array("c", &[64], ArrayDir::Out);
+        kb.for_const("i", 1, 64, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(b, &[kb.v(i)])],
+                vec![kb.at(a, &[kb.v(i)])],
+                &[(OpKind::Add, 1)],
+            );
+            kb.stmt(
+                "S1",
+                vec![kb.at(c, &[kb.v(i)])],
+                vec![kb.at(b, &[kb.vp(i, -1)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Distribute {
+            at: LoopId(0),
+            split: 1,
+        };
+        let (k2, cert) = apply(&k, &rw).expect("forward crossing distributes");
+        assert_eq!(cert.rule, distribute::RULE);
+        assert_eq!(k2.nest_roots().len(), 2, "two sibling copies");
+        assert_eq!(k2.n_stmts(), 2);
+        legality::verify_rewrite(&k, &rw, &cert).expect("certificate verifies");
+    }
+
+    /// `for i { a2[i] = c[i-1]; c[i] = a1[i] }`: the RAW source sits in
+    /// the second group — distribution would read c before writing it.
+    #[test]
+    fn distribute_refuses_backward_crossing() {
+        let mut kb = KernelBuilder::new("bw", DType::F32);
+        let a1 = kb.array("a1", &[64], ArrayDir::In);
+        let a2 = kb.array("a2", &[64], ArrayDir::Out);
+        let c = kb.array("c", &[64], ArrayDir::InOut);
+        kb.for_const("i", 1, 64, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(a2, &[kb.v(i)])],
+                vec![kb.at(c, &[kb.vp(i, -1)])],
+                &[(OpKind::Add, 1)],
+            );
+            kb.stmt(
+                "S1",
+                vec![kb.at(c, &[kb.v(i)])],
+                vec![kb.at(a1, &[kb.v(i)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Distribute {
+            at: LoopId(0),
+            split: 1,
+        };
+        let err = apply(&k, &rw).expect_err("backward carried crossing must refuse");
+        assert!(err.contains("second-copy"), "got: {err}");
+    }
+
+    #[test]
+    fn fuse_same_iteration_producer_consumer() {
+        let mut kb = KernelBuilder::new("fu", DType::F32);
+        let a = kb.array("a", &[64], ArrayDir::In);
+        let b = kb.array("b", &[64], ArrayDir::InOut);
+        let c = kb.array("c", &[64], ArrayDir::Out);
+        kb.for_const("i", 0, 64, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(b, &[kb.v(i)])],
+                vec![kb.at(a, &[kb.v(i)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        kb.for_const("i2", 0, 64, |kb, i2| {
+            kb.stmt(
+                "S1",
+                vec![kb.at(c, &[kb.v(i2)])],
+                vec![kb.at(b, &[kb.v(i2)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Fuse {
+            first: LoopId(0),
+            second: LoopId(1),
+        };
+        let (k2, cert) = apply(&k, &rw).expect("distance-0 RAW fuses");
+        assert_eq!(cert.rule, fuse::RULE);
+        assert_eq!(cert.checked.len(), 1, "exactly the b RAW pair");
+        assert_eq!(k2.nest_roots().len(), 1);
+        assert_eq!(k2.loop_meta(LoopId(0)).stmts.len(), 2);
+        // S1's access now names the surviving iterator
+        let s1 = k2.stmt(StmtId(1));
+        assert_eq!(s1.reads[0].indices[0].terms, vec![(LoopId(0), 1)]);
+        legality::verify_rewrite(&k, &rw, &cert).expect("certificate verifies");
+    }
+
+    #[test]
+    fn fuse_refuses_read_ahead_across_nests() {
+        // second nest reads b[i+1]: fused iteration i would consume it
+        // before the (former first-nest) iteration i+1 produces it
+        let mut kb = KernelBuilder::new("fx", DType::F32);
+        let a = kb.array("a", &[66], ArrayDir::In);
+        let b = kb.array("b", &[66], ArrayDir::InOut);
+        let c = kb.array("c", &[66], ArrayDir::Out);
+        kb.for_const("i", 0, 64, |kb, i| {
+            kb.stmt(
+                "S0",
+                vec![kb.at(b, &[kb.v(i)])],
+                vec![kb.at(a, &[kb.v(i)])],
+                &[(OpKind::Add, 1)],
+            );
+        });
+        kb.for_const("i2", 0, 64, |kb, i2| {
+            kb.stmt(
+                "S1",
+                vec![kb.at(c, &[kb.v(i2)])],
+                vec![kb.at(b, &[kb.vp(i2, 1)])],
+                &[(OpKind::Mul, 1)],
+            );
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Fuse {
+            first: LoopId(0),
+            second: LoopId(1),
+        };
+        let err = apply(&k, &rw).expect_err("negative fused distance must refuse");
+        assert!(err.contains("reverses"), "got: {err}");
+    }
+
+    #[test]
+    fn fuse_requires_adjacent_identical_bounds() {
+        let mut kb = KernelBuilder::new("fb", DType::F32);
+        let a = kb.array("a", &[64], ArrayDir::Out);
+        let b = kb.array("b", &[64], ArrayDir::Out);
+        kb.for_const("i", 0, 64, |kb, i| {
+            kb.stmt("S0", vec![kb.at(a, &[kb.v(i)])], vec![], &[(OpKind::Add, 1)]);
+        });
+        kb.for_const("j", 0, 32, |kb, j| {
+            kb.stmt("S1", vec![kb.at(b, &[kb.v(j)])], vec![], &[(OpKind::Add, 1)]);
+        });
+        let k = kb.finish();
+        let rw = Rewrite::Fuse {
+            first: LoopId(0),
+            second: LoopId(1),
+        };
+        let err = apply(&k, &rw).expect_err("bounds differ");
+        assert!(err.contains("bounds"), "got: {err}");
+    }
+
+    #[test]
+    fn enumerate_mm_reaches_all_six_orders_deterministically() {
+        let k = mm();
+        let cfg = TransformConfig::default();
+        let vs = enumerate(&k, &cfg);
+        // mm's vectors admit every permutation: 3! orders, one variant
+        // each, dedup folds depth-2 chains back onto depth-1 results
+        assert_eq!(vs.len(), 6);
+        assert!(vs[0].is_original());
+        let mut fps: Vec<u64> = vs.iter().map(|v| fingerprint(&v.kernel).exact).collect();
+        fps.sort();
+        fps.dedup();
+        assert_eq!(fps.len(), 6, "fingerprints are pairwise distinct");
+        for v in &vs {
+            legality::verify_trace(&k, v).expect("every trace replays");
+        }
+        // bit-for-bit reproducible
+        let again = enumerate(&k, &cfg);
+        assert_eq!(vs.len(), again.len());
+        for (a, b) in vs.iter().zip(&again) {
+            assert_eq!(a.trace_strings(), b.trace_strings());
+            assert!(a.kernel.structural_diff(&b.kernel).is_none());
+        }
+    }
+
+    #[test]
+    fn enumerate_respects_caps() {
+        let k = mm();
+        let cfg = TransformConfig {
+            max_variants: 3,
+            max_depth: 1,
+            max_perm_loops: 4,
+        };
+        let vs = enumerate(&k, &cfg);
+        assert_eq!(vs.len(), 3);
+        // chains never exceed the depth cap
+        assert!(vs.iter().all(|v| v.trace.len() <= 1));
+        // a perm cap below the nest width disables interchange entirely
+        let none = enumerate(
+            &k,
+            &TransformConfig {
+                max_variants: 24,
+                max_depth: 2,
+                max_perm_loops: 2,
+            },
+        );
+        assert_eq!(none.len(), 1, "only the original remains");
+    }
+
+    #[test]
+    fn certificate_tampering_is_detected() {
+        let k = mm();
+        let rw = Rewrite::Interchange {
+            root: LoopId(0),
+            perm: vec![LoopId(1), LoopId(0), LoopId(2)],
+        };
+        let (_, mut cert) = apply(&k, &rw).expect("legal");
+        cert.checked.pop();
+        let err = legality::verify_rewrite(&k, &rw, &cert).expect_err("tampered cert");
+        assert!(err.contains("mismatch"), "got: {err}");
+    }
+}

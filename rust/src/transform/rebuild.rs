@@ -1,0 +1,191 @@
+//! Kernel reconstruction after a structural rewrite.
+//!
+//! `ir::Kernel` invariants — dense pre-order `LoopId`/`StmtId`s, every
+//! `AffineExpr` term naming an enclosing loop — are creation-order
+//! facts that any tree surgery breaks. [`rebuild`] restores them:
+//! ids are renumbered in pre-order and every affine reference (loop
+//! bounds, access indices) is remapped through a *scoped* binding
+//! stack. Scoping matters because rewrites may duplicate a source loop
+//! id across sibling subtrees (distribution clones the split loop), so
+//! a flat old→new map would be ambiguous; the innermost binding wins,
+//! exactly like iterator name resolution in the `.knl` parser.
+
+use crate::ir::{Access, AffineExpr, Array, DType, Kernel, Loop, LoopId, Node, Stmt, StmtId};
+
+/// Rebuild a finalized kernel from a (possibly rearranged) node tree.
+pub fn rebuild(name: &str, dtype: DType, arrays: Vec<Array>, roots: &[Node]) -> Kernel {
+    let mut next_loop = 0u32;
+    let mut next_stmt = 0u32;
+    let mut scope: Vec<(LoopId, LoopId)> = Vec::new();
+    let new_roots: Vec<Node> = roots
+        .iter()
+        .map(|n| walk(n, &mut next_loop, &mut next_stmt, &mut scope))
+        .collect();
+    Kernel::finalize(name, dtype, arrays, new_roots)
+}
+
+fn walk(
+    node: &Node,
+    next_loop: &mut u32,
+    next_stmt: &mut u32,
+    scope: &mut Vec<(LoopId, LoopId)>,
+) -> Node {
+    match node {
+        Node::Loop(l) => {
+            let id = LoopId(*next_loop);
+            *next_loop += 1;
+            // bounds reference enclosing loops only — resolve them
+            // before binding this loop's own id
+            let lb = remap(&l.lb, scope);
+            let ub = remap(&l.ub, scope);
+            scope.push((l.id, id));
+            let body = l
+                .body
+                .iter()
+                .map(|n| walk(n, next_loop, next_stmt, scope))
+                .collect();
+            scope.pop();
+            Node::Loop(Loop {
+                id,
+                name: l.name.clone(),
+                lb,
+                ub,
+                body,
+            })
+        }
+        Node::Stmt(s) => {
+            let id = StmtId(*next_stmt);
+            *next_stmt += 1;
+            Node::Stmt(Stmt {
+                id,
+                name: s.name.clone(),
+                writes: s.writes.iter().map(|a| remap_access(a, scope)).collect(),
+                reads: s.reads.iter().map(|a| remap_access(a, scope)).collect(),
+                ops: s.ops.clone(),
+                chain: s.chain.clone(),
+            })
+        }
+    }
+}
+
+fn remap(e: &AffineExpr, scope: &[(LoopId, LoopId)]) -> AffineExpr {
+    let mut out = AffineExpr::constant(e.constant);
+    for &(l, c) in &e.terms {
+        let new = scope
+            .iter()
+            .rev()
+            .find(|(old, _)| *old == l)
+            .map(|&(_, n)| n)
+            .unwrap_or_else(|| panic!("unbound loop reference {l:?} during rebuild"));
+        out.add_term(new, c);
+    }
+    out
+}
+
+fn remap_access(a: &Access, scope: &[(LoopId, LoopId)]) -> Access {
+    Access::new(a.array, a.indices.iter().map(|e| remap(e, scope)).collect())
+}
+
+/// Substitute every affine reference to loop `from` with `to` in a
+/// subtree (fusion folds the second loop's iterator onto the first's
+/// before rebuilding).
+pub fn substitute(node: &Node, from: LoopId, to: LoopId) -> Node {
+    let sub_expr = |e: &AffineExpr| -> AffineExpr {
+        let mut out = AffineExpr::constant(e.constant);
+        for &(l, c) in &e.terms {
+            out.add_term(if l == from { to } else { l }, c);
+        }
+        out
+    };
+    match node {
+        Node::Loop(l) => Node::Loop(Loop {
+            id: l.id,
+            name: l.name.clone(),
+            lb: sub_expr(&l.lb),
+            ub: sub_expr(&l.ub),
+            body: l.body.iter().map(|n| substitute(n, from, to)).collect(),
+        }),
+        Node::Stmt(s) => Node::Stmt(Stmt {
+            id: s.id,
+            name: s.name.clone(),
+            writes: s
+                .writes
+                .iter()
+                .map(|a| Access::new(a.array, a.indices.iter().map(&sub_expr).collect()))
+                .collect(),
+            reads: s
+                .reads
+                .iter()
+                .map(|a| Access::new(a.array, a.indices.iter().map(&sub_expr).collect()))
+                .collect(),
+            ops: s.ops.clone(),
+            chain: s.chain.clone(),
+        }),
+    }
+}
+
+/// The `Loop` node for `id` anywhere under `nodes`, if present.
+pub fn find_loop(nodes: &[Node], id: LoopId) -> Option<&Loop> {
+    for n in nodes {
+        if let Node::Loop(l) = n {
+            if l.id == id {
+                return Some(l);
+            }
+            if let Some(found) = find_loop(&l.body, id) {
+                return Some(found);
+            }
+        }
+    }
+    None
+}
+
+/// Replace the `Loop` node for `id` anywhere under `nodes` with the
+/// given replacement nodes (splicing them in place). Returns the new
+/// forest and whether a replacement happened.
+pub fn splice(nodes: &[Node], id: LoopId, replacement: &[Node]) -> (Vec<Node>, bool) {
+    let mut out = Vec::with_capacity(nodes.len());
+    let mut hit = false;
+    for n in nodes {
+        match n {
+            Node::Loop(l) if l.id == id && !hit => {
+                out.extend(replacement.iter().cloned());
+                hit = true;
+            }
+            Node::Loop(l) => {
+                let (body, inner_hit) = if hit {
+                    (l.body.clone(), false)
+                } else {
+                    splice(&l.body, id, replacement)
+                };
+                hit |= inner_hit;
+                out.push(Node::Loop(Loop {
+                    id: l.id,
+                    name: l.name.clone(),
+                    lb: l.lb.clone(),
+                    ub: l.ub.clone(),
+                    body,
+                }));
+            }
+            Node::Stmt(s) => out.push(Node::Stmt(s.clone())),
+        }
+    }
+    (out, hit)
+}
+
+/// All statement ids under a node, in pre-order.
+pub fn stmts_under(node: &Node) -> Vec<StmtId> {
+    let mut out = Vec::new();
+    collect_stmts(node, &mut out);
+    out
+}
+
+fn collect_stmts(node: &Node, out: &mut Vec<StmtId>) {
+    match node {
+        Node::Loop(l) => {
+            for n in &l.body {
+                collect_stmts(n, out);
+            }
+        }
+        Node::Stmt(s) => out.push(s.id),
+    }
+}

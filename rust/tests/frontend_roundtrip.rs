@@ -57,6 +57,39 @@ fn printing_is_stable_across_corpus() {
 }
 
 #[test]
+fn transformed_kernels_roundtrip_structurally() {
+    use nlp_dse::serve::fingerprint::fingerprint;
+    use nlp_dse::transform::{enumerate, TransformConfig};
+    // every legal variant of a representative PolyBench slice stays
+    // inside the DSL's program class: parse(pretty(apply(rw, k))) is
+    // structurally identical to apply(rw, k), so `emit` of a winning
+    // variant and a daemon round-trip of its text agree on the kernel
+    let cfg = TransformConfig {
+        max_variants: 8,
+        max_depth: 1,
+        max_perm_loops: 3,
+    };
+    for name in ["gemm", "2mm", "bicg", "atax", "mvt", "gesummv"] {
+        let k = benchmarks::build(name, Size::Small, DType::F32).unwrap();
+        let variants = enumerate(&k, &cfg);
+        assert!(!variants.is_empty(), "{name}: at least the original");
+        for v in &variants {
+            let chain = v.trace_strings().join(" ; ");
+            let text = pretty::print(&v.kernel);
+            let k2 = parse_kernel(&text, "<transformed>").unwrap_or_else(|e| {
+                panic!("{name} [{chain}]: reparse failed:\n{e}\n--- .knl ---\n{text}")
+            });
+            if let Some(diff) = v.kernel.structural_diff(&k2) {
+                panic!("{name} [{chain}]: round-trip diverged: {diff}\n--- .knl ---\n{text}");
+            }
+            // the round-trip maps to the same cache line too: variant
+            // dedup and daemon caching agree on what "same kernel" means
+            assert_eq!(fingerprint(&v.kernel), fingerprint(&k2), "{name} [{chain}]");
+        }
+    }
+}
+
+#[test]
 fn roundtrip_preserves_the_static_analyses() {
     // structural identity should make this redundant; assert it anyway
     // on a representative slice so an equality bug in structural_diff

@@ -1,0 +1,155 @@
+//! Generative property suite for the direction/distance vector layer
+//! of `poly/deps` — the legality substrate every `transform/` rewrite
+//! is certified against. The targeted unit cases (anti/output deps,
+//! distance-2 recurrences, triangular bounds, transposed `Any`s) live
+//! next to the implementation in `src/poly/deps.rs`; this suite checks
+//! the *structural invariants* that must hold on every kernel the
+//! generator can produce:
+//!
+//! 1. a vector's entries span exactly the statement pair's shared nest,
+//!    outermost first (the order every transform legality scan relies
+//!    on);
+//! 2. normalization: no vector leads with a negative constant distance
+//!    (`src` is always the side executing first);
+//! 3. a self-dependence is never the all-`=` vector (a statement
+//!    instance does not depend on itself);
+//! 4. the vector list is duplicate-free, and `vectors_between` finds
+//!    every vector under its own endpoints;
+//! 5. every vector's endpoints are marked dependent in the statement
+//!    dependence matrix the `C` operator consumes.
+//!
+//! Failures panic with the reproducing seed and the offending `.knl`
+//! text, mirroring `property_frontend_fuzz`.
+
+use nlp_dse::frontend::{self, GenConfig};
+use nlp_dse::ir::Kernel;
+use nlp_dse::poly::deps::analyze;
+use nlp_dse::poly::DirComp;
+use nlp_dse::util::env_usize;
+
+fn fuzz_n() -> usize {
+    let n = if std::env::var("FUZZ_SMOKE").as_deref() == Ok("1") {
+        env_usize("FUZZ_KERNELS", 16)
+    } else {
+        env_usize("FUZZ_KERNELS", 100)
+    };
+    n.max(1)
+}
+
+const BASE_SEED: u64 = 0xDE55_2026;
+
+fn seeds(label: &str) -> Vec<u64> {
+    let n = fuzz_n() as u64;
+    let base: u64 = std::env::var("FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(BASE_SEED)
+        .min(u64::MAX - n);
+    eprintln!("[fuzz:{label}] {n} kernels, seeds {base}..={}", base + n - 1);
+    (base..base + n).collect()
+}
+
+fn fail(seed: u64, k: &Kernel, msg: &str) -> ! {
+    panic!(
+        "\n=== generative deps failure ===\n\
+         seed: {seed}\n\
+         replay: FUZZ_SEED={seed} FUZZ_KERNELS=1 cargo test --test property_deps\n\
+         {msg}\n\
+         --- offending kernel (.knl) ---\n{}",
+        frontend::pretty::print(k)
+    )
+}
+
+#[test]
+fn prop_dir_vectors_span_shared_nests_and_normalize() {
+    for seed in seeds("dir-vectors") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let da = analyze(&k);
+        for (i, v) in da.dir_vectors.iter().enumerate() {
+            // (1) entries = the pair's shared nest, outermost first.
+            // Shared loops are common ancestors, so both statements see
+            // them in the same root-to-leaf order.
+            let src_nest = &k.stmt_meta(v.src).nest;
+            let dst_nest = &k.stmt_meta(v.dst).nest;
+            let shared: Vec<_> = src_nest
+                .iter()
+                .filter(|l| dst_nest.contains(l))
+                .copied()
+                .collect();
+            let spanned: Vec<_> = v.entries.iter().map(|&(l, _)| l).collect();
+            if spanned != shared {
+                fail(
+                    seed,
+                    &k,
+                    &format!("vector {v:?} spans {spanned:?}, shared nest is {shared:?}"),
+                );
+            }
+            // (2) lexicographically non-negative: the leading non-`=`
+            // component is never a negative constant
+            let lead = v.entries.iter().find(|(_, c)| !c.is_eq());
+            if let Some(&(_, DirComp::Dist(d))) = lead {
+                if d <= 0 {
+                    fail(seed, &k, &format!("lex-negative vector {v:?}"));
+                }
+            }
+            // (3) a self-dependence must be carried by something
+            if v.src == v.dst && v.loop_independent() {
+                fail(seed, &k, &format!("all-`=` self-dependence {v:?}"));
+            }
+            // (4) duplicate-free, and findable under its endpoints
+            if da.dir_vectors[i + 1..].contains(v) {
+                fail(seed, &k, &format!("duplicate vector {v:?}"));
+            }
+            if !da.vectors_between(v.src, v.dst).any(|x| x == v) {
+                fail(
+                    seed,
+                    &k,
+                    &format!("vectors_between({:?}, {:?}) misses {v:?}", v.src, v.dst),
+                );
+            }
+            // (5) endpoints agree with the statement dependence matrix
+            if !da.stmts_dependent(v.src, v.dst) {
+                fail(
+                    seed,
+                    &k,
+                    &format!("vector {v:?} between statements the matrix calls independent"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_carrier_is_the_outermost_non_eq_level() {
+    for seed in seeds("carriers") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let da = analyze(&k);
+        for v in &da.dir_vectors {
+            match v.carrier() {
+                None => {
+                    if !v.loop_independent() {
+                        fail(seed, &k, &format!("carrier-less non-independent {v:?}"));
+                    }
+                }
+                Some(c) => {
+                    // everything outside (above) the carrier is `=`
+                    for &(l, comp) in &v.entries {
+                        if l == c {
+                            if comp.is_eq() {
+                                fail(seed, &k, &format!("`=` carrier in {v:?}"));
+                            }
+                            break;
+                        }
+                        if !comp.is_eq() {
+                            fail(
+                                seed,
+                                &k,
+                                &format!("non-`=` level above the carrier in {v:?}"),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

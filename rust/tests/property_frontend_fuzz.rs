@@ -22,6 +22,17 @@
 //! Seeds are logged on entry and every failure panics with the
 //! reproducing seed **and the offending `.knl` text**, so any case
 //! replays with `FUZZ_SEED=<seed> FUZZ_KERNELS=1`.
+//!
+//! The `prop_transform_*` suites extend the harness to the pre-pragma
+//! loop-transformation layer: every variant the bounded enumerator
+//! produces from a generated kernel must carry a machine-checkable
+//! legality certificate that replays (`verify_trace`), round-trip
+//! through the frontend, and evaluate with the redundant evaluators in
+//! agreement; and `dse --transform` must never return a worse
+//! objective than the no-transform baseline, bit-reproducibly.
+//! `TRANSFORM_FUZZ=1` widens these suites to the full `FUZZ_KERNELS`
+//! count (they default smaller — enumeration multiplies the per-seed
+//! cost); transform failures additionally print the rewrite trace.
 
 use nlp_dse::codegen::{self, Dialect, EmitConfig};
 use nlp_dse::frontend::{self, GenConfig};
@@ -302,6 +313,190 @@ fn prop_lower_bound_monotone_under_refinement() {
                 }
                 prev = lb;
             }
+        }
+    }
+}
+
+/// Kernels per transform suite: enumeration multiplies the per-seed
+/// cost, so the default is smaller than `fuzz_n`; `TRANSFORM_FUZZ=1`
+/// (the ci.sh smoke step, or a manual deep run) widens to the full
+/// count.
+fn transform_fuzz_n() -> usize {
+    if std::env::var("TRANSFORM_FUZZ").as_deref() == Ok("1") {
+        fuzz_n()
+    } else {
+        fuzz_n().min(12)
+    }
+}
+
+fn transform_seeds(label: &str) -> Vec<u64> {
+    let n = transform_fuzz_n() as u64;
+    let base: u64 = std::env::var("FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(BASE_SEED)
+        .min(u64::MAX - n);
+    eprintln!("[fuzz:{label}] {n} kernels, seeds {base}..={}", base + n - 1);
+    (base..base + n).collect()
+}
+
+/// `fail`, plus the rewrite chain that produced the offending variant.
+fn fail_variant(seed: u64, k: &Kernel, trace: &[String], msg: &str) -> ! {
+    let chain = if trace.is_empty() {
+        "(original)".to_string()
+    } else {
+        trace.join(" ; ")
+    };
+    fail(seed, k, &format!("variant [{chain}]: {msg}"))
+}
+
+/// Deterministic enumeration bounds for the fuzz suites — small enough
+/// that (variants × evaluations) stays tractable across the corpus,
+/// and identical on replay (satellite: seed-reproducible transforms).
+fn fuzz_tcfg() -> nlp_dse::transform::TransformConfig {
+    nlp_dse::transform::TransformConfig {
+        max_variants: 6,
+        max_depth: 1,
+        max_perm_loops: 3,
+    }
+}
+
+#[test]
+fn prop_transform_variants_certified_roundtrip_and_evaluate() {
+    use nlp_dse::transform::{enumerate, verify_trace};
+    let dev = Device::u200();
+    for seed in transform_seeds("transform-legality") {
+        let mut cfg = GenConfig::sampled(seed);
+        cfg.max_trip = cfg.max_trip.min(16);
+        let k = frontend::generate(&cfg);
+        let variants = enumerate(&k, &fuzz_tcfg());
+        if variants.is_empty() || !variants[0].is_original() {
+            fail(seed, &k, "enumeration must lead with the original variant");
+        }
+        for v in &variants {
+            let trace = v.trace_strings();
+            // every admitted rewrite's certificate replays from scratch
+            if let Err(e) = verify_trace(&k, v) {
+                fail_variant(seed, &k, &trace, &format!("certificate replay failed: {e}"));
+            }
+            // transformed kernels stay inside the DSL's program class
+            let text = frontend::pretty::print(&v.kernel);
+            match frontend::parse_kernel(&text, "<fuzz-transform>") {
+                Ok(k2) => {
+                    if let Some(diff) = v.kernel.structural_diff(&k2) {
+                        fail_variant(seed, &k, &trace, &format!("round-trip diverged: {diff}"));
+                    }
+                }
+                Err(e) => fail_variant(seed, &k, &trace, &format!("reparse failed:\n{e}")),
+            }
+            // and the full evaluation stack holds on each of them: the
+            // space is non-degenerate and the redundant evaluators agree
+            let a = Analysis::new(&v.kernel);
+            let s = Space::new(&v.kernel, &a);
+            if s.pipeline_configs.is_empty() || s.size() < 1.0 {
+                fail_variant(seed, &k, &trace, "degenerate design space");
+            }
+            let p = NlpProblem::new(&v.kernel, &a, &dev, 64, false);
+            let mut scratch = p.scratch();
+            let mut rng = Rng::new(seed).derive("transform-designs");
+            for case in 0..2 {
+                let d = random_design(&mut rng, &v.kernel, &a, &s);
+                let sym_r = p.compiled.evaluate(&d, &mut scratch);
+                let ref_r = model::evaluate(&v.kernel, &a, &dev, &d);
+                let rel = (sym_r.total_cycles - ref_r.total_cycles).abs()
+                    / ref_r.total_cycles.max(1.0);
+                if rel > 1e-9 || sym_r.feasible != ref_r.feasible {
+                    fail_variant(
+                        seed,
+                        &k,
+                        &trace,
+                        &format!(
+                            "case {case}: evaluators diverged on design {}: \
+                             {} vs {} cycles, feasible {}/{}",
+                            d.fingerprint(),
+                            sym_r.total_cycles,
+                            ref_r.total_cycles,
+                            sym_r.feasible,
+                            ref_r.feasible
+                        ),
+                    );
+                }
+                if p.check(&d) != p.check_legacy(&d) {
+                    fail_variant(
+                        seed,
+                        &k,
+                        &trace,
+                        &format!("case {case}: constraint walks disagree on {}", d.fingerprint()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_transform_dse_never_worse_and_reproducible() {
+    use nlp_dse::transform::run_transform_dse;
+    let dev = Device::u200();
+    let dse_cfg = nlp_dse::dse::DseConfig {
+        jobs: 1,
+        ..Default::default()
+    };
+    let tcfg = fuzz_tcfg();
+    // PolyBench slice + generated corpus (the replayed `gen` kernels)
+    let mut kernels: Vec<(u64, Kernel)> = vec![
+        (0, nlp_dse::benchmarks::build("mvt", nlp_dse::benchmarks::Size::Small, nlp_dse::ir::DType::F32).unwrap()),
+        (0, nlp_dse::benchmarks::build("atax", nlp_dse::benchmarks::Size::Small, nlp_dse::ir::DType::F32).unwrap()),
+    ];
+    for seed in transform_seeds("transform-dse").into_iter().take(4) {
+        let mut cfg = GenConfig::sampled(seed);
+        cfg.max_trip = cfg.max_trip.min(16);
+        cfg.depth = cfg.depth.min(2);
+        kernels.push((seed, frontend::generate(&cfg)));
+    }
+    for (seed, k) in &kernels {
+        let o = run_transform_dse(k, &dev, &dse_cfg, &tcfg, &SymbolicEvaluator);
+        let baseline = &o.records[0];
+        if baseline.index != 0 || baseline.pruned {
+            fail(*seed, k, "variant 0 (the original) must always run unpruned");
+        }
+        // never worse than the no-transform baseline
+        if let (Some(base), Some((_, best))) = (baseline.cycles, &o.outcome.best) {
+            if *best > base * (1.0 + 1e-12) {
+                fail(
+                    *seed,
+                    k,
+                    &format!(
+                        "winner [{:?}] measured {best} cycles, worse than the \
+                         no-transform baseline {base}",
+                        o.winning_trace()
+                    ),
+                );
+            }
+        }
+        // the winner's trace replays and its certificates verify
+        if let Err(e) = nlp_dse::transform::verify_trace(k, &o.variant) {
+            fail(*seed, k, &format!("winning trace failed verification: {e}"));
+        }
+        // bit-reproducible: the same knobs replay to the same outcome
+        let o2 = run_transform_dse(k, &dev, &dse_cfg, &tcfg, &SymbolicEvaluator);
+        let same = o.winner == o2.winner
+            && o.records.len() == o2.records.len()
+            && o.outcome.best.as_ref().map(|(_, c)| c.to_bits())
+                == o2.outcome.best.as_ref().map(|(_, c)| c.to_bits());
+        if !same {
+            fail(
+                *seed,
+                k,
+                &format!(
+                    "transform DSE not reproducible: winner {} vs {}, \
+                     {} vs {} records",
+                    o.winner,
+                    o2.winner,
+                    o.records.len(),
+                    o2.records.len()
+                ),
+            );
         }
     }
 }

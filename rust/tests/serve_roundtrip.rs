@@ -6,7 +6,10 @@
 //! result), and the acceptance criterion — a repeated
 //! structurally-identical solve is answered from the cache
 //! bit-identically with `cache: "hit"`, and `stats` reports a nonzero
-//! hit rate.
+//! hit rate. The transform satellite rides here too: the same kernel
+//! with and without `"transform"` gets distinct exact cache keys
+//! (spaced fingerprints), both replay bit-identically, and the per-op
+//! `hit`/`warm`/`miss` counters land in the `stats` payload.
 //!
 //! Each test spawns its own daemon on an ephemeral port
 //! (`127.0.0.1:0`), so the suite is parallel-safe and needs no free
@@ -184,6 +187,50 @@ fn shutdown_drains_in_flight_solves_before_exit() {
     let r = terminal(&ev);
     assert_eq!(r.get("event").and_then(|x| x.as_str()), Some("result"));
     assert_eq!(r.get("id").and_then(|x| x.as_str()), Some("A"));
+    h.join();
+}
+
+#[test]
+fn transform_dse_partitions_the_cache_and_replays_bit_identically() {
+    let h = daemon();
+    let plain = r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"id":20}"#;
+    let with_t = r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"transform":true,"max_variants":2,"id":21}"#;
+    // the plain exploration runs cold, then replays from the cache
+    let p1 = request(&h, plain);
+    let p2 = request(&h, plain);
+    assert_eq!(terminal(&p1).get("cache").and_then(|x| x.as_str()), Some("miss"));
+    assert_eq!(terminal(&p2).get("cache").and_then(|x| x.as_str()), Some("hit"));
+    assert_eq!(
+        terminal(&p1).get("data").unwrap().to_line(),
+        terminal(&p2).get("data").unwrap().to_line(),
+        "dse replay must be bit-identical"
+    );
+    // the same kernel with `transform` has a distinct exact cache key
+    // (spaced fingerprint): it must run cold, not replay the plain run
+    let t1 = request(&h, with_t);
+    assert_eq!(terminal(&t1).get("cache").and_then(|x| x.as_str()), Some("miss"));
+    let d = terminal(&t1).get("data").unwrap();
+    assert_eq!(d.get("engine").and_then(|x| x.as_str()), Some("transform"));
+    assert!(!d.get("variants").and_then(|x| x.as_arr()).unwrap().is_empty());
+    let t2 = request(&h, with_t);
+    assert_eq!(terminal(&t2).get("cache").and_then(|x| x.as_str()), Some("hit"));
+    assert_eq!(
+        terminal(&t1).get("data").unwrap().to_line(),
+        terminal(&t2).get("data").unwrap().to_line(),
+        "transform replay must be bit-identical"
+    );
+    // the new per-op hit/warm/miss counters see all four requests
+    let ev = request(&h, r#"{"op":"stats","id":22}"#);
+    let data = terminal(&ev).get("data").unwrap().clone();
+    let dse = data.get("ops").unwrap().get("dse").expect("dse op stats");
+    let c = dse.get("cache").expect("per-op cache counters");
+    assert_eq!(c.get("hit").and_then(|x| x.as_u64()), Some(2));
+    assert_eq!(c.get("miss").and_then(|x| x.as_u64()), Some(2));
+    assert_eq!(c.get("warm").and_then(|x| x.as_u64()), Some(0));
+    // both spaces live side by side in the replay map
+    let entries = data.get("cache").unwrap().get("entries").unwrap();
+    assert_eq!(entries.get("dses").and_then(|x| x.as_u64()), Some(2));
+    h.shutdown();
     h.join();
 }
 
