@@ -80,14 +80,32 @@ if [ "${SERVE_SMOKE:-1}" != "0" ]; then
 fi
 
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
+# Stash the committed BENCH_solver.json before the fresh run overwrites
+# it: bench_nlp_solver compares its fresh configs/s per tag against the
+# stash and exits non-zero on a drop past BENCH_TOLERANCE percent
+# (default 20 — generous because smoke runs on shared CI hardware).
+# First run on a machine with no committed baseline self-blesses.
+BENCH_STASH=""
+if [ -f BENCH_solver.json ]; then
+  BENCH_STASH=$(mktemp)
+  cp BENCH_solver.json "$BENCH_STASH"
+fi
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
 for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform; do
-  BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
+  if [ "$bench" = bench_nlp_solver ] && [ -n "$BENCH_STASH" ]; then
+    BENCH_SMOKE=1 BENCH_MS=25 BENCH_BASELINE="$BENCH_STASH" \
+      BENCH_TOLERANCE="${BENCH_TOLERANCE:-20}" cargo bench --bench "$bench"
+  else
+    BENCH_SMOKE=1 BENCH_MS=25 cargo bench --bench "$bench"
+  fi
 done
+if [ -n "$BENCH_STASH" ]; then
+  rm -f "$BENCH_STASH"
+fi
 if [ ! -f BENCH_solver.json ]; then
   echo "ci: bench_nlp_solver did not emit BENCH_solver.json at the repo root" >&2
   exit 1
 fi
-echo "    BENCH_solver.json emitted"
+echo "    BENCH_solver.json emitted (regression gate ran against the committed baseline when present)"
 
 echo "ci: all checks passed"

@@ -5,12 +5,15 @@
 //!
 //! The headline comparison for the symbolic bound-model IR is
 //! `evaluate/*` (legacy recursion, one design) against `sym_eval/*`
-//! (compiled tape, one design) and `sym_eval_batch64/*` (compiled tape,
-//! amortized over a 64-design batch with one shared scratch) — the
-//! acceptance bar is sym_eval ≤ evaluate per design. `sym_build/*` and
-//! `sym_compile/*` are the once-per-kernel setup costs;
-//! `sym_lower_bound/*` is the interval pass the DSE's partial-config
-//! pruning pays per rung.
+//! (compiled tape, one design), `sym_eval_batch64/*` (AoS: the scalar
+//! tape per design, shared scratch), and `sym_eval_batch64_soa/*` (the
+//! node-major SoA lane kernel, same 64-design batch) — the acceptance
+//! bars are sym_eval ≤ evaluate and batch64_soa ≤ batch64 per design.
+//! `sym_eval_soa_sweep/*/n={1,8,64,512}` shows where lane-width padding
+//! stops dominating (n=1 pays 7 dead lanes; by n≥8 every lane is
+//! live). `sym_build/*` and `sym_compile/*` are the once-per-kernel
+//! setup costs; `sym_lower_bound/*` is the interval pass the DSE's
+//! partial-config pruning pays per rung.
 
 use nlp_dse::benchmarks::{self, Size};
 use nlp_dse::hls::Device;
@@ -62,8 +65,11 @@ fn main() {
         b.bench(&format!("sym_eval/{name}"), || {
             black_box(cm.evaluate(&d, &mut scratch));
         });
-        // a batch with varied unrolls, the solver's bulk-scoring shape
-        let batch: Vec<Design> = (0..64u64)
+        // a batch with varied unrolls, the solver's bulk-scoring shape:
+        // AoS (design-major scalar walks) vs SoA (node-major lanes) at
+        // the headline size 64, then a sweep over batch sizes to show
+        // where the lane kernel starts paying for its setup
+        let batch: Vec<Design> = (0..512u64)
             .map(|i| {
                 let mut dd = Design::empty(&k);
                 dd.get_mut(LoopId(0)).uf = 1 + (i % 4);
@@ -71,8 +77,20 @@ fn main() {
             })
             .collect();
         b.bench_with_items(&format!("sym_eval_batch64/{name}"), 64.0, || {
-            black_box(cm.evaluate_batch(&batch));
+            black_box(cm.evaluate_batch(&batch[..64]));
         });
+        let mut soa = cm.soa_scratch();
+        let mut out = Vec::new();
+        b.bench_with_items(&format!("sym_eval_batch64_soa/{name}"), 64.0, || {
+            cm.evaluate_batch_soa_in(&batch[..64], &mut soa, &mut out);
+            black_box(&out);
+        });
+        for n in [1usize, 8, 64, 512] {
+            b.bench_with_items(&format!("sym_eval_soa_sweep/{name}/n={n}"), n as f64, || {
+                cm.evaluate_batch_soa_in(&batch[..n], &mut soa, &mut out);
+                black_box(&out);
+            });
+        }
         let free = sym::PartialDesign::free(k.n_loops());
         b.bench(&format!("sym_lower_bound/{name}"), || {
             black_box(bm.lower_bound(&free));

@@ -9,13 +9,19 @@
 //! ```text
 //! { "<kernel>-<size>/cap=<c>/jobs=<n>":
 //!     { "wall_s", "nodes", "nodes_per_s", "configs", "configs_per_s",
-//!       "threads", "speedup_vs_jobs1" }, ... }
+//!       "threads", "steals", "queue_idle_s", "speedup_vs_jobs1" }, ... }
 //! ```
 //!
 //! The scaling rows (3mm-M at 1/2/4/8 threads) are the EXPERIMENTS.md
-//! scaling table. `BENCH_SMOKE=1` shrinks the matrix to the smallest
-//! kernel and {1, 2} threads — the ci.sh bench-smoke step, so the bench
-//! (and its JSON emission) can't rot.
+//! scaling table; `steals` and `queue_idle_s` expose the work-stealing
+//! scheduler's balance (steals stay rare when the bound-ascending deal
+//! is even; idle time is what stealing failed to hide). `BENCH_SMOKE=1`
+//! shrinks the matrix to the smallest kernel and {1, 2} threads — the
+//! ci.sh bench-smoke step, so the bench (and its JSON emission) can't
+//! rot. When `BENCH_BASELINE` names a prior `BENCH_solver.json`, the
+//! run ends with a regression gate: any tag whose fresh configs/s falls
+//! more than `BENCH_TOLERANCE` percent (default 20) below the baseline
+//! row exits non-zero.
 
 use nlp_dse::benchmarks::{self, Size};
 use nlp_dse::hls::Device;
@@ -31,16 +37,20 @@ struct Case {
     nodes: u64,
     configs: u64,
     threads: usize,
+    steals: u64,
+    queue_idle_s: f64,
     speedup_vs_jobs1: Option<f64>,
 }
 
 fn record(cases: &mut Vec<Case>, tag: &str, r: &SolveResult, baseline_wall: Option<f64>) {
     println!(
-        "    {tag}: {:.1} knodes/s, {:.1} configs/s ({} nodes, {} configs, {:.3}s)",
+        "    {tag}: {:.1} knodes/s, {:.1} configs/s ({} nodes, {} configs, {} steal(s), {:.4}s idle, {:.3}s)",
         r.stats.nodes as f64 / r.solve_time_s.max(1e-9) / 1e3,
         r.stats.configs as f64 / r.solve_time_s.max(1e-9),
         r.stats.nodes,
         r.stats.configs,
+        r.stats.steals,
+        r.stats.queue_idle_s,
         r.solve_time_s
     );
     cases.push(Case {
@@ -49,6 +59,8 @@ fn record(cases: &mut Vec<Case>, tag: &str, r: &SolveResult, baseline_wall: Opti
         nodes: r.stats.nodes,
         configs: r.stats.configs,
         threads: r.jobs,
+        steals: r.stats.steals,
+        queue_idle_s: r.stats.queue_idle_s,
         speedup_vs_jobs1: baseline_wall.map(|b| b / r.solve_time_s.max(1e-9)),
     });
 }
@@ -160,7 +172,9 @@ fn main() {
             .set("nodes_per_s", c.nodes as f64 / c.wall_s.max(1e-9))
             .set("configs", c.configs)
             .set("configs_per_s", c.configs as f64 / c.wall_s.max(1e-9))
-            .set("threads", c.threads);
+            .set("threads", c.threads)
+            .set("steals", c.steals)
+            .set("queue_idle_s", c.queue_idle_s);
         if let Some(s) = c.speedup_vs_jobs1 {
             row.set("speedup_vs_jobs1", s);
         }
@@ -172,4 +186,50 @@ fn main() {
     std::fs::write(&path, out.to_string_pretty()).expect("write BENCH_solver.json");
     println!("wrote {} ({} rows)", path.display(), cases.len());
     b.finish();
+
+    // ---- regression gate (the ci.sh bench smoke) -----------------------
+    // BENCH_BASELINE names the committed BENCH_solver.json, stashed by
+    // ci.sh before this run overwrote it. Rows are matched by tag; a
+    // fresh configs/s more than BENCH_TOLERANCE percent (default 20)
+    // below the baseline fails the run. Tags on only one side (new
+    // kernels, changed matrices) are skipped — the gate guards
+    // throughput, not matrix shape.
+    if let Ok(baseline_path) = std::env::var("BENCH_BASELINE") {
+        let tol: f64 = std::env::var("BENCH_TOLERANCE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(20.0);
+        let text = std::fs::read_to_string(&baseline_path)
+            .unwrap_or_else(|e| panic!("read baseline {baseline_path}: {e}"));
+        let base = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("parse baseline {baseline_path}: {e}"));
+        let mut compared = 0u32;
+        let mut regressed = 0u32;
+        for c in &cases {
+            let was = base
+                .get(&c.tag)
+                .and_then(|row| row.get("configs_per_s"))
+                .and_then(|v| v.as_f64());
+            let Some(was) = was else { continue };
+            if was <= 0.0 {
+                continue;
+            }
+            compared += 1;
+            let now = c.configs as f64 / c.wall_s.max(1e-9);
+            if now < was * (1.0 - tol / 100.0) {
+                regressed += 1;
+                eprintln!(
+                    "REGRESSION {}: {now:.1} configs/s vs baseline {was:.1} (> {tol}% below)",
+                    c.tag
+                );
+            }
+        }
+        println!(
+            "regression gate: {compared} row(s) compared against {baseline_path} (tolerance {tol}%)"
+        );
+        if regressed > 0 {
+            eprintln!("{regressed} bench row(s) regressed past the {tol}% tolerance");
+            std::process::exit(1);
+        }
+    }
 }

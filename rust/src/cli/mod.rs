@@ -682,7 +682,8 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
         "NLP solve on {} (cap={}, fine={fine}, jobs={}):\n  proven lower bound: {:.0} cycles\n  \
          optimal: {}   solve time: {:.3}s   nodes: {}   scored: {}\n  \
          pruned by relaxation: {} (b&b {} + interval {})   infeasible: {}   \
-         partition-pruned: {}   truncated menus: {}\n",
+         partition-pruned: {}   truncated menus: {}\n  \
+         steals: {}   queue idle: {:.3}s\n",
         k.name,
         if cap == u64::MAX {
             "inf".into()
@@ -700,7 +701,9 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
         r.stats.pruned_relaxation,
         r.stats.infeasible,
         r.stats.pruned_partition,
-        r.stats.truncated_menus
+        r.stats.truncated_menus,
+        r.stats.steals,
+        r.stats.queue_idle_s
     );
     for (i, (d, obj)) in r.designs.iter().enumerate() {
         out.push_str(&format!(

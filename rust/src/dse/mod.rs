@@ -13,4 +13,7 @@ pub mod clock;
 pub mod nlpdse;
 
 pub use clock::SimClock;
-pub use nlpdse::{run_nlp_dse, run_nlp_dse_with_bound, DseConfig, DseOutcome, StepRecord};
+pub use nlpdse::{
+    run_nlp_dse, run_nlp_dse_seeded, run_nlp_dse_with_bound, run_nlp_dse_with_bound_seeded,
+    DseConfig, DseOutcome, StepRecord,
+};

@@ -145,9 +145,28 @@ pub fn run_nlp_dse(
     cfg: &DseConfig,
     evaluator: &dyn BatchEvaluator,
 ) -> DseOutcome {
+    run_nlp_dse_seeded(k, a, dev, cfg, evaluator, &[])
+}
+
+/// [`run_nlp_dse`] warm-started from candidate incumbent designs: every
+/// ladder rung's solve is seeded (`solve_jobs_seeded`), so a cached
+/// incumbent from an earlier run of the *same* kernel — or from the
+/// un-transformed original of a loop-transformed variant — gives each
+/// sub-space an admissible upper bound from step one. Soundness is the
+/// solver's: seeds are re-verified per problem (foreign-shape or
+/// infeasible seeds are dropped), so a completed seeded ladder returns
+/// the cold ladder's designs.
+pub fn run_nlp_dse_seeded(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    cfg: &DseConfig,
+    evaluator: &dyn BatchEvaluator,
+    seeds: &[Design],
+) -> DseOutcome {
     let bound = std::sync::Arc::new(crate::model::sym::BoundModel::build(k, a, dev));
     let compiled = std::sync::Arc::new(bound.compile());
-    run_ladder(k, a, dev, cfg, evaluator, bound, compiled)
+    run_ladder(k, a, dev, cfg, evaluator, bound, compiled, seeds)
 }
 
 /// [`run_nlp_dse`] over a caller-owned bound model (one clone, not one
@@ -160,11 +179,27 @@ pub fn run_nlp_dse_with_bound(
     evaluator: &dyn BatchEvaluator,
     bound: &crate::model::sym::BoundModel,
 ) -> DseOutcome {
-    let bound = std::sync::Arc::new(bound.clone());
-    let compiled = std::sync::Arc::new(bound.compile());
-    run_ladder(k, a, dev, cfg, evaluator, bound, compiled)
+    run_nlp_dse_with_bound_seeded(k, a, dev, cfg, evaluator, bound, &[])
 }
 
+/// [`run_nlp_dse_with_bound`] with warm seeds (see
+/// [`run_nlp_dse_seeded`]).
+#[allow(clippy::too_many_arguments)]
+pub fn run_nlp_dse_with_bound_seeded(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    cfg: &DseConfig,
+    evaluator: &dyn BatchEvaluator,
+    bound: &crate::model::sym::BoundModel,
+    seeds: &[Design],
+) -> DseOutcome {
+    let bound = std::sync::Arc::new(bound.clone());
+    let compiled = std::sync::Arc::new(bound.compile());
+    run_ladder(k, a, dev, cfg, evaluator, bound, compiled, seeds)
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run_ladder(
     k: &Kernel,
     a: &Analysis,
@@ -173,6 +208,7 @@ fn run_ladder(
     evaluator: &dyn BatchEvaluator,
     bound: std::sync::Arc<crate::model::sym::BoundModel>,
     compiled: std::sync::Arc<crate::model::sym::CompiledModel>,
+    seeds: &[Design],
 ) -> DseOutcome {
     let oracle = HlsOracle {
         device: dev.clone(),
@@ -200,7 +236,23 @@ fn run_ladder(
     // restricts the subsequent subspaces)
     let mut coarse_banned: std::collections::BTreeSet<u32> = Default::default();
 
-    'outer: for &cap in &cfg.ladder {
+    // each rung's partial-configuration bound is a pure function of its
+    // cap, so with `--prune-bound` all of them are computed up front in
+    // one laned interval sweep (LANE_WIDTH rungs per tape pass) instead
+    // of a scalar pass per rung — bit-identical values, so every pruning
+    // decision below is unchanged
+    let rung_lbs: Vec<f64> = if cfg.prune_bound {
+        let partials: Vec<crate::model::sym::PartialDesign> = cfg
+            .ladder
+            .iter()
+            .map(|&cap| crate::model::sym::PartialDesign::free(k.n_loops()).with_uf_cap(cap))
+            .collect();
+        bound.lower_bound_batch(&partials)
+    } else {
+        Vec::new()
+    };
+
+    'outer: for (rung, &cap) in cfg.ladder.iter().enumerate() {
         for fine_only in [false, true] {
             if clock.makespan() > cfg.dse_timeout_min {
                 break 'outer;
@@ -215,9 +267,7 @@ fn run_ladder(
             // the whole ladder — same semantics as the solver-LB
             // termination below, minus the NLP solve.
             if cfg.prune_bound && min_lat.is_finite() {
-                let partial =
-                    crate::model::sym::PartialDesign::free(k.n_loops()).with_uf_cap(cap);
-                let rung_lb = bound.lower_bound(&partial);
+                let rung_lb = rung_lbs[rung];
                 if rung_lb >= min_lat {
                     steps_to_terminate = step;
                     trace.push(StepRecord {
@@ -255,12 +305,13 @@ fn run_ladder(
             // top-k per sub-space: the paper runs up to 8 designs per
             // iteration in parallel; when the LB-optimal configuration is
             // realized poorly by Merlin, the runners-up still get a shot
-            let sol = nlp::solve_jobs(
+            let sol = nlp::solve_jobs_seeded(
                 &problem,
                 cfg.nlp_timeout_s,
                 cfg.workers,
                 evaluator,
                 cfg.jobs,
+                seeds,
             );
             nlp_solve_s.push(sol.solve_time_s);
             if !sol.optimal {
@@ -535,6 +586,33 @@ mod tests {
         for s in pruned.trace.iter().filter(|s| s.pruned && s.lower_bound.is_finite()) {
             assert!(s.lower_bound >= best_cycles * 0.999);
         }
+    }
+
+    #[test]
+    fn seeded_ladder_matches_cold_best() {
+        // warm seeds are admissible upper bounds: seeding the whole ladder
+        // with the cold run's own winners must reproduce the cold best
+        // (a seed can prune work but never displace a better design)
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let cfg = DseConfig::default();
+        let cold = run_nlp_dse(&k, &a, &dev, &cfg, &RustFeatureEvaluator);
+        let seeds: Vec<Design> = cold.best.iter().map(|(d, _)| d.clone()).collect();
+        assert!(!seeds.is_empty());
+        let warm = run_nlp_dse_seeded(&k, &a, &dev, &cfg, &RustFeatureEvaluator, &seeds);
+        assert_eq!(cold.best_gflops, warm.best_gflops);
+        assert_eq!(
+            cold.best.as_ref().map(|(d, _)| d.fingerprint()),
+            warm.best.as_ref().map(|(d, _)| d.fingerprint())
+        );
+        // a seed from a different kernel is either shape-dropped or
+        // re-verified into an ordinary (here: hopeless) incumbent — the
+        // winning design is untouched either way
+        let k8 = benchmarks::build("bicg", Size::Small, DType::F32).unwrap();
+        let alien = Design::empty(&k8);
+        let warm2 = run_nlp_dse_seeded(&k, &a, &dev, &cfg, &RustFeatureEvaluator, &[alien]);
+        assert_eq!(cold.best_gflops, warm2.best_gflops);
     }
 
     #[test]

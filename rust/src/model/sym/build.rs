@@ -298,6 +298,34 @@ impl BoundModel {
     pub fn lower_bound(&self, partial: &PartialDesign) -> f64 {
         self.objective_interval(partial).lo
     }
+
+    /// [`lower_bound`](Self::lower_bound) over many partials in one laned
+    /// interval sweep: [`super::LANE_WIDTH`] partials share each tape
+    /// pass. Per-element results are bit-identical to scalar
+    /// `lower_bound` calls (the lanes run the scalar rules; remainder
+    /// lanes replicate the last partial and are discarded), so callers —
+    /// the solver's bound-ascending dispatch and the DSE ladder's rung
+    /// pruning — keep their exact pruning decisions while paying one tape
+    /// walk per eight bounds.
+    pub fn lower_bound_batch(&self, partials: &[PartialDesign]) -> Vec<f64> {
+        use super::expr::{eval_interval_lanes, LANE_WIDTH};
+        let mut out = Vec::with_capacity(partials.len());
+        let mut iv = Vec::new();
+        let mut base = 0;
+        while base < partials.len() {
+            let live = LANE_WIDTH.min(partials.len() - base);
+            let boxes: Vec<Vec<VarBox>> = (0..LANE_WIDTH)
+                .map(|j| self.boxes(&partials[base + j.min(live - 1)]))
+                .collect();
+            let refs: [&[VarBox]; LANE_WIDTH] = std::array::from_fn(|j| boxes[j].as_slice());
+            eval_interval_lanes(self.pool.nodes(), &refs, &mut iv);
+            for l in 0..live {
+                out.push(iv[self.total.0 as usize * LANE_WIDTH + l].lo);
+            }
+            base += live;
+        }
+        out
+    }
 }
 
 fn loop_indexes_array(k: &Kernel, l: LoopId) -> bool {
@@ -755,6 +783,35 @@ mod tests {
             // at least divisibility per loop + dsp + onchip
             assert!(bm.constraints.len() >= k.n_loops() + 2, "{name}");
         }
+    }
+
+    #[test]
+    fn batched_lower_bounds_bit_match_scalar() {
+        // mixed caps and partial assignments across an odd count (11) so
+        // both full chunks and the replicated remainder lanes are hit
+        let k = benchmarks::build("gemm", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = BoundModel::build(&k, &a, &Device::u200());
+        let mut partials = Vec::new();
+        for cap in [u64::MAX, 1024, 256, 64, 16, 4, 1] {
+            partials.push(PartialDesign::free(k.n_loops()).with_uf_cap(cap));
+        }
+        for uf in [1u64, 2, 8, 32] {
+            let mut p = PartialDesign::free(k.n_loops());
+            p.assign_uf(LoopId(0), uf);
+            partials.push(p);
+        }
+        assert_eq!(partials.len(), 11);
+        let batch = bm.lower_bound_batch(&partials);
+        assert_eq!(batch.len(), partials.len());
+        for (i, p) in partials.iter().enumerate() {
+            assert_eq!(
+                bm.lower_bound(p).to_bits(),
+                batch[i].to_bits(),
+                "partial {i}"
+            );
+        }
+        assert!(bm.lower_bound_batch(&[]).is_empty());
     }
 
     #[test]

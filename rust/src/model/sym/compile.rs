@@ -8,10 +8,26 @@
 //! walk alone — no recursion, no per-design allocation (the DSE hot path
 //! the legacy `model::evaluate` recursion paid for with dozens of
 //! temporary `Vec`s per call).
+//!
+//! On top of the scalar path sits the structure-of-arrays batch kernel
+//! (`evaluate_batch_soa`): [`LANE_WIDTH`] designs share one tape pass
+//! with values laid out node-major (`vals[node * LANE_WIDTH + lane]`), so
+//! every operator is a straight-line loop over lanes — no per-design
+//! dispatch overhead, and the lane loops auto-vectorize. Each lane
+//! performs the *same* f64 operation sequence as [`eval_concrete`]
+//! (`select` stays a per-lane conditional move, never an arithmetic
+//! blend), so SoA results are bit-identical to the scalar evaluator; the
+//! property suites assert this corpus-wide.
 
 use super::build::BoundModel;
-use super::expr::{eval_concrete, ExprId, SymNode};
+use super::expr::{eval_concrete, treelog_f, ExprId, SymNode, LANE_WIDTH};
 use crate::pragma::Design;
+
+// child-lane accessor into the already-written prefix of the SoA buffer
+#[inline(always)]
+fn lane(prev: &[f64], e: ExprId) -> &[f64] {
+    &prev[e.0 as usize * LANE_WIDTH..][..LANE_WIDTH]
+}
 
 /// The flattened evaluator. Self-contained (owns its tape): cheap to
 /// cache per kernel and to send across threads.
@@ -34,6 +50,14 @@ pub struct CompiledModel {
 /// Reusable value buffer for tape evaluation.
 #[derive(Clone, Debug, Default)]
 pub struct EvalScratch {
+    vals: Vec<f64>,
+}
+
+/// Reusable node-major lane buffer for the SoA batch kernel
+/// (`vals[node * LANE_WIDTH + lane]`). One per worker thread: the solver
+/// keeps one in each `WorkerScratch` so leaf scoring never allocates.
+#[derive(Clone, Debug, Default)]
+pub struct SoaScratch {
     vals: Vec<f64>,
 }
 
@@ -181,12 +205,191 @@ impl CompiledModel {
     }
 
     /// Evaluate a batch, reusing one scratch across all designs.
+    ///
+    /// This is the scalar (array-of-structures) path: one tape pass per
+    /// design. Kept as the baseline the benches compare
+    /// [`evaluate_batch_soa`](Self::evaluate_batch_soa) against; hot
+    /// callers should prefer the SoA path.
     pub fn evaluate_batch(&self, designs: &[Design]) -> Vec<CompiledResult> {
         let mut scratch = self.scratch();
         designs
             .iter()
             .map(|d| self.evaluate(d, &mut scratch))
             .collect()
+    }
+
+    /// A lane scratch sized for this tape.
+    pub fn soa_scratch(&self) -> SoaScratch {
+        SoaScratch {
+            vals: Vec::with_capacity(self.tape.len() * LANE_WIDTH),
+        }
+    }
+
+    /// Evaluate a batch through the structure-of-arrays kernel: one tape
+    /// pass per [`LANE_WIDTH`] designs instead of one per design.
+    /// Bit-identical to mapping [`evaluate`](Self::evaluate) over the
+    /// batch (each lane runs the same f64 op sequence). Convenience
+    /// wrapper that owns its scratch; hot loops should hold a
+    /// [`SoaScratch`] and call
+    /// [`evaluate_batch_soa_in`](Self::evaluate_batch_soa_in).
+    pub fn evaluate_batch_soa(&self, designs: &[Design]) -> Vec<CompiledResult> {
+        let mut scratch = self.soa_scratch();
+        let mut out = Vec::new();
+        self.evaluate_batch_soa_in(designs, &mut scratch, &mut out);
+        out
+    }
+
+    /// Allocation-free SoA batch evaluation into caller-owned buffers
+    /// (`out` is cleared first). Remainder chunks shorter than
+    /// [`LANE_WIDTH`] pad the trailing lanes by replicating the last
+    /// design; padded lanes are evaluated and discarded, never reported.
+    pub fn evaluate_batch_soa_in(
+        &self,
+        designs: &[Design],
+        scratch: &mut SoaScratch,
+        out: &mut Vec<CompiledResult>,
+    ) {
+        out.clear();
+        out.reserve(designs.len());
+        let mut base = 0;
+        while base < designs.len() {
+            let live = LANE_WIDTH.min(designs.len() - base);
+            let chunk: [&Design; LANE_WIDTH] =
+                std::array::from_fn(|j| &designs[base + j.min(live - 1)]);
+            self.eval_chunk(&chunk, &mut scratch.vals);
+            for l in 0..live {
+                out.push(self.result_of_lane(&scratch.vals, l));
+            }
+            base += live;
+        }
+    }
+
+    // One SoA tape pass over a full chunk of LANE_WIDTH designs. Each
+    // node writes its own LANE_WIDTH slot; `split_at_mut` separates the
+    // already-computed child lanes (`prev`) from the slot being written
+    // (`cur`) — legal because the tape is topologically ordered, and it
+    // gives the compiler disjoint fixed-width slices to vectorize over.
+    fn eval_chunk(&self, chunk: &[&Design; LANE_WIDTH], vals: &mut Vec<f64>) {
+        vals.clear();
+        vals.resize(self.tape.len() * LANE_WIDTH, 0.0);
+        for (i, n) in self.tape.iter().enumerate() {
+            let (prev, rest) = vals.split_at_mut(i * LANE_WIDTH);
+            let cur = &mut rest[..LANE_WIDTH];
+            match *n {
+                SymNode::Const(bits) => cur.fill(f64::from_bits(bits)),
+                SymNode::Uf(l) => {
+                    for (j, c) in cur.iter_mut().enumerate() {
+                        *c = chunk[j].pragmas[l as usize].uf as f64;
+                    }
+                }
+                SymNode::Tile(l) => {
+                    for (j, c) in cur.iter_mut().enumerate() {
+                        *c = chunk[j].pragmas[l as usize].tile as f64;
+                    }
+                }
+                SymNode::Pip(l) => {
+                    for (j, c) in cur.iter_mut().enumerate() {
+                        *c = chunk[j].pragmas[l as usize].pipeline as u8 as f64;
+                    }
+                }
+                SymNode::Add(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j] + b[j];
+                    }
+                }
+                SymNode::Sub(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j] - b[j];
+                    }
+                }
+                SymNode::Mul(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j] * b[j];
+                    }
+                }
+                SymNode::Div(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j] / b[j];
+                    }
+                }
+                SymNode::Min(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j].min(b[j]);
+                    }
+                }
+                SymNode::Max(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j].max(b[j]);
+                    }
+                }
+                SymNode::Ceil(a) => {
+                    let a = lane(prev, a);
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = a[j].ceil();
+                    }
+                }
+                SymNode::TreeLog(a) => {
+                    let a = lane(prev, a);
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = treelog_f(a[j]);
+                    }
+                }
+                SymNode::Gt(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = (a[j] > b[j]) as u8 as f64;
+                    }
+                }
+                SymNode::Lt(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = (a[j] < b[j]) as u8 as f64;
+                    }
+                }
+                SymNode::And(a, b) => {
+                    let (a, b) = (lane(prev, a), lane(prev, b));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = ((a[j] != 0.0) && (b[j] != 0.0)) as u8 as f64;
+                    }
+                }
+                SymNode::Select(c, t, e) => {
+                    // per-lane conditional select (a branchless cmov per
+                    // lane after vectorization) — NOT an arithmetic blend
+                    // like c*t + (1-c)*e, which would break bit-identity
+                    // with the scalar evaluator for inf/NaN operands
+                    let (c, t, e) = (lane(prev, c), lane(prev, t), lane(prev, e));
+                    for j in 0..LANE_WIDTH {
+                        cur[j] = if c[j] != 0.0 { t[j] } else { e[j] };
+                    }
+                }
+            }
+        }
+    }
+
+    // Read one lane's roots back out of the SoA buffer, applying the same
+    // feasibility thresholds as the scalar `evaluate`.
+    fn result_of_lane(&self, vals: &[f64], l: usize) -> CompiledResult {
+        let at = |root: u32| vals[root as usize * LANE_WIDTH + l];
+        let dsp = at(self.dsp);
+        let onchip = at(self.onchip);
+        let max_partitioning = at(self.max_part) as u64;
+        CompiledResult {
+            comp_cycles: at(self.comp),
+            comm_cycles: at(self.comm),
+            total_cycles: at(self.total),
+            dsp,
+            onchip_bytes: onchip,
+            max_partitioning,
+            feasible: dsp <= self.dsp_total as f64
+                && onchip <= self.onchip_bytes as f64
+                && max_partitioning <= self.max_array_partition,
+        }
     }
 
     /// Partitioning of array `idx` (kernel array order) from the last
@@ -255,6 +458,69 @@ mod tests {
         let cm = bm.compile();
         assert!(cm.n_instructions() <= bm.pool.len());
         assert!(cm.n_instructions() > 0);
+    }
+
+    #[test]
+    fn soa_batch_bit_identical_to_scalar_across_sizes() {
+        // odd sizes exercise the remainder-lane padding path; 0 the
+        // empty batch; 8/16 the full-chunk path
+        let k = benchmarks::build("gemm", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = super::super::BoundModel::build(&k, &a, &Device::u200());
+        let cm = bm.compile();
+        let mut rng = crate::util::rng::Rng::new(0xa0a0);
+        for n in [0usize, 1, 3, 7, 8, 9, 13, 16] {
+            let designs: Vec<Design> = (0..n)
+                .map(|_| {
+                    let mut d = Design::empty(&k);
+                    for p in &mut d.pragmas {
+                        p.uf = rng.range(1, 33);
+                        p.tile = rng.range(1, 17);
+                        p.pipeline = rng.chance(0.5);
+                    }
+                    d
+                })
+                .collect();
+            let soa = cm.evaluate_batch_soa(&designs);
+            assert_eq!(soa.len(), designs.len(), "n={n}");
+            let mut scratch = cm.scratch();
+            for (i, (d, r)) in designs.iter().zip(&soa).enumerate() {
+                let s = cm.evaluate(d, &mut scratch);
+                assert_eq!(
+                    s.total_cycles.to_bits(),
+                    r.total_cycles.to_bits(),
+                    "n={n} i={i} total"
+                );
+                assert_eq!(s.comp_cycles.to_bits(), r.comp_cycles.to_bits());
+                assert_eq!(s.comm_cycles.to_bits(), r.comm_cycles.to_bits());
+                assert_eq!(s.dsp.to_bits(), r.dsp.to_bits());
+                assert_eq!(s.onchip_bytes.to_bits(), r.onchip_bytes.to_bits());
+                assert_eq!(s.max_partitioning, r.max_partitioning);
+                assert_eq!(s.feasible, r.feasible);
+            }
+        }
+    }
+
+    #[test]
+    fn soa_scratch_is_reusable_across_batches() {
+        let k = benchmarks::build("bicg", benchmarks::Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = super::super::BoundModel::build(&k, &a, &Device::u200());
+        let cm = bm.compile();
+        let mut scratch = cm.soa_scratch();
+        let mut out = Vec::new();
+        let mut expect = cm.scratch();
+        for uf in [1u64, 2, 4, 8] {
+            let mut d = Design::empty(&k);
+            d.get_mut(LoopId(0)).uf = uf;
+            let designs = vec![d.clone(); 3];
+            cm.evaluate_batch_soa_in(&designs, &mut scratch, &mut out);
+            assert_eq!(out.len(), 3);
+            let s = cm.evaluate(&d, &mut expect);
+            for r in &out {
+                assert_eq!(s.total_cycles.to_bits(), r.total_cycles.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -30,6 +30,14 @@ use crate::pragma::Design;
 use crate::util::ceil_log2;
 use std::collections::HashMap;
 
+/// Lane width of the batched (structure-of-arrays) evaluators: both the
+/// concrete SoA tape kernel (`CompiledModel::evaluate_batch_soa`) and the
+/// laned interval evaluator ([`eval_interval_lanes`]) process this many
+/// designs/boxes per tape pass, with values laid out node-major
+/// (`vals[node * LANE_WIDTH + lane]`) so each operator becomes a
+/// straight-line loop over lanes the compiler can auto-vectorize.
+pub const LANE_WIDTH: usize = 8;
+
 /// Index of an interned node in its [`Pool`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct ExprId(pub u32);
@@ -195,8 +203,11 @@ impl Pool {
     }
 }
 
+// shared by the scalar evaluators here and the SoA lane kernel in
+// compile.rs — bit-identity across the two depends on both calling the
+// exact same function
 #[inline]
-fn treelog_f(x: f64) -> f64 {
+pub(crate) fn treelog_f(x: f64) -> f64 {
     let t = x.trunc().max(1.0) as u64;
     (ceil_log2(t) as f64).max(1.0)
 }
@@ -292,6 +303,106 @@ pub struct VarBox {
     pub pip: Interval,
 }
 
+// One node's interval rule, abstracted over how child intervals are
+// fetched so the scalar ([`eval_interval`]) and laned
+// ([`eval_interval_lanes`]) passes share it verbatim — lane-vs-scalar
+// bit-identity holds by construction, not by parallel maintenance.
+#[inline]
+fn iv_node(n: &SymNode, boxes: &[VarBox], get: impl Fn(ExprId) -> Interval) -> Interval {
+    match *n {
+        SymNode::Const(bits) => Interval::point(f64::from_bits(bits)),
+        SymNode::Uf(l) => boxes[l as usize].uf,
+        SymNode::Tile(l) => boxes[l as usize].tile,
+        SymNode::Pip(l) => boxes[l as usize].pip,
+        SymNode::Add(a, b) => {
+            let (a, b) = (get(a), get(b));
+            Interval::new(a.lo + b.lo, a.hi + b.hi)
+        }
+        SymNode::Sub(a, b) => {
+            let (a, b) = (get(a), get(b));
+            Interval::new(a.lo - b.hi, a.hi - b.lo)
+        }
+        SymNode::Mul(a, b) => Interval::corners(get(a), get(b), |x, y| x * y),
+        SymNode::Div(a, b) => {
+            let (a, b) = (get(a), get(b));
+            if b.lo <= 0.0 {
+                // divisor interval touches zero (unreachable with the
+                // current lowering, where every divisor is clamped
+                // ≥ 1): widen to the sign-correct half-line/line so
+                // inclusion still holds for any numerator
+                if a.lo >= 0.0 {
+                    Interval::new(0.0, f64::INFINITY)
+                } else {
+                    Interval::new(f64::NEG_INFINITY, f64::INFINITY)
+                }
+            } else {
+                Interval::corners(a, b, |x, y| x / y)
+            }
+        }
+        SymNode::Min(a, b) => {
+            let (a, b) = (get(a), get(b));
+            Interval::new(a.lo.min(b.lo), a.hi.min(b.hi))
+        }
+        SymNode::Max(a, b) => {
+            let (a, b) = (get(a), get(b));
+            Interval::new(a.lo.max(b.lo), a.hi.max(b.hi))
+        }
+        SymNode::Ceil(a) => {
+            let a = get(a);
+            Interval::new(a.lo.ceil(), a.hi.ceil())
+        }
+        SymNode::TreeLog(a) => {
+            let a = get(a);
+            Interval::new(treelog_f(a.lo), treelog_f(a.hi))
+        }
+        SymNode::Gt(a, b) => {
+            let (a, b) = (get(a), get(b));
+            if a.lo > b.hi {
+                Interval::point(1.0)
+            } else if a.hi <= b.lo {
+                Interval::point(0.0)
+            } else {
+                Interval::new(0.0, 1.0)
+            }
+        }
+        SymNode::Lt(a, b) => {
+            let (a, b) = (get(a), get(b));
+            if a.hi < b.lo {
+                Interval::point(1.0)
+            } else if a.lo >= b.hi {
+                Interval::point(0.0)
+            } else {
+                Interval::new(0.0, 1.0)
+            }
+        }
+        SymNode::And(a, b) => {
+            let (a, b) = (get(a), get(b));
+            let a1 = a.lo != 0.0 || a.hi != 0.0; // can be true
+            let b1 = b.lo != 0.0 || b.hi != 0.0;
+            let a0 = a.contains(0.0); // can be false
+            let b0 = b.contains(0.0);
+            match (a1 && b1, a0 || b0) {
+                (true, false) => Interval::point(1.0),
+                (false, _) => Interval::point(0.0),
+                _ => Interval::new(0.0, 1.0),
+            }
+        }
+        SymNode::Select(c, t, e) => {
+            let c = get(c);
+            if c.lo != 0.0 || c.hi != 0.0 {
+                // predicate *may* hold
+                if c.contains(0.0) {
+                    Interval::hull(get(t), get(e))
+                } else {
+                    get(t)
+                }
+            } else {
+                get(e)
+            }
+        }
+    }
+}
+
 /// Evaluate every node over the per-loop boxes with inclusion-sound
 /// interval rules. Division assumes a positive divisor (every divisor in
 /// the lowered model is a trip count, a clamped unroll factor, or a
@@ -301,101 +412,30 @@ pub fn eval_interval(nodes: &[SymNode], boxes: &[VarBox], out: &mut Vec<Interval
     out.clear();
     out.resize(nodes.len(), Interval::point(0.0));
     for (i, n) in nodes.iter().enumerate() {
-        let v = match *n {
-            SymNode::Const(bits) => Interval::point(f64::from_bits(bits)),
-            SymNode::Uf(l) => boxes[l as usize].uf,
-            SymNode::Tile(l) => boxes[l as usize].tile,
-            SymNode::Pip(l) => boxes[l as usize].pip,
-            SymNode::Add(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                Interval::new(a.lo + b.lo, a.hi + b.hi)
-            }
-            SymNode::Sub(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                Interval::new(a.lo - b.hi, a.hi - b.lo)
-            }
-            SymNode::Mul(a, b) => {
-                Interval::corners(out[a.0 as usize], out[b.0 as usize], |x, y| x * y)
-            }
-            SymNode::Div(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                if b.lo <= 0.0 {
-                    // divisor interval touches zero (unreachable with the
-                    // current lowering, where every divisor is clamped
-                    // ≥ 1): widen to the sign-correct half-line/line so
-                    // inclusion still holds for any numerator
-                    if a.lo >= 0.0 {
-                        Interval::new(0.0, f64::INFINITY)
-                    } else {
-                        Interval::new(f64::NEG_INFINITY, f64::INFINITY)
-                    }
-                } else {
-                    Interval::corners(a, b, |x, y| x / y)
-                }
-            }
-            SymNode::Min(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                Interval::new(a.lo.min(b.lo), a.hi.min(b.hi))
-            }
-            SymNode::Max(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                Interval::new(a.lo.max(b.lo), a.hi.max(b.hi))
-            }
-            SymNode::Ceil(a) => {
-                let a = out[a.0 as usize];
-                Interval::new(a.lo.ceil(), a.hi.ceil())
-            }
-            SymNode::TreeLog(a) => {
-                let a = out[a.0 as usize];
-                Interval::new(treelog_f(a.lo), treelog_f(a.hi))
-            }
-            SymNode::Gt(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                if a.lo > b.hi {
-                    Interval::point(1.0)
-                } else if a.hi <= b.lo {
-                    Interval::point(0.0)
-                } else {
-                    Interval::new(0.0, 1.0)
-                }
-            }
-            SymNode::Lt(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                if a.hi < b.lo {
-                    Interval::point(1.0)
-                } else if a.lo >= b.hi {
-                    Interval::point(0.0)
-                } else {
-                    Interval::new(0.0, 1.0)
-                }
-            }
-            SymNode::And(a, b) => {
-                let (a, b) = (out[a.0 as usize], out[b.0 as usize]);
-                let a1 = a.lo != 0.0 || a.hi != 0.0; // can be true
-                let b1 = b.lo != 0.0 || b.hi != 0.0;
-                let a0 = a.contains(0.0); // can be false
-                let b0 = b.contains(0.0);
-                match (a1 && b1, a0 || b0) {
-                    (true, false) => Interval::point(1.0),
-                    (false, _) => Interval::point(0.0),
-                    _ => Interval::new(0.0, 1.0),
-                }
-            }
-            SymNode::Select(c, t, e) => {
-                let c = out[c.0 as usize];
-                if c.lo != 0.0 || c.hi != 0.0 {
-                    // predicate *may* hold
-                    if c.contains(0.0) {
-                        Interval::hull(out[t.0 as usize], out[e.0 as usize])
-                    } else {
-                        out[t.0 as usize]
-                    }
-                } else {
-                    out[e.0 as usize]
-                }
-            }
-        };
+        let v = iv_node(n, boxes, |e| out[e.0 as usize]);
         out[i] = v;
+    }
+}
+
+/// Laned interval evaluation: [`LANE_WIDTH`] box sets propagated through
+/// the tape in one pass, values node-major
+/// (`out[node * LANE_WIDTH + lane]`). Each lane applies exactly the
+/// scalar [`eval_interval`] rules (both delegate to the same per-node
+/// helper), so per-lane results are bit-identical to scalar calls — this
+/// is what lets `BoundModel::lower_bound_batch` replace per-partial
+/// scalar passes without perturbing any pruning decision.
+pub fn eval_interval_lanes(
+    nodes: &[SymNode],
+    boxes: &[&[VarBox]; LANE_WIDTH],
+    out: &mut Vec<Interval>,
+) {
+    out.clear();
+    out.resize(nodes.len() * LANE_WIDTH, Interval::point(0.0));
+    for (i, n) in nodes.iter().enumerate() {
+        for lane in 0..LANE_WIDTH {
+            let v = iv_node(n, boxes[lane], |e| out[e.0 as usize * LANE_WIDTH + lane]);
+            out[i * LANE_WIDTH + lane] = v;
+        }
     }
 }
 
@@ -511,6 +551,64 @@ mod tests {
                     iv[i].hi,
                     root.0
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn laned_interval_eval_matches_scalar_per_lane() {
+        // same expression zoo as the inclusion test; each lane gets a
+        // different box set and must reproduce the scalar pass bit-for-bit
+        let mut p = Pool::new();
+        let uf = p.uf(0);
+        let uf1 = p.max_c(uf, 1.0);
+        let tile = p.tile(0);
+        let pip = p.pip(0);
+        let tc = p.cf(16.0);
+        let ratio = p.div(tc, uf1);
+        let ramp = {
+            let one = p.cf(1.0);
+            let s = p.sub(ratio, one);
+            p.max_c(s, 0.0)
+        };
+        let tl = p.treelog(uf1);
+        let cond = {
+            let one = p.cf(1.0);
+            let g = p.gt(tile, one);
+            let l = p.lt(tile, tc);
+            p.and(g, l)
+        };
+        let scaled = {
+            let m = p.mul(ramp, tl);
+            p.select(cond, m, ratio)
+        };
+        let _root = p.select(pip, scaled, ramp);
+
+        let lane_boxes: Vec<Vec<VarBox>> = (0..LANE_WIDTH)
+            .map(|lane| {
+                let hi = (lane + 1) as f64 * 2.0;
+                vec![VarBox {
+                    uf: Interval::new(1.0, hi),
+                    tile: Interval::new(1.0, hi),
+                    pip: if lane % 2 == 0 {
+                        Interval::new(0.0, 1.0)
+                    } else {
+                        Interval::point(1.0)
+                    },
+                }]
+            })
+            .collect();
+        let refs: [&[VarBox]; LANE_WIDTH] = std::array::from_fn(|j| lane_boxes[j].as_slice());
+        let mut laned = Vec::new();
+        eval_interval_lanes(p.nodes(), &refs, &mut laned);
+
+        let mut scalar = Vec::new();
+        for (lane, boxes) in lane_boxes.iter().enumerate() {
+            eval_interval(p.nodes(), boxes, &mut scalar);
+            for (i, iv) in scalar.iter().enumerate() {
+                let l = laned[i * LANE_WIDTH + lane];
+                assert_eq!(iv.lo.to_bits(), l.lo.to_bits(), "node {i} lane {lane} lo");
+                assert_eq!(iv.hi.to_bits(), l.hi.to_bits(), "node {i} lane {lane} hi");
             }
         }
     }

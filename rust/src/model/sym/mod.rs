@@ -19,7 +19,9 @@
 //! * [`compile`] — consumer 1: [`BoundModel::compile`] flattens the model
 //!   into the allocation-free [`CompiledModel`] batch evaluator that
 //!   replaces the recursion on the DSE hot path
-//!   (`CompiledModel::evaluate_batch`).
+//!   (`CompiledModel::evaluate_batch`, and the structure-of-arrays lane
+//!   kernel `CompiledModel::evaluate_batch_soa` — [`LANE_WIDTH`] designs
+//!   per tape pass, bit-identical to the scalar path).
 //! * [`constraint`] — consumer 2: `NlpProblem` is a thin view over the
 //!   shared constraint objects; [`Violation`]s come from walking the
 //!   shared [`Constraint`] values, and the solver's relaxation bounds come from
@@ -44,9 +46,9 @@ pub mod expr;
 pub mod partial;
 
 pub use build::{BoundModel, VarDomain};
-pub use compile::{CompiledModel, CompiledResult, EvalScratch};
+pub use compile::{CompiledModel, CompiledResult, EvalScratch, SoaScratch};
 pub use constraint::{Constraint, Violation};
-pub use expr::{ExprId, Interval, Pool, SymNode, VarBox};
+pub use expr::{ExprId, Interval, Pool, SymNode, VarBox, LANE_WIDTH};
 pub use partial::PartialDesign;
 
 // Thread-safety contract: one model build serves the parallel solver's
@@ -60,6 +62,7 @@ fn _assert_models_are_thread_safe() {
     ok::<BoundModel>();
     ok::<CompiledModel>();
     ok::<EvalScratch>();
+    ok::<SoaScratch>();
     ok::<PartialDesign>();
     ok::<Constraint>();
 }

@@ -143,6 +143,13 @@ impl<'k> NlpProblem<'k> {
         self.compiled.scratch()
     }
 
+    /// A fresh structure-of-arrays lane scratch for this problem's
+    /// compiled model — one per solver worker, backing the batched
+    /// (`evaluate_batch_soa_in`) leaf-scoring path.
+    pub fn soa_scratch(&self) -> sym::SoaScratch {
+        self.compiled.soa_scratch()
+    }
+
     /// Check every formulation constraint on a complete design; returns the
     /// list of violations (empty = feasible point of the NLP), produced by
     /// the shared [`sym::Constraint`] objects.

@@ -8,11 +8,12 @@
 //!   BARON: per-pipeline-configuration enumeration over the divisor
 //!   lattice with branch-and-bound across loop nests, admissible
 //!   latency bounds, monotone constraint propagation (partitioning/DSP),
-//!   and a deterministic time budget. Pipeline configurations are drained
-//!   from a shared queue by a scoped worker team ([`solve_jobs`]), with a
-//!   deterministic reduction making `jobs = N` bit-identical to
-//!   `jobs = 1`. On timeout it returns the best incumbent plus a valid
-//!   lower bound, exactly as BARON's anytime behaviour (Table 7).
+//!   and a deterministic time budget. Pipeline configurations are dealt
+//!   bound-ascending into per-worker deques and drained by a scoped
+//!   work-stealing team ([`solve_jobs`]), with a deterministic reduction
+//!   making `jobs = N` bit-identical to `jobs = 1`. On timeout it
+//!   returns the best incumbent plus a valid lower bound, exactly as
+//!   BARON's anytime behaviour (Table 7).
 
 pub mod formulation;
 pub mod solver;

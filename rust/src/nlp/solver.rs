@@ -26,12 +26,25 @@
 //! ## Parallel work sharing ([`solve_jobs`])
 //!
 //! Pipeline configurations are **embarrassingly parallel**: a scoped
-//! worker team drains them from a shared atomic queue. Per-nest candidate
-//! menus are shared across workers through a sharded concurrent map (the
-//! menu depends only on `(nest root, local pipeline choice)`), and a
-//! lock-free shared incumbent — the k-th best objective as atomic f64
-//! bits — lets every worker skip whole configurations that provably
-//! cannot enter the final top-k.
+//! worker team processes them with **work stealing**. Before any worker
+//! starts, every configuration's interval-relaxation bound is computed in
+//! one batched laned sweep (`BoundModel::lower_bound_batch`) and the
+//! configs are sorted **bound-ascending**; the sorted order is dealt
+//! round-robin in `STEAL_CHUNK`-sized chunks into per-worker deques.
+//! Each worker pops from its own deque's front (best bounds first — good
+//! incumbents land early, so the cross-worker guard starts cutting
+//! sooner); a worker whose deque runs dry steals the *back* half of the
+//! first non-empty victim deque, so stragglers stuck on a menu-bomb
+//! config no longer strand the rest of their chunk (the old single
+//! `fetch_add` counter had no such recourse: work was claimed one config
+//! at a time, but a skewed config still serialized everything dealt
+//! behind it on the same counter — here the remaining configs just get
+//! stolen). Per-nest candidate menus are shared across workers through a
+//! sharded concurrent map (the menu depends only on
+//! `(nest root, local pipeline choice)`), and a lock-free shared
+//! incumbent — the k-th best objective as atomic f64 bits — lets every
+//! worker skip whole configurations that provably cannot enter the final
+//! top-k.
 //!
 //! ## Determinism
 //!
@@ -63,16 +76,22 @@
 //! * the final reduction is a **deterministic merge**: all per-config
 //!   top-k lists are pooled, ranked by the total order
 //!   `(objective, realization risk, pragma vector)`, deduplicated, and
-//!   truncated — invariant under any work interleaving;
+//!   truncated — invariant under any work interleaving. This is also why
+//!   work stealing and bound-ascending dispatch are free to reorder and
+//!   re-partition the configs arbitrarily: *which worker* runs a config,
+//!   and *when*, never reaches the reduction;
 //! * the proven lower bound is the minimum over *all* configurations of
-//!   the interval-relaxation bound (computed even for skipped configs),
-//!   capped by the best objective — again interleaving-invariant.
+//!   the interval-relaxation bound (precomputed for every config before
+//!   dispatch, so it covers skipped configs too), capped by the best
+//!   objective — again interleaving-invariant.
 //!
 //! `SolverStats` are merged commutatively (field-wise sums), so totals
 //! are reproducible for a fixed explored/skipped partition; with
 //! `jobs > 1` the partition itself may shift with guard timing, so node
 //! and prune *counts* (unlike results) are not guaranteed identical to
-//! the serial run.
+//! the serial run. [`SolverStats::steals`] and
+//! [`SolverStats::queue_idle_s`] expose the stealing machinery itself;
+//! both are identically zero for `jobs = 1`.
 //!
 //! Anytime behaviour: on budget exhaustion (wall clock, or a config
 //! blowing the per-config node cap) the best incumbent is returned with
@@ -87,12 +106,12 @@
 use super::formulation::NlpProblem;
 use crate::ir::{Kernel, LoopId};
 use crate::model;
-use crate::model::sym::{EvalScratch, PartialDesign};
+use crate::model::sym::{EvalScratch, PartialDesign, SoaScratch};
 use crate::pragma::{space, Design, PipelineConfig};
 use std::collections::hash_map::{DefaultHasher, Entry};
-use std::collections::{HashMap, HashSet};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -108,6 +127,12 @@ const NODE_CAP: u64 = 1_500_000;
 const MAX_MENU_ASSIGNMENTS: usize = 200_000;
 /// Sharded concurrent nest-menu cache width (power of two).
 const CACHE_SHARDS: usize = 16;
+/// Work-stealing deal granularity: the bound-ascending config order is
+/// dealt round-robin into per-worker deques this many configs at a time.
+/// Small on purpose — the initial deal only has to keep early guard
+/// updates spread across workers; load balance comes from stealing, not
+/// from clairvoyant chunking.
+const STEAL_CHUNK: usize = 2;
 
 /// Bulk lower-bound scoring interface. `runtime::XlaEvaluator` implements
 /// this over the AOT artifact; [`RustFeatureEvaluator`] is the in-process
@@ -116,6 +141,20 @@ const CACHE_SHARDS: usize = 16;
 pub trait BatchEvaluator: Send + Sync {
     /// Returns `(latency_lb, dsp)` per design.
     fn eval_batch(&self, problem: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)>;
+
+    /// [`eval_batch`](Self::eval_batch) through a caller-owned SoA lane
+    /// scratch. Evaluators with a batched kernel (the
+    /// [`SymbolicEvaluator`]) override this to score allocation-free
+    /// through per-worker lane buffers; the default ignores the scratch
+    /// and must return exactly what `eval_batch` returns.
+    fn eval_batch_in(
+        &self,
+        problem: &NlpProblem,
+        designs: &[Design],
+        _lanes: &mut SoaScratch,
+    ) -> Vec<(f64, f64)> {
+        self.eval_batch(problem, designs)
+    }
 }
 
 /// Fallback evaluator: the Rust reference implementation of the feature
@@ -146,11 +185,24 @@ pub struct SymbolicEvaluator;
 
 impl BatchEvaluator for SymbolicEvaluator {
     fn eval_batch(&self, p: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)> {
+        // SoA lane kernel: bit-identical scores to the scalar tape at a
+        // fraction of the per-design dispatch cost
         p.compiled
-            .evaluate_batch(designs)
+            .evaluate_batch_soa(designs)
             .into_iter()
             .map(|r| (r.total_cycles, r.dsp))
             .collect()
+    }
+
+    fn eval_batch_in(
+        &self,
+        p: &NlpProblem,
+        designs: &[Design],
+        lanes: &mut SoaScratch,
+    ) -> Vec<(f64, f64)> {
+        let mut out = Vec::new();
+        p.compiled.evaluate_batch_soa_in(designs, lanes, &mut out);
+        out.into_iter().map(|r| (r.total_cycles, r.dsp)).collect()
     }
 }
 
@@ -194,6 +246,17 @@ pub struct SolverStats {
     /// (visible here instead of silently asymmetric, as the old
     /// mid-extension break was).
     pub truncated_menus: u64,
+    /// Successful work-stealing grabs: a worker found its own deque empty
+    /// and took the back half of a victim's. Always 0 for `jobs = 1`
+    /// (the serial path never consults other queues); with `jobs > 1` the
+    /// count depends on thread timing, like the other partition-sensitive
+    /// counters.
+    pub steals: u64,
+    /// Seconds workers spent with an empty local deque hunting for work
+    /// (scanning victims, successful or not). Wall-clock measurement:
+    /// reported for bench/diagnostic use, never compared for determinism.
+    /// Always 0.0 for `jobs = 1`.
+    pub queue_idle_s: f64,
 }
 
 impl SolverStats {
@@ -209,6 +272,8 @@ impl SolverStats {
         self.candidates_scored += o.candidates_scored;
         self.configs += o.configs;
         self.truncated_menus += o.truncated_menus;
+        self.steals += o.steals;
+        self.queue_idle_s += o.queue_idle_s;
     }
 }
 
@@ -430,12 +495,20 @@ struct Shared<'a> {
     topk: usize,
     t0: Instant,
     timeout_s: f64,
-    /// Next unclaimed pipeline-configuration index (the work queue).
-    next_cfg: AtomicUsize,
+    /// Per-worker config deques (the work-stealing queues). Dealt from
+    /// the bound-ascending order before any worker starts; no producer
+    /// exists after that, so "every deque empty" means the search is
+    /// drained. Plain mutexed `VecDeque`s: steals are rare (a worker only
+    /// locks a victim when its own deque is dry) and config granularity
+    /// is coarse, so a lock-free deque would buy nothing here.
+    queues: Vec<Mutex<VecDeque<u32>>>,
+    /// Interval-relaxation bound per config index, precomputed for *all*
+    /// configs in one laned batch sweep before dispatch.
+    iv_lbs: Vec<f64>,
+    /// `min(iv_lbs)` — the deterministic part of the proven lower bound.
+    iv_lb_all: f64,
     /// k-th best objective over the merged global top-k (+inf until full).
     guard: AtomicF64Min,
-    /// Min interval-relaxation bound over every processed configuration.
-    iv_lb_min: AtomicF64Min,
     optimal: AtomicBool,
     /// Merged global top-k, kept in `rank_cmp` order, deduped, ≤ topk.
     best: Mutex<Vec<Incumbent>>,
@@ -447,6 +520,8 @@ struct Shared<'a> {
 /// the reused `leaf` design and clone it only on acceptance).
 struct WorkerScratch {
     eval: EvalScratch,
+    /// Lane buffer backing the SoA batch scoring path.
+    soa: SoaScratch,
     chosen: Vec<usize>,
     part_stack: Vec<((u32, usize), u64)>,
     merged: Vec<((u32, usize), u64)>,
@@ -460,6 +535,7 @@ impl WorkerScratch {
     fn new(problem: &NlpProblem) -> WorkerScratch {
         WorkerScratch {
             eval: problem.scratch(),
+            soa: problem.soa_scratch(),
             chosen: Vec::new(),
             part_stack: Vec::new(),
             merged: Vec::new(),
@@ -559,9 +635,40 @@ pub fn solve_jobs_seeded(
     let empty = Design::empty(k);
     let base = model::nest_latencies(k, problem.analysis, problem.device, &empty);
 
+    // ---- bound-ascending work-stealing dispatch -------------------------
+    // Every config's interval-relaxation bound is computed up front in one
+    // laned batch sweep (8 configs per tape pass); besides feeding the
+    // per-config guard checks, the full vector gives the deterministic
+    // lower-bound reduction over *all* configs — including ones a timeout
+    // later leaves unclaimed. The configs are then sorted by
+    // (bound, index) — total_cmp so NaN-free ordering is total, index so
+    // the order is unique — and dealt round-robin into per-worker deques:
+    // fronts hold the most promising configs, so every worker's first
+    // claims tighten the guard fastest.
+    let configs: &[PipelineConfig] = &problem.space.pipeline_configs;
+    let partials: Vec<PartialDesign> = configs
+        .iter()
+        .map(|cfg| config_partial(problem, cfg))
+        .collect();
+    let iv_lbs = problem.bound.lower_bound_batch(&partials);
+    drop(partials);
+    let iv_lb_all = iv_lbs.iter().copied().fold(f64::INFINITY, f64::min);
+    let mut order: Vec<u32> = (0..configs.len() as u32).collect();
+    order.sort_by(|&x, &y| {
+        iv_lbs[x as usize]
+            .total_cmp(&iv_lbs[y as usize])
+            .then(x.cmp(&y))
+    });
+    let queues: Vec<Mutex<VecDeque<u32>>> = (0..jobs)
+        .map(|_| Mutex::new(VecDeque::with_capacity(configs.len() / jobs + STEAL_CHUNK)))
+        .collect();
+    for (i, chunk) in order.chunks(STEAL_CHUNK).enumerate() {
+        queues[i % jobs].lock().unwrap().extend(chunk.iter().copied());
+    }
+
     let sh = Shared {
         problem,
-        configs: &problem.space.pipeline_configs,
+        configs,
         evaluator,
         nests: k.nest_roots(),
         base,
@@ -569,9 +676,10 @@ pub fn solve_jobs_seeded(
         topk,
         t0,
         timeout_s,
-        next_cfg: AtomicUsize::new(0),
+        queues,
+        iv_lbs,
+        iv_lb_all,
         guard: AtomicF64Min::new(seed_guard),
-        iv_lb_min: AtomicF64Min::new(f64::INFINITY),
         optimal: AtomicBool::new(true),
         best: Mutex::new(seeded),
         cache: CandCache::new(),
@@ -580,15 +688,15 @@ pub fn solve_jobs_seeded(
     let mut stats = SolverStats::default();
     let mut cpu_time_s = 0.0f64;
     if jobs == 1 {
-        cpu_time_s = worker(&sh, &mut stats);
+        cpu_time_s = worker(&sh, 0, &mut stats);
     } else {
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..jobs)
-                .map(|_| {
+                .map(|id| {
                     let sh = &sh;
                     scope.spawn(move || {
                         let mut st = SolverStats::default();
-                        let busy = worker(sh, &mut st);
+                        let busy = worker(sh, id, &mut st);
                         (st, busy)
                     })
                 })
@@ -602,7 +710,7 @@ pub fn solve_jobs_seeded(
     }
 
     let best = sh.best.into_inner().unwrap();
-    let mut proven_lb = sh.iv_lb_min.get();
+    let mut proven_lb = sh.iv_lb_all;
     if let Some(b) = best.first() {
         // the optimum can't be below the proven relaxation, nor above the
         // incumbent
@@ -619,18 +727,17 @@ pub fn solve_jobs_seeded(
     }
 }
 
-/// One worker: drain configurations from the shared queue until the queue
-/// or the time budget is empty. Returns the seconds this worker spent
-/// busy on configurations (the honest per-worker CPU bill).
-fn worker(sh: &Shared, stats: &mut SolverStats) -> f64 {
+/// One worker: drain the local deque, steal when it runs dry, until no
+/// queue holds work or the time budget is empty. Returns the seconds this
+/// worker spent busy on configurations (the honest per-worker CPU bill).
+fn worker(sh: &Shared, id: usize, stats: &mut SolverStats) -> f64 {
     let mut ws = WorkerScratch::new(sh.problem);
     let mut busy = 0.0f64;
     loop {
-        // claim first, then check the clock: a drained queue is a
+        // claim first, then check the clock: drained queues are a
         // *completed* search even if the deadline passed while the last
         // config finished — only flag non-optimality when work remains
-        let ci = sh.next_cfg.fetch_add(1, Ordering::Relaxed);
-        let Some(cfg) = sh.configs.get(ci) else {
+        let Some(ci) = next_config(sh, id, stats) else {
             return busy;
         };
         if sh.t0.elapsed().as_secs_f64() > sh.timeout_s {
@@ -639,7 +746,7 @@ fn worker(sh: &Shared, stats: &mut SolverStats) -> f64 {
         }
         stats.configs += 1;
         let t = Instant::now();
-        run_config(sh, &mut ws, cfg, stats);
+        run_config(sh, &mut ws, ci as usize, stats);
         busy += t.elapsed().as_secs_f64();
         if ws.timed_out {
             return busy;
@@ -647,24 +754,65 @@ fn worker(sh: &Shared, stats: &mut SolverStats) -> f64 {
     }
 }
 
+/// Claim the next config for worker `id`: pop the local deque's front
+/// (best remaining bound), else steal the **back** half of the first
+/// non-empty victim — the victim keeps its better-bounded front, the
+/// thief inherits the tail it was never going to reach soon. `None` only
+/// when every deque is empty; with no producers after the initial deal
+/// that means the search is drained. (Benign race, documented: a stolen
+/// chunk is invisible to *other* scanners while the thief re-queues it,
+/// so a third worker may retire one scan early — work is never lost, the
+/// thief itself processes everything it took.)
+fn next_config(sh: &Shared, id: usize, stats: &mut SolverStats) -> Option<u32> {
+    if let Some(ci) = sh.queues[id].lock().unwrap().pop_front() {
+        return Some(ci);
+    }
+    let n = sh.queues.len();
+    if n == 1 {
+        return None; // serial path: no victims, no idle accounting
+    }
+    let t = Instant::now();
+    let mut found = None;
+    for off in 1..n {
+        let victim = (id + off) % n;
+        let mut stolen = {
+            let mut q = sh.queues[victim].lock().unwrap();
+            if q.is_empty() {
+                continue;
+            }
+            let keep = q.len() / 2; // steal-half, rounding the extra to us
+            q.split_off(keep)
+        };
+        let ci = stolen.pop_front().expect("stole from non-empty deque");
+        if !stolen.is_empty() {
+            sh.queues[id].lock().unwrap().append(&mut stolen);
+        }
+        stats.steals += 1;
+        found = Some(ci);
+        break;
+    }
+    stats.queue_idle_s += t.elapsed().as_secs_f64();
+    found
+}
+
 /// Process one pipeline configuration: sound config-level skips against
 /// the shared guard, per-nest candidate menus, then a purely local
 /// branch-and-bound whose top-k merges into the global reduction.
-fn run_config(sh: &Shared, ws: &mut WorkerScratch, cfg: &PipelineConfig, stats: &mut SolverStats) {
+fn run_config(sh: &Shared, ws: &mut WorkerScratch, ci: usize, stats: &mut SolverStats) {
     let problem = sh.problem;
     let k = problem.kernel;
+    let cfg = &sh.configs[ci];
 
     // ---- symbolic interval relaxation over the whole config ------------
-    // Always computed: its minimum over all configurations is the
-    // deterministic part of the proven lower bound. With the pipeline
-    // fixed and the structural Eq 9/15 assignments applied, every UF left
-    // free is relaxed to its interval hull; if even that optimistic
-    // completion cannot enter the top-k (compared against the *k-th*
-    // global incumbent with tolerance, so runners-up and ties are never
-    // lost), the whole config is skipped before any candidate exists.
-    let partial = config_partial(problem, cfg);
-    let iv_lb = problem.bound.lower_bound(&partial);
-    sh.iv_lb_min.fetch_min(iv_lb);
+    // Precomputed for every config in the dispatch sweep (the minimum
+    // over all of them is the deterministic part of the proven lower
+    // bound). With the pipeline fixed and the structural Eq 9/15
+    // assignments applied, every UF left free is relaxed to its interval
+    // hull; if even that optimistic completion cannot enter the top-k
+    // (compared against the *k-th* global incumbent with tolerance, so
+    // runners-up and ties are never lost), the whole config is skipped
+    // before any candidate exists.
+    let iv_lb = sh.iv_lbs[ci];
     if iv_lb > sh.guard.get() * (1.0 + EPS) {
         stats.pruned_relaxation += 1;
         return;
@@ -683,7 +831,7 @@ fn run_config(sh: &Shared, ws: &mut WorkerScratch, cfg: &PipelineConfig, stats: 
         local.sort_unstable();
         let key = (root.0, local);
         let (set, inserted) = sh.cache.get_or_build(key, || {
-            nest_candidates(problem, cfg, root, sh.cap, sh.evaluator, &sh.base, ni)
+            nest_candidates(problem, cfg, root, sh.cap, sh.evaluator, &sh.base, ni, &mut ws.soa)
         });
         if inserted {
             stats.candidates_scored += set.scored;
@@ -818,6 +966,7 @@ fn nest_candidates(
     evaluator: &dyn BatchEvaluator,
     base: &model::NestBreakdown,
     nest_idx: usize,
+    lanes: &mut SoaScratch,
 ) -> CandSet {
     let k = problem.kernel;
     let a = problem.analysis;
@@ -966,8 +1115,10 @@ fn nest_candidates(
         };
     }
 
-    // bulk score (lower bounds) — XLA artifact when plugged in
-    let scores = evaluator.eval_batch(problem, &designs);
+    // bulk score (lower bounds) — XLA artifact when plugged in; the
+    // symbolic evaluator flushes through the worker's SoA lane buffer at
+    // lane-width granularity
+    let scores = evaluator.eval_batch_in(problem, &designs, lanes);
     let scored = designs.len() as u64;
 
     // extract additive per-nest latency from the total score:

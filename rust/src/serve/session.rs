@@ -31,12 +31,19 @@
 //! exploration a pure function of its key, and `dse` with
 //! `"transform": true` mixes the variant-enumeration bounds into the
 //! fingerprint so the same kernel ± transform occupies distinct cache
-//! lines. Every op's `hit`/`warm`/`miss` attribution is also counted
+//! lines. A first-time transform `dse` is additionally warm-seeded from
+//! the untransformed kernel's default-sub-space solve incumbents
+//! (plain warm fingerprint, cap = `MAX`, coarse): every variant's
+//! ladder starts from the re-verified seeds
+//! ([`run_transform_dse_seeded`]), the response reports
+//! `cache: "warm"`, and — exactly like warm solves — the seeded
+//! payload is *not* admitted to the replay cache, keeping replay lines
+//! history-independent. Every op's `hit`/`warm`/`miss` attribution is also counted
 //! per op (the `stats` payload's per-op `cache` object) — the global
 //! [`CacheStats`](super::cache::CacheStats) counters alone cannot say
 //! *which* op's traffic warmed or missed.
 
-use super::cache::{DseKey, SolveKey, WarmCache};
+use super::cache::{DseKey, SolveKey, WarmCache, WarmKey};
 use super::fingerprint::{fingerprint, fingerprint_spaced};
 use super::protocol::{self, Request};
 use crate::benchmarks::{self, Size};
@@ -48,7 +55,7 @@ use crate::model::sym::{BoundModel, PartialDesign};
 use crate::nlp::{self, BatchEvaluator, NlpProblem, SolveResult};
 use crate::poly::Analysis;
 use crate::pragma::Design;
-use crate::transform::{run_transform_dse, TransformConfig, TransformOutcome};
+use crate::transform::{run_transform_dse_seeded, TransformConfig, TransformOutcome};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -565,10 +572,39 @@ fn op_dse(
         &req.op,
         &format!("exploring with engine `{engine}`"),
     ));
-    let data = if transform {
+    let (tag, data) = if transform {
         let eval = solver_evaluator(&eval_tag);
-        let o = run_transform_dse(&k, &dev, &dse_cfg, &tcfg, eval.as_ref());
-        transform_dse_json(&o, &dev)
+        // transform-aware warm seeding: the original kernel's cached
+        // default-sub-space incumbents (`solve` at cap=MAX, coarse)
+        // seed every variant's ladder. This deliberately crosses the
+        // space boundary the spaced fingerprint enforces for *replay* —
+        // it is sound here because each variant's solver re-verifies
+        // every seed against its own model, and the seeded payload
+        // below never enters the replay caches (history-independence:
+        // a later identical request recomputes, bit-equal either way).
+        let wkey = WarmKey {
+            warm_fp: fingerprint(&k).warm,
+            device: dev.name.to_string(),
+            evaluator: eval_tag.clone(),
+            cap: u64::MAX,
+            fine: false,
+        };
+        let seeds = state
+            .cache
+            .lock()
+            .unwrap()
+            .warm_seeds(&wkey)
+            .unwrap_or_default();
+        if !seeds.is_empty() {
+            emit(&protocol::progress_line(
+                &req.id,
+                &req.op,
+                &format!("{} warm seed(s) from the untransformed kernel", seeds.len()),
+            ));
+        }
+        let o = run_transform_dse_seeded(&k, &dev, &dse_cfg, &tcfg, eval.as_ref(), &seeds);
+        let tag = if seeds.is_empty() { "miss" } else { "warm" };
+        (tag, transform_dse_json(&o, &dev))
     } else {
         let eval = match eval_tag.as_str() {
             "sym" => Evaluator::sym(),
@@ -599,13 +635,17 @@ fn op_dse(
                 data.set("best_pragmas", Json::Null);
             }
         }
-        data
+        ("miss", data)
     };
     let mut cache = state.cache.lock().unwrap();
-    cache.note_dispatch(false);
-    cache.insert_dse(key, Arc::new(data.clone()));
+    cache.note_dispatch(tag == "warm");
+    // seeded runs are kept out of the replay cache: replay lines must
+    // be independent of what the warm cache happened to hold
+    if tag != "warm" {
+        cache.insert_dse(key, Arc::new(data.clone()));
+    }
     drop(cache);
-    Ok((Some("miss"), data))
+    Ok((Some(tag), data))
 }
 
 fn op_bound(req: &Request) -> Result<(Option<&'static str>, Json), Fail> {
@@ -1002,6 +1042,58 @@ mod tests {
         // both spaces live side by side in the replay map
         let entries = data.get("cache").unwrap().get("entries").unwrap();
         assert_eq!(entries.get("dses").and_then(|j| j.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn transform_dse_warm_seeds_from_the_untransformed_solve() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let cache = |lines: &[Json]| {
+            terminal(lines)
+                .get("cache")
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+        };
+        // a default-sub-space solve (cap=MAX, coarse) of the plain
+        // kernel donates its top-k into the warm cache
+        let (solve, _) = call(
+            &state,
+            r#"{"op":"solve","kernel":"mvt","size":"S","id":1}"#,
+        );
+        assert_eq!(cache(&solve).as_deref(), Some("miss"));
+        // the first transform dse finds those seeds: warm, not miss
+        let t = r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"transform":true,"max_variants":2,"id":2}"#;
+        let (first, _) = call(&state, t);
+        assert_eq!(cache(&first).as_deref(), Some("warm"));
+        let data = terminal(&first).get("data").unwrap();
+        assert_eq!(data.get("engine").and_then(|j| j.as_str()), Some("transform"));
+        assert!(!data.get("variants").and_then(|j| j.as_arr()).unwrap().is_empty());
+        // seeded payloads never enter the replay cache: the repeat must
+        // re-run warm (not "hit"), and determinism — same seeds, same
+        // solver — makes the answers bit-identical anyway
+        let (second, _) = call(&state, t);
+        assert_eq!(cache(&second).as_deref(), Some("warm"));
+        assert_eq!(
+            terminal(&first).get("data").unwrap().to_line(),
+            terminal(&second).get("data").unwrap().to_line(),
+            "same seeds must reproduce the same payload"
+        );
+        // attribution: one solve miss, two dse warms, zero dse replays
+        let (lines, _) = call(&state, r#"{"op":"stats"}"#);
+        let stats = terminal(&lines).get("data").unwrap().clone();
+        let dse = stats.get("ops").unwrap().get("dse").expect("dse op stats");
+        let per_op = dse.get("cache").unwrap();
+        assert_eq!(per_op.get("warm").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(per_op.get("hit").and_then(|j| j.as_u64()), Some(0));
+        assert_eq!(per_op.get("miss").and_then(|j| j.as_u64()), Some(0));
+        let entries = stats.get("cache").unwrap().get("entries").unwrap();
+        assert_eq!(
+            entries.get("dses").and_then(|j| j.as_u64()),
+            Some(0),
+            "seeded transform runs must stay out of the replay map"
+        );
     }
 
     #[test]

@@ -10,12 +10,13 @@
 //! transformed variant replaces the incumbent only on strictly better
 //! cycles (ties keep the earlier, shorter-trace winner).
 
-use crate::dse::{run_nlp_dse_with_bound, DseConfig, DseOutcome};
+use crate::dse::{run_nlp_dse_with_bound_seeded, DseConfig, DseOutcome};
 use crate::hls::Device;
 use crate::ir::Kernel;
 use crate::model::{BoundModel, PartialDesign};
 use crate::nlp::BatchEvaluator;
 use crate::poly::Analysis;
+use crate::pragma::Design;
 
 use super::{enumerate, TransformConfig, Variant};
 
@@ -72,6 +73,28 @@ pub fn run_transform_dse(
     tcfg: &TransformConfig,
     evaluator: &dyn BatchEvaluator,
 ) -> TransformOutcome {
+    run_transform_dse_seeded(k, dev, cfg, tcfg, evaluator, &[])
+}
+
+/// [`run_transform_dse`] warm-started from cached incumbent designs —
+/// the serve daemon's transform-aware warm seeding: the original
+/// kernel's cached top-k seeds *every* variant's ladder. Seeds carry
+/// over transformation boundaries safely because each variant's solver
+/// re-verifies them against its own model (a variant whose loop
+/// permutation or rung cap makes a seed infeasible just drops it), so
+/// the search can never end up worse than a cold run, and the same
+/// seeds always reproduce the same outcome bit-for-bit. A verified
+/// seed the rung's menu cannot reach may *improve* the top-k relative
+/// to a cold run — which is why seeded results must never be admitted
+/// to replay caches.
+pub fn run_transform_dse_seeded(
+    k: &Kernel,
+    dev: &Device,
+    cfg: &DseConfig,
+    tcfg: &TransformConfig,
+    evaluator: &dyn BatchEvaluator,
+    seeds: &[Design],
+) -> TransformOutcome {
     let variants = enumerate(k, tcfg);
     let mut records = Vec::with_capacity(variants.len());
     let mut incumbent = f64::INFINITY;
@@ -97,7 +120,8 @@ pub fn run_transform_dse(
             });
             continue;
         }
-        let outcome = run_nlp_dse_with_bound(&v.kernel, &a, dev, cfg, evaluator, &bound);
+        let outcome =
+            run_nlp_dse_with_bound_seeded(&v.kernel, &a, dev, cfg, evaluator, &bound, seeds);
         let cycles = outcome.best.as_ref().map(|(_, c)| *c);
         records.push(VariantRecord {
             index: i,

@@ -41,7 +41,7 @@ pub mod interchange;
 pub mod legality;
 pub mod rebuild;
 
-pub use dse::{run_transform_dse, TransformOutcome, VariantRecord};
+pub use dse::{run_transform_dse, run_transform_dse_seeded, TransformOutcome, VariantRecord};
 pub use enumerate::{enumerate, TransformConfig};
 pub use legality::{verify_rewrite, verify_trace, LegalityCert};
 

@@ -6,7 +6,9 @@
 //! 1. the three redundant evaluators are mutual oracles —
 //!    `CompiledModel::evaluate` ≡ `model::evaluate` ≡ the legacy
 //!    formulation walk (`check_legacy` / `objective_reference`) on
-//!    random valid designs;
+//!    random valid designs, and the SoA lane kernel
+//!    (`evaluate_batch_soa`) reproduces the scalar tape walk
+//!    bit-for-bit over ragged random batches;
 //! 2. `solve_jobs(jobs = 4)` is bit-identical to `jobs = 1`, in both
 //!    coarse and fine parallelism modes;
 //! 3. `BoundModel::lower_bound` is **refinement-monotone**: pinning
@@ -199,6 +201,66 @@ fn prop_three_evaluators_agree_on_generated_kernels() {
                     &k,
                     &ctx(&format!("violations {shared:?} vs legacy {legacy:?}")),
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_soa_batch_bit_identical_on_generated_kernels() {
+    // the SoA lane kernel is the solver's scoring hot path; the fixed
+    // benchmark corpus covers it in property_model_sym, this suite
+    // covers it over arbitrary generated kernels — ragged batch sizes
+    // on purpose so the last-lane padding path runs every seed
+    let dev = Device::u200();
+    for seed in seeds("soa-batch") {
+        let k = frontend::generate(&GenConfig::sampled(seed));
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scalar = cm.scratch();
+        let mut soa = cm.soa_scratch();
+        let mut out = Vec::new();
+        let mut rng = Rng::new(seed).derive("soa-batches");
+        for case in 0..4 {
+            let len = rng.range(0, 21) as usize;
+            let batch: Vec<Design> = (0..len).map(|_| random_design(&mut rng, &k, &a, &s)).collect();
+            cm.evaluate_batch_soa_in(&batch, &mut soa, &mut out);
+            if out.len() != batch.len() {
+                fail(
+                    seed,
+                    &k,
+                    &format!("case {case}: {} results for {} designs", out.len(), batch.len()),
+                );
+            }
+            for (i, (d, got)) in batch.iter().zip(&out).enumerate() {
+                let want = cm.evaluate(d, &mut scalar);
+                if want.total_cycles.to_bits() != got.total_cycles.to_bits()
+                    || want.comp_cycles.to_bits() != got.comp_cycles.to_bits()
+                    || want.comm_cycles.to_bits() != got.comm_cycles.to_bits()
+                    || want.dsp.to_bits() != got.dsp.to_bits()
+                    || want.onchip_bytes.to_bits() != got.onchip_bytes.to_bits()
+                    || want.max_partitioning != got.max_partitioning
+                    || want.feasible != got.feasible
+                {
+                    fail(
+                        seed,
+                        &k,
+                        &format!(
+                            "case {case}, lane {i}/{}: SoA diverged from scalar on {}: \
+                             {} vs {} cycles, dsp {}/{}, feasible {}/{}",
+                            batch.len(),
+                            d.fingerprint(),
+                            got.total_cycles,
+                            want.total_cycles,
+                            got.dsp,
+                            want.dsp,
+                            got.feasible,
+                            want.feasible
+                        ),
+                    );
+                }
             }
         }
     }

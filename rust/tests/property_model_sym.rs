@@ -164,6 +164,122 @@ fn prop_lowered_constraints_equal_legacy_violations() {
     }
 }
 
+#[test]
+fn prop_soa_batch_evaluation_is_bit_identical_to_scalar() {
+    // the solver's hot path scores candidates through the SoA lane
+    // kernel; `jobs=N ≡ jobs=1` (and warm-cache replay) holds only if
+    // every lane reproduces the scalar tape walk bit-for-bit — so the
+    // comparison here is `to_bits`, not a tolerance
+    let dev = Device::u200();
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, kernel_size(name), DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let s = Space::new(&k, &a);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        let cm = bm.compile();
+        let mut scalar = cm.scratch();
+        let mut soa = cm.soa_scratch();
+        let mut out = Vec::new();
+        Prop::new(16).check(
+            &format!("soa-bit-identity/{name}"),
+            |rng| {
+                // odd sizes on purpose: 0 (empty batch), sub-lane, exact
+                // multiples, and ragged remainders all take different
+                // padding paths
+                let len = rng.range(0, 21) as usize;
+                (0..len)
+                    .map(|_| random_design(rng, &k, &a, &s))
+                    .collect::<Vec<Design>>()
+            },
+            |batch| {
+                cm.evaluate_batch_soa_in(batch, &mut soa, &mut out);
+                if out.len() != batch.len() {
+                    return Err(format!("{} results for {} designs", out.len(), batch.len()));
+                }
+                for (i, (d, got)) in batch.iter().zip(&out).enumerate() {
+                    let want = cm.evaluate(d, &mut scalar);
+                    let fields = [
+                        ("comp_cycles", want.comp_cycles, got.comp_cycles),
+                        ("comm_cycles", want.comm_cycles, got.comm_cycles),
+                        ("total_cycles", want.total_cycles, got.total_cycles),
+                        ("dsp", want.dsp, got.dsp),
+                        ("onchip_bytes", want.onchip_bytes, got.onchip_bytes),
+                    ];
+                    for (fname, w, g) in fields {
+                        if w.to_bits() != g.to_bits() {
+                            return Err(format!(
+                                "lane {i} of {}: {fname} {g} != scalar {w} ({})",
+                                batch.len(),
+                                d.fingerprint()
+                            ));
+                        }
+                    }
+                    if want.max_partitioning != got.max_partitioning
+                        || want.feasible != got.feasible
+                    {
+                        return Err(format!("lane {i}: discrete fields diverge"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_batched_interval_bounds_are_bit_identical_to_scalar() {
+    // the dispatcher's bound-ascending deal sorts on these values, so
+    // the laned interval pass must agree with `lower_bound` exactly —
+    // any drift would reorder the deal and change steal patterns
+    let dev = Device::u200();
+    for name in benchmarks::ALL {
+        let k = benchmarks::build(name, kernel_size(name), DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let bm = sym::BoundModel::build(&k, &a, &dev);
+        Prop::new(16).check(
+            &format!("laned-bound-bit-identity/{name}"),
+            |rng| {
+                let len = rng.range(0, 19) as usize;
+                (0..len)
+                    .map(|_| {
+                        let mut p = sym::PartialDesign::free(k.n_loops());
+                        if rng.chance(0.5) {
+                            p = p.with_uf_cap([1, 4, 16, 64, 512][rng.range(0, 5) as usize]);
+                        }
+                        for i in 0..k.n_loops() {
+                            let l = LoopId(i as u32);
+                            if rng.chance(0.2) {
+                                p.assign_pipeline(l, rng.chance(0.5));
+                            }
+                            if rng.chance(0.2) {
+                                p.assign_tile(l, 1);
+                            }
+                        }
+                        p
+                    })
+                    .collect::<Vec<sym::PartialDesign>>()
+            },
+            |partials| {
+                let batch = bm.lower_bound_batch(partials);
+                if batch.len() != partials.len() {
+                    return Err(format!(
+                        "{} bounds for {} partials",
+                        batch.len(),
+                        partials.len()
+                    ));
+                }
+                for (i, (p, &got)) in partials.iter().zip(&batch).enumerate() {
+                    let want = bm.lower_bound(p);
+                    if want.to_bits() != got.to_bits() {
+                        return Err(format!("partial {i}: laned {got} != scalar {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
 /// Enumerate a bounded sub-space of valid designs the way the solver's
 /// brute-force comparison does: every pipeline config × an odometer over
 /// the capped UF menus.

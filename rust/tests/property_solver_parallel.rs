@@ -6,9 +6,11 @@
 //! construction): `solve_jobs(.., jobs = N)` is **bit-identical** to
 //! `solve_jobs(.., jobs = 1)` — same top-k design fingerprints in the
 //! same order, bit-equal objectives, bit-equal proven lower bound, same
-//! `optimal` flag — for every worker-team size. The work distribution,
-//! the shared incumbent guard, and the sharded menu cache may change
-//! *what gets pruned when*, but never the deterministic reduction.
+//! `optimal` flag — for every worker-team size. The work distribution
+//! (bound-ascending deal + work stealing), the shared incumbent guard,
+//! and the sharded menu cache may change *what gets pruned when*, but
+//! never the deterministic reduction — and the stealing protocol must
+//! schedule every pipeline configuration exactly once.
 
 use nlp_dse::benchmarks::{self, Size};
 use nlp_dse::hls::Device;
@@ -119,6 +121,38 @@ fn serial_runs_are_fully_deterministic_including_stats() {
     assert_eq!(r1.stats.candidates_scored, r2.stats.candidates_scored);
     assert_eq!(r1.stats.configs, r2.stats.configs);
     assert_eq!(r1.stats.truncated_menus, r2.stats.truncated_menus);
+}
+
+#[test]
+fn work_stealing_schedules_every_config_exactly_once() {
+    // the per-worker deques + steal-half protocol must neither drop nor
+    // duplicate a pipeline configuration: `stats.configs` (summed over
+    // the team) equals the space's config count for every team size —
+    // and a completed search stays optimal, so nothing was silently
+    // skipped. jobs=1 never consults other queues: zero steals, zero
+    // recorded idle time.
+    let dev = Device::u200();
+    for name in ["gemm", "2mm", "bicg"] {
+        let k = benchmarks::build(name, kernel_size(name), DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let p = NlpProblem::new(&k, &a, &dev, 512, false);
+        let n_configs = p.space.pipeline_configs.len() as u64;
+        for jobs in [1usize, 2, 4, 8] {
+            let r = nlp::solve_jobs(&p, BUDGET_S, TOPK, &SymbolicEvaluator, jobs);
+            assert!(r.optimal, "{name} jobs={jobs}: must complete in budget");
+            assert_eq!(
+                r.stats.configs, n_configs,
+                "{name} jobs={jobs}: every config exactly once"
+            );
+            if jobs == 1 {
+                assert_eq!(r.stats.steals, 0, "{name}: serial path never steals");
+                assert_eq!(
+                    r.stats.queue_idle_s, 0.0,
+                    "{name}: serial path records no queue idle time"
+                );
+            }
+        }
+    }
 }
 
 /// A divisor-rich 4-deep accumulation: `s += A[i][j] * B[k][l]` makes all
