@@ -79,6 +79,55 @@ if [ "${SERVE_SMOKE:-1}" != "0" ]; then
   echo "    serve smoke passed (port $PORT, cache hit observed, clean SIGTERM exit)"
 fi
 
+echo "==> system smoke (SYSTEM_SMOKE=1 — two-kernel system mode: CLI, then serve miss->hit)"
+# End-to-end check of the multi-kernel campaign: the CLI `system`
+# command must print a feasible allocation for two small kernels, and
+# the daemon's `system` op must compute once (miss) and replay the
+# second identical request bit-identically (hit). Same /dev/tcp
+# transport as the serve smoke. Skip with SYSTEM_SMOKE=0.
+if [ "${SYSTEM_SMOKE:-1}" != "0" ]; then
+  SYS_OUT=$(target/release/nlp-dse system --kernels gemm,bicg --size S --cap 16 --epsilon 0.05 --max-points 4)
+  echo "$SYS_OUT" | grep -q 'system allocation:' \
+    || { echo "ci: CLI system mode printed no allocation verdict:" >&2; echo "$SYS_OUT" >&2; exit 1; }
+  echo "$SYS_OUT" | grep -q 'GF/s total' \
+    || { echo "ci: CLI system allocation was not feasible on u200:" >&2; echo "$SYS_OUT" >&2; exit 1; }
+  SERVE_LOG=$(mktemp)
+  target/release/nlp-dse serve --addr 127.0.0.1:0 --threads 2 --jobs 1 2>"$SERVE_LOG" &
+  SERVE_PID=$!
+  PORT=""
+  for _ in $(seq 1 100); do
+    PORT=$(sed -n 's/.*listening on 127\.0\.0\.1:\([0-9]*\).*/\1/p' "$SERVE_LOG" | head -n1)
+    [ -n "$PORT" ] && break
+    sleep 0.1
+  done
+  if [ -z "$PORT" ]; then
+    echo "ci: serve daemon never reported its port (system smoke):" >&2
+    cat "$SERVE_LOG" >&2
+    kill "$SERVE_PID" 2>/dev/null || true
+    exit 1
+  fi
+  serve_request() {  # one request line -> the terminal result/error line
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf '%s\n' "$1" >&3
+    grep -m1 -E '"event":"(result|error)"' <&3
+    exec 3>&- 3<&-
+  }
+  SREQ='{"op":"system","kernels":["gemm","bicg"],"size":"S","cap":16,"epsilon":0.05,"max_points":4,"jobs":1}'
+  S1=$(serve_request "$SREQ")
+  S2=$(serve_request "$SREQ")
+  echo "$S1" | grep -q '"cache":"miss"' || { echo "ci: first system op was not a cache miss: $S1" >&2; exit 1; }
+  echo "$S2" | grep -q '"cache":"hit"'  || { echo "ci: repeated system op was not a cache hit: $S2" >&2; exit 1; }
+  # the replayed payload must be byte-identical modulo the cache tag
+  [ "${S1//\"cache\":\"miss\"/}" = "${S2//\"cache\":\"hit\"/}" ] \
+    || { echo "ci: system replay differed from the original payload" >&2; exit 1; }
+  echo "$S1" | grep -q '"feasible":true' \
+    || { echo "ci: serve system allocation was not feasible: $S1" >&2; exit 1; }
+  kill -TERM "$SERVE_PID"
+  wait "$SERVE_PID"
+  rm -f "$SERVE_LOG"
+  echo "    system smoke passed (CLI verdict + serve miss->hit replay, port $PORT)"
+fi
+
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 # Stash the committed BENCH_solver.json before the fresh run overwrites
 # it: bench_nlp_solver compares its fresh configs/s per tag against the
@@ -91,7 +140,7 @@ if [ -f BENCH_solver.json ]; then
   cp BENCH_solver.json "$BENCH_STASH"
 fi
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
-for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform; do
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform bench_system; do
   if [ "$bench" = bench_nlp_solver ] && [ -n "$BENCH_STASH" ]; then
     BENCH_SMOKE=1 BENCH_MS=25 BENCH_BASELINE="$BENCH_STASH" \
       BENCH_TOLERANCE="${BENCH_TOLERANCE:-20}" cargo bench --bench "$bench"

@@ -1,0 +1,122 @@
+//! System-mode benchmarks (ISSUE 9): front extraction and allocation.
+//!
+//! * `front/archive/<n>` — epsilon-grid archive throughput over `n`
+//!   synthetic points (sort + box collapse + dominance filter); the
+//!   solver calls this once per finished solve, on every incumbent;
+//! * `front/reduce/<n>` — archive plus the canonical-prefix truncation
+//!   (what [`nlp_dse::nlp::solve_front`] actually runs);
+//! * `alloc/bnb/<k>x<p>` — branch-and-bound budget allocation over `k`
+//!   synthetic kernel fronts of `p` points each (the per-iteration
+//!   node count is printed once, so nodes/s falls out of the rate);
+//! * `system/gemm+bicg-S` — the end-to-end system mode on two small
+//!   registry kernels: per-kernel exhaustive front solves plus the
+//!   allocation, the CLI `system` command minus rendering.
+//!
+//! `BENCH_SMOKE=1` shrinks the matrix (the ci.sh bench-smoke loop),
+//! keeping the bench compiling and honest.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, Kernel};
+use nlp_dse::nlp::front::{archive, reduce};
+use nlp_dse::nlp::{FrontConfig, FrontPoint, SymbolicEvaluator};
+use nlp_dse::pragma::Design;
+use nlp_dse::system::{allocate, solve_system, KernelFront, SystemConfig};
+use nlp_dse::util::bench::{black_box, Bench};
+use nlp_dse::util::rng::Rng;
+
+/// `n` synthetic front points with metrics spread over realistic
+/// ranges; the design payload is an empty design for a tiny kernel
+/// (archive/allocation never look inside it).
+fn points(k: &Kernel, n: usize, seed: u64) -> Vec<FrontPoint> {
+    let mut rng = Rng::new(seed);
+    let mut span = |lo: f64, hi: f64| lo + (rng.next_u64() % 1024) as f64 / 1024.0 * (hi - lo);
+    (0..n)
+        .map(|_| FrontPoint {
+            design: Design::empty(k),
+            latency: span(1e3, 1e6),
+            risk: span(0.0, 1.0),
+            dsp: span(16.0, 4096.0),
+            onchip_bytes: span(1e3, 4e6),
+            lut: span(1e3, 8e5),
+        })
+        .collect()
+}
+
+/// A synthetic kernel front for the allocation benches: `p` points with
+/// anti-correlated throughput/area (the shape that makes b&b work).
+fn synth_front(k: &Kernel, name: &str, p: usize, seed: u64) -> KernelFront {
+    let front = points(k, p, seed);
+    let gflops = front.iter().map(|pt| 1e12 / pt.latency).collect();
+    KernelFront {
+        name: name.to_string(),
+        front,
+        gflops,
+        lower_bound: 0.0,
+        optimal: true,
+        solve_time_s: 0.0,
+        configs: 0,
+    }
+}
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("system");
+    let k = benchmarks::kernel_gemm(4, 4, 4, DType::F32);
+    let dev = Device::u200();
+
+    let sizes: &[usize] = if smoke { &[64] } else { &[64, 512] };
+    for &n in sizes {
+        let pts = points(&k, n, 7 + n as u64);
+        b.bench(&format!("front/archive/{n}"), || {
+            black_box(archive(pts.clone(), 0.02).len());
+        });
+        let fc = FrontConfig {
+            epsilon: 0.02,
+            max_points: 16,
+        };
+        b.bench(&format!("front/reduce/{n}"), || {
+            black_box(reduce(pts.clone(), &fc).len());
+        });
+    }
+
+    let shapes: &[(usize, usize)] = if smoke { &[(2, 8)] } else { &[(3, 8), (4, 16)] };
+    for &(nk, np) in shapes {
+        let fronts: Vec<KernelFront> = (0..nk)
+            .map(|i| synth_front(&k, &format!("k{i}"), np, 31 * (i as u64 + 1)))
+            .collect();
+        let nodes = allocate(&fronts, &dev).nodes;
+        println!("# alloc/bnb/{nk}x{np}: {nodes} node(s) per iteration");
+        b.bench(&format!("alloc/bnb/{nk}x{np}"), || {
+            black_box(allocate(&fronts, &dev).nodes);
+        });
+    }
+
+    {
+        let kernels = vec![
+            (
+                "gemm".to_string(),
+                benchmarks::lookup("gemm", Size::parse("S").unwrap(), DType::F32).unwrap(),
+            ),
+            (
+                "bicg".to_string(),
+                benchmarks::lookup("bicg", Size::parse("S").unwrap(), DType::F32).unwrap(),
+            ),
+        ];
+        let cfg = SystemConfig {
+            front: FrontConfig {
+                epsilon: 0.05,
+                max_points: 8,
+            },
+            cap: 16,
+            timeout_s: 30.0,
+            jobs: 1,
+        };
+        b.bench("system/gemm+bicg-S", || {
+            let out = solve_system(&kernels, &dev, &cfg, &SymbolicEvaluator);
+            black_box(out.alloc.nodes);
+        });
+    }
+
+    b.finish();
+}

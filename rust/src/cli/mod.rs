@@ -6,6 +6,8 @@
 //! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound] [--jobs N]
 //!             [--transform [--max-variants N] [--max-depth D] [--max-perm-loops P]]
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
+//! nlp-dse system --kernels gemm,bicg [--size S] [--epsilon 0.02] [--max-points 16]
+//!                [--cap 512] [--device u200] [--tsv]
 //! nlp-dse bound gemm [--size S] [--assign i=4,k=8] [--pipeline j1] [--cap 512]
 //! nlp-dse emit gemm [--design-from solve|dse|empty] [--assign i=4] [--pipeline k]
 //!                   [--dialect merlin|vitis] [--realized] [--out gemm.c]
@@ -84,6 +86,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "figure" => cmd_figure(&mut args)?,
         "dse" => cmd_dse(&mut args)?,
         "solve" => cmd_solve(&mut args)?,
+        "system" => cmd_system(&mut args)?,
         "bound" => cmd_bound(&mut args)?,
         "emit" => cmd_emit(&mut args)?,
         "space" => cmd_space(&mut args)?,
@@ -116,6 +119,11 @@ fn help() -> String {
                     (--transform: legality-checked interchange/distribution/fusion\n\
                      variants × pragma search, bound-pruned per variant)\n\
            solve    --kernel K --size S [--cap N] [--fine] [--xla|--sym]\n\
+           system   --kernels k1,k2,... [--size S] [--epsilon E] [--max-points N]\n\
+                    [--cap N] [--device u200] [--tsv]\n\
+                    (per-kernel epsilon-dominance Pareto fronts over latency/DSP/\n\
+                     BRAM/LUT, then branch-and-bound budget allocation maximizing\n\
+                     system GF/s under the shared device budget)\n\
            bound    K [--size S] [--assign loop=uf,...] [--pipeline loop,...] [--cap N]\n\
                     (achievable-latency lower bound of a partial pragma configuration)\n\
            emit     K [--size S] [--design-from solve|dse|empty | --assign loop=uf,...\n\
@@ -131,7 +139,7 @@ fn help() -> String {
                     [--emit-dir DIR [--dialect merlin|vitis] [--realized]]\n\
            serve    [--addr HOST:PORT] [--cache-entries K] [--threads N]\n\
                     (line-JSON DSE daemon with a fingerprint-keyed warm cache;\n\
-                     ops: solve|dse|bound|emit|gen|stats|shutdown — see GUIDE.md)\n\
+                     ops: solve|dse|system|bound|emit|gen|stats|shutdown — see GUIDE.md)\n\
            engines  (list the registered exploration engines)\n\
          \n\
          common flags: --out FILE  --threads N  --jobs N  --dtype f32|f64\n\
@@ -717,6 +725,94 @@ fn cmd_solve(args: &mut Args) -> Result<String> {
     Ok(out)
 }
 
+/// `system`: multi-kernel system-level DSE — one epsilon-dominance
+/// Pareto front per kernel ([`crate::nlp::solve_front`]), then the
+/// branch-and-bound budget allocation of [`crate::system`] picking one
+/// front point per kernel maximizing total GF/s under the shared
+/// device DSP/BRAM/LUT budget.
+fn cmd_system(args: &mut Args) -> Result<String> {
+    let list = args
+        .opt("kernels")
+        .ok_or_else(|| anyhow!("--kernels k1,k2,... required (benchmark names or .knl paths)"))?;
+    let size = parse_size(args)?.unwrap_or(Size::Medium);
+    let dtype = parse_dtype(args)?;
+    let device = match args.opt("device").as_deref().unwrap_or("u200") {
+        "u200" | "xilinx-u200" => Device::u200(),
+        other => bail!("unknown --device `{other}` (only `u200` is modeled)"),
+    };
+    let cap = args
+        .opt("cap")
+        .map(|s| s.parse::<u64>())
+        .transpose()?
+        .unwrap_or(u64::MAX);
+    let epsilon: f64 = args
+        .opt("epsilon")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(0.02);
+    if !(0.0..1.0).contains(&epsilon) {
+        bail!("--epsilon must be in [0, 1)");
+    }
+    let max_points: usize = args
+        .opt("max-points")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(16);
+    if max_points == 0 {
+        bail!("--max-points must be >= 1");
+    }
+    let jobs = parse_jobs(args)?.unwrap_or_else(nlp::default_jobs);
+    let tsv = args.flag("tsv");
+    let eval = make_evaluator(args);
+    let mut kernels = Vec::new();
+    for spec in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        // path-looking specs parse as .knl files, everything else goes
+        // through the benchmark registry (same rule as --kernel)
+        let k = if spec.contains('/') || spec.ends_with(".knl") {
+            frontend::parse_file(spec)?
+        } else {
+            benchmarks::lookup(spec, size, dtype)?
+        };
+        kernels.push((k.name.clone(), k));
+    }
+    if kernels.is_empty() {
+        bail!("--kernels list is empty");
+    }
+    let cfg = crate::system::SystemConfig {
+        front: nlp::FrontConfig { epsilon, max_points },
+        cap,
+        timeout_s: 30.0,
+        jobs,
+    };
+    let out = crate::system::solve_system(&kernels, &device, &cfg, eval.as_ref());
+    let fronts = report::system_fronts(&out);
+    let alloc = report::system_allocation(&out, &device);
+    if tsv {
+        return Ok(format!("{}\n{}", fronts.to_tsv(), alloc.to_tsv()));
+    }
+    let verdict = match &out.alloc.best {
+        Some(b) => format!(
+            "system allocation: {:.2} GF/s total — dsp {:.0}/{}  onchip {:.0}/{} B  \
+             lut {:.0}/{}  ({} b&b nodes, {:.3}s solve)",
+            b.gflops,
+            b.dsp,
+            device.dsp_total,
+            b.onchip_bytes,
+            device.onchip_bytes,
+            b.lut,
+            device.lut_total,
+            out.alloc.nodes,
+            out.solve_time_s
+        ),
+        None => format!(
+            "system allocation: infeasible — no choice of one front point per kernel \
+             fits the {} budget ({} b&b nodes)",
+            device.name, out.alloc.nodes
+        ),
+    };
+    Ok(format!("{}\n\n{}\n\n{verdict}", fronts.render(), alloc.render()))
+}
+
 fn cmd_space(args: &mut Args) -> Result<String> {
     if args.opt("kernel").is_none() && args.opt("kernel-file").is_none() {
         let mut out = String::from("available kernels:\n");
@@ -987,7 +1083,7 @@ fn cmd_serve(args: &mut Args) -> Result<String> {
     let bound = h.addr();
     eprintln!(
         "[serve] listening on {bound} (threads={threads} jobs={jobs} cache-entries={cache_entries})\n\
-         [serve] line-JSON ops: solve|dse|bound|emit|gen|stats|shutdown — e.g.\n\
+         [serve] line-JSON ops: solve|dse|system|bound|emit|gen|stats|shutdown — e.g.\n\
          [serve]   printf '%s\\n' '{{\"op\":\"solve\",\"kernel\":\"gemm\",\"size\":\"S\"}}' | nc {} {}\n\
          [serve] ^C (or the `shutdown` op) stops the daemon cleanly",
         bound.ip(),

@@ -363,6 +363,74 @@ pub fn run_campaign_with(registry: &Registry, cfg: &CampaignConfig) -> CampaignR
     CampaignResult { rows }
 }
 
+/// One system-mode campaign: kernel instances sharing one device's
+/// DSP/BRAM/LUT budget. Per-kernel front extractions are pure, so they
+/// fan out across the pool and reassemble by index — the outcome is
+/// identical to the sequential [`crate::system::solve_system`] path.
+#[derive(Clone, Debug)]
+pub struct SystemCampaignConfig {
+    /// Kernel instances (registry names, with size).
+    pub kernels: Vec<(String, Size)>,
+    /// Precision for every kernel.
+    pub dtype: DType,
+    /// Pool width for the per-kernel front-solve jobs.
+    pub threads: usize,
+    /// Front extraction + allocation knobs (per-kernel solver `jobs`
+    /// stays 1 by default — the pool already saturates the host).
+    pub system: crate::system::SystemConfig,
+}
+
+impl SystemCampaignConfig {
+    /// A fast two-kernel sanity scope.
+    pub fn quick() -> SystemCampaignConfig {
+        SystemCampaignConfig {
+            kernels: vec![
+                ("gemm".into(), Size::Small),
+                ("bicg".into(), Size::Small),
+            ],
+            dtype: DType::F32,
+            threads: num_threads(),
+            system: crate::system::SystemConfig::default(),
+        }
+    }
+}
+
+/// Run a system campaign: one pool job per kernel computes its
+/// epsilon-dominance front ([`crate::system::kernel_front`]), then the
+/// budget allocation runs once over the reassembled fronts. Kernels
+/// that fail to resolve are skipped with a report (their slot is
+/// dropped, shrinking the system — same policy as [`run_campaign`]).
+pub fn run_system_campaign(cfg: &SystemCampaignConfig) -> crate::system::SystemOutcome {
+    let pool = ThreadPool::new(cfg.threads);
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, crate::system::KernelFront)>();
+    for (idx, (name, size)) in cfg.kernels.iter().cloned().enumerate() {
+        let tx = tx.clone();
+        let dtype = cfg.dtype;
+        let sys = cfg.system;
+        pool.execute(move || {
+            let k = match benchmarks::lookup(&name, size, dtype) {
+                Ok(k) => k,
+                Err(err) => {
+                    eprintln!("[system] skipping kernel `{name}`: {err:#}");
+                    return;
+                }
+            };
+            let dev = Device::u200();
+            let kf =
+                crate::system::kernel_front(&k.name, &k, &dev, &sys, &crate::nlp::SymbolicEvaluator);
+            let _ = tx.send((idx, kf));
+        });
+    }
+    drop(tx);
+    let mut slots: Vec<Option<crate::system::KernelFront>> = vec![None; cfg.kernels.len()];
+    for (idx, kf) in rx {
+        slots[idx] = Some(kf);
+    }
+    pool.join();
+    let fronts: Vec<crate::system::KernelFront> = slots.into_iter().flatten().collect();
+    crate::system::assemble(fronts, &Device::u200())
+}
+
 /// Process one kernel instance sequentially through the [`Explorer`]
 /// facade (used for single-kernel flows; campaigns go through
 /// [`run_campaign`]). Errors on unresolvable kernel specs (the facade
@@ -491,6 +559,41 @@ mod tests {
             ser.explorations[0].best_gflops
         );
         assert_eq!(par.explorations[0].best, ser.explorations[0].best);
+    }
+
+    #[test]
+    fn system_campaign_matches_the_sequential_path() {
+        let mut cfg = SystemCampaignConfig::quick();
+        cfg.system.cap = 64;
+        cfg.system.front.max_points = 6;
+        let pooled = run_system_campaign(&cfg);
+        let kernels: Vec<(String, crate::ir::Kernel)> = cfg
+            .kernels
+            .iter()
+            .map(|(n, s)| {
+                let k = benchmarks::lookup(n, *s, cfg.dtype).unwrap();
+                (k.name.clone(), k)
+            })
+            .collect();
+        let seq = crate::system::solve_system(
+            &kernels,
+            &Device::u200(),
+            &cfg.system,
+            &crate::nlp::SymbolicEvaluator,
+        );
+        assert_eq!(pooled.kernels.len(), seq.kernels.len());
+        for (a, b) in pooled.kernels.iter().zip(&seq.kernels) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.front.len(), b.front.len());
+            for (x, y) in a.front.iter().zip(&b.front) {
+                assert_eq!(x.design, y.design);
+                assert_eq!(x.latency.to_bits(), y.latency.to_bits());
+            }
+        }
+        assert_eq!(
+            pooled.alloc.best.as_ref().map(|b| b.choice.clone()),
+            seq.alloc.best.as_ref().map(|b| b.choice.clone())
+        );
     }
 
     #[test]

@@ -25,12 +25,14 @@ impl SimClock {
     }
 
     /// Schedule a parallel job of `minutes`; returns its completion time.
+    /// (`total_cmp`: a NaN free-time — impossible unless a caller billed
+    /// NaN minutes — ranks last instead of panicking the scheduler.)
     pub fn submit(&mut self, minutes: f64) -> f64 {
         let (idx, _) = self
             .free
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let start = self.free[idx].max(self.serial_base);
         let done = start + minutes.max(0.0);

@@ -1,8 +1,11 @@
 //! Target device model: AMD/Xilinx Alveo U200 at 250 MHz (Section 7.1),
 //! with Vitis 2021.1-style floating-point operator costs.
 //!
-//! The paper models **DSP and BRAM only** (Section 4.2 restrictions); LUT/FF
-//! are deliberately ignored, as in the paper.
+//! The paper's *feasibility* model uses **DSP and BRAM only** (Section 4.2
+//! restrictions) and that is still what gates a design. Since the system
+//! campaign mode the table also carries per-operator **LUT** costs so the
+//! Pareto fronts can report a LUT axis — advisory for multi-kernel budget
+//! allocation, never part of single-kernel feasibility.
 
 use crate::ir::{DType, OpKind};
 
@@ -13,6 +16,9 @@ pub struct OpCosts {
     pub latency: u64,
     /// DSP slices per instantiated unit.
     pub dsp: u64,
+    /// LUTs per instantiated unit (advisory: reported on Pareto fronts
+    /// and budgeted by the `system` allocator, never gating feasibility).
+    pub lut: u64,
 }
 
 /// One FPGA target: frequency, resource budgets, transfer widths.
@@ -24,6 +30,8 @@ pub struct Device {
     pub freq_hz: f64,
     /// DSP slices available.
     pub dsp_total: u64,
+    /// LUTs available (system-mode budget axis).
+    pub lut_total: u64,
     /// On-chip memory (BRAM + URAM) in bytes usable for data caching.
     pub onchip_bytes: u64,
     /// BRAM18K blocks (partitioning granularity accounting).
@@ -41,6 +49,7 @@ impl Device {
             name: "xilinx-u200",
             freq_hz: 250e6,
             dsp_total: 6840,
+            lut_total: 1_182_000,
             onchip_bytes: 35 * 1024 * 1024,
             bram18k: 4320,
             max_burst_bits: 512,
@@ -50,32 +59,39 @@ impl Device {
 
     /// Operator cost table per dtype (typical Vitis 2021.x fp operators at
     /// 250 MHz; `fdiv`/`fsqrt` are LUT-based, hence 0 DSP — consistent with
-    /// the paper's DSP-only resource model).
+    /// the paper's DSP-only feasibility model — and correspondingly
+    /// LUT-heavy in the advisory LUT column).
     pub fn op_costs(&self, dtype: DType, op: OpKind) -> OpCosts {
         match (dtype, op) {
             (DType::F32, OpKind::Add) | (DType::F32, OpKind::Sub) => OpCosts {
                 latency: 4,
                 dsp: 2,
+                lut: 200,
             },
             (DType::F32, OpKind::Mul) => OpCosts {
                 latency: 3,
                 dsp: 3,
+                lut: 100,
             },
             (DType::F32, OpKind::Div) => OpCosts {
                 latency: 12,
                 dsp: 0,
+                lut: 800,
             },
             (DType::F64, OpKind::Add) | (DType::F64, OpKind::Sub) => OpCosts {
                 latency: 5,
                 dsp: 3,
+                lut: 400,
             },
             (DType::F64, OpKind::Mul) => OpCosts {
                 latency: 6,
                 dsp: 11,
+                lut: 300,
             },
             (DType::F64, OpKind::Div) => OpCosts {
                 latency: 30,
                 dsp: 0,
+                lut: 3200,
             },
         }
     }
@@ -108,6 +124,7 @@ mod tests {
     fn u200_constants() {
         let d = Device::u200();
         assert_eq!(d.dsp_total, 6840);
+        assert_eq!(d.lut_total, 1_182_000);
         assert_eq!(d.max_burst_bits, 512);
         assert_eq!(d.max_array_partition, 1024);
         assert!(d.freq_hz == 250e6);
@@ -120,6 +137,11 @@ mod tests {
             for op in OpKind::ALL {
                 let c = d.op_costs(dt, op);
                 assert!(c.latency >= 1, "LO(op) >= 1 required by Theorem 4.4");
+                assert!(c.lut >= 1, "every operator consumes some LUTs");
+                // DSP-free (LUT-implemented) operators must be LUT-expensive
+                if c.dsp == 0 {
+                    assert!(c.lut >= 800);
+                }
             }
         }
     }

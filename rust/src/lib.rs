@@ -92,6 +92,11 @@
 //! * [`runtime`] — PJRT CPU client wrapper loading `artifacts/*.hlo.txt`
 //!   for bulk lower-bound evaluation (python never runs at DSE time);
 //!   built as a stub unless the `xla` cargo feature is enabled.
+//! * [`system`] — system-level multi-kernel DSE: per-kernel
+//!   epsilon-dominance Pareto fronts ([`nlp::solve_front`]) feeding a
+//!   branch-and-bound budget allocator that picks one front point per
+//!   kernel maximizing total throughput under the shared device
+//!   DSP/BRAM/LUT budget (brute-force cross-checked on small instances).
 //! * [`coordinator`] — thread-pool campaign orchestration: one
 //!   `Box<dyn Engine>` job per (kernel, engine) pair.
 //! * [`serve`] — DSE-as-a-service: a line-JSON TCP daemon
@@ -117,6 +122,7 @@ pub mod merlin;
 pub mod dse;
 pub mod transform;
 pub mod codegen;
+pub mod system;
 pub mod baselines;
 pub mod engine;
 pub mod runtime;

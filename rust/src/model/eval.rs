@@ -33,9 +33,15 @@ pub struct ModelResult {
     pub dsp: f64,
     /// On-chip bytes required for cached arrays (Eq 12).
     pub onchip_bytes: f64,
+    /// Optimistic LUT usage — the Eq 11 recurrence over the device's LUT
+    /// op costs. Advisory: reported on Pareto fronts and budgeted by the
+    /// `system` allocator, **not** part of [`ModelResult::feasible`]
+    /// (the paper's feasibility model is DSP/BRAM-only).
+    pub lut: f64,
     /// Max per-array partitioning factor implied by the UFs (Eq 13).
     pub max_partitioning: u64,
-    /// All resource constraints satisfied.
+    /// All resource constraints satisfied (DSP, on-chip bytes,
+    /// partitioning — LUT deliberately excluded, as in the paper).
     pub feasible: bool,
     /// Worst achieved II across pipelined regions (reporting).
     pub worst_ii: f64,
@@ -105,6 +111,7 @@ pub fn evaluate(k: &Kernel, a: &Analysis, dev: &Device, d: &Design) -> ModelResu
 
     // --- resources ---------------------------------------------------------
     let dsp = dsp_usage(&ctx);
+    let lut = lut_usage(&ctx);
     let onchip_bytes = onchip_usage(&ctx);
     let max_partitioning = k
         .arrays
@@ -123,6 +130,7 @@ pub fn evaluate(k: &Kernel, a: &Analysis, dev: &Device, d: &Design) -> ModelResu
         total_cycles: comp_cycles + comm_cycles,
         dsp,
         onchip_bytes,
+        lut,
         max_partitioning,
         feasible,
         worst_ii: ctx.worst_ii,
@@ -486,6 +494,19 @@ fn stmt_chain_latency_raw(ctx: &Ctx, s: &Stmt) -> f64 {
 /// can share (max); nests execute one after another (max over nests);
 /// pipeline sharing divides by II.
 fn dsp_usage(ctx: &Ctx) -> f64 {
+    unit_usage(ctx, |c| c.dsp)
+}
+
+/// Optimistic LUT usage: the identical Eq 11 recurrence evaluated over
+/// the device's per-operator LUT costs (so Div, DSP-free, shows up here).
+/// Advisory only — never gates single-kernel feasibility.
+fn lut_usage(ctx: &Ctx) -> f64 {
+    unit_usage(ctx, |c| c.lut)
+}
+
+/// The shared Eq 11 recurrence behind [`dsp_usage`]/[`lut_usage`],
+/// parameterized by which [`OpCosts`] column counts as the shared unit.
+fn unit_usage(ctx: &Ctx, unit: fn(&crate::hls::OpCosts) -> u64) -> f64 {
     let k = ctx.k;
     let mut worst = 0f64;
     for root in k.nest_roots() {
@@ -525,10 +546,10 @@ fn dsp_usage(ctx: &Ctx) -> f64 {
                 })
                 .product();
             let s = k.stmt(sid);
-            let dsp_one: f64 = s
+            let units_one: f64 = s
                 .ops
                 .iter()
-                .map(|&(op, c)| c as f64 * ctx.dev.op_costs(k.dtype, op).dsp as f64)
+                .map(|&(op, c)| c as f64 * unit(&ctx.dev.op_costs(k.dtype, op)) as f64)
                 .sum();
             // pipeline sharing: units reused across II cycles
             let ii = ctx
@@ -536,13 +557,13 @@ fn dsp_usage(ctx: &Ctx) -> f64 {
                 .pipeline_above(k, *k.stmt_meta(sid).nest.last().unwrap())
                 .map(|lp| pipeline_ii(ctx, lp))
                 .unwrap_or(1.0);
-            let need = dsp_one * mcu / ii.max(1.0);
+            let need = units_one * mcu / ii.max(1.0);
             let r = find(&mut comp, idx);
             let e = per_comp.entry(r).or_insert(0.0);
             *e = (*e).max(need);
         }
-        let nest_dsp: f64 = per_comp.values().sum();
-        worst = worst.max(nest_dsp);
+        let nest_units: f64 = per_comp.values().sum();
+        worst = worst.max(nest_units);
     }
     worst
 }

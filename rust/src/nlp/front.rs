@@ -1,0 +1,254 @@
+//! Epsilon-dominance Pareto-front reduction over
+//! `(latency, DSP, on-chip bytes, LUT)` — the order-invariant archive
+//! behind [`solve_front`](super::solve_front).
+//!
+//! ## The grid archive
+//!
+//! With `epsilon > 0` every point is mapped to a **grid box**: coordinate
+//! `i` becomes `floor(ln(1 + v_i) / ln(1 + epsilon))`, so each box spans
+//! one multiplicative `(1 + epsilon)` band per axis (the classic
+//! epsilon-Pareto archive of Laumanns et al., also what MailoHLS-style
+//! multi-objective HLS explorers keep). Per occupied box exactly one
+//! representative survives — the **canonical minimum** under the total
+//! order `(latency, risk, resources, pragma vector)` — and a box is kept
+//! iff no other occupied box dominates it coordinate-wise. With
+//! `epsilon = 0` the boxes degenerate to the raw metric vectors and the
+//! filter is plain Pareto dominance.
+//!
+//! ## Merge-order invariance
+//!
+//! [`archive`] is a *pure function of the input set*: sorting to the
+//! canonical order first makes the per-box representative the set-wide
+//! minimum (min is associative/commutative), and dominance between
+//! *boxes* is transitive, so dropping a dominated box can never shield a
+//! third box its dominator would not also dominate. Hence
+//! `archive(archive(A) ∪ B) == archive(A ∪ B)` bit-for-bit — per-config
+//! fronts can be merged in any order, in any partition, and the result
+//! is the archive of the union. `tests/integration_system.rs` proves
+//! this over seeded random point sets; the truncation to
+//! [`FrontConfig::max_points`] is applied exactly once, at the very end
+//! ([`reduce`]), because truncation is *not* merge-invariant.
+
+use crate::pragma::Design;
+
+/// Knobs of one front extraction.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontConfig {
+    /// Relative epsilon-dominance band per objective axis (`0.0` = exact
+    /// Pareto dominance; `0.02` collapses points within 2 % per axis).
+    pub epsilon: f64,
+    /// Hard cap on returned front points (canonical-order prefix,
+    /// applied once after the archive reduction).
+    pub max_points: usize,
+}
+
+impl Default for FrontConfig {
+    fn default() -> FrontConfig {
+        FrontConfig {
+            epsilon: 0.02,
+            max_points: 16,
+        }
+    }
+}
+
+/// One point on a kernel's latency-vs-resources front.
+#[derive(Clone, Debug)]
+pub struct FrontPoint {
+    /// The pragma design realizing this trade-off.
+    pub design: Design,
+    /// Verified latency objective, cycles (the solver's exact tape).
+    pub latency: f64,
+    /// Realization risk (the solver's coarse-UF tie-break key).
+    pub risk: f64,
+    /// Optimistic DSP usage (Eq 11).
+    pub dsp: f64,
+    /// On-chip bytes for cached arrays (Eq 12) — the BRAM/URAM axis.
+    pub onchip_bytes: f64,
+    /// Estimated LUT usage (the Eq 11 mirror over LUT op costs).
+    pub lut: f64,
+}
+
+impl FrontPoint {
+    /// The four objective axes, in fixed order
+    /// `(latency, dsp, onchip_bytes, lut)`.
+    pub fn metrics(&self) -> [f64; 4] {
+        [self.latency, self.dsp, self.onchip_bytes, self.lut]
+    }
+}
+
+/// The canonical total order of front points: latency, then risk, then
+/// the resource axes, then the pragma vector — `total_cmp` throughout,
+/// so NaN metrics order last instead of panicking, and two points
+/// compare `Equal` only when bit-identical in every key.
+pub fn canonical_cmp(a: &FrontPoint, b: &FrontPoint) -> std::cmp::Ordering {
+    a.latency
+        .total_cmp(&b.latency)
+        .then_with(|| a.risk.total_cmp(&b.risk))
+        .then_with(|| a.dsp.total_cmp(&b.dsp))
+        .then_with(|| a.onchip_bytes.total_cmp(&b.onchip_bytes))
+        .then_with(|| a.lut.total_cmp(&b.lut))
+        .then_with(|| a.design.cmp(&b.design))
+}
+
+/// Grid-box coordinates of one point. `epsilon > 0`: logarithmic band
+/// index per axis; `epsilon <= 0`: the raw f64 bit pattern (monotone for
+/// the non-negative finite metrics the model produces), i.e. exact
+/// dominance. Non-finite metrics map to `u64::MAX` so a NaN/inf axis is
+/// dominated by every finite value instead of miscomparing.
+fn box_coords(p: &FrontPoint, epsilon: f64) -> [u64; 4] {
+    let mut out = [0u64; 4];
+    for (o, v) in out.iter_mut().zip(p.metrics()) {
+        *o = if !v.is_finite() {
+            u64::MAX
+        } else if epsilon > 0.0 {
+            ((1.0 + v.max(0.0)).ln() / (1.0 + epsilon).ln()).floor() as u64
+        } else {
+            v.max(0.0).to_bits()
+        };
+    }
+    out
+}
+
+/// `a` dominates `b`: every coordinate ≤, at least one <.
+fn dominates(a: &[u64; 4], b: &[u64; 4]) -> bool {
+    a != b && a.iter().zip(b).all(|(x, y)| x <= y)
+}
+
+/// The pure epsilon-grid archive: canonical-min representative per
+/// occupied grid box, then box-wise dominance filtering, returned in
+/// canonical order. **No truncation** — this is the merge-invariant
+/// operation (`archive(archive(A) ∪ B) == archive(A ∪ B)`); see the
+/// module docs for the argument and [`reduce`] for the final cap.
+pub fn archive(mut points: Vec<FrontPoint>, epsilon: f64) -> Vec<FrontPoint> {
+    points.sort_by(canonical_cmp);
+    // first point per box in canonical order == set-wide canonical min
+    let mut boxes: std::collections::BTreeMap<[u64; 4], FrontPoint> = Default::default();
+    for p in points {
+        boxes.entry(box_coords(&p, epsilon)).or_insert(p);
+    }
+    let keys: Vec<[u64; 4]> = boxes.keys().copied().collect();
+    let mut out: Vec<FrontPoint> = boxes
+        .into_iter()
+        .filter(|(k, _)| !keys.iter().any(|k2| dominates(k2, k)))
+        .map(|(_, p)| p)
+        .collect();
+    out.sort_by(canonical_cmp);
+    out
+}
+
+/// [`archive`] + the final `max_points` truncation (canonical-order
+/// prefix). This is what one complete front extraction returns; callers
+/// that merge partial fronts must merge **un-truncated** archives and
+/// call this exactly once on the union.
+pub fn reduce(points: Vec<FrontPoint>, fc: &FrontConfig) -> Vec<FrontPoint> {
+    let mut out = archive(points, fc.epsilon);
+    out.truncate(fc.max_points.max(1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::ir::DType;
+    use crate::util::rng::Rng;
+
+    fn pt(k: &crate::ir::Kernel, m: [f64; 4]) -> FrontPoint {
+        FrontPoint {
+            design: Design::empty(k),
+            latency: m[0],
+            risk: 1.0,
+            dsp: m[1],
+            onchip_bytes: m[2],
+            lut: m[3],
+        }
+    }
+
+    #[test]
+    fn exact_dominance_filters_dominated_points() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let a = pt(&k, [100.0, 10.0, 10.0, 10.0]);
+        let b = pt(&k, [200.0, 10.0, 10.0, 10.0]); // dominated by a
+        let c = pt(&k, [50.0, 20.0, 10.0, 10.0]); // trade-off vs a
+        let f = archive(vec![b, a, c], 0.0);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[0].latency, 50.0);
+        assert_eq!(f[1].latency, 100.0);
+    }
+
+    #[test]
+    fn epsilon_band_collapses_near_duplicates() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        // 1 % apart on every axis: one box at eps = 5 %, two at eps = 0
+        let a = pt(&k, [100.0, 10.0, 10.0, 10.0]);
+        let b = pt(&k, [101.0, 10.1, 10.1, 10.1]);
+        assert_eq!(archive(vec![a.clone(), b.clone()], 0.0).len(), 2);
+        let f = archive(vec![b, a], 0.05);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].latency, 100.0, "canonical-min representative");
+    }
+
+    #[test]
+    fn nan_metrics_lose_to_every_finite_point() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let good = pt(&k, [100.0, 10.0, 10.0, 10.0]);
+        let nan = pt(&k, [f64::NAN, 5.0, 5.0, 5.0]);
+        let f = archive(vec![nan, good], 0.02);
+        // the NaN axis maps to u64::MAX: strictly dominated, filtered out
+        assert_eq!(f.len(), 1);
+        assert!(f[0].latency.is_finite());
+    }
+
+    #[test]
+    fn archive_merge_is_order_invariant_on_random_sets() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let mut rng = Rng::new(0xF0E1);
+        for case in 0..50u64 {
+            let n = 3 + (rng.next_u64() % 40) as usize;
+            let eps = [0.0, 0.02, 0.1][(case % 3) as usize];
+            let points: Vec<FrontPoint> = (0..n)
+                .map(|_| {
+                    let m = |r: &mut Rng| 1.0 + (r.next_u64() % 100_000) as f64;
+                    pt(&k, [m(&mut rng), m(&mut rng), m(&mut rng), m(&mut rng)])
+                })
+                .collect();
+            let whole = archive(points.clone(), eps);
+            // any partition: archive the parts, merge, archive again
+            let cut = (rng.next_u64() as usize) % (n + 1);
+            let (a, b) = points.split_at(cut);
+            let mut merged = archive(a.to_vec(), eps);
+            merged.extend(b.to_vec());
+            let merged = archive(merged, eps);
+            assert_eq!(whole.len(), merged.len(), "case {case}");
+            for (x, y) in whole.iter().zip(&merged) {
+                assert_eq!(x.latency.to_bits(), y.latency.to_bits(), "case {case}");
+                assert_eq!(x.dsp.to_bits(), y.dsp.to_bits(), "case {case}");
+                assert_eq!(
+                    x.onchip_bytes.to_bits(),
+                    y.onchip_bytes.to_bits(),
+                    "case {case}"
+                );
+                assert_eq!(x.lut.to_bits(), y.lut.to_bits(), "case {case}");
+                assert_eq!(x.design, y.design, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_caps_the_front_after_the_archive() {
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        // an antichain: descending latency vs ascending dsp
+        let points: Vec<FrontPoint> = (0..20)
+            .map(|i| pt(&k, [1000.0 - i as f64 * 10.0, 10.0 + i as f64, 1.0, 1.0]))
+            .collect();
+        let fc = FrontConfig {
+            epsilon: 0.0,
+            max_points: 5,
+        };
+        let f = reduce(points, &fc);
+        assert_eq!(f.len(), 5);
+        // canonical prefix: the five lowest latencies
+        assert!(f.windows(2).all(|w| w[0].latency <= w[1].latency));
+        assert_eq!(f[0].latency, 810.0);
+    }
+}

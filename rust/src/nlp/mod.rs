@@ -14,12 +14,19 @@
 //!   making `jobs = N` bit-identical to `jobs = 1`. On timeout it
 //!   returns the best incumbent plus a valid lower bound, exactly as
 //!   BARON's anytime behaviour (Table 7).
+//! * [`front`] — epsilon-dominance Pareto-front reduction over
+//!   `(latency, DSP, on-chip bytes, LUT)`: the merge-order-invariant
+//!   grid archive behind [`solve_front`], which runs the same
+//!   branch-and-bound in exhaustive mode (guard disabled) and reduces
+//!   every incumbent to a deterministic front.
 
 pub mod formulation;
+pub mod front;
 pub mod solver;
 
 pub use formulation::{NlpProblem, Violation};
+pub use front::{FrontConfig, FrontPoint};
 pub use solver::{
-    default_jobs, design_risk, solve, solve_jobs, solve_jobs_seeded, BatchEvaluator,
-    RustFeatureEvaluator, SolveResult, SolverStats, SymbolicEvaluator,
+    default_jobs, design_risk, solve, solve_front, solve_jobs, solve_jobs_seeded, BatchEvaluator,
+    FrontResult, RustFeatureEvaluator, SolveResult, SolverStats, SymbolicEvaluator,
 };

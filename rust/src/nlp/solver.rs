@@ -93,6 +93,18 @@
 //! [`SolverStats::queue_idle_s`] expose the stealing machinery itself;
 //! both are identically zero for `jobs = 1`.
 //!
+//! ## Front extraction ([`solve_front`])
+//!
+//! The same engine also extracts **epsilon-dominance Pareto fronts**
+//! over `(latency, DSP, on-chip bytes, LUT)` for system-level
+//! multi-kernel allocation: in front mode the guard never engages (every
+//! pipeline configuration is processed — `stats.configs` is exact), the
+//! merged pool keeps the *union* of per-config top-`max_points` lists,
+//! and the final reduction is the order-invariant epsilon-grid archive
+//! of [`super::front`]. Membership in the front is a pure function of
+//! that union, so `jobs = N` remains bit-identical to `jobs = 1` by the
+//! same argument as the top-k reduction.
+//!
 //! Anytime behaviour: on budget exhaustion (wall clock, or a config
 //! blowing the per-config node cap) the best incumbent is returned with
 //! `optimal = false`, plus the proven lower bound — exactly what
@@ -104,6 +116,7 @@
 //! interleaving.
 
 use super::formulation::NlpProblem;
+use super::front::{FrontConfig, FrontPoint};
 use crate::ir::{Kernel, LoopId};
 use crate::model;
 use crate::model::sym::{EvalScratch, PartialDesign, SoaScratch};
@@ -321,6 +334,28 @@ impl SolveResult {
     }
 }
 
+/// Outcome of one epsilon-dominance front extraction ([`solve_front`]).
+#[derive(Clone, Debug)]
+pub struct FrontResult {
+    /// The reduced front, in canonical `(latency, risk, pragmas)` order
+    /// (≤ `FrontConfig::max_points`, mutually epsilon-non-dominated).
+    pub points: Vec<FrontPoint>,
+    /// Proven lower bound on the latency optimum (identical construction
+    /// to [`SolveResult::lower_bound`]).
+    pub lower_bound: f64,
+    /// Whether the search completed within budget.
+    pub optimal: bool,
+    /// Wall-clock of the solve, seconds.
+    pub solve_time_s: f64,
+    /// Summed per-worker busy seconds (see [`SolveResult::cpu_time_s`]).
+    pub cpu_time_s: f64,
+    /// Worker threads the solve ran with.
+    pub jobs: usize,
+    /// Merged search counters. With the guard disabled,
+    /// `stats.configs` equals the full pipeline-configuration count.
+    pub stats: SolverStats,
+}
+
 /// Per-nest candidate: the free-loop UF assignment and its additive
 /// latency contribution + partitioning/DSP signature.
 struct Cand {
@@ -351,11 +386,15 @@ struct Incumbent {
 /// the work floor share the design-independent floor term bit-for-bit,
 /// so true plateau ties are exact f64 ties and fall through to the risk
 /// key; only sub-ulp *near*-ties now order by raw objective instead.
+///
+/// `total_cmp`, not `partial_cmp(..).unwrap()`: a NaN objective or risk
+/// (a degenerate device spec, a broken plug-in evaluator) must *rank
+/// last* — IEEE-754 totalOrder places positive NaN above `+inf` — never
+/// panic a worker mid-merge while it holds the incumbent lock.
 fn rank_cmp(a: &Incumbent, b: &Incumbent) -> std::cmp::Ordering {
     a.obj
-        .partial_cmp(&b.obj)
-        .unwrap()
-        .then_with(|| a.risk.partial_cmp(&b.risk).unwrap())
+        .total_cmp(&b.obj)
+        .then_with(|| a.risk.total_cmp(&b.risk))
         .then_with(|| a.design.cmp(&b.design))
 }
 
@@ -398,8 +437,22 @@ fn design_key(d: &Design) -> u64 {
     h.finish()
 }
 
+/// Recover a mutex guard even when another worker panicked while holding
+/// the lock. Sound for every mutex in this module: the queues hold plain
+/// `u32` config indices (any prefix of a poisoned update is a valid work
+/// set — at worst a config is processed that the panicking worker had
+/// claimed), and the incumbent vector is re-canonicalized (sort + dedup)
+/// on every merge, so a partially-appended pool is repaired by the next
+/// merge. The panic itself is not swallowed: `solve_jobs` re-raises the
+/// *first* worker panic after every worker has been joined.
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
 /// Monotone-min shared f64 stored as bits; lock-free CAS loop. Carries
-/// the cross-worker incumbent guard and the lower-bound reduction.
+/// the cross-worker incumbent guard (since PR 8 the lower-bound
+/// reduction no longer lives here — it is the precomputed `iv_lb_all`
+/// minimum from the batched dispatch sweep).
 struct AtomicF64Min(AtomicU64);
 
 impl AtomicF64Min {
@@ -466,12 +519,11 @@ impl CandCache {
         key: CandKey,
         build: impl FnOnce() -> CandSet,
     ) -> (Arc<CandSet>, bool) {
-        if let Some(v) = self.shard(&key).lock().unwrap().get(&key) {
+        if let Some(v) = lock_recover(self.shard(&key)).get(&key) {
             return (v.clone(), false);
         }
         let built = Arc::new(build());
-        let shard = self.shard(&key);
-        let mut g = shard.lock().unwrap();
+        let mut g = lock_recover(self.shard(&key));
         match g.entry(key) {
             Entry::Occupied(e) => (e.get().clone(), false),
             Entry::Vacant(e) => {
@@ -513,6 +565,9 @@ struct Shared<'a> {
     /// Merged global top-k, kept in `rank_cmp` order, deduped, ≤ topk.
     best: Mutex<Vec<Incumbent>>,
     cache: CandCache,
+    /// Front-extraction mode: never truncate the merged pool, never
+    /// tighten the guard (see [`solve_front`]).
+    keep_all: bool,
 }
 
 /// Per-worker reusable buffers: after the first configuration warms the
@@ -604,6 +659,48 @@ pub fn solve_jobs_seeded(
     jobs: usize,
     seeds: &[Design],
 ) -> SolveResult {
+    let core = solve_core(problem, timeout_s, topk, evaluator, jobs, seeds, false);
+    SolveResult {
+        designs: core
+            .incumbents
+            .into_iter()
+            .map(|i| (i.design, i.obj))
+            .collect(),
+        lower_bound: core.lower_bound,
+        optimal: core.optimal,
+        solve_time_s: core.solve_time_s,
+        cpu_time_s: core.cpu_time_s,
+        jobs: core.jobs,
+        stats: core.stats,
+    }
+}
+
+/// What the worker team produced, before the caller-specific packaging
+/// (top-k [`SolveResult`] vs Pareto-front [`FrontResult`]).
+struct CoreOutcome {
+    incumbents: Vec<Incumbent>,
+    lower_bound: f64,
+    optimal: bool,
+    solve_time_s: f64,
+    cpu_time_s: f64,
+    jobs: usize,
+    stats: SolverStats,
+}
+
+/// The shared solve engine. `keep_all = false` is the classic top-k
+/// reduction; `keep_all = true` disables the incumbent guard and the
+/// merge truncation so the pooled incumbent set is exactly the union of
+/// the per-config top-`topk` lists — the deterministic raw material for
+/// epsilon-dominance front extraction ([`solve_front`]).
+fn solve_core(
+    problem: &NlpProblem,
+    timeout_s: f64,
+    topk: usize,
+    evaluator: &dyn BatchEvaluator,
+    jobs: usize,
+    seeds: &[Design],
+    keep_all: bool,
+) -> CoreOutcome {
     let t0 = Instant::now();
     let jobs = jobs.max(1);
     let k = problem.kernel;
@@ -625,7 +722,9 @@ pub fn solve_jobs_seeded(
     }
     seeded.sort_by(rank_cmp);
     seeded.truncate(topk);
-    let seed_guard = if seeded.len() >= topk {
+    // front mode never engages the guard: every config must contribute
+    // its full local top-k to the pooled reduction
+    let seed_guard = if !keep_all && seeded.len() >= topk {
         seeded.last().map(|i| i.obj).unwrap_or(f64::INFINITY)
     } else {
         f64::INFINITY
@@ -663,7 +762,7 @@ pub fn solve_jobs_seeded(
         .map(|_| Mutex::new(VecDeque::with_capacity(configs.len() / jobs + STEAL_CHUNK)))
         .collect();
     for (i, chunk) in order.chunks(STEAL_CHUNK).enumerate() {
-        queues[i % jobs].lock().unwrap().extend(chunk.iter().copied());
+        lock_recover(&queues[i % jobs]).extend(chunk.iter().copied());
     }
 
     let sh = Shared {
@@ -683,6 +782,7 @@ pub fn solve_jobs_seeded(
         optimal: AtomicBool::new(true),
         best: Mutex::new(seeded),
         cache: CandCache::new(),
+        keep_all,
     };
 
     let mut stats = SolverStats::default();
@@ -690,6 +790,15 @@ pub fn solve_jobs_seeded(
     if jobs == 1 {
         cpu_time_s = worker(&sh, 0, &mut stats);
     } else {
+        // Join every worker and only then re-raise the *first* panic:
+        // the old `.expect("solver worker panicked")` aborted the join
+        // loop on the first failed handle, leaking a PoisonError cascade
+        // (every stealer that touched a queue the panicking worker had
+        // poisoned would panic in turn, and the caller saw whichever
+        // payload the join order happened to surface). The recovering
+        // locks keep the surviving workers draining cleanly; the original
+        // payload — not a PoisonError wrapper — reaches the caller.
+        let mut first_panic: Option<Box<dyn std::any::Any + Send>> = None;
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..jobs)
                 .map(|id| {
@@ -702,28 +811,104 @@ pub fn solve_jobs_seeded(
                 })
                 .collect();
             for h in handles {
-                let (st, busy) = h.join().expect("solver worker panicked");
-                stats.merge(&st);
-                cpu_time_s += busy;
+                match h.join() {
+                    Ok((st, busy)) => {
+                        stats.merge(&st);
+                        cpu_time_s += busy;
+                    }
+                    Err(payload) => {
+                        if first_panic.is_none() {
+                            first_panic = Some(payload);
+                        }
+                    }
+                }
             }
         });
+        if let Some(payload) = first_panic {
+            std::panic::resume_unwind(payload);
+        }
     }
 
-    let best = sh.best.into_inner().unwrap();
+    let best = sh.best.into_inner().unwrap_or_else(|p| p.into_inner());
     let mut proven_lb = sh.iv_lb_all;
     if let Some(b) = best.first() {
         // the optimum can't be below the proven relaxation, nor above the
         // incumbent
         proven_lb = proven_lb.min(b.obj);
     }
-    SolveResult {
-        designs: best.into_iter().map(|i| (i.design, i.obj)).collect(),
+    CoreOutcome {
+        incumbents: best,
         lower_bound: proven_lb,
         optimal: sh.optimal.load(Ordering::Relaxed),
         solve_time_s: t0.elapsed().as_secs_f64(),
         cpu_time_s,
         jobs,
         stats,
+    }
+}
+
+/// Extract an **epsilon-dominance Pareto front** over
+/// `(latency, DSP, on-chip bytes, LUT)` instead of a scalar top-k.
+///
+/// The search machinery is [`solve_jobs`]'s, run in `keep_all` mode: the
+/// incumbent guard stays at `+inf` (no config is ever guard-skipped, so
+/// `stats.configs` counts every pipeline configuration), each config
+/// contributes its local top-`max_points` incumbents, and the pooled set
+/// is exactly the union of the per-config results — a pure function of
+/// the problem, independent of worker interleaving. The final reduction
+/// ranks the pool by the canonical total order, evaluates each design's
+/// resource vector once with the analytical model, and applies the
+/// order-invariant epsilon-grid reduction of [`front`](super::front) —
+/// so `jobs = N` is bit-identical to `jobs = 1`, the same construction
+/// (and the same property-test discipline) as the top-k path.
+pub fn solve_front(
+    problem: &NlpProblem,
+    timeout_s: f64,
+    fc: &FrontConfig,
+    evaluator: &dyn BatchEvaluator,
+    jobs: usize,
+) -> FrontResult {
+    let core = solve_core(
+        problem,
+        timeout_s,
+        fc.max_points.max(1),
+        evaluator,
+        jobs,
+        &[],
+        true,
+    );
+    // one exact model evaluation per pooled incumbent: the objective is
+    // the solver's verified latency; the resource axes come from the
+    // analytical model (Eq 11/12 + the LUT mirror of Eq 11)
+    let points: Vec<FrontPoint> = core
+        .incumbents
+        .into_iter()
+        .map(|inc| {
+            let r = model::evaluate(
+                problem.kernel,
+                problem.analysis,
+                problem.device,
+                &inc.design,
+            );
+            FrontPoint {
+                design: inc.design,
+                latency: inc.obj,
+                risk: inc.risk,
+                dsp: r.dsp,
+                onchip_bytes: r.onchip_bytes,
+                lut: r.lut,
+            }
+        })
+        .collect();
+    let points = super::front::reduce(points, fc);
+    FrontResult {
+        points,
+        lower_bound: core.lower_bound,
+        optimal: core.optimal,
+        solve_time_s: core.solve_time_s,
+        cpu_time_s: core.cpu_time_s,
+        jobs: core.jobs,
+        stats: core.stats,
     }
 }
 
@@ -764,7 +949,7 @@ fn worker(sh: &Shared, id: usize, stats: &mut SolverStats) -> f64 {
 /// so a third worker may retire one scan early — work is never lost, the
 /// thief itself processes everything it took.)
 fn next_config(sh: &Shared, id: usize, stats: &mut SolverStats) -> Option<u32> {
-    if let Some(ci) = sh.queues[id].lock().unwrap().pop_front() {
+    if let Some(ci) = lock_recover(&sh.queues[id]).pop_front() {
         return Some(ci);
     }
     let n = sh.queues.len();
@@ -776,7 +961,7 @@ fn next_config(sh: &Shared, id: usize, stats: &mut SolverStats) -> Option<u32> {
     for off in 1..n {
         let victim = (id + off) % n;
         let mut stolen = {
-            let mut q = sh.queues[victim].lock().unwrap();
+            let mut q = lock_recover(&sh.queues[victim]);
             if q.is_empty() {
                 continue;
             }
@@ -785,7 +970,7 @@ fn next_config(sh: &Shared, id: usize, stats: &mut SolverStats) -> Option<u32> {
         };
         let ci = stolen.pop_front().expect("stole from non-empty deque");
         if !stolen.is_empty() {
-            sh.queues[id].lock().unwrap().append(&mut stolen);
+            lock_recover(&sh.queues[id]).append(&mut stolen);
         }
         stats.steals += 1;
         found = Some(ci);
@@ -888,11 +1073,20 @@ fn run_config(sh: &Shared, ws: &mut WorkerScratch, ci: usize, stats: &mut Solver
 
 /// Merge one config's local top-k into the global reduction: pool, rank
 /// by the deterministic total order, dedup, truncate, refresh the guard.
+///
+/// In front-extraction mode (`keep_all`) the pool is never truncated and
+/// the guard is never tightened: every per-config top-k survives to the
+/// final epsilon-dominance reduction, whose membership must be a pure
+/// function of the union of per-config results — any truncation or
+/// guard-driven skip here would make it depend on merge order.
 fn merge_into_global(sh: &Shared, mut local: Vec<Incumbent>) {
-    let mut g = sh.best.lock().unwrap();
+    let mut g = lock_recover(&sh.best);
     g.append(&mut local);
     g.sort_by(rank_cmp);
     g.dedup_by(|a, b| a.design == b.design);
+    if sh.keep_all {
+        return;
+    }
     g.truncate(sh.topk);
     if g.len() >= sh.topk {
         if let Some(last) = g.last() {
@@ -1171,13 +1365,12 @@ fn nest_candidates(
         })
         .collect();
     // ascending latency; equal-latency candidates ordered by realization
-    // risk so plateau ties are found low-risk-first (§Perf iteration 4)
-    out.sort_by(|x, y| {
-        x.lat
-            .partial_cmp(&y.lat)
-            .unwrap()
-            .then(x.risk.partial_cmp(&y.risk).unwrap())
-    });
+    // risk so plateau ties are found low-risk-first (§Perf iteration 4).
+    // total_cmp: a NaN score (broken plug-in evaluator, degenerate
+    // device) sorts *after* every finite latency — the candidate is
+    // explored last and rejected by the leaf verification — instead of
+    // panicking the worker that built the menu.
+    out.sort_by(|x, y| x.lat.total_cmp(&y.lat).then(x.risk.total_cmp(&y.risk)));
     // keep a deep-but-bounded front (ascending latency)
     out.truncate(4096);
     CandSet {
@@ -1694,6 +1887,56 @@ mod tests {
         fine.get_mut(LoopId(0)).pipeline = true;
         fine.get_mut(LoopId(1)).uf = 4;
         assert_eq!(design_risk(&k, &fine), 1.0);
+    }
+
+    #[test]
+    fn rank_cmp_ranks_nan_last_instead_of_panicking() {
+        use std::cmp::Ordering::Less;
+        let k = benchmarks::kernel_gemm(8, 8, 8, DType::F32);
+        let inc = |obj: f64, risk: f64| Incumbent {
+            design: Design::empty(&k),
+            obj,
+            risk,
+        };
+        // IEEE-754 totalOrder: positive NaN (what arithmetic produces)
+        // sits above +inf, so a NaN objective loses to *everything*
+        assert_eq!(rank_cmp(&inc(10.0, 1.0), &inc(f64::NAN, 1.0)), Less);
+        assert_eq!(
+            rank_cmp(&inc(f64::INFINITY, 1.0), &inc(f64::NAN, 1.0)),
+            Less,
+            "NaN must rank even after +inf"
+        );
+        // a NaN risk falls through the same way
+        assert_eq!(rank_cmp(&inc(10.0, 1.0), &inc(10.0, f64::NAN)), Less);
+        // and a pool containing NaNs sorts (no panic) finite-first
+        let mut pool = vec![inc(f64::NAN, 1.0), inc(10.0, 1.0), inc(f64::INFINITY, 1.0)];
+        pool.sort_by(rank_cmp);
+        assert_eq!(pool[0].obj, 10.0);
+        assert!(pool[2].obj.is_nan());
+    }
+
+    #[test]
+    fn front_mode_is_exhaustive_and_parallel_identical() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let p = NlpProblem::new(&k, &a, &dev, 64, false);
+        let fc = FrontConfig {
+            epsilon: 0.05,
+            max_points: 8,
+        };
+        let f1 = solve_front(&p, 30.0, &fc, &RustFeatureEvaluator, 1);
+        // guard disabled → every pipeline configuration is processed
+        assert_eq!(f1.stats.configs as usize, p.space.pipeline_configs.len());
+        assert!(!f1.points.is_empty() && f1.points.len() <= fc.max_points);
+        let f4 = solve_front(&p, 30.0, &fc, &RustFeatureEvaluator, 4);
+        assert_eq!(f1.points.len(), f4.points.len());
+        for (x, y) in f1.points.iter().zip(&f4.points) {
+            assert_eq!(x.design, y.design);
+            assert_eq!(x.latency.to_bits(), y.latency.to_bits());
+            assert_eq!(x.dsp.to_bits(), y.dsp.to_bits());
+            assert_eq!(x.lut.to_bits(), y.lut.to_bits());
+        }
     }
 
     #[test]

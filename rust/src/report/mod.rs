@@ -6,6 +6,6 @@ pub mod tables;
 
 pub use figures::{figure2_3, figure4, figure5, figure6};
 pub use tables::{
-    emitted_index, serve_stats, table1, table2, table3, table5, table6, table7, table8, table9,
-    EmittedRow,
+    emitted_index, serve_stats, system_allocation, system_fronts, table1, table2, table3, table5,
+    table6, table7, table8, table9, EmittedRow,
 };

@@ -545,6 +545,165 @@ pub fn serve_stats(data: &crate::util::json::Json) -> TextTable {
     t
 }
 
+/// System mode: every extracted front point, one row each, grouped by
+/// kernel in input order — the `*` column marks the point the budget
+/// allocator chose. Latency is the solver's verified objective; DSP /
+/// on-chip / LUT are the model's Eq 11/12 usage estimates.
+pub fn system_fronts(out: &crate::system::SystemOutcome) -> TextTable {
+    let mut t = TextTable::new(
+        "System fronts — epsilon-dominance Pareto points per kernel",
+        &["Kernel", "Pt", "*", "Cycles", "GF/s", "DSP", "Onchip B", "LUT", "Optimal"],
+    );
+    let chosen = out.alloc.best.as_ref().map(|b| b.choice.clone());
+    for (ki, kf) in out.kernels.iter().enumerate() {
+        if kf.front.is_empty() {
+            t.row(vec![
+                kf.name.clone(),
+                "-".into(),
+                "".into(),
+                "(empty front)".into(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                kf.optimal.to_string(),
+            ]);
+            continue;
+        }
+        for (pi, p) in kf.front.iter().enumerate() {
+            let mark = match &chosen {
+                Some(c) if c[ki] == pi => "*",
+                _ => "",
+            };
+            t.row(vec![
+                if pi == 0 { kf.name.clone() } else { String::new() },
+                pi.to_string(),
+                mark.into(),
+                i0(p.latency),
+                f2(kf.gflops[pi]),
+                i0(p.dsp),
+                i0(p.onchip_bytes),
+                i0(p.lut),
+                if pi == 0 {
+                    kf.optimal.to_string()
+                } else {
+                    String::new()
+                },
+            ]);
+        }
+    }
+    t
+}
+
+/// System mode: the budget allocation — per-kernel chosen point, the
+/// summed usage, and the device budget with per-axis headroom.
+pub fn system_allocation(
+    out: &crate::system::SystemOutcome,
+    dev: &crate::hls::Device,
+) -> TextTable {
+    let mut t = TextTable::new(
+        "System allocation — one front point per kernel under the device budget",
+        &["Kernel", "Pt", "GF/s", "DSP", "Onchip B", "LUT"],
+    );
+    let Some(best) = &out.alloc.best else {
+        t.row(vec![
+            format!(
+                "(infeasible: no combination fits {} — {} nodes searched)",
+                dev.name, out.alloc.nodes
+            ),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+        return t;
+    };
+    for (kf, &pi) in out.kernels.iter().zip(&best.choice) {
+        let p = &kf.front[pi];
+        t.row(vec![
+            kf.name.clone(),
+            pi.to_string(),
+            f2(kf.gflops[pi]),
+            i0(p.dsp),
+            i0(p.onchip_bytes),
+            i0(p.lut),
+        ]);
+    }
+    t.row(vec![
+        "total".into(),
+        String::new(),
+        f2(best.gflops),
+        i0(best.dsp),
+        i0(best.onchip_bytes),
+        i0(best.lut),
+    ]);
+    t.row(vec![
+        format!("budget ({})", dev.name),
+        String::new(),
+        String::new(),
+        i0(dev.dsp_total as f64),
+        i0(dev.onchip_bytes as f64),
+        i0(dev.lut_total as f64),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod system_tables_tests {
+    use super::*;
+    use crate::system::{AllocOutcome, Allocation, KernelFront, SystemOutcome};
+
+    fn outcome(with_alloc: bool) -> SystemOutcome {
+        let k = crate::benchmarks::kernel_gemm(4, 4, 4, DType::F32);
+        let kf = KernelFront {
+            name: "gemm".into(),
+            front: vec![crate::nlp::FrontPoint {
+                design: crate::pragma::Design::empty(&k),
+                latency: 1000.0,
+                risk: 0.0,
+                dsp: 40.0,
+                onchip_bytes: 512.0,
+                lut: 900.0,
+            }],
+            gflops: vec![1.25],
+            lower_bound: 900.0,
+            optimal: true,
+            solve_time_s: 0.1,
+            configs: 4,
+        };
+        let best = with_alloc.then(|| Allocation {
+            choice: vec![0],
+            gflops: 1.25,
+            dsp: 40.0,
+            onchip_bytes: 512.0,
+            lut: 900.0,
+        });
+        SystemOutcome {
+            kernels: vec![kf],
+            alloc: AllocOutcome { best, nodes: 2 },
+            solve_time_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn fronts_table_marks_the_chosen_point() {
+        let r = system_fronts(&outcome(true)).render();
+        assert!(r.contains("gemm"), "{r}");
+        assert!(r.contains('*'), "{r}");
+        let a = system_allocation(&outcome(true), &crate::hls::Device::u200()).render();
+        assert!(a.contains("total"), "{a}");
+        assert!(a.contains("budget"), "{a}");
+    }
+
+    #[test]
+    fn infeasible_allocation_renders_a_diagnostic_row() {
+        let a = system_allocation(&outcome(false), &crate::hls::Device::u200()).render();
+        assert!(a.contains("infeasible"), "{a}");
+        assert!(a.contains("2 nodes"), "{a}");
+    }
+}
+
 #[cfg(test)]
 mod serve_stats_tests {
     use super::*;

@@ -1,8 +1,8 @@
 //! The daemon's warm cache: fingerprint-keyed LRU over built bound
 //! models, compiled tapes, completed `SolveResult`s, and completed
-//! `dse` responses.
+//! `dse` / `system` responses.
 //!
-//! Four maps, one eviction budget (`--cache-entries`):
+//! Five maps, one eviction budget (`--cache-entries`):
 //!
 //! * **solve cache** — [`SolveKey`] → `Arc<SolveResult>`. Only results
 //!   with `optimal == true` are admitted: a completed solve is a pure
@@ -35,6 +35,14 @@
 //!   --transform` mixes its enumeration bounds into the hash so
 //!   variant-space results cache-partition correctly (the same kernel
 //!   ± `--transform` never shares a line).
+//! * **system replay cache** — [`SystemKey`] → the rendered response
+//!   payload. The `system` op canonicalizes its kernel list (sorted by
+//!   exact fingerprint, then name) *before* solving, so a completed run
+//!   is a pure function of the sorted per-kernel fingerprints plus the
+//!   device and the front/allocation knobs — two requests naming the
+//!   same kernels in different orders share one cache line and replay
+//!   bit-identically (each response row carries its kernel name, so
+//!   canonical order loses nothing).
 //!
 //! Even within one warm key, a seeded solve is not *proven* equal to
 //! the cold solve (the menus are derived from trip counts, which the
@@ -136,6 +144,28 @@ pub struct DseKey {
     pub prune_bound: bool,
 }
 
+/// Replay key for a completed `system` request: the canonicalized
+/// (fingerprint-sorted) kernel list, the device, and every knob the
+/// fronts or the allocation depend on. `epsilon` is keyed by its f64
+/// bit pattern — replay requires the *exact* band, and bit equality is
+/// the only equality that guarantees bit-identical archives. `jobs` is
+/// excluded as everywhere else (deterministic reduction).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SystemKey {
+    /// Per-kernel exact structural fingerprints, sorted ascending.
+    pub kernel_fps: Vec<u64>,
+    /// Target device name.
+    pub device: String,
+    /// Evaluator tag.
+    pub evaluator: String,
+    /// Epsilon-dominance band as raw f64 bits.
+    pub epsilon_bits: u64,
+    /// Front truncation cap.
+    pub max_points: usize,
+    /// `MAX_PARTITIONING` sub-space rung of every per-kernel solve.
+    pub cap: u64,
+}
+
 /// Model-cache key: the symbolic build depends only on (kernel, device).
 type ModelKey = (u64, String);
 
@@ -185,6 +215,7 @@ pub struct WarmCache {
     models: HashMap<ModelKey, ModelEntry>,
     warm: HashMap<WarmKey, (Vec<Design>, u64)>,
     dses: HashMap<DseKey, (Arc<Json>, u64)>,
+    systems: HashMap<SystemKey, (Arc<Json>, u64)>,
     /// Cumulative counters.
     pub stats: CacheStats,
 }
@@ -200,6 +231,7 @@ impl WarmCache {
             models: HashMap::new(),
             warm: HashMap::new(),
             dses: HashMap::new(),
+            systems: HashMap::new(),
             stats: CacheStats::default(),
         }
     }
@@ -255,6 +287,37 @@ impl WarmCache {
         self.dses.insert(key, (data, tick));
         if self.dses.len() > self.capacity {
             evict_min(&mut self.dses, |(_, t)| *t);
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Lookup for a completed `system` response. A hit returns the
+    /// stored payload verbatim (bit-identical replay) and refreshes its
+    /// LRU stamp.
+    pub fn lookup_system(&mut self, key: &SystemKey) -> Option<Arc<Json>> {
+        let tick = self.bump();
+        match self.systems.get_mut(key) {
+            Some((data, t)) => {
+                *t = tick;
+                self.stats.hits += 1;
+                Some(data.clone())
+            }
+            None => None,
+        }
+    }
+
+    /// Admit a completed `system` response for replay (exhaustive
+    /// fronts + deterministic allocation make the run a pure function
+    /// of its [`SystemKey`]; runs with any timed-out per-kernel solve
+    /// must NOT be admitted — the caller checks `optimal` per kernel).
+    pub fn insert_system(&mut self, key: SystemKey, data: Arc<Json>) {
+        if self.capacity == 0 {
+            return;
+        }
+        let tick = self.bump();
+        self.systems.insert(key, (data, tick));
+        if self.systems.len() > self.capacity {
+            evict_min(&mut self.systems, |(_, t)| *t);
             self.stats.evictions += 1;
         }
     }
@@ -361,14 +424,15 @@ impl WarmCache {
         }
     }
 
-    /// Live entry counts `(solves, models, warm, dses)` for the
-    /// `stats` op.
-    pub fn sizes(&self) -> (usize, usize, usize, usize) {
+    /// Live entry counts `(solves, models, warm, dses, systems)` for
+    /// the `stats` op.
+    pub fn sizes(&self) -> (usize, usize, usize, usize, usize) {
         (
             self.solves.len(),
             self.models.len(),
             self.warm.len(),
             self.dses.len(),
+            self.systems.len(),
         )
     }
 }
@@ -492,7 +556,44 @@ mod tests {
         assert!(c.lookup_solve(&key(1)).is_none());
         c.insert_dse(dse_key(1, "nlpdse"), Arc::new(Json::obj()));
         assert!(c.lookup_dse(&dse_key(1, "nlpdse")).is_none());
-        assert_eq!(c.sizes(), (0, 0, 0, 0));
+        c.insert_system(system_key(&[1, 2]), Arc::new(Json::obj()));
+        assert!(c.lookup_system(&system_key(&[1, 2])).is_none());
+        assert_eq!(c.sizes(), (0, 0, 0, 0, 0));
+    }
+
+    fn system_key(fps: &[u64]) -> SystemKey {
+        SystemKey {
+            kernel_fps: fps.to_vec(),
+            device: "xilinx-u200".into(),
+            evaluator: "sym".into(),
+            epsilon_bits: 0.02f64.to_bits(),
+            max_points: 16,
+            cap: 512,
+        }
+    }
+
+    #[test]
+    fn system_replay_is_partitioned_by_kernels_and_knobs() {
+        let mut c = WarmCache::new(4);
+        let mut payload = Json::obj();
+        payload.set("gflops", 2.5);
+        let arc = Arc::new(payload);
+        c.insert_system(system_key(&[1, 2]), arc.clone());
+        let hit = c.lookup_system(&system_key(&[1, 2])).expect("hit");
+        assert!(Arc::ptr_eq(&hit, &arc), "replay is the stored payload");
+        // a different kernel multiset, epsilon, cap, or point budget is
+        // a different line
+        assert!(c.lookup_system(&system_key(&[1, 3])).is_none());
+        assert!(c.lookup_system(&system_key(&[1])).is_none());
+        let mut eps = system_key(&[1, 2]);
+        eps.epsilon_bits = 0.05f64.to_bits();
+        assert!(c.lookup_system(&eps).is_none());
+        let mut cap = system_key(&[1, 2]);
+        cap.cap = 8;
+        assert!(c.lookup_system(&cap).is_none());
+        let mut mp = system_key(&[1, 2]);
+        mp.max_points = 4;
+        assert!(c.lookup_system(&mp).is_none());
     }
 
     fn dse_key(fp: u64, engine: &str) -> DseKey {

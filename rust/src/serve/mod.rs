@@ -1,6 +1,6 @@
-//! DSE-as-a-service: a long-running daemon answering solve/DSE/bound/
-//! emit/gen requests over newline-framed JSON, with a fingerprint-keyed
-//! warm cache (`nlp-dse serve --addr HOST:PORT`).
+//! DSE-as-a-service: a long-running daemon answering solve/DSE/system/
+//! bound/emit/gen requests over newline-framed JSON, with a
+//! fingerprint-keyed warm cache (`nlp-dse serve --addr HOST:PORT`).
 //!
 //! The paper's tool runs one kernel per invocation and rebuilds
 //! everything — polyhedral analysis, the symbolic bound model, the
@@ -14,10 +14,11 @@
 //!   (same value ⇒ same solve outcome) and `warm` (same nest shape
 //!   modulo sizes/precision);
 //! * [`cache`] — one LRU budget over completed `SolveResult`s (replayed
-//!   bit-identically on `cache: "hit"`), built bound models + tapes, and
-//!   a warm index whose designs seed
+//!   bit-identically on `cache: "hit"`), built bound models + tapes, a
+//!   warm index whose designs seed
 //!   [`solve_jobs_seeded`](crate::nlp::solve_jobs_seeded) for
-//!   `cache: "warm"` requests;
+//!   `cache: "warm"` requests, and replay maps for completed `dse` and
+//!   multi-kernel `system` runs;
 //! * [`protocol`] — the line-JSON request/event grammar (documented in
 //!   full in `docs/DESIGN.md` §11);
 //! * [`session`] — transport-agnostic dispatch: the whole daemon minus
@@ -43,7 +44,7 @@ pub mod protocol;
 pub mod server;
 pub mod session;
 
-pub use cache::{CacheStats, DseKey, SolveKey, WarmCache, WarmKey};
+pub use cache::{CacheStats, DseKey, SolveKey, SystemKey, WarmCache, WarmKey};
 pub use fingerprint::{fingerprint, fingerprint_spaced, Fingerprint};
 pub use server::{install_signal_handlers, spawn, ServerHandle};
 pub use session::{handle_line, Control, ServeConfig, ServeState};

@@ -9,13 +9,15 @@
 //! ← {"event":"result","id":1,"op":"solve","cache":"miss","data":{...}}
 //! ```
 //!
-//! * every request: `op` (required) ∈ `solve | dse | bound | emit | gen |
-//!   stats | shutdown`, plus an optional `id` echoed verbatim on every
-//!   event the request produces (clients multiplexing one connection
-//!   correlate by it);
+//! * every request: `op` (required) ∈ `solve | dse | system | bound |
+//!   emit | gen | stats | shutdown`, plus an optional `id` echoed
+//!   verbatim on every event the request produces (clients multiplexing
+//!   one connection correlate by it);
 //! * kernel-carrying ops take either `kernel` (registry benchmark name)
 //!   or `knl` (inline `.knl` source text), with optional `size`
-//!   (`S|M|L`) and `dtype` (`f32|f64`) — the same resolution as the CLI;
+//!   (`S|M|L`) and `dtype` (`f32|f64`) — the same resolution as the
+//!   CLI; the multi-kernel `system` op instead takes `kernels` (a list
+//!   of benchmark names sharing one `size`/`dtype`);
 //! * terminal events are `result` (with `data`, and on cache-eligible
 //!   ops a `cache: "hit" | "warm" | "miss"` attribution) and `error`
 //!   (with `message`, and — when the failure is a `.knl` parse error —

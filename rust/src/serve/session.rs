@@ -38,12 +38,19 @@
 //! ([`run_transform_dse_seeded`]), the response reports
 //! `cache: "warm"`, and — exactly like warm solves — the seeded
 //! payload is *not* admitted to the replay cache, keeping replay lines
-//! history-independent. Every op's `hit`/`warm`/`miss` attribution is also counted
+//! history-independent.
+//!
+//! `system` requests replay through [`SystemKey`]: the kernel list is
+//! canonicalized (sorted by exact fingerprint, then name) *before*
+//! solving, so order-permuted requests share one cache line and replay
+//! bit-identically, and only runs whose every per-kernel solve
+//! completed (`optimal`) are admitted — an anytime (timed-out) front is
+//! not a pure function of the key. Every op's `hit`/`warm`/`miss` attribution is also counted
 //! per op (the `stats` payload's per-op `cache` object) — the global
 //! [`CacheStats`](super::cache::CacheStats) counters alone cannot say
 //! *which* op's traffic warmed or missed.
 
-use super::cache::{DseKey, SolveKey, WarmCache, WarmKey};
+use super::cache::{DseKey, SolveKey, SystemKey, WarmCache, WarmKey};
 use super::fingerprint::{fingerprint, fingerprint_spaced};
 use super::protocol::{self, Request};
 use crate::benchmarks::{self, Size};
@@ -240,6 +247,7 @@ fn dispatch(
     match req.op.as_str() {
         "solve" => op_solve(state, req, emit),
         "dse" => op_dse(state, req, emit),
+        "system" => op_system(state, req, emit),
         "bound" => op_bound(req),
         "emit" => op_emit(state, req, emit),
         "gen" => op_gen(req),
@@ -250,7 +258,7 @@ fn dispatch(
             Ok((None, data))
         }
         other => Err(format!(
-            "unknown op `{other}` (want solve|dse|bound|emit|gen|stats|shutdown)"
+            "unknown op `{other}` (want solve|dse|system|bound|emit|gen|stats|shutdown)"
         )
         .into()),
     }
@@ -648,6 +656,164 @@ fn op_dse(
     Ok((Some(tag), data))
 }
 
+/// Render a system outcome as the `system` response payload:
+/// per-kernel fronts (the allocator's chosen point flagged per row) and
+/// the budget allocation totals against the device budgets. `kernels`
+/// is the same canonical-order list the solve ran over, so
+/// `kernels[i].1` names the loops of `out.kernels[i]`'s designs.
+fn system_json(
+    kernels: &[(String, Kernel)],
+    out: &crate::system::SystemOutcome,
+    dev: &Device,
+) -> Json {
+    let choice = out.alloc.best.as_ref().map(|b| b.choice.as_slice());
+    let mut ks = Json::Arr(vec![]);
+    for (i, kf) in out.kernels.iter().enumerate() {
+        let chosen = choice.map(|c| c[i]);
+        let mut front = Json::Arr(vec![]);
+        for (j, p) in kf.front.iter().enumerate() {
+            let mut o = Json::obj();
+            o.set("latency_cycles", p.latency)
+                .set("gflops", kf.gflops[j])
+                .set("dsp", p.dsp)
+                .set("onchip_bytes", p.onchip_bytes)
+                .set("lut", p.lut)
+                .set("chosen", chosen == Some(j))
+                .set("pragmas", design_json(&kernels[i].1, &p.design));
+            front.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("kernel", kf.name.as_str())
+            .set("optimal", kf.optimal)
+            .set("lower_bound", kf.lower_bound)
+            .set("configs", kf.configs)
+            .set("front", front);
+        ks.push(o);
+    }
+    let mut alloc = Json::obj();
+    match &out.alloc.best {
+        Some(b) => {
+            let mut ch = Json::Arr(vec![]);
+            for &c in &b.choice {
+                ch.push(c);
+            }
+            alloc
+                .set("feasible", true)
+                .set("choice", ch)
+                .set("gflops", b.gflops)
+                .set("dsp", b.dsp)
+                .set("onchip_bytes", b.onchip_bytes)
+                .set("lut", b.lut);
+        }
+        None => {
+            alloc.set("feasible", false);
+        }
+    }
+    alloc.set("nodes", out.alloc.nodes);
+    let mut budget = Json::obj();
+    budget
+        .set("dsp", dev.dsp_total)
+        .set("onchip_bytes", dev.onchip_bytes)
+        .set("lut", dev.lut_total);
+    let mut data = Json::obj();
+    data.set("device", dev.name)
+        .set("kernels", ks)
+        .set("allocation", alloc)
+        .set("budget", budget);
+    data
+}
+
+/// `system`: per-kernel epsilon-dominance fronts plus the device-budget
+/// allocation (DESIGN.md §14). `"kernels"` names registry benchmarks at
+/// a shared `size`/`dtype` — the daemon takes no file paths, so inline
+/// sources stay with the single-kernel ops. The kernel list is
+/// canonicalized (sorted by exact fingerprint, then name) before the
+/// replay lookup *and* the solve, so order-permuted requests share one
+/// cache line and one payload.
+fn op_system(
+    state: &ServeState,
+    req: &Request,
+    emit: &mut dyn FnMut(&str),
+) -> Result<(Option<&'static str>, Json), Fail> {
+    let names = req.list_opt("kernels")?;
+    if names.is_empty() {
+        return Err(String::from(
+            "request needs \"kernels\" (a list of benchmark names)",
+        )
+        .into());
+    }
+    let size = match req.str_opt("size")? {
+        None => Size::Medium,
+        Some(s) => Size::parse(&s).ok_or_else(|| format!("bad \"size\" `{s}` (want S|M|L)"))?,
+    };
+    let dtype = match req.str_opt("dtype")? {
+        None => DType::F32,
+        Some(s) => {
+            DType::from_name(&s).ok_or_else(|| format!("bad \"dtype\" `{s}` (want f32|f64)"))?
+        }
+    };
+    let epsilon = req.f64_opt("epsilon")?.unwrap_or(0.02);
+    if !(0.0..1.0).contains(&epsilon) {
+        return Err(format!("\"epsilon\" must be in [0, 1), got {epsilon}").into());
+    }
+    let max_points = req.u64_opt("max_points")?.unwrap_or(16).max(1) as usize;
+    let cap = req.u64_opt("cap")?.unwrap_or(u64::MAX);
+    let timeout_s = req.f64_opt("timeout_s")?.unwrap_or(30.0);
+    let jobs = match req.u64_opt("jobs")? {
+        Some(0) => return Err(String::from("\"jobs\" must be >= 1").into()),
+        Some(n) => n as usize,
+        None => state.cfg.jobs,
+    };
+    let eval_tag = evaluator_tag(req)?;
+    let dev = Device::u200();
+
+    let mut kernels: Vec<(u64, String, Kernel)> = Vec::with_capacity(names.len());
+    for name in &names {
+        let k = benchmarks::lookup(name, size, dtype)?;
+        kernels.push((fingerprint(&k).exact, name.clone(), k));
+    }
+    kernels.sort_by(|a, b| (a.0, a.1.as_str()).cmp(&(b.0, b.1.as_str())));
+    let key = SystemKey {
+        kernel_fps: kernels.iter().map(|(fp, _, _)| *fp).collect(),
+        device: dev.name.to_string(),
+        evaluator: eval_tag.clone(),
+        epsilon_bits: epsilon.to_bits(),
+        max_points,
+        cap,
+    };
+    if let Some(hit) = state.cache.lock().unwrap().lookup_system(&key) {
+        return Ok((Some("hit"), (*hit).clone()));
+    }
+
+    emit(&protocol::progress_line(
+        &req.id,
+        &req.op,
+        &format!("extracting {} front(s) | jobs={jobs}", kernels.len()),
+    ));
+    let cfg = crate::system::SystemConfig {
+        front: nlp::FrontConfig {
+            epsilon,
+            max_points,
+        },
+        cap,
+        timeout_s,
+        jobs,
+    };
+    let list: Vec<(String, Kernel)> = kernels.into_iter().map(|(_, n, k)| (n, k)).collect();
+    let eval = solver_evaluator(&eval_tag);
+    let out = crate::system::solve_system(&list, &dev, &cfg, eval.as_ref());
+    let data = system_json(&list, &out, &dev);
+    let mut cache = state.cache.lock().unwrap();
+    cache.note_dispatch(false);
+    // anytime (timed-out) per-kernel fronts are not pure functions of
+    // the key; only fully enumerated runs enter the replay cache
+    if out.kernels.iter().all(|kf| kf.optimal) {
+        cache.insert_system(key, Arc::new(data.clone()));
+    }
+    drop(cache);
+    Ok((Some("miss"), data))
+}
+
 fn op_bound(req: &Request) -> Result<(Option<&'static str>, Json), Fail> {
     let k = resolve_kernel(req)?;
     let ex = Explorer::custom(k);
@@ -813,7 +979,7 @@ fn op_stats(state: &ServeState) -> Json {
 
     let cache = state.cache.lock().unwrap();
     let s = cache.stats;
-    let (solves, models, warm, dses) = cache.sizes();
+    let (solves, models, warm, dses, systems) = cache.sizes();
     drop(cache);
     let mut cj = Json::obj();
     cj.set("hits", s.hits)
@@ -827,7 +993,8 @@ fn op_stats(state: &ServeState) -> Json {
         .set("solves", solves)
         .set("models", models)
         .set("warm", warm)
-        .set("dses", dses);
+        .set("dses", dses)
+        .set("systems", systems);
     cj.set("entries", entries);
     data.set("cache", cj);
 
@@ -1094,6 +1261,69 @@ mod tests {
             Some(0),
             "seeded transform runs must stay out of the replay map"
         );
+    }
+
+    #[test]
+    fn system_replays_order_invariantly_and_partitions_by_epsilon() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let cache = |lines: &[Json]| {
+            terminal(lines)
+                .get("cache")
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+        };
+        let a = r#"{"op":"system","kernels":["gemm","bicg"],"size":"S","cap":16,"epsilon":0.05,"max_points":4,"id":1}"#;
+        let (first, _) = call(&state, a);
+        assert_eq!(cache(&first).as_deref(), Some("miss"));
+        // the payload carries a feasible allocation with one chosen
+        // point per kernel, within the device budgets
+        let data = terminal(&first).get("data").unwrap();
+        let alloc = data.get("allocation").unwrap();
+        assert_eq!(alloc.get("feasible").and_then(|j| j.as_bool()), Some(true));
+        let choice = alloc.get("choice").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(choice.len(), 2);
+        let ks = data.get("kernels").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(ks.len(), 2);
+        for k in ks {
+            let front = k.get("front").and_then(|j| j.as_arr()).unwrap();
+            assert!(!front.is_empty() && front.len() <= 4);
+            let chosen: usize = front
+                .iter()
+                .filter(|p| p.get("chosen").and_then(|j| j.as_bool()) == Some(true))
+                .count();
+            assert_eq!(chosen, 1, "exactly one chosen point per kernel");
+        }
+        // a permuted kernel list canonicalizes to the same key: replay,
+        // bit-identical payload
+        let b = r#"{"op":"system","kernels":["bicg","gemm"],"size":"S","cap":16,"epsilon":0.05,"max_points":4,"id":2}"#;
+        let (second, _) = call(&state, b);
+        assert_eq!(cache(&second).as_deref(), Some("hit"));
+        assert_eq!(
+            terminal(&first).get("data").unwrap().to_line(),
+            terminal(&second).get("data").unwrap().to_line(),
+            "order-permuted system replay must be bit-identical"
+        );
+        // a different epsilon is a different front: its own cache line
+        let c = r#"{"op":"system","kernels":["gemm","bicg"],"size":"S","cap":16,"epsilon":0.1,"max_points":4,"id":3}"#;
+        let (third, _) = call(&state, c);
+        assert_eq!(cache(&third).as_deref(), Some("miss"));
+        // both knob settings live side by side in the replay map
+        let (lines, _) = call(&state, r#"{"op":"stats"}"#);
+        let stats = terminal(&lines).get("data").unwrap().clone();
+        let entries = stats.get("cache").unwrap().get("entries").unwrap();
+        assert_eq!(entries.get("systems").and_then(|j| j.as_u64()), Some(2));
+        let per_op = stats
+            .get("ops")
+            .unwrap()
+            .get("system")
+            .expect("system op stats")
+            .get("cache")
+            .unwrap();
+        assert_eq!(per_op.get("miss").and_then(|j| j.as_u64()), Some(2));
+        assert_eq!(per_op.get("hit").and_then(|j| j.as_u64()), Some(1));
     }
 
     #[test]

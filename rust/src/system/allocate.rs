@@ -1,0 +1,372 @@
+//! Branch-and-bound budget allocation over per-kernel fronts.
+//!
+//! One front point must be chosen per kernel; the objective is total
+//! system throughput (sum of per-kernel GF/s) and the constraints are
+//! the device's summed DSP / on-chip-byte / LUT budgets. The search is
+//! a depth-first branch-and-bound in the solver's bound-ascending deal
+//! spirit: each kernel's points are visited **best-throughput-first**,
+//! and two admissible prunes cut subtrees —
+//!
+//! * **optimistic bound**: partial throughput + the sum of the
+//!   remaining kernels' per-front *maximum* GF/s (each term bounds any
+//!   completion, so the sum does);
+//! * **feasibility bound**: partial usage + the sum of the remaining
+//!   kernels' per-front *minimum* per-axis usage (no completion can use
+//!   less, so exceeding the budget here is final).
+//!
+//! Both prunes carry a tiny relative slack so floating-point
+//! re-association can never cut the true optimum; exact totals are
+//! recomputed left-to-right at each leaf, and [`allocate_brute`]
+//! enumerates the identical visit order with the identical
+//! strict-improvement rule — so the two agree bit-for-bit, which
+//! `tests/integration_system.rs` checks on random small instances.
+
+use super::KernelFront;
+use crate::hls::Device;
+
+/// Guard band on both prunes: admissibility must survive f64
+/// re-association between the incremental bound and the leaf total.
+const SLACK: f64 = 1e-9;
+
+/// One chosen point per kernel plus its exact totals.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    /// Per kernel (input order): index into that kernel's front.
+    pub choice: Vec<usize>,
+    /// Total system throughput, GF/s.
+    pub gflops: f64,
+    /// Summed DSP usage of the chosen points.
+    pub dsp: f64,
+    /// Summed on-chip bytes of the chosen points.
+    pub onchip_bytes: f64,
+    /// Summed LUT usage of the chosen points.
+    pub lut: f64,
+}
+
+/// Search result: the best feasible allocation (if any) and how many
+/// search nodes were expanded finding it.
+#[derive(Clone, Debug)]
+pub struct AllocOutcome {
+    /// Best feasible allocation, `None` when no assignment fits the
+    /// budget (or some kernel has an empty front).
+    pub best: Option<Allocation>,
+    /// Nodes expanded (b&b) or leaves enumerated (brute force).
+    pub nodes: u64,
+}
+
+struct Budget {
+    dsp: f64,
+    onchip: f64,
+    lut: f64,
+}
+
+impl Budget {
+    fn of(dev: &Device) -> Budget {
+        Budget {
+            dsp: dev.dsp_total as f64,
+            onchip: dev.onchip_bytes as f64,
+            lut: dev.lut_total as f64,
+        }
+    }
+
+    fn fits(&self, dsp: f64, onchip: f64, lut: f64) -> bool {
+        dsp <= self.dsp && onchip <= self.onchip && lut <= self.lut
+    }
+}
+
+/// Exact totals of a complete choice, summed left-to-right in kernel
+/// input order — the one evaluation order both searches share, so their
+/// f64 results are bit-identical.
+fn totals(ks: &[KernelFront], choice: &[usize]) -> (f64, f64, f64, f64) {
+    let (mut g, mut d, mut o, mut l) = (0.0, 0.0, 0.0, 0.0);
+    for (k, &c) in ks.iter().zip(choice) {
+        g += k.gflops[c];
+        d += k.front[c].dsp;
+        o += k.front[c].onchip_bytes;
+        l += k.front[c].lut;
+    }
+    (g, d, o, l)
+}
+
+/// Per-kernel visit order: descending GF/s, ties by ascending front
+/// index (the canonical-order point wins). `total_cmp` so a NaN
+/// throughput — impossible from finite latencies, but cheap to be safe
+/// about — sorts last instead of panicking.
+fn visit_order(k: &KernelFront) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..k.front.len()).collect();
+    idx.sort_by(|&x, &y| k.gflops[y].total_cmp(&k.gflops[x]).then(x.cmp(&y)));
+    idx
+}
+
+struct Search<'a> {
+    ks: &'a [KernelFront],
+    order: Vec<Vec<usize>>,
+    /// `suffix_gmax[i]` = Σ over kernels `i..` of their max point GF/s.
+    suffix_gmax: Vec<f64>,
+    /// Per-axis Σ over kernels `i..` of their min point usage.
+    suffix_min: Vec<[f64; 3]>,
+    budget: Budget,
+    best: Option<Allocation>,
+    best_g: f64,
+    nodes: u64,
+}
+
+impl Search<'_> {
+    fn dfs(&mut self, i: usize, choice: &mut Vec<usize>, used: [f64; 3], cur_g: f64) {
+        self.nodes += 1;
+        if i == self.ks.len() {
+            let (g, d, o, l) = totals(self.ks, choice);
+            if self.budget.fits(d, o, l) && g > self.best_g {
+                self.best_g = g;
+                self.best = Some(Allocation {
+                    choice: choice.clone(),
+                    gflops: g,
+                    dsp: d,
+                    onchip_bytes: o,
+                    lut: l,
+                });
+            }
+            return;
+        }
+        // feasibility prune: even the cheapest completion overflows
+        let lb = [
+            used[0] + self.suffix_min[i][0],
+            used[1] + self.suffix_min[i][1],
+            used[2] + self.suffix_min[i][2],
+        ];
+        if lb[0] > self.budget.dsp * (1.0 + SLACK)
+            || lb[1] > self.budget.onchip * (1.0 + SLACK)
+            || lb[2] > self.budget.lut * (1.0 + SLACK)
+        {
+            return;
+        }
+        // optimistic bound: no completion beats the incumbent
+        let bound = cur_g + self.suffix_gmax[i];
+        if bound + bound.abs() * SLACK <= self.best_g {
+            return;
+        }
+        for oi in 0..self.order[i].len() {
+            let pi = self.order[i][oi];
+            let p = &self.ks[i].front[pi];
+            choice.push(pi);
+            self.dfs(
+                i + 1,
+                choice,
+                [used[0] + p.dsp, used[1] + p.onchip_bytes, used[2] + p.lut],
+                cur_g + self.ks[i].gflops[pi],
+            );
+            choice.pop();
+        }
+    }
+}
+
+fn suffixes(ks: &[KernelFront]) -> (Vec<f64>, Vec<[f64; 3]>) {
+    let n = ks.len();
+    let mut gmax = vec![0.0; n + 1];
+    let mut rmin = vec![[0.0; 3]; n + 1];
+    for i in (0..n).rev() {
+        let g = ks[i].gflops.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        gmax[i] = g + gmax[i + 1];
+        let axis = |f: fn(&crate::nlp::FrontPoint) -> f64| {
+            ks[i].front.iter().map(f).fold(f64::INFINITY, f64::min)
+        };
+        rmin[i] = [
+            axis(|p| p.dsp) + rmin[i + 1][0],
+            axis(|p| p.onchip_bytes) + rmin[i + 1][1],
+            axis(|p| p.lut) + rmin[i + 1][2],
+        ];
+    }
+    (gmax, rmin)
+}
+
+/// Branch-and-bound allocation: the highest-throughput budget-feasible
+/// choice of one front point per kernel, deterministic (first strict
+/// improvement in DFS order wins ties). Returns `best: None` when some
+/// kernel has an empty front or nothing fits.
+pub fn allocate(ks: &[KernelFront], dev: &Device) -> AllocOutcome {
+    if ks.is_empty() || ks.iter().any(|k| k.front.is_empty()) {
+        return AllocOutcome {
+            best: None,
+            nodes: 0,
+        };
+    }
+    let (suffix_gmax, suffix_min) = suffixes(ks);
+    let mut s = Search {
+        ks,
+        order: ks.iter().map(visit_order).collect(),
+        suffix_gmax,
+        suffix_min,
+        budget: Budget::of(dev),
+        best: None,
+        best_g: f64::NEG_INFINITY,
+        nodes: 0,
+    };
+    s.dfs(0, &mut Vec::with_capacity(ks.len()), [0.0; 3], 0.0);
+    AllocOutcome {
+        best: s.best,
+        nodes: s.nodes,
+    }
+}
+
+/// Brute-force oracle: enumerate every complete choice in the exact
+/// same visit order as [`allocate`]'s DFS, keep the first strict
+/// improvement. Exponential — test/cross-check use only.
+pub fn allocate_brute(ks: &[KernelFront], dev: &Device) -> AllocOutcome {
+    if ks.is_empty() || ks.iter().any(|k| k.front.is_empty()) {
+        return AllocOutcome {
+            best: None,
+            nodes: 0,
+        };
+    }
+    let order: Vec<Vec<usize>> = ks.iter().map(visit_order).collect();
+    let budget = Budget::of(dev);
+    let mut best: Option<Allocation> = None;
+    let mut best_g = f64::NEG_INFINITY;
+    let mut nodes = 0u64;
+    let mut odo = vec![0usize; ks.len()];
+    loop {
+        nodes += 1;
+        let choice: Vec<usize> = odo.iter().enumerate().map(|(i, &o)| order[i][o]).collect();
+        let (g, d, o, l) = totals(ks, &choice);
+        if budget.fits(d, o, l) && g > best_g {
+            best_g = g;
+            best = Some(Allocation {
+                choice,
+                gflops: g,
+                dsp: d,
+                onchip_bytes: o,
+                lut: l,
+            });
+        }
+        // odometer increment, last kernel fastest (matches DFS order)
+        let mut i = ks.len();
+        loop {
+            if i == 0 {
+                return AllocOutcome { best, nodes };
+            }
+            i -= 1;
+            odo[i] += 1;
+            if odo[i] < order[i].len() {
+                break;
+            }
+            odo[i] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nlp::FrontPoint;
+    use crate::pragma::Design;
+    use crate::util::rng::Rng;
+
+    fn kf(name: &str, pts: &[(f64, f64, f64, f64)]) -> KernelFront {
+        // synthetic fronts need no real kernel: an empty design suffices
+        let k = crate::benchmarks::kernel_gemm(4, 4, 4, crate::ir::DType::F32);
+        KernelFront {
+            name: name.into(),
+            front: pts
+                .iter()
+                .map(|&(_, dsp, onchip, lut)| FrontPoint {
+                    design: Design::empty(&k),
+                    latency: 1.0,
+                    risk: 0.0,
+                    dsp,
+                    onchip_bytes: onchip,
+                    lut,
+                })
+                .collect(),
+            gflops: pts.iter().map(|p| p.0).collect(),
+            lower_bound: 0.0,
+            optimal: true,
+            solve_time_s: 0.0,
+            configs: 0,
+        }
+    }
+
+    fn tiny_device(dsp: u64, onchip: u64, lut: u64) -> Device {
+        let mut d = Device::u200();
+        d.dsp_total = dsp;
+        d.onchip_bytes = onchip;
+        d.lut_total = lut;
+        d
+    }
+
+    #[test]
+    fn picks_the_best_feasible_combination() {
+        // kernel A: fast point too big, small point fits
+        let a = kf("a", &[(10.0, 80.0, 10.0, 10.0), (4.0, 20.0, 10.0, 10.0)]);
+        let b = kf("b", &[(6.0, 60.0, 10.0, 10.0), (5.0, 30.0, 10.0, 10.0)]);
+        let dev = tiny_device(100, 1000, 1000);
+        let out = allocate(&[a, b], &dev);
+        let best = out.best.expect("feasible");
+        // a0+b0 = 140 dsp, a0+b1 = 110: over budget. a1+b0 = 80 dsp at
+        // 10 GF/s beats a1+b1 = 50 dsp at 9 GF/s.
+        assert_eq!(best.choice, vec![1, 0]);
+        assert!((best.gflops - 10.0).abs() < 1e-12);
+        assert!(best.dsp <= 100.0);
+    }
+
+    #[test]
+    fn empty_front_or_overflow_yields_none() {
+        let a = kf("a", &[]);
+        let b = kf("b", &[(1.0, 5.0, 5.0, 5.0)]);
+        let dev = tiny_device(100, 100, 100);
+        assert!(allocate(&[a, b.clone()], &dev).best.is_none());
+        let big = kf("big", &[(9.0, 500.0, 5.0, 5.0)]);
+        assert!(allocate(&[big, b], &dev).best.is_none());
+    }
+
+    #[test]
+    fn branch_and_bound_matches_brute_force_on_random_instances() {
+        let mut rng = Rng::new(0xA110C);
+        for case in 0..60u64 {
+            let nk = 1 + (rng.next_u64() % 3) as usize;
+            let ks: Vec<KernelFront> = (0..nk)
+                .map(|i| {
+                    let np = 1 + (rng.next_u64() % 8) as usize;
+                    let pts: Vec<(f64, f64, f64, f64)> = (0..np)
+                        .map(|_| {
+                            let r = |rng: &mut Rng, m: u64| (rng.next_u64() % m) as f64;
+                            (
+                                1.0 + r(&mut rng, 100),
+                                r(&mut rng, 120),
+                                r(&mut rng, 120),
+                                r(&mut rng, 120),
+                            )
+                        })
+                        .collect();
+                    kf(&format!("k{i}"), &pts)
+                })
+                .collect();
+            // budgets that sometimes bind, sometimes don't
+            let dev = tiny_device(
+                40 + rng.next_u64() % 200,
+                40 + rng.next_u64() % 200,
+                40 + rng.next_u64() % 200,
+            );
+            let bb = allocate(&ks, &dev);
+            let bf = allocate_brute(&ks, &dev);
+            assert_eq!(
+                bb.best.is_some(),
+                bf.best.is_some(),
+                "case {case}: feasibility disagreement"
+            );
+            if let (Some(x), Some(y)) = (&bb.best, &bf.best) {
+                assert_eq!(x.choice, y.choice, "case {case}");
+                assert_eq!(x.gflops.to_bits(), y.gflops.to_bits(), "case {case}");
+                assert!(x.dsp <= dev.dsp_total as f64, "case {case}");
+                assert!(x.onchip_bytes <= dev.onchip_bytes as f64, "case {case}");
+                assert!(x.lut <= dev.lut_total as f64, "case {case}");
+            }
+            assert!(
+                bb.nodes <= bf.nodes.max(1) * (nk as u64 + 1),
+                "case {case}: b&b expanded implausibly many nodes \
+                 ({} vs {} brute leaves)",
+                bb.nodes,
+                bf.nodes
+            );
+        }
+    }
+}

@@ -1,0 +1,219 @@
+//! System-level multi-kernel DSE (the `system` campaign mode).
+//!
+//! Real designs place several kernels on one device sharing
+//! DSP/BRAM/LUT. This module composes two layers:
+//!
+//! 1. **Per-kernel fronts** — each kernel gets an epsilon-dominance
+//!    Pareto front over `(latency, DSP, on-chip bytes, LUT)` from
+//!    [`nlp::solve_front`](crate::nlp::solve_front): the solver's
+//!    branch-and-bound run in exhaustive mode (incumbent guard
+//!    disabled) with every incumbent reduced through the
+//!    merge-order-invariant grid archive of [`crate::nlp::front`].
+//! 2. **Budget allocation** — [`allocate`] picks exactly one front
+//!    point per kernel maximizing total system throughput (GF/s, the
+//!    sum of each kernel's [`Analysis::gflops`] at its chosen latency)
+//!    subject to the summed DSP / on-chip-byte / LUT budget of the
+//!    device, by depth-first branch-and-bound with admissible
+//!    optimistic bounds. [`allocate_brute`] is the brute-force oracle
+//!    the tests cross-check against on small instances.
+//!
+//! Determinism: per-kernel fronts are bit-identical across `jobs`
+//! (solver reduction discipline), the archive is merge-order invariant,
+//! and the allocator's DFS order plus strict-improvement rule makes the
+//! chosen allocation a pure function of the fronts and the device.
+
+pub mod allocate;
+
+pub use allocate::{allocate, allocate_brute, AllocOutcome, Allocation};
+
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::nlp::{self, BatchEvaluator, FrontConfig, NlpProblem};
+use crate::poly::Analysis;
+
+/// Knobs of one system-mode run.
+#[derive(Clone, Copy, Debug)]
+pub struct SystemConfig {
+    /// Per-kernel front extraction parameters.
+    pub front: FrontConfig,
+    /// Per-kernel partitioning cap handed to [`NlpProblem::new`].
+    pub cap: u64,
+    /// Per-kernel solver timeout, seconds.
+    pub timeout_s: f64,
+    /// Solver worker threads per kernel (kernels run sequentially; the
+    /// solver parallelizes internally, keeping results `jobs`-invariant).
+    pub jobs: usize,
+}
+
+impl Default for SystemConfig {
+    fn default() -> SystemConfig {
+        SystemConfig {
+            front: FrontConfig::default(),
+            cap: u64::MAX,
+            timeout_s: 30.0,
+            jobs: 1,
+        }
+    }
+}
+
+/// One kernel's extracted front plus the per-point throughput the
+/// allocator maximizes over.
+#[derive(Clone, Debug)]
+pub struct KernelFront {
+    /// Kernel name (reporting key).
+    pub name: String,
+    /// The epsilon-dominance front, canonical order.
+    pub front: Vec<crate::nlp::FrontPoint>,
+    /// GF/s of each front point (parallel to `front`): the kernel's
+    /// exact flop count over the point's latency at device frequency.
+    pub gflops: Vec<f64>,
+    /// Proven latency lower bound from the solve.
+    pub lower_bound: f64,
+    /// Whether the per-kernel enumeration completed within budget.
+    pub optimal: bool,
+    /// Wall-clock of the per-kernel solve, seconds.
+    pub solve_time_s: f64,
+    /// Pipeline configurations processed (exactly-once accounting).
+    pub configs: u64,
+}
+
+/// Everything one system-mode run produces.
+#[derive(Clone, Debug)]
+pub struct SystemOutcome {
+    /// Per-kernel fronts, in input order.
+    pub kernels: Vec<KernelFront>,
+    /// The allocation search result (best choice + node count).
+    pub alloc: AllocOutcome,
+    /// Total wall-clock across the per-kernel solves, seconds.
+    pub solve_time_s: f64,
+}
+
+/// Extract one kernel's front: exhaustive solve ([`nlp::solve_front`])
+/// plus the per-point GF/s the allocator maximizes. Pure in its inputs
+/// — the coordinator fans these out across its pool and reassembles by
+/// index with no effect on the result.
+pub fn kernel_front(
+    name: &str,
+    k: &Kernel,
+    device: &Device,
+    cfg: &SystemConfig,
+    evaluator: &dyn BatchEvaluator,
+) -> KernelFront {
+    let a = Analysis::new(k);
+    let p = NlpProblem::new(k, &a, device, cfg.cap, false);
+    let fr = nlp::solve_front(&p, cfg.timeout_s, &cfg.front, evaluator, cfg.jobs);
+    let gflops = fr
+        .points
+        .iter()
+        .map(|pt| a.gflops(pt.latency, device.freq_hz))
+        .collect();
+    KernelFront {
+        name: name.to_string(),
+        front: fr.points,
+        gflops,
+        lower_bound: fr.lower_bound,
+        optimal: fr.optimal,
+        solve_time_s: fr.solve_time_s,
+        configs: fr.stats.configs,
+    }
+}
+
+/// Assemble per-kernel fronts (input order) into the final outcome by
+/// running the budget allocation once.
+pub fn assemble(fronts: Vec<KernelFront>, device: &Device) -> SystemOutcome {
+    let alloc = allocate(&fronts, device);
+    let solve_time_s = fronts.iter().map(|f| f.solve_time_s).sum();
+    SystemOutcome {
+        kernels: fronts,
+        alloc,
+        solve_time_s,
+    }
+}
+
+/// Run the full system mode: extract one front per kernel, then
+/// branch-and-bound the budget allocation. Kernels are solved in input
+/// order; the returned outcome is deterministic for fixed inputs
+/// (including across solver `jobs`).
+pub fn solve_system(
+    kernels: &[(String, Kernel)],
+    device: &Device,
+    cfg: &SystemConfig,
+    evaluator: &dyn BatchEvaluator,
+) -> SystemOutcome {
+    let fronts = kernels
+        .iter()
+        .map(|(name, k)| kernel_front(name, k, device, cfg, evaluator))
+        .collect();
+    assemble(fronts, device)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks;
+    use crate::ir::DType;
+    use crate::nlp::SymbolicEvaluator;
+
+    #[test]
+    fn two_kernel_system_allocates_within_budget() {
+        let dev = Device::u200();
+        let kernels = vec![
+            (
+                "gemm".to_string(),
+                benchmarks::kernel_gemm(16, 16, 16, DType::F32),
+            ),
+            (
+                "bicg".to_string(),
+                benchmarks::kernel_bicg(16, 16, DType::F32),
+            ),
+        ];
+        let cfg = SystemConfig {
+            cap: 64,
+            front: FrontConfig {
+                epsilon: 0.05,
+                max_points: 8,
+            },
+            ..Default::default()
+        };
+        let out = solve_system(&kernels, &dev, &cfg, &SymbolicEvaluator);
+        assert_eq!(out.kernels.len(), 2);
+        for kf in &out.kernels {
+            assert!(!kf.front.is_empty(), "{} produced an empty front", kf.name);
+            assert!(kf.front.len() <= 8);
+            assert_eq!(kf.front.len(), kf.gflops.len());
+        }
+        let best = out.alloc.best.as_ref().expect("u200 fits two small kernels");
+        assert_eq!(best.choice.len(), 2);
+        assert!(best.dsp <= dev.dsp_total as f64);
+        assert!(best.onchip_bytes <= dev.onchip_bytes as f64);
+        assert!(best.lut <= dev.lut_total as f64);
+        assert!(best.gflops > 0.0);
+    }
+
+    #[test]
+    fn system_outcome_is_jobs_invariant() {
+        let dev = Device::u200();
+        let kernels = vec![(
+            "gemm".to_string(),
+            benchmarks::kernel_gemm(12, 12, 12, DType::F32),
+        )];
+        let cfg1 = SystemConfig {
+            cap: 32,
+            ..Default::default()
+        };
+        let cfg4 = SystemConfig { jobs: 4, ..cfg1 };
+        let o1 = solve_system(&kernels, &dev, &cfg1, &SymbolicEvaluator);
+        let o4 = solve_system(&kernels, &dev, &cfg4, &SymbolicEvaluator);
+        let (k1, k4) = (&o1.kernels[0], &o4.kernels[0]);
+        assert_eq!(k1.front.len(), k4.front.len());
+        for (p1, p4) in k1.front.iter().zip(&k4.front) {
+            assert_eq!(p1.design, p4.design);
+            assert_eq!(p1.latency.to_bits(), p4.latency.to_bits());
+            assert_eq!(p1.lut.to_bits(), p4.lut.to_bits());
+        }
+        assert_eq!(
+            o1.alloc.best.as_ref().map(|b| b.choice.clone()),
+            o4.alloc.best.as_ref().map(|b| b.choice.clone())
+        );
+    }
+}

@@ -1,0 +1,203 @@
+//! System-mode integration suite (ISSUE 9 acceptance):
+//!
+//! * the epsilon-grid archive is **merge-order invariant** — archiving
+//!   any partition of a point set, unioning, and re-archiving yields
+//!   bit-identical fronts regardless of the partition or order (the
+//!   property `nlp::front`'s module docs argue; this suite proves it on
+//!   seeded random sets);
+//! * per-kernel front extraction is **bit-reproducible across `jobs ∈
+//!   {1, 2, 4, 8}`** — same designs, bit-equal metrics;
+//! * the budget allocation **matches the brute-force oracle** on
+//!   ≤ 3-kernel × ≤ 8-point instances built from *real* solver fronts,
+//!   and every returned allocation is budget-feasible.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::front::{archive, canonical_cmp};
+use nlp_dse::nlp::{self, FrontConfig, FrontPoint, NlpProblem, SymbolicEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+use nlp_dse::system::{allocate, allocate_brute, solve_system, KernelFront, SystemConfig};
+use nlp_dse::util::rng::Rng;
+
+const BUDGET_S: f64 = 300.0;
+
+fn assert_fronts_bit_identical(ctx: &str, a: &[FrontPoint], b: &[FrontPoint]) {
+    assert_eq!(a.len(), b.len(), "{ctx}: front size");
+    for (i, (p, q)) in a.iter().zip(b).enumerate() {
+        assert_eq!(p.design, q.design, "{ctx}: design #{i}");
+        assert_eq!(p.latency.to_bits(), q.latency.to_bits(), "{ctx}: latency #{i}");
+        assert_eq!(p.risk.to_bits(), q.risk.to_bits(), "{ctx}: risk #{i}");
+        assert_eq!(p.dsp.to_bits(), q.dsp.to_bits(), "{ctx}: dsp #{i}");
+        assert_eq!(
+            p.onchip_bytes.to_bits(),
+            q.onchip_bytes.to_bits(),
+            "{ctx}: onchip #{i}"
+        );
+        assert_eq!(p.lut.to_bits(), q.lut.to_bits(), "{ctx}: lut #{i}");
+    }
+}
+
+/// Random front points over a tiny design payload (the archive never
+/// looks inside the design; metrics drive everything).
+fn random_points(k: &nlp_dse::Kernel, n: usize, rng: &mut Rng) -> Vec<FrontPoint> {
+    (0..n)
+        .map(|_| {
+            let mut span = |lo: f64, hi: f64| lo + (rng.next_u64() % 256) as f64 / 256.0 * (hi - lo);
+            FrontPoint {
+                design: Design::empty(k),
+                latency: span(1e2, 1e5),
+                risk: span(0.0, 1.0),
+                dsp: span(8.0, 2048.0),
+                onchip_bytes: span(1e3, 2e6),
+                lut: span(1e3, 5e5),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_archive_is_invariant_under_arbitrary_merge_partitions() {
+    let k = benchmarks::kernel_gemm(4, 4, 4, DType::F32);
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(0xF407 + seed);
+        let n = 8 + (rng.next_u64() % 48) as usize;
+        let epsilon = [0.0, 0.02, 0.1][(rng.next_u64() % 3) as usize];
+        let points = random_points(&k, n, &mut rng);
+        let whole = archive(points.clone(), epsilon);
+        // split into 1..=4 random chunks, archive each, merge in a
+        // rotated order, re-archive: must be bit-identical to the
+        // single-shot archive of the full set
+        let chunks = 1 + (rng.next_u64() % 4) as usize;
+        let mut parts: Vec<Vec<FrontPoint>> = vec![Vec::new(); chunks];
+        for p in points {
+            let c = (rng.next_u64() % chunks as u64) as usize;
+            parts[c].push(p);
+        }
+        let rot = (rng.next_u64() % chunks as u64) as usize;
+        parts.rotate_left(rot);
+        let mut merged = Vec::new();
+        for part in parts {
+            merged.extend(archive(part, epsilon));
+        }
+        let remerged = archive(merged, epsilon);
+        assert_fronts_bit_identical(
+            &format!("seed {seed} eps {epsilon} chunks {chunks} rot {rot}"),
+            &whole,
+            &remerged,
+        );
+        // the archive is canonically sorted and duplicate-free
+        for w in whole.windows(2) {
+            assert_eq!(
+                canonical_cmp(&w[0], &w[1]),
+                std::cmp::Ordering::Less,
+                "seed {seed}: canonical order must be strict"
+            );
+        }
+    }
+}
+
+#[test]
+fn front_extraction_is_bit_reproducible_across_jobs() {
+    let dev = Device::u200();
+    let fc = FrontConfig {
+        epsilon: 0.05,
+        max_points: 8,
+    };
+    for name in ["gemm", "bicg"] {
+        let k = benchmarks::lookup(name, Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let p = NlpProblem::new(&k, &a, &dev, 64, false);
+        let base = nlp::solve_front(&p, BUDGET_S, &fc, &SymbolicEvaluator, 1);
+        assert!(base.optimal, "{name}: front solve must complete in budget");
+        assert!(!base.points.is_empty(), "{name}: front must be non-empty");
+        assert!(base.points.len() <= fc.max_points);
+        for jobs in [2usize, 4, 8] {
+            let r = nlp::solve_front(&p, BUDGET_S, &fc, &SymbolicEvaluator, jobs);
+            assert_eq!(r.jobs, jobs);
+            assert_eq!(
+                r.stats.configs, base.stats.configs,
+                "{name} jobs={jobs}: exhaustive accounting"
+            );
+            assert_fronts_bit_identical(&format!("{name} jobs={jobs}"), &base.points, &r.points);
+        }
+    }
+}
+
+/// Shrink a real solver front to at most `cap` points so brute force
+/// stays cheap; keeps canonical order and the gflops pairing.
+fn truncated(mut kf: KernelFront, cap: usize) -> KernelFront {
+    kf.front.truncate(cap);
+    kf.gflops.truncate(cap);
+    kf
+}
+
+#[test]
+fn allocation_matches_brute_force_on_real_fronts() {
+    let dev = Device::u200();
+    let cfg = SystemConfig {
+        front: FrontConfig {
+            epsilon: 0.02,
+            max_points: 8,
+        },
+        cap: 64,
+        timeout_s: BUDGET_S,
+        jobs: 1,
+    };
+    let names = ["gemm", "bicg", "atax"];
+    let kernels: Vec<(String, nlp_dse::Kernel)> = names
+        .iter()
+        .map(|n| {
+            (
+                n.to_string(),
+                benchmarks::lookup(n, Size::Small, DType::F32).unwrap(),
+            )
+        })
+        .collect();
+    let out = solve_system(&kernels, &dev, &cfg, &SymbolicEvaluator);
+    assert_eq!(out.kernels.len(), 3);
+    for kf in &out.kernels {
+        assert!(kf.optimal, "{}: per-kernel solve must complete", kf.name);
+        assert!(!kf.front.is_empty() && kf.front.len() <= 8, "{}", kf.name);
+    }
+
+    // cross-check b&b against the oracle on every subset of the three
+    // real fronts, at the full budget and at artificially tight ones
+    let tight = {
+        let mut d = dev.clone();
+        d.dsp_total /= 8;
+        d.onchip_bytes /= 8;
+        d.lut_total /= 8;
+        d
+    };
+    for mask in 1u32..8 {
+        let subset: Vec<KernelFront> = out
+            .kernels
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| mask & (1 << i) != 0)
+            .map(|(_, kf)| truncated(kf.clone(), 8))
+            .collect();
+        for d in [&dev, &tight] {
+            let bb = allocate(&subset, d);
+            let bf = allocate_brute(&subset, d);
+            let ctx = format!("mask {mask} dev {}", d.dsp_total);
+            match (&bb.best, &bf.best) {
+                (None, None) => {}
+                (Some(b), Some(f)) => {
+                    assert_eq!(b.choice, f.choice, "{ctx}: choice");
+                    assert_eq!(b.gflops.to_bits(), f.gflops.to_bits(), "{ctx}: gflops");
+                    assert!(b.dsp <= d.dsp_total as f64, "{ctx}: dsp budget");
+                    assert!(b.onchip_bytes <= d.onchip_bytes as f64, "{ctx}: onchip");
+                    assert!(b.lut <= d.lut_total as f64, "{ctx}: lut budget");
+                }
+                (bb, bf) => panic!("{ctx}: feasibility diverged ({bb:?} vs {bf:?})"),
+            }
+            assert!(
+                bb.nodes <= bf.nodes.max(1) * (subset.len() as u64 + 1),
+                "{ctx}: b&b explored more than brute force"
+            );
+        }
+    }
+}

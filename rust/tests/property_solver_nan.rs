@@ -1,0 +1,172 @@
+//! NaN-robustness of the NLP solver (ISSUE 9 bugfix acceptance).
+//!
+//! A mispredicting learned evaluator (or a model bug) can hand the
+//! solver `NaN` latencies. The old ordering used
+//! `partial_cmp(..).unwrap()`, which panicked on the first NaN — and a
+//! worker panic poisoned the shared queue/incumbent locks, cascading
+//! into opaque `PoisonError` panics on every other worker. The fix:
+//!
+//! * every ordering site uses [`f64::total_cmp`], under which NaN ranks
+//!   *after* `+inf` — a NaN-scored design loses to every real design
+//!   and can never displace a finite incumbent;
+//! * lock acquisitions recover the guard from a poisoned mutex
+//!   (`unwrap_or_else(|p| p.into_inner())`), and `solve_jobs` re-raises
+//!   the *first* worker panic with its original payload instead of a
+//!   `PoisonError` cascade.
+//!
+//! The suites drive generated kernels (seeded, bit-replayable) through
+//! an evaluator that deterministically NaN-poisons a slice of designs,
+//! asserting the solve completes, schedules every pipeline
+//! configuration exactly once, and stays bit-identical across worker
+//! team sizes.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::frontend::{self, GenConfig};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::DType;
+use nlp_dse::nlp::{self, BatchEvaluator, NlpProblem, SolveResult, SymbolicEvaluator};
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::Design;
+
+const BUDGET_S: f64 = 300.0;
+const TOPK: usize = 4;
+
+/// Wraps the symbolic evaluator and replaces the latency of a
+/// deterministic subset of designs with NaN: a design is poisoned when
+/// the byte-sum of its fingerprint is `0 (mod modulus)` — `modulus = 1`
+/// poisons everything, larger values poison a pseudo-random slice, and
+/// the rule is a pure function of the design so serial and parallel
+/// runs see identical poison.
+struct NanEvaluator {
+    modulus: u64,
+}
+
+fn poisoned(d: &Design, modulus: u64) -> bool {
+    let sum: u64 = d.fingerprint().bytes().map(u64::from).sum();
+    sum % modulus == 0
+}
+
+impl BatchEvaluator for NanEvaluator {
+    fn eval_batch(&self, p: &NlpProblem, designs: &[Design]) -> Vec<(f64, f64)> {
+        SymbolicEvaluator
+            .eval_batch(p, designs)
+            .into_iter()
+            .zip(designs)
+            .map(|((lat, dsp), d)| {
+                if poisoned(d, self.modulus) {
+                    (f64::NAN, dsp)
+                } else {
+                    (lat, dsp)
+                }
+            })
+            .collect()
+    }
+}
+
+fn assert_bit_identical(ctx: &str, serial: &SolveResult, par: &SolveResult) {
+    assert_eq!(serial.optimal, par.optimal, "{ctx}: optimal flag");
+    assert_eq!(
+        serial.lower_bound.to_bits(),
+        par.lower_bound.to_bits(),
+        "{ctx}: lower bound"
+    );
+    assert_eq!(serial.designs.len(), par.designs.len(), "{ctx}: top-k size");
+    for (i, ((d1, o1), (d2, o2))) in serial.designs.iter().zip(&par.designs).enumerate() {
+        assert_eq!(d1.fingerprint(), d2.fingerprint(), "{ctx}: design #{i}");
+        // to_bits compares NaN payloads too: both sides inject the same
+        // constant NaN, so even poisoned entries must agree exactly
+        assert_eq!(o1.to_bits(), o2.to_bits(), "{ctx}: objective #{i}");
+    }
+}
+
+#[test]
+fn prop_nan_evaluator_never_panics_and_keeps_parallel_parity() {
+    let dev = Device::u200();
+    for seed in 0..6u64 {
+        let k = frontend::generate(&GenConfig::with_seed(seed));
+        let a = Analysis::new(&k);
+        let p = NlpProblem::new(&k, &a, &dev, 64, false);
+        let n_configs = p.space.pipeline_configs.len() as u64;
+        for modulus in [1u64, 3] {
+            let eval = NanEvaluator { modulus };
+            let ctx = format!("gen seed {seed} modulus {modulus}");
+            let serial = nlp::solve_jobs(&p, BUDGET_S, TOPK, &eval, 1);
+            assert!(serial.optimal, "{ctx}: must complete in budget");
+            assert_eq!(
+                serial.stats.configs, n_configs,
+                "{ctx}: every pipeline configuration exactly once"
+            );
+            // NaN ranks last: any finite-objective design must sort
+            // before every NaN one in the returned top-k
+            let first_nan = serial.designs.iter().position(|(_, o)| o.is_nan());
+            if let Some(i) = first_nan {
+                assert!(
+                    serial.designs[i..].iter().all(|(_, o)| o.is_nan()),
+                    "{ctx}: NaN designs must form a suffix of the top-k"
+                );
+            }
+            if modulus == 1 {
+                assert!(
+                    serial.designs.iter().all(|(_, o)| o.is_nan()),
+                    "{ctx}: all-NaN evaluator can only yield NaN-scored designs"
+                );
+            }
+            let par = nlp::solve_jobs(&p, BUDGET_S, TOPK, &eval, 4);
+            assert_eq!(par.stats.configs, n_configs, "{ctx}: parallel accounting");
+            assert_bit_identical(&ctx, &serial, &par);
+        }
+    }
+}
+
+#[test]
+fn nan_poison_on_a_registry_kernel_cannot_displace_finite_incumbents() {
+    // gemm with a partial poison: the solve must still find a finite
+    // best design, identical to what the unpoisoned evaluator finds
+    // among the surviving (non-poisoned) candidates — in particular the
+    // best finite objective can never be NaN.
+    let dev = Device::u200();
+    let k = benchmarks::lookup("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let p = NlpProblem::new(&k, &a, &dev, 64, false);
+    let r = nlp::solve_jobs(&p, BUDGET_S, TOPK, &NanEvaluator { modulus: 3 }, 2);
+    assert!(r.optimal);
+    let (_, best) = r.best().expect("a finite design must survive");
+    assert!(
+        best.is_finite(),
+        "the top design must be finite, got {best}"
+    );
+}
+
+/// An evaluator whose panic message must survive the worker team: the
+/// fix re-raises the first worker panic with its original payload, so
+/// the caller sees `evaluator exploded`, not a `PoisonError`.
+struct PanickingEvaluator;
+
+impl BatchEvaluator for PanickingEvaluator {
+    fn eval_batch(&self, _p: &NlpProblem, _designs: &[Design]) -> Vec<(f64, f64)> {
+        panic!("evaluator exploded");
+    }
+}
+
+#[test]
+fn worker_panics_propagate_the_original_payload_not_a_poison_error() {
+    let dev = Device::u200();
+    let k = benchmarks::lookup("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let p = NlpProblem::new(&k, &a, &dev, 16, false);
+    for jobs in [1usize, 2] {
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            nlp::solve_jobs(&p, BUDGET_S, TOPK, &PanickingEvaluator, jobs)
+        }))
+        .expect_err("a panicking evaluator must abort the solve");
+        let msg = err
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| err.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(
+            msg.contains("evaluator exploded"),
+            "jobs={jobs}: the original panic payload must propagate, got `{msg}`"
+        );
+    }
+}
