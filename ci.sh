@@ -30,6 +30,7 @@ echo "==> fuzz smoke (FUZZ_SMOKE=1 — generative differential suites at bounded
 FUZZ_SMOKE=1 cargo test -q --test property_frontend_fuzz -- --nocapture
 FUZZ_SMOKE=1 cargo test -q --test property_fingerprint -- --nocapture
 FUZZ_SMOKE=1 cargo test -q --test property_deps -- --nocapture
+FUZZ_SMOKE=1 cargo test -q --test property_surrogate -- --nocapture
 
 echo "==> transform fuzz smoke (TRANSFORM_FUZZ=1 — full-width variant suites at bounded N)"
 # the transform suites self-cap at 12 kernels under plain `cargo test`;
@@ -128,6 +129,29 @@ if [ "${SYSTEM_SMOKE:-1}" != "0" ]; then
   echo "    system smoke passed (CLI verdict + serve miss->hit replay, port $PORT)"
 fi
 
+echo "==> surrogate smoke (SURROGATE_SMOKE=1 — train an artifact, rank-cut a DSE with it)"
+# End-to-end check of the learned-surrogate path through the release
+# binary: `train` must fit and persist a versioned artifact and report
+# its held-out rank correlation, and `dse --engine surrogate` must load
+# that artifact and finish with an exact-scored best design. Skip with
+# SURROGATE_SMOKE=0.
+if [ "${SURROGATE_SMOKE:-1}" != "0" ]; then
+  SUR_MODEL=$(mktemp --suffix=.json)
+  TRAIN_OUT=$(target/release/nlp-dse train --model-file "$SUR_MODEL" --kernels 3 --designs 8)
+  echo "$TRAIN_OUT" | grep -q 'holdout spearman' \
+    || { echo "ci: train printed no holdout rank correlation:" >&2; echo "$TRAIN_OUT" >&2; exit 1; }
+  grep -q '"kind": *"nlp-dse-surrogate-ridge"' "$SUR_MODEL" \
+    || { echo "ci: train did not persist a surrogate artifact at $SUR_MODEL" >&2; exit 1; }
+  SUR_OUT=$(target/release/nlp-dse dse --kernel mvt --size S --engine surrogate \
+    --model-file "$SUR_MODEL" --verify-fraction 0.5 --jobs 2)
+  echo "$SUR_OUT" | grep -q 'engine `surrogate`' \
+    || { echo "ci: surrogate DSE named the wrong engine:" >&2; echo "$SUR_OUT" >&2; exit 1; }
+  echo "$SUR_OUT" | grep -q 'best design' \
+    || { echo "ci: surrogate DSE reported no best design:" >&2; echo "$SUR_OUT" >&2; exit 1; }
+  rm -f "$SUR_MODEL"
+  echo "    surrogate smoke passed (artifact trained, rank-cut DSE found a best design)"
+fi
+
 echo "==> bench smoke (smallest sizes, BENCH_MS=25 — benches can't rot)"
 # Stash the committed BENCH_solver.json before the fresh run overwrites
 # it: bench_nlp_solver compares its fresh configs/s per tag against the
@@ -140,7 +164,7 @@ if [ -f BENCH_solver.json ]; then
   cp BENCH_solver.json "$BENCH_STASH"
 fi
 rm -f BENCH_solver.json  # a stale file must not satisfy the emission check
-for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform bench_system; do
+for bench in bench_tables bench_model_eval bench_nlp_solver bench_space_enum bench_runtime_batch bench_codegen bench_serve bench_transform bench_system bench_surrogate; do
   if [ "$bench" = bench_nlp_solver ] && [ -n "$BENCH_STASH" ]; then
     BENCH_SMOKE=1 BENCH_MS=25 BENCH_BASELINE="$BENCH_STASH" \
       BENCH_TOLERANCE="${BENCH_TOLERANCE:-20}" cargo bench --bench "$bench"

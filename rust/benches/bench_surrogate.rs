@@ -1,0 +1,123 @@
+//! Surrogate-engine benchmarks (ISSUE 10): what training costs, how
+//! much faster ranking is than exact scoring, and what the rank cut
+//! buys on a whole ladder.
+//!
+//! Cases:
+//!
+//! * `train/...` — closed-form ridge training end to end (corpus
+//!   sampling + labeling + fit), throughput in labeled samples/s;
+//! * `predict/...` vs `exact-score/...` — ranking a solver-wave-sized
+//!   design set with the surrogate against scoring it with the exact
+//!   compiled model: the per-candidate speedup the rank cut monetizes;
+//! * `exact-ladder/...` vs `rank-cut/...` — the `surrogate` engine at
+//!   `verify_fraction = 1.0` (bit-identical to the `nlpdse` ladder) and
+//!   at `0.35`: the end-to-end wall-clock difference.
+//!
+//! `BENCH_SMOKE=1` shrinks the matrix to mvt-S and the tiny corpus (the
+//! ci.sh bench-smoke loop), keeping the bench compiling and honest.
+
+use nlp_dse::benchmarks::{self, Size};
+use nlp_dse::engine::{Evaluator, Explorer};
+use nlp_dse::hls::Device;
+use nlp_dse::ir::{DType, LoopId};
+use nlp_dse::model::BoundModel;
+use nlp_dse::poly::Analysis;
+use nlp_dse::pragma::{space, Design, Space};
+use nlp_dse::surrogate::{sample_corpus, train, SurrogateConfig, TrainConfig};
+use nlp_dse::util::bench::{black_box, Bench};
+use nlp_dse::util::rng::Rng;
+
+fn main() {
+    let smoke = std::env::var("BENCH_SMOKE").is_ok();
+    let mut b = Bench::new("surrogate");
+
+    // --- training throughput -------------------------------------------
+    let tcfg = if smoke {
+        TrainConfig {
+            kernels: 2,
+            designs: 6,
+            ..TrainConfig::default()
+        }
+    } else {
+        TrainConfig::micro()
+    };
+    let n_samples = sample_corpus(&tcfg).xs.len() as f64;
+    b.bench_with_items(
+        &format!("train/k={} d={}", tcfg.kernels, tcfg.designs),
+        n_samples,
+        || {
+            black_box(train(&tcfg).model.content_hash());
+        },
+    );
+
+    // --- rank vs exact scoring over one solver-wave-sized set ----------
+    let model = train(&tcfg).model;
+    let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+    let a = Analysis::new(&k);
+    let dev = Device::u200();
+    let sp = Space::new(&k, &a);
+    let mut rng = Rng::new(7);
+    let wave = if smoke { 64 } else { 256 };
+    let designs: Vec<Design> = (0..wave)
+        .map(|_| {
+            let pcfg =
+                &sp.pipeline_configs[rng.range(0, sp.pipeline_configs.len() as u64) as usize];
+            let drawn: Vec<u64> = (0..k.n_loops())
+                .map(|i| {
+                    let menu = sp.ufs(LoopId(i as u32), &a, dev.max_array_partition);
+                    if menu.is_empty() {
+                        1
+                    } else {
+                        menu[rng.range(0, menu.len() as u64) as usize]
+                    }
+                })
+                .collect();
+            space::materialize(&k, &a, pcfg, &|l: LoopId| drawn[l.0 as usize], &|_| 1)
+        })
+        .collect();
+
+    b.bench_with_items(&format!("predict/gemm-S x{wave}"), wave as f64, || {
+        let mut acc = 0.0;
+        for d in &designs {
+            acc += model.predict(&k, &a, &dev, d).unwrap_or(0.0);
+        }
+        black_box(acc);
+    });
+
+    let bound = BoundModel::build(&k, &a, &dev);
+    let compiled = bound.compile();
+    let mut scratch = compiled.scratch();
+    b.bench_with_items(&format!("exact-score/gemm-S x{wave}"), wave as f64, || {
+        let mut acc = 0.0;
+        for d in &designs {
+            acc += compiled.evaluate(d, &mut scratch).total_cycles;
+        }
+        black_box(acc);
+    });
+
+    // --- whole-ladder wall clock: exact vs rank-cut ---------------------
+    let dse_names: &[&str] = if smoke { &["mvt"] } else { &["mvt", "gemm"] };
+    for name in dse_names {
+        for (case, frac) in [("exact-ladder", 1.0), ("rank-cut", 0.35)] {
+            let sur = SurrogateConfig {
+                model: Some(model.clone()),
+                verify_fraction: frac,
+                ..SurrogateConfig::default()
+            };
+            b.bench(&format!("{case}/{name}-S"), || {
+                let out = Explorer::kernel(name, Size::Small)
+                    .unwrap()
+                    .evaluator(Evaluator::sym())
+                    .jobs(1)
+                    .surrogate_config(sur.clone())
+                    .engine("surrogate")
+                    .unwrap()
+                    .run()
+                    .unwrap();
+                black_box(out.best_gflops);
+            });
+        }
+    }
+
+    b.finish();
+}

@@ -5,6 +5,8 @@
 //! nlp-dse figure --id 2|3|4|5|6 [--scope ...] [--kernel K --size M]
 //! nlp-dse dse --kernel 2mm --size M [--engine NAME] [--xla|--sym] [--prune-bound] [--jobs N]
 //!             [--transform [--max-variants N] [--max-depth D] [--max-perm-loops P]]
+//!             [--model-file m.json] [--verify-fraction F]   (engine `surrogate` only)
+//! nlp-dse train --model-file m.json [--seed S] [--kernels N] [--designs N] [--lambda L]
 //! nlp-dse solve --kernel gemm --size S [--cap 512] [--fine] [--xla|--sym] [--jobs N]
 //! nlp-dse system --kernels gemm,bicg [--size S] [--epsilon 0.02] [--max-points 16]
 //!                [--cap 512] [--device u200] [--tsv]
@@ -85,6 +87,7 @@ pub fn run(argv: &[&str]) -> Result<()> {
         "table" => cmd_table(&mut args)?,
         "figure" => cmd_figure(&mut args)?,
         "dse" => cmd_dse(&mut args)?,
+        "train" => cmd_train(&mut args)?,
         "solve" => cmd_solve(&mut args)?,
         "system" => cmd_system(&mut args)?,
         "bound" => cmd_bound(&mut args)?,
@@ -118,6 +121,12 @@ fn help() -> String {
                     [--transform [--max-variants N] [--max-depth D] [--max-perm-loops P]]\n\
                     (--transform: legality-checked interchange/distribution/fusion\n\
                      variants × pragma search, bound-pruned per variant)\n\
+                    [--model-file m.json] [--verify-fraction F] (engine `surrogate`:\n\
+                     rank-cut each solver wave by the trained artifact's prediction,\n\
+                     re-verify the reported best with the exact model)\n\
+           train    --model-file FILE [--seed S] [--kernels N] [--designs N] [--lambda L]\n\
+                    (fit the latency surrogate on a seeded generated corpus and save\n\
+                     the versioned JSON artifact for dse/serve --engine surrogate)\n\
            solve    --kernel K --size S [--cap N] [--fine] [--xla|--sym]\n\
            system   --kernels k1,k2,... [--size S] [--epsilon E] [--max-points N]\n\
                     [--cap N] [--device u200] [--tsv]\n\
@@ -368,6 +377,7 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
         return cmd_dse_transform(args);
     }
     let engine = args.opt("engine").unwrap_or_else(|| "nlpdse".into());
+    let surrogate_cfg = parse_surrogate_config(args, &engine)?;
     let spec = kernel_spec(args)?;
     let size = parse_size(args)?.unwrap_or(Size::Medium);
     let dtype = parse_dtype(args)?;
@@ -381,9 +391,85 @@ fn cmd_dse(args: &mut Args) -> Result<String> {
     let explorer = Explorer::custom(spec.kernel(size, dtype)?)
         .evaluator(evaluator)
         .dse_config(dse_cfg)
+        .surrogate_config(surrogate_cfg)
         .engine(&engine)?;
     let outcome = explorer.run()?;
     Ok(outcome.render(explorer.kernel_ref()))
+}
+
+/// `--model-file` / `--verify-fraction`: the `surrogate` engine's knobs.
+/// The artifact is loaded (and schema-checked) here — the engine itself
+/// is infallible — and both flags reject other engines instead of being
+/// silently ignored.
+fn parse_surrogate_config(
+    args: &mut Args,
+    engine: &str,
+) -> Result<crate::surrogate::SurrogateConfig> {
+    let mut cfg = crate::surrogate::SurrogateConfig::default();
+    let model_file = args.opt("model-file");
+    let verify_fraction = args.opt("verify-fraction");
+    if engine != "surrogate" && (model_file.is_some() || verify_fraction.is_some()) {
+        bail!("--model-file/--verify-fraction apply to --engine surrogate only");
+    }
+    if let Some(p) = model_file {
+        cfg.model = Some(crate::surrogate::SurrogateModel::load(std::path::Path::new(&p))?);
+    }
+    if let Some(v) = verify_fraction {
+        let f: f64 = v.parse()?;
+        if !(0.0..=1.0).contains(&f) {
+            bail!("--verify-fraction must be in [0, 1] (1.0 = the exact ladder)");
+        }
+        cfg.verify_fraction = f;
+    }
+    Ok(cfg)
+}
+
+/// `train`: fit the latency surrogate on a seeded generated corpus and
+/// persist it as a versioned JSON artifact — the input to
+/// `dse --engine surrogate --model-file` and the serve daemon's
+/// `model_file` request field. (`--model-file` is the artifact
+/// destination; `--out`, as everywhere, captures this summary.)
+fn cmd_train(args: &mut Args) -> Result<String> {
+    let path = args.opt("model-file").ok_or_else(|| {
+        anyhow!("--model-file <path.json> required (the artifact destination)")
+    })?;
+    let mut cfg = crate::surrogate::TrainConfig::default();
+    if let Some(v) = args.opt("seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = args.opt("kernels") {
+        cfg.kernels = v.parse()?;
+        if cfg.kernels == 0 {
+            bail!("--kernels must be >= 1");
+        }
+    }
+    if let Some(v) = args.opt("designs") {
+        cfg.designs = v.parse()?;
+        if cfg.designs == 0 {
+            bail!("--designs must be >= 1");
+        }
+    }
+    if let Some(v) = args.opt("lambda") {
+        cfg.lambda = v.parse()?;
+        if !cfg.lambda.is_finite() || cfg.lambda <= 0.0 {
+            bail!("--lambda must be a positive number");
+        }
+    }
+    let t = crate::surrogate::train(&cfg);
+    t.model.save(std::path::Path::new(&path))?;
+    Ok(format!(
+        "surrogate trained: seed {} — {} kernels, {} train + {} holdout samples ({} skipped)\n\
+         holdout spearman: {:.4}\n\
+         artifact: {path} (version {}, hash {:016x})\n",
+        cfg.seed,
+        t.model.n_kernels,
+        t.n_train,
+        t.n_holdout,
+        t.skipped,
+        t.holdout_spearman,
+        t.model.version,
+        t.model.content_hash()
+    ))
 }
 
 /// `--max-variants/--max-depth/--max-perm-loops` over the defaults.
@@ -1352,6 +1438,60 @@ mod tests {
         assert!(index.contains("nlpdse"), "{index}");
         assert!(index.contains(&rows[0].path), "{index}");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn train_then_surrogate_dse_via_model_file() {
+        let dir = std::env::temp_dir().join("nlp_dse_cli_train_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let model = dir.join("m.json");
+        let model_s = model.to_str().unwrap().to_string();
+        let sum = dir.join("train.txt");
+        let sum_s = sum.to_str().unwrap().to_string();
+        run(&[
+            "train", "--model-file", &model_s, "--kernels", "2", "--designs", "6", "--out",
+            &sum_s,
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&sum).unwrap();
+        assert!(text.contains("holdout spearman"), "{text}");
+        assert!(text.contains("hash"), "{text}");
+        // the artifact drives a surrogate DSE end to end
+        let out = dir.join("dse.txt");
+        let out_s = out.to_str().unwrap().to_string();
+        run(&[
+            "dse", "--kernel", "gemm", "--size", "S", "--engine", "surrogate", "--model-file",
+            &model_s, "--verify-fraction", "0.5", "--jobs", "1", "--out", &out_s,
+        ])
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains("engine `surrogate`"), "{text}");
+        assert!(text.contains("best design"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn surrogate_flags_reject_other_engines_and_bad_values() {
+        let err =
+            run(&["dse", "--kernel", "gemm", "--size", "S", "--verify-fraction", "0.5"])
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("surrogate"), "{err:#}");
+        let err = run(&[
+            "dse", "--kernel", "gemm", "--size", "S", "--engine", "surrogate",
+            "--verify-fraction", "1.5",
+        ])
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("[0, 1]"), "{err:#}");
+        let err = run(&["train"]).unwrap_err();
+        assert!(format!("{err:#}").contains("--model-file"), "{err:#}");
+    }
+
+    #[test]
+    fn dse_unknown_engine_error_lists_surrogate() {
+        let err = run(&["dse", "--kernel", "gemm", "--engine", "nope"]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown engine"), "{msg}");
+        assert!(msg.contains("surrogate"), "{msg}");
     }
 
     #[test]

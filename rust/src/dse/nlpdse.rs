@@ -199,7 +199,16 @@ pub fn run_nlp_dse_with_bound_seeded(
     run_ladder(k, a, dev, cfg, evaluator, bound, compiled, seeds)
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Per-solve candidate screen: given one sub-space solve's ascending
+/// `(design, lower_bound)` list, return a keep-mask — `true` entries are
+/// synthesized exactly as in the plain ladder, `false` entries are
+/// recorded as pruned steps and **not** synthesized (and not inserted
+/// into the dedup set, so a later rung may still re-propose and
+/// synthesize the same configuration). An all-`true` mask reproduces
+/// the unfiltered ladder bit-identically by construction — the property
+/// the surrogate engine's verify-fraction-1.0 differential test pins.
+pub(crate) type RungFilter<'a> = dyn Fn(&[(Design, f64)]) -> Vec<bool> + 'a;
+
 fn run_ladder(
     k: &Kernel,
     a: &Analysis,
@@ -209,6 +218,25 @@ fn run_ladder(
     bound: std::sync::Arc<crate::model::sym::BoundModel>,
     compiled: std::sync::Arc<crate::model::sym::CompiledModel>,
     seeds: &[Design],
+) -> DseOutcome {
+    run_ladder_filtered(k, a, dev, cfg, evaluator, bound, compiled, seeds, None)
+}
+
+/// [`run_ladder`] with an optional per-solve candidate screen — the
+/// shared substrate of the exact ladder and the surrogate engine's
+/// ranked exploration (`surrogate/`). Crate-internal: external callers
+/// go through the `run_nlp_dse*` wrappers or the engine registry.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_ladder_filtered(
+    k: &Kernel,
+    a: &Analysis,
+    dev: &Device,
+    cfg: &DseConfig,
+    evaluator: &dyn BatchEvaluator,
+    bound: std::sync::Arc<crate::model::sym::BoundModel>,
+    compiled: std::sync::Arc<crate::model::sym::CompiledModel>,
+    seeds: &[Design],
+    filter: Option<&RungFilter<'_>>,
 ) -> DseOutcome {
     let oracle = HlsOracle {
         device: dev.clone(),
@@ -372,13 +400,45 @@ fn run_ladder(
                 break 'outer;
             }
 
+            // the optional screen sees the whole solve at once (rank
+            // context); a short mask keeps the unlisted tail
+            let keep: Vec<bool> = match filter {
+                Some(f) => {
+                    let mut m = f(&sol.designs);
+                    m.resize(sol.designs.len(), true);
+                    m
+                }
+                None => Vec::new(),
+            };
             let bans_before = coarse_banned.len();
-            for (design, lb) in &sol.designs {
+            for (idx, (design, lb)) in sol.designs.iter().enumerate() {
                 let lb = *lb;
                 if lb >= min_lat {
                     break; // runners-up are sorted ascending
                 }
                 let fp = design.fingerprint();
+                if !keep.is_empty() && !keep[idx] {
+                    // screened out before synthesis (e.g. surrogate rank
+                    // cut): recorded like a lower-bound prune, but kept
+                    // out of `seen` so a later sub-space may still
+                    // synthesize this configuration
+                    trace.push(StepRecord {
+                        step,
+                        cap,
+                        fine_only,
+                        lower_bound: lb,
+                        measured: None,
+                        gflops: 0.0,
+                        valid: false,
+                        timeout: false,
+                        pragmas_applied: false,
+                        flattened: false,
+                        pruned: true,
+                        dedup: false,
+                        fingerprint: fp,
+                    });
+                    continue;
+                }
                 if !seen.insert(fp.clone()) {
                     // identical configuration already synthesized (Fig 6's
                     // red steps): reuse the result, no synthesis cost

@@ -22,6 +22,7 @@ use crate::nlp::{
 };
 use crate::poly::Analysis;
 use crate::runtime::{default_artifact_dir, XlaEvaluator};
+use crate::surrogate::SurrogateConfig;
 use anyhow::{bail, Result};
 use std::sync::Arc;
 
@@ -255,6 +256,13 @@ impl Explorer {
     /// Set the random-search baseline parameters.
     pub fn random_config(mut self, c: RandomConfig) -> Explorer {
         self.tuning.random = c;
+        self
+    }
+
+    /// Set the learned-surrogate engine parameters (the `surrogate`
+    /// engine reads the NLP ladder settings from [`Explorer::dse_config`]).
+    pub fn surrogate_config(mut self, c: SurrogateConfig) -> Explorer {
+        self.tuning.surrogate = c;
         self
     }
 

@@ -60,6 +60,7 @@ use crate::ir::Kernel;
 use crate::model::sym::BoundModel;
 use crate::nlp::BatchEvaluator;
 use crate::poly::Analysis;
+use crate::surrogate::SurrogateConfig;
 
 /// Everything an engine may consume: the substrate the session facade
 /// (or the coordinator) owns on the engine's behalf.
@@ -112,4 +113,7 @@ pub struct EngineTuning {
     pub harp: HarpConfig,
     /// Random-search baseline parameters.
     pub random: RandomConfig,
+    /// Learned-surrogate engine parameters (the `surrogate` engine also
+    /// reads `dse` for its underlying ladder).
+    pub surrogate: SurrogateConfig,
 }

@@ -9,6 +9,7 @@ use crate::baselines::{AutoDseOutcome, HarpOutcome};
 use crate::dse::{DseOutcome, StepRecord};
 use crate::ir::Kernel;
 use crate::pragma::Design;
+use crate::surrogate::SurrogateOutcome;
 use crate::transform::TransformOutcome;
 
 /// What happened to one explored candidate.
@@ -66,6 +67,9 @@ pub enum EngineDetail {
     /// The full `(variant × pragma)` transform-DSE record (boxed — it
     /// carries the winning kernel and its whole trace).
     Transform(Box<TransformOutcome>),
+    /// The learned-surrogate record (boxed — it wraps a whole ladder
+    /// trace plus model provenance and the exact re-verification).
+    Surrogate(Box<SurrogateOutcome>),
     /// Engines with no legacy record (e.g. `random`, third-party).
     Generic,
 }
@@ -135,6 +139,14 @@ impl Exploration {
     pub fn as_transform(&self) -> Option<&TransformOutcome> {
         match &self.detail {
             EngineDetail::Transform(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    /// The learned-surrogate record, when this outcome is one.
+    pub fn as_surrogate(&self) -> Option<&SurrogateOutcome> {
+        match &self.detail {
+            EngineDetail::Surrogate(o) => Some(o),
             _ => None,
         }
     }

@@ -27,13 +27,17 @@ impl Registry {
         Registry::default()
     }
 
-    /// The four in-repo engines: `nlpdse`, `autodse`, `harp`, `random`.
+    /// The five in-repo engines: `nlpdse`, `autodse`, `harp`, `random`,
+    /// `surrogate`.
     pub fn builtin() -> Registry {
         let mut r = Registry::empty();
         r.register("nlpdse", |t| Box::new(NlpDseEngine::new(t.dse.clone())));
         r.register("autodse", |t| Box::new(AutoDseEngine::new(t.autodse.clone())));
         r.register("harp", |t| Box::new(HarpEngine::new(t.harp.clone())));
         r.register("random", |t| Box::new(RandomSearchEngine::new(t.random.clone())));
+        r.register("surrogate", |t| {
+            Box::new(crate::surrogate::SurrogateEngine::new(t.surrogate.clone(), t.dse.clone()))
+        });
         r
     }
 
@@ -69,10 +73,10 @@ mod tests {
     use super::*;
 
     #[test]
-    fn builtin_registers_all_four_engines() {
+    fn builtin_registers_all_five_engines() {
         let r = Registry::builtin();
-        assert_eq!(r.names(), vec!["autodse", "harp", "nlpdse", "random"]);
-        for n in ["nlpdse", "autodse", "harp", "random"] {
+        assert_eq!(r.names(), vec!["autodse", "harp", "nlpdse", "random", "surrogate"]);
+        for n in ["nlpdse", "autodse", "harp", "random", "surrogate"] {
             assert!(r.contains(n), "{n}");
             let e = r.create(n, &EngineTuning::default()).unwrap();
             assert_eq!(e.name(), n);
@@ -89,6 +93,7 @@ mod tests {
         assert!(msg.contains("unknown engine `simulated-annealing`"), "{msg}");
         // the error names the valid choices
         assert!(msg.contains("nlpdse") && msg.contains("random"), "{msg}");
+        assert!(msg.contains("surrogate"), "new engines must appear in the listing: {msg}");
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //! owns kernel construction, exact analysis, Rust-vs-XLA evaluator
 //! selection, and oracle setup, and runs any engine registered in the
 //! name-keyed [`engine::Registry`] (`nlpdse`, `autodse`, `harp`,
-//! `random`, or your own):
+//! `random`, `surrogate`, or your own):
 //!
 //! ```no_run
 //! use nlp_dse::benchmarks::Size;
@@ -85,6 +85,13 @@
 //!   next to what was requested.
 //! * [`baselines`] — AutoDSE (bottleneck-driven) and HARP (surrogate-guided)
 //!   reimplementations used as comparison points.
+//! * [`surrogate`] — the learned-ranking engine: a dependency-free
+//!   closed-form ridge regressor over pooled [`model::DesignFeatures`]
+//!   (deterministic seeded training on a `gen`-kernel corpus labeled by
+//!   [`model::evaluate`], persisted as a versioned JSON artifact) that
+//!   rank-cuts each NLP ladder wave before synthesis; every reported
+//!   incumbent is re-scored by the exact compiled model and floored by
+//!   the admissible bound, never left as a prediction.
 //! * [`engine`] — the unified exploration API: the object-safe
 //!   [`engine::Engine`] trait, the normalized [`engine::Exploration`]
 //!   outcome, the engine [`engine::Registry`], and the
@@ -124,6 +131,7 @@ pub mod transform;
 pub mod codegen;
 pub mod system;
 pub mod baselines;
+pub mod surrogate;
 pub mod engine;
 pub mod runtime;
 pub mod coordinator;

@@ -38,7 +38,10 @@
 //! ([`run_transform_dse_seeded`]), the response reports
 //! `cache: "warm"`, and — exactly like warm solves — the seeded
 //! payload is *not* admitted to the replay cache, keeping replay lines
-//! history-independent.
+//! history-independent. A `dse` with engine `surrogate` mixes the
+//! ranking artifact's content hash and the verify fraction into the
+//! space string the same way, so a retrained model (or a different
+//! cut) starts cold instead of replaying a stale exploration.
 //!
 //! `system` requests replay through [`SystemKey`]: the kernel list is
 //! canonicalized (sorted by exact fingerprint, then name) *before*
@@ -555,13 +558,54 @@ fn op_dse(
     };
     let dev = Device::u200();
 
-    // replay lookup: the spaced fingerprint partitions variant spaces,
-    // so the same kernel ± `transform` (or with different enumeration
-    // bounds) never shares a cache line
+    // surrogate knobs: the artifact is loaded (and schema-checked) here,
+    // and its content hash joins the spaced fingerprint below, so a
+    // retrained model can never replay a stale exploration
+    let model_file = req.str_opt("model_file")?;
+    let verify_fraction = req.f64_opt("verify_fraction")?;
+    if engine != "surrogate" && (model_file.is_some() || verify_fraction.is_some()) {
+        return Err(String::from(
+            "\"model_file\"/\"verify_fraction\" apply to engine `surrogate` only",
+        )
+        .into());
+    }
+    let mut surrogate_cfg = crate::surrogate::SurrogateConfig::default();
+    let surrogate_space = if engine == "surrogate" {
+        if let Some(f) = verify_fraction {
+            if !(0.0..=1.0).contains(&f) {
+                return Err(String::from(
+                    "\"verify_fraction\" must be in [0, 1] (1.0 = the exact ladder)",
+                )
+                .into());
+            }
+            surrogate_cfg.verify_fraction = f;
+        }
+        // no artifact supplied: resolve the engine's deterministic
+        // self-trained micro model here too, so the cache key always
+        // names the exact model that ranked the candidates
+        let model = match &model_file {
+            Some(p) => crate::surrogate::SurrogateModel::load(std::path::Path::new(p))?,
+            None => crate::surrogate::train(&surrogate_cfg.train).model,
+        };
+        let space = format!(
+            "surrogate {:016x} vf={}",
+            model.content_hash(),
+            surrogate_cfg.verify_fraction
+        );
+        surrogate_cfg.model = Some(model);
+        space
+    } else {
+        String::new()
+    };
+
+    // replay lookup: the spaced fingerprint partitions variant spaces
+    // and surrogate artifacts, so the same kernel ± `transform` (or with
+    // different enumeration bounds / a retrained model) never shares a
+    // cache line
     let space = if transform {
         format!("transform {}", tcfg.describe())
     } else {
-        String::new()
+        surrogate_space
     };
     let fp = fingerprint_spaced(&k, &space);
     let key = DseKey {
@@ -621,6 +665,7 @@ fn op_dse(
         let explorer = Explorer::custom(k)
             .evaluator(eval)
             .dse_config(dse_cfg)
+            .surrogate_config(surrogate_cfg)
             .engine(&engine)?;
         let o = explorer.run()?;
         let k = explorer.kernel_ref();
@@ -1209,6 +1254,65 @@ mod tests {
         // both spaces live side by side in the replay map
         let entries = data.get("cache").unwrap().get("entries").unwrap();
         assert_eq!(entries.get("dses").and_then(|j| j.as_u64()), Some(2));
+    }
+
+    #[test]
+    fn surrogate_dse_mixes_the_artifact_hash_into_the_cache_key() {
+        let state = ServeState::new(ServeConfig {
+            jobs: 1,
+            cache_entries: 8,
+        });
+        let cache = |lines: &[Json]| {
+            terminal(lines)
+                .get("cache")
+                .and_then(|j| j.as_str())
+                .map(str::to_string)
+        };
+        let dir = std::env::temp_dir().join("nlp_dse_serve_surrogate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let tiny = crate::surrogate::TrainConfig {
+            kernels: 2,
+            designs: 6,
+            ..crate::surrogate::TrainConfig::default()
+        };
+        let m1 = dir.join("m1.json");
+        crate::surrogate::train(&tiny).model.save(&m1).unwrap();
+        let m2 = dir.join("m2.json");
+        let retrained = crate::surrogate::TrainConfig { seed: tiny.seed + 1, ..tiny.clone() };
+        crate::surrogate::train(&retrained).model.save(&m2).unwrap();
+        let req = |model: &std::path::Path, id: u32| {
+            format!(
+                r#"{{"op":"dse","kernel":"mvt","size":"S","jobs":1,"engine":"surrogate","model_file":"{}","verify_fraction":0.5,"id":{id}}}"#,
+                model.display()
+            )
+        };
+        let (first, _) = call(&state, &req(&m1, 1));
+        assert_eq!(cache(&first).as_deref(), Some("miss"));
+        let data = terminal(&first).get("data").unwrap();
+        assert_eq!(data.get("engine").and_then(|j| j.as_str()), Some("surrogate"));
+        assert!(data.get("best_pragmas").unwrap().as_arr().is_some(), "needs a best design");
+        // identical artifact → replay, bit-identical
+        let (second, _) = call(&state, &req(&m1, 2));
+        assert_eq!(cache(&second).as_deref(), Some("hit"));
+        assert_eq!(
+            terminal(&first).get("data").unwrap().to_line(),
+            terminal(&second).get("data").unwrap().to_line(),
+            "surrogate replay must be bit-identical"
+        );
+        // a retrained artifact changes the content hash: its request
+        // must start cold, never replay the stale model's exploration
+        let (third, _) = call(&state, &req(&m2, 3));
+        assert_eq!(cache(&third).as_deref(), Some("miss"));
+        // surrogate knobs on other engines are an error, not ignored
+        let (lines, _) = call(
+            &state,
+            r#"{"op":"dse","kernel":"mvt","size":"S","jobs":1,"verify_fraction":0.5,"id":4}"#,
+        );
+        let e = terminal(&lines);
+        assert_eq!(e.get("event").and_then(|j| j.as_str()), Some("error"));
+        let msg = e.get("message").and_then(|j| j.as_str()).unwrap();
+        assert!(msg.contains("surrogate"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,164 @@
+//! Deterministic labeled training corpus: generated kernels × random
+//! designs, labeled by the exact analytic model.
+//!
+//! Everything downstream of [`TrainConfig::seed`] is a pure function of
+//! it: kernel shapes come from `GenConfig::sampled` under per-kernel
+//! derived seeds, designs are drawn with the same seeded enumeration
+//! idiom as the `random` engine, and labels are
+//! `ln(1 + model::evaluate(..).total_cycles)` — so two trainings from
+//! one seed are bit-identical (the fuzz gate's property (a)).
+
+use super::features::{phi, PHI_DIM};
+use crate::frontend::generate::{generate, GenConfig};
+use crate::hls::Device;
+use crate::ir::LoopId;
+use crate::poly::Analysis;
+use crate::pragma::{space, Design, Space};
+use crate::util::rng::Rng;
+use std::collections::BTreeSet;
+
+/// Corpus and fit knobs for [`train`](super::train) — the CLI `train`
+/// subcommand exposes each of these.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Master seed: kernels, designs, and therefore the fitted weights
+    /// are all pure functions of it.
+    pub seed: u64,
+    /// Generated kernels in the corpus.
+    pub kernels: usize,
+    /// Random designs drawn per kernel (the pragma-free baseline design
+    /// is always added on top).
+    pub designs: usize,
+    /// Ridge regularization strength λ.
+    pub lambda: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            seed: 0xd5e0_0001,
+            kernels: 12,
+            designs: 48,
+            lambda: 1e-3,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// The micro corpus the `surrogate` engine self-trains on when no
+    /// artifact is supplied (small enough for test suites, still enough
+    /// samples to pin the dominant latency feature).
+    pub fn micro() -> TrainConfig {
+        TrainConfig {
+            kernels: 5,
+            designs: 16,
+            ..TrainConfig::default()
+        }
+    }
+}
+
+/// A labeled feature matrix (row-major) ready for the ridge fit.
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    /// Pooled feature vectors, one row per labeled design.
+    pub xs: Vec<Vec<f64>>,
+    /// Targets: `ln(1 + exact total_cycles)`.
+    pub ys: Vec<f64>,
+    /// Kernels that contributed samples.
+    pub n_kernels: usize,
+    /// Designs dropped because their kernel overflowed the feature ABI.
+    pub skipped: u32,
+}
+
+/// Sample the labeled corpus for `cfg` (deterministic in `cfg.seed`).
+pub fn sample_corpus(cfg: &TrainConfig) -> Corpus {
+    let dev = Device::u200();
+    let root = Rng::new(cfg.seed);
+    let mut xs: Vec<Vec<f64>> = Vec::new();
+    let mut ys: Vec<f64> = Vec::new();
+    let mut skipped = 0u32;
+    for ki in 0..cfg.kernels.max(1) {
+        let gseed = root.derive(&format!("corpus-kernel/{ki}")).next_u64();
+        let k = generate(&GenConfig::sampled(gseed));
+        let a = Analysis::new(&k);
+        let sp = Space::new(&k, &a);
+        let mut rng = root.derive(&format!("corpus-designs/{ki}"));
+
+        // the pragma-free baseline anchors every kernel's label range
+        let mut designs: Vec<Design> = vec![Design::empty(&k)];
+        let mut seen: BTreeSet<String> = designs.iter().map(Design::fingerprint).collect();
+        let mut draws = 0usize;
+        while designs.len() < cfg.designs + 1 && draws < cfg.designs.saturating_mul(20) + 1 {
+            draws += 1;
+            let pcfg =
+                &sp.pipeline_configs[rng.range(0, sp.pipeline_configs.len() as u64) as usize];
+            let drawn: Vec<u64> = (0..k.n_loops())
+                .map(|i| {
+                    let menu = sp.ufs(LoopId(i as u32), &a, dev.max_array_partition);
+                    if menu.is_empty() {
+                        1
+                    } else {
+                        menu[rng.range(0, menu.len() as u64) as usize]
+                    }
+                })
+                .collect();
+            let d = space::materialize(&k, &a, pcfg, &|l: LoopId| drawn[l.0 as usize], &|_| 1);
+            if seen.insert(d.fingerprint()) {
+                designs.push(d);
+            }
+        }
+
+        for d in &designs {
+            match phi(&k, &a, &dev, d) {
+                Some(x) => {
+                    debug_assert_eq!(x.len(), PHI_DIM);
+                    xs.push(x.to_vec());
+                    ys.push((1.0 + crate::model::evaluate(&k, &a, &dev, d).total_cycles).ln());
+                }
+                None => skipped += 1,
+            }
+        }
+    }
+    Corpus {
+        xs,
+        ys,
+        n_kernels: cfg.kernels.max(1),
+        skipped,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_seed_deterministic() {
+        let cfg = TrainConfig {
+            kernels: 2,
+            designs: 6,
+            ..TrainConfig::default()
+        };
+        let c1 = sample_corpus(&cfg);
+        let c2 = sample_corpus(&cfg);
+        assert_eq!(c1.xs, c2.xs);
+        assert_eq!(c1.ys, c2.ys);
+        assert!(!c1.xs.is_empty());
+        assert!(c1.ys.iter().all(|y| y.is_finite()));
+    }
+
+    #[test]
+    fn different_seeds_sample_different_corpora() {
+        let base = TrainConfig {
+            kernels: 2,
+            designs: 6,
+            ..TrainConfig::default()
+        };
+        let other = TrainConfig {
+            seed: base.seed + 1,
+            ..base.clone()
+        };
+        let c1 = sample_corpus(&base);
+        let c2 = sample_corpus(&other);
+        assert_ne!(c1.ys, c2.ys);
+    }
+}

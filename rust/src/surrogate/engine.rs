@@ -1,0 +1,273 @@
+//! The `surrogate` [`Engine`]: the exact NLP ladder with a learned rank
+//! cut in front of synthesis, and exact re-verification behind it.
+//!
+//! Per ladder rung, the NLP solver still produces its lower-bound-sorted
+//! candidate wave; the surrogate predicts each candidate's latency and
+//! only the predicted-best [`SurrogateConfig::verify_fraction`] of the
+//! wave reaches synthesis (the rest are recorded as pruned steps).
+//! Everything that *is* explored goes through the identical
+//! solver/oracle path as the `nlpdse` engine — the cut is a keep-mask
+//! handed to `dse::nlpdse`'s crate-internal rung filter, not a parallel
+//! reimplementation — so `verify_fraction = 1.0` reproduces the exact
+//! ladder bit-for-bit. The reported incumbent is then re-scored with the
+//! exact compiled model and floored by the admissible bound model, so
+//! the outcome's headline numbers are never raw predictions.
+
+use super::corpus::TrainConfig;
+use super::model::{train, SurrogateModel};
+use crate::dse::nlpdse::run_ladder_filtered;
+use crate::dse::DseConfig;
+use crate::engine::{Engine, EngineDetail, ExploreCtx, Exploration};
+use crate::model::sym::{BoundModel, PartialDesign};
+use crate::pragma::Design;
+use std::cell::Cell;
+use std::sync::Arc;
+
+/// Surrogate-engine parameters.
+#[derive(Clone, Debug)]
+pub struct SurrogateConfig {
+    /// Pre-loaded artifact (CLI `--model-file`, serve `model_file`).
+    /// `None`: the engine self-trains on [`SurrogateConfig::train`] at
+    /// explore time — deterministic, so bare registry use still works.
+    pub model: Option<SurrogateModel>,
+    /// Fraction of each solver wave to synthesize, picked by predicted
+    /// latency (clamped to `[0, 1]`; `1.0` disables the cut and is
+    /// bit-identical to the `nlpdse` ladder).
+    pub verify_fraction: f64,
+    /// Floor on kept candidates per wave, so a tiny fraction can never
+    /// silence a rung entirely.
+    pub min_keep: usize,
+    /// Self-training corpus knobs used when `model` is `None`.
+    pub train: TrainConfig,
+}
+
+impl Default for SurrogateConfig {
+    fn default() -> Self {
+        SurrogateConfig {
+            model: None,
+            verify_fraction: 0.5,
+            min_keep: 1,
+            train: TrainConfig::micro(),
+        }
+    }
+}
+
+/// What one surrogate exploration produced, wrapping the ladder outcome
+/// with model provenance and the exact re-verification of the best.
+#[derive(Clone, Debug)]
+pub struct SurrogateOutcome {
+    /// The underlying (filtered) ladder record.
+    pub outcome: crate::dse::DseOutcome,
+    /// Content hash of the artifact that ranked the candidates — the
+    /// serve cache-fingerprint ingredient.
+    pub model_hash: u64,
+    /// Training seed of that artifact (provenance).
+    pub model_seed: u64,
+    /// The rank cut actually applied (post-clamp).
+    pub verify_fraction: f64,
+    /// Candidates the rank cut kept from synthesis.
+    pub rank_skipped: u32,
+    /// Candidates kept unranked because their kernel overflowed the
+    /// feature ABI (explored exactly instead).
+    pub predict_failures: u32,
+    /// Exact compiled-model score of the reported best design.
+    pub exact_cycles: Option<f64>,
+    /// Exact compiled-model feasibility of the reported best design.
+    pub exact_feasible: bool,
+    /// Admissible bound-model floor for the reported best design
+    /// (infinite when no design was found).
+    pub exact_lower_bound: f64,
+}
+
+/// The learned-ranking engine (registry name `surrogate`).
+pub struct SurrogateEngine {
+    /// Model + rank-cut parameters.
+    pub cfg: SurrogateConfig,
+    /// The underlying ladder's parameters (shared with `nlpdse`).
+    pub dse: DseConfig,
+}
+
+impl SurrogateEngine {
+    /// Engine over explicit surrogate and ladder parameters.
+    pub fn new(cfg: SurrogateConfig, dse: DseConfig) -> SurrogateEngine {
+        SurrogateEngine { cfg, dse }
+    }
+}
+
+impl Default for SurrogateEngine {
+    fn default() -> Self {
+        SurrogateEngine::new(SurrogateConfig::default(), DseConfig::default())
+    }
+}
+
+impl Engine for SurrogateEngine {
+    fn name(&self) -> &str {
+        "surrogate"
+    }
+
+    fn explore(&self, ctx: &ExploreCtx<'_>) -> Exploration {
+        let (k, a, dev) = (ctx.kernel, ctx.analysis, ctx.device);
+        let model = match &self.cfg.model {
+            Some(m) => m.clone(),
+            None => train(&self.cfg.train).model,
+        };
+        let model_hash = model.content_hash();
+        let bound = match ctx.bound {
+            Some(bm) => Arc::new(bm.clone()),
+            None => Arc::new(BoundModel::build(k, a, dev)),
+        };
+        let compiled = Arc::new(bound.compile());
+
+        let frac = self.cfg.verify_fraction.clamp(0.0, 1.0);
+        let min_keep = self.cfg.min_keep.max(1);
+        let rank_skipped = Cell::new(0u32);
+        let predict_failures = Cell::new(0u32);
+        let filter = |cands: &[(Design, f64)]| -> Vec<bool> {
+            let n = cands.len();
+            if frac >= 1.0 || n == 0 {
+                return vec![true; n];
+            }
+            let mut keep = vec![false; n];
+            let mut scored: Vec<(usize, f64)> = Vec::new();
+            for (i, (d, _)) in cands.iter().enumerate() {
+                match model.predict(k, a, dev, d) {
+                    Some(p) => scored.push((i, p)),
+                    None => {
+                        // unrankable: fall back to exact exploration
+                        predict_failures.set(predict_failures.get() + 1);
+                        keep[i] = true;
+                    }
+                }
+            }
+            // predicted-best first; ties resolve to the solver's own
+            // lower-bound-ascending order, keeping the cut deterministic
+            scored.sort_by(|x, y| {
+                x.1.partial_cmp(&y.1)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(x.0.cmp(&y.0))
+            });
+            let keep_n = ((frac * n as f64).ceil() as usize).max(min_keep).min(scored.len());
+            for &(i, _) in scored.iter().take(keep_n) {
+                keep[i] = true;
+            }
+            rank_skipped.set(rank_skipped.get() + (scored.len() - keep_n) as u32);
+            keep
+        };
+
+        let out = run_ladder_filtered(
+            k,
+            a,
+            dev,
+            &self.dse,
+            ctx.evaluator,
+            bound.clone(),
+            compiled.clone(),
+            &[],
+            Some(&filter),
+        );
+
+        // exact re-verification: the reported best is scored by the
+        // compiled model and floored by the admissible bound, never
+        // left as a prediction
+        let exact = out.best.as_ref().map(|(d, _)| {
+            let mut scratch = compiled.scratch();
+            let r = compiled.evaluate(d, &mut scratch);
+            let lb = bound.lower_bound(&PartialDesign::from_design(d));
+            (r, lb)
+        });
+        let so = SurrogateOutcome {
+            outcome: out,
+            model_hash,
+            model_seed: model.seed,
+            verify_fraction: frac,
+            rank_skipped: rank_skipped.get(),
+            predict_failures: predict_failures.get(),
+            exact_cycles: exact.as_ref().map(|(r, _)| r.total_cycles),
+            exact_feasible: exact.as_ref().map(|(r, _)| r.feasible).unwrap_or(false),
+            exact_lower_bound: exact.as_ref().map(|(_, lb)| *lb).unwrap_or(f64::INFINITY),
+        };
+        so.into()
+    }
+}
+
+impl From<SurrogateOutcome> for Exploration {
+    fn from(o: SurrogateOutcome) -> Exploration {
+        // normalize from the filtered ladder; rank cuts already appear
+        // as pruned steps in the trace, so the counters need no patching
+        let mut e: Exploration = o.outcome.clone().into();
+        e.engine = "surrogate".into();
+        e.detail = EngineDetail::Surrogate(Box::new(o));
+        e
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::benchmarks::{self, Size};
+    use crate::dse::run_nlp_dse;
+    use crate::hls::Device;
+    use crate::ir::DType;
+    use crate::nlp::RustFeatureEvaluator;
+    use crate::poly::Analysis;
+
+    fn explore(frac: f64) -> Exploration {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let ctx = ExploreCtx {
+            kernel: &k,
+            analysis: &a,
+            device: &dev,
+            evaluator: &RustFeatureEvaluator,
+            bound: None,
+        };
+        let cfg = SurrogateConfig { verify_fraction: frac, ..SurrogateConfig::default() };
+        SurrogateEngine::new(cfg, DseConfig::default()).explore(&ctx)
+    }
+
+    #[test]
+    fn verify_fraction_one_matches_exact_ladder_bitwise() {
+        let k = benchmarks::build("gemm", Size::Small, DType::F32).unwrap();
+        let a = Analysis::new(&k);
+        let dev = Device::u200();
+        let exact = run_nlp_dse(&k, &a, &dev, &DseConfig::default(), &RustFeatureEvaluator);
+        let sur = explore(1.0);
+        let so = sur.as_surrogate().unwrap();
+        assert_eq!(so.rank_skipped, 0);
+        assert_eq!(exact.best_gflops, sur.best_gflops);
+        assert_eq!(exact.trace.len(), so.outcome.trace.len());
+        for (s1, s2) in exact.trace.iter().zip(&so.outcome.trace) {
+            assert_eq!(s1.fingerprint, s2.fingerprint, "step {}", s1.step);
+            assert_eq!(s1.measured, s2.measured, "step {}", s1.step);
+        }
+    }
+
+    #[test]
+    fn reported_best_is_exactly_scored_and_feasible() {
+        let out = explore(0.4);
+        assert!(out.best.is_some());
+        let so = out.as_surrogate().unwrap();
+        let exact = so.exact_cycles.unwrap();
+        assert!(so.exact_feasible, "best must re-verify feasible");
+        assert!(exact.is_finite() && exact > 0.0);
+        assert!(
+            so.exact_lower_bound <= exact * 1.0001,
+            "bound {} must floor exact {}",
+            so.exact_lower_bound,
+            exact
+        );
+        assert_eq!(out.engine, "surrogate");
+    }
+
+    #[test]
+    fn rank_cut_keeps_the_outcome_contract() {
+        let cut = explore(0.3);
+        let so = cut.as_surrogate().unwrap();
+        assert!(cut.best.is_some(), "min_keep keeps every wave alive");
+        assert!(so.exact_feasible, "cut run's best must still re-verify");
+        // every rank-skipped candidate surfaces as a pruned trace step
+        assert!(cut.pruned >= so.rank_skipped, "{} < {}", cut.pruned, so.rank_skipped);
+        assert!((so.verify_fraction - 0.3).abs() < 1e-12);
+    }
+}

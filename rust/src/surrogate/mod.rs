@@ -1,0 +1,133 @@
+//! Learned latency surrogate — a dependency-free closed-form ridge
+//! regressor over pooled [`crate::model::DesignFeatures`] aggregates,
+//! trained on a deterministic corpus of generated kernels × random
+//! designs labeled by the exact analytic model, and an [`Engine`]
+//! (`surrogate`) that uses it to *rank* each DSE ladder rung's NLP
+//! candidates and synthesize only the predicted-best fraction.
+//!
+//! The AutoHLS/LIFT observation (PAPERS.md) is that a cheap learned
+//! predictor ranks configurations orders of magnitude faster than exact
+//! evaluation — *as long as winners are re-verified*. This module keeps
+//! that contract structural rather than statistical:
+//!
+//! * Training is bit-reproducible: corpus, featurization, and the
+//!   normal-equation solve are all deterministic functions of
+//!   [`TrainConfig::seed`] (property (a) of
+//!   `tests/property_surrogate.rs`).
+//! * Prediction only ever *prunes* candidates before synthesis. The
+//!   engine runs the exact NLP ladder (`dse::nlpdse`) through its
+//!   crate-internal rung-filter hook, so every design it does explore is
+//!   scored by the same solver/oracle path as `nlpdse` — and with
+//!   `verify_fraction = 1.0` the ladder is bit-identical to the exact
+//!   engine by construction (property (d)).
+//! * The reported incumbent is re-verified post-hoc with the exact
+//!   [`crate::model::CompiledModel`] score and the admissible
+//!   [`crate::model::BoundModel::lower_bound`]; the outcome carries
+//!   both, so a raw prediction can never masquerade as a result
+//!   (property (c)).
+//! * The model persists as a versioned JSON artifact ([`SurrogateModel`],
+//!   via `util::json` — no serde); its content hash keys the serve
+//!   daemon's cache fingerprint so a retrained artifact can never replay
+//!   a stale exploration.
+//!
+//! CLI: `nlp-dse train --model-file surrogate.json` then
+//! `nlp-dse dse --engine surrogate --model-file surrogate.json`.
+//! See DESIGN.md §15 and the GUIDE.md walkthrough.
+//!
+//! [`Engine`]: crate::engine::Engine
+
+pub mod corpus;
+pub mod engine;
+pub mod features;
+pub mod model;
+pub mod ridge;
+
+pub use corpus::{sample_corpus, Corpus, TrainConfig};
+pub use engine::{SurrogateConfig, SurrogateEngine, SurrogateOutcome};
+pub use features::{phi, pool, PHI_DIM};
+pub use model::{train, SurrogateModel, TrainOutcome, ARTIFACT_VERSION};
+pub use ridge::{fit_ridge, RidgeFit};
+
+/// Spearman rank correlation between two equal-length samples, with
+/// average ranks on ties (the differential-fuzz gate's metric: the
+/// surrogate is judged on *ordering* designs, not on absolute error).
+/// Returns 0.0 for degenerate inputs (fewer than two points or a
+/// constant side).
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "spearman: length mismatch");
+    let n = a.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let ra = average_ranks(a);
+    let rb = average_ranks(b);
+    // Pearson correlation of the rank vectors (exact under ties)
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (ma, mb) = (mean(&ra), mean(&rb));
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for i in 0..n {
+        let (da, db) = (ra[i] - ma, rb[i] - mb);
+        cov += da * db;
+        va += da * da;
+        vb += db * db;
+    }
+    if va <= 0.0 || vb <= 0.0 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Ranks (1-based) with tied values assigned their average rank.
+fn average_ranks(v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&i, &j| v[i].partial_cmp(&v[j]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        // positions i..=j share value v[idx[i]]: average of ranks i+1..=j+1
+        let avg = (i + 1 + j + 1) as f64 / 2.0;
+        for &k in &idx[i..=j] {
+            ranks[k] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spearman_perfect_and_inverse() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let up = [10.0, 20.0, 30.0, 40.0];
+        let down = [40.0, 30.0, 20.0, 10.0];
+        assert!((spearman(&a, &up) - 1.0).abs() < 1e-12);
+        assert!((spearman(&a, &down) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_is_monotone_invariant() {
+        // rank correlation must ignore any monotone transform
+        let a = [1.0, 5.0, 2.0, 9.0, 3.0];
+        let exp: Vec<f64> = a.iter().map(|x| x.exp()).collect();
+        assert!((spearman(&a, &exp) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties_and_degenerates() {
+        let a = [1.0, 1.0, 2.0, 2.0];
+        let b = [1.0, 1.0, 2.0, 2.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        assert_eq!(spearman(&[1.0], &[2.0]), 0.0);
+        assert_eq!(spearman(&[1.0, 1.0], &[1.0, 2.0]), 0.0, "constant side");
+    }
+}

@@ -1,0 +1,275 @@
+//! The versioned surrogate artifact: fitted weights + standardization,
+//! persisted as JSON via `util::json` (no serde), plus the training
+//! entry point.
+//!
+//! The artifact's *content hash* ([`SurrogateModel::content_hash`]) is a
+//! stable FNV-1a over its canonical compact JSON rendering — key-sorted
+//! and shortest-round-trip float formatting, so the hash is identical
+//! whether computed before `save` or after `load`. The serve daemon
+//! mixes it into the DSE cache fingerprint, which is what makes a
+//! retrained model structurally unable to replay a stale exploration.
+
+use super::corpus::{sample_corpus, TrainConfig};
+use super::features::{phi, PHI_DIM};
+use super::ridge::{fit_ridge, RidgeFit};
+use super::spearman;
+use crate::hls::Device;
+use crate::ir::Kernel;
+use crate::poly::Analysis;
+use crate::pragma::Design;
+use crate::util::json::Json;
+use crate::util::rng::hash64;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Artifact schema version. Bumped whenever the feature pooling or the
+/// JSON layout changes; `from_json` rejects mismatches instead of
+/// silently mis-predicting.
+pub const ARTIFACT_VERSION: u64 = 1;
+
+/// A trained, persistable latency surrogate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SurrogateModel {
+    /// Schema version ([`ARTIFACT_VERSION`] at save time).
+    pub version: u64,
+    /// Master training seed (provenance; reproduces the artifact).
+    pub seed: u64,
+    /// Ridge regularization the fit used.
+    pub lambda: f64,
+    /// Standardization + weights over the pooled φ features.
+    pub fit: RidgeFit,
+    /// Labeled samples the fit saw (training split).
+    pub n_samples: u64,
+    /// Kernels in the corpus.
+    pub n_kernels: u64,
+}
+
+impl SurrogateModel {
+    /// Predicted `ln(1 + total_cycles)` for one design; `None` when the
+    /// kernel overflows the feature ABI (callers fall back to exact
+    /// exploration for such candidates).
+    pub fn predict(&self, k: &Kernel, a: &Analysis, dev: &Device, d: &Design) -> Option<f64> {
+        phi(k, a, dev, d).map(|x| self.fit.predict(&x))
+    }
+
+    /// The artifact as a JSON tree (canonical: key-sorted objects).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kind", "nlp-dse-surrogate-ridge")
+            .set("version", self.version)
+            .set("seed", self.seed)
+            .set("lambda", self.lambda)
+            .set("dim", self.fit.weights.len())
+            .set("weights", self.fit.weights.clone())
+            .set("mean", self.fit.mean.clone())
+            .set("std", self.fit.std.clone())
+            .set("n_samples", self.n_samples)
+            .set("n_kernels", self.n_kernels);
+        j
+    }
+
+    /// Rebuild from a parsed artifact, rejecting wrong kinds, schema
+    /// versions, and feature dimensions.
+    pub fn from_json(j: &Json) -> Result<SurrogateModel> {
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != "nlp-dse-surrogate-ridge" {
+            bail!("not a surrogate artifact (kind `{kind}`)");
+        }
+        let version = j
+            .get("version")
+            .and_then(Json::as_u64)
+            .context("surrogate artifact: missing `version`")?;
+        if version != ARTIFACT_VERSION {
+            bail!(
+                "surrogate artifact version {version} unsupported (this build reads {ARTIFACT_VERSION}); retrain with `nlp-dse train`"
+            );
+        }
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .with_context(|| format!("surrogate artifact: missing `{key}`"))?
+                .iter()
+                .map(|v| v.as_f64().with_context(|| format!("`{key}`: non-numeric entry")))
+                .collect()
+        };
+        let weights = floats("weights")?;
+        let mean = floats("mean")?;
+        let std = floats("std")?;
+        let dim = j.get("dim").and_then(Json::as_u64).unwrap_or(0) as usize;
+        if dim != PHI_DIM
+            || weights.len() != PHI_DIM
+            || mean.len() != PHI_DIM
+            || std.len() != PHI_DIM
+        {
+            bail!(
+                "surrogate artifact feature dim {dim} != {PHI_DIM} (trained against a different feature set); retrain with `nlp-dse train`"
+            );
+        }
+        if std.iter().any(|s| !s.is_finite() || *s <= 0.0)
+            || weights.iter().chain(&mean).any(|x| !x.is_finite())
+        {
+            bail!("surrogate artifact: non-finite or non-positive fit parameters");
+        }
+        Ok(SurrogateModel {
+            version,
+            seed: j.get("seed").and_then(Json::as_u64).unwrap_or(0),
+            lambda: j.get("lambda").and_then(Json::as_f64).unwrap_or(0.0),
+            fit: RidgeFit { weights, mean, std },
+            n_samples: j.get("n_samples").and_then(Json::as_u64).unwrap_or(0),
+            n_kernels: j.get("n_kernels").and_then(Json::as_u64).unwrap_or(0),
+        })
+    }
+
+    /// Stable content hash of the canonical compact rendering — the
+    /// serve fingerprint ingredient. Identical before save and after
+    /// load (the round trip is exact: shortest-representation floats).
+    pub fn content_hash(&self) -> u64 {
+        hash64(&self.to_json().to_line())
+    }
+
+    /// Write the artifact (pretty JSON + trailing newline) to `path`.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut text = self.to_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing surrogate artifact {}", path.display()))
+    }
+
+    /// Read an artifact back (schema-checked).
+    pub fn load(path: &Path) -> Result<SurrogateModel> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading surrogate artifact {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing surrogate artifact {}: {e}", path.display()))?;
+        SurrogateModel::from_json(&j)
+    }
+}
+
+/// What [`train`] produced, with the held-out quality number the CLI
+/// prints and the fuzz gate asserts against its committed floor.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    /// The fitted artifact.
+    pub model: SurrogateModel,
+    /// Training-split samples.
+    pub n_train: usize,
+    /// Held-out samples (every 5th corpus row).
+    pub n_holdout: usize,
+    /// Designs dropped at featurization (ABI overflow).
+    pub skipped: u32,
+    /// Spearman rank correlation between predicted and exact ln-latency
+    /// on the held-out split (1.0 when the split is degenerate).
+    pub holdout_spearman: f64,
+}
+
+/// Train a surrogate on the seeded corpus: sample, split (every 5th row
+/// held out), fit the ridge on the rest, score the holdout by Spearman
+/// rank correlation. Deterministic bit-for-bit in `cfg.seed`.
+pub fn train(cfg: &TrainConfig) -> TrainOutcome {
+    let corpus = sample_corpus(cfg);
+    let mut train_x: Vec<Vec<f64>> = Vec::new();
+    let mut train_y: Vec<f64> = Vec::new();
+    let mut hold_x: Vec<Vec<f64>> = Vec::new();
+    let mut hold_y: Vec<f64> = Vec::new();
+    for (i, (x, &y)) in corpus.xs.iter().zip(&corpus.ys).enumerate() {
+        if i % 5 == 4 {
+            hold_x.push(x.clone());
+            hold_y.push(y);
+        } else {
+            train_x.push(x.clone());
+            train_y.push(y);
+        }
+    }
+    let fit = fit_ridge(&train_x, &train_y, cfg.lambda);
+    let holdout_spearman = if hold_y.len() >= 2 {
+        let preds: Vec<f64> = hold_x.iter().map(|x| fit.predict(x)).collect();
+        spearman(&preds, &hold_y)
+    } else {
+        1.0
+    };
+    TrainOutcome {
+        model: SurrogateModel {
+            version: ARTIFACT_VERSION,
+            seed: cfg.seed,
+            lambda: cfg.lambda,
+            fit,
+            n_samples: train_x.len() as u64,
+            n_kernels: corpus.n_kernels as u64,
+        },
+        n_train: train_x.len(),
+        n_holdout: hold_y.len(),
+        skipped: corpus.skipped,
+        holdout_spearman,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn micro() -> TrainConfig {
+        TrainConfig {
+            kernels: 3,
+            designs: 10,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn training_is_bit_reproducible() {
+        let t1 = train(&micro());
+        let t2 = train(&micro());
+        assert_eq!(t1.model, t2.model);
+        assert_eq!(t1.model.content_hash(), t2.model.content_hash());
+    }
+
+    #[test]
+    fn artifact_round_trips_and_hash_is_stable() {
+        let t = train(&micro());
+        let dir = std::env::temp_dir().join("nlp_dse_surrogate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("artifact_roundtrip.json");
+        t.model.save(&path).unwrap();
+        let back = SurrogateModel::load(&path).unwrap();
+        assert_eq!(back, t.model);
+        assert_eq!(back.content_hash(), t.model.content_hash());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn different_seeds_hash_differently() {
+        let t1 = train(&micro());
+        let t2 = train(&TrainConfig {
+            seed: micro().seed + 1,
+            ..micro()
+        });
+        assert_ne!(t1.model.content_hash(), t2.model.content_hash());
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_and_stale_artifacts() {
+        let t = train(&micro());
+        let mut wrong_kind = t.model.to_json();
+        wrong_kind.set("kind", "something-else");
+        assert!(SurrogateModel::from_json(&wrong_kind).is_err());
+        let mut wrong_version = t.model.to_json();
+        wrong_version.set("version", ARTIFACT_VERSION + 1);
+        let err = format!("{:#}", SurrogateModel::from_json(&wrong_version).unwrap_err());
+        assert!(err.contains("retrain"), "{err}");
+        let mut wrong_dim = t.model.to_json();
+        wrong_dim.set("dim", 3u64);
+        assert!(SurrogateModel::from_json(&wrong_dim).is_err());
+    }
+
+    #[test]
+    fn holdout_rank_correlation_is_strong() {
+        // the dominant feature is an admissible bound within [0.2, 1.02]x
+        // of the exact score, so even the micro corpus must rank well
+        let t = train(&micro());
+        assert!(
+            t.holdout_spearman > 0.7,
+            "holdout spearman {}",
+            t.holdout_spearman
+        );
+    }
+}

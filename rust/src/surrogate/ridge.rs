@@ -1,0 +1,160 @@
+//! Closed-form ridge regression (normal equations + Gauss–Jordan).
+//!
+//! The feature dimension is tiny ([`PHI_DIM`](super::PHI_DIM) ≈ 14), so
+//! `(XᵀX + λI) w = Xᵀy` solved densely is exact, allocation-light, and —
+//! unlike any iterative fit — bit-reproducible across runs and
+//! platforms, which is what the differential-fuzz gate pins. λ > 0 makes
+//! the system symmetric positive definite, so the elimination below
+//! never needs a singularity fallback.
+
+/// A fitted standardization + weight vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RidgeFit {
+    /// Weights over the standardized features (bias column included).
+    pub weights: Vec<f64>,
+    /// Per-feature training mean (bias column: 0).
+    pub mean: Vec<f64>,
+    /// Per-feature training standard deviation (bias and constant
+    /// columns: 1, so they pass through unscaled).
+    pub std: Vec<f64>,
+}
+
+impl RidgeFit {
+    /// Predict one target from a raw (unstandardized) feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        assert_eq!(x.len(), self.weights.len(), "ridge: dim mismatch");
+        let mut y = 0.0;
+        for j in 0..x.len() {
+            y += self.weights[j] * (x[j] - self.mean[j]) / self.std[j];
+        }
+        y
+    }
+}
+
+/// Fit `y ≈ φ·w` by standardized ridge regression. `xs` is row-major
+/// (one feature vector per sample); column 0 is assumed to be the bias
+/// and is left unstandardized. `lambda` is clamped to a positive floor
+/// so the normal-equation matrix is always invertible. An empty sample
+/// set yields the all-zero fit (predicts 0 everywhere) rather than
+/// panicking — a degenerate corpus must not take the engine down.
+pub fn fit_ridge(xs: &[Vec<f64>], y: &[f64], lambda: f64) -> RidgeFit {
+    assert_eq!(xs.len(), y.len(), "ridge: sample/target mismatch");
+    let dim = xs.first().map(|r| r.len()).unwrap_or(0);
+    if xs.is_empty() || dim == 0 {
+        return RidgeFit { weights: vec![0.0; dim], mean: vec![0.0; dim], std: vec![1.0; dim] };
+    }
+    let n = xs.len() as f64;
+    let lambda = lambda.max(1e-9);
+
+    // column standardization (bias column 0 passes through)
+    let mut mean = vec![0.0; dim];
+    let mut std = vec![1.0; dim];
+    for j in 1..dim {
+        let m = xs.iter().map(|r| r[j]).sum::<f64>() / n;
+        let var = xs.iter().map(|r| (r[j] - m) * (r[j] - m)).sum::<f64>() / n;
+        mean[j] = m;
+        std[j] = if var.sqrt() > 1e-12 { var.sqrt() } else { 1.0 };
+    }
+
+    // normal equations over the standardized design matrix
+    let mut ata = vec![vec![0.0; dim]; dim];
+    let mut aty = vec![0.0; dim];
+    let mut row = vec![0.0; dim];
+    for (r, &t) in xs.iter().zip(y) {
+        for j in 0..dim {
+            row[j] = (r[j] - mean[j]) / std[j];
+        }
+        for i in 0..dim {
+            aty[i] += row[i] * t;
+            for j in i..dim {
+                ata[i][j] += row[i] * row[j];
+            }
+        }
+    }
+    for i in 0..dim {
+        for j in 0..i {
+            ata[i][j] = ata[j][i]; // symmetrize the upper-triangle pass
+        }
+        ata[i][i] += lambda;
+    }
+
+    // Gauss–Jordan with partial pivoting on [ata | aty]
+    let mut w = aty;
+    let mut m = ata;
+    for col in 0..dim {
+        let piv = (col..dim)
+            .max_by(|&i, &j| {
+                m[i][col]
+                    .abs()
+                    .partial_cmp(&m[j][col].abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .unwrap();
+        m.swap(col, piv);
+        w.swap(col, piv);
+        let p = m[col][col];
+        debug_assert!(p.abs() > 0.0, "ridge matrix is SPD, pivot cannot vanish");
+        for j in col..dim {
+            m[col][j] /= p;
+        }
+        w[col] /= p;
+        for i in 0..dim {
+            if i == col {
+                continue;
+            }
+            let f = m[i][col];
+            if f == 0.0 {
+                continue;
+            }
+            for j in col..dim {
+                m[i][j] -= f * m[col][j];
+            }
+            w[i] -= f * w[col];
+        }
+    }
+
+    RidgeFit { weights: w, mean, std }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_a_linear_law() {
+        // y = 3 + 2 x1 - x2, exactly representable: tiny lambda recovers it
+        let xs: Vec<Vec<f64>> = (0..20)
+            .map(|i| {
+                let x1 = i as f64;
+                let x2 = (i * i % 7) as f64;
+                vec![1.0, x1, x2]
+            })
+            .collect();
+        let y: Vec<f64> = xs.iter().map(|r| 3.0 + 2.0 * r[1] - r[2]).collect();
+        let fit = fit_ridge(&xs, &y, 1e-9);
+        for (r, &t) in xs.iter().zip(&y) {
+            assert!((fit.predict(r) - t).abs() < 1e-6, "{} vs {t}", fit.predict(r));
+        }
+    }
+
+    #[test]
+    fn deterministic_bit_for_bit() {
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![1.0, (i as f64).sin() * 10.0, (i as f64 * 0.7).cos()])
+            .collect();
+        let y: Vec<f64> = xs.iter().map(|r| r[1] * 0.5 - r[2] * 2.0 + 1.0).collect();
+        let f1 = fit_ridge(&xs, &y, 1e-3);
+        let f2 = fit_ridge(&xs, &y, 1e-3);
+        assert_eq!(f1, f2, "identical inputs must fit identical bits");
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_panic() {
+        let empty = fit_ridge(&[], &[], 1e-3);
+        assert!(empty.weights.is_empty());
+        // constant column: std clamps to 1, fit still finite
+        let xs = vec![vec![1.0, 5.0], vec![1.0, 5.0], vec![1.0, 5.0]];
+        let fit = fit_ridge(&xs, &[1.0, 2.0, 3.0], 1e-3);
+        assert!(fit.predict(&[1.0, 5.0]).is_finite());
+    }
+}

@@ -25,7 +25,10 @@ fn substrate(name: &str, size: Size) -> (nlp_dse::Kernel, Analysis, Device) {
 #[test]
 fn registry_lists_and_resolves_builtin_engines() {
     let r = Registry::builtin();
-    assert_eq!(r.names(), vec!["autodse", "harp", "nlpdse", "random"]);
+    assert_eq!(
+        r.names(),
+        vec!["autodse", "harp", "nlpdse", "random", "surrogate"]
+    );
     for n in r.names() {
         let e = r.create(&n, &EngineTuning::default()).unwrap();
         assert_eq!(e.name(), n);
@@ -39,7 +42,7 @@ fn registry_unknown_engine_error_names_alternatives() {
         .unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("unknown engine `gradient-descent`"), "{msg}");
-    for n in ["nlpdse", "autodse", "harp", "random"] {
+    for n in ["nlpdse", "autodse", "harp", "random", "surrogate"] {
         assert!(msg.contains(n), "{msg} should list {n}");
     }
 }
@@ -150,6 +153,74 @@ fn explorer_runs_every_registered_engine_end_to_end() {
         // every engine's summary renders without a kernel in hand
         assert!(ex.summary().contains(&format!("engine `{name}`")));
     }
+}
+
+#[test]
+fn every_builtin_engine_best_revalidates_under_the_exact_model() {
+    let (k, a, dev) = substrate("gemm", Size::Small);
+    let explorer = Explorer::kernel("gemm", Size::Small)
+        .unwrap()
+        .evaluator(Evaluator::rust())
+        .tuning(quick_tuning());
+    let oracle = HlsOracle::new(dev.clone());
+    for name in Registry::builtin().names() {
+        let ex = explorer.run_engine(&name).unwrap();
+        let (d, cycles) = ex
+            .best
+            .as_ref()
+            .unwrap_or_else(|| panic!("{name}: no best design"));
+        // the exact analytic model can score every engine's best…
+        let r = nlp_dse::model::evaluate(&k, &a, &dev, d);
+        assert!(
+            r.total_cycles.is_finite() && r.total_cycles > 0.0,
+            "{name}: exact model cannot score the best design"
+        );
+        // …and the measurement oracle reproduces the recorded latency
+        let rep = oracle.synth(&k, &a, d);
+        assert!(rep.valid, "{name}: best design does not re-synthesize valid");
+        assert_eq!(rep.cycles, *cycles, "{name}: recorded latency is not the oracle's");
+        // engines that carry a bounding model (nlpdse, surrogate) prove
+        // full feasibility of the *requested* pragmas, not just of what
+        // Merlin realized
+        if ex.lower_bound.is_some() {
+            assert!(r.feasible, "{name}: bounded engine returned an infeasible best");
+        }
+    }
+}
+
+#[test]
+fn surrogate_never_loses_to_random_at_equal_synth_budget() {
+    // the acceptance criterion: at the same number of synthesis calls,
+    // the rank-cut ladder's (exact-scored) best is never worse than
+    // random search's
+    let sur = Explorer::kernel("gemm", Size::Small)
+        .unwrap()
+        .evaluator(Evaluator::rust())
+        .run_engine("surrogate")
+        .unwrap();
+    assert!(sur.best.is_some(), "surrogate found no design");
+    let so = sur.as_surrogate().expect("surrogate detail");
+    assert!(so.exact_feasible, "surrogate best must re-verify feasible");
+    let budget = sur.synth_calls.max(1);
+    let rand = Explorer::kernel("gemm", Size::Small)
+        .unwrap()
+        .evaluator(Evaluator::rust())
+        .random_config(nlp_dse::engine::RandomConfig {
+            samples: 5_000,
+            synth_budget: budget,
+            ..Default::default()
+        })
+        .engine("random")
+        .unwrap()
+        .run()
+        .unwrap();
+    assert!(rand.synth_calls <= budget, "random overspent its budget");
+    assert!(
+        sur.best_gflops >= rand.best_gflops,
+        "surrogate {} < random {} at equal budget {budget}",
+        sur.best_gflops,
+        rand.best_gflops
+    );
 }
 
 #[test]
